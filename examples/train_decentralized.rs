@@ -1,0 +1,93 @@
+//! End-to-end driver: decentralized training of the transformer LM over
+//! the Figure-1 topology with MATCHA at several communication budgets —
+//! the full three-layer stack (Rust coordinator → AOT XLA train/mix
+//! steps → Pallas-kernel model) on a real workload.
+//!
+//! Requires `make artifacts` (default: small preset, 8 workers).
+//!
+//! Run: `cargo run --release --example train_decentralized -- [steps] [--pallas]`
+//!
+//! The loss curves land in `results/e2e_<strategy>_<cb>.json`; the summary
+//! table printed at the end is the EXPERIMENTS.md headline run.
+
+use matcha::config::ArtifactPaths;
+use matcha::coordinator::{plan_matcha, plan_vanilla, Trainer, TrainerConfig};
+use matcha::graph::paper_figure1_graph;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(300);
+    let use_pallas = args.iter().any(|a| a == "--pallas");
+
+    let g = paper_figure1_graph();
+    let artifacts = ArtifactPaths::new("artifacts");
+    std::fs::create_dir_all("results")?;
+
+    // The paper's Figure 4 sweep: vanilla vs MATCHA at CB ∈ {0.5, 0.1}.
+    let runs: Vec<(String, matcha::coordinator::MatchaPlan)> = vec![
+        ("vanilla_1.0".to_string(), plan_vanilla(&g, steps)),
+        ("matcha_0.5".to_string(), plan_matcha(&g, 0.5, steps, 7)),
+        ("matcha_0.1".to_string(), plan_matcha(&g, 0.1, steps, 7)),
+    ];
+
+    println!("end-to-end decentralized training: fig1 graph, {steps} steps, pallas={use_pallas}");
+    let mut summary = Vec::new();
+    for (name, plan) in runs {
+        let cfg = TrainerConfig {
+            steps,
+            lr: 0.5,
+            lr_decay: 0.5,
+            lr_decay_every: steps / 2,
+            eval_every: (steps / 10).max(1),
+            use_pallas,
+            compute_units: 1.0,
+            seed: 7,
+            ..TrainerConfig::default()
+        };
+        let trainer = Trainer::new(&artifacts, plan.decomposition.clone(), cfg)?;
+        println!(
+            "\n== {name}: α={:.4} ρ={:.4} mean-comm={:.2} units/iter ==",
+            plan.alpha,
+            plan.rho,
+            plan.schedule.mean_comm_units()
+        );
+        let report = trainer.run(&plan.schedule)?;
+        // Print the loss curve (x = iteration, y = train loss).
+        for s in report.metrics.get("train_loss_vs_iter").iter().step_by((steps / 15).max(1)) {
+            println!("  iter {:>5}  train loss {:.4}", s.x, s.y);
+        }
+        println!(
+            "  final: train {:.4}, eval {:.4}, virtual time {:.1}, comm {:.1}, wall {:.1}s",
+            report.final_train_loss,
+            report.final_eval_loss,
+            report.total_time_units,
+            report.total_comm_units,
+            report.wallclock_secs
+        );
+        report
+            .metrics
+            .save_json(std::path::Path::new(&format!("results/e2e_{name}.json")))?;
+        summary.push((name, report));
+    }
+
+    println!("\n===== summary (virtual time from the paper's delay model) =====");
+    println!("{:<14} {:>10} {:>10} {:>12} {:>10}", "run", "train", "eval", "time(units)", "comm");
+    for (name, r) in &summary {
+        println!(
+            "{:<14} {:>10.4} {:>10.4} {:>12.1} {:>10.1}",
+            name, r.final_train_loss, r.final_eval_loss, r.total_time_units, r.total_comm_units
+        );
+    }
+    let vanilla_t = summary[0].1.total_time_units;
+    for (name, r) in &summary[1..] {
+        println!(
+            "{name}: {:.2}x less total time than vanilla at matched iterations",
+            vanilla_t / r.total_time_units
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,136 @@
+"""AOT compilation: lower the L2 model to HLO *text* artifacts.
+
+Run once by ``make artifacts``; Python never appears on the training
+path. Interchange format is HLO text, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Artifacts (for a preset P and worker count m):
+  artifacts/train_step.hlo.txt        pallas-kernel path
+  artifacts/train_step_fused.hlo.txt  jnp.dot path (CPU fast path)
+  artifacts/eval_step.hlo.txt
+  artifacts/mix.hlo.txt               pallas gossip kernel, (m, d)
+  artifacts/mix_fused.hlo.txt         jnp.dot gossip (CPU fast path)
+  artifacts/meta.json                 config + flat-parameter layout
+
+Usage: python -m compile.aot --out-dir ../artifacts --preset small --workers 8
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple so the Rust
+    side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: M.ModelConfig) -> str:
+    d = M.param_count(cfg)
+    flat = jax.ShapeDtypeStruct((d,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def step(flat, x, y, lr):
+        new, loss = M.train_step(cfg, flat, x, y, lr)
+        return (new, loss)
+
+    return to_hlo_text(jax.jit(step, donate_argnums=(0,)).lower(flat, toks, toks, lr))
+
+
+def lower_eval_step(cfg: M.ModelConfig) -> str:
+    d = M.param_count(cfg)
+    flat = jax.ShapeDtypeStruct((d,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+
+    def step(flat, x, y):
+        return (M.eval_step(cfg, flat, x, y),)
+
+    return to_hlo_text(jax.jit(step).lower(flat, toks, toks))
+
+
+def lower_mix(cfg: M.ModelConfig, workers: int) -> str:
+    d = M.param_count(cfg)
+    w = jax.ShapeDtypeStruct((workers, workers), jnp.float32)
+    stacked = jax.ShapeDtypeStruct((workers, d), jnp.float32)
+
+    def step(w, stacked):
+        return (M.mix_step(cfg, w, stacked),)
+
+    return to_hlo_text(jax.jit(step).lower(w, stacked))
+
+
+def build_meta(cfg: M.ModelConfig, workers: int) -> dict:
+    return {
+        "preset": getattr(cfg, "_preset_name", "custom"),
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "workers": workers,
+        "param_count": M.param_count(cfg),
+        "params": [
+            {
+                "name": e.name,
+                "shape": list(e.shape),
+                "offset": e.offset,
+                "size": e.size,
+                "init": e.init,
+                "std": e.std,
+            }
+            for e in M.param_spec(cfg)
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--workers", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.preset]
+    object.__setattr__(cfg, "_preset_name", args.preset)
+    cfg_fused = dataclasses.replace(cfg, use_pallas=False)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    outputs = {
+        "train_step.hlo.txt": lambda: lower_train_step(cfg),
+        "train_step_fused.hlo.txt": lambda: lower_train_step(cfg_fused),
+        "eval_step.hlo.txt": lambda: lower_eval_step(cfg_fused),
+        "mix.hlo.txt": lambda: lower_mix(cfg, args.workers),
+        "mix_fused.hlo.txt": lambda: lower_mix(cfg_fused, args.workers),
+    }
+    for name, build in outputs.items():
+        text = build()
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = build_meta(cfg, args.workers)
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path} (param_count={meta['param_count']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Tiled matmul Pallas kernel with a custom VJP.
+
+This is the compute hot spot of decentralized SGD: every projection and
+feed-forward layer in the L2 transformer routes its (rows, in) @ (in, out)
+product through this kernel, forward and backward.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows/cols to
+128x128 MXU-shaped blocks held in VMEM, with an f32 accumulator updated
+across the K grid dimension (K is the innermost, sequential grid axis, so
+the output block stays resident in VMEM between K steps — the standard
+Pallas accumulation idiom). On this CPU-only image the kernel always runs
+with ``interpret=True``: real TPU lowering emits a Mosaic custom-call the
+CPU PJRT client cannot execute. The BlockSpec structure — and therefore
+the VMEM footprint / MXU utilization estimates in EXPERIMENTS.md §Perf —
+is the same either way.
+
+Pallas kernels have no automatic differentiation rule, so ``matmul`` is
+wrapped in ``jax.custom_vjp`` whose backward pass reuses the same kernel:
+dX = dZ @ Yᵀ and dY = Xᵀ @ dZ.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic array edge; tiles clamp
+# to the (padded) problem size for small operands.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: O[i,j] += X[i,k] @ Y[k,j].
+
+    K is the innermost (sequential) grid axis, so the output block stays
+    resident between K steps and serves as the f32 accumulator — the
+    standard Pallas accumulation idiom (all model tensors are f32, so
+    accumulating in ``o_ref`` loses no precision vs a scratch buffer).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+def _pallas_matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Raw (non-differentiable) tiled Pallas matmul, any 2-D shapes."""
+    assert x.ndim == 2 and y.ndim == 2 and x.shape[1] == y.shape[0], (
+        x.shape,
+        y.shape,
+    )
+    m, k = x.shape
+    _, n = y.shape
+    bm, bn, bk = min(BLOCK_M, m), min(BLOCK_N, n), min(BLOCK_K, k)
+
+    # Pad every dimension up to a tile multiple; slice the result back.
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    k_tiles = kp // bk
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, k_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n].astype(x.dtype)
+
+
+@jax.custom_vjp
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable tiled-Pallas matrix product ``x @ y``."""
+    return _pallas_matmul(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _pallas_matmul(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # dX = g @ Yᵀ, dY = Xᵀ @ g — both through the same Pallas kernel.
+    return _pallas_matmul(g, y.T), _pallas_matmul(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per grid step (for §Perf reporting):
+    one X tile + one Y tile + the f32 accumulator + the output tile."""
+    bm, bn, bk = min(BLOCK_M, m), min(BLOCK_N, n), min(BLOCK_K, k)
+    return bm * bk * dtype_bytes + bk * bn * dtype_bytes + bm * bn * (4 + dtype_bytes)

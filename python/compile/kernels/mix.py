@@ -1,0 +1,58 @@
+"""Gossip-mixing Pallas kernel: X' = W @ X.
+
+The consensus step of decentralized SGD stacks the m workers' flat
+parameter vectors into X (m-by-d) and multiplies by the iteration's
+mixing matrix W (m-by-m, symmetric doubly stochastic). m is small (8–64)
+but d is the full parameter count, so the kernel keeps W resident and
+tiles X along the parameter axis: grid = (d / BLOCK_D,), each step loads
+an (m, BLOCK_D) slab of X into VMEM, multiplies by W, and writes the slab
+back. This is a pure VMEM-bandwidth kernel (the paper's communication hot
+spot, as opposed to the matmul compute hot spot).
+
+Runs with ``interpret=True`` for the CPU PJRT client (see matmul.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Parameter-axis tile. 4096 f32 columns x m<=64 rows = <=1 MiB per slab,
+# comfortably within a TPU core's ~16 MiB VMEM alongside W, and large
+# enough that grid overhead is negligible (interpret mode pays per grid
+# step; see EXPERIMENTS.md §Perf).
+BLOCK_D = 4096
+
+
+def _mix_kernel(w_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def mix(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Consensus step ``w @ x`` with W resident and X tiled along d."""
+    assert w.ndim == 2 and w.shape[0] == w.shape[1], w.shape
+    assert x.ndim == 2 and x.shape[0] == w.shape[0], (w.shape, x.shape)
+    m, d = x.shape
+    bd = min(BLOCK_D, d)
+    dp = (d + bd - 1) // bd * bd
+    xp = jnp.pad(x, ((0, 0), (0, dp - d)))
+
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((m, m), lambda i: (0, 0)),  # W resident
+            pl.BlockSpec((m, bd), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((m, bd), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, dp), jnp.float32),
+        interpret=True,
+    )(w, xp)
+    return out[:, :d].astype(x.dtype)
+
+
+def vmem_footprint_bytes(m: int, d: int) -> int:
+    """Estimated VMEM working set per grid step (for §Perf reporting)."""
+    bd = min(BLOCK_D, d)
+    return m * m * 4 + 2 * m * bd * 4

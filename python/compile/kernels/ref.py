@@ -1,0 +1,23 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but `jnp` primitives. `python/tests/` asserts
+allclose between kernel and oracle across shape/dtype sweeps — this is
+the L1 correctness signal of the build.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Plain matrix product with f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def mix_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Gossip consensus step: X' = W @ X.
+
+    ``w`` is the m-by-m mixing matrix W = I - alpha * sum_j B_j L_j;
+    ``x`` stacks the m workers' flat parameter vectors row-wise.
+    """
+    return jnp.matmul(w, x, preferred_element_type=jnp.float32)

@@ -1,0 +1,207 @@
+"""L2: the training model — a causal transformer language model over a
+single flat f32 parameter vector.
+
+Why flat parameters: the Rust coordinator (L3) treats each worker's state
+as one `Vec<f32>` so the consensus step is a single (m, d) gossip matmul
+(the `mix` Pallas kernel). This module defines the parameter layout
+(`param_spec`), (un)flattening, the forward pass, the loss, and the three
+functions that get AOT-lowered to HLO text by `aot.py`:
+
+  * ``train_step(flat, x, y, lr) -> (new_flat, loss)`` — one local SGD
+    step (paper eq. (2)'s inner bracket);
+  * ``eval_step(flat, x, y) -> loss`` — held-out loss;
+  * ``mix_step(w, stacked) -> stacked'`` — the consensus step W @ X.
+
+Every dense projection routes through the Pallas tiled matmul
+(`kernels/matmul.py`) when ``use_pallas=True``; with ``use_pallas=False``
+the same graph uses `jnp.dot`, which XLA fuses aggressively — that
+variant is also exported as the CPU fast path (see DESIGN.md
+§Hardware-Adaptation: interpret-mode Pallas is a correctness vehicle on
+this image, not a performance one).
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul as pallas_matmul
+from .kernels.mix import mix as pallas_mix
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    seq_len: int = 64
+    batch: int = 16
+    use_pallas: bool = True
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(d_model=64, n_heads=2, n_layers=2, seq_len=32, batch=8),
+    "small": ModelConfig(d_model=128, n_heads=4, n_layers=2, seq_len=64, batch=16),
+    "medium": ModelConfig(d_model=256, n_heads=8, n_layers=4, seq_len=64, batch=16),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    init: str  # "normal" | "ones" | "zeros"
+    std: float
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def param_spec(cfg: ModelConfig) -> List[ParamEntry]:
+    """The flat-vector layout. Order is the contract with the Rust side
+    (rust/src/config.rs parses the same list from artifacts/meta.json)."""
+    entries: List[ParamEntry] = []
+    offset = 0
+
+    def add(name: str, shape: Tuple[int, ...], init: str, std: float = 0.0):
+        nonlocal offset
+        e = ParamEntry(name, shape, offset, init, std)
+        entries.append(e)
+        offset += e.size
+
+    d = cfg.d_model
+    add("embed", (cfg.vocab, d), "normal", d ** -0.5)
+    add("pos", (cfg.seq_len, d), "normal", 0.01)
+    for i in range(cfg.n_layers):
+        add(f"layer{i}.ln1_scale", (d,), "ones")
+        add(f"layer{i}.ln1_bias", (d,), "zeros")
+        add(f"layer{i}.qkv", (d, 3 * d), "normal", d ** -0.5)
+        add(f"layer{i}.attn_out", (d, d), "normal", (2.0 * d * cfg.n_layers) ** -0.5)
+        add(f"layer{i}.ln2_scale", (d,), "ones")
+        add(f"layer{i}.ln2_bias", (d,), "zeros")
+        add(f"layer{i}.mlp_in", (d, cfg.d_ff), "normal", d ** -0.5)
+        add(f"layer{i}.mlp_out", (cfg.d_ff, d), "normal", (2.0 * cfg.d_ff * cfg.n_layers) ** -0.5)
+    add("ln_f_scale", (d,), "ones")
+    add("ln_f_bias", (d,), "zeros")
+    return entries
+
+
+def param_count(cfg: ModelConfig) -> int:
+    spec = param_spec(cfg)
+    last = spec[-1]
+    return last.offset + last.size
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Reference initializer (the Rust side reimplements this from
+    meta.json; python/tests cross-check statistics, not bit patterns)."""
+    parts = []
+    for e in param_spec(cfg):
+        if e.init == "normal":
+            key, sub = jax.random.split(key)
+            parts.append(jax.random.normal(sub, e.shape, jnp.float32).reshape(-1) * e.std)
+        elif e.init == "ones":
+            parts.append(jnp.ones(e.size, jnp.float32))
+        else:
+            parts.append(jnp.zeros(e.size, jnp.float32))
+    return jnp.concatenate(parts)
+
+
+def unflatten(cfg: ModelConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for e in param_spec(cfg):
+        out[e.name] = jax.lax.dynamic_slice(flat, (e.offset,), (e.size,)).reshape(e.shape)
+    return out
+
+
+def _mm(cfg: ModelConfig, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """2-D matmul through the Pallas kernel (or XLA dot)."""
+    if cfg.use_pallas:
+        return pallas_matmul(a, b)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _layernorm(h: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=-1, keepdims=True)
+    return (h - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _attention(cfg: ModelConfig, p: Dict[str, jnp.ndarray], i: int, h: jnp.ndarray) -> jnp.ndarray:
+    b, t, d = h.shape
+    nh, dh = cfg.n_heads, cfg.d_head
+    qkv = _mm(cfg, h.reshape(b * t, d), p[f"layer{i}.qkv"]).reshape(b, t, 3, nh, dh)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    # (b, nh, t, dh)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bhsd->bhtd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b * t, d)
+    return _mm(cfg, ctx, p[f"layer{i}.attn_out"]).reshape(b, t, d)
+
+
+def _mlp(cfg: ModelConfig, p: Dict[str, jnp.ndarray], i: int, h: jnp.ndarray) -> jnp.ndarray:
+    b, t, d = h.shape
+    x = _mm(cfg, h.reshape(b * t, d), p[f"layer{i}.mlp_in"])
+    x = jax.nn.gelu(x)
+    return _mm(cfg, x, p[f"layer{i}.mlp_out"]).reshape(b, t, d)
+
+
+def forward(cfg: ModelConfig, flat: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits (batch, seq, vocab). Output embedding is tied to the input
+    embedding (Press & Wolf, the paper's LSTM setup does the same)."""
+    p = unflatten(cfg, flat)
+    b, t = tokens.shape
+    h = p["embed"][tokens] + p["pos"][None, :t]
+    for i in range(cfg.n_layers):
+        h = h + _attention(cfg, p, i, _layernorm(h, p[f"layer{i}.ln1_scale"], p[f"layer{i}.ln1_bias"]))
+        h = h + _mlp(cfg, p, i, _layernorm(h, p[f"layer{i}.ln2_scale"], p[f"layer{i}.ln2_bias"]))
+    h = _layernorm(h, p["ln_f_scale"], p["ln_f_bias"])
+    logits = _mm(cfg, h.reshape(b * t, cfg.d_model), p["embed"].T)
+    return logits.reshape(b, t, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross entropy (nats)."""
+    logits = forward(cfg, flat, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def train_step(cfg: ModelConfig, flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, lr: jnp.ndarray):
+    """One local SGD step: returns (new_flat, loss)."""
+    loss, grad = jax.value_and_grad(lambda f: loss_fn(cfg, f, x, y))(flat)
+    return flat - lr * grad, loss
+
+
+def eval_step(cfg: ModelConfig, flat: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray):
+    return loss_fn(cfg, flat, x, y)
+
+
+def mix_step(cfg: ModelConfig, w: jnp.ndarray, stacked: jnp.ndarray) -> jnp.ndarray:
+    """Consensus: stacked' = W @ stacked via the Pallas mix kernel."""
+    if cfg.use_pallas:
+        return pallas_mix(w, stacked)
+    return jnp.dot(w, stacked, preferred_element_type=jnp.float32)

@@ -1,0 +1,69 @@
+"""AOT path: lowering produces loadable HLO text and a consistent
+meta.json contract for the Rust side."""
+
+import json
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+TINY = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def tiny_hlo():
+    # Lower once for the module (lowering is the slow part).
+    return {
+        "train": aot.lower_train_step(TINY),
+        "eval": aot.lower_eval_step(TINY),
+        "mix": aot.lower_mix(TINY, workers=4),
+    }
+
+
+def test_hlo_text_shape(tiny_hlo):
+    for name, text in tiny_hlo.items():
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ENTRY" in text, f"{name}: no entry computation"
+
+
+def test_train_step_signature(tiny_hlo):
+    d = M.param_count(TINY)
+    text = tiny_hlo["train"]
+    # Parameters: flat f32[d], two int32[batch, seq] token arrays, f32[] lr.
+    assert f"f32[{d}]" in text
+    assert f"s32[{TINY.batch},{TINY.seq_len}]" in text
+    # Output is a tuple (new_params, loss).
+    assert f"(f32[{d}]" in text
+
+
+def test_mix_signature(tiny_hlo):
+    d = M.param_count(TINY)
+    text = tiny_hlo["mix"]
+    assert f"f32[4,{d}]" in text
+    assert "f32[4,4]" in text
+
+
+def test_meta_contract():
+    meta = aot.build_meta(TINY, workers=4)
+    # Round-trip through JSON (what the Rust parser consumes).
+    meta = json.loads(json.dumps(meta))
+    assert meta["param_count"] == M.param_count(TINY)
+    assert meta["workers"] == 4
+    spec = meta["params"]
+    # Contiguity and size consistency.
+    offset = 0
+    for e in spec:
+        assert e["offset"] == offset
+        size = 1
+        for s in e["shape"]:
+            size *= s
+        assert e["size"] == size
+        assert e["init"] in ("normal", "ones", "zeros")
+        offset += size
+    assert offset == meta["param_count"]
+
+
+def test_meta_vocab_matches_rust_corpus():
+    # rust/src/data/mod.rs hardcodes VOCAB=64; the model must agree.
+    assert TINY.vocab == 64

@@ -1,0 +1,90 @@
+//! End-to-end step latency of the XLA path: the AOT train step (fused
+//! and Pallas variants) and the gossip mix step, measured through the
+//! same runtime the coordinator uses. Requires `make artifacts`.
+//!
+//! This is the per-iteration computation-time measurement that calibrates
+//! `compute_units` in the delay model (DESIGN.md §Hardware-Adaptation).
+
+use matcha::benchkit::bench;
+use matcha::config::{ArtifactPaths, ModelMeta};
+use matcha::data::{BatchIter, Corpus};
+use matcha::rng::Rng;
+use matcha::runtime::{literal_f32, literal_i32, literal_scalar_f32, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = ArtifactPaths::new("artifacts");
+    if !artifacts.meta().exists() {
+        println!("skipping: no artifacts (run `make artifacts`)");
+        return Ok(());
+    }
+    let meta = ModelMeta::load(&artifacts.meta()).map_err(anyhow::Error::msg)?;
+    println!(
+        "model: preset={} params={} batch={} seq={} workers={}",
+        meta.preset, meta.param_count, meta.batch, meta.seq_len, meta.workers
+    );
+
+    let rt = Runtime::cpu()?;
+    let fused = rt.load_hlo(&artifacts.train_step(false))?;
+    let pallas = rt.load_hlo(&artifacts.train_step(true))?;
+    let mix = rt.load_hlo(&artifacts.mix(false))?;
+    let mix_pallas = rt.load_hlo(&artifacts.mix(true))?;
+    let eval = rt.load_hlo(&artifacts.eval_step())?;
+
+    let mut rng = Rng::new(7);
+    let flat = meta.init_params(&mut rng);
+    let corpus = Corpus::synthesize(1, 10_000, 1000, false, 3);
+    let mut it = BatchIter::new(&corpus.shards[0].tokens, meta.batch, meta.seq_len, 1);
+    let (xs, ys) = it.next_batch();
+    let dims = [meta.batch as i64, meta.seq_len as i64];
+    let d = meta.param_count;
+
+    let inputs = || -> anyhow::Result<Vec<xla::Literal>> {
+        Ok(vec![
+            literal_f32(&flat, &[d as i64])?,
+            literal_i32(&xs, &dims)?,
+            literal_i32(&ys, &dims)?,
+            literal_scalar_f32(0.1),
+        ])
+    };
+
+    let ins = inputs()?;
+    bench("train_step fused (xla dot)", 12, 2, || {
+        fused.run(&ins).unwrap();
+    });
+    let ins_p = inputs()?;
+    bench("train_step pallas (interpret)", 5, 1, || {
+        pallas.run(&ins_p).unwrap();
+    });
+    let ev = vec![
+        literal_f32(&flat, &[d as i64])?,
+        literal_i32(&xs, &dims)?,
+        literal_i32(&ys, &dims)?,
+    ];
+    bench("eval_step", 12, 2, || {
+        eval.run(&ev).unwrap();
+    });
+
+    // Mix: m workers' stacked parameters, ring W.
+    let m = meta.workers;
+    let mut w = vec![0.0f32; m * m];
+    for i in 0..m {
+        w[i * m + i] = 1.0 - 2.0 * 0.3;
+        w[i * m + (i + 1) % m] = 0.3;
+        w[i * m + (i + m - 1) % m] = 0.3;
+    }
+    let mut stacked = Vec::with_capacity(m * d);
+    for k in 0..m {
+        stacked.extend(flat.iter().map(|v| v + k as f32 * 1e-3));
+    }
+    let mix_ins = vec![
+        literal_f32(&w, &[m as i64, m as i64])?,
+        literal_f32(&stacked, &[m as i64, d as i64])?,
+    ];
+    bench("mix step fused (m x d gossip)", 20, 3, || {
+        mix.run(&mix_ins).unwrap();
+    });
+    bench("mix step pallas (interpret)", 5, 1, || {
+        mix_pallas.run(&mix_ins).unwrap();
+    });
+    Ok(())
+}

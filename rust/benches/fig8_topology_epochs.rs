@@ -1,0 +1,93 @@
+//! Figure 8: training loss vs epochs across the 16-node topologies —
+//! with a properly chosen budget, MATCHA's per-epoch loss can be *lower*
+//! than vanilla DecenSGD's (its optimized random topology has a smaller
+//! spectral norm; see Fig 3b/3c).
+
+use matcha::benchkit::Table;
+use matcha::budget::optimize_activation_probabilities;
+use matcha::graph::paper_figure9_topologies;
+use matcha::matching::decompose;
+use matcha::mixing::{optimize_alpha, vanilla_design};
+use matcha::sim::{run_decentralized, LogisticProblem, LogisticSpec, RunConfig};
+use matcha::topology::{MatchaSampler, VanillaSampler};
+
+fn main() {
+    let iters = 2500;
+    let mut t = Table::new(&[
+        "topology",
+        "CB*",
+        "rho vanilla",
+        "rho matcha",
+        "tail loss vanilla",
+        "tail loss matcha",
+    ]);
+
+    for (name, g) in paper_figure9_topologies() {
+        let d = decompose(&g);
+        // Pick the budget whose optimized ρ is smallest (the paper's
+        // "proper communication budget").
+        let (mut best_cb, mut best) = (1.0, f64::INFINITY);
+        let mut best_probs = None;
+        for i in 2..=10 {
+            let cb = i as f64 / 10.0;
+            let probs = optimize_activation_probabilities(&d, cb);
+            let mix = optimize_alpha(&d, &probs.probabilities);
+            if mix.rho < best {
+                best = mix.rho;
+                best_cb = cb;
+                best_probs = Some((probs, mix));
+            }
+        }
+        let (probs, mix) = best_probs.unwrap();
+        let van = vanilla_design(&g.laplacian());
+
+        let problem = LogisticProblem::generate(LogisticSpec {
+            num_workers: g.num_nodes(),
+            non_iid: 0.8,
+            seed: 123,
+            ..LogisticSpec::default()
+        });
+        let cfg = |alpha: f64| RunConfig {
+            lr: 0.1,
+            iterations: iters,
+            record_every: 50,
+            alpha,
+            seed: 6,
+            ..RunConfig::default()
+        };
+        let mut vs = VanillaSampler::new(d.len());
+        let vres = run_decentralized(&problem, &d.matchings, &mut vs, &cfg(van.alpha));
+        let mut ms = MatchaSampler::new(probs.probabilities.clone(), 51);
+        let mres = run_decentralized(&problem, &d.matchings, &mut ms, &cfg(mix.alpha));
+
+        let tail = |r: &matcha::sim::RunResult| {
+            let s = r.metrics.get("loss_vs_iter");
+            let h = s.len() / 2;
+            s[h..].iter().map(|x| x.y).sum::<f64>() / (s.len() - h) as f64
+        };
+        let (tv, tm) = (tail(&vres), tail(&mres));
+        t.row(&[
+            name.to_string(),
+            format!("{best_cb}"),
+            format!("{:.4}", van.rho),
+            format!("{:.4}", mix.rho),
+            format!("{tv:.4}"),
+            format!("{tm:.4}"),
+        ]);
+        // Core claim: at the ρ-optimal budget, per-epoch error is at
+        // least on par with vanilla (lower ρ ⇒ lower error bound).
+        assert!(
+            tm <= tv * 1.05,
+            "{name}: MATCHA tail loss {tm} should not exceed vanilla {tv}"
+        );
+        assert!(
+            mix.rho <= van.rho + 1e-9,
+            "{name}: ρ-optimal budget should not be worse than vanilla"
+        );
+    }
+    t.print();
+    println!(
+        "\nFig 8 claim holds: with a proper budget MATCHA's per-epoch loss \
+         matches or beats vanilla on every topology. ✓"
+    );
+}

@@ -1,0 +1,98 @@
+//! Hot-path micro-benchmarks for the §Perf pass (criterion substitute).
+//!
+//! Covers every L3 component that sits inside an optimization or training
+//! loop: the Jacobi eigensolver (inner loop of the p-optimizer), the
+//! capped-simplex projection, the full budget optimizer, Misra–Gries
+//! decomposition, the simulator's gossip+SGD iteration, and schedule
+//! sampling. Numbers land in EXPERIMENTS.md §Perf.
+
+use matcha::benchkit::bench_auto;
+use matcha::budget::{optimize_activation_probabilities, project_capped_simplex};
+use matcha::graph::{complete, erdos_renyi, paper_figure1_graph};
+use matcha::linalg::{symmetric_eigen, Mat};
+use matcha::matching::decompose;
+use matcha::mixing::optimize_alpha;
+use matcha::rng::Rng;
+use matcha::sim::{run_decentralized, QuadraticProblem, RunConfig};
+use matcha::topology::{MatchaSampler, Schedule, TopologySampler};
+
+fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let v = rng.normal();
+            a.set(i, j, v);
+            a.set(j, i, v);
+        }
+    }
+    a
+}
+
+fn main() {
+    let mut rng = Rng::new(2024);
+
+    println!("=== eigensolver (the p-optimizer's inner loop) ===");
+    for n in [8, 16, 32, 64] {
+        let a = random_symmetric(n, &mut rng);
+        bench_auto(&format!("jacobi_eigen {n}x{n}"), 300, || {
+            std::hint::black_box(symmetric_eigen(&a));
+        });
+    }
+
+    println!("\n=== capped-simplex projection ===");
+    for m in [6, 16, 64] {
+        let y: Vec<f64> = (0..m).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+        bench_auto(&format!("project_capped_simplex M={m}"), 100, || {
+            std::hint::black_box(project_capped_simplex(&y, m as f64 * 0.4));
+        });
+    }
+
+    println!("\n=== matching decomposition ===");
+    let g8 = paper_figure1_graph();
+    let g16 = erdos_renyi(16, 0.5, &mut Rng::new(1));
+    let k32 = complete(32);
+    bench_auto("misra_gries fig1 (8n/12e)", 150, || {
+        std::hint::black_box(decompose(&g8));
+    });
+    bench_auto("misra_gries er16 (~60e)", 200, || {
+        std::hint::black_box(decompose(&g16));
+    });
+    bench_auto("misra_gries K32 (496e)", 400, || {
+        std::hint::black_box(decompose(&k32));
+    });
+
+    println!("\n=== full budget + alpha optimization (one-time setup cost) ===");
+    let d8 = decompose(&g8);
+    bench_auto("optimize p+alpha fig1 cb=0.5", 1000, || {
+        let p = optimize_activation_probabilities(&d8, 0.5);
+        std::hint::black_box(optimize_alpha(&d8, &p.probabilities));
+    });
+
+    println!("\n=== simulator iteration throughput ===");
+    let p = {
+        let mut r = Rng::new(3);
+        QuadraticProblem::generate(8, 50, 1.0, 0.1, &mut r)
+    };
+    let probs = optimize_activation_probabilities(&d8, 0.5);
+    let mix = optimize_alpha(&d8, &probs.probabilities);
+    bench_auto("sim 100 iters m=8 d=50 (gossip+sgd)", 1500, || {
+        let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
+        let cfg = RunConfig {
+            iterations: 100,
+            record_every: 1000,
+            alpha: mix.alpha,
+            ..RunConfig::default()
+        };
+        std::hint::black_box(run_decentralized(&p, &d8.matchings, &mut s, &cfg));
+    });
+
+    println!("\n=== schedule generation (apriori cost) ===");
+    bench_auto("schedule 10k rounds", 400, || {
+        let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
+        std::hint::black_box(Schedule::generate(&mut s, mix.alpha, d8.len(), 10_000));
+    });
+    let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
+    bench_auto("sampler round", 50, || {
+        std::hint::black_box(s.round(0));
+    });
+}

@@ -1,0 +1,160 @@
+//! Micro-benchmark harness (offline replacement for `criterion`).
+//!
+//! Bench targets in `rust/benches/` are built with `harness = false` and
+//! use this module: warmup, multiple timed samples, median/mean/min
+//! reporting, and a tabular printer for the paper-figure harnesses. The
+//! statistics are deliberately simple — on this single-core testbed the
+//! medians are stable to a few percent, which is all the perf pass needs.
+
+use std::time::Instant;
+
+/// Timing summary for one benchmark (all durations in nanoseconds).
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchStats {
+    fn fmt_ns(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+
+    pub fn report(&self) {
+        println!(
+            "bench {:<42} median {:>12}  mean {:>12}  min {:>12}  ({} samples)",
+            self.name,
+            Self::fmt_ns(self.median_ns),
+            Self::fmt_ns(self.mean_ns),
+            Self::fmt_ns(self.min_ns),
+            self.samples
+        );
+    }
+}
+
+/// Run `f` repeatedly and collect stats. `f` should perform one logical
+/// operation; use [`std::hint::black_box`] inside to defeat DCE.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, warmup: usize, mut f: F) -> BenchStats {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / samples as f64;
+    let median = if samples % 2 == 1 {
+        times[samples / 2]
+    } else {
+        0.5 * (times[samples / 2 - 1] + times[samples / 2])
+    };
+    let stats = BenchStats {
+        name: name.to_string(),
+        samples,
+        mean_ns: mean,
+        median_ns: median,
+        min_ns: times[0],
+        max_ns: *times.last().unwrap(),
+    };
+    stats.report();
+    stats
+}
+
+/// Auto-calibrated bench: picks a sample count so the whole run takes
+/// roughly `budget_ms` milliseconds (bounded to [5, 500] samples).
+pub fn bench_auto<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchStats {
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_nanos().max(1) as u64;
+    let budget_ns = budget_ms * 1_000_000;
+    let samples = ((budget_ns / one).clamp(5, 500)) as usize;
+    bench(name, samples, samples.min(3), f)
+}
+
+/// Simple fixed-width table printer for paper-figure harness output.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:<w$} | ", w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers, &self.widths);
+        let sep: Vec<String> = self.widths.iter().map(|&w| "-".repeat(w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop-ish", 11, 2, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.samples, 11);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.max_ns);
+        assert!(s.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn table_accepts_rows() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

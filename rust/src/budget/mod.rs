@@ -1,0 +1,278 @@
+//! Activation-probability optimization (Step 2 of MATCHA, problem (4)).
+//!
+//! Given the matching decomposition `G = ∪ G_j` and a communication
+//! budget `CB`, choose activation probabilities `p ∈ [0,1]^M` maximizing
+//! the algebraic connectivity of the *expected* activated topology:
+//!
+//! ```text
+//!   max  λ₂( Σ_j p_j L_j )   s.t.   Σ_j p_j ≤ CB·M,  0 ≤ p_j ≤ 1.
+//! ```
+//!
+//! λ₂ is concave in `p` (it is a minimum of linear functions of `p` over
+//! the subspace ⊥ 1), so this is a convex program. The paper solves it
+//! with an off-the-shelf SDP/convex solver; none exists in this offline
+//! image, so we use **projected supergradient ascent**: the standard
+//! supergradient of λ₂ at `p` is `g_j = v₂ᵀ L_j v₂` where `v₂` is a unit
+//! Fiedler vector of `Σ p_j L_j`, and the feasible set — WLOG the *capped
+//! simplex* `{p ∈ [0,1]^M : Σp = min(CB·M, M)}`, since λ₂ is monotone in
+//! every `p_j` — admits an exact O(M log 1/ε) projection by bisection.
+//! Correctness is cross-checked against brute-force grids in the tests.
+
+mod simplex;
+
+pub use simplex::project_capped_simplex;
+
+use crate::graph::lambda2_of;
+use crate::linalg::{fiedler_pair, Mat};
+use crate::matching::MatchingDecomposition;
+
+/// Result of the activation-probability optimization.
+#[derive(Clone, Debug)]
+pub struct ActivationProbabilities {
+    /// One probability per matching, aligned with `decomposition.matchings`.
+    pub probabilities: Vec<f64>,
+    /// λ₂ of the expected Laplacian Σ p_j L_j at the optimum.
+    pub lambda2: f64,
+    /// The communication budget this was optimized for.
+    pub budget: f64,
+}
+
+impl ActivationProbabilities {
+    /// Expected communication time per iteration, Σ p_j (paper eq. (3)).
+    pub fn expected_comm_time(&self) -> f64 {
+        self.probabilities.iter().sum()
+    }
+}
+
+/// Expected Laplacian `L̄(p) = Σ_j p_j L_j`.
+pub fn expected_laplacian(laplacians: &[Mat], probs: &[f64]) -> Mat {
+    assert_eq!(laplacians.len(), probs.len());
+    assert!(!laplacians.is_empty());
+    let n = laplacians[0].rows();
+    let mut l = Mat::zeros(n, n);
+    for (lj, &p) in laplacians.iter().zip(probs) {
+        l.axpy(p, lj);
+    }
+    l
+}
+
+/// Solve problem (4) by projected supergradient ascent.
+///
+/// `cb` is the communication budget in `(0, 1]`: the fraction of vanilla
+/// DecenSGD's per-iteration communication time (`CB·M` expected units).
+/// Returns probabilities on the capped simplex `Σp = min(CB·M, M)`.
+pub fn optimize_activation_probabilities(
+    decomp: &MatchingDecomposition,
+    cb: f64,
+) -> ActivationProbabilities {
+    assert!(cb > 0.0 && cb <= 1.0, "communication budget must be in (0,1], got {cb}");
+    let laps = decomp.laplacians();
+    let m_matchings = laps.len();
+    let total = (cb * m_matchings as f64).min(m_matchings as f64);
+
+    // Everything activates: nothing to optimize.
+    if (total - m_matchings as f64).abs() < 1e-12 {
+        let probs = vec![1.0; m_matchings];
+        let l2 = lambda2_of(&expected_laplacian(&laps, &probs));
+        return ActivationProbabilities { probabilities: probs, lambda2: l2, budget: cb };
+    }
+
+    // Uniform feasible start.
+    let mut p = vec![total / m_matchings as f64; m_matchings];
+    let mut best_p = p.clone();
+    let mut best_l2 = f64::NEG_INFINITY;
+
+    // Diminishing-step projected supergradient ascent. λ₂ values are
+    // O(1)–O(m); normalize steps by the supergradient norm. One
+    // eigendecomposition per iteration supplies BOTH the objective value
+    // (λ₂ of the current iterate) and the supergradient direction (its
+    // Fiedler vector); we stop early once the incumbent stops improving.
+    let iters = 400;
+    let patience = 80;
+    let mut stale = 0;
+    for t in 0..iters {
+        let lbar = expected_laplacian(&laps, &p);
+        let (l2, v2) = fiedler_pair(&lbar);
+        if l2 > best_l2 + 1e-12 {
+            best_l2 = l2;
+            best_p = p.clone();
+            stale = 0;
+        } else {
+            stale += 1;
+            if stale >= patience {
+                break;
+            }
+        }
+        // Supergradient: g_j = v₂ᵀ L_j v₂ ≥ 0.
+        let g: Vec<f64> = laps.iter().map(|lj| lj.quad_form(&v2)).collect();
+        let gnorm = g.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+        let step = 0.5 / ((t as f64 + 1.0).sqrt() * gnorm);
+        for j in 0..m_matchings {
+            p[j] += step * g[j];
+        }
+        p = project_capped_simplex(&p, total);
+    }
+    // Evaluate the final iterate too (the loop records before stepping).
+    let final_l2 = lambda2_of(&expected_laplacian(&laps, &p));
+    if final_l2 > best_l2 {
+        best_l2 = final_l2;
+        best_p = p;
+    }
+
+    ActivationProbabilities { probabilities: best_p, lambda2: best_l2.max(0.0), budget: cb }
+}
+
+/// The P-DecenSGD (periodic) allocation at the same budget: every
+/// matching shares one probability `CB` (all links activate together).
+/// Benchmark comparator from §3/§5 of the paper.
+pub fn periodic_probabilities(decomp: &MatchingDecomposition, cb: f64) -> ActivationProbabilities {
+    assert!(cb > 0.0 && cb <= 1.0);
+    let laps = decomp.laplacians();
+    let probs = vec![cb; laps.len()];
+    let l2 = lambda2_of(&expected_laplacian(&laps, &probs));
+    ActivationProbabilities { probabilities: probs, lambda2: l2, budget: cb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{paper_figure1_graph, ring, star};
+    use crate::matching::decompose;
+
+    #[test]
+    fn budget_one_activates_everything() {
+        let d = decompose(&paper_figure1_graph());
+        let a = optimize_activation_probabilities(&d, 1.0);
+        for &p in &a.probabilities {
+            assert!((p - 1.0).abs() < 1e-9);
+        }
+        let base_l2 = crate::graph::algebraic_connectivity(&d.base);
+        assert!((a.lambda2 - base_l2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn respects_budget_constraint() {
+        let d = decompose(&paper_figure1_graph());
+        for cb in [0.1, 0.3, 0.5, 0.8] {
+            let a = optimize_activation_probabilities(&d, cb);
+            let total: f64 = a.probabilities.iter().sum();
+            assert!(
+                total <= cb * d.len() as f64 + 1e-6,
+                "cb={cb}: Σp = {total} > {}",
+                cb * d.len() as f64
+            );
+            for &p in &a.probabilities {
+                assert!((-1e-9..=1.0 + 1e-9).contains(&p), "p={p} out of box");
+            }
+        }
+    }
+
+    #[test]
+    fn expected_topology_connected_for_positive_budget() {
+        // Theorem 2 part 1: λ₂(Σ p_j L_j) > 0 whenever CB > 0 and the
+        // base graph is connected.
+        for g in [paper_figure1_graph(), ring(9), star(6)] {
+            let d = decompose(&g);
+            for cb in [0.05, 0.2, 0.5] {
+                let a = optimize_activation_probabilities(&d, cb);
+                assert!(
+                    a.lambda2 > 1e-6,
+                    "cb={cb}: expected graph disconnected (λ₂={})",
+                    a.lambda2
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lambda2_monotone_in_budget() {
+        let d = decompose(&paper_figure1_graph());
+        let mut prev = 0.0;
+        for cb in [0.1, 0.25, 0.5, 0.75, 1.0] {
+            let a = optimize_activation_probabilities(&d, cb);
+            assert!(
+                a.lambda2 >= prev - 1e-6,
+                "λ₂ decreased from {prev} to {} at cb={cb}",
+                a.lambda2
+            );
+            prev = a.lambda2;
+        }
+    }
+
+    #[test]
+    fn optimizer_beats_uniform_allocation() {
+        // MATCHA's optimized probabilities must do at least as well as the
+        // uniform (periodic-style) split at the same budget.
+        let d = decompose(&paper_figure1_graph());
+        for cb in [0.2, 0.4, 0.6] {
+            let opt = optimize_activation_probabilities(&d, cb);
+            let uni = periodic_probabilities(&d, cb);
+            assert!(
+                opt.lambda2 >= uni.lambda2 - 1e-7,
+                "cb={cb}: optimized λ₂ {} < uniform λ₂ {}",
+                opt.lambda2,
+                uni.lambda2
+            );
+        }
+    }
+
+    #[test]
+    fn critical_link_gets_high_priority() {
+        // Paper Fig 1: the bridge (0,4) to the degree-1 node must be
+        // activated with (near-)maximal probability at CB=0.5 while links
+        // at the busiest node are throttled.
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let a = optimize_activation_probabilities(&d, 0.5);
+        // Find the matching containing edge (0,4).
+        let crit = d
+            .matchings
+            .iter()
+            .position(|m| m.has_edge(0, 4))
+            .expect("some matching holds (0,4)");
+        let p_crit = a.probabilities[crit];
+        let mean_p: f64 = a.probabilities.iter().sum::<f64>() / a.probabilities.len() as f64;
+        assert!(
+            p_crit > mean_p,
+            "critical matching p={p_crit} not above mean {mean_p}"
+        );
+    }
+
+    #[test]
+    fn near_optimal_vs_brute_force_small_case() {
+        // Star on 4 nodes: 3 matchings of one edge each. By symmetry the
+        // optimum at Σp = 1.5 is uniform p = 0.5; grid-search confirms.
+        let d = decompose(&star(4));
+        assert_eq!(d.len(), 3);
+        let a = optimize_activation_probabilities(&d, 0.5);
+        let laps = d.laplacians();
+        // Brute force over the simplex Σp = 1.5, p ∈ [0,1]^3.
+        let mut best = 0.0_f64;
+        let steps = 60;
+        for i in 0..=steps {
+            for j in 0..=steps {
+                let p1 = i as f64 / steps as f64;
+                let p2 = j as f64 / steps as f64;
+                let p3 = 1.5 - p1 - p2;
+                if !(0.0..=1.0).contains(&p3) {
+                    continue;
+                }
+                let l2 = lambda2_of(&expected_laplacian(&laps, &[p1, p2, p3]));
+                best = best.max(l2);
+            }
+        }
+        assert!(
+            a.lambda2 >= best - 1e-3,
+            "ascent λ₂ {} below brute force {best}",
+            a.lambda2
+        );
+    }
+
+    #[test]
+    fn expected_comm_time_equals_probability_sum() {
+        let d = decompose(&paper_figure1_graph());
+        let a = optimize_activation_probabilities(&d, 0.3);
+        let total: f64 = a.probabilities.iter().sum();
+        assert!((a.expected_comm_time() - total).abs() < 1e-12);
+    }
+}

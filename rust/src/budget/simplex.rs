@@ -1,0 +1,118 @@
+//! Euclidean projection onto the capped simplex
+//! `{ p ∈ [0,1]^M : Σ p = b }`.
+//!
+//! The projection of `y` has the form `p_j = clamp(y_j − τ, 0, 1)` for a
+//! scalar Lagrange multiplier τ; `Σ_j clamp(y_j − τ, 0, 1)` is continuous
+//! and non-increasing in τ, so τ is found by bisection to machine
+//! precision in ~60 iterations.
+
+/// Project `y` onto `{p ∈ [0,1]^n : Σp = b}`. Requires `0 ≤ b ≤ n`.
+pub fn project_capped_simplex(y: &[f64], b: f64) -> Vec<f64> {
+    let n = y.len();
+    assert!(n > 0, "cannot project an empty vector");
+    assert!(
+        (0.0..=n as f64 + 1e-9).contains(&b),
+        "target sum {b} infeasible for n={n}"
+    );
+
+    let sum_at = |tau: f64| -> f64 { y.iter().map(|&v| (v - tau).clamp(0.0, 1.0)).sum() };
+
+    // Bracket τ: at τ = min(y) − 1 every coordinate saturates at 1 (sum = n);
+    // at τ = max(y) every coordinate is 0.
+    let mut lo = y.iter().cloned().fold(f64::INFINITY, f64::min) - 1.0;
+    let mut hi = y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    // Guard: ensure bracket actually straddles b.
+    debug_assert!(sum_at(lo) >= b - 1e-12 && sum_at(hi) <= b + 1e-12);
+
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if sum_at(mid) > b {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let tau = 0.5 * (lo + hi);
+    y.iter().map(|&v| (v - tau).clamp(0.0, 1.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn assert_feasible(p: &[f64], b: f64) {
+        for &v in p {
+            assert!((-1e-9..=1.0 + 1e-9).contains(&v), "coordinate {v} out of box");
+        }
+        let s: f64 = p.iter().sum();
+        assert!((s - b).abs() < 1e-7, "sum {s} != target {b}");
+    }
+
+    #[test]
+    fn already_feasible_is_fixed_point() {
+        let y = vec![0.2, 0.3, 0.5];
+        let p = project_capped_simplex(&y, 1.0);
+        for (a, b) in y.iter().zip(&p) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn uniform_when_all_equal() {
+        let p = project_capped_simplex(&[5.0, 5.0, 5.0, 5.0], 2.0);
+        for &v in &p {
+            assert!((v - 0.5).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn caps_at_one() {
+        // One huge coordinate must saturate at 1, remainder split.
+        let p = project_capped_simplex(&[100.0, 0.0, 0.0], 1.5);
+        assert!((p[0] - 1.0).abs() < 1e-7);
+        assert!((p[1] - 0.25).abs() < 1e-6);
+        assert!((p[2] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn boundary_budgets() {
+        let p0 = project_capped_simplex(&[0.3, 0.8], 0.0);
+        assert_feasible(&p0, 0.0);
+        let pn = project_capped_simplex(&[0.3, 0.8], 2.0);
+        assert_feasible(&pn, 2.0);
+    }
+
+    #[test]
+    fn property_feasibility_random() {
+        let mut rng = Rng::new(99);
+        for _ in 0..500 {
+            let n = 1 + rng.below(12);
+            let y: Vec<f64> = (0..n).map(|_| rng.uniform_in(-3.0, 3.0)).collect();
+            let b = rng.uniform() * n as f64;
+            let p = project_capped_simplex(&y, b);
+            assert_feasible(&p, b);
+        }
+    }
+
+    #[test]
+    fn property_is_closest_point_vs_random_candidates() {
+        // Projection optimality: ‖y − p*‖ ≤ ‖y − q‖ for any feasible q.
+        let mut rng = Rng::new(123);
+        for _ in 0..100 {
+            let n = 2 + rng.below(6);
+            let y: Vec<f64> = (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+            let b = rng.uniform() * n as f64;
+            let p = project_capped_simplex(&y, b);
+            let dp: f64 = y.iter().zip(&p).map(|(a, c)| (a - c).powi(2)).sum();
+            for _ in 0..20 {
+                // Random feasible q: random point projected (feasible by
+                // the feasibility property), perturbed within the set.
+                let raw: Vec<f64> = (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+                let q = project_capped_simplex(&raw, b);
+                let dq: f64 = y.iter().zip(&q).map(|(a, c)| (a - c).powi(2)).sum();
+                assert!(dp <= dq + 1e-6, "projection not closest: {dp} > {dq}");
+            }
+        }
+    }
+}

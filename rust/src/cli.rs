@@ -1,0 +1,432 @@
+//! Command-line interface for the `matcha` binary.
+//!
+//! Hand-rolled parsing (no `clap` in this offline image): subcommand +
+//! `--flag value` pairs. Every figure harness in `rust/benches/` is also
+//! reachable interactively from here, which is how the EXPERIMENTS.md
+//! runs were produced.
+
+use crate::budget::{optimize_activation_probabilities, periodic_probabilities};
+use crate::coordinator::{plan_matcha, plan_periodic, plan_vanilla, Trainer, TrainerConfig};
+use crate::config::ArtifactPaths;
+use crate::delay::DelayModel;
+use crate::graph::{expected_node_comm_time, parse_graph_spec, Graph};
+use crate::matching::{decompose, decompose_greedy};
+use crate::mixing::{optimize_alpha, optimize_alpha_periodic, vanilla_design};
+use crate::rng::Rng;
+use crate::sim::{run_decentralized, LogisticProblem, LogisticSpec, QuadraticProblem, RunConfig};
+use crate::topology::{MatchaSampler, PeriodicSampler, VanillaSampler};
+
+/// Parsed `--flag value` arguments.
+pub struct Args {
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw argv-style strings; returns an error message on
+    /// dangling flags.
+    pub fn parse(raw: &[String]) -> Result<Args, String> {
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let k = &raw[i];
+            if let Some(name) = k.strip_prefix("--") {
+                if i + 1 >= raw.len() || raw[i + 1].starts_with("--") {
+                    // Boolean flag.
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 2;
+                }
+            } else {
+                return Err(format!("unexpected positional argument '{k}'"));
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+}
+
+const USAGE: &str = "\
+matcha — MATCHA: decentralized SGD with matching decomposition sampling
+
+USAGE: matcha <command> [--flag value ...]
+
+COMMANDS
+  decompose  --graph SPEC [--greedy]            matching decomposition
+  probs      --graph SPEC --budget CB           activation probabilities (problem 4)
+  alpha      --graph SPEC --budget CB           mixing weight + spectral norm (Lemma 1)
+  rho-curve  --graph SPEC [--points N]          ρ vs budget, MATCHA vs P-DecenSGD (Fig 3)
+  commtime   --graph SPEC --budget CB           per-node expected comm time (Fig 1)
+  schedule   --graph SPEC --budget CB --steps K [--out FILE]   apriori schedule
+  sim        --graph SPEC --strategy S --budget CB --iters N [--problem quad|logreg]
+  train      --graph SPEC --strategy S --budget CB --steps N [--artifacts DIR] [--pallas]
+  info       [--artifacts DIR]                  artifact metadata
+
+GRAPH SPECS   fig1 | ring:M | star:M | complete:M | grid:RxC | geom:M:DELTA:SEED | er:M:DELTA:SEED
+STRATEGIES    matcha | vanilla | periodic
+";
+
+/// CLI entry point (called from main.rs).
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(msg) => {
+            eprintln!("error: {msg}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Dispatch a full command line; separated from `main` for testing.
+pub fn run(argv: &[String]) -> Result<(), String> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "decompose" => cmd_decompose(&args),
+        "probs" => cmd_probs(&args),
+        "alpha" => cmd_alpha(&args),
+        "rho-curve" => cmd_rho_curve(&args),
+        "commtime" => cmd_commtime(&args),
+        "schedule" => cmd_schedule(&args),
+        "sim" => cmd_sim(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'")),
+    }
+}
+
+fn graph_arg(args: &Args) -> Result<Graph, String> {
+    parse_graph_spec(args.str_or("graph", "fig1"))
+}
+
+fn cmd_decompose(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let d = if args.bool("greedy") { decompose_greedy(&g) } else { decompose(&g) };
+    println!(
+        "graph: {} nodes, {} edges, Δ = {}",
+        g.num_nodes(),
+        g.num_edges(),
+        g.max_degree()
+    );
+    println!("M = {} matchings (Vizing bound Δ+1 = {})", d.len(), g.max_degree() + 1);
+    for (j, m) in d.matchings.iter().enumerate() {
+        println!("  G_{j}: {:?}", m.edges());
+    }
+    Ok(())
+}
+
+fn cmd_probs(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let cb = args.f64_or("budget", 0.5)?;
+    let d = decompose(&g);
+    let opt = optimize_activation_probabilities(&d, cb);
+    let uni = periodic_probabilities(&d, cb);
+    println!("budget CB = {cb}  (Σp ≤ {:.3})", cb * d.len() as f64);
+    for (j, p) in opt.probabilities.iter().enumerate() {
+        println!("  p_{j} = {p:.4}   edges {:?}", d.matchings[j].edges());
+    }
+    println!("λ₂(Σ p L) = {:.6}  (uniform allocation: {:.6})", opt.lambda2, uni.lambda2);
+    println!("expected comm time = {:.3} units/iter", opt.expected_comm_time());
+    Ok(())
+}
+
+fn cmd_alpha(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let cb = args.f64_or("budget", 0.5)?;
+    let d = decompose(&g);
+    let probs = optimize_activation_probabilities(&d, cb);
+    let mix = optimize_alpha(&d, &probs.probabilities);
+    let van = vanilla_design(&g.laplacian());
+    let per = optimize_alpha_periodic(&g.laplacian(), cb);
+    println!("MATCHA    CB={cb}: α = {:.5}, ρ = {:.6}", mix.alpha, mix.rho);
+    println!("P-DecenSGD CB={cb}: α = {:.5}, ρ = {:.6}", per.alpha, per.rho);
+    println!("vanilla   CB=1.0: α = {:.5}, ρ = {:.6}", van.alpha, van.rho);
+    Ok(())
+}
+
+fn cmd_rho_curve(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let points = args.usize_or("points", 10)?;
+    let d = decompose(&g);
+    println!("CB, rho_matcha, rho_periodic, lambda2");
+    for i in 1..=points {
+        let cb = i as f64 / points as f64;
+        let probs = optimize_activation_probabilities(&d, cb);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        let per = optimize_alpha_periodic(&g.laplacian(), cb);
+        println!("{cb:.2}, {:.6}, {:.6}, {:.6}", mix.rho, per.rho, probs.lambda2);
+    }
+    Ok(())
+}
+
+fn cmd_commtime(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let cb = args.f64_or("budget", 0.5)?;
+    let d = decompose(&g);
+    let probs = optimize_activation_probabilities(&d, cb);
+    let vanilla = expected_node_comm_time(g.num_nodes(), &d.matchings, &vec![1.0; d.len()]);
+    let matcha = expected_node_comm_time(g.num_nodes(), &d.matchings, &probs.probabilities);
+    println!("node, degree, vanilla_units, matcha_units(CB={cb})");
+    let deg = g.degrees();
+    for i in 0..g.num_nodes() {
+        println!("{i}, {}, {:.3}, {:.3}", deg[i], vanilla[i], matcha[i]);
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let cb = args.f64_or("budget", 0.5)?;
+    let steps = args.usize_or("steps", 100)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let plan = plan_matcha(&g, cb, steps, seed);
+    println!(
+        "schedule: {} rounds, α = {:.5}, ρ = {:.6}, mean comm = {:.3} units/iter",
+        plan.schedule.rounds.len(),
+        plan.alpha,
+        plan.rho,
+        plan.schedule.mean_comm_units()
+    );
+    if let Some(out) = args.flags.get("out") {
+        plan.schedule
+            .save(std::path::Path::new(out))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let cb = args.f64_or("budget", 0.5)?;
+    let iters = args.usize_or("iters", 1000)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let lr = args.f64_or("lr", 0.05)?;
+    let strategy = args.str_or("strategy", "matcha");
+    let d = decompose(&g);
+    let delay = DelayModel::parse(args.str_or("delay", "unit"))?;
+
+    let (alpha, mut sampler): (f64, Box<dyn crate::topology::TopologySampler>) = match strategy {
+        "matcha" => {
+            let probs = optimize_activation_probabilities(&d, cb);
+            let mix = optimize_alpha(&d, &probs.probabilities);
+            (mix.alpha, Box::new(MatchaSampler::new(probs.probabilities, seed)))
+        }
+        "vanilla" => {
+            let design = vanilla_design(&g.laplacian());
+            (design.alpha, Box::new(VanillaSampler::new(d.len())))
+        }
+        "periodic" => {
+            let design = optimize_alpha_periodic(&g.laplacian(), cb);
+            (design.alpha, Box::new(PeriodicSampler::from_budget(d.len(), cb)))
+        }
+        other => return Err(format!("unknown strategy '{other}'")),
+    };
+
+    let cfg = RunConfig {
+        lr,
+        iterations: iters,
+        record_every: (iters / 50).max(1),
+        alpha,
+        compute_units: args.f64_or("compute-units", 1.0)?,
+        delay,
+        seed,
+        ..RunConfig::default()
+    };
+
+    let problem = args.str_or("problem", "logreg");
+    let result = match problem {
+        "quad" => {
+            let mut rng = Rng::new(seed ^ 0x9a9a);
+            let p = QuadraticProblem::generate(g.num_nodes(), 20, 1.0, 0.2, &mut rng);
+            run_decentralized(&p, &d.matchings, &mut sampler, &cfg)
+        }
+        "logreg" => {
+            let spec = LogisticSpec {
+                num_workers: g.num_nodes(),
+                non_iid: args.f64_or("non-iid", 0.0)?,
+                seed: seed ^ 0x10f,
+                ..LogisticSpec::default()
+            };
+            let p = LogisticProblem::generate(spec);
+            run_decentralized(&p, &d.matchings, &mut sampler, &cfg)
+        }
+        other => return Err(format!("unknown problem '{other}'")),
+    };
+
+    println!(
+        "strategy={strategy} problem={problem} iters={iters} CB={cb}: \
+         final loss {:.5}, total virtual time {:.1} units, comm {:.1} units",
+        result.metrics.last("loss_vs_iter").unwrap_or(f64::NAN),
+        result.total_time,
+        result.total_comm_units
+    );
+    if let Some(acc) = result.metrics.last("test_acc_vs_iter") {
+        println!("final test accuracy {acc:.4}");
+    }
+    if let Some(out) = args.flags.get("out") {
+        result
+            .metrics
+            .save_json(std::path::Path::new(out))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let cb = args.f64_or("budget", 0.5)?;
+    let steps = args.usize_or("steps", 200)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let strategy = args.str_or("strategy", "matcha");
+    let artifacts = ArtifactPaths::new(args.str_or("artifacts", "artifacts"));
+
+    let plan = match strategy {
+        "matcha" => plan_matcha(&g, cb, steps, seed),
+        "vanilla" => plan_vanilla(&g, steps),
+        "periodic" => plan_periodic(&g, cb, steps),
+        other => return Err(format!("unknown strategy '{other}'")),
+    };
+    println!(
+        "plan: strategy={strategy} CB={cb} M={} α={:.5} ρ={:.6} mean-comm={:.2}",
+        plan.decomposition.len(),
+        plan.alpha,
+        plan.rho,
+        plan.schedule.mean_comm_units()
+    );
+
+    let cfg = TrainerConfig {
+        steps,
+        lr: args.f64_or("lr", 0.5)? as f32,
+        eval_every: args.usize_or("eval-every", 50)?,
+        use_pallas: args.bool("pallas"),
+        compute_units: args.f64_or("compute-units", 1.0)?,
+        non_iid: args.bool("non-iid"),
+        seed,
+        ..TrainerConfig::default()
+    };
+    let trainer =
+        Trainer::new(&artifacts, plan.decomposition.clone(), cfg).map_err(|e| format!("{e:#}"))?;
+    println!(
+        "model: preset={} params={} workers={}",
+        trainer.meta().preset,
+        trainer.meta().param_count,
+        trainer.meta().workers
+    );
+    let report = trainer.run(&plan.schedule).map_err(|e| format!("{e:#}"))?;
+    println!(
+        "done: train loss {:.4}, eval loss {:.4}, virtual time {:.1} units, \
+         comm {:.1} units, wallclock {:.1}s",
+        report.final_train_loss,
+        report.final_eval_loss,
+        report.total_time_units,
+        report.total_comm_units,
+        report.wallclock_secs
+    );
+    if let Some(out) = args.flags.get("out") {
+        report
+            .metrics
+            .save_json(std::path::Path::new(out))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let artifacts = ArtifactPaths::new(args.str_or("artifacts", "artifacts"));
+    let meta = crate::config::ModelMeta::load(&artifacts.meta())?;
+    println!(
+        "preset={} vocab={} d_model={} layers={} heads={} seq_len={} batch={}",
+        meta.preset, meta.vocab, meta.d_model, meta.n_layers, meta.n_heads, meta.seq_len, meta.batch
+    );
+    println!("workers={} param_count={}", meta.workers, meta.param_count);
+    for p in &meta.params {
+        println!("  {:<24} {:?} @ {}", p.name, p.shape, p.offset);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn args_parse_flags_and_booleans() {
+        let a = Args::parse(&sv(&["--graph", "ring:5", "--pallas", "--budget", "0.3"])).unwrap();
+        assert_eq!(a.str_or("graph", "x"), "ring:5");
+        assert!(a.bool("pallas"));
+        assert_eq!(a.f64_or("budget", 0.0).unwrap(), 0.3);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn args_reject_positional() {
+        assert!(Args::parse(&sv(&["oops"])).is_err());
+    }
+
+    #[test]
+    fn run_dispatches_fast_commands() {
+        run(&sv(&["decompose", "--graph", "ring:6"])).unwrap();
+        run(&sv(&["commtime", "--graph", "fig1", "--budget", "0.5"])).unwrap();
+        run(&sv(&["help"])).unwrap();
+    }
+
+    #[test]
+    fn run_rejects_unknown_command() {
+        assert!(run(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn sim_quadratic_smoke() {
+        run(&sv(&[
+            "sim",
+            "--graph",
+            "ring:6",
+            "--strategy",
+            "matcha",
+            "--budget",
+            "0.5",
+            "--iters",
+            "50",
+            "--problem",
+            "quad",
+        ]))
+        .unwrap();
+    }
+}

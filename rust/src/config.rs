@@ -1,0 +1,256 @@
+//! Artifact metadata (`artifacts/meta.json`) — the contract between the
+//! Python AOT path and the Rust coordinator — plus parameter
+//! initialization implemented from that metadata (so the Rust binary is
+//! self-contained after `make artifacts`).
+
+use crate::json::Json;
+use crate::rng::Rng;
+use std::path::{Path, PathBuf};
+
+/// One tensor in the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// "normal" | "ones" | "zeros"
+    pub init: String,
+    pub std: f64,
+}
+
+/// Parsed `meta.json`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub preset: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub workers: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamEntry>,
+}
+
+impl ModelMeta {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<ModelMeta, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let field = |k: &str| -> Result<usize, String> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("meta.json: missing/bad '{k}'"))
+        };
+        let params_json = j
+            .get("params")
+            .and_then(Json::as_array)
+            .ok_or("meta.json: missing 'params'")?;
+        let mut params = Vec::with_capacity(params_json.len());
+        for (i, p) in params_json.iter().enumerate() {
+            let name = p
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("param {i}: missing name"))?
+                .to_string();
+            let shape: Vec<usize> = p
+                .get("shape")
+                .and_then(Json::as_array)
+                .ok_or_else(|| format!("param {name}: missing shape"))?
+                .iter()
+                .map(|s| s.as_usize().ok_or_else(|| format!("param {name}: bad shape")))
+                .collect::<Result<_, _>>()?;
+            let offset = p
+                .get("offset")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("param {name}: missing offset"))?;
+            let size = p
+                .get("size")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("param {name}: missing size"))?;
+            let init = p
+                .get("init")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("param {name}: missing init"))?
+                .to_string();
+            let std = p.get("std").and_then(Json::as_f64).unwrap_or(0.0);
+            let computed: usize = shape.iter().product();
+            if computed != size {
+                return Err(format!("param {name}: size {size} != shape product {computed}"));
+            }
+            params.push(ParamEntry { name, shape, offset, size, init, std });
+        }
+        let meta = ModelMeta {
+            preset: j
+                .get("preset")
+                .and_then(Json::as_str)
+                .unwrap_or("custom")
+                .to_string(),
+            vocab: field("vocab")?,
+            d_model: field("d_model")?,
+            n_heads: field("n_heads")?,
+            n_layers: field("n_layers")?,
+            seq_len: field("seq_len")?,
+            batch: field("batch")?,
+            workers: field("workers")?,
+            param_count: field("param_count")?,
+            params,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// Load from `artifacts/meta.json`.
+    pub fn load(path: &Path) -> Result<ModelMeta, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e} (run `make artifacts` first?)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Layout invariants (mirrors python/tests/test_aot.py).
+    pub fn validate(&self) -> Result<(), String> {
+        let mut offset = 0;
+        for p in &self.params {
+            if p.offset != offset {
+                return Err(format!("param {}: offset {} != expected {offset}", p.name, p.offset));
+            }
+            offset += p.size;
+        }
+        if offset != self.param_count {
+            return Err(format!("param_count {} != layout total {offset}", self.param_count));
+        }
+        if self.workers == 0 || self.batch == 0 || self.seq_len == 0 {
+            return Err("degenerate meta fields".into());
+        }
+        Ok(())
+    }
+
+    /// Initialize a flat parameter vector per the metadata (normal
+    /// entries scaled by their std; ones/zeros exact). Statistically
+    /// equivalent to `model.init_params`, not bit-identical — all
+    /// convergence claims tolerate that (and tests check the statistics).
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut flat = vec![0.0f32; self.param_count];
+        for p in &self.params {
+            let dst = &mut flat[p.offset..p.offset + p.size];
+            match p.init.as_str() {
+                "ones" => dst.iter_mut().for_each(|v| *v = 1.0),
+                "zeros" => {}
+                _ => dst
+                    .iter_mut()
+                    .for_each(|v| *v = (rng.normal() * p.std) as f32),
+            }
+        }
+        flat
+    }
+}
+
+/// Standard artifact locations rooted at a directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactPaths {
+    pub dir: PathBuf,
+}
+
+impl ArtifactPaths {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        ArtifactPaths { dir: dir.into() }
+    }
+
+    pub fn meta(&self) -> PathBuf {
+        self.dir.join("meta.json")
+    }
+
+    /// Train step; `pallas = true` selects the Pallas-kernel lowering,
+    /// otherwise the XLA-fused fast path.
+    pub fn train_step(&self, pallas: bool) -> PathBuf {
+        self.dir.join(if pallas { "train_step.hlo.txt" } else { "train_step_fused.hlo.txt" })
+    }
+
+    pub fn eval_step(&self) -> PathBuf {
+        self.dir.join("eval_step.hlo.txt")
+    }
+
+    /// Gossip mix; `pallas = true` selects the Pallas-kernel lowering,
+    /// otherwise the XLA-fused fast path (§Perf: on CPU the interpret
+    /// grid loop makes the Pallas variant ~40x slower).
+    pub fn mix(&self, pallas: bool) -> PathBuf {
+        self.dir.join(if pallas { "mix.hlo.txt" } else { "mix_fused.hlo.txt" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta() -> String {
+        r#"{
+          "preset": "tiny", "vocab": 64, "d_model": 8, "n_heads": 2,
+          "n_layers": 1, "seq_len": 4, "batch": 2, "workers": 3,
+          "param_count": 20,
+          "params": [
+            {"name": "a", "shape": [2, 4], "offset": 0, "size": 8, "init": "normal", "std": 0.5},
+            {"name": "b", "shape": [8], "offset": 8, "size": 8, "init": "ones", "std": 0},
+            {"name": "c", "shape": [4], "offset": 16, "size": 4, "init": "zeros", "std": 0}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_valid_meta() {
+        let m = ModelMeta::parse(&sample_meta()).unwrap();
+        assert_eq!(m.workers, 3);
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[1].init, "ones");
+    }
+
+    #[test]
+    fn reject_gap_in_layout() {
+        let bad = sample_meta().replace("\"offset\": 8", "\"offset\": 9");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn reject_size_shape_mismatch() {
+        let bad = sample_meta().replace("\"size\": 4", "\"size\": 5");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let m = ModelMeta::parse(&sample_meta()).unwrap();
+        let mut rng = Rng::new(5);
+        let flat = m.init_params(&mut rng);
+        assert_eq!(flat.len(), 20);
+        // "ones" block
+        assert!(flat[8..16].iter().all(|&v| v == 1.0));
+        // "zeros" block
+        assert!(flat[16..20].iter().all(|&v| v == 0.0));
+        // normal block: nonzero, roughly std 0.5
+        let std: f64 =
+            (flat[0..8].iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / 8.0).sqrt();
+        assert!(std > 0.1 && std < 1.2, "std = {std}");
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let p = ArtifactPaths::new("/tmp/a");
+        assert!(p.train_step(true).ends_with("train_step.hlo.txt"));
+        assert!(p.train_step(false).ends_with("train_step_fused.hlo.txt"));
+        assert!(p.mix(true).ends_with("mix.hlo.txt"));
+        assert!(p.mix(false).ends_with("mix_fused.hlo.txt"));
+    }
+
+    #[test]
+    fn real_artifact_meta_parses_if_present() {
+        // Integration hook: when `make artifacts` has run, validate the
+        // real contract end to end.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/meta.json");
+        if path.exists() {
+            let m = ModelMeta::load(&path).unwrap();
+            assert_eq!(m.vocab, crate::data::VOCAB);
+            assert!(m.param_count > 0);
+        }
+    }
+}

@@ -1,0 +1,426 @@
+//! The decentralized NN-training coordinator (L3 over the XLA runtime).
+//!
+//! Executes the paper's training loop on the real model: each of the `m`
+//! workers holds a flat parameter vector; per iteration every worker runs
+//! the AOT-compiled `train_step` on a batch from its own corpus shard
+//! (paper eq. (2)'s local gradient step), then the activated topology's
+//! mixing matrix is applied through the AOT `mix` computation (the
+//! consensus step). The schedule is pregenerated (apriori, §1), runtime
+//! does zero scheduling work, and the virtual clock charges the paper's
+//! delay model — see DESIGN.md §Hardware-Adaptation for why modelled time
+//! is the right testbed here.
+
+use crate::config::{ArtifactPaths, ModelMeta};
+use crate::data::{BatchIter, Corpus};
+use crate::delay::{DelayModel, VirtualClock};
+use crate::graph::Graph;
+use crate::matching::MatchingDecomposition;
+use crate::metrics::Recorder;
+use crate::rng::Rng;
+use crate::runtime::{
+    literal_f32, literal_i32, literal_scalar_f32, to_scalar_f32, to_vec_f32, Executable,
+    Runtime,
+};
+use crate::topology::Schedule;
+use anyhow::{Context, Result};
+
+/// Configuration for one coordinated training run.
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    /// Total iterations to run (bounded by the schedule length).
+    pub steps: usize,
+    pub lr: f32,
+    /// Multiply lr by `lr_decay` every `lr_decay_every` steps.
+    pub lr_decay: f32,
+    pub lr_decay_every: usize,
+    /// Evaluate held-out loss every this many steps.
+    pub eval_every: usize,
+    /// Use the Pallas-kernel train_step artifact (vs the XLA-fused one).
+    pub use_pallas: bool,
+    /// Computation time per iteration in delay units (relative to one
+    /// link's communication time; the paper's CIFAR runs are
+    /// communication-dominated, i.e. small values here).
+    pub compute_units: f64,
+    pub delay: DelayModel,
+    /// Tokens per worker shard in the synthetic corpus.
+    pub tokens_per_worker: usize,
+    pub non_iid: bool,
+    pub seed: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            steps: 200,
+            lr: 0.5,
+            lr_decay: 1.0,
+            lr_decay_every: usize::MAX,
+            eval_every: 50,
+            use_pallas: false,
+            compute_units: 1.0,
+            delay: DelayModel::UnitPerMatching,
+            tokens_per_worker: 20_000,
+            non_iid: false,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a coordinated run.
+pub struct TrainReport {
+    pub metrics: Recorder,
+    pub final_train_loss: f64,
+    pub final_eval_loss: f64,
+    pub total_time_units: f64,
+    pub total_comm_units: f64,
+    pub wallclock_secs: f64,
+}
+
+/// The coordinator: owns the runtime, the compiled executables, the
+/// worker states, and the data pipeline.
+pub struct Trainer {
+    meta: ModelMeta,
+    train_exe: Executable,
+    eval_exe: Executable,
+    mix_exe: Executable,
+    decomp: MatchingDecomposition,
+    config: TrainerConfig,
+}
+
+impl Trainer {
+    /// Load artifacts and compile the three computations.
+    pub fn new(
+        artifacts: &ArtifactPaths,
+        decomp: MatchingDecomposition,
+        config: TrainerConfig,
+    ) -> Result<Trainer> {
+        let meta = ModelMeta::load(&artifacts.meta()).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            decomp.base.num_nodes() == meta.workers,
+            "graph has {} nodes but artifacts were compiled for {} workers \
+             (re-run `make artifacts WORKERS={}`)",
+            decomp.base.num_nodes(),
+            meta.workers,
+            decomp.base.num_nodes()
+        );
+        let rt = Runtime::cpu()?;
+        let train_exe = rt.load_hlo(&artifacts.train_step(config.use_pallas))?;
+        let eval_exe = rt.load_hlo(&artifacts.eval_step())?;
+        let mix_exe = rt.load_hlo(&artifacts.mix(config.use_pallas))?;
+        Ok(Trainer { meta, train_exe, eval_exe, mix_exe, decomp, config })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Build the dense mixing matrix W = I − α Σ_{j∈activated} L_j as a
+    /// row-major f32 buffer for the mix executable.
+    fn mixing_w(&self, activated: &[usize], alpha: f64) -> Vec<f32> {
+        let m = self.meta.workers;
+        let mut w = vec![0.0f32; m * m];
+        for i in 0..m {
+            w[i * m + i] = 1.0;
+        }
+        for &j in activated {
+            for &(u, v) in self.decomp.matchings[j].edges() {
+                w[u * m + u] -= alpha as f32;
+                w[v * m + v] -= alpha as f32;
+                w[u * m + v] += alpha as f32;
+                w[v * m + u] += alpha as f32;
+            }
+        }
+        w
+    }
+
+    /// Run the schedule. `schedule.alpha` supplies α; iterations are
+    /// `min(config.steps, schedule.rounds.len())`.
+    pub fn run(&self, schedule: &Schedule) -> Result<TrainReport> {
+        let cfg = &self.config;
+        let meta = &self.meta;
+        let m = meta.workers;
+        let d = meta.param_count;
+        let steps = cfg.steps.min(schedule.rounds.len());
+        anyhow::ensure!(steps > 0, "empty schedule");
+
+        // --- data ----------------------------------------------------
+        let corpus = Corpus::synthesize(
+            m,
+            cfg.tokens_per_worker,
+            (meta.batch * meta.seq_len * 4).max(4096),
+            cfg.non_iid,
+            cfg.seed,
+        );
+        let mut iters: Vec<BatchIter> = corpus
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(w, s)| BatchIter::new(&s.tokens, meta.batch, meta.seq_len, cfg.seed ^ w as u64))
+            .collect();
+        let mut eval_iter = BatchIter::new(&corpus.eval, meta.batch, meta.seq_len, cfg.seed ^ 0xe7a1);
+        // Fixed eval batches for a stable eval metric.
+        let eval_batches: Vec<(Vec<i32>, Vec<i32>)> = (0..4).map(|_| eval_iter.next_batch()).collect();
+
+        // --- worker states --------------------------------------------
+        // All workers start from the same point (Theorem 1 initialization).
+        let mut init_rng = Rng::new(cfg.seed ^ 0x1217);
+        let x0 = meta.init_params(&mut init_rng);
+        let mut workers: Vec<Vec<f32>> = vec![x0; m];
+
+        // --- loop ------------------------------------------------------
+        let mut clock = VirtualClock::new(cfg.compute_units);
+        let mut delay_rng = Rng::new(cfg.seed ^ 0xde1a);
+        let mut metrics = Recorder::new();
+        let mut total_comm = 0.0f64;
+        let mut lr = cfg.lr;
+        let batch_dims = [meta.batch as i64, meta.seq_len as i64];
+        let wall_start = std::time::Instant::now();
+
+        for k in 0..steps {
+            // Local SGD step on every worker.
+            let mut mean_loss = 0.0f64;
+            for w in 0..m {
+                let (xs, ys) = iters[w].next_batch();
+                let inputs = [
+                    literal_f32(&workers[w], &[d as i64])?,
+                    literal_i32(&xs, &batch_dims)?,
+                    literal_i32(&ys, &batch_dims)?,
+                    literal_scalar_f32(lr),
+                ];
+                let outs = self
+                    .train_exe
+                    .run(&inputs)
+                    .with_context(|| format!("train step k={k} worker={w}"))?;
+                workers[w] = to_vec_f32(&outs[0])?;
+                mean_loss += to_scalar_f32(&outs[1])? as f64 / m as f64;
+            }
+
+            // Consensus over the activated topology via the mix artifact.
+            let round = &schedule.rounds[k];
+            if !round.activated.is_empty() {
+                let w_mat = self.mixing_w(&round.activated, schedule.alpha);
+                let mut stacked = Vec::with_capacity(m * d);
+                for wvec in &workers {
+                    stacked.extend_from_slice(wvec);
+                }
+                let outs = self
+                    .mix_exe
+                    .run(&[
+                        literal_f32(&w_mat, &[m as i64, m as i64])?,
+                        literal_f32(&stacked, &[m as i64, d as i64])?,
+                    ])
+                    .with_context(|| format!("mix step k={k}"))?;
+                let mixed = to_vec_f32(&outs[0])?;
+                for (w, wvec) in workers.iter_mut().enumerate() {
+                    wvec.copy_from_slice(&mixed[w * d..(w + 1) * d]);
+                }
+            }
+
+            // Time accounting + metrics.
+            let comm_t =
+                cfg.delay
+                    .comm_time(&self.decomp.matchings, &round.activated, &mut delay_rng);
+            total_comm += comm_t;
+            let now = clock.tick(comm_t);
+            metrics.push("train_loss_vs_iter", k as f64, mean_loss);
+            metrics.push("train_loss_vs_time", now, mean_loss);
+            metrics.push("comm_units_vs_iter", k as f64, total_comm);
+
+            if (k + 1) % cfg.lr_decay_every == 0 {
+                lr *= cfg.lr_decay;
+            }
+            if (k + 1) % cfg.eval_every == 0 || k + 1 == steps {
+                let eval = self.evaluate(&workers, &eval_batches, &batch_dims)?;
+                metrics.push("eval_loss_vs_iter", (k + 1) as f64, eval);
+                metrics.push("eval_loss_vs_time", now, eval);
+            }
+        }
+
+        let final_eval = metrics.last("eval_loss_vs_iter").unwrap_or(f64::NAN);
+        Ok(TrainReport {
+            final_train_loss: metrics.last("train_loss_vs_iter").unwrap_or(f64::NAN),
+            final_eval_loss: final_eval,
+            total_time_units: clock.elapsed(),
+            total_comm_units: total_comm,
+            wallclock_secs: wall_start.elapsed().as_secs_f64(),
+            metrics,
+        })
+    }
+
+    /// Held-out loss of the averaged iterate x̄ (the paper's reported
+    /// quantity is a function of the averaged model).
+    fn evaluate(
+        &self,
+        workers: &[Vec<f32>],
+        eval_batches: &[(Vec<i32>, Vec<i32>)],
+        batch_dims: &[i64],
+    ) -> Result<f64> {
+        let d = self.meta.param_count;
+        let m = workers.len();
+        let mut mean = vec![0.0f32; d];
+        for w in workers {
+            for (a, &b) in mean.iter_mut().zip(w) {
+                *a += b / m as f32;
+            }
+        }
+        let mut acc = 0.0f64;
+        for (xs, ys) in eval_batches {
+            let outs = self.eval_exe.run(&[
+                literal_f32(&mean, &[d as i64])?,
+                literal_i32(xs, batch_dims)?,
+                literal_i32(ys, batch_dims)?,
+            ])?;
+            acc += to_scalar_f32(&outs[0])? as f64 / eval_batches.len() as f64;
+        }
+        Ok(acc)
+    }
+}
+
+/// Convenience: build the full MATCHA pipeline (decompose → probabilities
+/// → α → schedule) for a base graph and budget, returning everything a
+/// run needs. This is the library's "one call" entry point.
+pub struct MatchaPlan {
+    pub decomposition: MatchingDecomposition,
+    pub probabilities: Vec<f64>,
+    pub lambda2: f64,
+    pub alpha: f64,
+    pub rho: f64,
+    pub schedule: Schedule,
+}
+
+/// Assemble a MATCHA plan: matching decomposition, optimized activation
+/// probabilities at budget `cb`, optimized mixing weight, and a
+/// pregenerated `steps`-round schedule.
+pub fn plan_matcha(base: &Graph, cb: f64, steps: usize, seed: u64) -> MatchaPlan {
+    use crate::budget::optimize_activation_probabilities;
+    use crate::mixing::optimize_alpha;
+    use crate::topology::MatchaSampler;
+
+    let decomposition = crate::matching::decompose(base);
+    let probs = optimize_activation_probabilities(&decomposition, cb);
+    let mix = optimize_alpha(&decomposition, &probs.probabilities);
+    let mut sampler = MatchaSampler::new(probs.probabilities.clone(), seed);
+    let schedule = Schedule::generate(&mut sampler, mix.alpha, decomposition.len(), steps);
+    MatchaPlan {
+        decomposition,
+        probabilities: probs.probabilities,
+        lambda2: probs.lambda2,
+        alpha: mix.alpha,
+        rho: mix.rho,
+        schedule,
+    }
+}
+
+/// Assemble the vanilla-DecenSGD plan on the same graph (all matchings
+/// every round, closed-form optimal α).
+pub fn plan_vanilla(base: &Graph, steps: usize) -> MatchaPlan {
+    use crate::mixing::vanilla_design;
+    use crate::topology::VanillaSampler;
+
+    let decomposition = crate::matching::decompose(base);
+    let design = vanilla_design(&base.laplacian());
+    let mut sampler = VanillaSampler::new(decomposition.len());
+    let schedule = Schedule::generate(&mut sampler, design.alpha, decomposition.len(), steps);
+    let m = decomposition.len();
+    MatchaPlan {
+        decomposition,
+        probabilities: vec![1.0; m],
+        lambda2: crate::graph::algebraic_connectivity(base),
+        alpha: design.alpha,
+        rho: design.rho,
+        schedule,
+    }
+}
+
+/// Assemble the P-DecenSGD plan at budget `cb` (full graph every ⌈1/cb⌉
+/// rounds, α optimized for the correlated activation model).
+pub fn plan_periodic(base: &Graph, cb: f64, steps: usize) -> MatchaPlan {
+    use crate::mixing::optimize_alpha_periodic;
+    use crate::topology::PeriodicSampler;
+
+    let decomposition = crate::matching::decompose(base);
+    let design = optimize_alpha_periodic(&base.laplacian(), cb);
+    let mut sampler = PeriodicSampler::from_budget(decomposition.len(), cb);
+    let schedule = Schedule::generate(&mut sampler, design.alpha, decomposition.len(), steps);
+    let m = decomposition.len();
+    MatchaPlan {
+        decomposition,
+        probabilities: vec![cb; m],
+        lambda2: cb * crate::graph::algebraic_connectivity(base),
+        alpha: design.alpha,
+        rho: design.rho,
+        schedule,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_figure1_graph;
+
+    #[test]
+    fn plan_matcha_produces_consistent_artifacts() {
+        let g = paper_figure1_graph();
+        let plan = plan_matcha(&g, 0.5, 100, 1);
+        assert_eq!(plan.schedule.rounds.len(), 100);
+        assert!(plan.rho < 1.0);
+        assert!(plan.alpha > 0.0);
+        assert!(plan.lambda2 > 0.0);
+        // Expected comm of the schedule tracks Σp.
+        let target: f64 = plan.probabilities.iter().sum();
+        let got = plan.schedule.mean_comm_units();
+        assert!((got - target).abs() < 0.8, "schedule comm {got} vs Σp {target}");
+    }
+
+    #[test]
+    fn plan_vanilla_activates_everything() {
+        let g = paper_figure1_graph();
+        let plan = plan_vanilla(&g, 10);
+        for r in &plan.schedule.rounds {
+            assert_eq!(r.activated.len(), plan.decomposition.len());
+        }
+    }
+
+    #[test]
+    fn plan_periodic_budget() {
+        let g = paper_figure1_graph();
+        let plan = plan_periodic(&g, 0.25, 100);
+        let mean = plan.schedule.mean_comm_units();
+        let full = plan.decomposition.len() as f64;
+        assert!((mean - 0.25 * full).abs() < 0.05 * full, "mean {mean} vs {}", 0.25 * full);
+    }
+
+    #[test]
+    fn mixing_w_construction_matches_linalg() {
+        // Compare coordinator's W construction against topology::mixing_matrix.
+        use crate::topology::mixing_matrix;
+        let g = paper_figure1_graph();
+        let plan = plan_matcha(&g, 0.4, 1, 2);
+        // Fake a Trainer-like W build without artifacts: reuse the method's
+        // logic via a standalone reimplementation here.
+        let m = g.num_nodes();
+        let alpha = plan.alpha;
+        let activated: Vec<usize> = (0..plan.decomposition.len()).collect();
+        let mut w = vec![0.0f32; m * m];
+        for i in 0..m {
+            w[i * m + i] = 1.0;
+        }
+        for &j in &activated {
+            for &(u, v) in plan.decomposition.matchings[j].edges() {
+                w[u * m + u] -= alpha as f32;
+                w[v * m + v] -= alpha as f32;
+                w[u * m + v] += alpha as f32;
+                w[v * m + u] += alpha as f32;
+            }
+        }
+        let wm = mixing_matrix(&plan.decomposition.laplacians(), &activated, alpha);
+        for i in 0..m {
+            for j in 0..m {
+                assert!(
+                    (wm.get(i, j) - w[i * m + j] as f64).abs() < 1e-6,
+                    "W mismatch at ({i},{j})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Communication delay models (paper §2, "Convergence in terms of Error
+//! Versus Wallclock Time").
+//!
+//! The paper's model: links at one node are serialized, node-disjoint
+//! links run in parallel, and sending+receiving over one link costs one
+//! unit of time. With the matching decomposition, one iteration's
+//! communication therefore costs **one unit per activated matching**
+//! ([`DelayModel::UnitPerMatching`]). Without decomposition, the busiest
+//! node serializes its Δ links ([`DelayModel::MaxDegree`]). §3 sketches
+//! an extension where each link's time is a random variable — modelled by
+//! [`DelayModel::StochasticLink`].
+
+use crate::graph::Graph;
+use crate::rng::Rng;
+
+/// How communication time per iteration is computed from the activated
+/// matchings.
+#[derive(Clone, Debug)]
+pub enum DelayModel {
+    /// One unit per activated matching (the paper's model once the graph
+    /// is matching-decomposed; matchings communicate sequentially, links
+    /// inside a matching in parallel).
+    UnitPerMatching,
+    /// Maximal node degree of the activated topology — the cost of a
+    /// naive (non-decomposed) implementation where each node serializes
+    /// its own links. Used to quantify what the decomposition itself buys.
+    MaxDegree,
+    /// Each activated matching's time is the max over its links of an
+    /// i.i.d. uniform link time in `[min_units, max_units]` (still
+    /// sequential across matchings). Extension from §3.
+    StochasticLink { min_units: f64, max_units: f64 },
+}
+
+impl DelayModel {
+    /// Parse from a CLI string: `unit`, `maxdeg`, `stochastic:lo:hi`.
+    pub fn parse(s: &str) -> Result<DelayModel, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "unit" => Ok(DelayModel::UnitPerMatching),
+            "maxdeg" => Ok(DelayModel::MaxDegree),
+            "stochastic" => {
+                if parts.len() != 3 {
+                    return Err("stochastic delay needs stochastic:lo:hi".into());
+                }
+                let lo = parts[1].parse::<f64>().map_err(|e| e.to_string())?;
+                let hi = parts[2].parse::<f64>().map_err(|e| e.to_string())?;
+                if lo < 0.0 || hi < lo {
+                    return Err(format!("bad stochastic bounds [{lo},{hi}]"));
+                }
+                Ok(DelayModel::StochasticLink { min_units: lo, max_units: hi })
+            }
+            other => Err(format!("unknown delay model '{other}'")),
+        }
+    }
+
+    /// Communication time of one iteration, given the activated matchings.
+    ///
+    /// `rng` is consulted only by the stochastic model.
+    pub fn comm_time(
+        &self,
+        matchings: &[Graph],
+        activated: &[usize],
+        rng: &mut Rng,
+    ) -> f64 {
+        match self {
+            DelayModel::UnitPerMatching => activated.len() as f64,
+            DelayModel::MaxDegree => {
+                if activated.is_empty() {
+                    return 0.0;
+                }
+                let m = matchings[0].num_nodes();
+                let mut deg = vec![0usize; m];
+                for &j in activated {
+                    for &(u, v) in matchings[j].edges() {
+                        deg[u] += 1;
+                        deg[v] += 1;
+                    }
+                }
+                deg.into_iter().max().unwrap_or(0) as f64
+            }
+            DelayModel::StochasticLink { min_units, max_units } => activated
+                .iter()
+                .map(|&j| {
+                    matchings[j]
+                        .edges()
+                        .iter()
+                        .map(|_| rng.uniform_in(*min_units, *max_units))
+                        .fold(0.0_f64, f64::max)
+                })
+                .sum(),
+        }
+    }
+}
+
+/// Aggregate runtime accounting for a training run under a delay model:
+/// iteration time = computation time + communication time (paper §2:
+/// "total training time is a product of total iterations and run time
+/// per iteration").
+#[derive(Clone, Debug)]
+pub struct VirtualClock {
+    /// Computation time per local SGD step, in the same units as link
+    /// time (the paper's plots set this implicitly via the measured
+    /// per-iteration computation).
+    pub compute_units_per_step: f64,
+    elapsed: f64,
+}
+
+impl VirtualClock {
+    pub fn new(compute_units_per_step: f64) -> Self {
+        VirtualClock { compute_units_per_step, elapsed: 0.0 }
+    }
+
+    /// Advance the clock by one iteration with the given communication
+    /// time; returns the new elapsed total.
+    pub fn tick(&mut self, comm_time: f64) -> f64 {
+        self.elapsed += self.compute_units_per_step + comm_time;
+        self.elapsed
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.elapsed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+
+    #[test]
+    fn unit_model_counts_matchings() {
+        let d = decompose(&paper_figure1_graph());
+        let mut rng = Rng::new(0);
+        let m = DelayModel::UnitPerMatching;
+        assert_eq!(m.comm_time(&d.matchings, &[0, 2], &mut rng), 2.0);
+        assert_eq!(m.comm_time(&d.matchings, &[], &mut rng), 0.0);
+        let all: Vec<usize> = (0..d.len()).collect();
+        assert_eq!(m.comm_time(&d.matchings, &all, &mut rng), d.len() as f64);
+    }
+
+    #[test]
+    fn maxdeg_model_on_full_activation_equals_base_delta() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let mut rng = Rng::new(0);
+        let all: Vec<usize> = (0..d.len()).collect();
+        let t = DelayModel::MaxDegree.comm_time(&d.matchings, &all, &mut rng);
+        assert_eq!(t, g.max_degree() as f64);
+    }
+
+    #[test]
+    fn unit_vs_maxdeg_bound() {
+        // Unit-per-matching never beats Δ by more than the Vizing slack:
+        // M ≤ Δ+1, and for single activations it is ≤ the naive cost.
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let mut rng = Rng::new(0);
+        let all: Vec<usize> = (0..d.len()).collect();
+        let unit = DelayModel::UnitPerMatching.comm_time(&d.matchings, &all, &mut rng);
+        assert!(unit <= (g.max_degree() + 1) as f64);
+    }
+
+    #[test]
+    fn stochastic_model_within_bounds() {
+        let d = decompose(&paper_figure1_graph());
+        let mut rng = Rng::new(8);
+        let m = DelayModel::StochasticLink { min_units: 0.5, max_units: 2.0 };
+        for _ in 0..100 {
+            let t = m.comm_time(&d.matchings, &[0, 1], &mut rng);
+            assert!(t >= 1.0 - 1e-9 && t <= 4.0 + 1e-9, "t = {t}");
+        }
+    }
+
+    #[test]
+    fn parse_delay_models() {
+        assert!(matches!(DelayModel::parse("unit"), Ok(DelayModel::UnitPerMatching)));
+        assert!(matches!(DelayModel::parse("maxdeg"), Ok(DelayModel::MaxDegree)));
+        assert!(matches!(
+            DelayModel::parse("stochastic:0.5:1.5"),
+            Ok(DelayModel::StochasticLink { .. })
+        ));
+        assert!(DelayModel::parse("bogus").is_err());
+        assert!(DelayModel::parse("stochastic:2:1").is_err());
+    }
+
+    #[test]
+    fn virtual_clock_accumulates() {
+        let mut c = VirtualClock::new(1.0);
+        assert_eq!(c.tick(2.0), 3.0);
+        assert_eq!(c.tick(0.0), 4.0);
+        assert_eq!(c.elapsed(), 4.0);
+    }
+}

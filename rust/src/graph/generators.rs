@@ -1,0 +1,410 @@
+//! Graph generators used in the paper's evaluation plus standard
+//! reference topologies.
+
+use super::Graph;
+use crate::rng::Rng;
+
+/// The 8-node base communication graph of paper Figure 1.
+///
+/// The paper's figure is an image; we reconstruct a graph with the exact
+/// stated properties: 8 nodes, maximal degree 5 (node 1 — the "busiest
+/// node"), node 4 has degree 1 and its only link (0,4) is a cut edge
+/// ("critical link"), and the graph is connected. Any schedule statistics
+/// reported against "Fig 1" in this repo use this reconstruction
+/// (documented in DESIGN.md).
+pub fn paper_figure1_graph() -> Graph {
+    Graph::new(
+        8,
+        &[
+            (0, 1),
+            (0, 4), // the critical (bridge) link to the degree-1 node
+            (1, 2),
+            (1, 3),
+            (1, 5),
+            (1, 7), // node 1 reaches degree 5
+            (2, 3),
+            (2, 6),
+            (3, 6),
+            (5, 6),
+            (5, 7),
+            (6, 7),
+        ],
+    )
+}
+
+/// Ring (cycle) graph C_m.
+pub fn ring(m: usize) -> Graph {
+    assert!(m >= 3, "ring needs at least 3 nodes");
+    let edges: Vec<(usize, usize)> = (0..m).map(|i| (i, (i + 1) % m)).collect();
+    Graph::new(m, &edges)
+}
+
+/// Star graph: node 0 connected to all others.
+pub fn star(m: usize) -> Graph {
+    assert!(m >= 2);
+    let edges: Vec<(usize, usize)> = (1..m).map(|i| (0, i)).collect();
+    Graph::new(m, &edges)
+}
+
+/// Complete graph K_m.
+pub fn complete(m: usize) -> Graph {
+    let mut edges = Vec::new();
+    for u in 0..m {
+        for v in (u + 1)..m {
+            edges.push((u, v));
+        }
+    }
+    Graph::new(m, &edges)
+}
+
+/// 2-D grid graph of `rows × cols` nodes.
+pub fn grid(rows: usize, cols: usize) -> Graph {
+    let m = rows * cols;
+    let idx = |r: usize, c: usize| r * cols + c;
+    let mut edges = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((idx(r, c), idx(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((idx(r, c), idx(r + 1, c)));
+            }
+        }
+    }
+    Graph::new(m, &edges)
+}
+
+/// Hypercube graph Q_d on 2^d nodes (a classic expander-ish topology the
+/// decentralized-optimization literature uses; cf. the paper's refs on
+/// expander graphs [6, 23]).
+pub fn hypercube(dim: u32) -> Graph {
+    let m = 1usize << dim;
+    let mut edges = Vec::new();
+    for u in 0..m {
+        for b in 0..dim {
+            let v = u ^ (1usize << b);
+            if u < v {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::new(m, &edges)
+}
+
+/// 2-D torus (grid with wraparound), degree-4 regular.
+pub fn torus(rows: usize, cols: usize) -> Graph {
+    assert!(rows >= 3 && cols >= 3, "torus needs at least 3x3");
+    let idx = |r: usize, c: usize| r * cols + c;
+    let mut edges = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            edges.push((idx(r, c), idx(r, (c + 1) % cols)));
+            edges.push((idx(r, c), idx((r + 1) % rows, c)));
+        }
+    }
+    Graph::new(rows * cols, &edges)
+}
+
+/// Watts–Strogatz small-world graph: ring lattice with `k` neighbors per
+/// side, each edge rewired with probability `beta`.
+pub fn watts_strogatz(m: usize, k: usize, beta: f64, rng: &mut Rng) -> Graph {
+    assert!(k >= 1 && 2 * k < m, "need 1 <= k < m/2");
+    let mut edges = std::collections::BTreeSet::new();
+    for u in 0..m {
+        for j in 1..=k {
+            let v = (u + j) % m;
+            edges.insert(if u < v { (u, v) } else { (v, u) });
+        }
+    }
+    let lattice: Vec<(usize, usize)> = edges.iter().copied().collect();
+    for (u, v) in lattice {
+        if rng.bernoulli(beta) {
+            // Rewire (u,v) -> (u,w) for a uniform non-adjacent w.
+            for _ in 0..32 {
+                let w = rng.below(m);
+                let e = if u < w { (u, w) } else { (w, u) };
+                if w != u && w != v && !edges.contains(&e) {
+                    edges.remove(&if u < v { (u, v) } else { (v, u) });
+                    edges.insert(e);
+                    break;
+                }
+            }
+        }
+    }
+    let es: Vec<(usize, usize)> = edges.into_iter().collect();
+    Graph::new(m, &es)
+}
+
+/// Random geometric graph: `m` nodes uniform in the unit square, edge iff
+/// distance ≤ `radius`. The paper's 16-node topologies (Fig 5/9) are
+/// random geometric graphs of varying density. Not guaranteed connected;
+/// see [`geometric_connected`].
+pub fn geometric(m: usize, radius: f64, rng: &mut Rng) -> Graph {
+    let pts: Vec<(f64, f64)> = (0..m).map(|_| (rng.uniform(), rng.uniform())).collect();
+    let mut edges = Vec::new();
+    for u in 0..m {
+        for v in (u + 1)..m {
+            let dx = pts[u].0 - pts[v].0;
+            let dy = pts[u].1 - pts[v].1;
+            if (dx * dx + dy * dy).sqrt() <= radius {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::new(m, &edges)
+}
+
+/// Random geometric graph, resampled until connected (bounded retries).
+pub fn geometric_connected(m: usize, radius: f64, rng: &mut Rng) -> Graph {
+    for _ in 0..1000 {
+        let g = geometric(m, radius, rng);
+        if g.is_connected() {
+            return g;
+        }
+    }
+    panic!("geometric_connected: radius {radius} too small for m={m} (1000 attempts)");
+}
+
+/// Erdős–Rényi G(m, p). Paper Fig 3c uses a 16-node ER graph (Δ = 8).
+pub fn erdos_renyi(m: usize, p: f64, rng: &mut Rng) -> Graph {
+    let mut edges = Vec::new();
+    for u in 0..m {
+        for v in (u + 1)..m {
+            if rng.bernoulli(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::new(m, &edges)
+}
+
+/// Erdős–Rényi, resampled until connected (bounded retries).
+pub fn erdos_renyi_connected(m: usize, p: f64, rng: &mut Rng) -> Graph {
+    for _ in 0..1000 {
+        let g = erdos_renyi(m, p, rng);
+        if g.is_connected() {
+            return g;
+        }
+    }
+    panic!("erdos_renyi_connected: p {p} too small for m={m} (1000 attempts)");
+}
+
+/// The three 16-node geometric topologies of paper Figure 9, reconstructed
+/// with seeded generators to hit the stated maximal degrees (≈6, 10, and
+/// an ER graph with Δ=8). Returns (name, graph) pairs.
+pub fn paper_figure9_topologies() -> Vec<(&'static str, Graph)> {
+    // Seeds and radii chosen (deterministically, recorded here) so the
+    // generated graphs are connected with the paper's stated max degrees.
+    let sparse = find_geometric_with_max_degree(16, 6, 101);
+    let dense = find_geometric_with_max_degree(16, 10, 202);
+    let er = find_er_with_max_degree(16, 8, 303);
+    vec![("geom-maxdeg6", sparse), ("geom-maxdeg10", dense), ("er-maxdeg8", er)]
+}
+
+/// Search seeded geometric graphs until one is connected with the target
+/// maximal degree. Deterministic given `base_seed`.
+pub fn find_geometric_with_max_degree(m: usize, target_delta: usize, base_seed: u64) -> Graph {
+    for attempt in 0..20_000u64 {
+        let mut rng = Rng::new(base_seed.wrapping_add(attempt));
+        // Radius sweep correlated with the density we want.
+        let radius = 0.25 + 0.35 * (target_delta as f64 / m as f64);
+        let g = geometric(m, radius, &mut rng);
+        if g.is_connected() && g.max_degree() == target_delta {
+            return g;
+        }
+    }
+    panic!("no geometric graph with m={m}, Δ={target_delta} found");
+}
+
+/// Search seeded ER graphs until one is connected with the target maximal
+/// degree. Deterministic given `base_seed`.
+pub fn find_er_with_max_degree(m: usize, target_delta: usize, base_seed: u64) -> Graph {
+    for attempt in 0..20_000u64 {
+        let mut rng = Rng::new(base_seed.wrapping_add(attempt));
+        let p = target_delta as f64 / m as f64 * 0.8;
+        let g = erdos_renyi(m, p, &mut rng);
+        if g.is_connected() && g.max_degree() == target_delta {
+            return g;
+        }
+    }
+    panic!("no ER graph with m={m}, Δ={target_delta} found");
+}
+
+/// Parse a graph specification string used by the CLI:
+/// `fig1`, `ring:m`, `star:m`, `complete:m`, `grid:RxC`,
+/// `geom:m:delta:seed`, `er:m:delta:seed`.
+pub fn parse_graph_spec(spec: &str) -> Result<Graph, String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let usize_at = |i: usize| -> Result<usize, String> {
+        parts
+            .get(i)
+            .ok_or_else(|| format!("graph spec '{spec}': missing field {i}"))?
+            .parse::<usize>()
+            .map_err(|e| format!("graph spec '{spec}': {e}"))
+    };
+    match parts[0] {
+        "fig1" => Ok(paper_figure1_graph()),
+        "ring" => Ok(ring(usize_at(1)?)),
+        "star" => Ok(star(usize_at(1)?)),
+        "complete" => Ok(complete(usize_at(1)?)),
+        "hypercube" => Ok(hypercube(usize_at(1)? as u32)),
+        "torus" => {
+            let dims: Vec<&str> = parts
+                .get(1)
+                .ok_or_else(|| format!("graph spec '{spec}': missing RxC"))?
+                .split('x')
+                .collect();
+            if dims.len() != 2 {
+                return Err(format!("graph spec '{spec}': torus needs RxC"));
+            }
+            let r = dims[0].parse::<usize>().map_err(|e| e.to_string())?;
+            let c = dims[1].parse::<usize>().map_err(|e| e.to_string())?;
+            Ok(torus(r, c))
+        }
+        "smallworld" => {
+            let (m, k, seed) = (usize_at(1)?, usize_at(2)?, usize_at(3)? as u64);
+            Ok(watts_strogatz(m, k, 0.3, &mut Rng::new(seed)))
+        }
+        "grid" => {
+            let dims: Vec<&str> = parts
+                .get(1)
+                .ok_or_else(|| format!("graph spec '{spec}': missing RxC"))?
+                .split('x')
+                .collect();
+            if dims.len() != 2 {
+                return Err(format!("graph spec '{spec}': grid needs RxC"));
+            }
+            let r = dims[0].parse::<usize>().map_err(|e| e.to_string())?;
+            let c = dims[1].parse::<usize>().map_err(|e| e.to_string())?;
+            Ok(grid(r, c))
+        }
+        "geom" => {
+            let (m, delta, seed) = (usize_at(1)?, usize_at(2)?, usize_at(3)? as u64);
+            Ok(find_geometric_with_max_degree(m, delta, seed))
+        }
+        "er" => {
+            let (m, delta, seed) = (usize_at(1)?, usize_at(2)?, usize_at(3)? as u64);
+            Ok(find_er_with_max_degree(m, delta, seed))
+        }
+        other => Err(format!("unknown graph spec kind '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_properties_match_paper() {
+        let g = paper_figure1_graph();
+        assert_eq!(g.num_nodes(), 8);
+        assert!(g.is_connected());
+        assert_eq!(g.max_degree(), 5, "paper: maximal degree is 5");
+        let d = g.degrees();
+        assert_eq!(d[1], 5, "node 1 is the degree-5 busiest node");
+        assert_eq!(d[4], 1, "node 4 has degree 1");
+        assert!(g.has_edge(0, 4), "critical link (0,4) present");
+        // (0,4) is a cut edge: removing it disconnects node 4.
+        let without: Vec<(usize, usize)> = g
+            .edges()
+            .iter()
+            .copied()
+            .filter(|&e| e != (0, 4))
+            .collect();
+        assert!(!Graph::new(8, &without).is_connected());
+    }
+
+    #[test]
+    fn ring_star_complete_shapes() {
+        assert_eq!(ring(6).degrees(), vec![2; 6]);
+        assert_eq!(star(5).max_degree(), 4);
+        let k5 = complete(5);
+        assert_eq!(k5.num_edges(), 10);
+        assert_eq!(k5.degrees(), vec![4; 5]);
+        assert!(ring(6).is_connected() && star(5).is_connected() && k5.is_connected());
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = grid(3, 4);
+        assert_eq!(g.num_nodes(), 12);
+        // 3*(4-1) horizontal + (3-1)*4 vertical = 9 + 8
+        assert_eq!(g.num_edges(), 17);
+        assert!(g.is_connected());
+        assert_eq!(g.max_degree(), 4);
+    }
+
+    #[test]
+    fn geometric_is_deterministic_per_seed() {
+        let g1 = geometric(16, 0.4, &mut Rng::new(9));
+        let g2 = geometric(16, 0.4, &mut Rng::new(9));
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn geometric_radius_monotone_in_edges() {
+        let g_small = geometric(20, 0.2, &mut Rng::new(4));
+        let g_big = geometric(20, 0.6, &mut Rng::new(4));
+        assert!(g_big.num_edges() >= g_small.num_edges());
+    }
+
+    #[test]
+    fn er_connected_helper() {
+        let g = erdos_renyi_connected(12, 0.4, &mut Rng::new(21));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn figure9_topologies_hit_target_degrees() {
+        let tops = paper_figure9_topologies();
+        assert_eq!(tops.len(), 3);
+        assert_eq!(tops[0].1.max_degree(), 6);
+        assert_eq!(tops[1].1.max_degree(), 10);
+        assert_eq!(tops[2].1.max_degree(), 8);
+        for (name, g) in &tops {
+            assert!(g.is_connected(), "{name} must be connected");
+            assert_eq!(g.num_nodes(), 16);
+        }
+    }
+
+    #[test]
+    fn hypercube_properties() {
+        let g = hypercube(4);
+        assert_eq!(g.num_nodes(), 16);
+        assert_eq!(g.degrees(), vec![4; 16]);
+        assert_eq!(g.num_edges(), 32);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn torus_is_4_regular() {
+        let g = torus(4, 5);
+        assert_eq!(g.num_nodes(), 20);
+        assert_eq!(g.degrees(), vec![4; 20]);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn watts_strogatz_preserves_edge_count_and_connects() {
+        let mut rng = Rng::new(6);
+        for beta in [0.0, 0.3, 1.0] {
+            let g = watts_strogatz(20, 2, beta, &mut rng);
+            // Rewiring preserves |E| = m·k.
+            assert_eq!(g.num_edges(), 40, "beta={beta}");
+        }
+        // beta = 0 is the pure lattice: 4-regular and connected.
+        let lattice = watts_strogatz(20, 2, 0.0, &mut Rng::new(1));
+        assert_eq!(lattice.degrees(), vec![4; 20]);
+        assert!(lattice.is_connected());
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(parse_graph_spec("fig1").unwrap(), paper_figure1_graph());
+        assert_eq!(parse_graph_spec("ring:5").unwrap(), ring(5));
+        assert_eq!(parse_graph_spec("grid:2x3").unwrap(), grid(2, 3));
+        assert!(parse_graph_spec("nope").is_err());
+        assert!(parse_graph_spec("ring:x").is_err());
+    }
+}

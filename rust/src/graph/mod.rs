@@ -1,0 +1,244 @@
+//! Communication-graph substrate.
+//!
+//! MATCHA operates on an arbitrary connected undirected graph of worker
+//! nodes. This module provides the graph type, Laplacian/adjacency
+//! construction, connectivity and degree analysis, and the generators
+//! used across the paper's evaluation (the 8-node Figure-1 graph, random
+//! geometric graphs, Erdős–Rényi graphs, plus standard references: ring,
+//! star, complete, grid).
+
+mod generators;
+mod properties;
+
+pub use generators::*;
+pub use properties::*;
+
+use crate::linalg::Mat;
+
+/// An undirected simple graph over nodes `0..m`.
+///
+/// Edges are stored as a sorted, deduplicated list of `(u, v)` with
+/// `u < v`. This is the "base communication topology" G of the paper.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    m: usize,
+    edges: Vec<(usize, usize)>,
+}
+
+impl Graph {
+    /// Build a graph from an edge list. Edges are normalized to `u < v`,
+    /// deduplicated, and validated (no self-loops, endpoints < m).
+    pub fn new(m: usize, edges: &[(usize, usize)]) -> Self {
+        let mut es: Vec<(usize, usize)> = edges
+            .iter()
+            .map(|&(u, v)| {
+                assert!(u != v, "self-loop ({u},{v}) not allowed in a simple graph");
+                assert!(u < m && v < m, "edge ({u},{v}) out of range for m={m}");
+                if u < v { (u, v) } else { (v, u) }
+            })
+            .collect();
+        es.sort_unstable();
+        es.dedup();
+        Graph { m, edges: es }
+    }
+
+    /// Empty graph (no edges) on `m` nodes.
+    pub fn empty(m: usize) -> Self {
+        Graph { m, edges: vec![] }
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.m
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// The normalized edge list (`u < v`, sorted).
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Does the graph contain edge (u,v)?
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        let e = if u < v { (u, v) } else { (v, u) };
+        self.edges.binary_search(&e).is_ok()
+    }
+
+    /// Degree of each node.
+    pub fn degrees(&self) -> Vec<usize> {
+        let mut d = vec![0usize; self.m];
+        for &(u, v) in &self.edges {
+            d[u] += 1;
+            d[v] += 1;
+        }
+        d
+    }
+
+    /// Maximal degree Δ(G) — the paper's communication bottleneck measure.
+    pub fn max_degree(&self) -> usize {
+        self.degrees().into_iter().max().unwrap_or(0)
+    }
+
+    /// Neighbor lists.
+    pub fn adjacency_lists(&self) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); self.m];
+        for &(u, v) in &self.edges {
+            adj[u].push(v);
+            adj[v].push(u);
+        }
+        adj
+    }
+
+    /// Dense adjacency matrix A.
+    pub fn adjacency_matrix(&self) -> Mat {
+        let mut a = Mat::zeros(self.m, self.m);
+        for &(u, v) in &self.edges {
+            a.set(u, v, 1.0);
+            a.set(v, u, 1.0);
+        }
+        a
+    }
+
+    /// Graph Laplacian `L = D - A`.
+    pub fn laplacian(&self) -> Mat {
+        let mut l = Mat::zeros(self.m, self.m);
+        for &(u, v) in &self.edges {
+            l.add_assign_at(u, u, 1.0);
+            l.add_assign_at(v, v, 1.0);
+            l.add_assign_at(u, v, -1.0);
+            l.add_assign_at(v, u, -1.0);
+        }
+        l
+    }
+
+    /// Subgraph on the same vertex set induced by an edge subset.
+    /// Panics if any edge is not in `self`.
+    pub fn edge_subgraph(&self, edges: &[(usize, usize)]) -> Graph {
+        for &(u, v) in edges {
+            assert!(self.has_edge(u, v), "edge ({u},{v}) not in base graph");
+        }
+        Graph::new(self.m, edges)
+    }
+
+    /// Union of this graph's edges with another's (same node count).
+    pub fn union(&self, other: &Graph) -> Graph {
+        assert_eq!(self.m, other.m);
+        let mut es = self.edges.clone();
+        es.extend_from_slice(&other.edges);
+        Graph::new(self.m, &es)
+    }
+
+    /// Connected-components labelling (BFS).
+    pub fn components(&self) -> Vec<usize> {
+        let adj = self.adjacency_lists();
+        let mut comp = vec![usize::MAX; self.m];
+        let mut next = 0;
+        let mut queue = std::collections::VecDeque::new();
+        for start in 0..self.m {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            comp[start] = next;
+            queue.push_back(start);
+            while let Some(u) = queue.pop_front() {
+                for &v in &adj[u] {
+                    if comp[v] == usize::MAX {
+                        comp[v] = next;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            next += 1;
+        }
+        comp
+    }
+
+    /// Is the graph connected? (Paper requires a connected base graph.)
+    pub fn is_connected(&self) -> bool {
+        if self.m == 0 {
+            return true;
+        }
+        self.components().iter().all(|&c| c == 0)
+    }
+
+    /// Is this graph a matching (max degree ≤ 1)? Definition 1 of the paper.
+    pub fn is_matching(&self) -> bool {
+        self.degrees().into_iter().all(|d| d <= 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_and_dedups_edges() {
+        let g = Graph::new(4, &[(1, 0), (0, 1), (2, 3)]);
+        assert_eq!(g.edges(), &[(0, 1), (2, 3)]);
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_self_loops() {
+        Graph::new(3, &[(1, 1)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range() {
+        Graph::new(3, &[(0, 3)]);
+    }
+
+    #[test]
+    fn degrees_and_max_degree() {
+        let g = Graph::new(4, &[(0, 1), (0, 2), (0, 3), (1, 2)]);
+        assert_eq!(g.degrees(), vec![3, 2, 2, 1]);
+        assert_eq!(g.max_degree(), 3);
+    }
+
+    #[test]
+    fn laplacian_row_sums_zero() {
+        let g = Graph::new(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0), (0, 2)]);
+        let l = g.laplacian();
+        for i in 0..5 {
+            let s: f64 = l.row(i).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+        assert!(l.is_symmetric(1e-12));
+        // trace = 2|E|
+        assert!((l.trace() - 2.0 * g.num_edges() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn connectivity() {
+        let g = Graph::new(4, &[(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+        let g2 = g.union(&Graph::new(4, &[(1, 2)]));
+        assert!(g2.is_connected());
+    }
+
+    #[test]
+    fn matching_detection() {
+        assert!(Graph::new(4, &[(0, 1), (2, 3)]).is_matching());
+        assert!(!Graph::new(4, &[(0, 1), (1, 2)]).is_matching());
+        assert!(Graph::empty(4).is_matching());
+    }
+
+    #[test]
+    fn components_labelling() {
+        let g = Graph::new(6, &[(0, 1), (1, 2), (4, 5)]);
+        let c = g.components();
+        assert_eq!(c[0], c[1]);
+        assert_eq!(c[1], c[2]);
+        assert_eq!(c[4], c[5]);
+        assert_ne!(c[0], c[3]);
+        assert_ne!(c[0], c[4]);
+        assert_ne!(c[3], c[4]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Spectral and structural graph properties used by MATCHA's analysis:
+//! algebraic connectivity (λ₂), spectral gaps, and expected-degree
+//! statistics for activated topologies.
+
+use super::Graph;
+use crate::linalg::{fiedler_pair, symmetric_eigen, Mat};
+
+/// Algebraic connectivity λ₂(L(G)) — the paper's objective in problem (4).
+pub fn algebraic_connectivity(g: &Graph) -> f64 {
+    if g.num_nodes() < 2 {
+        return 0.0;
+    }
+    let (l2, _) = fiedler_pair(&g.laplacian());
+    // Clamp tiny negative round-off; L is PSD.
+    l2.max(0.0)
+}
+
+/// λ₂ of an arbitrary symmetric PSD matrix (e.g. the expected Laplacian
+/// Σ pⱼ Lⱼ); clamps round-off below zero.
+pub fn lambda2_of(l: &Mat) -> f64 {
+    let (l2, _) = fiedler_pair(l);
+    l2.max(0.0)
+}
+
+/// Full Laplacian spectrum, ascending.
+pub fn laplacian_spectrum(g: &Graph) -> Vec<f64> {
+    symmetric_eigen(&g.laplacian()).values
+}
+
+/// Per-node expected communication time for a set of matchings with
+/// activation probabilities, under the unit-time-per-matching model:
+/// node i pays 1 unit for matching j iff j is activated AND i is matched
+/// in j. Used to regenerate the Figure-1 comparison.
+pub fn expected_node_comm_time(
+    m: usize,
+    matchings: &[Graph],
+    probs: &[f64],
+) -> Vec<f64> {
+    assert_eq!(matchings.len(), probs.len());
+    let mut t = vec![0.0; m];
+    for (g, &p) in matchings.iter().zip(probs) {
+        let deg = g.degrees();
+        for i in 0..m {
+            if deg[i] > 0 {
+                t[i] += p;
+            }
+        }
+    }
+    t
+}
+
+/// Expected degree of each node in the activated topology
+/// E[Σⱼ Bⱼ deg_j(i)] = Σⱼ pⱼ deg_j(i). The paper (§5) observes MATCHA
+/// keeps the *effective* maximal degree ≈ constant across base densities.
+pub fn expected_node_degree(m: usize, matchings: &[Graph], probs: &[f64]) -> Vec<f64> {
+    assert_eq!(matchings.len(), probs.len());
+    let mut d = vec![0.0; m];
+    for (g, &p) in matchings.iter().zip(probs) {
+        for (i, &deg) in g.degrees().iter().enumerate() {
+            d[i] += p * deg as f64;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{complete, paper_figure1_graph, ring, star};
+
+    #[test]
+    fn lambda2_complete_graph() {
+        // λ₂(K_n) = n.
+        assert!((algebraic_connectivity(&complete(6)) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lambda2_ring() {
+        // λ₂(C_n) = 2 - 2cos(2π/n).
+        let n = 8;
+        let expected = 2.0 - 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos();
+        assert!((algebraic_connectivity(&ring(n)) - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lambda2_star() {
+        // λ₂(star on n nodes) = 1.
+        assert!((algebraic_connectivity(&star(7)) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lambda2_positive_iff_connected() {
+        let disconnected = Graph::new(4, &[(0, 1), (2, 3)]);
+        assert!(algebraic_connectivity(&disconnected) < 1e-9);
+        assert!(algebraic_connectivity(&paper_figure1_graph()) > 1e-6);
+    }
+
+    #[test]
+    fn spectrum_starts_at_zero() {
+        let s = laplacian_spectrum(&paper_figure1_graph());
+        assert!(s[0].abs() < 1e-9);
+        // Sum of eigenvalues = trace = 2|E|.
+        let sum: f64 = s.iter().sum();
+        assert!((sum - 24.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn expected_comm_time_all_ones_counts_incident_matchings() {
+        // Two matchings over 4 nodes; node 0 appears in both.
+        let m1 = Graph::new(4, &[(0, 1)]);
+        let m2 = Graph::new(4, &[(0, 2)]);
+        let t = expected_node_comm_time(4, &[m1, m2], &[1.0, 1.0]);
+        assert_eq!(t, vec![2.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn expected_degree_scales_with_probability() {
+        let m1 = Graph::new(3, &[(0, 1)]);
+        let d = expected_node_degree(3, &[m1], &[0.25]);
+        assert!((d[0] - 0.25).abs() < 1e-12);
+        assert!((d[2]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,53 @@
+//! # matcha — MATCHA: Matching Decomposition Sampling for Decentralized SGD
+//!
+//! A production-grade reproduction of *“MATCHA: Speeding Up Decentralized
+//! SGD via Matching Decomposition Sampling”* (Wang, Sahu, Yang, Joshi,
+//! Kar, 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's contribution: matching
+//!   decomposition ([`matching`]), activation-probability optimization
+//!   ([`budget`]), mixing-weight optimization and spectral-norm analysis
+//!   ([`mixing`]), the random topology scheduler ([`topology`]), the
+//!   communication delay model ([`delay`]), a pure-Rust decentralized SGD
+//!   simulator ([`sim`]), and the NN training coordinator
+//!   ([`coordinator`]) that executes AOT-compiled XLA artifacts through
+//!   [`runtime`].
+//! - **L2/L1 (build-time Python, `python/compile/`)** — a flat-parameter
+//!   transformer LM and Pallas kernels, lowered once to HLO text in
+//!   `artifacts/`; Python is never on the training path.
+//!
+//! Quick tour (`no_run` only because rustdoc's test binary misses the
+//! xla_extension rpath in this offline image; the same code is exercised
+//! by `rust/tests/integration.rs`):
+//!
+//! ```no_run
+//! use matcha::graph::paper_figure1_graph;
+//! use matcha::matching::decompose;
+//! use matcha::budget::optimize_activation_probabilities;
+//! use matcha::mixing::optimize_alpha;
+//!
+//! let g = paper_figure1_graph();
+//! let decomp = decompose(&g);                  // Step 1: matchings
+//! let probs = optimize_activation_probabilities(&decomp, 0.5); // Step 2
+//! let mix = optimize_alpha(&decomp, &probs.probabilities);     // Step 3
+//! assert!(mix.rho < 1.0); // Theorem 2: convergence guaranteed
+//! ```
+
+pub mod benchkit;
+pub mod budget;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod delay;
+pub mod graph;
+pub mod json;
+pub mod linalg;
+pub mod matching;
+pub mod metrics;
+pub mod mixing;
+pub mod proptest;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod topology;

@@ -1,0 +1,250 @@
+//! Cyclic Jacobi eigensolver for real symmetric matrices.
+//!
+//! Classic two-sided Jacobi rotations applied in row-cyclic sweeps until
+//! the off-diagonal Frobenius mass falls below a tolerance. Produces the
+//! full spectrum and an orthonormal eigenbasis. For the m ≤ 64 matrices in
+//! MATCHA's optimizers this converges in a handful of sweeps and is easily
+//! fast enough to sit inside the projected-gradient loop.
+
+use super::Mat;
+
+/// Result of a symmetric eigendecomposition: `A = V diag(values) Vᵀ`.
+///
+/// `values` are sorted ascending; column `k` of `vectors` is the
+/// eigenvector for `values[k]`.
+pub struct EigenDecomposition {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Orthonormal eigenvectors, stored as columns.
+    pub vectors: Mat,
+}
+
+impl EigenDecomposition {
+    /// Extract eigenvector `k` as an owned vector.
+    pub fn vector(&self, k: usize) -> Vec<f64> {
+        (0..self.vectors.rows()).map(|i| self.vectors.get(i, k)).collect()
+    }
+}
+
+/// Off-diagonal Frobenius norm squared.
+fn offdiag_sq(a: &Mat) -> f64 {
+    let n = a.rows();
+    let mut s = 0.0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = a.get(i, j);
+            s += 2.0 * v * v;
+        }
+    }
+    s
+}
+
+/// Full eigendecomposition of a symmetric matrix via cyclic Jacobi.
+///
+/// Panics if `a` is not square. Symmetry is assumed (the strictly lower
+/// triangle is ignored in the rotations but kept consistent).
+pub fn symmetric_eigen(a: &Mat) -> EigenDecomposition {
+    assert_eq!(a.rows(), a.cols(), "symmetric_eigen: matrix must be square");
+    let n = a.rows();
+    if n == 0 {
+        return EigenDecomposition { values: vec![], vectors: Mat::zeros(0, 0) };
+    }
+    if n == 1 {
+        return EigenDecomposition { values: vec![a.get(0, 0)], vectors: Mat::eye(1) };
+    }
+
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    // Tolerance relative to the matrix scale; Laplacian entries are O(1)..O(m).
+    let scale = m.frobenius_norm().max(1.0);
+    let tol = (scale * 1e-14).powi(2);
+    let max_sweeps = 64;
+
+    for _sweep in 0..max_sweeps {
+        if offdiag_sq(&m) <= tol {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                // Rotation angle: standard stable formulation.
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Apply rotation G(p,q,θ): M ← GᵀMG. Hot loop — work on
+                // raw storage (§Perf: ~1.7x over indexed get/set).
+                {
+                    let data = m.as_mut_slice();
+                    // Columns p and q (stride-n walk).
+                    let (mut ip, mut iq) = (p, q);
+                    for _ in 0..n {
+                        let mkp = data[ip];
+                        let mkq = data[iq];
+                        data[ip] = c * mkp - s * mkq;
+                        data[iq] = s * mkp + c * mkq;
+                        ip += n;
+                        iq += n;
+                    }
+                    // Rows p and q (contiguous; p < q by loop structure).
+                    let (head, tail) = data.split_at_mut(q * n);
+                    let rp = &mut head[p * n..p * n + n];
+                    let rq = &mut tail[..n];
+                    for (xp, xq) in rp.iter_mut().zip(rq.iter_mut()) {
+                        let vp = *xp;
+                        let vq = *xq;
+                        *xp = c * vp - s * vq;
+                        *xq = s * vp + c * vq;
+                    }
+                }
+                // Accumulate eigenvectors: V ← V·G (columns p, q).
+                {
+                    let vd = v.as_mut_slice();
+                    let (mut ip, mut iq) = (p, q);
+                    for _ in 0..n {
+                        let vkp = vd[ip];
+                        let vkq = vd[iq];
+                        vd[ip] = c * vkp - s * vkq;
+                        vd[iq] = s * vkp + c * vkq;
+                        ip += n;
+                        iq += n;
+                    }
+                }
+            }
+        }
+    }
+
+    // Collect and sort ascending, permuting eigenvector columns alongside.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|&(val, _)| val).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vectors.set(i, new_col, v.get(i, old_col));
+        }
+    }
+    EigenDecomposition { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::dot;
+
+    fn reconstruct(e: &EigenDecomposition) -> Mat {
+        let n = e.values.len();
+        let mut d = Mat::zeros(n, n);
+        for i in 0..n {
+            d.set(i, i, e.values[i]);
+        }
+        e.vectors.matmul(&d).matmul(&e.vectors.transpose())
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, -1.0]]);
+        let e = symmetric_eigen(&a);
+        assert!((e.values[0] + 1.0).abs() < 1e-12);
+        assert!((e.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3.
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = symmetric_eigen(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-10);
+        assert!((e.values[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn complete_graph_laplacian_spectrum() {
+        // K_n Laplacian: eigenvalues {0, n, n, ..., n}.
+        let n = 7;
+        let mut a = Mat::full(n, n, -1.0);
+        for i in 0..n {
+            a.set(i, i, (n - 1) as f64);
+        }
+        let e = symmetric_eigen(&a);
+        assert!(e.values[0].abs() < 1e-9);
+        for k in 1..n {
+            assert!((e.values[k] - n as f64).abs() < 1e-9, "values = {:?}", e.values);
+        }
+    }
+
+    #[test]
+    fn ring_laplacian_spectrum() {
+        // Cycle C_n Laplacian eigenvalues: 2 - 2cos(2πk/n).
+        let n = 8;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a.set(i, i, 2.0);
+            a.set(i, (i + 1) % n, -1.0);
+            a.set((i + 1) % n, i, -1.0);
+        }
+        let e = symmetric_eigen(&a);
+        let mut expected: Vec<f64> = (0..n)
+            .map(|k| 2.0 - 2.0 * (2.0 * std::f64::consts::PI * k as f64 / n as f64).cos())
+            .collect();
+        expected.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for k in 0..n {
+            assert!((e.values[k] - expected[k]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn reconstruction_and_orthonormality() {
+        // Deterministic pseudo-random symmetric matrix.
+        let n = 12;
+        let mut a = Mat::zeros(n, n);
+        let mut state: u64 = 0x9e3779b97f4a7c15;
+        for i in 0..n {
+            for j in i..n {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let v = ((state >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0;
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        let e = symmetric_eigen(&a);
+        let rec = reconstruct(&e);
+        assert!(rec.max_abs_diff(&a) < 1e-9, "reconstruction error");
+        // VᵀV = I
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        assert!(vtv.max_abs_diff(&Mat::eye(n)) < 1e-9, "orthonormality");
+        // Trace preserved.
+        let eigsum: f64 = e.values.iter().sum();
+        assert!((eigsum - a.trace()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eigenvector_residuals() {
+        let a = Mat::from_rows(&[
+            &[4.0, 1.0, 0.5],
+            &[1.0, 3.0, -0.25],
+            &[0.5, -0.25, 1.0],
+        ]);
+        let e = symmetric_eigen(&a);
+        for k in 0..3 {
+            let v = e.vector(k);
+            let av = a.matvec(&v);
+            let mut r = 0.0;
+            for i in 0..3 {
+                r += (av[i] - e.values[k] * v[i]).powi(2);
+            }
+            assert!(r.sqrt() < 1e-9);
+            assert!((dot(&v, &v) - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Dense linear algebra substrate.
+//!
+//! MATCHA's optimizers need symmetric eigendecompositions of graph
+//! Laplacians (m ≤ ~64 nodes), spectral norms of mixing matrices, and
+//! small-matrix arithmetic for the gossip simulator. We implement a
+//! row-major dense [`Mat`] and a cyclic Jacobi eigensolver — no external
+//! BLAS/LAPACK is available in this offline image, and the sizes involved
+//! make O(m³) Jacobi entirely adequate.
+
+mod dense;
+mod eigen;
+
+pub use dense::{dot, norm2, Mat};
+pub use eigen::{symmetric_eigen, EigenDecomposition};
+
+/// Largest absolute eigenvalue of a symmetric matrix (its spectral norm).
+pub fn spectral_norm_symmetric(a: &Mat) -> f64 {
+    let eig = symmetric_eigen(a);
+    eig.values
+        .iter()
+        .fold(0.0_f64, |acc, &v| acc.max(v.abs()))
+}
+
+/// Second-smallest eigenvalue of a symmetric PSD matrix together with a
+/// corresponding unit eigenvector (the Fiedler pair for a Laplacian).
+///
+/// Returns `(lambda_2, v_2)`. Eigenvalues are sorted ascending by
+/// [`symmetric_eigen`], so this is simply index 1.
+pub fn fiedler_pair(a: &Mat) -> (f64, Vec<f64>) {
+    assert!(a.rows() >= 2, "fiedler_pair needs at least a 2x2 matrix");
+    let eig = symmetric_eigen(a);
+    (eig.values[1], eig.vector(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a.set(0, 0, -5.0);
+        a.set(1, 1, 2.0);
+        a.set(2, 2, 4.0);
+        assert!((spectral_norm_symmetric(&a) - 5.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn fiedler_of_path_graph_laplacian() {
+        // Path graph P3 Laplacian: eigenvalues 0, 1, 3.
+        let a = Mat::from_rows(&[
+            &[1.0, -1.0, 0.0],
+            &[-1.0, 2.0, -1.0],
+            &[0.0, -1.0, 1.0],
+        ]);
+        let (l2, v2) = fiedler_pair(&a);
+        assert!((l2 - 1.0).abs() < 1e-9, "lambda2 = {l2}");
+        // v2 must be a unit eigenvector: ||A v2 - l2 v2|| small.
+        let av = a.matvec(&v2);
+        let mut resid = 0.0;
+        for i in 0..3 {
+            resid += (av[i] - l2 * v2[i]).powi(2);
+        }
+        assert!(resid.sqrt() < 1e-8);
+    }
+}

@@ -1,0 +1,301 @@
+//! Misra & Gries edge coloring — a constructive proof of Vizing's theorem.
+//!
+//! Properly colors the edges of any simple graph with at most `Δ(G) + 1`
+//! colors in `O(|V|·|E|)` time, via maximal fans, cd-path inversions, and
+//! fan rotations. This is the decomposition procedure named by the paper
+//! (its reference [20]).
+
+use crate::graph::Graph;
+
+/// Per-vertex color table: `at[x][c] = Some(y)` iff edge (x,y) has color c.
+struct ColorTable {
+    at: Vec<Vec<Option<usize>>>,
+    /// edge (normalized) -> color
+    edge_color: std::collections::BTreeMap<(usize, usize), usize>,
+}
+
+impl ColorTable {
+    fn new(m: usize, num_colors: usize) -> Self {
+        ColorTable {
+            at: vec![vec![None; num_colors]; m],
+            edge_color: std::collections::BTreeMap::new(),
+        }
+    }
+
+    fn norm(u: usize, v: usize) -> (usize, usize) {
+        if u < v {
+            (u, v)
+        } else {
+            (v, u)
+        }
+    }
+
+    fn color_of(&self, u: usize, v: usize) -> Option<usize> {
+        self.edge_color.get(&Self::norm(u, v)).copied()
+    }
+
+    fn is_free(&self, x: usize, c: usize) -> bool {
+        self.at[x][c].is_none()
+    }
+
+    /// Smallest color free at `x`. Always exists with Δ+1 colors.
+    fn free_color(&self, x: usize) -> usize {
+        self.at[x]
+            .iter()
+            .position(|slot| slot.is_none())
+            .expect("Δ+1 colors guarantee a free color at every vertex")
+    }
+
+    fn set(&mut self, u: usize, v: usize, c: usize) {
+        self.unset(u, v);
+        debug_assert!(self.is_free(u, c) && self.is_free(v, c));
+        self.at[u][c] = Some(v);
+        self.at[v][c] = Some(u);
+        self.edge_color.insert(Self::norm(u, v), c);
+    }
+
+    fn unset(&mut self, u: usize, v: usize) {
+        if let Some(c) = self.edge_color.remove(&Self::norm(u, v)) {
+            self.at[u][c] = None;
+            self.at[v][c] = None;
+        }
+    }
+}
+
+/// Properly edge-color `g` using at most `Δ(G) + 1` colors.
+///
+/// Returns one color index per edge, aligned with `g.edges()` order.
+pub fn misra_gries_edge_coloring(g: &Graph) -> Vec<usize> {
+    let m = g.num_nodes();
+    let delta = g.max_degree();
+    if g.num_edges() == 0 {
+        return vec![];
+    }
+    let num_colors = delta + 1;
+    let mut t = ColorTable::new(m, num_colors);
+    let adj = g.adjacency_lists();
+
+    for &(u, v) in g.edges() {
+        color_one_edge(u, v, &adj, &mut t);
+    }
+
+    g.edges()
+        .iter()
+        .map(|&(a, b)| t.color_of(a, b).expect("all edges colored"))
+        .collect()
+}
+
+/// Color the currently-uncolored edge (u, v).
+fn color_one_edge(u: usize, v: usize, adj: &[Vec<usize>], t: &mut ColorTable) {
+    // --- Build a maximal fan of u starting at v. ---------------------
+    // fan[0] = v; fan[i+1] is a neighbor w of u with (u,w) colored and
+    // that color free on fan[i]; all fan vertices distinct.
+    let fan = build_maximal_fan(u, v, adj, t);
+    let k = fan.len() - 1;
+
+    let c = t.free_color(u);
+    let d = t.free_color(fan[k]);
+
+    if c != d {
+        // --- Invert the cd-path through u. ---------------------------
+        // The path starts at u along color d and alternates d, c, d, ...
+        invert_cd_path(u, c, d, t);
+    }
+    // After inversion, d is free on u (u had no c-edge; its d-edge, if
+    // any, was recolored to c by the inversion).
+    debug_assert!(t.is_free(u, d));
+
+    // --- Find w: a fan prefix fan[0..=w] that is still a fan and has d
+    // free on fan[w]. The Misra–Gries lemma guarantees existence. ------
+    let w = find_rotation_point(u, &fan, d, t);
+
+    // --- Rotate the prefix fan[0..=w]: shift colors down one slot. ----
+    // color(u, fan[i]) <- color(u, fan[i+1]) for i < w; (u, fan[w])
+    // becomes uncolored, then takes color d.
+    for i in 0..w {
+        let next_color = t
+            .color_of(u, fan[i + 1])
+            .expect("interior fan edges are colored");
+        t.unset(u, fan[i + 1]);
+        t.set(u, fan[i], next_color);
+    }
+    t.set(u, fan[w], d);
+}
+
+/// Maximal fan of `u` starting at `v` (v's edge to u is uncolored).
+fn build_maximal_fan(
+    u: usize,
+    v: usize,
+    adj: &[Vec<usize>],
+    t: &ColorTable,
+) -> Vec<usize> {
+    let mut fan = vec![v];
+    let mut in_fan = std::collections::BTreeSet::from([v]);
+    loop {
+        let last = *fan.last().unwrap();
+        let mut extended = false;
+        for &w in &adj[u] {
+            if in_fan.contains(&w) {
+                continue;
+            }
+            if let Some(cw) = t.color_of(u, w) {
+                if t.is_free(last, cw) {
+                    fan.push(w);
+                    in_fan.insert(w);
+                    extended = true;
+                    break;
+                }
+            }
+        }
+        if !extended {
+            return fan;
+        }
+    }
+}
+
+/// Invert the maximal path starting at `u` whose edges alternate colors
+/// d, c, d, c, ... (the "cd_u path"). Swaps colors c and d along it.
+fn invert_cd_path(u: usize, c: usize, d: usize, t: &mut ColorTable) {
+    // Collect path edges first (endpoint walk), then flip.
+    let mut path: Vec<(usize, usize)> = Vec::new();
+    let mut x = u;
+    let mut want = d;
+    let mut prev: Option<usize> = None;
+    loop {
+        match t.at[x][want] {
+            Some(y) if Some(y) != prev => {
+                path.push((x, y));
+                prev = Some(x);
+                x = y;
+                want = if want == d { c } else { d };
+            }
+            _ => break,
+        }
+    }
+    // Flip colors along the path. Uncolor all first to avoid transient
+    // conflicts, then recolor with the swapped colors.
+    let colors: Vec<usize> = path
+        .iter()
+        .map(|&(a, b)| t.color_of(a, b).expect("path edges colored"))
+        .collect();
+    for &(a, b) in &path {
+        t.unset(a, b);
+    }
+    for (&(a, b), &col) in path.iter().zip(&colors) {
+        let flipped = if col == c { d } else { c };
+        t.set(a, b, flipped);
+    }
+}
+
+/// Find index `w` so that fan[0..=w] is (still) a fan of u and color `d`
+/// is free on fan[w], after the cd-path inversion.
+fn find_rotation_point(u: usize, fan: &[usize], d: usize, t: &ColorTable) -> usize {
+    let mut w: Option<usize> = None;
+    for i in 0..fan.len() {
+        // Prefix validity: for i ≥ 1, edge (u, fan[i]) must be colored
+        // and its color free on fan[i-1] (the fan property).
+        if i >= 1 {
+            match t.color_of(u, fan[i]) {
+                Some(ci) if t.is_free(fan[i - 1], ci) => {}
+                _ => break, // prefix stops being a fan here
+            }
+        }
+        if t.is_free(fan[i], d) {
+            w = Some(i);
+            break; // earliest valid rotation point suffices
+        }
+    }
+    w.expect("Misra–Gries invariant violated: no rotation point found")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{complete, grid, paper_figure1_graph, ring, star};
+    use crate::rng::Rng;
+
+    /// A proper edge coloring assigns distinct colors to incident edges.
+    fn assert_proper(g: &Graph, colors: &[usize]) {
+        assert_eq!(colors.len(), g.num_edges());
+        let edges = g.edges();
+        for i in 0..edges.len() {
+            for j in (i + 1)..edges.len() {
+                let (a, b) = edges[i];
+                let (c, d) = edges[j];
+                let incident = a == c || a == d || b == c || b == d;
+                if incident {
+                    assert_ne!(
+                        colors[i], colors[j],
+                        "incident edges {:?} {:?} share color",
+                        edges[i], edges[j]
+                    );
+                }
+            }
+        }
+    }
+
+    fn assert_vizing(g: &Graph, colors: &[usize]) {
+        let used = colors.iter().copied().max().map_or(0, |c| c + 1);
+        assert!(
+            used <= g.max_degree() + 1,
+            "used {used} colors > Δ+1 = {}",
+            g.max_degree() + 1
+        );
+    }
+
+    #[test]
+    fn colors_named_graphs() {
+        for g in [
+            paper_figure1_graph(),
+            ring(7),
+            ring(8),
+            star(9),
+            complete(6),
+            complete(7),
+            grid(3, 5),
+        ] {
+            let colors = misra_gries_edge_coloring(&g);
+            assert_proper(&g, &colors);
+            assert_vizing(&g, &colors);
+        }
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::empty(5);
+        assert!(misra_gries_edge_coloring(&g).is_empty());
+    }
+
+    #[test]
+    fn single_edge() {
+        let g = Graph::new(2, &[(0, 1)]);
+        assert_eq!(misra_gries_edge_coloring(&g), vec![0]);
+    }
+
+    #[test]
+    fn random_graphs_property() {
+        // Property test over many random graphs: proper + Vizing bound.
+        let mut rng = Rng::new(777);
+        for trial in 0..200 {
+            let m = 2 + rng.below(14);
+            let p = rng.uniform_in(0.05, 0.9);
+            let g = crate::graph::erdos_renyi(m, p, &mut rng);
+            let colors = misra_gries_edge_coloring(&g);
+            assert_eq!(colors.len(), g.num_edges(), "trial {trial}");
+            assert_proper(&g, &colors);
+            assert_vizing(&g, &colors);
+        }
+    }
+
+    #[test]
+    fn dense_graphs_property() {
+        let mut rng = Rng::new(4242);
+        for _ in 0..20 {
+            let m = 8 + rng.below(10);
+            let g = crate::graph::erdos_renyi(m, 0.95, &mut rng);
+            let colors = misra_gries_edge_coloring(&g);
+            assert_proper(&g, &colors);
+            assert_vizing(&g, &colors);
+        }
+    }
+}

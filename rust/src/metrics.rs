@@ -1,0 +1,149 @@
+//! Training/experiment metric recording.
+//!
+//! A [`Recorder`] collects named time series (loss vs iteration, loss vs
+//! virtual wall-clock, consensus distance, comm units, ...) and dumps
+//! them as CSV or JSON for the figure harnesses and EXPERIMENTS.md.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+/// One sample of a named series.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    /// X coordinate (iteration index, epoch, or virtual time).
+    pub x: f64,
+    /// Y value.
+    pub y: f64,
+}
+
+/// A collection of named metric series.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    series: BTreeMap<String, Vec<Sample>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a sample to a series (creating it on first use).
+    pub fn push(&mut self, series: &str, x: f64, y: f64) {
+        self.series
+            .entry(series.to_string())
+            .or_default()
+            .push(Sample { x, y });
+    }
+
+    /// Get a series (empty slice if absent).
+    pub fn get(&self, series: &str) -> &[Sample] {
+        self.series.get(series).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Names of all recorded series.
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(String::as_str).collect()
+    }
+
+    /// Last y-value of a series, if any.
+    pub fn last(&self, series: &str) -> Option<f64> {
+        self.get(series).last().map(|s| s.y)
+    }
+
+    /// First x at which a series' y drops to or below `threshold`
+    /// (e.g. "virtual time to reach training loss 0.1", the paper's
+    /// time-to-loss metric in Fig 5).
+    pub fn first_x_below(&self, series: &str, threshold: f64) -> Option<f64> {
+        self.get(series)
+            .iter()
+            .find(|s| s.y <= threshold)
+            .map(|s| s.x)
+    }
+
+    /// Running minimum of the series' y values.
+    pub fn min_y(&self, series: &str) -> Option<f64> {
+        self.get(series)
+            .iter()
+            .map(|s| s.y)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Serialize all series as JSON: `{name: [[x,y], ...], ...}`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.series
+                .iter()
+                .map(|(name, samples)| {
+                    (
+                        name.clone(),
+                        Json::Arr(
+                            samples
+                                .iter()
+                                .map(|s| Json::Arr(vec![Json::Num(s.x), Json::Num(s.y)]))
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Emit one series as CSV (`x,y` with a header line).
+    pub fn series_csv(&self, series: &str) -> String {
+        let mut out = String::from("x,y\n");
+        for s in self.get(series) {
+            out.push_str(&format!("{},{}\n", s.x, s.y));
+        }
+        out
+    }
+
+    /// Write the JSON dump to a file.
+    pub fn save_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_get() {
+        let mut r = Recorder::new();
+        r.push("loss", 0.0, 2.5);
+        r.push("loss", 1.0, 1.5);
+        assert_eq!(r.get("loss").len(), 2);
+        assert_eq!(r.last("loss"), Some(1.5));
+        assert_eq!(r.get("missing"), &[]);
+    }
+
+    #[test]
+    fn first_x_below_threshold() {
+        let mut r = Recorder::new();
+        for (x, y) in [(0.0, 3.0), (1.0, 1.0), (2.0, 0.09), (3.0, 0.05)] {
+            r.push("loss", x, y);
+        }
+        assert_eq!(r.first_x_below("loss", 0.1), Some(2.0));
+        assert_eq!(r.first_x_below("loss", 0.01), None);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut r = Recorder::new();
+        r.push("a", 1.0, 2.0);
+        let j = r.to_json();
+        let arr = j.get("a").unwrap().as_array().unwrap();
+        assert_eq!(arr[0].as_array().unwrap()[1].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut r = Recorder::new();
+        r.push("s", 0.0, 1.0);
+        r.push("s", 1.0, 0.5);
+        assert_eq!(r.series_csv("s"), "x,y\n0,1\n1,0.5\n");
+    }
+}

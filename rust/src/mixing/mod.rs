@@ -1,0 +1,388 @@
+//! Mixing-weight optimization and spectral-norm analysis (Step 3 of
+//! MATCHA; paper Lemma 1 + Theorem 2).
+//!
+//! The per-iteration mixing matrix is `W⁽ᵏ⁾ = I − α Σ_j B_j L_j`. The
+//! convergence rate (Theorem 1) is governed by
+//!
+//! ```text
+//!   ρ(α) = ‖ E[WᵀW] − J ‖₂
+//!        = ‖ I − 2α L̄ + α² (L̄² + 2 L̃) − J ‖₂,
+//! ```
+//!
+//! with `L̄ = Σ p_j L_j` and `L̃ = Σ p_j (1−p_j) L_j` (derivation in the
+//! paper's Appendix C, eqs. 81–86; the factor 2 uses `L_j² = 2 L_j` for a
+//! matching, whose Laplacian has blocks `[[1,-1],[-1,1]]`).
+//!
+//! The paper formulates minimizing ρ over α as an SDP (Lemma 1) and
+//! proves its optimum satisfies `β = α²`, i.e. the relaxation is tight and
+//! the problem is *exactly* the 1-D convex minimization of ρ(α): for any
+//! unit `x`, `xᵀE(α)x` is a convex quadratic in α (its α²-coefficient is
+//! `xᵀ(L̄²+2L̃)x ≥ 0`), so `λ_max(E)` and `−λ_min(E)` are convex and
+//! `ρ(α) = max(λ_max, −λ_min)` is convex. We therefore golden-section
+//! over α — exact, and with no SDP machinery.
+
+use crate::budget::expected_laplacian;
+use crate::linalg::{symmetric_eigen, Mat};
+use crate::matching::MatchingDecomposition;
+
+/// The mixing design produced by step 3: the weight α and the spectral
+/// norm ρ it achieves (ρ < 1 ⟺ convergence; Theorem 2).
+#[derive(Clone, Debug)]
+pub struct MixingDesign {
+    pub alpha: f64,
+    pub rho: f64,
+}
+
+/// Build `L̃(p) = Σ_j p_j (1 − p_j) L_j` — the activation-variance term.
+pub fn variance_laplacian(laplacians: &[Mat], probs: &[f64]) -> Mat {
+    assert_eq!(laplacians.len(), probs.len());
+    let n = laplacians[0].rows();
+    let mut l = Mat::zeros(n, n);
+    for (lj, &p) in laplacians.iter().zip(probs) {
+        l.axpy(p * (1.0 - p), lj);
+    }
+    l
+}
+
+/// `E(α) = I − 2αL̄ + α²(L̄² + 2L̃) − J`, the matrix whose spectral norm
+/// is ρ. Exposed for tests and for the Monte-Carlo cross-validation.
+pub fn rho_matrix(lbar: &Mat, ltilde: &Mat, alpha: f64) -> Mat {
+    let n = lbar.rows();
+    let mut e = Mat::eye(n);
+    e.axpy(-2.0 * alpha, lbar);
+    let lbar2 = lbar.matmul(lbar);
+    e.axpy(alpha * alpha, &lbar2);
+    e.axpy(2.0 * alpha * alpha, ltilde);
+    e.axpy(-1.0, &Mat::averaging(n));
+    e
+}
+
+/// ρ(α) = ‖E(α)‖₂ for independent Bernoulli matching activation.
+pub fn rho_for_alpha(lbar: &Mat, ltilde: &Mat, alpha: f64) -> f64 {
+    let e = rho_matrix(lbar, ltilde, alpha);
+    let eig = symmetric_eigen(&e);
+    eig.values.iter().fold(0.0_f64, |a, &v| a.max(v.abs()))
+}
+
+/// Golden-section minimization of a convex scalar function on `[lo, hi]`.
+fn golden_section<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64, iters: usize) -> (f64, f64) {
+    let phi = (5.0_f64.sqrt() - 1.0) / 2.0;
+    let mut x1 = hi - phi * (hi - lo);
+    let mut x2 = lo + phi * (hi - lo);
+    let mut f1 = f(x1);
+    let mut f2 = f(x2);
+    for _ in 0..iters {
+        if f1 <= f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - phi * (hi - lo);
+            f1 = f(x1);
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + phi * (hi - lo);
+            f2 = f(x2);
+        }
+    }
+    let x = 0.5 * (lo + hi);
+    (x, f(x))
+}
+
+/// Minimize ρ(α) over α > 0 for a decomposition with activation
+/// probabilities `probs` (paper Lemma 1 — solved exactly; see module
+/// docs for why the 1-D convex search is equivalent to the SDP).
+pub fn optimize_alpha(decomp: &MatchingDecomposition, probs: &[f64]) -> MixingDesign {
+    let laps = decomp.laplacians();
+    let lbar = expected_laplacian(&laps, probs);
+    let ltilde = variance_laplacian(&laps, probs);
+    optimize_alpha_from_laplacians(&lbar, &ltilde)
+}
+
+/// Same as [`optimize_alpha`] but from precomputed `L̄`, `L̃`.
+pub fn optimize_alpha_from_laplacians(lbar: &Mat, ltilde: &Mat) -> MixingDesign {
+    // Hot path: every golden-section probe needs ‖E(α)‖₂ with
+    // E(α) = (I − J) − 2α L̄ + α² (L̄² + 2L̃). The α-independent pieces —
+    // in particular the O(m³) product L̄² — are computed ONCE here, so a
+    // probe is just two axpys + one eigendecomposition (§Perf: this cut
+    // the 16-node optimize_alpha from ~91 ms to ~8 ms).
+    let n = lbar.rows();
+    let base = Mat::eye(n).sub(&Mat::averaging(n));
+    let mut quad = lbar.matmul(lbar);
+    quad.axpy(2.0, ltilde);
+    let f = |a: f64| {
+        let mut e = base.clone();
+        e.axpy(-2.0 * a, lbar);
+        e.axpy(a * a, &quad);
+        let eig = symmetric_eigen(&e);
+        eig.values.iter().fold(0.0_f64, |acc, &v| acc.max(v.abs()))
+    };
+
+    // Bracket: ρ(0) = 1; for α ≥ 2/λ_max(L̄) the (I−αL̄)² term exceeds 1
+    // again. Use an upper bound from Gershgorin (λ_max ≤ 2·max degree of
+    // the expected graph = 2·max diagonal of L̄). Expand right if the
+    // minimizer sits at the boundary (very sparse expected graphs).
+    let max_diag = (0..n).map(|i| lbar.get(i, i)).fold(0.0_f64, f64::max);
+    let mut hi = if max_diag > 1e-12 { 2.0 / max_diag } else { 1.0 };
+    while f(hi * 1.5) < f(hi) && hi < 1e3 {
+        hi *= 1.5;
+    }
+    let (alpha, rho) = golden_section(f, 0.0, hi, 64);
+    MixingDesign { alpha, rho }
+}
+
+/// ρ(α) for **fully-correlated** activation: with probability `q` every
+/// matching activates together, else none. This is the i.i.d. model of
+/// P-DecenSGD (periodic decentralized SGD, paper §3/§5 benchmark):
+/// `E[WᵀW] = I − 2αqL + α²qL²` (no variance cross-term since the single
+/// Bernoulli multiplies the whole Laplacian).
+pub fn rho_periodic_for_alpha(base_laplacian: &Mat, q: f64, alpha: f64) -> f64 {
+    let n = base_laplacian.rows();
+    let mut e = Mat::eye(n);
+    e.axpy(-2.0 * alpha * q, base_laplacian);
+    let l2m = base_laplacian.matmul(base_laplacian);
+    e.axpy(alpha * alpha * q, &l2m);
+    e.axpy(-1.0, &Mat::averaging(n));
+    let eig = symmetric_eigen(&e);
+    eig.values.iter().fold(0.0_f64, |a, &v| a.max(v.abs()))
+}
+
+/// Best-α ρ for P-DecenSGD at activation frequency `q`.
+pub fn optimize_alpha_periodic(base_laplacian: &Mat, q: f64) -> MixingDesign {
+    let n = base_laplacian.rows();
+    let max_diag = (0..n).map(|i| base_laplacian.get(i, i)).fold(0.0_f64, f64::max);
+    let hi0 = if max_diag > 1e-12 { 2.0 / max_diag } else { 1.0 };
+    let f = |a: f64| rho_periodic_for_alpha(base_laplacian, q, a);
+    let mut hi = hi0;
+    while f(hi * 1.5) < f(hi) && hi < 1e3 {
+        hi *= 1.5;
+    }
+    let (alpha, rho) = golden_section(f, 0.0, hi, 90);
+    MixingDesign { alpha, rho }
+}
+
+/// Closed-form vanilla DecenSGD design (all p_j = 1 ⇒ L̃ = 0 and the
+/// optimum is `α* = 2/(λ₂+λ_m)` with `ρ = ((λ_m−λ₂)/(λ_m+λ₂))²`).
+pub fn vanilla_design(base_laplacian: &Mat) -> MixingDesign {
+    let eig = symmetric_eigen(base_laplacian);
+    let l2 = eig.values[1].max(0.0);
+    let lm = *eig.values.last().unwrap();
+    if l2 <= 1e-12 {
+        // Disconnected base graph: no α achieves consensus.
+        return MixingDesign { alpha: 0.0, rho: 1.0 };
+    }
+    let alpha = 2.0 / (l2 + lm);
+    let r = (lm - l2) / (lm + l2);
+    MixingDesign { alpha, rho: r * r }
+}
+
+/// Monte-Carlo estimate of `‖E[WᵀW] − J‖₂` by sampling activations —
+/// used in tests to validate the closed form against the definition.
+pub fn rho_monte_carlo(
+    decomp: &MatchingDecomposition,
+    probs: &[f64],
+    alpha: f64,
+    samples: usize,
+    rng: &mut crate::rng::Rng,
+) -> f64 {
+    let laps = decomp.laplacians();
+    let n = decomp.base.num_nodes();
+    let mut acc = Mat::zeros(n, n);
+    for _ in 0..samples {
+        let mut l = Mat::zeros(n, n);
+        for (lj, &p) in laps.iter().zip(probs) {
+            if rng.bernoulli(p) {
+                l.axpy(1.0, lj);
+            }
+        }
+        let mut w = Mat::eye(n);
+        w.axpy(-alpha, &l);
+        let wtw = w.transpose().matmul(&w);
+        acc.axpy(1.0 / samples as f64, &wtw);
+    }
+    acc.axpy(-1.0, &Mat::averaging(n));
+    let eig = symmetric_eigen(&acc);
+    eig.values.iter().fold(0.0_f64, |a, &v| a.max(v.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::optimize_activation_probabilities;
+    use crate::graph::{complete, paper_figure1_graph, ring};
+    use crate::matching::decompose;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rho_at_zero_alpha_is_one() {
+        let d = decompose(&paper_figure1_graph());
+        let probs = vec![0.5; d.len()];
+        let laps = d.laplacians();
+        let lbar = expected_laplacian(&laps, &probs);
+        let ltilde = variance_laplacian(&laps, &probs);
+        assert!((rho_for_alpha(&lbar, &ltilde, 0.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn theorem2_rho_below_one_connected_graphs() {
+        for g in [paper_figure1_graph(), ring(8), complete(6)] {
+            let d = decompose(&g);
+            for cb in [0.1, 0.3, 0.6, 1.0] {
+                let a = optimize_activation_probabilities(&d, cb);
+                let mix = optimize_alpha(&d, &a.probabilities);
+                assert!(
+                    mix.rho < 1.0 - 1e-6,
+                    "Theorem 2 violated: cb={cb}, ρ={}",
+                    mix.rho
+                );
+                assert!(mix.alpha > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn vanilla_closed_form_matches_generic_path() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let probs = vec![1.0; d.len()];
+        let generic = optimize_alpha(&d, &probs);
+        let closed = vanilla_design(&g.laplacian());
+        assert!(
+            (generic.rho - closed.rho).abs() < 1e-6,
+            "generic ρ {} vs closed-form ρ {}",
+            generic.rho,
+            closed.rho
+        );
+        assert!((generic.alpha - closed.alpha).abs() < 1e-4);
+    }
+
+    #[test]
+    fn vanilla_complete_graph_perfect_mixing() {
+        // K_n with α = 1/n gives W = J exactly ⇒ ρ = 0.
+        let design = vanilla_design(&complete(8).laplacian());
+        assert!(design.rho < 1e-10, "ρ = {}", design.rho);
+        assert!((design.alpha - 1.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn closed_form_matches_monte_carlo() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let a = optimize_activation_probabilities(&d, 0.5);
+        let mix = optimize_alpha(&d, &a.probabilities);
+        let laps = d.laplacians();
+        let lbar = expected_laplacian(&laps, &a.probabilities);
+        let ltilde = variance_laplacian(&laps, &a.probabilities);
+        let exact = rho_for_alpha(&lbar, &ltilde, mix.alpha);
+        let mut rng = Rng::new(5150);
+        let mc = rho_monte_carlo(&d, &a.probabilities, mix.alpha, 20_000, &mut rng);
+        assert!(
+            (exact - mc).abs() < 0.02,
+            "closed-form ρ {exact} vs Monte-Carlo {mc}"
+        );
+    }
+
+    #[test]
+    fn periodic_worse_or_equal_than_matcha_at_same_budget() {
+        // Fig 3's qualitative claim: at equal budget, MATCHA's optimized
+        // ρ is no worse than P-DecenSGD's.
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        for cb in [0.2, 0.4, 0.6, 0.8] {
+            let a = optimize_activation_probabilities(&d, cb);
+            let matcha = optimize_alpha(&d, &a.probabilities);
+            let periodic = optimize_alpha_periodic(&g.laplacian(), cb);
+            assert!(
+                matcha.rho <= periodic.rho + 1e-6,
+                "cb={cb}: MATCHA ρ {} > periodic ρ {}",
+                matcha.rho,
+                periodic.rho
+            );
+        }
+    }
+
+    #[test]
+    fn rho_is_convex_in_alpha_sampled() {
+        // Midpoint convexity check over a grid (validates the
+        // golden-section argument).
+        let d = decompose(&paper_figure1_graph());
+        let probs = vec![0.4; d.len()];
+        let laps = d.laplacians();
+        let lbar = expected_laplacian(&laps, &probs);
+        let ltilde = variance_laplacian(&laps, &probs);
+        let f = |a: f64| rho_for_alpha(&lbar, &ltilde, a);
+        let grid: Vec<f64> = (0..30).map(|i| i as f64 * 0.02).collect();
+        for i in 0..grid.len() {
+            for j in (i + 2)..grid.len() {
+                let a = grid[i];
+                let b = grid[j];
+                let mid = 0.5 * (a + b);
+                assert!(
+                    f(mid) <= 0.5 * (f(a) + f(b)) + 1e-9,
+                    "convexity violated at [{a},{b}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn golden_section_finds_scalar_minimum() {
+        let (x, fx) = golden_section(|x| (x - 3.0) * (x - 3.0) + 1.0, 0.0, 10.0, 80);
+        assert!((x - 3.0).abs() < 1e-6);
+        assert!((fx - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lemma2_contraction_holds_empirically() {
+        // Lemma 2: E‖B(∏ᵢ W⁽ⁱ⁾ − J)‖²_F ≤ ρⁿ ‖B‖²_F for i.i.d. W⁽ⁱ⁾.
+        // Monte-Carlo over the MATCHA activation law on the fig1 graph.
+        use crate::topology::{mixing_matrix, MatchaSampler, TopologySampler};
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.5);
+        let design = optimize_alpha(&d, &probs.probabilities);
+        let laps = d.laplacians();
+        let n = 4; // product length
+        let trials = 3000;
+        let mut sampler = MatchaSampler::new(probs.probabilities.clone(), 99);
+
+        // B: a fixed deterministic 3×8 matrix.
+        let mut b = Mat::zeros(3, 8);
+        for i in 0..3 {
+            for j in 0..8 {
+                b.set(i, j, ((i * 8 + j) as f64 * 0.37).sin());
+            }
+        }
+        let bj = b.matmul(&Mat::averaging(8));
+        let bnorm2 = b.sub(&bj).frobenius_norm().powi(2); // ‖B(I−J)‖²   (tighter start)
+        let _ = bnorm2;
+
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let mut prod = Mat::eye(8);
+            for k in 0..n {
+                let round = sampler.round(t * n + k);
+                prod = prod.matmul(&mixing_matrix(&laps, &round.activated, design.alpha));
+            }
+            let m = b.matmul(&prod.sub(&Mat::averaging(8)));
+            acc += m.frobenius_norm().powi(2) / trials as f64;
+        }
+        let bound = design.rho.powi(n as i32) * b.frobenius_norm().powi(2);
+        assert!(
+            acc <= bound * 1.05,
+            "Lemma 2 violated: E‖B(ΠW−J)‖² = {acc} > ρⁿ‖B‖² = {bound}"
+        );
+    }
+
+    #[test]
+    fn mixing_matrix_is_doubly_stochastic() {
+        // W = I − αL is symmetric doubly stochastic by construction.
+        let g = paper_figure1_graph();
+        let design = vanilla_design(&g.laplacian());
+        let mut w = Mat::eye(8);
+        w.axpy(-design.alpha, &g.laplacian());
+        assert!(w.is_doubly_stochastic(1e-9));
+        assert!(w.is_symmetric(1e-9));
+    }
+}

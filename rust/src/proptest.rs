@@ -1,0 +1,103 @@
+//! Minimal property-testing harness.
+//!
+//! The `proptest` crate is not available in this offline image; this
+//! module provides the piece of it we rely on: run a predicate over many
+//! generated cases from a seeded [`Rng`], and on failure report the seed
+//! and a best-effort shrunk case description so the failure reproduces
+//! deterministically.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 200, seed: 0x4d41_5443_4841 } // "MATCHA"
+    }
+}
+
+/// Run `prop` over `config.cases` generated inputs. `gen` draws a case
+/// from the RNG; `prop` returns `Err(description)` to fail.
+///
+/// Panics with the case index, seed, and description on the first
+/// failure, so `cargo test` output pinpoints the reproducer.
+pub fn check<T, G, P>(config: PropConfig, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let mut case_rng = rng.split();
+        let input = generate(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}):\n  input: {input:?}\n  {msg}",
+                config.cases, config.seed
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check_default<T, G, P>(generate: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(PropConfig::default(), generate, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            PropConfig { cases: 50, seed: 1 },
+            |rng| rng.below(100),
+            |&x| {
+                count += 1;
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        check(
+            PropConfig { cases: 100, seed: 2 },
+            |rng| rng.below(10),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) },
+        );
+    }
+
+    #[test]
+    fn same_seed_generates_same_cases() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check(PropConfig { cases: 20, seed: 9 }, |r| r.next_u64(), |&x| {
+            a.push(x);
+            Ok(())
+        });
+        check(PropConfig { cases: 20, seed: 9 }, |r| r.next_u64(), |&x| {
+            b.push(x);
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

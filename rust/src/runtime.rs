@@ -1,0 +1,136 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the crate touches XLA. `python/compile/aot.py`
+//! lowers the L2 model once to HLO *text* (xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id serialized protos; the text parser reassigns ids);
+//! here we parse, compile for the CPU PJRT client, and expose typed
+//! execute helpers plus flat-`Vec<f32>` marshalling for the coordinator's
+//! hot path.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client plus a place to compile executables from.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled computation (train step / eval step / mix).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this image).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the elements of the result
+    /// tuple (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple().context("untupling result")
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+// --- literal marshalling -------------------------------------------------
+
+/// Flat `&[f32]` -> literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {:?} != len {}", dims, data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Flat `&[i32]` -> literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {:?} != len {}", dims, data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> owned `Vec<f32>`.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Literal -> single f32 (for scalar losses).
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/ (they require
+    // `make artifacts` to have run). Here: marshalling only.
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = literal_scalar_f32(3.5);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, 2, 3, 4];
+        let lit = literal_i32(&data, &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+}

@@ -1,0 +1,149 @@
+//! Message compression for the gossip step.
+//!
+//! The paper (§1, Related Works) positions MATCHA as *complementary* to
+//! compression: "reducing the effective node degree … can be easily
+//! combined with existing compression schemes". This module provides that
+//! combination for the simulator: the per-edge difference messages
+//! `x_v − x_u` are compressed before being applied, and the delay model
+//! scales each link's payload cost by the compression ratio — floored by
+//! a latency term, because (as the paper notes) compression does not help
+//! when handshake latency dominates.
+//!
+//! Applying compression to the antisymmetric *difference* keeps the
+//! update antisymmetric (`+αC(d)` at u, `−αC(d)` at v), so the worker
+//! average is preserved exactly — the invariant the x̄-analysis of
+//! Theorem 1 relies on — at the cost of a weaker per-step contraction.
+
+use crate::rng::Rng;
+
+/// A compression operator applied to gossip difference messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Compression {
+    /// Keep the largest-|.| `frac` of coordinates, zero the rest.
+    TopK { frac: f64 },
+    /// Stochastic uniform quantization to `bits` bits per coordinate
+    /// (plus one f64 scale per message; unbiased).
+    Quantize { bits: u32 },
+}
+
+impl Compression {
+    /// Compress `v` in place. `rng` drives stochastic rounding.
+    pub fn compress(&self, v: &mut [f64], rng: &mut Rng) {
+        match *self {
+            Compression::TopK { frac } => {
+                assert!((0.0..=1.0).contains(&frac));
+                let keep = ((v.len() as f64 * frac).ceil() as usize).clamp(1, v.len());
+                if keep == v.len() {
+                    return;
+                }
+                // Threshold = keep-th largest |value|.
+                let mut mags: Vec<f64> = v.iter().map(|x| x.abs()).collect();
+                mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let thresh = mags[keep - 1];
+                let mut kept = 0;
+                for x in v.iter_mut() {
+                    if x.abs() >= thresh && kept < keep {
+                        kept += 1;
+                    } else {
+                        *x = 0.0;
+                    }
+                }
+            }
+            Compression::Quantize { bits } => {
+                assert!((1..=16).contains(&bits));
+                let scale = v.iter().map(|x| x.abs()).fold(0.0_f64, f64::max);
+                if scale == 0.0 {
+                    return;
+                }
+                let levels = ((1u64 << bits) - 1) as f64;
+                for x in v.iter_mut() {
+                    // Map to [0, levels], stochastic round, map back.
+                    let t = (*x / scale + 1.0) / 2.0 * levels;
+                    let lo = t.floor();
+                    let q = if rng.uniform() < t - lo { lo + 1.0 } else { lo };
+                    *x = (q / levels * 2.0 - 1.0) * scale;
+                }
+            }
+        }
+    }
+
+    /// Fraction of the uncompressed payload actually transmitted
+    /// (coordinates for TopK — indices ignored for simplicity; bits/32
+    /// for quantization against f32 baselines).
+    pub fn payload_ratio(&self) -> f64 {
+        match *self {
+            Compression::TopK { frac } => frac,
+            Compression::Quantize { bits } => bits as f64 / 32.0,
+        }
+    }
+
+    /// Communication-time multiplier under a latency floor: even an
+    /// infinitely compressed message pays `latency_floor` of a full
+    /// link's time for the handshake (paper §1: compression "may not
+    /// help if the network latency is high").
+    pub fn time_factor(&self, latency_floor: f64) -> f64 {
+        self.payload_ratio().max(latency_floor).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_keeps_largest() {
+        let mut v = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        Compression::TopK { frac: 0.4 }.compress(&mut v, &mut Rng::new(1));
+        assert_eq!(v, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_frac_one_is_identity() {
+        let mut v = vec![1.0, -2.0, 3.0];
+        let orig = v.clone();
+        Compression::TopK { frac: 1.0 }.compress(&mut v, &mut Rng::new(2));
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn quantize_is_unbiased_and_bounded() {
+        let mut rng = Rng::new(3);
+        let orig = vec![0.7, -0.3, 0.05, -0.92];
+        let comp = Compression::Quantize { bits: 4 };
+        let mut acc = vec![0.0; orig.len()];
+        let n = 20_000;
+        for _ in 0..n {
+            let mut v = orig.clone();
+            comp.compress(&mut v, &mut rng);
+            // Quantization error bounded by one level (scale / levels * 2).
+            let scale: f64 = orig.iter().map(|x| x.abs()).fold(0.0, f64::max);
+            let step = 2.0 * scale / 15.0;
+            for (a, b) in v.iter().zip(&orig) {
+                assert!((a - b).abs() <= step + 1e-12);
+            }
+            for (s, &x) in acc.iter_mut().zip(&v) {
+                *s += x / n as f64;
+            }
+        }
+        for (mean, &x) in acc.iter().zip(&orig) {
+            assert!((mean - x).abs() < 0.01, "bias at {x}: {mean}");
+        }
+    }
+
+    #[test]
+    fn quantize_zero_vector_noop() {
+        let mut v = vec![0.0; 5];
+        Compression::Quantize { bits: 2 }.compress(&mut v, &mut Rng::new(4));
+        assert_eq!(v, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn payload_and_time_factors() {
+        let c = Compression::TopK { frac: 0.1 };
+        assert!((c.payload_ratio() - 0.1).abs() < 1e-12);
+        assert!((c.time_factor(0.25) - 0.25).abs() < 1e-12); // latency-bound
+        assert!((c.time_factor(0.01) - 0.1).abs() < 1e-12); // bandwidth-bound
+        let q = Compression::Quantize { bits: 8 };
+        assert!((q.payload_ratio() - 0.25).abs() < 1e-12);
+    }
+}

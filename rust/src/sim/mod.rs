@@ -1,0 +1,106 @@
+//! Pure-Rust decentralized SGD simulator.
+//!
+//! The paper's sweep experiments (Figures 3–8, 10) compare MATCHA,
+//! vanilla DecenSGD and P-DecenSGD across many budgets and topologies.
+//! Running every sweep point through the full XLA NN path would be
+//! wasteful; this module provides a fast, exact implementation of the
+//! DecenSGD recursion (paper eq. (2))
+//!
+//! ```text
+//!   x_i^{(k+1)} = Σ_j W_ij [ x_j^{(k)} − η g(x_j^{(k)}) ]
+//! ```
+//!
+//! over analytically tractable workloads (distributed quadratics with a
+//! known optimum, and synthetic logistic regression with train/test
+//! splits). The NN path in [`crate::coordinator`] exercises the same
+//! schedule code on the real model; the two paths share [`crate::topology`]
+//! and [`crate::delay`], so sweep results and NN results are directly
+//! comparable.
+
+mod compress;
+mod logreg;
+mod quadratic;
+mod runner;
+
+pub use compress::Compression;
+pub use logreg::{LogisticProblem, LogisticSpec};
+pub use quadratic::QuadraticProblem;
+pub use runner::{run_decentralized, RunConfig, RunResult};
+
+use crate::rng::Rng;
+
+/// A decentralized optimization workload: `m` workers each with a local
+/// objective `F_i`; the global objective is their average (paper eq. (1)).
+pub trait Problem {
+    /// Parameter dimension `d`.
+    fn dim(&self) -> usize;
+    /// Number of workers `m`.
+    fn num_workers(&self) -> usize;
+    /// Local full-batch loss `F_i(x)`.
+    fn local_loss(&self, worker: usize, x: &[f64]) -> f64;
+    /// Stochastic gradient of `F_i` at `x`, written into `out`.
+    fn stoch_grad(&self, worker: usize, x: &[f64], rng: &mut Rng, out: &mut [f64]);
+    /// Global loss `F(x) = (1/m) Σ F_i(x)`.
+    fn global_loss(&self, x: &[f64]) -> f64 {
+        let m = self.num_workers();
+        (0..m).map(|i| self.local_loss(i, x)).sum::<f64>() / m as f64
+    }
+    /// Full gradient of the global objective (for reporting ‖∇F(x̄)‖²,
+    /// the paper's Theorem-1 convergence metric), written into `out`.
+    fn global_grad(&self, x: &[f64], out: &mut [f64]);
+    /// Known optimal value `F*` when available (quadratics), to report
+    /// suboptimality `F(x̄) − F*`.
+    fn optimal_value(&self) -> Option<f64> {
+        None
+    }
+    /// Held-out metric (e.g. test accuracy) when defined.
+    fn test_metric(&self, _x: &[f64]) -> Option<f64> {
+        None
+    }
+}
+
+/// Mean iterate x̄ = (1/m) Σ x_i.
+pub fn mean_iterate(xs: &[Vec<f64>]) -> Vec<f64> {
+    let m = xs.len();
+    let d = xs[0].len();
+    let mut mean = vec![0.0; d];
+    for x in xs {
+        for (a, &b) in mean.iter_mut().zip(x) {
+            *a += b;
+        }
+    }
+    for a in mean.iter_mut() {
+        *a /= m as f64;
+    }
+    mean
+}
+
+/// Consensus distance `(1/m) Σ_i ‖x_i − x̄‖²` — the discrepancy term
+/// bounded in the paper's Theorem-1 proof (eq. 62).
+pub fn consensus_distance(xs: &[Vec<f64>]) -> f64 {
+    let mean = mean_iterate(xs);
+    let m = xs.len();
+    xs.iter()
+        .map(|x| x.iter().zip(&mean).map(|(a, b)| (a - b) * (a - b)).sum::<f64>())
+        .sum::<f64>()
+        / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_consensus() {
+        let xs = vec![vec![1.0, 0.0], vec![3.0, 0.0]];
+        assert_eq!(mean_iterate(&xs), vec![2.0, 0.0]);
+        // Each worker is distance 1 from the mean -> consensus = 1.
+        assert!((consensus_distance(&xs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consensus_zero_when_identical() {
+        let xs = vec![vec![0.5; 4]; 3];
+        assert!(consensus_distance(&xs) < 1e-15);
+    }
+}

@@ -1,0 +1,254 @@
+//! Distributed quadratic workload with a known optimum.
+//!
+//! Worker `i` holds `F_i(x) = ½ xᵀ A_i x − b_iᵀ x` with `A_i ≻ 0`; the
+//! global objective `F(x) = (1/m) Σ F_i` is minimized at
+//! `x* = (Σ A_i)⁻¹ Σ b_i` — computed here with conjugate gradients so the
+//! simulator can report exact suboptimality `F(x̄) − F*`. Heterogeneity
+//! across workers (distinct `A_i`, `b_i`) makes consensus matter, which is
+//! exactly the regime where the spectral norm ρ shows up in Theorem 1.
+
+use super::Problem;
+use crate::rng::Rng;
+
+/// See module docs.
+pub struct QuadraticProblem {
+    m: usize,
+    d: usize,
+    /// Per-worker PSD matrices, row-major d×d.
+    a: Vec<Vec<f64>>,
+    /// Per-worker linear terms.
+    b: Vec<Vec<f64>>,
+    /// Stochastic gradient noise std (Assumption 3's σ).
+    noise_std: f64,
+    /// Cached optimal value F*.
+    f_star: f64,
+    x_star: Vec<f64>,
+}
+
+impl QuadraticProblem {
+    /// Generate a random heterogeneous quadratic problem.
+    ///
+    /// `hetero` scales how far apart the workers' optima are (0 = IID).
+    pub fn generate(m: usize, d: usize, hetero: f64, noise_std: f64, rng: &mut Rng) -> Self {
+        let mut a = Vec::with_capacity(m);
+        let mut b = Vec::with_capacity(m);
+        for _ in 0..m {
+            // A_i = Q diag(eigs) Qᵀ built as GᵀG + εI for conditioning.
+            let mut g = vec![0.0; d * d];
+            for v in g.iter_mut() {
+                *v = rng.normal() / (d as f64).sqrt();
+            }
+            let mut ai = vec![0.0; d * d];
+            for r in 0..d {
+                for c in 0..d {
+                    let mut acc = 0.0;
+                    for k in 0..d {
+                        acc += g[k * d + r] * g[k * d + c];
+                    }
+                    ai[r * d + c] = acc;
+                }
+            }
+            for i in 0..d {
+                ai[i * d + i] += 0.5; // λ_min ≥ 0.5: strongly convex
+            }
+            let bi: Vec<f64> = (0..d).map(|_| rng.normal() * hetero).collect();
+            a.push(ai);
+            b.push(bi);
+        }
+        let (x_star, f_star) = Self::solve_optimum(m, d, &a, &b);
+        QuadraticProblem { m, d, a, b, noise_std, f_star, x_star }
+    }
+
+    /// x* = (Σ A_i)⁻¹ Σ b_i via conjugate gradients (Σ A_i is SPD).
+    fn solve_optimum(m: usize, d: usize, a: &[Vec<f64>], b: &[Vec<f64>]) -> (Vec<f64>, f64) {
+        let mut asum = vec![0.0; d * d];
+        let mut bsum = vec![0.0; d];
+        for i in 0..m {
+            for (s, &v) in asum.iter_mut().zip(&a[i]) {
+                *s += v;
+            }
+            for (s, &v) in bsum.iter_mut().zip(&b[i]) {
+                *s += v;
+            }
+        }
+        let matvec = |x: &[f64], out: &mut [f64]| {
+            for r in 0..d {
+                let mut acc = 0.0;
+                for c in 0..d {
+                    acc += asum[r * d + c] * x[c];
+                }
+                out[r] = acc;
+            }
+        };
+        // CG from zero.
+        let mut x = vec![0.0; d];
+        let mut r = bsum.clone();
+        let mut p = r.clone();
+        let mut rs: f64 = r.iter().map(|v| v * v).sum();
+        let mut ap = vec![0.0; d];
+        for _ in 0..(4 * d) {
+            if rs.sqrt() < 1e-12 {
+                break;
+            }
+            matvec(&p, &mut ap);
+            let alpha = rs / p.iter().zip(&ap).map(|(u, v)| u * v).sum::<f64>();
+            for i in 0..d {
+                x[i] += alpha * p[i];
+                r[i] -= alpha * ap[i];
+            }
+            let rs_new: f64 = r.iter().map(|v| v * v).sum();
+            let beta = rs_new / rs;
+            for i in 0..d {
+                p[i] = r[i] + beta * p[i];
+            }
+            rs = rs_new;
+        }
+        // F* evaluated through the same local-loss formula.
+        let prob = |w: usize, x: &[f64]| -> f64 {
+            let ai = &a[w];
+            let bi = &b[w];
+            let mut quad = 0.0;
+            for r in 0..d {
+                let mut acc = 0.0;
+                for c in 0..d {
+                    acc += ai[r * d + c] * x[c];
+                }
+                quad += x[r] * acc;
+            }
+            0.5 * quad - bi.iter().zip(x).map(|(u, v)| u * v).sum::<f64>()
+        };
+        let f_star = (0..m).map(|i| prob(i, &x)).sum::<f64>() / m as f64;
+        (x, f_star)
+    }
+
+    /// The true global minimizer (for tests).
+    pub fn optimum(&self) -> &[f64] {
+        &self.x_star
+    }
+}
+
+impl Problem for QuadraticProblem {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn num_workers(&self) -> usize {
+        self.m
+    }
+
+    fn local_loss(&self, worker: usize, x: &[f64]) -> f64 {
+        let ai = &self.a[worker];
+        let bi = &self.b[worker];
+        let d = self.d;
+        let mut quad = 0.0;
+        for r in 0..d {
+            let mut acc = 0.0;
+            for c in 0..d {
+                acc += ai[r * d + c] * x[c];
+            }
+            quad += x[r] * acc;
+        }
+        0.5 * quad - bi.iter().zip(x).map(|(u, v)| u * v).sum::<f64>()
+    }
+
+    fn stoch_grad(&self, worker: usize, x: &[f64], rng: &mut Rng, out: &mut [f64]) {
+        let ai = &self.a[worker];
+        let bi = &self.b[worker];
+        let d = self.d;
+        for r in 0..d {
+            let mut acc = 0.0;
+            for c in 0..d {
+                acc += ai[r * d + c] * x[c];
+            }
+            out[r] = acc - bi[r] + self.noise_std * rng.normal();
+        }
+    }
+
+    fn global_grad(&self, x: &[f64], out: &mut [f64]) {
+        let d = self.d;
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let mut tmp = vec![0.0; d];
+        for w in 0..self.m {
+            let ai = &self.a[w];
+            let bi = &self.b[w];
+            for r in 0..d {
+                let mut acc = 0.0;
+                for c in 0..d {
+                    acc += ai[r * d + c] * x[c];
+                }
+                tmp[r] = acc - bi[r];
+            }
+            for (o, &t) in out.iter_mut().zip(&tmp) {
+                *o += t / self.m as f64;
+            }
+        }
+    }
+
+    fn optimal_value(&self) -> Option<f64> {
+        Some(self.f_star)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_has_zero_gradient() {
+        let mut rng = Rng::new(1234);
+        let p = QuadraticProblem::generate(5, 12, 1.0, 0.0, &mut rng);
+        let mut g = vec![0.0; 12];
+        p.global_grad(p.optimum(), &mut g);
+        let gn: f64 = g.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(gn < 1e-8, "‖∇F(x*)‖ = {gn}");
+    }
+
+    #[test]
+    fn f_star_is_a_lower_bound_nearby() {
+        let mut rng = Rng::new(55);
+        let p = QuadraticProblem::generate(4, 8, 2.0, 0.0, &mut rng);
+        let fstar = p.optimal_value().unwrap();
+        for trial in 0..50 {
+            let x: Vec<f64> = (0..8)
+                .map(|i| p.optimum()[i] + 0.1 * Rng::new(trial).normal())
+                .collect();
+            assert!(p.global_loss(&x) >= fstar - 1e-9);
+        }
+    }
+
+    #[test]
+    fn stoch_grad_unbiased() {
+        // Assumption 2: E[g] = ∇F_i. Average many noisy draws.
+        let mut rng = Rng::new(77);
+        let p = QuadraticProblem::generate(3, 6, 1.0, 0.5, &mut rng);
+        let x = vec![0.3; 6];
+        let mut acc = vec![0.0; 6];
+        let mut tmp = vec![0.0; 6];
+        let n = 20_000;
+        for _ in 0..n {
+            p.stoch_grad(0, &x, &mut rng, &mut tmp);
+            for (a, &t) in acc.iter_mut().zip(&tmp) {
+                *a += t / n as f64;
+            }
+        }
+        // Exact gradient of worker 0 via noise-free problem replica.
+        let mut rng2 = Rng::new(77);
+        let p0 = QuadraticProblem::generate(3, 6, 1.0, 0.0, &mut rng2);
+        let mut exact = vec![0.0; 6];
+        p0.stoch_grad(0, &x, &mut rng, &mut exact);
+        for (a, e) in acc.iter().zip(&exact) {
+            assert!((a - e).abs() < 0.02, "bias: {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn heterogeneity_spreads_local_optima() {
+        let mut rng = Rng::new(3);
+        let p = QuadraticProblem::generate(4, 5, 3.0, 0.0, &mut rng);
+        // Local losses at the global optimum differ across workers.
+        let l: Vec<f64> = (0..4).map(|w| p.local_loss(w, p.optimum())).collect();
+        let spread = l.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - l.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread > 1e-3, "degenerate heterogeneity: {l:?}");
+    }
+}

@@ -1,0 +1,347 @@
+//! The decentralized SGD loop (paper eq. (2)) over any [`Problem`] and
+//! any activation strategy, with delay-model time accounting.
+
+use super::{consensus_distance, mean_iterate, Compression, Problem};
+use crate::delay::{DelayModel, VirtualClock};
+use crate::graph::Graph;
+use crate::metrics::Recorder;
+use crate::rng::Rng;
+use crate::topology::TopologySampler;
+
+/// Configuration for one simulated training run.
+pub struct RunConfig {
+    /// Learning rate η.
+    pub lr: f64,
+    /// Optional step-decay: multiply lr by `decay` every `decay_every`
+    /// iterations (paper's experiments decay at fixed epochs).
+    pub lr_decay: f64,
+    pub lr_decay_every: usize,
+    /// Total iterations K.
+    pub iterations: usize,
+    /// Record metrics every `record_every` iterations.
+    pub record_every: usize,
+    /// Mixing weight α.
+    pub alpha: f64,
+    /// Computation time per iteration in delay units.
+    pub compute_units: f64,
+    /// Delay model for communication time.
+    pub delay: DelayModel,
+    /// Optional gossip-message compression (paper §1: complementary to
+    /// MATCHA). Applied to the per-edge difference messages.
+    pub compression: Option<Compression>,
+    /// Handshake-latency floor for the compression time factor.
+    pub latency_floor: f64,
+    /// Seed for gradient noise / batch sampling.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            lr: 0.05,
+            lr_decay: 1.0,
+            lr_decay_every: usize::MAX,
+            iterations: 1000,
+            record_every: 10,
+            alpha: 0.5,
+            compute_units: 1.0,
+            delay: DelayModel::UnitPerMatching,
+            compression: None,
+            latency_floor: 0.05,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a run: metric series plus summary statistics.
+pub struct RunResult {
+    pub metrics: Recorder,
+    /// Final averaged iterate x̄.
+    pub final_mean: Vec<f64>,
+    /// Total virtual time elapsed.
+    pub total_time: f64,
+    /// Total communication units spent.
+    pub total_comm_units: f64,
+}
+
+/// Run decentralized SGD: per iteration each worker takes a local
+/// stochastic gradient step, then the activated topology mixes the
+/// iterates: `X ← W⁽ᵏ⁾ [X − η G]` with `W⁽ᵏ⁾ = I − α Σ_{j∈activated} L_j`.
+///
+/// The mix is applied edge-wise from the *pre-mix* state (a simultaneous
+/// gossip step, not sequential pairwise averaging), which is exactly the
+/// matrix product and costs `O(d · |activated edges|)`.
+pub fn run_decentralized<P: Problem, S: TopologySampler>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    config: &RunConfig,
+) -> RunResult {
+    let m = problem.num_workers();
+    let d = problem.dim();
+    let mut rng = Rng::new(config.seed);
+    // All workers start at the same point (Theorem 1's initialization).
+    let x0: Vec<f64> = (0..d).map(|_| 0.01 * rng.normal()).collect();
+    let mut xs: Vec<Vec<f64>> = vec![x0; m];
+    let mut grad = vec![0.0; d];
+    let mut deltas: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+
+    let mut clock = VirtualClock::new(config.compute_units);
+    let mut metrics = Recorder::new();
+    let mut total_comm = 0.0;
+    let mut lr = config.lr;
+    let mut delay_rng = Rng::new(config.seed ^ 0xdead_beef);
+
+    let record = |k: usize,
+                      time: f64,
+                      comm: f64,
+                      xs: &[Vec<f64>],
+                      metrics: &mut Recorder| {
+        let mean = mean_iterate(xs);
+        let loss = problem.global_loss(&mean);
+        metrics.push("loss_vs_iter", k as f64, loss);
+        metrics.push("loss_vs_time", time, loss);
+        metrics.push("consensus_vs_iter", k as f64, consensus_distance(xs));
+        metrics.push("comm_units_vs_iter", k as f64, comm);
+        let mut g = vec![0.0; xs[0].len()];
+        problem.global_grad(&mean, &mut g);
+        let gn2: f64 = g.iter().map(|v| v * v).sum();
+        metrics.push("gradnorm2_vs_iter", k as f64, gn2);
+        if let Some(fstar) = problem.optimal_value() {
+            metrics.push("subopt_vs_iter", k as f64, loss - fstar);
+            metrics.push("subopt_vs_time", time, loss - fstar);
+        }
+        if let Some(acc) = problem.test_metric(&mean) {
+            metrics.push("test_acc_vs_iter", k as f64, acc);
+            metrics.push("test_acc_vs_time", time, acc);
+        }
+    };
+
+    record(0, 0.0, 0.0, &xs, &mut metrics);
+
+    for k in 0..config.iterations {
+        // --- local SGD step on every worker -------------------------
+        for (w, x) in xs.iter_mut().enumerate() {
+            problem.stoch_grad(w, x, &mut rng, &mut grad);
+            for (xi, &gi) in x.iter_mut().zip(&grad) {
+                *xi -= lr * gi;
+            }
+        }
+
+        // --- consensus over the activated topology ------------------
+        let round = sampler.round(k);
+        if !round.activated.is_empty() {
+            for dv in deltas.iter_mut() {
+                dv.iter_mut().for_each(|v| *v = 0.0);
+            }
+            let mut diff_buf = vec![0.0; d];
+            for &j in &round.activated {
+                for &(u, v) in matchings[j].edges() {
+                    match &config.compression {
+                        None => {
+                            for i in 0..d {
+                                let diff = xs[v][i] - xs[u][i];
+                                deltas[u][i] += diff;
+                                deltas[v][i] -= diff;
+                            }
+                        }
+                        Some(comp) => {
+                            // Compress the antisymmetric difference message;
+                            // applying ±C(d) keeps the worker mean exact.
+                            for i in 0..d {
+                                diff_buf[i] = xs[v][i] - xs[u][i];
+                            }
+                            comp.compress(&mut diff_buf, &mut delay_rng);
+                            for i in 0..d {
+                                deltas[u][i] += diff_buf[i];
+                                deltas[v][i] -= diff_buf[i];
+                            }
+                        }
+                    }
+                }
+            }
+            for (x, dv) in xs.iter_mut().zip(&deltas) {
+                for (xi, &di) in x.iter_mut().zip(dv) {
+                    *xi += config.alpha * di;
+                }
+            }
+        }
+
+        // --- time accounting ----------------------------------------
+        let mut comm_t = config.delay.comm_time(matchings, &round.activated, &mut delay_rng);
+        if let Some(comp) = &config.compression {
+            comm_t *= comp.time_factor(config.latency_floor);
+        }
+        total_comm += comm_t;
+        let now = clock.tick(comm_t);
+
+        // --- lr schedule & recording --------------------------------
+        if (k + 1) % config.lr_decay_every == 0 {
+            lr *= config.lr_decay;
+        }
+        if (k + 1) % config.record_every == 0 || k + 1 == config.iterations {
+            record(k + 1, now, total_comm, &xs, &mut metrics);
+        }
+    }
+
+    RunResult {
+        final_mean: mean_iterate(&xs),
+        total_time: clock.elapsed(),
+        total_comm_units: total_comm,
+        metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::optimize_activation_probabilities;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+    use crate::mixing::{optimize_alpha, vanilla_design};
+    use crate::sim::QuadraticProblem;
+    use crate::topology::{MatchaSampler, VanillaSampler};
+
+    fn quad() -> QuadraticProblem {
+        let mut rng = Rng::new(99);
+        QuadraticProblem::generate(8, 10, 1.0, 0.1, &mut rng)
+    }
+
+    #[test]
+    fn vanilla_decen_sgd_converges_on_quadratic() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let design = vanilla_design(&g.laplacian());
+        let mut sampler = VanillaSampler::new(d.len());
+        let p = quad();
+        let cfg = RunConfig {
+            lr: 0.02,
+            iterations: 800,
+            alpha: design.alpha,
+            ..RunConfig::default()
+        };
+        let res = run_decentralized(&p, &d.matchings, &mut sampler, &cfg);
+        let sub0 = res.metrics.get("subopt_vs_iter")[0].y;
+        let subf = res.metrics.last("subopt_vs_iter").unwrap();
+        assert!(
+            subf < 0.05 * sub0,
+            "no convergence: suboptimality {sub0} -> {subf}"
+        );
+    }
+
+    #[test]
+    fn matcha_converges_and_spends_less_comm() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.4);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        let p = quad();
+
+        let cfg = |alpha: f64| RunConfig {
+            lr: 0.02,
+            iterations: 800,
+            alpha,
+            ..RunConfig::default()
+        };
+
+        let design = vanilla_design(&g.laplacian());
+        let mut vs = VanillaSampler::new(d.len());
+        let vres = run_decentralized(&p, &d.matchings, &mut vs, &cfg(design.alpha));
+
+        let mut ms = MatchaSampler::new(probs.probabilities.clone(), 7);
+        let mres = run_decentralized(&p, &d.matchings, &mut ms, &cfg(mix.alpha));
+
+        // Both reach low suboptimality...
+        let vsub = vres.metrics.last("subopt_vs_iter").unwrap();
+        let msub = mres.metrics.last("subopt_vs_iter").unwrap();
+        assert!(vsub < 0.1 && msub < 0.1, "vanilla {vsub}, matcha {msub}");
+        // ...but MATCHA uses roughly 40% of the communication.
+        let ratio = mres.total_comm_units / vres.total_comm_units;
+        assert!(
+            (ratio - 0.4).abs() < 0.08,
+            "comm ratio {ratio}, expected ≈ 0.4"
+        );
+        // And therefore finishes sooner in virtual time.
+        assert!(mres.total_time < vres.total_time);
+    }
+
+    #[test]
+    fn consensus_distance_shrinks() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.5);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        let p = quad();
+        let mut ms = MatchaSampler::new(probs.probabilities, 11);
+        let cfg = RunConfig {
+            lr: 0.02,
+            lr_decay: 0.5,
+            lr_decay_every: 200,
+            iterations: 600,
+            alpha: mix.alpha,
+            ..RunConfig::default()
+        };
+        let res = run_decentralized(&p, &d.matchings, &mut ms, &cfg);
+        let series = res.metrics.get("consensus_vs_iter");
+        let early: f64 = series[1..4].iter().map(|s| s.y).sum::<f64>() / 3.0;
+        let late: f64 = series[series.len() - 3..].iter().map(|s| s.y).sum::<f64>() / 3.0;
+        assert!(
+            late < early,
+            "consensus distance grew: early {early} late {late}"
+        );
+    }
+
+    #[test]
+    fn edgewise_mix_equals_matrix_mix() {
+        // The edge-wise delta application must equal X ← WX exactly.
+        use crate::linalg::Mat;
+        use crate::topology::mixing_matrix;
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let laps = d.laplacians();
+        let alpha = 0.23;
+        let activated = vec![0, 2];
+        let m = 8;
+        let dim = 5;
+        let mut rng = Rng::new(321);
+        let xs: Vec<Vec<f64>> = (0..m)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+
+        // Edge-wise (as in run_decentralized).
+        let mut deltas = vec![vec![0.0; dim]; m];
+        for &j in &activated {
+            for &(u, v) in d.matchings[j].edges() {
+                for i in 0..dim {
+                    let diff = xs[v][i] - xs[u][i];
+                    deltas[u][i] += diff;
+                    deltas[v][i] -= diff;
+                }
+            }
+        }
+        let mut edgewise = xs.clone();
+        for (x, dv) in edgewise.iter_mut().zip(&deltas) {
+            for (xi, &di) in x.iter_mut().zip(dv) {
+                *xi += alpha * di;
+            }
+        }
+
+        // Matrix: W (m×m) times X (m×dim).
+        let w = mixing_matrix(&laps, &activated, alpha);
+        let mut xmat = Mat::zeros(m, dim);
+        for (r, x) in xs.iter().enumerate() {
+            for (c, &v) in x.iter().enumerate() {
+                xmat.set(r, c, v);
+            }
+        }
+        let mixed = w.matmul(&xmat);
+        for r in 0..m {
+            for c in 0..dim {
+                assert!(
+                    (mixed.get(r, c) - edgewise[r][c]).abs() < 1e-12,
+                    "mismatch at ({r},{c})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Random topology sequence generation (Step 3 of MATCHA) and the
+//! benchmark activation strategies.
+//!
+//! A [`TopologySampler`] produces, per iteration, the set of activated
+//! matchings and the corresponding mixing matrix `W⁽ᵏ⁾ = I − α Σ B_j L_j`.
+//! The paper emphasizes that the whole sequence can be generated
+//! **apriori** — [`Schedule`] materializes it up front, can be serialized
+//! to JSON, and is what the training coordinator executes (zero runtime
+//! scheduling overhead, exactly as claimed in §1).
+
+mod sampler;
+mod schedule;
+
+pub use sampler::*;
+pub use schedule::*;
+
+use crate::linalg::Mat;
+
+/// One iteration's communication plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Round {
+    /// Indices of activated matchings (into the decomposition).
+    pub activated: Vec<usize>,
+}
+
+impl Round {
+    /// Number of sequential matching communications this round costs
+    /// under the unit-delay model.
+    pub fn comm_units(&self) -> usize {
+        self.activated.len()
+    }
+}
+
+/// Build the mixing matrix `W = I − α Σ_{j∈activated} L_j`.
+pub fn mixing_matrix(laplacians: &[Mat], activated: &[usize], alpha: f64) -> Mat {
+    assert!(!laplacians.is_empty());
+    let n = laplacians[0].rows();
+    let mut w = Mat::eye(n);
+    for &j in activated {
+        w.axpy(-alpha, &laplacians[j]);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+
+    #[test]
+    fn mixing_matrix_identity_when_nothing_activated() {
+        let d = decompose(&paper_figure1_graph());
+        let w = mixing_matrix(&d.laplacians(), &[], 0.3);
+        assert!(w.max_abs_diff(&Mat::eye(8)) < 1e-12);
+    }
+
+    #[test]
+    fn mixing_matrix_doubly_stochastic_any_subset() {
+        let d = decompose(&paper_figure1_graph());
+        let laps = d.laplacians();
+        for subset in [vec![0], vec![0, 1], (0..d.len()).collect::<Vec<_>>()] {
+            let w = mixing_matrix(&laps, &subset, 0.2);
+            assert!(w.is_doubly_stochastic(1e-9));
+            assert!(w.is_symmetric(1e-9));
+        }
+    }
+}

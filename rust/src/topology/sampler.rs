@@ -1,0 +1,363 @@
+//! Activation strategies: MATCHA's independent Bernoulli sampling plus
+//! the paper's comparators (vanilla, periodic, single-matching).
+
+use super::Round;
+use crate::rng::Rng;
+
+/// A strategy that decides, per iteration, which matchings communicate.
+pub trait TopologySampler {
+    /// Activated matchings for iteration `k` (0-based).
+    fn round(&mut self, k: usize) -> Round;
+    /// Expected communication units per iteration (Σ over matchings of
+    /// the long-run activation frequency).
+    fn expected_comm_units(&self) -> f64;
+    /// Human-readable strategy name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+impl TopologySampler for Box<dyn TopologySampler> {
+    fn round(&mut self, k: usize) -> Round {
+        (**self).round(k)
+    }
+
+    fn expected_comm_units(&self) -> f64 {
+        (**self).expected_comm_units()
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// MATCHA: matching `j` activates i.i.d. Bernoulli(p_j) each iteration
+/// (paper Step 2/3).
+pub struct MatchaSampler {
+    probs: Vec<f64>,
+    rng: Rng,
+}
+
+impl MatchaSampler {
+    pub fn new(probs: Vec<f64>, seed: u64) -> Self {
+        for &p in &probs {
+            assert!((0.0..=1.0).contains(&p), "probability {p} out of range");
+        }
+        MatchaSampler { probs, rng: Rng::new(seed) }
+    }
+}
+
+impl TopologySampler for MatchaSampler {
+    fn round(&mut self, _k: usize) -> Round {
+        let mut activated = Vec::new();
+        for (j, &p) in self.probs.iter().enumerate() {
+            if self.rng.bernoulli(p) {
+                activated.push(j);
+            }
+        }
+        Round { activated }
+    }
+
+    fn expected_comm_units(&self) -> f64 {
+        self.probs.iter().sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "matcha"
+    }
+}
+
+/// Adaptive-budget MATCHA (the paper's §6 future direction, after its
+/// ref [34]): the communication budget — and therefore the optimized
+/// activation probabilities — changes across training phases (e.g. spend
+/// more budget early while consensus matters most, decay later).
+///
+/// Phases are `(start_iteration, probabilities)` with strictly increasing
+/// starts; iteration `k` uses the last phase with `start ≤ k`.
+pub struct AdaptiveMatchaSampler {
+    phases: Vec<(usize, Vec<f64>)>,
+    rng: Rng,
+}
+
+impl AdaptiveMatchaSampler {
+    pub fn new(phases: Vec<(usize, Vec<f64>)>, seed: u64) -> Self {
+        assert!(!phases.is_empty(), "need at least one phase");
+        assert_eq!(phases[0].0, 0, "first phase must start at iteration 0");
+        for w in phases.windows(2) {
+            assert!(w[0].0 < w[1].0, "phase starts must increase");
+            assert_eq!(w[0].1.len(), w[1].1.len(), "phase prob lengths differ");
+        }
+        for (_, probs) in &phases {
+            for &p in probs {
+                assert!((0.0..=1.0).contains(&p));
+            }
+        }
+        AdaptiveMatchaSampler { phases, rng: Rng::new(seed) }
+    }
+
+    /// Build from a budget schedule `(start_iter, cb)` by solving problem
+    /// (4) per phase. Returns the sampler and a single conservative
+    /// mixing weight: the minimum of the per-phase optimal α's (each
+    /// phase's ρ(α) is convex with ρ < 1 on (0, 2α*_phase), and
+    /// min_phase α* lies in that interval for every phase, so ρ < 1 holds
+    /// throughout training).
+    pub fn from_budget_schedule(
+        decomp: &crate::matching::MatchingDecomposition,
+        schedule: &[(usize, f64)],
+        seed: u64,
+    ) -> (Self, f64) {
+        use crate::budget::optimize_activation_probabilities;
+        use crate::mixing::optimize_alpha;
+        assert!(!schedule.is_empty());
+        let mut phases = Vec::with_capacity(schedule.len());
+        let mut alpha = f64::INFINITY;
+        for &(start, cb) in schedule {
+            let probs = optimize_activation_probabilities(decomp, cb);
+            let mix = optimize_alpha(decomp, &probs.probabilities);
+            alpha = alpha.min(mix.alpha);
+            phases.push((start, probs.probabilities));
+        }
+        (Self::new(phases, seed), alpha)
+    }
+
+    fn probs_at(&self, k: usize) -> &[f64] {
+        let idx = self
+            .phases
+            .iter()
+            .rposition(|&(start, _)| start <= k)
+            .expect("first phase starts at 0");
+        &self.phases[idx].1
+    }
+}
+
+impl TopologySampler for AdaptiveMatchaSampler {
+    fn round(&mut self, k: usize) -> Round {
+        let mut activated = Vec::new();
+        // Borrow-split: copy the phase probabilities cheaply (M is tiny).
+        let probs: Vec<f64> = self.probs_at(k).to_vec();
+        for (j, &p) in probs.iter().enumerate() {
+            if self.rng.bernoulli(p) {
+                activated.push(j);
+            }
+        }
+        Round { activated }
+    }
+
+    fn expected_comm_units(&self) -> f64 {
+        // Long-run expectation is phase-dependent; report the final phase.
+        self.phases.last().unwrap().1.iter().sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive-matcha"
+    }
+}
+
+/// Vanilla DecenSGD: every matching, every iteration.
+pub struct VanillaSampler {
+    m: usize,
+}
+
+impl VanillaSampler {
+    pub fn new(num_matchings: usize) -> Self {
+        VanillaSampler { m: num_matchings }
+    }
+}
+
+impl TopologySampler for VanillaSampler {
+    fn round(&mut self, _k: usize) -> Round {
+        Round { activated: (0..self.m).collect() }
+    }
+
+    fn expected_comm_units(&self) -> f64 {
+        self.m as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "vanilla"
+    }
+}
+
+/// Periodic DecenSGD (P-DecenSGD, paper §3): the *whole* base topology is
+/// activated every `period` iterations, nothing in between. At period
+/// `⌈1/CB⌉` its budget matches MATCHA's CB.
+pub struct PeriodicSampler {
+    m: usize,
+    period: usize,
+}
+
+impl PeriodicSampler {
+    pub fn new(num_matchings: usize, period: usize) -> Self {
+        assert!(period >= 1);
+        PeriodicSampler { m: num_matchings, period }
+    }
+
+    /// Construct from a communication budget: period = round(1/CB).
+    pub fn from_budget(num_matchings: usize, cb: f64) -> Self {
+        assert!(cb > 0.0 && cb <= 1.0);
+        let period = (1.0 / cb).round().max(1.0) as usize;
+        Self::new(num_matchings, period)
+    }
+}
+
+impl TopologySampler for PeriodicSampler {
+    fn round(&mut self, k: usize) -> Round {
+        if (k + 1) % self.period == 0 {
+            Round { activated: (0..self.m).collect() }
+        } else {
+            Round { activated: vec![] }
+        }
+    }
+
+    fn expected_comm_units(&self) -> f64 {
+        self.m as f64 / self.period as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "periodic"
+    }
+}
+
+/// Single-matching variant (paper §3 "Extension to Other Design
+/// Choices"): exactly one matching per iteration, drawn with probability
+/// proportional to the activation probabilities.
+pub struct SingleMatchingSampler {
+    weights: Vec<f64>,
+    rng: Rng,
+}
+
+impl SingleMatchingSampler {
+    pub fn new(weights: Vec<f64>, seed: u64) -> Self {
+        assert!(weights.iter().any(|&w| w > 0.0), "need a positive weight");
+        SingleMatchingSampler { weights, rng: Rng::new(seed) }
+    }
+}
+
+impl TopologySampler for SingleMatchingSampler {
+    fn round(&mut self, _k: usize) -> Round {
+        let j = self.rng.weighted_choice(&self.weights);
+        Round { activated: vec![j] }
+    }
+
+    fn expected_comm_units(&self) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "single-matching"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matcha_activation_frequencies_match_probs() {
+        let probs = vec![0.9, 0.5, 0.1];
+        let mut s = MatchaSampler::new(probs.clone(), 42);
+        let iters = 20_000;
+        let mut counts = vec![0usize; 3];
+        for k in 0..iters {
+            for j in s.round(k).activated {
+                counts[j] += 1;
+            }
+        }
+        for j in 0..3 {
+            let freq = counts[j] as f64 / iters as f64;
+            assert!(
+                (freq - probs[j]).abs() < 0.02,
+                "matching {j}: freq {freq} vs p {}",
+                probs[j]
+            );
+        }
+    }
+
+    #[test]
+    fn matcha_is_deterministic_per_seed() {
+        let mut a = MatchaSampler::new(vec![0.5, 0.5], 7);
+        let mut b = MatchaSampler::new(vec![0.5, 0.5], 7);
+        for k in 0..100 {
+            assert_eq!(a.round(k), b.round(k));
+        }
+    }
+
+    #[test]
+    fn adaptive_switches_phases() {
+        let mut s = AdaptiveMatchaSampler::new(
+            vec![(0, vec![1.0, 1.0]), (100, vec![0.0, 1.0]), (200, vec![0.0, 0.0])],
+            5,
+        );
+        for k in 0..100 {
+            assert_eq!(s.round(k).activated, vec![0, 1], "k={k}");
+        }
+        for k in 100..200 {
+            assert_eq!(s.round(k).activated, vec![1], "k={k}");
+        }
+        for k in 200..250 {
+            assert!(s.round(k).activated.is_empty(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn adaptive_from_budget_schedule_is_feasible() {
+        use crate::graph::paper_figure1_graph;
+        use crate::matching::decompose;
+        let d = decompose(&paper_figure1_graph());
+        let (s, alpha) =
+            AdaptiveMatchaSampler::from_budget_schedule(&d, &[(0, 0.8), (500, 0.2)], 3);
+        assert!(alpha > 0.0);
+        assert_eq!(s.phases.len(), 2);
+        // Early phase spends more than late phase.
+        let early: f64 = s.phases[0].1.iter().sum();
+        let late: f64 = s.phases[1].1.iter().sum();
+        assert!(early > late);
+    }
+
+    #[test]
+    #[should_panic(expected = "phase starts must increase")]
+    fn adaptive_rejects_bad_phase_order() {
+        AdaptiveMatchaSampler::new(vec![(0, vec![0.5]), (0, vec![0.5])], 1);
+    }
+
+    #[test]
+    fn vanilla_always_everything() {
+        let mut s = VanillaSampler::new(4);
+        for k in 0..10 {
+            assert_eq!(s.round(k).activated, vec![0, 1, 2, 3]);
+        }
+        assert_eq!(s.expected_comm_units(), 4.0);
+    }
+
+    #[test]
+    fn periodic_fires_on_schedule() {
+        let mut s = PeriodicSampler::new(3, 4);
+        let fired: Vec<bool> = (0..12).map(|k| !s.round(k).activated.is_empty()).collect();
+        // Fires at k = 3, 7, 11 (every 4th iteration).
+        assert_eq!(
+            fired,
+            vec![false, false, false, true, false, false, false, true, false, false, false, true]
+        );
+        assert!((s.expected_comm_units() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn periodic_from_budget() {
+        let s = PeriodicSampler::from_budget(5, 0.25);
+        assert_eq!(s.period, 4);
+        let s2 = PeriodicSampler::from_budget(5, 1.0);
+        assert_eq!(s2.period, 1);
+    }
+
+    #[test]
+    fn single_matching_draws_one() {
+        let mut s = SingleMatchingSampler::new(vec![1.0, 2.0, 1.0], 3);
+        let mut counts = vec![0usize; 3];
+        for k in 0..8000 {
+            let r = s.round(k);
+            assert_eq!(r.activated.len(), 1);
+            counts[r.activated[0]] += 1;
+        }
+        // Middle matching should be drawn ~2x as often.
+        let ratio = counts[1] as f64 / (counts[0] + counts[2]) as f64;
+        assert!((ratio - 1.0).abs() < 0.15, "ratio {ratio}");
+    }
+}

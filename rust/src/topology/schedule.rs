@@ -1,0 +1,172 @@
+//! Apriori communication schedules.
+//!
+//! The paper (§1, §3): "the communication schedule (i.e., the sequence of
+//! sparse subgraphs) of MATCHA can be obtained apriori. There is no
+//! additional runtime overhead during training." A [`Schedule`] is that
+//! pregenerated sequence plus the mixing weight α; it can be saved to /
+//! loaded from JSON so leaders can distribute it to workers before
+//! training starts.
+
+use super::{Round, TopologySampler};
+use crate::json::Json;
+
+/// A materialized communication schedule: `rounds[k]` lists the matchings
+/// activated at iteration `k`; `alpha` is the mixing weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    pub alpha: f64,
+    pub num_matchings: usize,
+    pub rounds: Vec<Round>,
+}
+
+impl Schedule {
+    /// Generate `steps` rounds from a sampler.
+    pub fn generate<S: TopologySampler>(
+        sampler: &mut S,
+        alpha: f64,
+        num_matchings: usize,
+        steps: usize,
+    ) -> Schedule {
+        let rounds = (0..steps).map(|k| sampler.round(k)).collect();
+        Schedule { alpha, num_matchings, rounds }
+    }
+
+    /// Total communication units over the whole schedule (unit-delay
+    /// model: one unit per activated matching).
+    pub fn total_comm_units(&self) -> usize {
+        self.rounds.iter().map(|r| r.comm_units()).sum()
+    }
+
+    /// Average communication units per iteration.
+    pub fn mean_comm_units(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.total_comm_units() as f64 / self.rounds.len() as f64
+    }
+
+    /// Empirical activation frequency of each matching.
+    pub fn activation_frequencies(&self) -> Vec<f64> {
+        let mut counts = vec![0usize; self.num_matchings];
+        for r in &self.rounds {
+            for &j in &r.activated {
+                counts[j] += 1;
+            }
+        }
+        counts
+            .into_iter()
+            .map(|c| c as f64 / self.rounds.len().max(1) as f64)
+            .collect()
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("alpha", Json::Num(self.alpha)),
+            ("num_matchings", Json::Num(self.num_matchings as f64)),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(
+                                r.activated.iter().map(|&j| Json::Num(j as f64)).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse from JSON produced by [`Schedule::to_json`].
+    pub fn from_json(j: &Json) -> Result<Schedule, String> {
+        let alpha = j
+            .get("alpha")
+            .and_then(Json::as_f64)
+            .ok_or("schedule: missing 'alpha'")?;
+        let num_matchings = j
+            .get("num_matchings")
+            .and_then(Json::as_usize)
+            .ok_or("schedule: missing 'num_matchings'")?;
+        let rounds_json = j
+            .get("rounds")
+            .and_then(Json::as_array)
+            .ok_or("schedule: missing 'rounds'")?;
+        let mut rounds = Vec::with_capacity(rounds_json.len());
+        for (k, r) in rounds_json.iter().enumerate() {
+            let ids = r
+                .as_array()
+                .ok_or_else(|| format!("schedule: round {k} not an array"))?;
+            let mut activated = Vec::with_capacity(ids.len());
+            for id in ids {
+                let j = id
+                    .as_usize()
+                    .ok_or_else(|| format!("schedule: bad matching id in round {k}"))?;
+                if j >= num_matchings {
+                    return Err(format!("schedule: matching id {j} out of range"));
+                }
+                activated.push(j);
+            }
+            rounds.push(Round { activated });
+        }
+        Ok(Schedule { alpha, num_matchings, rounds })
+    }
+
+    /// Save to a file as JSON.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &std::path::Path) -> Result<Schedule, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Schedule::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{MatchaSampler, PeriodicSampler};
+
+    #[test]
+    fn generate_and_stats() {
+        let mut s = MatchaSampler::new(vec![1.0, 0.0, 0.5], 9);
+        let sched = Schedule::generate(&mut s, 0.3, 3, 2000);
+        let freqs = sched.activation_frequencies();
+        assert!((freqs[0] - 1.0).abs() < 1e-12);
+        assert!(freqs[1].abs() < 1e-12);
+        assert!((freqs[2] - 0.5).abs() < 0.05);
+        assert!((sched.mean_comm_units() - 1.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut s = PeriodicSampler::new(4, 3);
+        let sched = Schedule::generate(&mut s, 0.21, 4, 10);
+        let j = sched.to_json();
+        let back = Schedule::from_json(&j).unwrap();
+        assert_eq!(back, sched);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut s = MatchaSampler::new(vec![0.7, 0.3], 1);
+        let sched = Schedule::generate(&mut s, 0.4, 2, 25);
+        let dir = std::env::temp_dir().join("matcha_schedule_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sched.json");
+        sched.save(&path).unwrap();
+        let back = Schedule::load(&path).unwrap();
+        assert_eq!(back, sched);
+    }
+
+    #[test]
+    fn from_json_rejects_out_of_range_ids() {
+        let j = Json::parse(r#"{"alpha":0.1,"num_matchings":2,"rounds":[[0,5]]}"#).unwrap();
+        assert!(Schedule::from_json(&j).is_err());
+    }
+}

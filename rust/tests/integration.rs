@@ -1,0 +1,425 @@
+//! Cross-module integration tests: the full MATCHA pipeline over a zoo of
+//! topologies, schedule persistence, the CLI surface, and (when `make
+//! artifacts` has run) the XLA runtime path.
+
+use matcha::budget::optimize_activation_probabilities;
+use matcha::coordinator::{plan_matcha, plan_periodic, plan_vanilla};
+use matcha::graph::{self, algebraic_connectivity, Graph};
+use matcha::matching::decompose;
+use matcha::mixing::{optimize_alpha, rho_monte_carlo, vanilla_design};
+use matcha::proptest::{check, PropConfig};
+use matcha::rng::Rng;
+use matcha::sim::{run_decentralized, QuadraticProblem, RunConfig};
+use matcha::topology::{MatchaSampler, Schedule, TopologySampler, VanillaSampler};
+
+/// The generator zoo used by several tests.
+fn zoo() -> Vec<(String, Graph)> {
+    let mut rng = Rng::new(1);
+    vec![
+        ("fig1".into(), graph::paper_figure1_graph()),
+        ("ring8".into(), graph::ring(8)),
+        ("ring9".into(), graph::ring(9)),
+        ("star7".into(), graph::star(7)),
+        ("complete6".into(), graph::complete(6)),
+        ("grid3x4".into(), graph::grid(3, 4)),
+        ("geom16".into(), graph::geometric_connected(16, 0.5, &mut rng)),
+        ("er12".into(), graph::erdos_renyi_connected(12, 0.4, &mut rng)),
+    ]
+}
+
+#[test]
+fn full_pipeline_invariants_across_topology_zoo() {
+    for (name, g) in zoo() {
+        let d = decompose(&g);
+        d.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            d.len() <= g.max_degree() + 1,
+            "{name}: Vizing bound violated (M={} Δ={})",
+            d.len(),
+            g.max_degree()
+        );
+        for cb in [0.15, 0.5, 1.0] {
+            let probs = optimize_activation_probabilities(&d, cb);
+            // Budget respected.
+            let total: f64 = probs.probabilities.iter().sum();
+            assert!(total <= cb * d.len() as f64 + 1e-6, "{name} cb={cb}");
+            // Theorem 2 end to end: connected expectation, ρ < 1.
+            assert!(probs.lambda2 > 1e-8, "{name} cb={cb}: disconnected expectation");
+            let mix = optimize_alpha(&d, &probs.probabilities);
+            assert!(mix.rho < 1.0, "{name} cb={cb}: ρ = {}", mix.rho);
+            assert!(mix.alpha > 0.0 && mix.alpha.is_finite());
+        }
+    }
+}
+
+#[test]
+fn property_random_graphs_pipeline() {
+    // Property test: random connected ER graphs × random budgets keep all
+    // pipeline invariants.
+    check(
+        PropConfig { cases: 40, seed: 0xbeef },
+        |rng| {
+            let m = 4 + rng.below(10);
+            let g = graph::erdos_renyi_connected(m, 0.5, rng);
+            let cb = rng.uniform_in(0.1, 1.0);
+            (g, cb)
+        },
+        |(g, cb)| {
+            let d = decompose(g);
+            d.validate()?;
+            let probs = optimize_activation_probabilities(&d, *cb);
+            let mix = optimize_alpha(&d, &probs.probabilities);
+            if mix.rho >= 1.0 {
+                return Err(format!("rho {} >= 1", mix.rho));
+            }
+            if probs.lambda2 <= 0.0 {
+                return Err("lambda2 <= 0".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn monte_carlo_validates_rho_formula_on_random_graph() {
+    let mut rng = Rng::new(42);
+    let g = graph::erdos_renyi_connected(10, 0.45, &mut rng);
+    let d = decompose(&g);
+    let probs = optimize_activation_probabilities(&d, 0.35);
+    let mix = optimize_alpha(&d, &probs.probabilities);
+    let mc = rho_monte_carlo(&d, &probs.probabilities, mix.alpha, 15_000, &mut rng);
+    assert!(
+        (mc - mix.rho).abs() < 0.03,
+        "closed-form ρ {} vs Monte-Carlo {mc}",
+        mix.rho
+    );
+}
+
+#[test]
+fn plans_share_decomposition_and_disagree_on_schedules() {
+    let g = graph::paper_figure1_graph();
+    let steps = 200;
+    let pm = plan_matcha(&g, 0.3, steps, 3);
+    let pv = plan_vanilla(&g, steps);
+    let pp = plan_periodic(&g, 0.3, steps);
+    assert_eq!(pm.decomposition.len(), pv.decomposition.len());
+    // Budgets: matcha ≈ periodic ≈ 0.3 × vanilla.
+    let (cm, cv, cp) = (
+        pm.schedule.mean_comm_units(),
+        pv.schedule.mean_comm_units(),
+        pp.schedule.mean_comm_units(),
+    );
+    assert!((cm / cv - 0.3).abs() < 0.1, "matcha {cm} vs vanilla {cv}");
+    assert!((cp / cv - 0.3).abs() < 0.1, "periodic {cp} vs vanilla {cv}");
+    // Vanilla's rho is the worst of the three here? Not necessarily — but
+    // all must be < 1 and matcha ≤ periodic (Fig 3).
+    assert!(pm.rho < 1.0 && pv.rho < 1.0 && pp.rho < 1.0);
+    assert!(pm.rho <= pp.rho + 1e-9);
+}
+
+#[test]
+fn schedule_persistence_roundtrip_through_file() {
+    let g = graph::paper_figure1_graph();
+    let plan = plan_matcha(&g, 0.5, 500, 9);
+    let dir = std::env::temp_dir().join("matcha_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("schedule.json");
+    plan.schedule.save(&path).unwrap();
+    let loaded = Schedule::load(&path).unwrap();
+    assert_eq!(loaded, plan.schedule);
+    // Frequencies of the loaded schedule match the optimized probabilities.
+    let freqs = loaded.activation_frequencies();
+    for (f, p) in freqs.iter().zip(&plan.probabilities) {
+        assert!((f - p).abs() < 0.08, "freq {f} vs p {p}");
+    }
+}
+
+#[test]
+fn corollary1_error_decreases_with_more_iterations() {
+    // Run the same problem for K and 4K iterations with η ∝ 1/√K; the
+    // averaged gradient norm must improve (Corollary 1's rate).
+    let g = graph::paper_figure1_graph();
+    let d = decompose(&g);
+    let probs = optimize_activation_probabilities(&d, 0.5);
+    let mix = optimize_alpha(&d, &probs.probabilities);
+    let problem = {
+        let mut r = Rng::new(5);
+        QuadraticProblem::generate(8, 16, 1.0, 0.5, &mut r)
+    };
+    let run = |iters: usize| {
+        let mut s = MatchaSampler::new(probs.probabilities.clone(), 2);
+        let cfg = RunConfig {
+            lr: 0.3 / (iters as f64).sqrt(),
+            iterations: iters,
+            record_every: iters / 4,
+            alpha: mix.alpha,
+            seed: 8,
+            ..RunConfig::default()
+        };
+        let res = run_decentralized(&problem, &d.matchings, &mut s, &cfg);
+        res.metrics.last("gradnorm2_vs_iter").unwrap()
+    };
+    let short = run(400);
+    let long = run(1600);
+    assert!(
+        long < short,
+        "gradient norm should shrink with K: K=400 → {short}, K=1600 → {long}"
+    );
+}
+
+#[test]
+fn matcha_matches_vanilla_per_iteration_on_zoo_subset() {
+    // Fig 4 d–f in miniature, asserted across two very different graphs.
+    for (name, g) in [("fig1", graph::paper_figure1_graph()), ("ring8", graph::ring(8))] {
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.5);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        let van = vanilla_design(&g.laplacian());
+        let problem = {
+            let mut r = Rng::new(11);
+            QuadraticProblem::generate(g.num_nodes(), 12, 1.0, 0.3, &mut r)
+        };
+        let cfg = |alpha: f64| RunConfig {
+            lr: 0.03,
+            iterations: 600,
+            record_every: 100,
+            alpha,
+            seed: 21,
+            ..RunConfig::default()
+        };
+        let mut ms = MatchaSampler::new(probs.probabilities.clone(), 5);
+        let mres = run_decentralized(&problem, &d.matchings, &mut ms, &cfg(mix.alpha));
+        let mut vs = VanillaSampler::new(d.len());
+        let vres = run_decentralized(&problem, &d.matchings, &mut vs, &cfg(van.alpha));
+        let msub = mres.metrics.last("subopt_vs_iter").unwrap();
+        let vsub = vres.metrics.last("subopt_vs_iter").unwrap();
+        assert!(
+            msub < vsub.max(0.02) * 3.0,
+            "{name}: MATCHA subopt {msub} vs vanilla {vsub}"
+        );
+        assert!(mres.total_comm_units < 0.65 * vres.total_comm_units, "{name}");
+    }
+}
+
+#[test]
+fn compression_combo_converges_and_cuts_comm_time() {
+    // Paper §1: MATCHA is complementary to compression. Combined run must
+    // still converge while the bandwidth-bound comm time shrinks further.
+    use matcha::sim::Compression;
+    let g = graph::paper_figure1_graph();
+    let d = decompose(&g);
+    let probs = optimize_activation_probabilities(&d, 0.5);
+    let mix = optimize_alpha(&d, &probs.probabilities);
+    let problem = {
+        let mut r = Rng::new(61);
+        QuadraticProblem::generate(8, 16, 1.0, 0.2, &mut r)
+    };
+    let cfg = |compression: Option<Compression>| RunConfig {
+        lr: 0.02,
+        iterations: 900,
+        record_every: 100,
+        alpha: mix.alpha,
+        compression,
+        latency_floor: 0.05,
+        seed: 14,
+        ..RunConfig::default()
+    };
+    let mut s1 = MatchaSampler::new(probs.probabilities.clone(), 8);
+    let plain = run_decentralized(&problem, &d.matchings, &mut s1, &cfg(None));
+    let mut s2 = MatchaSampler::new(probs.probabilities.clone(), 8);
+    let compressed = run_decentralized(
+        &problem,
+        &d.matchings,
+        &mut s2,
+        &cfg(Some(Compression::TopK { frac: 0.25 })),
+    );
+    let ps = plain.metrics.last("subopt_vs_iter").unwrap();
+    let cs = compressed.metrics.last("subopt_vs_iter").unwrap();
+    assert!(ps < 0.05, "plain failed to converge: {ps}");
+    assert!(cs < 0.15, "compressed failed to converge: {cs}");
+    // Bandwidth-bound regime: comm time scaled by the payload ratio.
+    let ratio = compressed.total_comm_units / plain.total_comm_units;
+    assert!((ratio - 0.25).abs() < 0.02, "comm ratio {ratio}, expected 0.25");
+}
+
+#[test]
+fn adaptive_budget_schedule_converges() {
+    use matcha::topology::AdaptiveMatchaSampler;
+    let g = graph::paper_figure1_graph();
+    let d = decompose(&g);
+    let (mut sampler, alpha) =
+        AdaptiveMatchaSampler::from_budget_schedule(&d, &[(0, 0.8), (400, 0.15)], 4);
+    let problem = {
+        let mut r = Rng::new(71);
+        QuadraticProblem::generate(8, 16, 1.0, 0.2, &mut r)
+    };
+    let cfg = RunConfig {
+        lr: 0.02,
+        iterations: 800,
+        record_every: 100,
+        alpha,
+        seed: 9,
+        ..RunConfig::default()
+    };
+    let res = run_decentralized(&problem, &d.matchings, &mut sampler, &cfg);
+    assert!(res.metrics.last("subopt_vs_iter").unwrap() < 0.1);
+    // Back half must be cheaper than the front half (budget decayed).
+    let comm = res.metrics.get("comm_units_vs_iter");
+    let mid = comm[comm.len() / 2].y;
+    let end = comm.last().unwrap().y;
+    assert!(end - mid < mid, "late-phase comm {} vs early {}", end - mid, mid);
+}
+
+#[test]
+fn cli_surface_smoke() {
+    let sv = |items: &[&str]| -> Vec<String> { items.iter().map(|s| s.to_string()).collect() };
+    matcha::cli::run(&sv(&["decompose", "--graph", "grid:2x3"])).unwrap();
+    matcha::cli::run(&sv(&["probs", "--graph", "ring:6", "--budget", "0.4"])).unwrap();
+    matcha::cli::run(&sv(&["alpha", "--graph", "ring:6", "--budget", "0.4"])).unwrap();
+    matcha::cli::run(&sv(&["commtime", "--graph", "fig1", "--budget", "0.5"])).unwrap();
+    let out = std::env::temp_dir().join("matcha_cli_sched.json");
+    matcha::cli::run(&sv(&[
+        "schedule",
+        "--graph",
+        "fig1",
+        "--budget",
+        "0.5",
+        "--steps",
+        "50",
+        "--out",
+        out.to_str().unwrap(),
+    ]))
+    .unwrap();
+    assert!(out.exists());
+}
+
+// ---------------- artifact-gated runtime tests --------------------------
+
+fn artifacts_dir() -> Option<matcha::config::ArtifactPaths> {
+    let p = matcha::config::ArtifactPaths::new(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    );
+    if p.meta().exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping runtime test: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn runtime_mix_step_matches_rust_matmul() {
+    let Some(arts) = artifacts_dir() else { return };
+    let meta = matcha::config::ModelMeta::load(&arts.meta()).unwrap();
+    let rt = matcha::runtime::Runtime::cpu().unwrap();
+    let mix = rt.load_hlo(&arts.mix(false)).unwrap();
+
+    let m = meta.workers;
+    let d = meta.param_count;
+    let mut rng = Rng::new(4);
+    // Random doubly-stochastic-ish W (exact structure irrelevant for the
+    // numerical check) and random stacked params.
+    let g = graph::ring(m);
+    let design = vanilla_design(&g.laplacian());
+    let mut w = vec![0.0f32; m * m];
+    for i in 0..m {
+        w[i * m + i] = 1.0;
+    }
+    for &(u, v) in g.edges() {
+        w[u * m + u] -= design.alpha as f32;
+        w[v * m + v] -= design.alpha as f32;
+        w[u * m + v] += design.alpha as f32;
+        w[v * m + u] += design.alpha as f32;
+    }
+    let stacked: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32 * 0.1).collect();
+
+    let outs = mix
+        .run(&[
+            matcha::runtime::literal_f32(&w, &[m as i64, m as i64]).unwrap(),
+            matcha::runtime::literal_f32(&stacked, &[m as i64, d as i64]).unwrap(),
+        ])
+        .unwrap();
+    let got = matcha::runtime::to_vec_f32(&outs[0]).unwrap();
+
+    // Rust-side reference on a subsample of columns.
+    for col in (0..d).step_by(d / 97 + 1) {
+        for row in 0..m {
+            let mut expect = 0.0f64;
+            for k in 0..m {
+                expect += w[row * m + k] as f64 * stacked[k * d + col] as f64;
+            }
+            let gotv = got[row * d + col] as f64;
+            assert!(
+                (gotv - expect).abs() < 1e-4,
+                "mix mismatch at ({row},{col}): {gotv} vs {expect}"
+            );
+        }
+    }
+}
+
+#[test]
+fn runtime_train_step_learns_and_preserves_shapes() {
+    let Some(arts) = artifacts_dir() else { return };
+    let meta = matcha::config::ModelMeta::load(&arts.meta()).unwrap();
+    let rt = matcha::runtime::Runtime::cpu().unwrap();
+    let train = rt.load_hlo(&arts.train_step(false)).unwrap();
+
+    let d = meta.param_count;
+    let mut rng = Rng::new(9);
+    let mut flat = meta.init_params(&mut rng);
+    let corpus = matcha::data::Corpus::synthesize(1, 20_000, 100, false, 2);
+    let mut it =
+        matcha::data::BatchIter::new(&corpus.shards[0].tokens, meta.batch, meta.seq_len, 3);
+    let dims = [meta.batch as i64, meta.seq_len as i64];
+
+    let (xs, ys) = it.next_batch();
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    for step in 0..6 {
+        let outs = train
+            .run(&[
+                matcha::runtime::literal_f32(&flat, &[d as i64]).unwrap(),
+                matcha::runtime::literal_i32(&xs, &dims).unwrap(),
+                matcha::runtime::literal_i32(&ys, &dims).unwrap(),
+                matcha::runtime::literal_scalar_f32(0.5),
+            ])
+            .unwrap();
+        flat = matcha::runtime::to_vec_f32(&outs[0]).unwrap();
+        let loss = matcha::runtime::to_scalar_f32(&outs[1]).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(flat.len(), d);
+        if step == 0 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+    }
+    assert!(
+        last_loss < first_loss,
+        "repeated steps on one batch must overfit: {first_loss} -> {last_loss}"
+    );
+}
+
+#[test]
+fn lambda2_monotone_under_budget_on_zoo() {
+    // Paper-implied sanity bound: λ₂ of the optimized expectation never
+    // exceeds the base graph's λ₂ and is at least CB·λ₂ (achieved by the
+    // uniform allocation p_j = CB, Theorem 2's eq. (80)).
+    for (name, g) in zoo() {
+        let base_l2 = algebraic_connectivity(&g);
+        let d = decompose(&g);
+        for cb in [0.25, 0.6] {
+            let probs = optimize_activation_probabilities(&d, cb);
+            assert!(
+                probs.lambda2 <= base_l2 + 1e-7,
+                "{name}: λ₂ {} exceeds base {base_l2}",
+                probs.lambda2
+            );
+            assert!(
+                probs.lambda2 >= cb * base_l2 - 1e-6,
+                "{name}: λ₂ {} below uniform bound {}",
+                probs.lambda2,
+                cb * base_l2
+            );
+        }
+    }
+}
