@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI for the offline MATCHA crate: build, tests, lints, bench smoke.
+#
+# The default feature set is dependency-free; the `xla` feature (NN
+# training path) needs vendored xla/anyhow crates and is NOT built here.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo clippy --all-targets -- -D warnings"
+# All default-feature targets: lib, bin, tests, examples, benches.
+cargo clippy --all-targets -- -D warnings
+
+echo "==> bench smoke (--dry-run)"
+cargo bench --bench hotpath -- --dry-run
+cargo bench --bench engine_sweep -- --dry-run
+
+echo "CI OK"

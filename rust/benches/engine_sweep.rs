@@ -1,0 +1,127 @@
+//! Engine sweep-driver benchmark: serial vs parallel fan-out of a
+//! budget × topology grid (the fig5/fig6-style sweeps, parallelized).
+//!
+//! Run: `cargo bench --bench engine_sweep` (append `-- --dry-run` for the
+//! CI smoke variant: a tiny grid, no speedup assertions).
+//!
+//! BENCH NOTE (ISSUE 1 acceptance): on ≥ 4 cores the parallel sweep must
+//! show > 1.5× speedup over the serial sweep; the assertion below
+//! enforces it whenever the host has ≥ 4 hardware threads. On smaller
+//! hosts the measured speedup is only printed.
+
+use matcha::budget::optimize_activation_probabilities;
+use matcha::engine::{
+    available_threads, run_engine_analytic, sweep_parallel, sweep_serial, EngineConfig,
+};
+use matcha::graph::{self, Graph};
+use matcha::matching::decompose;
+use matcha::mixing::optimize_alpha;
+use matcha::rng::Rng;
+use matcha::sim::{QuadraticProblem, RunConfig};
+use matcha::topology::MatchaSampler;
+use std::time::Instant;
+
+struct Point {
+    name: &'static str,
+    graph: Graph,
+    cb: f64,
+}
+
+fn grid(budgets: &[f64]) -> Vec<Point> {
+    let mut rng = Rng::new(44);
+    let bases: Vec<(&'static str, Graph)> = vec![
+        ("fig1", graph::paper_figure1_graph()),
+        ("ring12", graph::ring(12)),
+        ("er16", graph::erdos_renyi_connected(16, 0.4, &mut rng)),
+        ("grid3x4", graph::grid(3, 4)),
+    ];
+    let mut points = Vec::new();
+    for (name, g) in bases {
+        for &cb in budgets {
+            points.push(Point { name, graph: g.clone(), cb });
+        }
+    }
+    points
+}
+
+fn run_point(p: &Point, iters: usize) -> (f64, f64) {
+    let d = decompose(&p.graph);
+    let probs = optimize_activation_probabilities(&d, p.cb);
+    let mix = optimize_alpha(&d, &probs.probabilities);
+    let problem = {
+        let mut r = Rng::new(7);
+        QuadraticProblem::generate(p.graph.num_nodes(), 24, 1.0, 0.2, &mut r)
+    };
+    let mut sampler = MatchaSampler::new(probs.probabilities.clone(), 5);
+    let cfg = EngineConfig {
+        run: RunConfig {
+            lr: 0.02,
+            iterations: iters,
+            record_every: iters.max(1),
+            alpha: mix.alpha,
+            seed: 11,
+            ..RunConfig::default()
+        },
+        threads: 1,
+    };
+    let r = run_engine_analytic(&problem, &d.matchings, &mut sampler, &cfg);
+    (r.run.total_time, r.run.metrics.last("loss_vs_iter").unwrap_or(f64::NAN))
+}
+
+fn main() {
+    let dry_run = std::env::args().any(|a| a == "--dry-run");
+    let (budgets, iters): (&[f64], usize) = if dry_run {
+        (&[0.5], 30)
+    } else {
+        (&[0.2, 0.4, 0.6, 0.8, 1.0], 1500)
+    };
+    let points = grid(budgets);
+    let cores = available_threads();
+    println!(
+        "=== engine sweep driver: {} grid points × {iters} iters, {cores} hardware threads ===",
+        points.len()
+    );
+
+    let t0 = Instant::now();
+    let serial = sweep_serial(&points, |_i, p| run_point(p, iters));
+    let serial_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let parallel = sweep_parallel(&points, cores, |_i, p| run_point(p, iters));
+    let parallel_secs = t1.elapsed().as_secs_f64();
+
+    assert_eq!(
+        serial, parallel,
+        "parallel sweep must reproduce the serial results exactly"
+    );
+
+    let mut table = matcha::benchkit::Table::new(&["topology", "CB", "virtual time", "final loss"]);
+    for (p, (time, loss)) in points.iter().zip(&serial) {
+        table.row(&[
+            p.name.to_string(),
+            format!("{}", p.cb),
+            format!("{time:.0}"),
+            format!("{loss:.5}"),
+        ]);
+    }
+    table.print();
+
+    let speedup = serial_secs / parallel_secs.max(1e-9);
+    println!(
+        "\nserial: {serial_secs:.2}s, parallel ({cores} threads): {parallel_secs:.2}s, \
+         speedup {speedup:.2}x"
+    );
+    if dry_run {
+        println!("dry-run: skipping speedup assertion");
+        return;
+    }
+    if cores >= 4 {
+        assert!(
+            speedup > 1.5,
+            "BENCH NOTE violated: expected >1.5x sweep speedup on {cores} cores, got {speedup:.2}x"
+        );
+        println!("bench note: >1.5x speedup on ≥4 cores ✓");
+    } else {
+        println!("bench note: host has {cores} < 4 threads; speedup assertion skipped");
+    }
+}

@@ -31,6 +31,54 @@ fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
 fn main() {
     let mut rng = Rng::new(2024);
 
+    // CI smoke mode (`ci.sh`): exercise one cheap target per section and
+    // exit, so a bench-harness regression is caught without paying the
+    // full calibrated run.
+    let dry_run = std::env::args().any(|a| a == "--dry-run");
+    if dry_run {
+        let g8 = paper_figure1_graph();
+        let d8 = decompose(&g8);
+        bench_auto("dry: misra_gries fig1", 20, || {
+            std::hint::black_box(decompose(&g8));
+        });
+        let p = {
+            let mut r = Rng::new(3);
+            QuadraticProblem::generate(8, 20, 1.0, 0.1, &mut r)
+        };
+        let probs = optimize_activation_probabilities(&d8, 0.5);
+        let mix = optimize_alpha(&d8, &probs.probabilities);
+        bench_auto("dry: sim 20 iters", 30, || {
+            let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
+            let cfg = RunConfig {
+                iterations: 20,
+                record_every: 1000,
+                alpha: mix.alpha,
+                ..RunConfig::default()
+            };
+            std::hint::black_box(run_decentralized(&p, &d8.matchings, &mut s, &cfg));
+        });
+        bench_auto("dry: engine 20 iters", 30, || {
+            let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
+            let cfg = matcha::engine::EngineConfig {
+                run: RunConfig {
+                    iterations: 20,
+                    record_every: 1000,
+                    alpha: mix.alpha,
+                    ..RunConfig::default()
+                },
+                threads: 1,
+            };
+            std::hint::black_box(matcha::engine::run_engine_analytic(
+                &p,
+                &d8.matchings,
+                &mut s,
+                &cfg,
+            ));
+        });
+        println!("dry-run complete");
+        return;
+    }
+
     println!("=== eigensolver (the p-optimizer's inner loop) ===");
     for n in [8, 16, 32, 64] {
         let a = random_symmetric(n, &mut rng);
@@ -84,6 +132,26 @@ fn main() {
             ..RunConfig::default()
         };
         std::hint::black_box(run_decentralized(&p, &d8.matchings, &mut s, &cfg));
+    });
+
+    println!("\n=== engine iteration throughput (event-queue overhead vs sim) ===");
+    bench_auto("engine 100 iters m=8 d=50 sequential", 1500, || {
+        let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
+        let cfg = matcha::engine::EngineConfig {
+            run: RunConfig {
+                iterations: 100,
+                record_every: 1000,
+                alpha: mix.alpha,
+                ..RunConfig::default()
+            },
+            threads: 1,
+        };
+        std::hint::black_box(matcha::engine::run_engine_analytic(
+            &p,
+            &d8.matchings,
+            &mut s,
+            &cfg,
+        ));
     });
 
     println!("\n=== schedule generation (apriori cost) ===");

@@ -6,15 +6,18 @@
 //! runs were produced.
 
 use crate::budget::{optimize_activation_probabilities, periodic_probabilities};
-use crate::coordinator::{plan_matcha, plan_periodic, plan_vanilla, Trainer, TrainerConfig};
 use crate::config::ArtifactPaths;
+use crate::coordinator::plan_matcha;
 use crate::delay::DelayModel;
+use crate::engine::{
+    available_threads, parse_policy, run_engine, sweep_parallel, EngineConfig,
+};
 use crate::graph::{expected_node_comm_time, parse_graph_spec, Graph};
-use crate::matching::{decompose, decompose_greedy};
+use crate::matching::{decompose, decompose_greedy, MatchingDecomposition};
 use crate::mixing::{optimize_alpha, optimize_alpha_periodic, vanilla_design};
 use crate::rng::Rng;
 use crate::sim::{run_decentralized, LogisticProblem, LogisticSpec, QuadraticProblem, RunConfig};
-use crate::topology::{MatchaSampler, PeriodicSampler, VanillaSampler};
+use crate::topology::{MatchaSampler, PeriodicSampler, TopologySampler, VanillaSampler};
 
 /// Parsed `--flag value` arguments.
 pub struct Args {
@@ -81,11 +84,18 @@ COMMANDS
   commtime   --graph SPEC --budget CB           per-node expected comm time (Fig 1)
   schedule   --graph SPEC --budget CB --steps K [--out FILE]   apriori schedule
   sim        --graph SPEC --strategy S --budget CB --iters N [--problem quad|logreg]
+  engine     like sim, through the event-driven engine; adds
+             [--policy analytic|hetero:SEED|straggler:W:F|flaky:P] [--threads T]
+             (T>1 is a mode switch: the actor pool runs ONE THREAD PER WORKER)
+  sweep      --graph SPEC --budgets A,B,... --iters N [--threads T] [--serial]
+             parallel budget sweep across cores (engine per point)
   train      --graph SPEC --strategy S --budget CB --steps N [--artifacts DIR] [--pallas]
+             (requires a build with --features xla)
   info       [--artifacts DIR]                  artifact metadata
 
 GRAPH SPECS   fig1 | ring:M | star:M | complete:M | grid:RxC | geom:M:DELTA:SEED | er:M:DELTA:SEED
 STRATEGIES    matcha | vanilla | periodic
+DELAY MODELS  unit | maxdeg | stochastic:lo:hi
 ";
 
 /// CLI entry point (called from main.rs).
@@ -115,6 +125,8 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "commtime" => cmd_commtime(&args),
         "schedule" => cmd_schedule(&args),
         "sim" => cmd_sim(&args),
+        "engine" => cmd_engine(&args),
+        "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -127,6 +139,34 @@ pub fn run(argv: &[String]) -> Result<(), String> {
 
 fn graph_arg(args: &Args) -> Result<Graph, String> {
     parse_graph_spec(args.str_or("graph", "fig1"))
+}
+
+/// Build the activation strategy for a decomposed graph: mixing weight
+/// plus sampler. Shared by `sim`, `engine` and `sweep`.
+#[allow(clippy::type_complexity)]
+fn build_strategy(
+    strategy: &str,
+    g: &Graph,
+    d: &MatchingDecomposition,
+    cb: f64,
+    seed: u64,
+) -> Result<(f64, Box<dyn TopologySampler>), String> {
+    match strategy {
+        "matcha" => {
+            let probs = optimize_activation_probabilities(d, cb);
+            let mix = optimize_alpha(d, &probs.probabilities);
+            Ok((mix.alpha, Box::new(MatchaSampler::new(probs.probabilities, seed))))
+        }
+        "vanilla" => {
+            let design = vanilla_design(&g.laplacian());
+            Ok((design.alpha, Box::new(VanillaSampler::new(d.len()))))
+        }
+        "periodic" => {
+            let design = optimize_alpha_periodic(&g.laplacian(), cb);
+            Ok((design.alpha, Box::new(PeriodicSampler::from_budget(d.len(), cb))))
+        }
+        other => Err(format!("unknown strategy '{other}'")),
+    }
 }
 
 fn cmd_decompose(args: &Args) -> Result<(), String> {
@@ -226,62 +266,59 @@ fn cmd_schedule(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Assemble the shared `RunConfig` for `sim`/`engine`/`sweep`.
+fn run_config_from(args: &Args, alpha: f64, iters: usize, seed: u64) -> Result<RunConfig, String> {
+    Ok(RunConfig {
+        lr: args.f64_or("lr", 0.05)?,
+        iterations: iters,
+        record_every: (iters / 50).max(1),
+        alpha,
+        compute_units: args.f64_or("compute-units", 1.0)?,
+        delay: DelayModel::parse(args.str_or("delay", "unit"))?,
+        seed,
+        ..RunConfig::default()
+    })
+}
+
+/// Build the problem named by `--problem` for an `m`-node graph.
+enum CliProblem {
+    Quad(QuadraticProblem),
+    Logreg(LogisticProblem),
+}
+
+fn problem_from(args: &Args, m: usize, seed: u64) -> Result<CliProblem, String> {
+    match args.str_or("problem", "logreg") {
+        "quad" => {
+            let mut rng = Rng::new(seed ^ 0x9a9a);
+            Ok(CliProblem::Quad(QuadraticProblem::generate(m, 20, 1.0, 0.2, &mut rng)))
+        }
+        "logreg" => {
+            let spec = LogisticSpec {
+                num_workers: m,
+                non_iid: args.f64_or("non-iid", 0.0)?,
+                seed: seed ^ 0x10f,
+                ..LogisticSpec::default()
+            };
+            Ok(CliProblem::Logreg(LogisticProblem::generate(spec)))
+        }
+        other => Err(format!("unknown problem '{other}'")),
+    }
+}
+
 fn cmd_sim(args: &Args) -> Result<(), String> {
     let g = graph_arg(args)?;
     let cb = args.f64_or("budget", 0.5)?;
     let iters = args.usize_or("iters", 1000)?;
     let seed = args.usize_or("seed", 0)? as u64;
-    let lr = args.f64_or("lr", 0.05)?;
     let strategy = args.str_or("strategy", "matcha");
     let d = decompose(&g);
-    let delay = DelayModel::parse(args.str_or("delay", "unit"))?;
+    let (alpha, mut sampler) = build_strategy(strategy, &g, &d, cb, seed)?;
+    let cfg = run_config_from(args, alpha, iters, seed)?;
 
-    let (alpha, mut sampler): (f64, Box<dyn crate::topology::TopologySampler>) = match strategy {
-        "matcha" => {
-            let probs = optimize_activation_probabilities(&d, cb);
-            let mix = optimize_alpha(&d, &probs.probabilities);
-            (mix.alpha, Box::new(MatchaSampler::new(probs.probabilities, seed)))
-        }
-        "vanilla" => {
-            let design = vanilla_design(&g.laplacian());
-            (design.alpha, Box::new(VanillaSampler::new(d.len())))
-        }
-        "periodic" => {
-            let design = optimize_alpha_periodic(&g.laplacian(), cb);
-            (design.alpha, Box::new(PeriodicSampler::from_budget(d.len(), cb)))
-        }
-        other => return Err(format!("unknown strategy '{other}'")),
-    };
-
-    let cfg = RunConfig {
-        lr,
-        iterations: iters,
-        record_every: (iters / 50).max(1),
-        alpha,
-        compute_units: args.f64_or("compute-units", 1.0)?,
-        delay,
-        seed,
-        ..RunConfig::default()
-    };
-
-    let problem = args.str_or("problem", "logreg");
-    let result = match problem {
-        "quad" => {
-            let mut rng = Rng::new(seed ^ 0x9a9a);
-            let p = QuadraticProblem::generate(g.num_nodes(), 20, 1.0, 0.2, &mut rng);
-            run_decentralized(&p, &d.matchings, &mut sampler, &cfg)
-        }
-        "logreg" => {
-            let spec = LogisticSpec {
-                num_workers: g.num_nodes(),
-                non_iid: args.f64_or("non-iid", 0.0)?,
-                seed: seed ^ 0x10f,
-                ..LogisticSpec::default()
-            };
-            let p = LogisticProblem::generate(spec);
-            run_decentralized(&p, &d.matchings, &mut sampler, &cfg)
-        }
-        other => return Err(format!("unknown problem '{other}'")),
+    let problem = args.str_or("problem", "logreg").to_string();
+    let result = match problem_from(args, g.num_nodes(), seed)? {
+        CliProblem::Quad(p) => run_decentralized(&p, &d.matchings, &mut sampler, &cfg),
+        CliProblem::Logreg(p) => run_decentralized(&p, &d.matchings, &mut sampler, &cfg),
     };
 
     println!(
@@ -304,7 +341,140 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_engine(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let cb = args.f64_or("budget", 0.5)?;
+    let iters = args.usize_or("iters", 1000)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let threads = args.usize_or("threads", 1)?;
+    let strategy = args.str_or("strategy", "matcha");
+    let d = decompose(&g);
+    let (alpha, mut sampler) = build_strategy(strategy, &g, &d, cb, seed)?;
+    let run = run_config_from(args, alpha, iters, seed)?;
+    let mut policy = parse_policy(args.str_or("policy", "analytic"), &g, &run)?;
+    let policy_name = policy.name();
+    // `threads` is a mode switch, not a pool size: actor mode runs one
+    // thread per worker (sequential fallback beyond the worker cap).
+    // Surface the real count so nobody is surprised.
+    if threads > 1 {
+        if g.num_nodes() > crate::engine::MAX_ACTOR_WORKERS {
+            println!(
+                "note: {} workers exceed the actor cap ({}); running sequentially",
+                g.num_nodes(),
+                crate::engine::MAX_ACTOR_WORKERS
+            );
+        } else if g.num_nodes() != threads {
+            println!(
+                "note: actor mode spawns one thread per worker ({} threads)",
+                g.num_nodes()
+            );
+        }
+    }
+    let engine_cfg = EngineConfig { run, threads };
+
+    let result = match problem_from(args, g.num_nodes(), seed)? {
+        CliProblem::Quad(p) => {
+            run_engine(&p, &d.matchings, &mut sampler, policy.as_mut(), &engine_cfg)
+        }
+        CliProblem::Logreg(p) => {
+            run_engine(&p, &d.matchings, &mut sampler, policy.as_mut(), &engine_cfg)
+        }
+    };
+
+    println!(
+        "engine strategy={strategy} policy={policy_name} threads={threads} iters={iters} CB={cb}: \
+         final loss {:.5}, total virtual time {:.1} units, comm {:.1} units",
+        result.run.metrics.last("loss_vs_iter").unwrap_or(f64::NAN),
+        result.run.total_time,
+        result.run.total_comm_units
+    );
+    println!(
+        "events processed: {}, links dropped by failure injection: {}",
+        result.events, result.dropped_links
+    );
+    if let Some(out) = args.flags.get("out") {
+        result
+            .run
+            .metrics
+            .save_json(std::path::Path::new(out))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let g = graph_arg(args)?;
+    let iters = args.usize_or("iters", 1000)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let threads = if args.bool("serial") {
+        1
+    } else {
+        args.usize_or("threads", available_threads())?
+    };
+    let strategy = args.str_or("strategy", "matcha").to_string();
+    let budgets: Vec<f64> = args
+        .str_or("budgets", "0.1,0.25,0.5,0.75,1.0")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().map_err(|e| format!("--budgets: '{s}': {e}")))
+        .collect::<Result<_, _>>()?;
+    if budgets.is_empty() {
+        return Err("--budgets: need at least one value".into());
+    }
+    let d = decompose(&g);
+    let problem = problem_from(args, g.num_nodes(), seed)?;
+
+    let wall = std::time::Instant::now();
+    let results = sweep_parallel(&budgets, threads, |_i, &cb| {
+        let (alpha, mut sampler) = build_strategy(&strategy, &g, &d, cb, seed)?;
+        let run = run_config_from(args, alpha, iters, seed)?;
+        let engine_cfg = EngineConfig { run, threads: 1 };
+        let r = match &problem {
+            CliProblem::Quad(p) => {
+                crate::engine::run_engine_analytic(p, &d.matchings, &mut sampler, &engine_cfg)
+            }
+            CliProblem::Logreg(p) => {
+                crate::engine::run_engine_analytic(p, &d.matchings, &mut sampler, &engine_cfg)
+            }
+        };
+        Ok::<_, String>((cb, r))
+    });
+    let elapsed = wall.elapsed().as_secs_f64();
+
+    let mut table = crate::benchkit::Table::new(&[
+        "CB",
+        "final loss",
+        "virtual time",
+        "comm units",
+    ]);
+    let mut merged = crate::metrics::Recorder::new();
+    for res in results {
+        let (cb, r) = res?;
+        table.row(&[
+            format!("{cb}"),
+            format!("{:.5}", r.run.metrics.last("loss_vs_iter").unwrap_or(f64::NAN)),
+            format!("{:.1}", r.run.total_time),
+            format!("{:.1}", r.run.total_comm_units),
+        ]);
+        merged.merge(&format!("cb={cb}"), &r.run.metrics);
+    }
+    table.print();
+    println!(
+        "sweep: {} points × {iters} iters on {threads} thread(s) in {elapsed:.2}s wallclock",
+        budgets.len()
+    );
+    if let Some(out) = args.flags.get("out") {
+        merged
+            .save_json(std::path::Path::new(out))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<(), String> {
+    use crate::coordinator::{plan_periodic, plan_vanilla, Trainer, TrainerConfig};
     let g = graph_arg(args)?;
     let cb = args.f64_or("budget", 0.5)?;
     let steps = args.usize_or("steps", 200)?;
@@ -362,6 +532,16 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         println!("wrote {out}");
     }
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &Args) -> Result<(), String> {
+    Err("the 'train' command needs the XLA runtime, which this offline \
+         build omits. To enable it: vendor the `xla` and `anyhow` crates, \
+         add them as optional dependencies of the `xla` feature in \
+         Cargo.toml, then rebuild with `cargo build --features xla`. \
+         The pure-Rust paths are available via 'sim' and 'engine'."
+        .into())
 }
 
 fn cmd_info(args: &Args) -> Result<(), String> {
@@ -428,5 +608,79 @@ mod tests {
             "quad",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn engine_smoke_all_policies() {
+        for policy in ["analytic", "hetero:1", "straggler:0:3.0", "flaky:0.2"] {
+            run(&sv(&[
+                "engine",
+                "--graph",
+                "ring:6",
+                "--strategy",
+                "matcha",
+                "--budget",
+                "0.5",
+                "--iters",
+                "40",
+                "--problem",
+                "quad",
+                "--policy",
+                policy,
+            ]))
+            .unwrap_or_else(|e| panic!("policy {policy}: {e}"));
+        }
+    }
+
+    #[test]
+    fn engine_parallel_smoke() {
+        run(&sv(&[
+            "engine",
+            "--graph",
+            "ring:6",
+            "--iters",
+            "30",
+            "--problem",
+            "quad",
+            "--threads",
+            "4",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn engine_rejects_bad_policy() {
+        let r = run(&sv(&["engine", "--graph", "ring:4", "--policy", "warp-drive"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sweep_smoke() {
+        run(&sv(&[
+            "sweep",
+            "--graph",
+            "ring:6",
+            "--budgets",
+            "0.3,0.8",
+            "--iters",
+            "40",
+            "--problem",
+            "quad",
+            "--threads",
+            "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn sweep_rejects_bad_budget_list() {
+        assert!(run(&sv(&["sweep", "--graph", "ring:4", "--budgets", "0.3,oops"])).is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn train_reports_missing_feature() {
+        let r = run(&sv(&["train", "--graph", "fig1"]));
+        assert!(r.unwrap_err().contains("xla"));
     }
 }

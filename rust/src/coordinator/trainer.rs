@@ -1,19 +1,18 @@
-//! The decentralized NN-training coordinator (L3 over the XLA runtime).
+//! The XLA-backed trainer: executes the paper's training loop on the real
+//! model (only compiled with the `xla` feature).
 //!
-//! Executes the paper's training loop on the real model: each of the `m`
-//! workers holds a flat parameter vector; per iteration every worker runs
-//! the AOT-compiled `train_step` on a batch from its own corpus shard
-//! (paper eq. (2)'s local gradient step), then the activated topology's
-//! mixing matrix is applied through the AOT `mix` computation (the
-//! consensus step). The schedule is pregenerated (apriori, §1), runtime
-//! does zero scheduling work, and the virtual clock charges the paper's
-//! delay model — see DESIGN.md §Hardware-Adaptation for why modelled time
-//! is the right testbed here.
+//! Each of the `m` workers holds a flat parameter vector; per iteration
+//! every worker runs the AOT-compiled `train_step` on a batch from its
+//! own corpus shard (paper eq. (2)'s local gradient step), then the
+//! activated topology's mixing matrix is applied through the AOT `mix`
+//! computation (the consensus step). The schedule is pregenerated
+//! (apriori, §1), runtime does zero scheduling work, and the virtual
+//! clock charges the paper's delay model.
 
+use super::{TrainReport, TrainerConfig};
 use crate::config::{ArtifactPaths, ModelMeta};
 use crate::data::{BatchIter, Corpus};
-use crate::delay::{DelayModel, VirtualClock};
-use crate::graph::Graph;
+use crate::delay::VirtualClock;
 use crate::matching::MatchingDecomposition;
 use crate::metrics::Recorder;
 use crate::rng::Rng;
@@ -23,58 +22,6 @@ use crate::runtime::{
 };
 use crate::topology::Schedule;
 use anyhow::{Context, Result};
-
-/// Configuration for one coordinated training run.
-#[derive(Clone, Debug)]
-pub struct TrainerConfig {
-    /// Total iterations to run (bounded by the schedule length).
-    pub steps: usize,
-    pub lr: f32,
-    /// Multiply lr by `lr_decay` every `lr_decay_every` steps.
-    pub lr_decay: f32,
-    pub lr_decay_every: usize,
-    /// Evaluate held-out loss every this many steps.
-    pub eval_every: usize,
-    /// Use the Pallas-kernel train_step artifact (vs the XLA-fused one).
-    pub use_pallas: bool,
-    /// Computation time per iteration in delay units (relative to one
-    /// link's communication time; the paper's CIFAR runs are
-    /// communication-dominated, i.e. small values here).
-    pub compute_units: f64,
-    pub delay: DelayModel,
-    /// Tokens per worker shard in the synthetic corpus.
-    pub tokens_per_worker: usize,
-    pub non_iid: bool,
-    pub seed: u64,
-}
-
-impl Default for TrainerConfig {
-    fn default() -> Self {
-        TrainerConfig {
-            steps: 200,
-            lr: 0.5,
-            lr_decay: 1.0,
-            lr_decay_every: usize::MAX,
-            eval_every: 50,
-            use_pallas: false,
-            compute_units: 1.0,
-            delay: DelayModel::UnitPerMatching,
-            tokens_per_worker: 20_000,
-            non_iid: false,
-            seed: 0,
-        }
-    }
-}
-
-/// Outcome of a coordinated run.
-pub struct TrainReport {
-    pub metrics: Recorder,
-    pub final_train_loss: f64,
-    pub final_eval_loss: f64,
-    pub total_time_units: f64,
-    pub total_comm_units: f64,
-    pub wallclock_secs: f64,
-}
 
 /// The coordinator: owns the runtime, the compiled executables, the
 /// worker states, and the data pipeline.
@@ -273,154 +220,5 @@ impl Trainer {
             acc += to_scalar_f32(&outs[0])? as f64 / eval_batches.len() as f64;
         }
         Ok(acc)
-    }
-}
-
-/// Convenience: build the full MATCHA pipeline (decompose → probabilities
-/// → α → schedule) for a base graph and budget, returning everything a
-/// run needs. This is the library's "one call" entry point.
-pub struct MatchaPlan {
-    pub decomposition: MatchingDecomposition,
-    pub probabilities: Vec<f64>,
-    pub lambda2: f64,
-    pub alpha: f64,
-    pub rho: f64,
-    pub schedule: Schedule,
-}
-
-/// Assemble a MATCHA plan: matching decomposition, optimized activation
-/// probabilities at budget `cb`, optimized mixing weight, and a
-/// pregenerated `steps`-round schedule.
-pub fn plan_matcha(base: &Graph, cb: f64, steps: usize, seed: u64) -> MatchaPlan {
-    use crate::budget::optimize_activation_probabilities;
-    use crate::mixing::optimize_alpha;
-    use crate::topology::MatchaSampler;
-
-    let decomposition = crate::matching::decompose(base);
-    let probs = optimize_activation_probabilities(&decomposition, cb);
-    let mix = optimize_alpha(&decomposition, &probs.probabilities);
-    let mut sampler = MatchaSampler::new(probs.probabilities.clone(), seed);
-    let schedule = Schedule::generate(&mut sampler, mix.alpha, decomposition.len(), steps);
-    MatchaPlan {
-        decomposition,
-        probabilities: probs.probabilities,
-        lambda2: probs.lambda2,
-        alpha: mix.alpha,
-        rho: mix.rho,
-        schedule,
-    }
-}
-
-/// Assemble the vanilla-DecenSGD plan on the same graph (all matchings
-/// every round, closed-form optimal α).
-pub fn plan_vanilla(base: &Graph, steps: usize) -> MatchaPlan {
-    use crate::mixing::vanilla_design;
-    use crate::topology::VanillaSampler;
-
-    let decomposition = crate::matching::decompose(base);
-    let design = vanilla_design(&base.laplacian());
-    let mut sampler = VanillaSampler::new(decomposition.len());
-    let schedule = Schedule::generate(&mut sampler, design.alpha, decomposition.len(), steps);
-    let m = decomposition.len();
-    MatchaPlan {
-        decomposition,
-        probabilities: vec![1.0; m],
-        lambda2: crate::graph::algebraic_connectivity(base),
-        alpha: design.alpha,
-        rho: design.rho,
-        schedule,
-    }
-}
-
-/// Assemble the P-DecenSGD plan at budget `cb` (full graph every ⌈1/cb⌉
-/// rounds, α optimized for the correlated activation model).
-pub fn plan_periodic(base: &Graph, cb: f64, steps: usize) -> MatchaPlan {
-    use crate::mixing::optimize_alpha_periodic;
-    use crate::topology::PeriodicSampler;
-
-    let decomposition = crate::matching::decompose(base);
-    let design = optimize_alpha_periodic(&base.laplacian(), cb);
-    let mut sampler = PeriodicSampler::from_budget(decomposition.len(), cb);
-    let schedule = Schedule::generate(&mut sampler, design.alpha, decomposition.len(), steps);
-    let m = decomposition.len();
-    MatchaPlan {
-        decomposition,
-        probabilities: vec![cb; m],
-        lambda2: cb * crate::graph::algebraic_connectivity(base),
-        alpha: design.alpha,
-        rho: design.rho,
-        schedule,
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::graph::paper_figure1_graph;
-
-    #[test]
-    fn plan_matcha_produces_consistent_artifacts() {
-        let g = paper_figure1_graph();
-        let plan = plan_matcha(&g, 0.5, 100, 1);
-        assert_eq!(plan.schedule.rounds.len(), 100);
-        assert!(plan.rho < 1.0);
-        assert!(plan.alpha > 0.0);
-        assert!(plan.lambda2 > 0.0);
-        // Expected comm of the schedule tracks Σp.
-        let target: f64 = plan.probabilities.iter().sum();
-        let got = plan.schedule.mean_comm_units();
-        assert!((got - target).abs() < 0.8, "schedule comm {got} vs Σp {target}");
-    }
-
-    #[test]
-    fn plan_vanilla_activates_everything() {
-        let g = paper_figure1_graph();
-        let plan = plan_vanilla(&g, 10);
-        for r in &plan.schedule.rounds {
-            assert_eq!(r.activated.len(), plan.decomposition.len());
-        }
-    }
-
-    #[test]
-    fn plan_periodic_budget() {
-        let g = paper_figure1_graph();
-        let plan = plan_periodic(&g, 0.25, 100);
-        let mean = plan.schedule.mean_comm_units();
-        let full = plan.decomposition.len() as f64;
-        assert!((mean - 0.25 * full).abs() < 0.05 * full, "mean {mean} vs {}", 0.25 * full);
-    }
-
-    #[test]
-    fn mixing_w_construction_matches_linalg() {
-        // Compare coordinator's W construction against topology::mixing_matrix.
-        use crate::topology::mixing_matrix;
-        let g = paper_figure1_graph();
-        let plan = plan_matcha(&g, 0.4, 1, 2);
-        // Fake a Trainer-like W build without artifacts: reuse the method's
-        // logic via a standalone reimplementation here.
-        let m = g.num_nodes();
-        let alpha = plan.alpha;
-        let activated: Vec<usize> = (0..plan.decomposition.len()).collect();
-        let mut w = vec![0.0f32; m * m];
-        for i in 0..m {
-            w[i * m + i] = 1.0;
-        }
-        for &j in &activated {
-            for &(u, v) in plan.decomposition.matchings[j].edges() {
-                w[u * m + u] -= alpha as f32;
-                w[v * m + v] -= alpha as f32;
-                w[u * m + v] += alpha as f32;
-                w[v * m + u] += alpha as f32;
-            }
-        }
-        let wm = mixing_matrix(&plan.decomposition.laplacians(), &activated, alpha);
-        for i in 0..m {
-            for j in 0..m {
-                assert!(
-                    (wm.get(i, j) - w[i * m + j] as f64).abs() < 1e-6,
-                    "W mismatch at ({i},{j})"
-                );
-            }
-        }
     }
 }

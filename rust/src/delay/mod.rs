@@ -33,23 +33,37 @@ pub enum DelayModel {
 
 impl DelayModel {
     /// Parse from a CLI string: `unit`, `maxdeg`, `stochastic:lo:hi`.
+    ///
+    /// Never panics: every malformed form (`stochastic`, `stochastic:0.5`,
+    /// trailing fields, non-numeric bounds, inverted/negative ranges, the
+    /// empty string) returns `Err` with a usage hint.
     pub fn parse(s: &str) -> Result<DelayModel, String> {
+        const USAGE: &str = "expected unit | maxdeg | stochastic:lo:hi";
         let parts: Vec<&str> = s.split(':').collect();
         match parts[0] {
-            "unit" => Ok(DelayModel::UnitPerMatching),
-            "maxdeg" => Ok(DelayModel::MaxDegree),
+            "unit" if parts.len() == 1 => Ok(DelayModel::UnitPerMatching),
+            "maxdeg" if parts.len() == 1 => Ok(DelayModel::MaxDegree),
+            "unit" | "maxdeg" => {
+                Err(format!("delay model '{s}': '{}' takes no arguments ({USAGE})", parts[0]))
+            }
             "stochastic" => {
                 if parts.len() != 3 {
-                    return Err("stochastic delay needs stochastic:lo:hi".into());
+                    return Err(format!(
+                        "delay model '{s}': stochastic needs exactly two bounds ({USAGE})"
+                    ));
                 }
-                let lo = parts[1].parse::<f64>().map_err(|e| e.to_string())?;
-                let hi = parts[2].parse::<f64>().map_err(|e| e.to_string())?;
-                if lo < 0.0 || hi < lo {
-                    return Err(format!("bad stochastic bounds [{lo},{hi}]"));
+                let lo = parts[1]
+                    .parse::<f64>()
+                    .map_err(|e| format!("delay model '{s}': bad lower bound: {e} ({USAGE})"))?;
+                let hi = parts[2]
+                    .parse::<f64>()
+                    .map_err(|e| format!("delay model '{s}': bad upper bound: {e} ({USAGE})"))?;
+                if !lo.is_finite() || !hi.is_finite() || lo < 0.0 || hi < lo {
+                    return Err(format!("delay model '{s}': bad stochastic bounds [{lo},{hi}]"));
                 }
                 Ok(DelayModel::StochasticLink { min_units: lo, max_units: hi })
             }
-            other => Err(format!("unknown delay model '{other}'")),
+            other => Err(format!("unknown delay model '{other}' ({USAGE})")),
         }
     }
 
@@ -117,6 +131,17 @@ impl VirtualClock {
         self.elapsed
     }
 
+    /// Advance by an arbitrary duration; returns the new elapsed total.
+    /// Used by the event-driven engine, where an iteration's compute
+    /// phase is the *maximum* over per-worker durations (stragglers!)
+    /// rather than the fixed `compute_units_per_step`. Calling
+    /// `advance(compute + comm)` is bit-identical to `tick(comm)` when
+    /// `compute == compute_units_per_step`.
+    pub fn advance(&mut self, duration: f64) -> f64 {
+        self.elapsed += duration;
+        self.elapsed
+    }
+
     pub fn elapsed(&self) -> f64 {
         self.elapsed
     }
@@ -180,8 +205,38 @@ mod tests {
             DelayModel::parse("stochastic:0.5:1.5"),
             Ok(DelayModel::StochasticLink { .. })
         ));
-        assert!(DelayModel::parse("bogus").is_err());
-        assert!(DelayModel::parse("stochastic:2:1").is_err());
+        assert!(matches!(
+            DelayModel::parse("stochastic:0:0"),
+            Ok(DelayModel::StochasticLink { .. })
+        ));
+    }
+
+    #[test]
+    fn parse_rejects_every_malformed_form_without_panicking() {
+        for bad in [
+            "",
+            "bogus",
+            "stochastic",          // missing both bounds (would index parts[1])
+            "stochastic:0.5",      // missing upper bound (would index parts[2])
+            "stochastic:0.5:1:2",  // trailing field
+            "stochastic:a:1",      // non-numeric lower
+            "stochastic:0:b",      // non-numeric upper
+            "stochastic::",        // empty bounds
+            "stochastic:2:1",      // inverted range
+            "stochastic:-1:1",     // negative lower
+            "stochastic:nan:1",    // non-finite lower
+            "stochastic:0:inf",    // non-finite upper
+            "unit:1",              // arguments on an argument-free model
+            "maxdeg:x",
+        ] {
+            let r = DelayModel::parse(bad);
+            assert!(r.is_err(), "'{bad}' should be rejected");
+            let msg = r.unwrap_err();
+            assert!(
+                msg.contains("unit | maxdeg | stochastic:lo:hi") || msg.contains("bounds"),
+                "error for '{bad}' should carry a usage hint: {msg}"
+            );
+        }
     }
 
     #[test]
@@ -190,5 +245,14 @@ mod tests {
         assert_eq!(c.tick(2.0), 3.0);
         assert_eq!(c.tick(0.0), 4.0);
         assert_eq!(c.elapsed(), 4.0);
+    }
+
+    #[test]
+    fn advance_matches_tick_for_constant_compute() {
+        let mut a = VirtualClock::new(0.7);
+        let mut b = VirtualClock::new(0.7);
+        for comm in [0.0, 1.3, 2.9, 0.1] {
+            assert_eq!(a.tick(comm), b.advance(0.7 + comm));
+        }
     }
 }

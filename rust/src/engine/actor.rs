@@ -1,0 +1,195 @@
+//! Worker actors for the engine's parallel execution mode.
+//!
+//! Each worker is an actor on its own `std::thread`, owning its iterate
+//! and its private gradient-noise RNG stream, and exchanging messages
+//! with the coordinator over `mpsc` channels:
+//!
+//! ```text
+//!   coordinator ── Cmd::Step ──▶ worker     (local SGD step)
+//!   coordinator ◀─ Reply::Stepped ── worker (post-step iterate)
+//!   coordinator ── Cmd::Mix ───▶ worker     (peer iterates for its
+//!                                            activated incident links)
+//!   coordinator ◀─ Reply::Mixed ─── worker  (post-mix iterate)
+//! ```
+//!
+//! Determinism: a worker's gradient draws depend only on its own stream,
+//! and gossip-message compression randomness is derived per edge
+//! ([`crate::sim::kernel::edge_rng`]), so the result is bit-for-bit
+//! identical to the sequential path regardless of thread scheduling. The
+//! coordinator's per-iteration barrier (collect all `Stepped`, then all
+//! `Mixed`) is what the ISSUE calls deterministic mode.
+
+use crate::rng::Rng;
+use crate::sim::kernel::{edge_diff_message, local_sgd_step};
+use crate::sim::{Compression, Problem};
+use std::sync::mpsc::{Receiver, Sender};
+
+/// One gossip message routed to a worker: the peer's post-step iterate
+/// for one activated, live link. `(u, v)` is the canonical edge (u < v);
+/// the receiving worker is one of the two endpoints.
+pub(crate) struct GossipMsg {
+    pub matching: usize,
+    pub u: usize,
+    pub v: usize,
+    pub peer_x: Vec<f64>,
+}
+
+/// Coordinator → worker commands.
+pub(crate) enum Cmd {
+    /// Run one local SGD step at learning rate `lr`. (The iteration
+    /// index is not needed worker-side: gradient draws come from the
+    /// worker's own stream; only `Mix` needs `k`, for the per-edge
+    /// compression RNG.)
+    Step { lr: f64 },
+    /// Apply the gossip mix for iteration `k`. `msgs` lists this worker's
+    /// live activated incident links in global (activation, edge) order —
+    /// possibly empty, in which case the mix is a no-op add of zero
+    /// (matching the sequential kernel exactly).
+    Mix { k: usize, alpha: f64, msgs: Vec<GossipMsg> },
+    /// Shut down the actor.
+    Stop,
+}
+
+/// Worker → coordinator replies (carrying the worker's current iterate so
+/// the coordinator's mirror stays authoritative for routing/metrics).
+pub(crate) enum Reply {
+    Stepped { worker: usize, x: Vec<f64> },
+    Mixed { worker: usize, x: Vec<f64> },
+}
+
+/// The actor body. Runs until `Cmd::Stop` or a closed channel.
+pub(crate) fn worker_loop<P: Problem + ?Sized>(
+    problem: &P,
+    worker: usize,
+    mut x: Vec<f64>,
+    mut rng: Rng,
+    compression: Option<Compression>,
+    seed: u64,
+    rx: Receiver<Cmd>,
+    tx: Sender<Reply>,
+) {
+    let d = x.len();
+    let mut grad = vec![0.0; d];
+    let mut diff = vec![0.0; d];
+    let mut delta = vec![0.0; d];
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Step { lr } => {
+                local_sgd_step(problem, worker, lr, &mut x, &mut rng, &mut grad);
+                if tx.send(Reply::Stepped { worker, x: x.clone() }).is_err() {
+                    return;
+                }
+            }
+            Cmd::Mix { k, alpha, msgs } => {
+                delta.iter_mut().for_each(|v| *v = 0.0);
+                for msg in &msgs {
+                    // Canonical message diff = x_v − x_u; this worker is
+                    // the u side iff worker == msg.u.
+                    let on_lower = worker == msg.u;
+                    if on_lower {
+                        edge_diff_message(
+                            &x,
+                            &msg.peer_x,
+                            &mut diff,
+                            compression.as_ref(),
+                            seed,
+                            k,
+                            msg.matching,
+                            msg.u,
+                            msg.v,
+                        );
+                        for i in 0..d {
+                            delta[i] += diff[i];
+                        }
+                    } else {
+                        edge_diff_message(
+                            &msg.peer_x,
+                            &x,
+                            &mut diff,
+                            compression.as_ref(),
+                            seed,
+                            k,
+                            msg.matching,
+                            msg.u,
+                            msg.v,
+                        );
+                        for i in 0..d {
+                            delta[i] -= diff[i];
+                        }
+                    }
+                }
+                for i in 0..d {
+                    x[i] += alpha * delta[i];
+                }
+                if tx.send(Reply::Mixed { worker, x: x.clone() }).is_err() {
+                    return;
+                }
+            }
+            Cmd::Stop => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel::{init_iterates, worker_streams};
+    use crate::sim::QuadraticProblem;
+    use std::sync::mpsc;
+
+    #[test]
+    fn actor_step_matches_inprocess_kernel() {
+        let mut prng = Rng::new(17);
+        let problem = QuadraticProblem::generate(3, 6, 1.0, 0.2, &mut prng);
+        let seed = 5u64;
+        let xs = init_iterates(seed, 3, 6);
+        let rngs = worker_streams(seed, 3);
+
+        // Reference: in-process kernel step for worker 1.
+        let mut x_ref = xs[1].clone();
+        let mut rng_ref = rngs[1].clone();
+        let mut grad = vec![0.0; 6];
+        local_sgd_step(&problem, 1, 0.03, &mut x_ref, &mut rng_ref, &mut grad);
+
+        // Actor path.
+        std::thread::scope(|scope| {
+            let (cmd_tx, cmd_rx) = mpsc::channel();
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let x0 = xs[1].clone();
+            let rng = rngs[1].clone();
+            let p = &problem;
+            scope.spawn(move || worker_loop(p, 1, x0, rng, None, seed, cmd_rx, reply_tx));
+            cmd_tx.send(Cmd::Step { lr: 0.03 }).unwrap();
+            match reply_rx.recv().unwrap() {
+                Reply::Stepped { worker, x } => {
+                    assert_eq!(worker, 1);
+                    assert_eq!(x, x_ref, "actor step must be bit-identical");
+                }
+                _ => panic!("expected Stepped"),
+            }
+            cmd_tx.send(Cmd::Stop).unwrap();
+        });
+    }
+
+    #[test]
+    fn actor_mix_empty_message_list_applies_zero_delta() {
+        let mut prng = Rng::new(23);
+        let problem = QuadraticProblem::generate(2, 4, 1.0, 0.0, &mut prng);
+        let x0 = vec![1.0, -2.0, 3.0, 0.5];
+        std::thread::scope(|scope| {
+            let (cmd_tx, cmd_rx) = mpsc::channel();
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let p = &problem;
+            let x = x0.clone();
+            scope.spawn(move || worker_loop(p, 0, x, Rng::new(1), None, 0, cmd_rx, reply_tx));
+            cmd_tx
+                .send(Cmd::Mix { k: 0, alpha: 0.4, msgs: vec![] })
+                .unwrap();
+            match reply_rx.recv().unwrap() {
+                Reply::Mixed { x, .. } => assert_eq!(x, x0),
+                _ => panic!("expected Mixed"),
+            }
+            cmd_tx.send(Cmd::Stop).unwrap();
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! Discrete-event queue for the execution engine.
+//!
+//! Virtual time advances by popping events in `(time, sequence)` order.
+//! The sequence number makes ties deterministic: two events scheduled at
+//! the same instant pop in scheduling order, independent of heap
+//! internals — a requirement for the engine's bit-for-bit deterministic
+//! mode.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happened in the simulated cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Worker `worker` finished its local gradient step for iteration `k`.
+    ComputeDone { worker: usize, k: usize },
+    /// Link `edge` of matching `matching` finished transmitting at
+    /// iteration `k`. `failed` marks a link dropped by failure injection
+    /// (the time still elapses — a detection timeout — but the edge is
+    /// excluded from the mix).
+    LinkDone { matching: usize, edge: (usize, usize), k: usize, failed: bool },
+}
+
+/// A scheduled event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-queue over [`Event`]s with deterministic tie-breaking and a
+/// processed-event counter (exposed in engine results for observability).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    processed: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `kind` at absolute virtual time `time`.
+    pub fn schedule(&mut self, time: f64, kind: EventKind) {
+        assert!(time.is_finite(), "non-finite event time {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    /// Pop the earliest event, if any.
+    pub fn pop(&mut self) -> Option<Event> {
+        let e = self.heap.pop();
+        if e.is_some() {
+            self.processed += 1;
+        }
+        e
+    }
+
+    /// Drain every pending event (earliest first). Used when the caller
+    /// wants to inspect the popped events (tests, tracing).
+    pub fn drain(&mut self) -> Vec<Event> {
+        let mut out = Vec::with_capacity(self.heap.len());
+        while let Some(e) = self.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    /// Pop and discard every pending event (earliest first), returning
+    /// how many were processed. The allocation-free phase barrier for the
+    /// engine's hot loop.
+    pub fn run_to_barrier(&mut self) -> usize {
+        let mut n = 0;
+        while self.pop().is_some() {
+            n += 1;
+        }
+        n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Total events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, EventKind::ComputeDone { worker: 3, k: 0 });
+        q.schedule(1.0, EventKind::ComputeDone { worker: 1, k: 0 });
+        q.schedule(2.0, EventKind::ComputeDone { worker: 2, k: 0 });
+        let order: Vec<f64> = q.drain().iter().map(|e| e.time).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_by_scheduling_order() {
+        let mut q = EventQueue::new();
+        for w in 0..5 {
+            q.schedule(1.0, EventKind::ComputeDone { worker: w, k: 7 });
+        }
+        let workers: Vec<usize> = q
+            .drain()
+            .iter()
+            .map(|e| match e.kind {
+                EventKind::ComputeDone { worker, .. } => worker,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(workers, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn run_to_barrier_counts_and_empties() {
+        let mut q = EventQueue::new();
+        for w in 0..4 {
+            q.schedule(w as f64, EventKind::ComputeDone { worker: w, k: 0 });
+        }
+        assert_eq!(q.run_to_barrier(), 4);
+        assert!(q.is_empty());
+        assert_eq!(q.processed(), 4);
+        assert_eq!(q.run_to_barrier(), 0);
+    }
+
+    #[test]
+    fn empty_queue_behaviour() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert!(q.pop().is_none());
+        assert_eq!(q.processed(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_nan_times() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::NAN, EventKind::ComputeDone { worker: 0, k: 0 });
+    }
+}

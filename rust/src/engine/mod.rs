@@ -1,0 +1,60 @@
+//! Event-driven parallel execution engine for decentralized SGD.
+//!
+//! The paper's core claim is a *wallclock* win: decomposing the topology
+//! into matchings lets node-disjoint links run concurrently. The
+//! sequential simulator ([`crate::sim`]) charges that time with a
+//! closed-form per-iteration formula; this subsystem instead **executes**
+//! it, at per-link granularity, on real cores:
+//!
+//! - [`event`] — a discrete-event queue with deterministic tie-breaking;
+//!   virtual time advances by link-transmission and worker-compute
+//!   events.
+//! - [`policy`] — the [`DelayPolicy`] trait generalizes
+//!   [`crate::delay::DelayModel`] (now one analytic policy among several)
+//!   to heterogeneous links ([`HeterogeneousPolicy`]), straggler
+//!   injection ([`StragglerPolicy`]) and link failures
+//!   ([`FlakyLinkPolicy`]).
+//! - [`actor`] — each worker is an actor on a `std::thread`, exchanging
+//!   gossip messages over `mpsc` channels.
+//! - [`runner`] — the engine loop: compute phase → link events → gossip
+//!   mix, with a barrier per iteration (**deterministic mode**). Under
+//!   [`AnalyticPolicy`] the trajectory and the virtual clock reproduce
+//!   [`crate::sim::run_decentralized`] **bit-for-bit** — the step/mix
+//!   math lives once in [`crate::sim::kernel`] and is shared by both
+//!   paths (enforced by the property tests in `rust/tests/engine.rs`).
+//! - [`sweep`] — a parallel sweep driver that fans independent
+//!   budget/topology grid points across cores (the figure harnesses'
+//!   serial loops, parallelized).
+//!
+//! (`no_run`: the example spawns the one-thread-per-worker actor pool;
+//! the same path is executed for real by `rust/tests/engine.rs`.)
+//!
+//! ```no_run
+//! use matcha::engine::{run_engine_analytic, EngineConfig};
+//! use matcha::graph::paper_figure1_graph;
+//! use matcha::matching::decompose;
+//! use matcha::rng::Rng;
+//! use matcha::sim::{QuadraticProblem, RunConfig};
+//! use matcha::topology::VanillaSampler;
+//!
+//! let d = decompose(&paper_figure1_graph());
+//! let problem = QuadraticProblem::generate(8, 10, 1.0, 0.1, &mut Rng::new(1));
+//! let mut sampler = VanillaSampler::new(d.len());
+//! let config = EngineConfig { run: RunConfig::default(), threads: 8 };
+//! let result = run_engine_analytic(&problem, &d.matchings, &mut sampler, &config);
+//! println!("virtual time: {}", result.run.total_time);
+//! ```
+
+pub mod actor;
+pub mod event;
+pub mod policy;
+pub mod runner;
+pub mod sweep;
+
+pub use event::{Event, EventKind, EventQueue};
+pub use policy::{
+    parse_policy, AnalyticPolicy, DelayPolicy, FlakyLinkPolicy, HeterogeneousPolicy,
+    StragglerPolicy,
+};
+pub use runner::{run_engine, run_engine_analytic, EngineConfig, EngineResult, MAX_ACTOR_WORKERS};
+pub use sweep::{available_threads, sweep_parallel, sweep_serial};

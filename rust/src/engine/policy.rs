@@ -1,0 +1,521 @@
+//! Delay policies: per-link / per-worker time models for the engine.
+//!
+//! [`crate::delay::DelayModel`] charges a closed-form communication time
+//! per iteration. The engine generalizes it to a [`DelayPolicy`] that
+//! yields durations at *event granularity* — one per local compute step
+//! and one per link transmission — which is what lets the engine express
+//! the scenarios the analytic model cannot: heterogeneous links,
+//! stragglers, and link failures. The analytic model survives as one
+//! policy among several ([`AnalyticPolicy`]), with exact time parity to
+//! the sequential simulator.
+
+use crate::delay::DelayModel;
+use crate::graph::Graph;
+use crate::rng::Rng;
+
+/// A time model at per-event granularity.
+///
+/// All methods take `&mut self` because stochastic policies consume RNG
+/// state; the engine guarantees a deterministic call order (workers in
+/// index order for compute, activated matchings in activation order and
+/// edges in storage order for links), so policy draws are reproducible.
+pub trait DelayPolicy: Send {
+    /// Duration of worker `w`'s local gradient step at iteration `k`.
+    fn compute_time(&mut self, w: usize, k: usize) -> f64;
+
+    /// Transmission duration of link `(u, v)` of matching `j` at
+    /// iteration `k`.
+    fn link_time(&mut self, j: usize, u: usize, v: usize, k: usize) -> f64;
+
+    /// Does link `(u, v)` fail at iteration `k`? A failed link still
+    /// charges its [`DelayPolicy::link_time`] (detection timeout) but is
+    /// dropped from the mix. Default: never.
+    fn link_fails(&mut self, _u: usize, _v: usize, _k: usize) -> bool {
+        false
+    }
+
+    /// Closed-form override: when `Some`, the engine charges this for the
+    /// whole iteration's communication instead of simulating link events.
+    /// Only [`AnalyticPolicy`] uses it (for [`DelayModel::MaxDegree`],
+    /// which models a *non-decomposed* execution and has no per-matching
+    /// link schedule). Default: `None`.
+    fn analytic_comm_time(&mut self, _matchings: &[Graph], _activated: &[usize]) -> Option<f64> {
+        None
+    }
+
+    /// Human-readable policy name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// The sequential simulator's time model, at event granularity where
+/// possible. Constructed via [`AnalyticPolicy::matching_run_config`] it
+/// reproduces [`crate::sim::run_decentralized`]'s clock exactly:
+///
+/// - `UnitPerMatching`: every link takes 1 unit, so a matching (links in
+///   parallel) takes 1 unit and an iteration's communication is the
+///   activated count — identical to the closed form.
+/// - `StochasticLink`: link draws come from the same RNG stream in the
+///   same order as [`DelayModel::comm_time`], and the engine sums
+///   per-matching maxima in activation order, so the totals agree
+///   bit-for-bit.
+/// - `MaxDegree`: charged via the closed-form override (it models the
+///   naive non-decomposed schedule, which has no link-level timeline).
+pub struct AnalyticPolicy {
+    model: DelayModel,
+    compute_units: f64,
+    rng: Rng,
+}
+
+impl AnalyticPolicy {
+    pub fn new(model: DelayModel, compute_units: f64, rng: Rng) -> Self {
+        AnalyticPolicy { model, compute_units, rng }
+    }
+
+    /// The policy matching a [`crate::sim::RunConfig`]'s clock: same
+    /// delay model, same compute units, same delay RNG stream.
+    pub fn matching_run_config(config: &crate::sim::RunConfig) -> Self {
+        Self::new(config.delay.clone(), config.compute_units, config.delay_rng())
+    }
+}
+
+impl DelayPolicy for AnalyticPolicy {
+    fn compute_time(&mut self, _w: usize, _k: usize) -> f64 {
+        self.compute_units
+    }
+
+    fn link_time(&mut self, _j: usize, _u: usize, _v: usize, _k: usize) -> f64 {
+        match self.model {
+            DelayModel::UnitPerMatching => 1.0,
+            DelayModel::StochasticLink { min_units, max_units } => {
+                self.rng.uniform_in(min_units, max_units)
+            }
+            // Only reachable if a wrapper suppresses the closed-form
+            // override below; wrappers here all forward it, and
+            // `parse_policy` rejects the one combination (flaky over
+            // maxdeg) that would have to suppress it.
+            DelayModel::MaxDegree => 1.0,
+        }
+    }
+
+    fn analytic_comm_time(&mut self, matchings: &[Graph], activated: &[usize]) -> Option<f64> {
+        match self.model {
+            DelayModel::MaxDegree => {
+                Some(self.model.comm_time(matchings, activated, &mut self.rng))
+            }
+            _ => None,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+}
+
+/// Heterogeneous cluster: per-worker compute speeds and per-link
+/// bandwidths, fixed for the whole run (drawn once from a seed).
+pub struct HeterogeneousPolicy {
+    /// Compute duration per worker.
+    compute: Vec<f64>,
+    /// Link duration per base-graph edge, keyed by canonical `(u, v)`.
+    link: std::collections::BTreeMap<(usize, usize), f64>,
+    /// Fallback for links not in the map (e.g. freshly added edges).
+    default_link: f64,
+}
+
+impl HeterogeneousPolicy {
+    /// Draw per-worker compute in `[0.5, 1.5)·compute_units` and per-link
+    /// time in `[0.5, 2.0)` units from `seed`.
+    pub fn generate(base: &Graph, compute_units: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x4e7e_7063);
+        let compute = (0..base.num_nodes())
+            .map(|_| compute_units * rng.uniform_in(0.5, 1.5))
+            .collect();
+        let mut link = std::collections::BTreeMap::new();
+        for &(u, v) in base.edges() {
+            link.insert((u, v), rng.uniform_in(0.5, 2.0));
+        }
+        HeterogeneousPolicy { compute, link, default_link: 1.0 }
+    }
+
+    /// Explicit construction (tests, bespoke scenarios). Link keys are
+    /// canonicalized to `u < v`, matching `link_time`'s lookups.
+    pub fn from_parts(compute: Vec<f64>, link: Vec<((usize, usize), f64)>) -> Self {
+        HeterogeneousPolicy {
+            compute,
+            link: link
+                .into_iter()
+                .map(|((u, v), t)| (if u < v { (u, v) } else { (v, u) }, t))
+                .collect(),
+            default_link: 1.0,
+        }
+    }
+}
+
+impl DelayPolicy for HeterogeneousPolicy {
+    fn compute_time(&mut self, w: usize, _k: usize) -> f64 {
+        self.compute[w]
+    }
+
+    fn link_time(&mut self, _j: usize, u: usize, v: usize, _k: usize) -> f64 {
+        let key = if u < v { (u, v) } else { (v, u) };
+        *self.link.get(&key).unwrap_or(&self.default_link)
+    }
+
+    fn name(&self) -> &'static str {
+        "hetero"
+    }
+}
+
+/// Straggler injection: wraps a base policy, multiplying the compute time
+/// of the listed workers by `factor`. Because matchings serialize behind
+/// the compute barrier, one straggler slows every iteration — the
+/// scenario where decentralized (vs synchronous all-reduce) topologies
+/// are claimed to help.
+pub struct StragglerPolicy<B: DelayPolicy> {
+    base: B,
+    slow_workers: Vec<usize>,
+    factor: f64,
+}
+
+impl<B: DelayPolicy> StragglerPolicy<B> {
+    pub fn new(base: B, slow_workers: Vec<usize>, factor: f64) -> Self {
+        assert!(factor >= 1.0, "straggler factor must be ≥ 1, got {factor}");
+        StragglerPolicy { base, slow_workers, factor }
+    }
+}
+
+impl<B: DelayPolicy> DelayPolicy for StragglerPolicy<B> {
+    fn compute_time(&mut self, w: usize, k: usize) -> f64 {
+        let base = self.base.compute_time(w, k);
+        if self.slow_workers.contains(&w) {
+            base * self.factor
+        } else {
+            base
+        }
+    }
+
+    fn link_time(&mut self, j: usize, u: usize, v: usize, k: usize) -> f64 {
+        self.base.link_time(j, u, v, k)
+    }
+
+    fn link_fails(&mut self, u: usize, v: usize, k: usize) -> bool {
+        self.base.link_fails(u, v, k)
+    }
+
+    fn analytic_comm_time(&mut self, matchings: &[Graph], activated: &[usize]) -> Option<f64> {
+        // Stragglers only touch compute time; the base's communication
+        // model (including MaxDegree's closed form) passes through.
+        self.base.analytic_comm_time(matchings, activated)
+    }
+
+    fn name(&self) -> &'static str {
+        "straggler"
+    }
+}
+
+/// Link-failure injection: wraps a base policy; each link transmission
+/// independently fails with probability `fail_prob`. Failed links charge
+/// their full time (timeout) and drop out of that round's mix — the
+/// gossip update stays mean-preserving because the edge update is
+/// antisymmetric.
+///
+/// Failure injection needs a *link-granular* base: a base whose
+/// `analytic_comm_time` is `Some` (MaxDegree) bypasses the per-link
+/// schedule entirely, so no `link_fails` calls would ever happen. The
+/// wrapper forwards the base's override (keeping its timing exact) and
+/// [`parse_policy`] rejects the `flaky`-over-`maxdeg` combination so the
+/// CLI cannot silently request failures that never trigger.
+pub struct FlakyLinkPolicy<B: DelayPolicy> {
+    base: B,
+    fail_prob: f64,
+    rng: Rng,
+}
+
+impl<B: DelayPolicy> FlakyLinkPolicy<B> {
+    pub fn new(base: B, fail_prob: f64, seed: u64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&fail_prob),
+            "fail probability {fail_prob} out of range"
+        );
+        FlakyLinkPolicy { base, fail_prob, rng: Rng::new(seed ^ 0xf1a2_b3c4) }
+    }
+}
+
+impl<B: DelayPolicy> DelayPolicy for FlakyLinkPolicy<B> {
+    fn compute_time(&mut self, w: usize, k: usize) -> f64 {
+        self.base.compute_time(w, k)
+    }
+
+    fn link_time(&mut self, j: usize, u: usize, v: usize, k: usize) -> f64 {
+        self.base.link_time(j, u, v, k)
+    }
+
+    fn link_fails(&mut self, _u: usize, _v: usize, _k: usize) -> bool {
+        self.rng.bernoulli(self.fail_prob)
+    }
+
+    fn analytic_comm_time(&mut self, matchings: &[Graph], activated: &[usize]) -> Option<f64> {
+        // Forward the base's closed form so a wrapped MaxDegree model
+        // keeps its exact timing — at the documented cost that such a
+        // base never reaches the per-link schedule, hence never fails.
+        self.base.analytic_comm_time(matchings, activated)
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+}
+
+/// Parse a policy spec string into a boxed policy.
+///
+/// Forms: `analytic` | `hetero:SEED` | `straggler:WORKER:FACTOR` |
+/// `flaky:PROB`. `straggler` and `flaky` wrap the analytic policy built
+/// from `config` (so `--delay` still selects the underlying link model).
+pub fn parse_policy(
+    spec: &str,
+    base: &Graph,
+    config: &crate::sim::RunConfig,
+) -> Result<Box<dyn DelayPolicy>, String> {
+    const USAGE: &str = "expected analytic | hetero:SEED | straggler:WORKER:FACTOR | flaky:PROB";
+    let parts: Vec<&str> = spec.split(':').collect();
+    let analytic = || AnalyticPolicy::matching_run_config(config);
+    match parts[0] {
+        "analytic" => {
+            if parts.len() != 1 {
+                return Err(format!("policy '{spec}': analytic takes no arguments ({USAGE})"));
+            }
+            Ok(Box::new(analytic()))
+        }
+        "hetero" => {
+            if parts.len() != 2 {
+                return Err(format!("policy '{spec}': {USAGE}"));
+            }
+            let seed: u64 = parts[1]
+                .parse()
+                .map_err(|e| format!("policy '{spec}': bad seed: {e}"))?;
+            Ok(Box::new(HeterogeneousPolicy::generate(base, config.compute_units, seed)))
+        }
+        "straggler" => {
+            if parts.len() != 3 {
+                return Err(format!("policy '{spec}': {USAGE}"));
+            }
+            let w: usize = parts[1]
+                .parse()
+                .map_err(|e| format!("policy '{spec}': bad worker: {e}"))?;
+            if w >= base.num_nodes() {
+                return Err(format!(
+                    "policy '{spec}': worker {w} out of range for {} nodes",
+                    base.num_nodes()
+                ));
+            }
+            let f: f64 = parts[2]
+                .parse()
+                .map_err(|e| format!("policy '{spec}': bad factor: {e}"))?;
+            if f < 1.0 {
+                return Err(format!("policy '{spec}': factor must be ≥ 1"));
+            }
+            Ok(Box::new(StragglerPolicy::new(analytic(), vec![w], f)))
+        }
+        "flaky" => {
+            if parts.len() != 2 {
+                return Err(format!("policy '{spec}': {USAGE}"));
+            }
+            if matches!(config.delay, DelayModel::MaxDegree) {
+                return Err(format!(
+                    "policy '{spec}': link-failure injection needs a link-granular \
+                     delay model; --delay maxdeg has no per-link schedule \
+                     (use --delay unit or stochastic:lo:hi)"
+                ));
+            }
+            let p: f64 = parts[1]
+                .parse()
+                .map_err(|e| format!("policy '{spec}': bad probability: {e}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("policy '{spec}': probability {p} out of [0,1]"));
+            }
+            Ok(Box::new(FlakyLinkPolicy::new(analytic(), p, config.seed)))
+        }
+        other => Err(format!("unknown policy '{other}' ({USAGE})")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+    use crate::sim::RunConfig;
+
+    #[test]
+    fn analytic_unit_matches_closed_form() {
+        let d = decompose(&paper_figure1_graph());
+        let cfg = RunConfig::default();
+        let mut p = AnalyticPolicy::matching_run_config(&cfg);
+        // Per-matching time = max over links of link_time = 1; summed over
+        // two activated matchings = closed form's activated count.
+        let mut total = 0.0;
+        for &j in &[0usize, 2] {
+            let mut mt: f64 = 0.0;
+            for &(u, v) in d.matchings[j].edges() {
+                mt = mt.max(p.link_time(j, u, v, 0));
+            }
+            total += mt;
+        }
+        let mut rng = cfg.delay_rng();
+        assert_eq!(total, cfg.delay.comm_time(&d.matchings, &[0, 2], &mut rng));
+    }
+
+    #[test]
+    fn analytic_stochastic_matches_closed_form_stream() {
+        let d = decompose(&paper_figure1_graph());
+        let cfg = RunConfig {
+            delay: DelayModel::StochasticLink { min_units: 0.5, max_units: 2.0 },
+            seed: 77,
+            ..RunConfig::default()
+        };
+        let mut p = AnalyticPolicy::matching_run_config(&cfg);
+        let activated = vec![0usize, 1];
+        let mut total = 0.0;
+        for &j in &activated {
+            let mut mt: f64 = 0.0;
+            for &(u, v) in d.matchings[j].edges() {
+                mt = mt.max(p.link_time(j, u, v, 0));
+            }
+            total += mt;
+        }
+        let mut rng = cfg.delay_rng();
+        let closed = cfg.delay.comm_time(&d.matchings, &activated, &mut rng);
+        assert_eq!(total, closed, "same stream, same order -> identical total");
+    }
+
+    #[test]
+    fn analytic_maxdeg_uses_override() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let cfg = RunConfig { delay: DelayModel::MaxDegree, ..RunConfig::default() };
+        let mut p = AnalyticPolicy::matching_run_config(&cfg);
+        let all: Vec<usize> = (0..d.len()).collect();
+        let t = p.analytic_comm_time(&d.matchings, &all).unwrap();
+        assert_eq!(t, g.max_degree() as f64);
+        // Other models do not override.
+        let mut unit = AnalyticPolicy::matching_run_config(&RunConfig::default());
+        assert!(unit.analytic_comm_time(&d.matchings, &all).is_none());
+    }
+
+    #[test]
+    fn straggler_slows_only_listed_workers() {
+        let cfg = RunConfig::default();
+        let base = AnalyticPolicy::matching_run_config(&cfg);
+        let mut p = StragglerPolicy::new(base, vec![2], 5.0);
+        assert_eq!(p.compute_time(0, 0), 1.0);
+        assert_eq!(p.compute_time(2, 0), 5.0);
+        assert_eq!(p.link_time(0, 0, 1, 0), 1.0);
+    }
+
+    #[test]
+    fn flaky_failure_frequency_tracks_probability() {
+        let cfg = RunConfig::default();
+        let base = AnalyticPolicy::matching_run_config(&cfg);
+        let mut p = FlakyLinkPolicy::new(base, 0.3, 9);
+        let n = 20_000;
+        let fails = (0..n).filter(|&k| p.link_fails(0, 1, k)).count();
+        let freq = fails as f64 / n as f64;
+        assert!((freq - 0.3).abs() < 0.02, "freq {freq}");
+    }
+
+    #[test]
+    fn hetero_is_deterministic_and_in_band() {
+        let g = paper_figure1_graph();
+        let mut a = HeterogeneousPolicy::generate(&g, 1.0, 4);
+        let mut b = HeterogeneousPolicy::generate(&g, 1.0, 4);
+        for w in 0..g.num_nodes() {
+            let t = a.compute_time(w, 0);
+            assert_eq!(t, b.compute_time(w, 0));
+            assert!((0.5..1.5).contains(&t));
+        }
+        for &(u, v) in g.edges() {
+            let t = a.link_time(0, u, v, 0);
+            assert_eq!(t, b.link_time(0, v, u, 0), "orientation-independent");
+            assert!((0.5..2.0).contains(&t));
+        }
+    }
+
+    #[test]
+    fn wrappers_forward_the_maxdeg_closed_form() {
+        // Regression: a straggler wrapped over MaxDegree must keep the
+        // closed-form communication time, not fall through to the
+        // event path's unit-time placeholder.
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let cfg = RunConfig { delay: DelayModel::MaxDegree, ..RunConfig::default() };
+        let all: Vec<usize> = (0..d.len()).collect();
+        let mut wrapped =
+            StragglerPolicy::new(AnalyticPolicy::matching_run_config(&cfg), vec![1], 3.0);
+        assert_eq!(
+            wrapped.analytic_comm_time(&d.matchings, &all),
+            Some(g.max_degree() as f64)
+        );
+        let mut flaky =
+            FlakyLinkPolicy::new(AnalyticPolicy::matching_run_config(&cfg), 0.1, 2);
+        assert_eq!(
+            flaky.analytic_comm_time(&d.matchings, &all),
+            Some(g.max_degree() as f64)
+        );
+    }
+
+    #[test]
+    fn parse_policy_rejects_flaky_over_maxdeg() {
+        let g = paper_figure1_graph();
+        let cfg = RunConfig { delay: DelayModel::MaxDegree, ..RunConfig::default() };
+        let r = parse_policy("flaky:0.2", &g, &cfg);
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("link-granular"));
+        // Straggler over maxdeg is fine (communication passes through).
+        assert!(parse_policy("straggler:0:2.0", &g, &cfg).is_ok());
+    }
+
+    #[test]
+    fn from_parts_canonicalizes_link_keys() {
+        let mut p = HeterogeneousPolicy::from_parts(vec![1.0; 3], vec![((2, 1), 5.0)]);
+        assert_eq!(p.link_time(0, 1, 2, 0), 5.0);
+        assert_eq!(p.link_time(0, 2, 1, 0), 5.0);
+    }
+
+    #[test]
+    fn parse_policy_accepts_valid_forms() {
+        let g = paper_figure1_graph();
+        let cfg = RunConfig::default();
+        for spec in ["analytic", "hetero:3", "straggler:0:4.0", "flaky:0.2"] {
+            assert!(parse_policy(spec, &g, &cfg).is_ok(), "{spec}");
+        }
+        assert_eq!(parse_policy("analytic", &g, &cfg).unwrap().name(), "analytic");
+    }
+
+    #[test]
+    fn parse_policy_rejects_malformed_forms() {
+        let g = paper_figure1_graph();
+        let cfg = RunConfig::default();
+        for spec in [
+            "",
+            "bogus",
+            "hetero",
+            "hetero:x",
+            "straggler",
+            "straggler:0",
+            "straggler:99:2.0",
+            "straggler:0:0.5",
+            "flaky",
+            "flaky:2.0",
+            "flaky:x",
+            "analytic:1",
+        ] {
+            let r = parse_policy(spec, &g, &cfg);
+            assert!(r.is_err(), "spec '{spec}' should be rejected");
+            let msg = r.unwrap_err();
+            assert!(
+                msg.contains("policy"),
+                "error for '{spec}' should name the policy context: {msg}"
+            );
+        }
+    }
+}

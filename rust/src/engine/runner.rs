@@ -1,0 +1,520 @@
+//! The event-driven execution engine.
+//!
+//! Per iteration the engine runs two phases against a discrete-event
+//! queue:
+//!
+//! 1. **Compute phase** — every worker's local gradient step is scheduled
+//!    as a `ComputeDone` event with a per-worker duration from the
+//!    [`DelayPolicy`]; the phase barrier is the latest completion
+//!    (stragglers stretch it).
+//! 2. **Communication phase** — the activated matchings run sequentially
+//!    (the paper's model); inside a matching every link is a `LinkDone`
+//!    event, links running in parallel, so the matching finishes at the
+//!    slowest link. Failure injection marks links dead: they charge their
+//!    timeout but drop out of the mix.
+//!
+//! State updates go through an [`Executor`]: in-process (sequential
+//! deterministic mode) or the actor pool of [`super::actor`] (one
+//! `std::thread` per worker). Both produce bit-for-bit identical
+//! trajectories, and under [`AnalyticPolicy`] they reproduce
+//! [`crate::sim::run_decentralized`] exactly (see `rust/tests/engine.rs`).
+
+use super::actor::{worker_loop, Cmd, GossipMsg, Reply};
+use super::event::{EventKind, EventQueue};
+use super::policy::{AnalyticPolicy, DelayPolicy};
+use crate::delay::VirtualClock;
+use crate::graph::Graph;
+use crate::metrics::Recorder;
+use crate::sim::kernel::{
+    apply_gossip, init_iterates, local_sgd_step, record_metrics, worker_streams, GossipScratch,
+};
+use crate::sim::{mean_iterate, Compression, Problem, RunConfig, RunResult};
+use crate::topology::TopologySampler;
+use std::sync::mpsc;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Engine configuration: the shared run parameters plus the execution
+/// mode. `threads <= 1` runs the in-process sequential mode; larger
+/// values enable the actor pool (one thread per worker — the knob is a
+/// mode switch, not a pool size).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub run: RunConfig,
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { run: RunConfig::default(), threads: 1 }
+    }
+}
+
+/// Engine outcome: the standard [`RunResult`] plus engine-level
+/// observability counters.
+pub struct EngineResult {
+    pub run: RunResult,
+    /// Links dropped by failure injection over the whole run.
+    pub dropped_links: usize,
+    /// Discrete events processed by the queue.
+    pub events: u64,
+}
+
+/// How iterate state is advanced each phase.
+trait Executor {
+    fn step(&mut self, k: usize, lr: f64, xs: &mut [Vec<f64>]);
+    fn mix(
+        &mut self,
+        k: usize,
+        alpha: f64,
+        matchings: &[Graph],
+        activated: &[usize],
+        dead: &[(usize, usize)],
+        xs: &mut [Vec<f64>],
+    );
+}
+
+/// In-process executor: the shared kernel, worker loop in index order.
+struct SequentialExec<'p, P: Problem + ?Sized> {
+    problem: &'p P,
+    worker_rngs: Vec<crate::rng::Rng>,
+    grad: Vec<f64>,
+    scratch: GossipScratch,
+    compression: Option<Compression>,
+    seed: u64,
+}
+
+impl<P: Problem + ?Sized> Executor for SequentialExec<'_, P> {
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut [Vec<f64>]) {
+        for (w, x) in xs.iter_mut().enumerate() {
+            local_sgd_step(self.problem, w, lr, x, &mut self.worker_rngs[w], &mut self.grad);
+        }
+    }
+
+    fn mix(
+        &mut self,
+        k: usize,
+        alpha: f64,
+        matchings: &[Graph],
+        activated: &[usize],
+        dead: &[(usize, usize)],
+        xs: &mut [Vec<f64>],
+    ) {
+        apply_gossip(
+            xs,
+            matchings,
+            activated,
+            alpha,
+            self.compression.as_ref(),
+            Some(dead),
+            self.seed,
+            k,
+            &mut self.scratch,
+        );
+    }
+}
+
+/// Actor-pool executor: broadcasts commands, gathers replies, and keeps
+/// the coordinator's mirror of the iterates authoritative for routing.
+struct ActorExec<'a> {
+    cmd_txs: &'a [Sender<Cmd>],
+    reply_rx: &'a Receiver<Reply>,
+}
+
+impl ActorExec<'_> {
+    fn collect(&self, xs: &mut [Vec<f64>]) {
+        for _ in 0..xs.len() {
+            match self.reply_rx.recv().expect("worker actor died") {
+                Reply::Stepped { worker, x } | Reply::Mixed { worker, x } => xs[worker] = x,
+            }
+        }
+    }
+}
+
+impl Executor for ActorExec<'_> {
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut [Vec<f64>]) {
+        for tx in self.cmd_txs {
+            tx.send(Cmd::Step { lr }).expect("worker actor died");
+        }
+        self.collect(xs);
+    }
+
+    fn mix(
+        &mut self,
+        k: usize,
+        alpha: f64,
+        matchings: &[Graph],
+        activated: &[usize],
+        dead: &[(usize, usize)],
+        xs: &mut [Vec<f64>],
+    ) {
+        // Route each live activated edge's peer iterate to both
+        // endpoints, in global (activation, edge) order so each worker's
+        // fold order matches the sequential kernel.
+        let mut per: Vec<Vec<GossipMsg>> = (0..xs.len()).map(|_| Vec::new()).collect();
+        for &j in activated {
+            for &(u, v) in matchings[j].edges() {
+                if dead.contains(&(u, v)) {
+                    continue;
+                }
+                per[u].push(GossipMsg { matching: j, u, v, peer_x: xs[v].clone() });
+                per[v].push(GossipMsg { matching: j, u, v, peer_x: xs[u].clone() });
+            }
+        }
+        for (tx, msgs) in self.cmd_txs.iter().zip(per.into_iter()) {
+            tx.send(Cmd::Mix { k, alpha, msgs }).expect("worker actor died");
+        }
+        self.collect(xs);
+    }
+}
+
+/// Actor mode spawns one OS thread per worker; beyond this many workers
+/// the engine falls back to the (identical-result) sequential executor
+/// rather than exhausting OS threads on large graphs. Bounded-pool
+/// multiplexing is a ROADMAP item.
+pub const MAX_ACTOR_WORKERS: usize = 256;
+
+/// Run the engine. Dispatches on `config.threads`:
+/// sequential in-process mode (`<= 1`) or the actor pool. Graphs with
+/// more than [`MAX_ACTOR_WORKERS`] workers always run sequentially.
+pub fn run_engine<P, S>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &EngineConfig,
+) -> EngineResult
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
+    let m = problem.num_workers();
+    let d = problem.dim();
+    if config.threads <= 1 || m > MAX_ACTOR_WORKERS {
+        let exec = SequentialExec {
+            problem,
+            worker_rngs: worker_streams(config.run.seed, m),
+            grad: vec![0.0; d],
+            scratch: GossipScratch::new(m, d),
+            compression: config.run.compression.clone(),
+            seed: config.run.seed,
+        };
+        return drive(problem, matchings, sampler, policy, &config.run, exec);
+    }
+
+    let xs0 = init_iterates(config.run.seed, m, d);
+    let rngs = worker_streams(config.run.seed, m);
+    std::thread::scope(|scope| {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(m);
+        for (w, (x0, rng)) in xs0.iter().zip(rngs.iter()).enumerate() {
+            let (tx, rx) = mpsc::channel();
+            cmd_txs.push(tx);
+            let rtx = reply_tx.clone();
+            let x0 = x0.clone();
+            let rng = rng.clone();
+            let comp = config.run.compression.clone();
+            let seed = config.run.seed;
+            scope.spawn(move || worker_loop(problem, w, x0, rng, comp, seed, rx, rtx));
+        }
+        drop(reply_tx);
+        let exec = ActorExec { cmd_txs: &cmd_txs, reply_rx: &reply_rx };
+        let result = drive(problem, matchings, sampler, policy, &config.run, exec);
+        for tx in &cmd_txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        result
+    })
+}
+
+/// Convenience: run with the analytic policy matching `config.run` — the
+/// mode that reproduces [`crate::sim::run_decentralized`] bit-for-bit.
+pub fn run_engine_analytic<P, S>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    config: &EngineConfig,
+) -> EngineResult
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
+    let mut policy = AnalyticPolicy::matching_run_config(&config.run);
+    run_engine(problem, matchings, sampler, &mut policy, config)
+}
+
+/// The shared event-driven iteration loop.
+fn drive<P, S, E>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &RunConfig,
+    mut exec: E,
+) -> EngineResult
+where
+    P: Problem + ?Sized,
+    S: TopologySampler,
+    E: Executor,
+{
+    let m = problem.num_workers();
+    let d = problem.dim();
+    let mut xs = init_iterates(config.seed, m, d);
+    let mut queue = EventQueue::new();
+    let mut clock = VirtualClock::new(config.compute_units);
+    let mut metrics = Recorder::new();
+    let mut total_comm = 0.0;
+    let mut dropped = 0usize;
+    let mut lr = config.lr;
+
+    record_metrics(problem, 0, 0.0, 0.0, &xs, &mut metrics);
+
+    for k in 0..config.iterations {
+        let t0 = clock.elapsed();
+
+        // --- compute phase (barrier at the slowest worker) -----------
+        let mut compute_dur = 0.0f64;
+        for w in 0..m {
+            let ct = policy.compute_time(w, k);
+            queue.schedule(t0 + ct, EventKind::ComputeDone { worker: w, k });
+            compute_dur = compute_dur.max(ct);
+        }
+        queue.run_to_barrier();
+        exec.step(k, lr, &mut xs);
+
+        // --- communication phase -------------------------------------
+        let round = sampler.round(k);
+        let mut dead: Vec<(usize, usize)> = Vec::new();
+        let mut comm_t = match policy.analytic_comm_time(matchings, &round.activated) {
+            Some(t) => t,
+            None => {
+                // Matchings serialize; links inside a matching run in
+                // parallel. Durations accumulate per matching (rather
+                // than differencing absolute event times) to stay
+                // bit-exact with the closed-form path.
+                let mut total = 0.0f64;
+                let mut t_matching = t0 + compute_dur;
+                for &j in &round.activated {
+                    let mut dur = 0.0f64;
+                    for &(u, v) in matchings[j].edges() {
+                        let failed = policy.link_fails(u, v, k);
+                        let lt = policy.link_time(j, u, v, k);
+                        // Event times carry the *unscaled* link duration;
+                        // the compression time factor below applies to the
+                        // iteration total only. If event timestamps ever
+                        // become authoritative (async mode), scale here.
+                        queue.schedule(
+                            t_matching + lt,
+                            EventKind::LinkDone { matching: j, edge: (u, v), k, failed },
+                        );
+                        if failed {
+                            dead.push((u, v));
+                        }
+                        dur = dur.max(lt);
+                    }
+                    queue.run_to_barrier();
+                    t_matching += dur;
+                    total += dur;
+                }
+                total
+            }
+        };
+        if let Some(comp) = &config.compression {
+            comm_t *= comp.time_factor(config.latency_floor);
+        }
+        dropped += dead.len();
+
+        // --- mix phase -----------------------------------------------
+        if !round.activated.is_empty() {
+            exec.mix(k, config.alpha, matchings, &round.activated, &dead, &mut xs);
+        }
+
+        // --- time accounting & recording -----------------------------
+        total_comm += comm_t;
+        let now = clock.advance(compute_dur + comm_t);
+        if (k + 1) % config.lr_decay_every == 0 {
+            lr *= config.lr_decay;
+        }
+        if (k + 1) % config.record_every == 0 || k + 1 == config.iterations {
+            record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics);
+        }
+    }
+
+    EngineResult {
+        run: RunResult {
+            final_mean: mean_iterate(&xs),
+            total_time: clock.elapsed(),
+            total_comm_units: total_comm,
+            metrics,
+        },
+        dropped_links: dropped,
+        events: queue.processed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::optimize_activation_probabilities;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+    use crate::mixing::optimize_alpha;
+    use crate::rng::Rng;
+    use crate::sim::QuadraticProblem;
+    use crate::topology::{MatchaSampler, VanillaSampler};
+
+    fn quad(m: usize) -> QuadraticProblem {
+        let mut rng = Rng::new(99);
+        QuadraticProblem::generate(m, 10, 1.0, 0.1, &mut rng)
+    }
+
+    #[test]
+    fn sequential_engine_matches_sim_runner_exactly() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.5);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        let p = quad(8);
+        let cfg = RunConfig {
+            lr: 0.02,
+            iterations: 300,
+            alpha: mix.alpha,
+            seed: 12,
+            ..RunConfig::default()
+        };
+
+        let mut s1 = MatchaSampler::new(probs.probabilities.clone(), 4);
+        let reference = crate::sim::run_decentralized(&p, &d.matchings, &mut s1, &cfg);
+
+        let mut s2 = MatchaSampler::new(probs.probabilities.clone(), 4);
+        let engine = run_engine_analytic(
+            &p,
+            &d.matchings,
+            &mut s2,
+            &EngineConfig { run: cfg, threads: 1 },
+        );
+
+        assert_eq!(engine.run.final_mean, reference.final_mean);
+        assert_eq!(engine.run.total_time, reference.total_time);
+        assert_eq!(engine.run.total_comm_units, reference.total_comm_units);
+        assert_eq!(engine.dropped_links, 0);
+        assert!(engine.events > 0, "event queue must actually be exercised");
+    }
+
+    #[test]
+    fn parallel_actors_match_sequential_engine_exactly() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.4);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        let p = quad(8);
+        let cfg = RunConfig {
+            lr: 0.03,
+            iterations: 120,
+            alpha: mix.alpha,
+            seed: 31,
+            ..RunConfig::default()
+        };
+
+        let mut s1 = MatchaSampler::new(probs.probabilities.clone(), 6);
+        let seq = run_engine_analytic(
+            &p,
+            &d.matchings,
+            &mut s1,
+            &EngineConfig { run: cfg.clone(), threads: 1 },
+        );
+        let mut s2 = MatchaSampler::new(probs.probabilities.clone(), 6);
+        let par = run_engine_analytic(
+            &p,
+            &d.matchings,
+            &mut s2,
+            &EngineConfig { run: cfg, threads: 8 },
+        );
+        assert_eq!(par.run.final_mean, seq.run.final_mean);
+        assert_eq!(par.run.total_time, seq.run.total_time);
+    }
+
+    #[test]
+    fn straggler_stretches_iteration_time_exactly() {
+        use super::super::policy::StragglerPolicy;
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let p = quad(8);
+        let iters = 50usize;
+        let cfg = RunConfig {
+            iterations: iters,
+            alpha: 0.1,
+            seed: 7,
+            ..RunConfig::default()
+        };
+        let engine_cfg = EngineConfig { run: cfg.clone(), threads: 1 };
+        let factor = 4.0;
+
+        let mut s1 = VanillaSampler::new(d.len());
+        let base = run_engine_analytic(&p, &d.matchings, &mut s1, &engine_cfg);
+
+        let mut s2 = VanillaSampler::new(d.len());
+        let mut policy = StragglerPolicy::new(
+            AnalyticPolicy::matching_run_config(&cfg),
+            vec![3],
+            factor,
+        );
+        let straggled = run_engine(&p, &d.matchings, &mut s2, &mut policy, &engine_cfg);
+
+        // Vanilla activates every matching every iteration: per-iteration
+        // time is compute + M without the straggler, factor·compute + M
+        // with it (compute_units = 1).
+        let m_count = d.len() as f64;
+        assert_eq!(base.run.total_time, iters as f64 * (1.0 + m_count));
+        assert_eq!(
+            straggled.run.total_time,
+            iters as f64 * (factor + m_count),
+            "one straggler must gate every iteration's compute phase"
+        );
+        // The trajectory itself is unaffected — only time stretches.
+        assert_eq!(straggled.run.final_mean, base.run.final_mean);
+    }
+
+    #[test]
+    fn flaky_links_drop_but_preserve_worker_mean_dynamics() {
+        use super::super::policy::FlakyLinkPolicy;
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let p = quad(8);
+        let cfg = RunConfig {
+            lr: 0.02,
+            iterations: 400,
+            alpha: 0.15,
+            seed: 3,
+            ..RunConfig::default()
+        };
+        let engine_cfg = EngineConfig { run: cfg.clone(), threads: 1 };
+        let mut sampler = VanillaSampler::new(d.len());
+        let mut policy =
+            FlakyLinkPolicy::new(AnalyticPolicy::matching_run_config(&cfg), 0.3, 11);
+        let res = run_engine(&p, &d.matchings, &mut sampler, &mut policy, &engine_cfg);
+        assert!(res.dropped_links > 0, "failure injection must trigger");
+        // Still converges: dropped links only slow consensus.
+        let sub0 = res.run.metrics.get("subopt_vs_iter")[0].y;
+        let subf = res.run.metrics.last("subopt_vs_iter").unwrap();
+        assert!(subf < 0.2 * sub0, "no convergence under flaky links: {sub0} -> {subf}");
+    }
+
+    #[test]
+    fn hetero_policy_changes_time_not_trajectory() {
+        use super::super::policy::HeterogeneousPolicy;
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let p = quad(8);
+        let cfg = RunConfig { iterations: 60, alpha: 0.1, seed: 5, ..RunConfig::default() };
+        let engine_cfg = EngineConfig { run: cfg.clone(), threads: 1 };
+
+        let mut s1 = VanillaSampler::new(d.len());
+        let base = run_engine_analytic(&p, &d.matchings, &mut s1, &engine_cfg);
+        let mut s2 = VanillaSampler::new(d.len());
+        let mut policy = HeterogeneousPolicy::generate(&g, 1.0, 42);
+        let het = run_engine(&p, &d.matchings, &mut s2, &mut policy, &engine_cfg);
+
+        assert_eq!(het.run.final_mean, base.run.final_mean);
+        assert_ne!(het.run.total_time, base.run.total_time);
+    }
+}

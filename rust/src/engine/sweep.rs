@@ -1,0 +1,146 @@
+//! Parallel sweep driver: fan independent grid points (budgets,
+//! topologies, seeds) across OS threads.
+//!
+//! The paper's figure harnesses evaluate many `(budget, topology)`
+//! combinations; each point is an independent simulation, so the sweep is
+//! embarrassingly parallel. Work is distributed by a shared atomic
+//! cursor (cheap work stealing — long points don't stall short ones) and
+//! results are returned **in input order**, so a parallel sweep is a
+//! drop-in replacement for the serial loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of hardware threads (1 if unknown).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(index, point)` for every point serially. The reference path —
+/// and the baseline the speedup note in `benches/engine_sweep.rs`
+/// measures against.
+pub fn sweep_serial<T, R, F>(points: &[T], mut f: F) -> Vec<R>
+where
+    F: FnMut(usize, &T) -> R,
+{
+    points.iter().enumerate().map(|(i, p)| f(i, p)).collect()
+}
+
+/// Run `f(index, point)` for every point on up to `threads` OS threads.
+/// Results come back in input order. `f` must be `Sync` (it is shared by
+/// reference across threads) and is typically a closure over read-only
+/// problem data.
+pub fn sweep_parallel<T, R, F>(points: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = points.len();
+    let threads = threads.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return sweep_serial(points, f);
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let cursor = &cursor;
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i, &points[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("sweep point not computed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_matches_serial_in_order() {
+        let points: Vec<usize> = (0..53).collect();
+        let f = |i: usize, &p: &usize| {
+            assert_eq!(i, p);
+            p * p + 1
+        };
+        let serial = sweep_serial(&points, f);
+        for threads in [1, 2, 4, 7] {
+            let par = sweep_parallel(&points, threads, f);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_point_sweeps() {
+        let empty: Vec<u32> = vec![];
+        assert!(sweep_parallel(&empty, 4, |_, &p| p).is_empty());
+        assert_eq!(sweep_parallel(&[9u32], 4, |_, &p| p), vec![9]);
+    }
+
+    #[test]
+    fn engine_runs_fan_out_deterministically() {
+        // A miniature of the real use: the same engine run from several
+        // threads must give the same result as serially.
+        use crate::engine::{run_engine_analytic, EngineConfig};
+        use crate::graph::ring;
+        use crate::matching::decompose;
+        use crate::rng::Rng;
+        use crate::sim::{QuadraticProblem, RunConfig};
+        use crate::topology::MatchaSampler;
+
+        let g = ring(6);
+        let d = decompose(&g);
+        let mut prng = Rng::new(1);
+        let problem = QuadraticProblem::generate(6, 8, 1.0, 0.1, &mut prng);
+        let budgets = [0.25, 0.5, 0.75, 1.0];
+        let run_point = |_i: usize, &cb: &f64| {
+            let probs = crate::budget::optimize_activation_probabilities(&d, cb);
+            let mix = crate::mixing::optimize_alpha(&d, &probs.probabilities);
+            let mut sampler = MatchaSampler::new(probs.probabilities.clone(), 2);
+            let cfg = EngineConfig {
+                run: RunConfig {
+                    lr: 0.05,
+                    iterations: 80,
+                    alpha: mix.alpha,
+                    seed: 3,
+                    ..RunConfig::default()
+                },
+                threads: 1,
+            };
+            let r = run_engine_analytic(&problem, &d.matchings, &mut sampler, &cfg);
+            (r.run.total_time, r.run.final_mean)
+        };
+        let serial = sweep_serial(&budgets, run_point);
+        let par = sweep_parallel(&budgets, 4, run_point);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn available_threads_positive() {
+        assert!(available_threads() >= 1);
+    }
+}

@@ -68,6 +68,18 @@ impl Recorder {
             .min_by(|a, b| a.partial_cmp(b).unwrap())
     }
 
+    /// Merge another recorder's series into this one under a prefix:
+    /// series `s` lands as `prefix/s`. Used by the engine's sweep driver
+    /// to collect per-grid-point recorders into one artifact.
+    pub fn merge(&mut self, prefix: &str, other: &Recorder) {
+        for (name, samples) in &other.series {
+            self.series
+                .entry(format!("{prefix}/{name}"))
+                .or_default()
+                .extend(samples.iter().cloned());
+        }
+    }
+
     /// Serialize all series as JSON: `{name: [[x,y], ...], ...}`.
     pub fn to_json(&self) -> Json {
         Json::Obj(
@@ -128,6 +140,20 @@ mod tests {
         }
         assert_eq!(r.first_x_below("loss", 0.1), Some(2.0));
         assert_eq!(r.first_x_below("loss", 0.01), None);
+    }
+
+    #[test]
+    fn merge_prefixes_series() {
+        let mut a = Recorder::new();
+        a.push("loss", 0.0, 1.0);
+        let mut b = Recorder::new();
+        b.push("loss", 0.0, 2.0);
+        b.push("acc", 0.0, 0.5);
+        a.merge("cb=0.5", &b);
+        assert_eq!(a.last("loss"), Some(1.0), "own series untouched");
+        assert_eq!(a.last("cb=0.5/loss"), Some(2.0));
+        assert_eq!(a.last("cb=0.5/acc"), Some(0.5));
+        assert_eq!(a.names().len(), 3);
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! The single step/mix kernel shared by the sequential simulator
+//! ([`crate::sim::run_decentralized`]) and the event-driven engine
+//! ([`crate::engine`]).
+//!
+//! Both execution paths must produce **bit-for-bit identical**
+//! trajectories for the same seed, so everything that touches the
+//! iterates or draws randomness for them lives here exactly once:
+//!
+//! - [`worker_streams`] — the per-worker gradient-noise RNG derivation.
+//!   Giving each worker its own stream (instead of one shared generator
+//!   consumed in worker order) is what makes the engine's parallel actor
+//!   mode reproducible: a worker's draws depend only on `(seed, worker)`,
+//!   never on thread scheduling.
+//! - [`init_iterates`] — the common initial point (Theorem 1 starts all
+//!   workers at the same iterate).
+//! - [`local_sgd_step`] — one worker's local stochastic-gradient step.
+//! - [`apply_gossip`] / [`fold_edge_into_deltas`] — the simultaneous
+//!   gossip mix `X ← X + α Σ_{j∈activated} (−L_j) X`, applied edge-wise,
+//!   with optional message compression and an optional set of dead links
+//!   (the engine's failure injection; the sequential simulator passes
+//!   none).
+//! - [`edge_rng`] — compression randomness derived per
+//!   `(seed, iteration, matching, edge)`, so both endpoints of a link —
+//!   and both execution paths — quantize a message identically no matter
+//!   in which order edges are processed.
+
+use super::{Compression, Problem};
+use crate::graph::Graph;
+use crate::rng::Rng;
+
+/// Domain-separation constant for the gossip/compression RNG stream.
+pub const MIX_STREAM_SALT: u64 = 0xc03f_5eed;
+
+/// Per-worker gradient-noise RNG streams for a run seed.
+///
+/// The derivation feeds `seed + (w+1)·φ` (with φ the 64-bit golden-ratio
+/// constant) through [`Rng::new`]'s SplitMix expansion, which decorrelates
+/// even adjacent seeds.
+pub fn worker_streams(seed: u64, m: usize) -> Vec<Rng> {
+    (0..m)
+        .map(|w| {
+            Rng::new(seed.wrapping_add((w as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)))
+        })
+        .collect()
+}
+
+/// Initial iterates: every worker starts from the same random point.
+pub fn init_iterates(seed: u64, m: usize, d: usize) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    let x0: Vec<f64> = (0..d).map(|_| 0.01 * rng.normal()).collect();
+    vec![x0; m]
+}
+
+/// One worker's local SGD step: `x ← x − η g(x)`. `grad` is scratch.
+pub fn local_sgd_step<P: Problem + ?Sized>(
+    problem: &P,
+    worker: usize,
+    lr: f64,
+    x: &mut [f64],
+    rng: &mut Rng,
+    grad: &mut [f64],
+) {
+    problem.stoch_grad(worker, x, rng, grad);
+    for (xi, &gi) in x.iter_mut().zip(grad.iter()) {
+        *xi -= lr * gi;
+    }
+}
+
+/// Deterministic per-edge RNG for compression: both endpoints of link
+/// `(u,v)` in matching `j` at iteration `k` derive the same stream, so
+/// they compress the shared difference message identically.
+pub fn edge_rng(seed: u64, k: usize, j: usize, u: usize, v: usize) -> Rng {
+    let h = (k as u64)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ (j as u64).wrapping_mul(0xc2b2_ae3d_27d4_eb4f)
+        ^ (u as u64).wrapping_mul(0x1656_67b1_9e37_79f9)
+        ^ (v as u64).wrapping_mul(0x2545_f491_4f6c_dd1d);
+    Rng::new(seed ^ MIX_STREAM_SALT ^ h)
+}
+
+/// Reusable scratch buffers for [`apply_gossip`].
+pub struct GossipScratch {
+    deltas: Vec<Vec<f64>>,
+    diff: Vec<f64>,
+}
+
+impl GossipScratch {
+    pub fn new(m: usize, d: usize) -> Self {
+        GossipScratch { deltas: vec![vec![0.0; d]; m], diff: vec![0.0; d] }
+    }
+}
+
+/// Compute the canonical compressed difference message of edge `(u,v)`
+/// (`u < v` in matching storage): `diff = x_v − x_u`, compressed in place
+/// when compression is configured. Shared by the full-state mix below and
+/// the engine's per-worker actor mix.
+pub fn edge_diff_message(
+    xu: &[f64],
+    xv: &[f64],
+    diff: &mut [f64],
+    compression: Option<&Compression>,
+    seed: u64,
+    k: usize,
+    j: usize,
+    u: usize,
+    v: usize,
+) {
+    for i in 0..diff.len() {
+        diff[i] = xv[i] - xu[i];
+    }
+    if let Some(comp) = compression {
+        let mut rng = edge_rng(seed, k, j, u, v);
+        comp.compress(diff, &mut rng);
+    }
+}
+
+/// Fold one edge's (already computed) message into the delta accumulators:
+/// `Δ_u += diff`, `Δ_v −= diff`.
+pub fn fold_edge_into_deltas(deltas: &mut [Vec<f64>], u: usize, v: usize, diff: &[f64]) {
+    for i in 0..diff.len() {
+        deltas[u][i] += diff[i];
+        deltas[v][i] -= diff[i];
+    }
+}
+
+/// Apply one simultaneous gossip step in place:
+/// `X ← X + α Σ_{j∈activated} (−L_j^live) X`, where `L_j^live` omits any
+/// links listed in `dead` (failure injection; `dead` uses the canonical
+/// `u < v` orientation). This is exactly the matrix product
+/// `X ← W⁽ᵏ⁾ X` when no links are dead (verified by
+/// `sim::runner::tests::edgewise_mix_equals_matrix_mix`).
+pub fn apply_gossip(
+    xs: &mut [Vec<f64>],
+    matchings: &[Graph],
+    activated: &[usize],
+    alpha: f64,
+    compression: Option<&Compression>,
+    dead: Option<&[(usize, usize)]>,
+    seed: u64,
+    k: usize,
+    scratch: &mut GossipScratch,
+) {
+    if activated.is_empty() {
+        return;
+    }
+    for dv in scratch.deltas.iter_mut() {
+        dv.iter_mut().for_each(|v| *v = 0.0);
+    }
+    for &j in activated {
+        for &(u, v) in matchings[j].edges() {
+            if let Some(dead) = dead {
+                if dead.contains(&(u, v)) {
+                    continue;
+                }
+            }
+            // Split-borrow xs to read two rows while writing the diff.
+            {
+                let (xu, xv) = (&xs[u], &xs[v]);
+                // Safe: u != v in a simple graph; read-only borrows.
+                let diff = &mut scratch.diff;
+                edge_diff_message(xu, xv, diff, compression, seed, k, j, u, v);
+            }
+            fold_edge_into_deltas(&mut scratch.deltas, u, v, &scratch.diff);
+        }
+    }
+    for (x, dv) in xs.iter_mut().zip(&scratch.deltas) {
+        for (xi, &di) in x.iter_mut().zip(dv) {
+            *xi += alpha * di;
+        }
+    }
+}
+
+/// Push the standard per-record metrics for the current state. Shared by
+/// the sequential runner and the engine so their [`crate::metrics::Recorder`]
+/// contents are comparable series-for-series.
+pub fn record_metrics<P: Problem + ?Sized>(
+    problem: &P,
+    k: usize,
+    time: f64,
+    comm: f64,
+    xs: &[Vec<f64>],
+    metrics: &mut crate::metrics::Recorder,
+) {
+    let mean = super::mean_iterate(xs);
+    let loss = problem.global_loss(&mean);
+    metrics.push("loss_vs_iter", k as f64, loss);
+    metrics.push("loss_vs_time", time, loss);
+    metrics.push("consensus_vs_iter", k as f64, super::consensus_distance(xs));
+    metrics.push("comm_units_vs_iter", k as f64, comm);
+    let mut g = vec![0.0; xs[0].len()];
+    problem.global_grad(&mean, &mut g);
+    let gn2: f64 = g.iter().map(|v| v * v).sum();
+    metrics.push("gradnorm2_vs_iter", k as f64, gn2);
+    if let Some(fstar) = problem.optimal_value() {
+        metrics.push("subopt_vs_iter", k as f64, loss - fstar);
+        metrics.push("subopt_vs_time", time, loss - fstar);
+    }
+    if let Some(acc) = problem.test_metric(&mean) {
+        metrics.push("test_acc_vs_iter", k as f64, acc);
+        metrics.push("test_acc_vs_time", time, acc);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+    use crate::sim::QuadraticProblem;
+
+    #[test]
+    fn worker_streams_are_distinct_and_deterministic() {
+        let mut a = worker_streams(7, 4);
+        let mut b = worker_streams(7, 4);
+        for (ra, rb) in a.iter_mut().zip(b.iter_mut()) {
+            assert_eq!(ra.next_u64(), rb.next_u64());
+        }
+        let mut c = worker_streams(7, 2);
+        let (x, y) = (c[0].next_u64(), c[1].next_u64());
+        assert_ne!(x, y, "adjacent worker streams must differ");
+    }
+
+    #[test]
+    fn init_iterates_identical_across_workers() {
+        let xs = init_iterates(3, 5, 8);
+        for x in &xs[1..] {
+            assert_eq!(x, &xs[0]);
+        }
+        assert_eq!(xs, init_iterates(3, 5, 8));
+    }
+
+    #[test]
+    fn edge_rng_symmetric_in_call_site_only() {
+        // Same (seed,k,j,u,v) -> same stream; different edges -> different.
+        let mut a = edge_rng(1, 2, 0, 3, 5);
+        let mut b = edge_rng(1, 2, 0, 3, 5);
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = edge_rng(1, 2, 0, 3, 6);
+        let mut d = edge_rng(1, 2, 0, 3, 5);
+        assert_ne!(c.next_u64(), d.next_u64());
+    }
+
+    #[test]
+    fn gossip_preserves_worker_mean_even_with_dead_links() {
+        let d = decompose(&paper_figure1_graph());
+        let m = 8;
+        let dim = 6;
+        let mut rng = Rng::new(9);
+        let mut xs: Vec<Vec<f64>> = (0..m)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let mean_before = crate::sim::mean_iterate(&xs);
+        let dead = vec![d.matchings[0].edges()[0]];
+        let mut scratch = GossipScratch::new(m, dim);
+        let activated: Vec<usize> = (0..d.len()).collect();
+        apply_gossip(
+            &mut xs,
+            &d.matchings,
+            &activated,
+            0.31,
+            None,
+            Some(&dead),
+            5,
+            0,
+            &mut scratch,
+        );
+        let mean_after = crate::sim::mean_iterate(&xs);
+        for (a, b) in mean_before.iter().zip(&mean_after) {
+            assert!((a - b).abs() < 1e-12, "mean drifted: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dead_link_freezes_only_that_exchange() {
+        let d = decompose(&paper_figure1_graph());
+        // Pick a matching with at least two links so one can stay live.
+        let j0 = (0..d.len())
+            .find(|&j| d.matchings[j].edges().len() >= 2)
+            .expect("fig1 decomposition has a multi-link matching");
+        let (u, v) = d.matchings[j0].edges()[0];
+        let m = 8;
+        let dim = 3;
+        let mut rng = Rng::new(4);
+        let xs0: Vec<Vec<f64>> = (0..m)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        // Activate only matching j0 with its first edge dead.
+        let mut with_dead = xs0.clone();
+        let mut scratch = GossipScratch::new(m, dim);
+        apply_gossip(
+            &mut with_dead,
+            &d.matchings,
+            &[j0],
+            0.2,
+            None,
+            Some(&[(u, v)]),
+            1,
+            0,
+            &mut scratch,
+        );
+        // u and v did not move; other endpoints of matching j0 did.
+        assert_eq!(with_dead[u], xs0[u]);
+        assert_eq!(with_dead[v], xs0[v]);
+        let moved = d.matchings[j0]
+            .edges()
+            .iter()
+            .filter(|&&e| e != (u, v))
+            .any(|&(a, _)| with_dead[a] != xs0[a]);
+        assert!(moved, "live links should still exchange");
+    }
+
+    #[test]
+    fn local_step_moves_against_gradient() {
+        let mut rng = Rng::new(11);
+        let p = QuadraticProblem::generate(3, 5, 1.0, 0.0, &mut rng);
+        let mut x = vec![1.0; 5];
+        let before = p.local_loss(0, &x);
+        let mut grad = vec![0.0; 5];
+        let mut wrng = Rng::new(0);
+        local_sgd_step(&p, 0, 0.05, &mut x, &mut wrng, &mut grad);
+        assert!(p.local_loss(0, &x) < before);
+    }
+}

@@ -18,6 +18,7 @@
 //! comparable.
 
 mod compress;
+pub mod kernel;
 mod logreg;
 mod quadratic;
 mod runner;

@@ -1,7 +1,16 @@
 //! The decentralized SGD loop (paper eq. (2)) over any [`Problem`] and
 //! any activation strategy, with delay-model time accounting.
+//!
+//! This is the *sequential reference path*. The actual per-iteration math
+//! (local step, gossip mix, RNG-stream derivations) lives in
+//! [`crate::sim::kernel`] and is shared with the event-driven engine
+//! ([`crate::engine`]), whose deterministic mode reproduces this runner's
+//! trajectories bit-for-bit (enforced by `rust/tests/engine.rs`).
 
-use super::{consensus_distance, mean_iterate, Compression, Problem};
+use super::kernel::{
+    apply_gossip, init_iterates, local_sgd_step, record_metrics, worker_streams, GossipScratch,
+};
+use super::{mean_iterate, Compression, Problem};
 use crate::delay::{DelayModel, VirtualClock};
 use crate::graph::Graph;
 use crate::metrics::Recorder;
@@ -9,6 +18,7 @@ use crate::rng::Rng;
 use crate::topology::TopologySampler;
 
 /// Configuration for one simulated training run.
+#[derive(Clone, Debug)]
 pub struct RunConfig {
     /// Learning rate η.
     pub lr: f64,
@@ -53,6 +63,14 @@ impl Default for RunConfig {
     }
 }
 
+impl RunConfig {
+    /// The delay-model RNG stream for this run (shared derivation with
+    /// the engine's analytic policy, for exact time parity).
+    pub fn delay_rng(&self) -> Rng {
+        Rng::new(self.seed ^ 0xdead_beef)
+    }
+}
+
 /// Result of a run: metric series plus summary statistics.
 pub struct RunResult {
     pub metrics: Recorder,
@@ -71,6 +89,12 @@ pub struct RunResult {
 /// The mix is applied edge-wise from the *pre-mix* state (a simultaneous
 /// gossip step, not sequential pairwise averaging), which is exactly the
 /// matrix product and costs `O(d · |activated edges|)`.
+///
+/// Gradient noise uses one independent RNG stream per worker
+/// ([`worker_streams`]); compression randomness is derived per edge
+/// ([`crate::sim::kernel::edge_rng`]). Both choices make the trajectory a
+/// function of `(seed, worker)` alone, which is what lets the engine's
+/// parallel actors replay it exactly.
 pub fn run_decentralized<P: Problem, S: TopologySampler>(
     problem: &P,
     matchings: &[Graph],
@@ -79,93 +103,38 @@ pub fn run_decentralized<P: Problem, S: TopologySampler>(
 ) -> RunResult {
     let m = problem.num_workers();
     let d = problem.dim();
-    let mut rng = Rng::new(config.seed);
-    // All workers start at the same point (Theorem 1's initialization).
-    let x0: Vec<f64> = (0..d).map(|_| 0.01 * rng.normal()).collect();
-    let mut xs: Vec<Vec<f64>> = vec![x0; m];
+    let mut xs = init_iterates(config.seed, m, d);
+    let mut worker_rngs = worker_streams(config.seed, m);
     let mut grad = vec![0.0; d];
-    let mut deltas: Vec<Vec<f64>> = vec![vec![0.0; d]; m];
+    let mut scratch = GossipScratch::new(m, d);
 
     let mut clock = VirtualClock::new(config.compute_units);
     let mut metrics = Recorder::new();
     let mut total_comm = 0.0;
     let mut lr = config.lr;
-    let mut delay_rng = Rng::new(config.seed ^ 0xdead_beef);
+    let mut delay_rng = config.delay_rng();
 
-    let record = |k: usize,
-                      time: f64,
-                      comm: f64,
-                      xs: &[Vec<f64>],
-                      metrics: &mut Recorder| {
-        let mean = mean_iterate(xs);
-        let loss = problem.global_loss(&mean);
-        metrics.push("loss_vs_iter", k as f64, loss);
-        metrics.push("loss_vs_time", time, loss);
-        metrics.push("consensus_vs_iter", k as f64, consensus_distance(xs));
-        metrics.push("comm_units_vs_iter", k as f64, comm);
-        let mut g = vec![0.0; xs[0].len()];
-        problem.global_grad(&mean, &mut g);
-        let gn2: f64 = g.iter().map(|v| v * v).sum();
-        metrics.push("gradnorm2_vs_iter", k as f64, gn2);
-        if let Some(fstar) = problem.optimal_value() {
-            metrics.push("subopt_vs_iter", k as f64, loss - fstar);
-            metrics.push("subopt_vs_time", time, loss - fstar);
-        }
-        if let Some(acc) = problem.test_metric(&mean) {
-            metrics.push("test_acc_vs_iter", k as f64, acc);
-            metrics.push("test_acc_vs_time", time, acc);
-        }
-    };
-
-    record(0, 0.0, 0.0, &xs, &mut metrics);
+    record_metrics(problem, 0, 0.0, 0.0, &xs, &mut metrics);
 
     for k in 0..config.iterations {
         // --- local SGD step on every worker -------------------------
         for (w, x) in xs.iter_mut().enumerate() {
-            problem.stoch_grad(w, x, &mut rng, &mut grad);
-            for (xi, &gi) in x.iter_mut().zip(&grad) {
-                *xi -= lr * gi;
-            }
+            local_sgd_step(problem, w, lr, x, &mut worker_rngs[w], &mut grad);
         }
 
         // --- consensus over the activated topology ------------------
         let round = sampler.round(k);
-        if !round.activated.is_empty() {
-            for dv in deltas.iter_mut() {
-                dv.iter_mut().for_each(|v| *v = 0.0);
-            }
-            let mut diff_buf = vec![0.0; d];
-            for &j in &round.activated {
-                for &(u, v) in matchings[j].edges() {
-                    match &config.compression {
-                        None => {
-                            for i in 0..d {
-                                let diff = xs[v][i] - xs[u][i];
-                                deltas[u][i] += diff;
-                                deltas[v][i] -= diff;
-                            }
-                        }
-                        Some(comp) => {
-                            // Compress the antisymmetric difference message;
-                            // applying ±C(d) keeps the worker mean exact.
-                            for i in 0..d {
-                                diff_buf[i] = xs[v][i] - xs[u][i];
-                            }
-                            comp.compress(&mut diff_buf, &mut delay_rng);
-                            for i in 0..d {
-                                deltas[u][i] += diff_buf[i];
-                                deltas[v][i] -= diff_buf[i];
-                            }
-                        }
-                    }
-                }
-            }
-            for (x, dv) in xs.iter_mut().zip(&deltas) {
-                for (xi, &di) in x.iter_mut().zip(dv) {
-                    *xi += config.alpha * di;
-                }
-            }
-        }
+        apply_gossip(
+            &mut xs,
+            matchings,
+            &round.activated,
+            config.alpha,
+            config.compression.as_ref(),
+            None,
+            config.seed,
+            k,
+            &mut scratch,
+        );
 
         // --- time accounting ----------------------------------------
         let mut comm_t = config.delay.comm_time(matchings, &round.activated, &mut delay_rng);
@@ -180,7 +149,7 @@ pub fn run_decentralized<P: Problem, S: TopologySampler>(
             lr *= config.lr_decay;
         }
         if (k + 1) % config.record_every == 0 || k + 1 == config.iterations {
-            record(k + 1, now, total_comm, &xs, &mut metrics);
+            record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics);
         }
     }
 
@@ -266,6 +235,31 @@ mod tests {
     }
 
     #[test]
+    fn runs_are_reproducible_per_seed() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.5);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        let p = quad();
+        let run = || {
+            let mut s = MatchaSampler::new(probs.probabilities.clone(), 3);
+            let cfg = RunConfig {
+                lr: 0.02,
+                iterations: 200,
+                alpha: mix.alpha,
+                seed: 42,
+                ..RunConfig::default()
+            };
+            run_decentralized(&p, &d.matchings, &mut s, &cfg)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.final_mean, b.final_mean);
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.total_comm_units, b.total_comm_units);
+    }
+
+    #[test]
     fn consensus_distance_shrinks() {
         let g = paper_figure1_graph();
         let d = decompose(&g);
@@ -295,6 +289,7 @@ mod tests {
     fn edgewise_mix_equals_matrix_mix() {
         // The edge-wise delta application must equal X ← WX exactly.
         use crate::linalg::Mat;
+        use crate::sim::kernel::{apply_gossip, GossipScratch};
         use crate::topology::mixing_matrix;
         let g = paper_figure1_graph();
         let d = decompose(&g);
@@ -308,23 +303,20 @@ mod tests {
             .map(|_| (0..dim).map(|_| rng.normal()).collect())
             .collect();
 
-        // Edge-wise (as in run_decentralized).
-        let mut deltas = vec![vec![0.0; dim]; m];
-        for &j in &activated {
-            for &(u, v) in d.matchings[j].edges() {
-                for i in 0..dim {
-                    let diff = xs[v][i] - xs[u][i];
-                    deltas[u][i] += diff;
-                    deltas[v][i] -= diff;
-                }
-            }
-        }
+        // Edge-wise (the shared kernel, as in run_decentralized).
         let mut edgewise = xs.clone();
-        for (x, dv) in edgewise.iter_mut().zip(&deltas) {
-            for (xi, &di) in x.iter_mut().zip(dv) {
-                *xi += alpha * di;
-            }
-        }
+        let mut scratch = GossipScratch::new(m, dim);
+        apply_gossip(
+            &mut edgewise,
+            &d.matchings,
+            &activated,
+            alpha,
+            None,
+            None,
+            0,
+            0,
+            &mut scratch,
+        );
 
         // Matrix: W (m×m) times X (m×dim).
         let w = mixing_matrix(&laps, &activated, alpha);

@@ -1,0 +1,306 @@
+//! Engine ⇄ simulator equivalence and scenario regression tests.
+//!
+//! The contract under test (ISSUE 1): the engine's deterministic mode
+//! reproduces `sim::run_decentralized` **bit-for-bit** — identical final
+//! iterates and identical total virtual time — for arbitrary graphs,
+//! seeds, budgets and delay models; and the parallel actor mode is
+//! indistinguishable from the sequential engine.
+
+use matcha::budget::optimize_activation_probabilities;
+use matcha::delay::DelayModel;
+use matcha::engine::{
+    run_engine, run_engine_analytic, AnalyticPolicy, EngineConfig, FlakyLinkPolicy,
+    StragglerPolicy,
+};
+use matcha::graph;
+use matcha::matching::decompose;
+use matcha::mixing::optimize_alpha;
+use matcha::proptest::{check, PropConfig};
+use matcha::rng::Rng;
+use matcha::sim::{run_decentralized, Compression, QuadraticProblem, RunConfig};
+use matcha::topology::{MatchaSampler, VanillaSampler};
+
+#[test]
+fn property_engine_matches_sim_on_random_graphs() {
+    // Random connected ER graphs × random budgets × random seeds × all
+    // three delay models: engine (sequential deterministic mode) and the
+    // reference simulator must agree exactly.
+    check(
+        PropConfig { cases: 25, seed: 0xe61e },
+        |rng| {
+            let m = 4 + rng.below(8);
+            let g = graph::erdos_renyi_connected(m, 0.5, rng);
+            let cb = rng.uniform_in(0.2, 1.0);
+            let seed = rng.next_u64();
+            let delay = match rng.below(3) {
+                0 => DelayModel::UnitPerMatching,
+                1 => DelayModel::MaxDegree,
+                _ => DelayModel::StochasticLink { min_units: 0.5, max_units: 2.0 },
+            };
+            (g, cb, seed, delay)
+        },
+        |(g, cb, seed, delay)| {
+            let d = decompose(g);
+            let probs = optimize_activation_probabilities(&d, *cb);
+            let mix = optimize_alpha(&d, &probs.probabilities);
+            let problem = {
+                let mut r = Rng::new(seed ^ 0x5eed);
+                QuadraticProblem::generate(g.num_nodes(), 6, 1.0, 0.2, &mut r)
+            };
+            let cfg = RunConfig {
+                lr: 0.02,
+                iterations: 60,
+                record_every: 20,
+                alpha: mix.alpha,
+                delay: delay.clone(),
+                seed: *seed,
+                ..RunConfig::default()
+            };
+
+            let mut s1 = MatchaSampler::new(probs.probabilities.clone(), seed ^ 1);
+            let reference = run_decentralized(&problem, &d.matchings, &mut s1, &cfg);
+
+            let mut s2 = MatchaSampler::new(probs.probabilities.clone(), seed ^ 1);
+            let engine = run_engine_analytic(
+                &problem,
+                &d.matchings,
+                &mut s2,
+                &EngineConfig { run: cfg, threads: 1 },
+            );
+
+            if engine.run.final_mean != reference.final_mean {
+                return Err(format!(
+                    "final iterates diverged: {:?} vs {:?}",
+                    engine.run.final_mean, reference.final_mean
+                ));
+            }
+            if engine.run.total_time != reference.total_time {
+                return Err(format!(
+                    "total virtual time diverged: {} vs {} ({delay:?})",
+                    engine.run.total_time, reference.total_time
+                ));
+            }
+            if engine.run.total_comm_units != reference.total_comm_units {
+                return Err(format!(
+                    "comm units diverged: {} vs {}",
+                    engine.run.total_comm_units, reference.total_comm_units
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_parallel_actors_match_sequential_engine() {
+    // The actor pool must be indistinguishable from the in-process
+    // executor — including with message compression enabled (per-edge
+    // derived RNG streams).
+    check(
+        PropConfig { cases: 8, seed: 0xac70 },
+        |rng| {
+            let m = 4 + rng.below(6);
+            let g = graph::erdos_renyi_connected(m, 0.55, rng);
+            let seed = rng.next_u64();
+            let compress = rng.below(2) == 1;
+            (g, seed, compress)
+        },
+        |(g, seed, compress)| {
+            let d = decompose(g);
+            let probs = optimize_activation_probabilities(&d, 0.5);
+            let mix = optimize_alpha(&d, &probs.probabilities);
+            let problem = {
+                let mut r = Rng::new(seed ^ 0xbead);
+                QuadraticProblem::generate(g.num_nodes(), 5, 1.0, 0.1, &mut r)
+            };
+            let cfg = RunConfig {
+                lr: 0.03,
+                iterations: 40,
+                record_every: 10,
+                alpha: mix.alpha,
+                compression: if *compress {
+                    Some(Compression::Quantize { bits: 6 })
+                } else {
+                    None
+                },
+                seed: *seed,
+                ..RunConfig::default()
+            };
+            let mut s1 = MatchaSampler::new(probs.probabilities.clone(), 2);
+            let seq = run_engine_analytic(
+                &problem,
+                &d.matchings,
+                &mut s1,
+                &EngineConfig { run: cfg.clone(), threads: 1 },
+            );
+            let mut s2 = MatchaSampler::new(probs.probabilities.clone(), 2);
+            let par = run_engine_analytic(
+                &problem,
+                &d.matchings,
+                &mut s2,
+                &EngineConfig { run: cfg, threads: 8 },
+            );
+            if par.run.final_mean != seq.run.final_mean {
+                return Err(format!(
+                    "actor iterates diverged (compress={compress}): {:?} vs {:?}",
+                    par.run.final_mean, seq.run.final_mean
+                ));
+            }
+            if par.run.total_time != seq.run.total_time {
+                return Err("actor virtual time diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_mode_matches_plain_simulator_end_to_end() {
+    // The full chain: run_decentralized == engine actors, compression on.
+    let g = graph::paper_figure1_graph();
+    let d = decompose(&g);
+    let probs = optimize_activation_probabilities(&d, 0.5);
+    let mix = optimize_alpha(&d, &probs.probabilities);
+    let problem = {
+        let mut r = Rng::new(8);
+        QuadraticProblem::generate(8, 12, 1.0, 0.2, &mut r)
+    };
+    let cfg = RunConfig {
+        lr: 0.02,
+        iterations: 150,
+        alpha: mix.alpha,
+        compression: Some(Compression::TopK { frac: 0.5 }),
+        seed: 77,
+        ..RunConfig::default()
+    };
+    let mut s1 = MatchaSampler::new(probs.probabilities.clone(), 5);
+    let reference = run_decentralized(&problem, &d.matchings, &mut s1, &cfg);
+    let mut s2 = MatchaSampler::new(probs.probabilities.clone(), 5);
+    let engine = run_engine_analytic(
+        &problem,
+        &d.matchings,
+        &mut s2,
+        &EngineConfig { run: cfg, threads: 8 },
+    );
+    assert_eq!(engine.run.final_mean, reference.final_mean);
+    assert_eq!(engine.run.total_time, reference.total_time);
+    assert_eq!(engine.run.total_comm_units, reference.total_comm_units);
+}
+
+#[test]
+fn straggler_scenario_regression() {
+    // Regression for the ISSUE's straggler scenario: a 6×-slow worker 0
+    // stretches virtual time by exactly the compute gap, leaves the
+    // trajectory untouched, and MATCHA's budgeted schedule still beats
+    // vanilla on total time under the same straggler.
+    let g = graph::paper_figure1_graph();
+    let d = decompose(&g);
+    let probs = optimize_activation_probabilities(&d, 0.4);
+    let mix = optimize_alpha(&d, &probs.probabilities);
+    let problem = {
+        let mut r = Rng::new(21);
+        QuadraticProblem::generate(8, 10, 1.0, 0.1, &mut r)
+    };
+    let iters = 200usize;
+    let factor = 6.0;
+    let mk_cfg = |alpha: f64| RunConfig {
+        lr: 0.02,
+        iterations: iters,
+        alpha,
+        seed: 9,
+        ..RunConfig::default()
+    };
+
+    // Vanilla under the straggler.
+    let van_cfg = mk_cfg(matcha::mixing::vanilla_design(&g.laplacian()).alpha);
+    let mut vs = VanillaSampler::new(d.len());
+    let mut van_policy = StragglerPolicy::new(
+        AnalyticPolicy::matching_run_config(&van_cfg),
+        vec![0],
+        factor,
+    );
+    let van = run_engine(
+        &problem,
+        &d.matchings,
+        &mut vs,
+        &mut van_policy,
+        &EngineConfig { run: van_cfg.clone(), threads: 1 },
+    );
+    // Closed form: every iteration pays factor·compute + M comm units.
+    assert_eq!(
+        van.run.total_time,
+        iters as f64 * (factor + d.len() as f64),
+        "straggler must gate every vanilla iteration"
+    );
+
+    // MATCHA under the same straggler.
+    let m_cfg = mk_cfg(mix.alpha);
+    let mut ms = MatchaSampler::new(probs.probabilities.clone(), 3);
+    let mut m_policy = StragglerPolicy::new(
+        AnalyticPolicy::matching_run_config(&m_cfg),
+        vec![0],
+        factor,
+    );
+    let matcha_run = run_engine(
+        &problem,
+        &d.matchings,
+        &mut ms,
+        &mut m_policy,
+        &EngineConfig { run: m_cfg.clone(), threads: 1 },
+    );
+    assert!(
+        matcha_run.run.total_time < van.run.total_time,
+        "MATCHA must still win on wallclock under stragglers: {} vs {}",
+        matcha_run.run.total_time,
+        van.run.total_time
+    );
+
+    // The straggler changes time only, not the trajectory: rerun MATCHA
+    // without the straggler and compare iterates.
+    let mut ms2 = MatchaSampler::new(probs.probabilities.clone(), 3);
+    let clean = run_engine_analytic(
+        &problem,
+        &d.matchings,
+        &mut ms2,
+        &EngineConfig { run: m_cfg, threads: 1 },
+    );
+    assert_eq!(clean.run.final_mean, matcha_run.run.final_mean);
+    assert!(clean.run.total_time < matcha_run.run.total_time);
+}
+
+#[test]
+fn flaky_links_still_converge_and_report_drops() {
+    let g = graph::ring(8);
+    let d = decompose(&g);
+    let probs = optimize_activation_probabilities(&d, 0.8);
+    let mix = optimize_alpha(&d, &probs.probabilities);
+    let problem = {
+        let mut r = Rng::new(31);
+        QuadraticProblem::generate(8, 8, 1.0, 0.1, &mut r)
+    };
+    let cfg = RunConfig {
+        lr: 0.03,
+        iterations: 500,
+        alpha: mix.alpha,
+        seed: 13,
+        ..RunConfig::default()
+    };
+    let mut sampler = MatchaSampler::new(probs.probabilities.clone(), 7);
+    let mut policy = FlakyLinkPolicy::new(AnalyticPolicy::matching_run_config(&cfg), 0.25, 19);
+    let res = run_engine(
+        &problem,
+        &d.matchings,
+        &mut sampler,
+        &mut policy,
+        &EngineConfig { run: cfg, threads: 1 },
+    );
+    assert!(res.dropped_links > 0);
+    let sub0 = res.run.metrics.get("subopt_vs_iter")[0].y;
+    let subf = res.run.metrics.last("subopt_vs_iter").unwrap();
+    assert!(
+        subf < 0.25 * sub0,
+        "flaky-link run failed to converge: {sub0} -> {subf} \
+         ({} links dropped)",
+        res.dropped_links
+    );
+}
