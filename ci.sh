@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI for the offline MATCHA crate: build, tests, lints, bench smoke.
+# CI for the offline MATCHA crate: build, tests, lints, docs, spec smoke,
+# bench smoke.
 #
 # The default feature set is dependency-free; the `xla` feature (NN
 # training path) needs vendored xla/anyhow crates and is NOT built here.
@@ -15,6 +16,16 @@ cargo test -q
 echo "==> cargo clippy --all-targets -- -D warnings"
 # All default-feature targets: lib, bin, tests, examples, benches.
 cargo clippy --all-targets -- -D warnings
+
+echo "==> cargo doc --no-deps (deny rustdoc warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "==> experiment spec smoke (matcha run --spec ... --dry-run)"
+# Every committed example spec must parse, validate and plan.
+for spec in examples/specs/*.json; do
+  echo "--- $spec"
+  ./target/release/matcha run --spec "$spec" --dry-run
+done
 
 echo "==> bench smoke (--dry-run)"
 cargo bench --bench hotpath -- --dry-run

@@ -1,76 +1,49 @@
 //! Error-vs-wallclock sweep on the fast simulator (paper Figures 4/5/6
 //! in miniature): MATCHA at several budgets vs vanilla and P-DecenSGD on
-//! a non-IID logistic-regression task over the Figure-1 topology.
+//! a non-IID logistic-regression task over the Figure-1 topology. Every
+//! run is one `ExperimentSpec` with the strategy swapped.
 //!
 //! Run: `cargo run --release --example budget_sweep`
 
-use matcha::budget::optimize_activation_probabilities;
-use matcha::delay::DelayModel;
-use matcha::graph::paper_figure1_graph;
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, optimize_alpha_periodic, vanilla_design};
-use matcha::sim::{run_decentralized, LogisticProblem, LogisticSpec, RunConfig};
-use matcha::topology::{MatchaSampler, PeriodicSampler, TopologySampler, VanillaSampler};
+use matcha::experiment::{self, ExperimentSpec, ProblemSpec, Strategy};
+
+fn spec(strategy: Strategy) -> ExperimentSpec {
+    ExperimentSpec::new("fig1")
+        .strategy(strategy)
+        .problem(ProblemSpec::Logistic { non_iid: 0.8, separation: 1.5, seed: Some(13) })
+        .lr(0.1)
+        .iterations(2000)
+        .record_every(25)
+        .compute_units(1.0) // communication-heavy regime, like CIFAR-100/WRN
+        .seed(3)
+        .sampler_seed(11)
+}
+
+struct Row {
+    name: String,
+    final_loss: f64,
+    acc: f64,
+    time: f64,
+    time_to_04: Option<f64>,
+}
 
 fn main() {
-    let g = paper_figure1_graph();
-    let d = decompose(&g);
-    let problem = LogisticProblem::generate(LogisticSpec {
-        num_workers: g.num_nodes(),
-        non_iid: 0.8,
-        seed: 13,
-        ..LogisticSpec::default()
-    });
-
-    let iters = 2000;
-    let mk_cfg = |alpha: f64| RunConfig {
-        lr: 0.1,
-        iterations: iters,
-        record_every: 25,
-        alpha,
-        compute_units: 1.0, // communication-heavy regime, like CIFAR-100/WRN
-        delay: DelayModel::UnitPerMatching,
-        seed: 3,
-        ..RunConfig::default()
-    };
-
-    struct Row {
-        name: String,
-        final_loss: f64,
-        acc: f64,
-        time: f64,
-        time_to_04: Option<f64>,
-    }
     let mut rows: Vec<Row> = Vec::new();
-
-    let mut run = |name: String, alpha: f64, mut sampler: Box<dyn TopologySampler>| {
-        let res = run_decentralized(&problem, &d.matchings, &mut sampler, &mk_cfg(alpha));
+    let mut run = |name: String, strategy: Strategy| {
+        let res = experiment::run(&spec(strategy)).expect("sweep run");
         rows.push(Row {
             name,
-            final_loss: res.metrics.last("loss_vs_iter").unwrap(),
+            final_loss: res.final_loss(),
             acc: res.metrics.last("test_acc_vs_iter").unwrap_or(f64::NAN),
             time: res.total_time,
             time_to_04: res.metrics.first_x_below("loss_vs_time", 0.4),
         });
     };
 
-    let van = vanilla_design(&g.laplacian());
-    run("vanilla".into(), van.alpha, Box::new(VanillaSampler::new(d.len())));
-
+    run("vanilla".into(), Strategy::Vanilla);
     for cb in [0.5, 0.25, 0.1] {
-        let probs = optimize_activation_probabilities(&d, cb);
-        let mix = optimize_alpha(&d, &probs.probabilities);
-        run(
-            format!("matcha CB={cb}"),
-            mix.alpha,
-            Box::new(MatchaSampler::new(probs.probabilities.clone(), 11)),
-        );
-        let per = optimize_alpha_periodic(&g.laplacian(), cb);
-        run(
-            format!("periodic CB={cb}"),
-            per.alpha,
-            Box::new(PeriodicSampler::from_budget(d.len(), cb)),
-        );
+        run(format!("matcha CB={cb}"), Strategy::Matcha { budget: cb });
+        run(format!("periodic CB={cb}"), Strategy::Periodic { budget: cb });
     }
 
     println!(

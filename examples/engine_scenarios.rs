@@ -1,111 +1,91 @@
 //! Scenario tour of the event-driven engine: the analytic baseline, a
 //! straggler, a heterogeneous cluster, and flaky links — the deployment
 //! realities ("From Promise to Practice") the closed-form simulator
-//! cannot express — plus a parallel budget sweep across cores.
+//! cannot express — plus a parallel budget sweep that **streams each
+//! finished grid point** through the experiment [`Observer`].
+//!
+//! Every scenario is the same `ExperimentSpec` with a different `policy`
+//! string; the spec is what `matcha run --spec` would load from JSON.
 //!
 //! Run: `cargo run --release --example engine_scenarios`
 
-use matcha::budget::optimize_activation_probabilities;
-use matcha::engine::{
-    available_threads, run_engine, sweep_parallel, AnalyticPolicy, DelayPolicy, EngineConfig,
-    FlakyLinkPolicy, HeterogeneousPolicy, StragglerPolicy,
+use matcha::experiment::{
+    self, Backend, ExperimentResult, ExperimentSpec, Observer, ProblemSpec, Strategy,
 };
-use matcha::graph::paper_figure1_graph;
-use matcha::matching::decompose;
-use matcha::mixing::optimize_alpha;
-use matcha::rng::Rng;
-use matcha::sim::{QuadraticProblem, RunConfig};
-use matcha::topology::MatchaSampler;
+
+fn spec(policy: &str, cb: f64) -> ExperimentSpec {
+    ExperimentSpec::new("fig1")
+        .strategy(Strategy::Matcha { budget: cb })
+        .problem(ProblemSpec::Quadratic { dim: 16, hetero: 1.0, noise_std: 0.2, seed: Some(5) })
+        .policy(policy)
+        .backend(Backend::EngineSequential)
+        .lr(0.02)
+        .iterations(800)
+        .record_every(100)
+        .seed(1)
+        .sampler_seed(3)
+}
 
 fn main() {
-    let g = paper_figure1_graph();
-    let d = decompose(&g);
     let cb = 0.5;
-    let probs = optimize_activation_probabilities(&d, cb);
-    let mix = optimize_alpha(&d, &probs.probabilities);
-    let problem = {
-        let mut r = Rng::new(5);
-        QuadraticProblem::generate(g.num_nodes(), 16, 1.0, 0.2, &mut r)
-    };
-    let cfg = RunConfig {
-        lr: 0.02,
-        iterations: 800,
-        record_every: 100,
-        alpha: mix.alpha,
-        seed: 1,
-        ..RunConfig::default()
-    };
-    let engine_cfg = EngineConfig { run: cfg.clone(), threads: 1 };
-
     println!("=== engine scenarios on the Figure-1 graph (CB = {cb}) ===\n");
     let mut table = matcha::benchkit::Table::new(&[
         "scenario",
+        "policy spec",
         "virtual time",
         "final subopt",
         "dropped links",
     ]);
 
-    let scenarios: Vec<(&str, Box<dyn DelayPolicy>)> = vec![
-        ("analytic baseline", Box::new(AnalyticPolicy::matching_run_config(&cfg))),
-        (
-            "straggler (worker 0, 5x)",
-            Box::new(StragglerPolicy::new(
-                AnalyticPolicy::matching_run_config(&cfg),
-                vec![0],
-                5.0,
-            )),
-        ),
-        (
-            "heterogeneous cluster",
-            Box::new(HeterogeneousPolicy::generate(&g, 1.0, 17)),
-        ),
-        (
-            "flaky links (p = 0.2)",
-            Box::new(FlakyLinkPolicy::new(
-                AnalyticPolicy::matching_run_config(&cfg),
-                0.2,
-                23,
-            )),
-        ),
+    let scenarios = [
+        ("analytic baseline", "analytic"),
+        ("straggler (worker 0, 5x)", "straggler:0:5.0"),
+        ("heterogeneous cluster", "hetero:17"),
+        ("flaky links (p = 0.2)", "flaky:0.2"),
     ];
 
-    for (name, mut policy) in scenarios {
-        let mut sampler = MatchaSampler::new(probs.probabilities.clone(), 3);
-        let res = run_engine(&problem, &d.matchings, &mut sampler, policy.as_mut(), &engine_cfg);
+    for (name, policy) in scenarios {
+        let res = experiment::run(&spec(policy, cb)).expect("scenario run");
         table.row(&[
             name.to_string(),
-            format!("{:.0}", res.run.total_time),
-            format!("{:.5}", res.run.metrics.last("subopt_vs_iter").unwrap_or(f64::NAN)),
+            policy.to_string(),
+            format!("{:.0}", res.total_time),
+            format!("{:.5}", res.metrics.last("subopt_vs_iter").unwrap_or(f64::NAN)),
             format!("{}", res.dropped_links),
         ]);
     }
     table.print();
 
-    // Parallel budget sweep: the fig4-style grid, fanned across cores.
-    let budgets = [0.1, 0.25, 0.5, 0.75, 1.0];
-    let threads = available_threads();
-    println!("\n=== parallel budget sweep ({threads} threads) ===");
-    let wall = std::time::Instant::now();
-    let results = sweep_parallel(&budgets, threads, |_i, &b| {
-        let probs = optimize_activation_probabilities(&d, b);
-        let mix = optimize_alpha(&d, &probs.probabilities);
-        let mut sampler = MatchaSampler::new(probs.probabilities.clone(), 3);
-        let cfg = EngineConfig {
-            run: RunConfig {
-                lr: 0.02,
-                iterations: 800,
-                record_every: 400,
-                alpha: mix.alpha,
-                seed: 1,
-                ..RunConfig::default()
-            },
-            threads: 1,
-        };
-        let r = matcha::engine::run_engine_analytic(&problem, &d.matchings, &mut sampler, &cfg);
-        (b, r.run.total_time, r.run.metrics.last("subopt_vs_iter").unwrap_or(f64::NAN))
-    });
-    for (b, time, subopt) in results {
-        println!("  CB {b:<5} -> virtual time {time:>6.0}, final subopt {subopt:.5}");
+    // Parallel budget sweep: the fig4-style grid fanned across cores,
+    // with per-point streaming — each line prints the moment that grid
+    // point finishes, not when the whole sweep joins.
+    struct StreamLine<'a> {
+        budgets: &'a [f64],
     }
-    println!("sweep wallclock: {:.2}s", wall.elapsed().as_secs_f64());
+    impl Observer for StreamLine<'_> {
+        fn on_point(&mut self, index: usize, result: &ExperimentResult) {
+            println!(
+                "  [streamed] CB {:<5} -> virtual time {:>6.0}, final subopt {:.5}",
+                self.budgets[index],
+                result.total_time,
+                result.metrics.last("subopt_vs_iter").unwrap_or(f64::NAN)
+            );
+        }
+    }
+
+    let budgets = [0.1, 0.25, 0.5, 0.75, 1.0];
+    let threads = matcha::engine::available_threads();
+    println!("\n=== parallel budget sweep ({threads} threads, streamed) ===");
+    let wall = std::time::Instant::now();
+    let mut streamer = StreamLine { budgets: &budgets };
+    let results = experiment::run_sweep(&spec("analytic", cb), &budgets, threads, &mut streamer)
+        .expect("sweep");
+    println!("sweep wallclock: {:.2}s; final table (input order):", wall.elapsed().as_secs_f64());
+    for (b, r) in &results {
+        println!(
+            "  CB {b:<5} -> virtual time {:>6.0}, final subopt {:.5}",
+            r.total_time,
+            r.metrics.last("subopt_vs_iter").unwrap_or(f64::NAN)
+        );
+    }
 }

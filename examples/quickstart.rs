@@ -1,68 +1,105 @@
-//! Quickstart: the full MATCHA pipeline on the paper's Figure-1 graph.
+//! Quickstart: the unified experiment pipeline — **spec → plan → run →
+//! observe** — on the paper's Figure-1 graph.
 //!
-//! Demonstrates the three steps of §3 — matching decomposition,
-//! activation-probability optimization, mixing-weight optimization — plus
-//! the apriori schedule and the per-node communication-time savings the
-//! paper's Figure 1 illustrates.
+//! One typed [`ExperimentSpec`] declares the whole run; planning exposes
+//! the paper's three steps (matching decomposition, activation
+//! probabilities, mixing weight) before anything executes; `run_observed`
+//! streams progress through an [`Observer`]; and the spec round-trips
+//! through JSON so it can be saved and replayed with
+//! `matcha run --spec FILE`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use matcha::budget::optimize_activation_probabilities;
-use matcha::graph::{expected_node_comm_time, paper_figure1_graph};
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, vanilla_design};
-use matcha::topology::{MatchaSampler, Schedule};
+use matcha::experiment::{
+    self, Backend, ExperimentResult, ExperimentSpec, Observer, ProblemSpec, Strategy,
+};
+use matcha::graph::expected_node_comm_time;
+use matcha::metrics::Recorder;
+
+/// Prints a progress line at every metrics record.
+struct ProgressPrinter;
+
+impl Observer for ProgressPrinter {
+    fn on_record(&mut self, k: usize, time: f64, metrics: &Recorder) {
+        if let Some(loss) = metrics.last("loss_vs_iter") {
+            println!("  iter {k:>5}  virtual time {time:>8.1}  loss {loss:.5}");
+        }
+    }
+}
 
 fn main() {
-    let g = paper_figure1_graph();
-    println!("base graph: {} nodes, {} edges, Δ = {}\n", g.num_nodes(), g.num_edges(), g.max_degree());
+    // --- Spec: declare the experiment -----------------------------------
+    let spec = ExperimentSpec::new("fig1")
+        .strategy(Strategy::Matcha { budget: 0.5 })
+        .problem(ProblemSpec::logistic())
+        .backend(Backend::EngineSequential)
+        .lr(0.1)
+        .iterations(1000)
+        .record_every(200)
+        .seed(0)
+        .validated()
+        .expect("spec validates");
+    println!("spec (JSON, loadable via `matcha run --spec`):\n{}\n", spec.to_json_string());
 
-    // Step 1: matching decomposition (Misra–Gries, M ≤ Δ+1).
-    let d = decompose(&g);
-    println!("Step 1 — decomposition into M = {} matchings:", d.len());
-    for (j, m) in d.matchings.iter().enumerate() {
+    // --- Plan: the paper's §3 pipeline, before any run -------------------
+    let plan = experiment::plan(&spec).expect("plan");
+    println!(
+        "base graph: {} nodes, {} edges, Δ = {}",
+        plan.graph.num_nodes(),
+        plan.graph.num_edges(),
+        plan.graph.max_degree()
+    );
+    println!("Step 1 — decomposition into M = {} matchings:", plan.decomposition.len());
+    for (j, m) in plan.decomposition.matchings.iter().enumerate() {
         println!("  G_{j}: {:?}", m.edges());
     }
-
-    // Step 2: activation probabilities at a 50% communication budget.
-    let cb = 0.5;
-    let probs = optimize_activation_probabilities(&d, cb);
-    println!("\nStep 2 — activation probabilities (CB = {cb}):");
-    for (j, p) in probs.probabilities.iter().enumerate() {
+    println!("\nStep 2 — activation probabilities (CB = 0.5):");
+    for (j, p) in plan.probabilities.iter().enumerate() {
         println!("  p_{j} = {p:.3}");
     }
-    println!("  λ₂ of expected topology: {:.4}", probs.lambda2);
-
-    // Step 3: mixing weight α minimizing the spectral norm ρ.
-    let mix = optimize_alpha(&d, &probs.probabilities);
-    let van = vanilla_design(&g.laplacian());
-    println!("\nStep 3 — mixing design:");
-    println!("  MATCHA  α = {:.4}, ρ = {:.4}", mix.alpha, mix.rho);
-    println!("  vanilla α = {:.4}, ρ = {:.4}", van.alpha, van.rho);
+    println!("  λ₂ of expected topology: {:.4}", plan.lambda2);
+    println!("\nStep 3 — mixing design: α = {:.4}, ρ = {:.4}", plan.alpha, plan.rho);
     println!("  (ρ < 1 ⇒ convergence guaranteed; Theorem 2)");
 
     // The apriori schedule (paper §1: zero runtime scheduling overhead).
-    let mut sampler = MatchaSampler::new(probs.probabilities.clone(), 0);
-    let schedule = Schedule::generate(&mut sampler, mix.alpha, d.len(), 1000);
+    let schedule = plan.schedule(1000, spec.seed);
     println!(
         "\nschedule: 1000 rounds pregenerated, mean comm = {:.2} units/iter \
          (vanilla: {} units/iter)",
         schedule.mean_comm_units(),
-        d.len()
+        plan.decomposition.len()
     );
 
     // Figure-1 style per-node communication times.
     println!("\nper-node expected communication time (units/iter):");
     println!("  node  degree  vanilla  matcha(CB=0.5)");
-    let vanilla_t = expected_node_comm_time(g.num_nodes(), &d.matchings, &vec![1.0; d.len()]);
-    let matcha_t = expected_node_comm_time(g.num_nodes(), &d.matchings, &probs.probabilities);
-    let deg = g.degrees();
-    for i in 0..g.num_nodes() {
+    let all_on = vec![1.0; plan.decomposition.len()];
+    let vanilla_t =
+        expected_node_comm_time(plan.graph.num_nodes(), &plan.decomposition.matchings, &all_on);
+    let matcha_t = expected_node_comm_time(
+        plan.graph.num_nodes(),
+        &plan.decomposition.matchings,
+        &plan.probabilities,
+    );
+    let deg = plan.graph.degrees();
+    for i in 0..plan.graph.num_nodes() {
         println!(
             "  {:>4}  {:>6}  {:>7.2}  {:>14.2}",
             i, deg[i], vanilla_t[i], matcha_t[i]
         );
     }
+
+    // --- Run + observe ---------------------------------------------------
+    println!("\nrunning (streaming records through an Observer):");
+    let result: ExperimentResult =
+        experiment::run_planned(&spec, &plan, &mut ProgressPrinter).expect("run");
+    println!(
+        "\ndone: final loss {:.5}, total virtual time {:.1} units, comm {:.1} units",
+        result.final_loss(),
+        result.total_time,
+        result.total_comm_units
+    );
+
     println!(
         "\nnote how the degree-1 node (4) keeps its communication while the \
          degree-5 node (1) is throttled — critical links first."

@@ -1,35 +1,32 @@
 //! Spectral-norm vs communication-budget trade-off (paper Figure 3) on
-//! the three evaluation topologies, printed as a table.
+//! the three evaluation topologies, printed as a table. Planning-only:
+//! every point is an `experiment::Plan`, no run needed.
 //!
 //! Run: `cargo run --release --example spectral_tradeoff`
 
-use matcha::budget::optimize_activation_probabilities;
+use matcha::experiment::{Plan, Strategy};
 use matcha::graph::{
     find_er_with_max_degree, find_geometric_with_max_degree, paper_figure1_graph, Graph,
 };
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, optimize_alpha_periodic, vanilla_design};
 
 fn curve(name: &str, g: &Graph) {
-    let d = decompose(g);
-    let van = vanilla_design(&g.laplacian());
+    let van = Plan::for_graph(g.clone(), Strategy::Vanilla).unwrap();
     println!(
         "\n{name}: m={}, Δ={}, M={}, vanilla ρ = {:.4}",
         g.num_nodes(),
         g.max_degree(),
-        d.len(),
+        van.decomposition.len(),
         van.rho
     );
     println!("  CB    ρ(MATCHA)  ρ(P-DecenSGD)  λ₂(E[L])");
     for i in 1..=10 {
         let cb = i as f64 / 10.0;
-        let probs = optimize_activation_probabilities(&d, cb);
-        let mix = optimize_alpha(&d, &probs.probabilities);
-        let per = optimize_alpha_periodic(&g.laplacian(), cb);
-        let marker = if mix.rho < van.rho { "  <- beats vanilla" } else { "" };
+        let matcha = Plan::for_graph(g.clone(), Strategy::Matcha { budget: cb }).unwrap();
+        let per = Plan::for_graph(g.clone(), Strategy::Periodic { budget: cb }).unwrap();
+        let marker = if matcha.rho < van.rho { "  <- beats vanilla" } else { "" };
         println!(
             "  {cb:.1}   {:.4}     {:.4}         {:.4}{marker}",
-            mix.rho, per.rho, probs.lambda2
+            matcha.rho, per.rho, matcha.lambda2
         );
     }
 }

@@ -120,15 +120,22 @@ fn main() {
     // --- 4. compression combination (§1: "easily combined") -------------
     println!("\n=== ablation 4: MATCHA × gossip compression (CB=0.5, latency floor 0.05) ===");
     {
-        use matcha::sim::{run_decentralized, Compression, QuadraticProblem, RunConfig};
-        use matcha::topology::MatchaSampler;
-        let g = graph::paper_figure1_graph();
-        let d = decompose(&g);
-        let probs = optimize_activation_probabilities(&d, 0.5);
-        let mix = optimize_alpha(&d, &probs.probabilities);
-        let problem = {
-            let mut r = Rng::new(404);
-            QuadraticProblem::generate(8, 16, 1.0, 0.3, &mut r)
+        use matcha::experiment::{self, ExperimentSpec, ProblemSpec, Strategy};
+        use matcha::sim::Compression;
+        let base = || {
+            ExperimentSpec::new("fig1")
+                .strategy(Strategy::Matcha { budget: 0.5 })
+                .problem(ProblemSpec::Quadratic {
+                    dim: 16,
+                    hetero: 1.0,
+                    noise_std: 0.3,
+                    seed: Some(404),
+                })
+                .lr(0.02)
+                .iterations(1200)
+                .record_every(200)
+                .seed(2)
+                .sampler_seed(12)
         };
         let mut t4 = Table::new(&["scheme", "comm units", "final subopt"]);
         for (label, comp) in [
@@ -136,17 +143,11 @@ fn main() {
             ("matcha + top-25%".to_string(), Some(Compression::TopK { frac: 0.25 })),
             ("matcha + 8-bit quant".to_string(), Some(Compression::Quantize { bits: 8 })),
         ] {
-            let mut s = MatchaSampler::new(probs.probabilities.clone(), 12);
-            let cfg = RunConfig {
-                lr: 0.02,
-                iterations: 1200,
-                record_every: 200,
-                alpha: mix.alpha,
-                compression: comp,
-                seed: 2,
-                ..RunConfig::default()
+            let spec = match comp {
+                None => base(),
+                Some(c) => base().compression(c),
             };
-            let res = run_decentralized(&problem, &d.matchings, &mut s, &cfg);
+            let res = experiment::run(&spec).expect("ablation 4 run");
             t4.row(&[
                 label,
                 format!("{:.0}", res.total_comm_units),

@@ -1,5 +1,7 @@
 //! Engine sweep-driver benchmark: serial vs parallel fan-out of a
 //! budget × topology grid (the fig5/fig6-style sweeps, parallelized).
+//! Each grid point is a spec-driven `experiment::run` on the sequential
+//! engine backend.
 //!
 //! Run: `cargo bench --bench engine_sweep` (append `-- --dry-run` for the
 //! CI smoke variant: a tiny grid, no speedup assertions).
@@ -9,16 +11,10 @@
 //! enforces it whenever the host has ≥ 4 hardware threads. On smaller
 //! hosts the measured speedup is only printed.
 
-use matcha::budget::optimize_activation_probabilities;
-use matcha::engine::{
-    available_threads, run_engine_analytic, sweep_parallel, sweep_serial, EngineConfig,
-};
+use matcha::engine::{available_threads, sweep_parallel, sweep_serial};
+use matcha::experiment::{self, Backend, ExperimentSpec, ProblemSpec, Strategy};
 use matcha::graph::{self, Graph};
-use matcha::matching::decompose;
-use matcha::mixing::optimize_alpha;
 use matcha::rng::Rng;
-use matcha::sim::{QuadraticProblem, RunConfig};
-use matcha::topology::MatchaSampler;
 use std::time::Instant;
 
 struct Point {
@@ -45,27 +41,17 @@ fn grid(budgets: &[f64]) -> Vec<Point> {
 }
 
 fn run_point(p: &Point, iters: usize) -> (f64, f64) {
-    let d = decompose(&p.graph);
-    let probs = optimize_activation_probabilities(&d, p.cb);
-    let mix = optimize_alpha(&d, &probs.probabilities);
-    let problem = {
-        let mut r = Rng::new(7);
-        QuadraticProblem::generate(p.graph.num_nodes(), 24, 1.0, 0.2, &mut r)
-    };
-    let mut sampler = MatchaSampler::new(probs.probabilities.clone(), 5);
-    let cfg = EngineConfig {
-        run: RunConfig {
-            lr: 0.02,
-            iterations: iters,
-            record_every: iters.max(1),
-            alpha: mix.alpha,
-            seed: 11,
-            ..RunConfig::default()
-        },
-        threads: 1,
-    };
-    let r = run_engine_analytic(&problem, &d.matchings, &mut sampler, &cfg);
-    (r.run.total_time, r.run.metrics.last("loss_vs_iter").unwrap_or(f64::NAN))
+    let spec = ExperimentSpec::on_graph(p.graph.clone())
+        .strategy(Strategy::Matcha { budget: p.cb })
+        .problem(ProblemSpec::Quadratic { dim: 24, hetero: 1.0, noise_std: 0.2, seed: Some(7) })
+        .backend(Backend::EngineSequential)
+        .lr(0.02)
+        .iterations(iters)
+        .record_every(iters.max(1))
+        .seed(11)
+        .sampler_seed(5);
+    let r = experiment::run(&spec).expect("grid point run");
+    (r.total_time, r.final_loss())
 }
 
 fn main() {

@@ -3,22 +3,24 @@
 //!
 //! Paper claim to reproduce: the degree-1 node (4) keeps its
 //! communication time (its link (0,4) is critical), while the degree-5
-//! busiest node (1) is cut to ~half. Plus benchkit timings of the
+//! busiest node (1) is cut to ~half. The activation probabilities come
+//! from the `experiment` plan stage. Plus benchkit timings of the
 //! schedule-construction hot path.
 
 use matcha::benchkit::{bench_auto, Table};
-use matcha::budget::optimize_activation_probabilities;
+use matcha::experiment::{Plan, Strategy};
 use matcha::graph::{expected_node_comm_time, paper_figure1_graph};
 use matcha::matching::decompose;
 
 fn main() {
     let g = paper_figure1_graph();
-    let d = decompose(&g);
     let cb = 0.5;
-    let probs = optimize_activation_probabilities(&d, cb);
+    let plan = Plan::for_graph(g.clone(), Strategy::Matcha { budget: cb }).unwrap();
+    let matchings = &plan.decomposition.matchings;
 
-    let vanilla = expected_node_comm_time(g.num_nodes(), &d.matchings, &vec![1.0; d.len()]);
-    let matcha = expected_node_comm_time(g.num_nodes(), &d.matchings, &probs.probabilities);
+    let vanilla =
+        expected_node_comm_time(g.num_nodes(), matchings, &vec![1.0; plan.decomposition.len()]);
+    let matcha = expected_node_comm_time(g.num_nodes(), matchings, &plan.probabilities);
     let deg = g.degrees();
 
     println!("=== Figure 1: per-node expected communication time (units/iter) ===");
@@ -64,7 +66,7 @@ fn main() {
     bench_auto("misra_gries_decompose(fig1)", 200, || {
         std::hint::black_box(decompose(&g));
     });
-    bench_auto("optimize_probabilities(fig1, cb=0.5)", 400, || {
-        std::hint::black_box(optimize_activation_probabilities(&d, 0.5));
+    bench_auto("plan(fig1, matcha cb=0.5)", 400, || {
+        std::hint::black_box(Plan::for_graph(g.clone(), Strategy::Matcha { budget: 0.5 }).unwrap());
     });
 }

@@ -1,5 +1,6 @@
 //! Figure 3 (a,b,c): spectral norm ρ vs communication budget, MATCHA vs
-//! P-DecenSGD, on the paper's three analysis topologies.
+//! P-DecenSGD, on the paper's three analysis topologies. The whole curve
+//! is planning-only — `experiment::Plan` per (strategy, budget) point.
 //!
 //! Shape claims to reproduce:
 //!   1. MATCHA's ρ at CB ≈ 0.5 matches vanilla's (≈ same error/epoch at
@@ -9,21 +10,18 @@
 //!      *beats* vanilla.
 
 use matcha::benchkit::{bench_auto, Table};
-use matcha::budget::optimize_activation_probabilities;
+use matcha::experiment::{Plan, Strategy};
 use matcha::graph::{
     find_er_with_max_degree, find_geometric_with_max_degree, paper_figure1_graph, Graph,
 };
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, optimize_alpha_periodic, vanilla_design};
 
 fn run_curve(label: &str, g: &Graph) -> (f64, f64, f64) {
-    let d = decompose(g);
-    let van = vanilla_design(&g.laplacian());
+    let van = Plan::for_graph(g.clone(), Strategy::Vanilla).unwrap();
     println!(
         "\n=== {label}: m={} Δ={} M={} | vanilla ρ = {:.4} ===",
         g.num_nodes(),
         g.max_degree(),
-        d.len(),
+        van.decomposition.len(),
         van.rho
     );
     let mut t = Table::new(&["CB", "rho MATCHA", "rho P-DecenSGD", "lambda2"]);
@@ -31,14 +29,13 @@ fn run_curve(label: &str, g: &Graph) -> (f64, f64, f64) {
     let mut rho_at_half = f64::NAN;
     for i in 1..=10 {
         let cb = i as f64 / 10.0;
-        let probs = optimize_activation_probabilities(&d, cb);
-        let matcha = optimize_alpha(&d, &probs.probabilities);
-        let periodic = optimize_alpha_periodic(&g.laplacian(), cb);
+        let matcha = Plan::for_graph(g.clone(), Strategy::Matcha { budget: cb }).unwrap();
+        let periodic = Plan::for_graph(g.clone(), Strategy::Periodic { budget: cb }).unwrap();
         t.row(&[
             format!("{cb:.1}"),
             format!("{:.4}", matcha.rho),
             format!("{:.4}", periodic.rho),
-            format!("{:.4}", probs.lambda2),
+            format!("{:.4}", matcha.lambda2),
         ]);
         best_rho = best_rho.min(matcha.rho);
         if (cb - 0.5).abs() < 1e-9 {
@@ -79,9 +76,9 @@ fn main() {
     println!("claims 1–3 hold. ✓");
 
     println!("\n=== hot-path timings ===");
-    let d16 = decompose(&fig3b);
-    bench_auto("optimize_alpha(16-node, cb=0.5)", 400, || {
-        let probs = optimize_activation_probabilities(&d16, 0.5);
-        std::hint::black_box(optimize_alpha(&d16, &probs.probabilities));
+    bench_auto("plan(16-node, matcha cb=0.5)", 400, || {
+        std::hint::black_box(
+            Plan::for_graph(fig3b.clone(), Strategy::Matcha { budget: 0.5 }).unwrap(),
+        );
     });
 }

@@ -4,71 +4,54 @@
 //!
 //! Substrate: the fast simulator on a non-IID logistic-regression task in
 //! a communication-dominated regime (compute ≪ comm, like WRN/CIFAR-100
-//! over Ethernet). Shape claims to reproduce:
+//! over Ethernet), driven through the `experiment` spec API (problem and
+//! sampler seeds pinned to the historical values, so the trajectories are
+//! unchanged). Shape claims to reproduce:
 //!   (d–f) at CB = 0.5 the loss-vs-epoch curve is nearly identical to
 //!         vanilla;
 //!   (a–c) in wall-clock, low budgets reach a loss target several times
 //!         faster; per-iteration communication shrinks ~50x at CB = 0.02.
 
 use matcha::benchkit::Table;
-use matcha::budget::optimize_activation_probabilities;
-use matcha::delay::DelayModel;
-use matcha::graph::paper_figure1_graph;
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, vanilla_design};
-use matcha::sim::{run_decentralized, LogisticProblem, LogisticSpec, RunConfig, RunResult};
-use matcha::topology::{MatchaSampler, TopologySampler, VanillaSampler};
+use matcha::experiment::{
+    self, ExperimentResult, ExperimentSpec, NoopObserver, ProblemSpec, Strategy,
+};
 
-fn main() {
-    let g = paper_figure1_graph();
-    let d = decompose(&g);
-    let problem = LogisticProblem::generate(LogisticSpec {
-        num_workers: g.num_nodes(),
-        non_iid: 0.8,
-        separation: 2.0,
-        seed: 5,
-        ..LogisticSpec::default()
-    });
-
-    let iters = 3000;
-    let cfg = |alpha: f64| RunConfig {
-        lr: 0.1,
-        iterations: iters,
-        record_every: 30,
-        alpha,
+fn spec(strategy: Strategy) -> ExperimentSpec {
+    ExperimentSpec::new("fig1")
+        .strategy(strategy)
+        .problem(ProblemSpec::Logistic { non_iid: 0.8, separation: 2.0, seed: Some(5) })
+        .lr(0.1)
+        .iterations(3000)
+        .record_every(30)
         // Communication-dominated regime: computing one minibatch costs
         // 0.2 link-units (the CIFAR-100/WRN plots are in this regime).
-        compute_units: 0.2,
-        delay: DelayModel::UnitPerMatching,
-        seed: 1,
-        ..RunConfig::default()
-    };
+        .compute_units(0.2)
+        .seed(1)
+        .sampler_seed(21)
+}
 
-    let mut results: Vec<(String, f64, RunResult)> = Vec::new();
-    let van = vanilla_design(&g.laplacian());
-    let mut vs = VanillaSampler::new(d.len());
+fn main() {
+    let iters = 3000;
+    let mut results: Vec<(String, f64, ExperimentResult)> = Vec::new();
     results.push((
         "vanilla".into(),
         1.0,
-        run_decentralized(&problem, &d.matchings, &mut vs, &cfg(van.alpha)),
+        experiment::run(&spec(Strategy::Vanilla)).expect("vanilla run"),
     ));
     for cb in [0.5, 0.1, 0.02] {
-        let probs = optimize_activation_probabilities(&d, cb);
-        let mix = optimize_alpha(&d, &probs.probabilities);
-        let mut s = MatchaSampler::new(probs.probabilities.clone(), 21);
+        let s = spec(Strategy::Matcha { budget: cb });
+        let plan = experiment::plan(&s).expect("plan");
         let label = format!("matcha CB={cb}");
         println!(
             "{label}: Σp = {:.3}, α = {:.4}, ρ = {:.4}, E[comm] = {:.3}/iter",
-            probs.expected_comm_time(),
-            mix.alpha,
-            mix.rho,
-            s.expected_comm_units()
+            plan.probabilities.iter().sum::<f64>(),
+            plan.alpha,
+            plan.rho,
+            plan.expected_comm_units()
         );
-        results.push((
-            label,
-            cb,
-            run_decentralized(&problem, &d.matchings, &mut s, &cfg(mix.alpha)),
-        ));
+        let run = experiment::run_planned(&s, &plan, &mut NoopObserver).expect("matcha run");
+        results.push((label, cb, run));
     }
 
     // --- Fig 4 d–f analog: loss vs iterations --------------------------
@@ -94,7 +77,7 @@ fn main() {
         // A loss every run eventually reaches: 10% above the best final.
         let best = results
             .iter()
-            .map(|(_, _, r)| r.metrics.last("loss_vs_iter").unwrap())
+            .map(|(_, _, r)| r.final_loss())
             .fold(f64::INFINITY, f64::min);
         best * 1.10
     };
@@ -128,8 +111,8 @@ fn main() {
     );
 
     // CB=0.5 per-epoch parity with vanilla (Fig 4d–f).
-    let v_final = results[0].2.metrics.last("loss_vs_iter").unwrap();
-    let m_final = results[1].2.metrics.last("loss_vs_iter").unwrap();
+    let v_final = results[0].2.final_loss();
+    let m_final = results[1].2.final_loss();
     assert!(
         (m_final - v_final).abs() < 0.05 * v_final.max(0.1),
         "CB=0.5 final loss {m_final} should track vanilla {v_final}"

@@ -8,19 +8,14 @@
 //! Δ = 6/10/8(ER) — all chosen so the effective max degree ≈ 4.
 //!
 //! The per-topology runs are independent, so they fan out across cores
-//! via the engine's sweep driver (`engine::sweep_parallel`) — results
-//! come back in input order, so the density-monotonicity assertions are
-//! unchanged from the serial version.
+//! via the engine's sweep driver (`engine::sweep_parallel`); each point
+//! is a pair of spec-driven `experiment::run` calls (seeds pinned to the
+//! historical values, so the trajectories are unchanged).
 
 use matcha::benchkit::Table;
-use matcha::budget::optimize_activation_probabilities;
-use matcha::delay::DelayModel;
 use matcha::engine::{available_threads, sweep_parallel};
-use matcha::graph::{expected_node_degree, paper_figure9_topologies};
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, vanilla_design};
-use matcha::sim::{run_decentralized, LogisticProblem, LogisticSpec, RunConfig};
-use matcha::topology::{MatchaSampler, VanillaSampler};
+use matcha::experiment::{self, ExperimentSpec, NoopObserver, ProblemSpec, Strategy};
+use matcha::graph::{expected_node_degree, paper_figure9_topologies, Graph};
 
 struct PointResult {
     name: String,
@@ -33,6 +28,18 @@ struct PointResult {
     matcha_ttt: Option<f64>,
 }
 
+fn spec(g: &Graph, strategy: Strategy, iters: usize) -> ExperimentSpec {
+    ExperimentSpec::on_graph(g.clone())
+        .strategy(strategy)
+        .problem(ProblemSpec::Logistic { non_iid: 0.6, separation: 1.5, seed: Some(40) })
+        .lr(0.1)
+        .iterations(iters)
+        .record_every(25)
+        .compute_units(0.5)
+        .seed(4)
+        .sampler_seed(9)
+}
+
 fn main() {
     let topologies = paper_figure9_topologies();
     let budgets = [0.75, 0.4, 0.3]; // paper's choices per density
@@ -42,35 +49,19 @@ fn main() {
     let points: Vec<_> = topologies.iter().zip(&budgets).collect();
     let results = sweep_parallel(&points, available_threads(), |_i, ((name, g), cb)| {
         let cb = **cb;
-        let d = decompose(g);
-        let probs = optimize_activation_probabilities(&d, cb);
-        let mix = optimize_alpha(&d, &probs.probabilities);
-        let van = vanilla_design(&g.laplacian());
+        let mspec = spec(g, Strategy::Matcha { budget: cb }, iters);
+        let plan = experiment::plan(&mspec).expect("matcha plan");
 
         // §5 claim: expected activated degree ≈ 4 under the chosen CB.
-        let eff = expected_node_degree(g.num_nodes(), &d.matchings, &probs.probabilities);
+        let eff = expected_node_degree(
+            g.num_nodes(),
+            &plan.decomposition.matchings,
+            &plan.probabilities,
+        );
         let eff_max = eff.iter().cloned().fold(0.0f64, f64::max);
 
-        let problem = LogisticProblem::generate(LogisticSpec {
-            num_workers: g.num_nodes(),
-            non_iid: 0.6,
-            seed: 40,
-            ..LogisticSpec::default()
-        });
-        let cfg = |alpha: f64| RunConfig {
-            lr: 0.1,
-            iterations: iters,
-            record_every: 25,
-            alpha,
-            compute_units: 0.5,
-            delay: DelayModel::UnitPerMatching,
-            seed: 4,
-            ..RunConfig::default()
-        };
-        let mut vs = VanillaSampler::new(d.len());
-        let vres = run_decentralized(&problem, &d.matchings, &mut vs, &cfg(van.alpha));
-        let mut ms = MatchaSampler::new(probs.probabilities.clone(), 9);
-        let mres = run_decentralized(&problem, &d.matchings, &mut ms, &cfg(mix.alpha));
+        let vres = experiment::run(&spec(g, Strategy::Vanilla, iters)).expect("vanilla run");
+        let mres = experiment::run_planned(&mspec, &plan, &mut NoopObserver).expect("matcha run");
 
         // Adaptive target: 5% above the best loss either run reaches
         // (the paper's fixed "loss = 0.1" translated to this workload).

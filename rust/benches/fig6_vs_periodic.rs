@@ -6,53 +6,37 @@
 //! Workload: a strongly heterogeneous noisy quadratic, where the
 //! suboptimality plateau scales with the higher-order ρ terms of
 //! Theorem 1 — exactly the regime where the consensus quality separates
-//! the strategies (the paper's deep-learning version of this figure sees
-//! the separation through the same mechanism).
+//! the strategies. All three runs are one spec with the strategy swapped
+//! (problem and sampler seeds pinned to the historical values).
 
 use matcha::benchkit::Table;
-use matcha::budget::optimize_activation_probabilities;
-use matcha::graph::paper_figure1_graph;
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, optimize_alpha_periodic, vanilla_design};
-use matcha::rng::Rng;
-use matcha::sim::{run_decentralized, QuadraticProblem, RunConfig};
-use matcha::topology::{MatchaSampler, PeriodicSampler, VanillaSampler};
+use matcha::experiment::{self, ExperimentSpec, ProblemSpec, Strategy};
+
+fn spec(strategy: Strategy) -> ExperimentSpec {
+    ExperimentSpec::new("fig1")
+        .strategy(strategy)
+        .problem(ProblemSpec::Quadratic { dim: 24, hetero: 4.0, noise_std: 1.0, seed: Some(88) })
+        .lr(0.04)
+        .iterations(3000)
+        .record_every(50)
+        .seed(1)
+        .sampler_seed(31)
+}
 
 fn main() {
-    let g = paper_figure1_graph();
-    let d = decompose(&g);
     let cb = 0.4;
-    let iters = 3000;
 
-    // Strong heterogeneity + gradient noise: consensus quality matters.
-    let problem = {
-        let mut r = Rng::new(88);
-        QuadraticProblem::generate(g.num_nodes(), 24, 4.0, 1.0, &mut r)
-    };
-    let cfg = |alpha: f64| RunConfig {
-        lr: 0.04,
-        iterations: iters,
-        record_every: 50,
-        alpha,
-        seed: 1,
-        ..RunConfig::default()
-    };
-
-    let van = vanilla_design(&g.laplacian());
-    let probs = optimize_activation_probabilities(&d, cb);
-    let matcha = optimize_alpha(&d, &probs.probabilities);
-    let periodic = optimize_alpha_periodic(&g.laplacian(), cb);
+    let vplan = experiment::plan(&spec(Strategy::Vanilla)).unwrap();
+    let mplan = experiment::plan(&spec(Strategy::Matcha { budget: cb })).unwrap();
+    let pplan = experiment::plan(&spec(Strategy::Periodic { budget: cb })).unwrap();
     println!(
         "spectral norms: vanilla {:.4} | matcha@{cb} {:.4} | periodic@{cb} {:.4}",
-        van.rho, matcha.rho, periodic.rho
+        vplan.rho, mplan.rho, pplan.rho
     );
 
-    let mut vs = VanillaSampler::new(d.len());
-    let vres = run_decentralized(&problem, &d.matchings, &mut vs, &cfg(van.alpha));
-    let mut ms = MatchaSampler::new(probs.probabilities.clone(), 31);
-    let mres = run_decentralized(&problem, &d.matchings, &mut ms, &cfg(matcha.alpha));
-    let mut ps = PeriodicSampler::from_budget(d.len(), cb);
-    let pres = run_decentralized(&problem, &d.matchings, &mut ps, &cfg(periodic.alpha));
+    let vres = experiment::run(&spec(Strategy::Vanilla)).unwrap();
+    let mres = experiment::run(&spec(Strategy::Matcha { budget: cb })).unwrap();
+    let pres = experiment::run(&spec(Strategy::Periodic { budget: cb })).unwrap();
 
     println!("\n=== Fig 6: suboptimality F(x̄) − F* vs iteration at CB = {cb} ===");
     let mut t = Table::new(&["iter", "vanilla", "MATCHA", "P-DecenSGD"]);

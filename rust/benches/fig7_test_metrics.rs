@@ -1,60 +1,28 @@
 //! Figures 7 & 10: held-out (test) accuracy of MATCHA at several budgets
 //! vs vanilla DecenSGD — generalization is preserved, not just training
 //! loss. Fig 10's across-topology version is covered by the second block.
+//! Runs are spec-driven (`experiment::run`) with the historical problem
+//! and sampler seeds pinned.
 
 use matcha::benchkit::Table;
-use matcha::budget::optimize_activation_probabilities;
-use matcha::graph::{paper_figure1_graph, paper_figure9_topologies};
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, vanilla_design};
-use matcha::sim::{run_decentralized, LogisticProblem, LogisticSpec, RunConfig};
-use matcha::topology::{MatchaSampler, VanillaSampler};
+use matcha::experiment::{self, ExperimentSpec, ProblemSpec, Strategy};
+use matcha::graph::{paper_figure1_graph, paper_figure9_topologies, Graph};
 
-fn accuracy_run(
-    g: &matcha::graph::Graph,
-    cb: Option<f64>,
-    iters: usize,
-    seed: u64,
-) -> (f64, Vec<matcha::metrics::Sample>) {
-    let d = decompose(g);
-    let problem = LogisticProblem::generate(LogisticSpec {
-        num_workers: g.num_nodes(),
-        non_iid: 0.5,
-        seed: 900 + seed,
-        ..LogisticSpec::default()
-    });
-    let (alpha, res) = match cb {
-        None => {
-            let van = vanilla_design(&g.laplacian());
-            let mut s = VanillaSampler::new(d.len());
-            let cfg = RunConfig {
-                lr: 0.1,
-                iterations: iters,
-                record_every: 50,
-                alpha: van.alpha,
-                seed,
-                ..RunConfig::default()
-            };
-            (van.alpha, run_decentralized(&problem, &d.matchings, &mut s, &cfg))
-        }
-        Some(cb) => {
-            let probs = optimize_activation_probabilities(&d, cb);
-            let mix = optimize_alpha(&d, &probs.probabilities);
-            let mut s = MatchaSampler::new(probs.probabilities.clone(), seed ^ 0xfeed);
-            let cfg = RunConfig {
-                lr: 0.1,
-                iterations: iters,
-                record_every: 50,
-                alpha: mix.alpha,
-                seed,
-                ..RunConfig::default()
-            };
-            (mix.alpha, run_decentralized(&problem, &d.matchings, &mut s, &cfg))
-        }
+fn accuracy_run(g: &Graph, cb: Option<f64>, iters: usize, seed: u64) -> f64 {
+    let strategy = match cb {
+        None => Strategy::Vanilla,
+        Some(cb) => Strategy::Matcha { budget: cb },
     };
-    let _ = alpha;
-    let acc = res.metrics.last("test_acc_vs_iter").unwrap();
-    (acc, res.metrics.get("test_acc_vs_iter").to_vec())
+    let spec = ExperimentSpec::on_graph(g.clone())
+        .strategy(strategy)
+        .problem(ProblemSpec::Logistic { non_iid: 0.5, separation: 1.5, seed: Some(900 + seed) })
+        .lr(0.1)
+        .iterations(iters)
+        .record_every(50)
+        .seed(seed)
+        .sampler_seed(seed ^ 0xfeed);
+    let res = experiment::run(&spec).expect("accuracy run");
+    res.metrics.last("test_acc_vs_iter").unwrap()
 }
 
 fn main() {
@@ -64,11 +32,11 @@ fn main() {
     let g = paper_figure1_graph();
     println!("=== Fig 7: test accuracy, fig1 graph ===");
     let mut t = Table::new(&["run", "final test acc"]);
-    let (van_acc, _) = accuracy_run(&g, None, iters, 2);
+    let van_acc = accuracy_run(&g, None, iters, 2);
     t.row(&["vanilla".into(), format!("{van_acc:.4}")]);
     let mut accs = vec![];
     for cb in [0.5, 0.1, 0.02] {
-        let (acc, _) = accuracy_run(&g, Some(cb), iters, 2);
+        let acc = accuracy_run(&g, Some(cb), iters, 2);
         t.row(&[format!("matcha CB={cb}"), format!("{acc:.4}")]);
         accs.push(acc);
     }
@@ -85,8 +53,8 @@ fn main() {
     println!("\n=== Fig 10: test accuracy across topologies (CB per Fig 5) ===");
     let mut t2 = Table::new(&["topology", "vanilla acc", "matcha acc"]);
     for ((name, g16), cb) in paper_figure9_topologies().iter().zip([0.75, 0.4, 0.3]) {
-        let (va, _) = accuracy_run(g16, None, iters, 3);
-        let (ma, _) = accuracy_run(g16, Some(cb), iters, 3);
+        let va = accuracy_run(g16, None, iters, 3);
+        let ma = accuracy_run(g16, Some(cb), iters, 3);
         t2.row(&[name.to_string(), format!("{va:.4}"), format!("{ma:.4}")]);
         assert!(ma >= va - 0.03, "{name}: MATCHA acc {ma} vs vanilla {va}");
     }

@@ -1,15 +1,24 @@
 //! Figure 8: training loss vs epochs across the 16-node topologies —
 //! with a properly chosen budget, MATCHA's per-epoch loss can be *lower*
 //! than vanilla DecenSGD's (its optimized random topology has a smaller
-//! spectral norm; see Fig 3b/3c).
+//! spectral norm; see Fig 3b/3c). The ρ scan and both runs go through the
+//! `experiment` plan/run pipeline (seeds pinned to the historical
+//! values).
 
 use matcha::benchkit::Table;
-use matcha::budget::optimize_activation_probabilities;
-use matcha::graph::paper_figure9_topologies;
-use matcha::matching::decompose;
-use matcha::mixing::{optimize_alpha, vanilla_design};
-use matcha::sim::{run_decentralized, LogisticProblem, LogisticSpec, RunConfig};
-use matcha::topology::{MatchaSampler, VanillaSampler};
+use matcha::experiment::{self, ExperimentResult, ExperimentSpec, Plan, ProblemSpec, Strategy};
+use matcha::graph::{paper_figure9_topologies, Graph};
+
+fn spec(g: &Graph, strategy: Strategy, iters: usize) -> ExperimentSpec {
+    ExperimentSpec::on_graph(g.clone())
+        .strategy(strategy)
+        .problem(ProblemSpec::Logistic { non_iid: 0.8, separation: 1.5, seed: Some(123) })
+        .lr(0.1)
+        .iterations(iters)
+        .record_every(50)
+        .seed(6)
+        .sampler_seed(51)
+}
 
 fn main() {
     let iters = 2500;
@@ -23,44 +32,30 @@ fn main() {
     ]);
 
     for (name, g) in paper_figure9_topologies() {
-        let d = decompose(&g);
         // Pick the budget whose optimized ρ is smallest (the paper's
-        // "proper communication budget").
-        let (mut best_cb, mut best) = (1.0, f64::INFINITY);
-        let mut best_probs = None;
+        // "proper communication budget") by planning the whole scan.
+        let mut best: Option<Plan> = None;
+        let mut best_cb = 1.0;
         for i in 2..=10 {
             let cb = i as f64 / 10.0;
-            let probs = optimize_activation_probabilities(&d, cb);
-            let mix = optimize_alpha(&d, &probs.probabilities);
-            if mix.rho < best {
-                best = mix.rho;
+            let plan = Plan::for_graph(g.clone(), Strategy::Matcha { budget: cb }).unwrap();
+            let improves = match &best {
+                None => true,
+                Some(b) => plan.rho < b.rho,
+            };
+            if improves {
                 best_cb = cb;
-                best_probs = Some((probs, mix));
+                best = Some(plan);
             }
         }
-        let (probs, mix) = best_probs.unwrap();
-        let van = vanilla_design(&g.laplacian());
+        let mplan = best.unwrap();
+        let vplan = Plan::for_graph(g.clone(), Strategy::Vanilla).unwrap();
 
-        let problem = LogisticProblem::generate(LogisticSpec {
-            num_workers: g.num_nodes(),
-            non_iid: 0.8,
-            seed: 123,
-            ..LogisticSpec::default()
-        });
-        let cfg = |alpha: f64| RunConfig {
-            lr: 0.1,
-            iterations: iters,
-            record_every: 50,
-            alpha,
-            seed: 6,
-            ..RunConfig::default()
-        };
-        let mut vs = VanillaSampler::new(d.len());
-        let vres = run_decentralized(&problem, &d.matchings, &mut vs, &cfg(van.alpha));
-        let mut ms = MatchaSampler::new(probs.probabilities.clone(), 51);
-        let mres = run_decentralized(&problem, &d.matchings, &mut ms, &cfg(mix.alpha));
+        let vres = experiment::run(&spec(&g, Strategy::Vanilla, iters)).unwrap();
+        let mres =
+            experiment::run(&spec(&g, Strategy::Matcha { budget: best_cb }, iters)).unwrap();
 
-        let tail = |r: &matcha::sim::RunResult| {
+        let tail = |r: &ExperimentResult| {
             let s = r.metrics.get("loss_vs_iter");
             let h = s.len() / 2;
             s[h..].iter().map(|x| x.y).sum::<f64>() / (s.len() - h) as f64
@@ -69,8 +64,8 @@ fn main() {
         t.row(&[
             name.to_string(),
             format!("{best_cb}"),
-            format!("{:.4}", van.rho),
-            format!("{:.4}", mix.rho),
+            format!("{:.4}", vplan.rho),
+            format!("{:.4}", mplan.rho),
             format!("{tv:.4}"),
             format!("{tm:.4}"),
         ]);
@@ -81,7 +76,7 @@ fn main() {
             "{name}: MATCHA tail loss {tm} should not exceed vanilla {tv}"
         );
         assert!(
-            mix.rho <= van.rho + 1e-9,
+            mplan.rho <= vplan.rho + 1e-9,
             "{name}: ρ-optimal budget should not be worse than vanilla"
         );
     }

@@ -2,19 +2,21 @@
 //!
 //! Covers every L3 component that sits inside an optimization or training
 //! loop: the Jacobi eigensolver (inner loop of the p-optimizer), the
-//! capped-simplex projection, the full budget optimizer, Misra–Gries
-//! decomposition, the simulator's gossip+SGD iteration, and schedule
-//! sampling. Numbers land in EXPERIMENTS.md §Perf.
+//! capped-simplex projection, the plan stage (decompose + probabilities +
+//! α), Misra–Gries decomposition, the simulator's gossip+SGD iteration,
+//! and schedule sampling — plus the full spec→plan→run experiment
+//! pipeline, so API-layer overhead stays visible. Numbers land in
+//! EXPERIMENTS.md §Perf.
 
 use matcha::benchkit::bench_auto;
-use matcha::budget::{optimize_activation_probabilities, project_capped_simplex};
+use matcha::budget::project_capped_simplex;
+use matcha::experiment::{self, Backend, ExperimentSpec, Plan, ProblemSpec, Strategy};
 use matcha::graph::{complete, erdos_renyi, paper_figure1_graph};
 use matcha::linalg::{symmetric_eigen, Mat};
 use matcha::matching::decompose;
-use matcha::mixing::optimize_alpha;
 use matcha::rng::Rng;
-use matcha::sim::{run_decentralized, QuadraticProblem, RunConfig};
-use matcha::topology::{MatchaSampler, Schedule, TopologySampler};
+use matcha::sim::{run_decentralized, QuadraticProblem};
+use matcha::topology::TopologySampler;
 
 fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
     let mut a = Mat::zeros(n, n);
@@ -28,6 +30,18 @@ fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
     a
 }
 
+/// The shared spec for the throughput sections: fig1 graph, MATCHA at
+/// CB 0.5, quadratic workload.
+fn throughput_spec(iters: usize, backend: Backend) -> ExperimentSpec {
+    ExperimentSpec::new("fig1")
+        .strategy(Strategy::Matcha { budget: 0.5 })
+        .problem(ProblemSpec::Quadratic { dim: 50, hetero: 1.0, noise_std: 0.1, seed: Some(3) })
+        .backend(backend)
+        .iterations(iters)
+        .record_every(1000)
+        .sampler_seed(5)
+}
+
 fn main() {
     let mut rng = Rng::new(2024);
 
@@ -37,43 +51,16 @@ fn main() {
     let dry_run = std::env::args().any(|a| a == "--dry-run");
     if dry_run {
         let g8 = paper_figure1_graph();
-        let d8 = decompose(&g8);
         bench_auto("dry: misra_gries fig1", 20, || {
             std::hint::black_box(decompose(&g8));
         });
-        let p = {
-            let mut r = Rng::new(3);
-            QuadraticProblem::generate(8, 20, 1.0, 0.1, &mut r)
-        };
-        let probs = optimize_activation_probabilities(&d8, 0.5);
-        let mix = optimize_alpha(&d8, &probs.probabilities);
-        bench_auto("dry: sim 20 iters", 30, || {
-            let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
-            let cfg = RunConfig {
-                iterations: 20,
-                record_every: 1000,
-                alpha: mix.alpha,
-                ..RunConfig::default()
-            };
-            std::hint::black_box(run_decentralized(&p, &d8.matchings, &mut s, &cfg));
+        bench_auto("dry: experiment sim 20 iters", 30, || {
+            let spec = throughput_spec(20, Backend::SimReference);
+            std::hint::black_box(experiment::run(&spec).unwrap());
         });
-        bench_auto("dry: engine 20 iters", 30, || {
-            let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
-            let cfg = matcha::engine::EngineConfig {
-                run: RunConfig {
-                    iterations: 20,
-                    record_every: 1000,
-                    alpha: mix.alpha,
-                    ..RunConfig::default()
-                },
-                threads: 1,
-            };
-            std::hint::black_box(matcha::engine::run_engine_analytic(
-                &p,
-                &d8.matchings,
-                &mut s,
-                &cfg,
-            ));
+        bench_auto("dry: experiment engine 20 iters", 30, || {
+            let spec = throughput_spec(20, Backend::EngineSequential);
+            std::hint::black_box(experiment::run(&spec).unwrap());
         });
         println!("dry-run complete");
         return;
@@ -109,57 +96,52 @@ fn main() {
         std::hint::black_box(decompose(&k32));
     });
 
-    println!("\n=== full budget + alpha optimization (one-time setup cost) ===");
-    let d8 = decompose(&g8);
-    bench_auto("optimize p+alpha fig1 cb=0.5", 1000, || {
-        let p = optimize_activation_probabilities(&d8, 0.5);
-        std::hint::black_box(optimize_alpha(&d8, &p.probabilities));
+    println!("\n=== plan stage (decompose + probabilities + alpha) ===");
+    bench_auto("plan fig1 matcha cb=0.5", 1000, || {
+        std::hint::black_box(
+            Plan::for_graph(g8.clone(), Strategy::Matcha { budget: 0.5 }).unwrap(),
+        );
     });
 
-    println!("\n=== simulator iteration throughput ===");
+    // One plan reused by the runner-isolation benches below (planning
+    // cost measured separately above, so these time the runners alone).
+    let plan = Plan::for_graph(g8.clone(), Strategy::Matcha { budget: 0.5 }).unwrap();
+    let spec = throughput_spec(100, Backend::SimReference);
+    let cfg = plan.run_config(&spec).unwrap();
     let p = {
         let mut r = Rng::new(3);
         QuadraticProblem::generate(8, 50, 1.0, 0.1, &mut r)
     };
-    let probs = optimize_activation_probabilities(&d8, 0.5);
-    let mix = optimize_alpha(&d8, &probs.probabilities);
+
+    println!("\n=== simulator iteration throughput ===");
     bench_auto("sim 100 iters m=8 d=50 (gossip+sgd)", 1500, || {
-        let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
-        let cfg = RunConfig {
-            iterations: 100,
-            record_every: 1000,
-            alpha: mix.alpha,
-            ..RunConfig::default()
-        };
-        std::hint::black_box(run_decentralized(&p, &d8.matchings, &mut s, &cfg));
+        let mut s = plan.sampler(5);
+        std::hint::black_box(run_decentralized(&p, &plan.decomposition.matchings, &mut s, &cfg));
     });
 
     println!("\n=== engine iteration throughput (event-queue overhead vs sim) ===");
     bench_auto("engine 100 iters m=8 d=50 sequential", 1500, || {
-        let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
-        let cfg = matcha::engine::EngineConfig {
-            run: RunConfig {
-                iterations: 100,
-                record_every: 1000,
-                alpha: mix.alpha,
-                ..RunConfig::default()
-            },
-            threads: 1,
-        };
+        let mut s = plan.sampler(5);
+        let engine_cfg = matcha::engine::EngineConfig { run: cfg.clone(), threads: 1 };
         std::hint::black_box(matcha::engine::run_engine_analytic(
             &p,
-            &d8.matchings,
+            &plan.decomposition.matchings,
             &mut s,
-            &cfg,
+            &engine_cfg,
         ));
+    });
+
+    println!("\n=== full experiment pipeline (spec -> plan -> run) ===");
+    bench_auto("experiment::run sim 100 iters", 1500, || {
+        let spec = throughput_spec(100, Backend::SimReference);
+        std::hint::black_box(experiment::run(&spec).unwrap());
     });
 
     println!("\n=== schedule generation (apriori cost) ===");
     bench_auto("schedule 10k rounds", 400, || {
-        let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
-        std::hint::black_box(Schedule::generate(&mut s, mix.alpha, d8.len(), 10_000));
+        std::hint::black_box(plan.schedule(10_000, 5));
     });
-    let mut s = MatchaSampler::new(probs.probabilities.clone(), 5);
+    let mut s = plan.sampler(5);
     bench_auto("sampler round", 50, || {
         std::hint::black_box(s.round(0));
     });

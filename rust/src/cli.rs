@@ -1,23 +1,21 @@
 //! Command-line interface for the `matcha` binary.
 //!
 //! Hand-rolled parsing (no `clap` in this offline image): subcommand +
-//! `--flag value` pairs. Every figure harness in `rust/benches/` is also
-//! reachable interactively from here, which is how the EXPERIMENTS.md
-//! runs were produced.
+//! `--flag value` pairs. The run-shaped commands (`run`, `sim`, `engine`,
+//! `sweep`, `schedule`) are thin shells over the
+//! [`crate::experiment`] spec → plan → run pipeline; `run --spec FILE`
+//! executes a JSON experiment file directly. Every figure harness in
+//! `rust/benches/` is also reachable interactively from here.
 
 use crate::budget::{optimize_activation_probabilities, periodic_probabilities};
 use crate::config::ArtifactPaths;
-use crate::coordinator::plan_matcha;
-use crate::delay::DelayModel;
-use crate::engine::{
-    available_threads, parse_policy, run_engine, sweep_parallel, EngineConfig,
+use crate::experiment::{
+    self, Backend, ExperimentResult, ExperimentSpec, Observer, ProblemSpec, Strategy,
 };
 use crate::graph::{expected_node_comm_time, parse_graph_spec, Graph};
-use crate::matching::{decompose, decompose_greedy, MatchingDecomposition};
-use crate::mixing::{optimize_alpha, optimize_alpha_periodic, vanilla_design};
-use crate::rng::Rng;
-use crate::sim::{run_decentralized, LogisticProblem, LogisticSpec, QuadraticProblem, RunConfig};
-use crate::topology::{MatchaSampler, PeriodicSampler, TopologySampler, VanillaSampler};
+use crate::json::Json;
+use crate::matching::{decompose, decompose_greedy};
+use crate::mixing::{optimize_alpha, optimize_alpha_periodic};
 
 /// Parsed `--flag value` arguments.
 pub struct Args {
@@ -26,20 +24,23 @@ pub struct Args {
 
 impl Args {
     /// Parse from raw argv-style strings; returns an error message on
-    /// dangling flags.
+    /// dangling flags, positional arguments, or duplicated flags.
     pub fn parse(raw: &[String]) -> Result<Args, String> {
         let mut flags = std::collections::BTreeMap::new();
         let mut i = 0;
         while i < raw.len() {
             let k = &raw[i];
             if let Some(name) = k.strip_prefix("--") {
-                if i + 1 >= raw.len() || raw[i + 1].starts_with("--") {
+                let value = if i + 1 >= raw.len() || raw[i + 1].starts_with("--") {
                     // Boolean flag.
-                    flags.insert(name.to_string(), "true".to_string());
                     i += 1;
+                    "true".to_string()
                 } else {
-                    flags.insert(name.to_string(), raw[i + 1].clone());
                     i += 2;
+                    raw[i - 1].clone()
+                };
+                if flags.insert(name.to_string(), value).is_some() {
+                    return Err(format!("duplicate flag --{name}"));
                 }
             } else {
                 return Err(format!("unexpected positional argument '{k}'"));
@@ -77,6 +78,9 @@ matcha — MATCHA: decentralized SGD with matching decomposition sampling
 USAGE: matcha <command> [--flag value ...]
 
 COMMANDS
+  run        --spec FILE [--dry-run] [--out FILE]   execute a JSON experiment
+             spec (the spec → plan → run pipeline; --dry-run stops after
+             planning and prints the derived quantities)
   decompose  --graph SPEC [--greedy]            matching decomposition
   probs      --graph SPEC --budget CB           activation probabilities (problem 4)
   alpha      --graph SPEC --budget CB           mixing weight + spectral norm (Lemma 1)
@@ -88,13 +92,14 @@ COMMANDS
              [--policy analytic|hetero:SEED|straggler:W:F|flaky:P] [--threads T]
              (T>1 is a mode switch: the actor pool runs ONE THREAD PER WORKER)
   sweep      --graph SPEC --budgets A,B,... --iters N [--threads T] [--serial]
-             parallel budget sweep across cores (engine per point)
+             parallel budget sweep across cores; finished points stream as
+             JSON lines before the final table
   train      --graph SPEC --strategy S --budget CB --steps N [--artifacts DIR] [--pallas]
              (requires a build with --features xla)
   info       [--artifacts DIR]                  artifact metadata
 
 GRAPH SPECS   fig1 | ring:M | star:M | complete:M | grid:RxC | geom:M:DELTA:SEED | er:M:DELTA:SEED
-STRATEGIES    matcha | vanilla | periodic
+STRATEGIES    matcha | vanilla | periodic | single
 DELAY MODELS  unit | maxdeg | stochastic:lo:hi
 ";
 
@@ -118,6 +123,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
     };
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
+        "run" => cmd_run(&args),
         "decompose" => cmd_decompose(&args),
         "probs" => cmd_probs(&args),
         "alpha" => cmd_alpha(&args),
@@ -141,32 +147,100 @@ fn graph_arg(args: &Args) -> Result<Graph, String> {
     parse_graph_spec(args.str_or("graph", "fig1"))
 }
 
-/// Build the activation strategy for a decomposed graph: mixing weight
-/// plus sampler. Shared by `sim`, `engine` and `sweep`.
-#[allow(clippy::type_complexity)]
-fn build_strategy(
-    strategy: &str,
-    g: &Graph,
-    d: &MatchingDecomposition,
-    cb: f64,
-    seed: u64,
-) -> Result<(f64, Box<dyn TopologySampler>), String> {
-    match strategy {
-        "matcha" => {
-            let probs = optimize_activation_probabilities(d, cb);
-            let mix = optimize_alpha(d, &probs.probabilities);
-            Ok((mix.alpha, Box::new(MatchaSampler::new(probs.probabilities, seed))))
-        }
-        "vanilla" => {
-            let design = vanilla_design(&g.laplacian());
-            Ok((design.alpha, Box::new(VanillaSampler::new(d.len()))))
-        }
-        "periodic" => {
-            let design = optimize_alpha_periodic(&g.laplacian(), cb);
-            Ok((design.alpha, Box::new(PeriodicSampler::from_budget(d.len(), cb))))
-        }
-        other => Err(format!("unknown strategy '{other}'")),
+/// Assemble an [`ExperimentSpec`] from `sim`/`engine`/`sweep`-style flags.
+/// This is the single translation point from CLI flags to the typed API —
+/// the per-command glue it replaced lives on only in git history.
+fn spec_from_args(args: &Args, backend: Backend) -> Result<ExperimentSpec, String> {
+    let cb = args.f64_or("budget", 0.5)?;
+    let strategy = match args.str_or("strategy", "matcha") {
+        "matcha" => Strategy::Matcha { budget: cb },
+        "vanilla" => Strategy::Vanilla,
+        "periodic" => Strategy::Periodic { budget: cb },
+        "single" => Strategy::SingleMatching { budget: cb },
+        other => return Err(format!("unknown strategy '{other}'")),
+    };
+    let problem = match args.str_or("problem", "logreg") {
+        "quad" => ProblemSpec::quadratic(),
+        "logreg" => ProblemSpec::Logistic {
+            non_iid: args.f64_or("non-iid", 0.0)?,
+            separation: 1.5,
+            seed: None,
+        },
+        other => return Err(format!("unknown problem '{other}'")),
+    };
+    // Validation happens inside plan()/run(), which every caller goes
+    // through next — validating here too would resolve generator graph
+    // specs twice.
+    Ok(ExperimentSpec::new(args.str_or("graph", "fig1"))
+        .strategy(strategy)
+        .problem(problem)
+        .delay(args.str_or("delay", "unit"))
+        .policy(args.str_or("policy", "analytic"))
+        .backend(backend)
+        .lr(args.f64_or("lr", 0.05)?)
+        .iterations(args.usize_or("iters", 1000)?)
+        .compute_units(args.f64_or("compute-units", 1.0)?)
+        .seed(args.usize_or("seed", 0)? as u64))
+}
+
+fn save_metrics(args: &Args, metrics: &crate::metrics::Recorder) -> Result<(), String> {
+    if let Some(out) = args.flags.get("out") {
+        metrics
+            .save_json(std::path::Path::new(out))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {out}");
     }
+    Ok(())
+}
+
+fn print_run_summary(label: &str, result: &ExperimentResult) {
+    println!(
+        "{label}: final loss {:.5}, total virtual time {:.1} units, comm {:.1} units",
+        result.final_loss(),
+        result.total_time,
+        result.total_comm_units
+    );
+    if let Some(acc) = result.metrics.last("test_acc_vs_iter") {
+        println!("final test accuracy {acc:.4}");
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let Some(path) = args.flags.get("spec") else {
+        return Err("run: --spec FILE is required".into());
+    };
+    let spec = ExperimentSpec::load(std::path::Path::new(path))?;
+    let plan = experiment::plan(&spec)?;
+    println!(
+        "plan: strategy={} problem={} backend={} policy={} | {} nodes, M={} matchings, \
+         α={:.5}, ρ={:.6}, λ₂={:.6}, E[comm]={:.3}/iter",
+        spec.strategy.name(),
+        spec.problem.name(),
+        spec.backend.name(),
+        spec.policy,
+        plan.graph.num_nodes(),
+        plan.decomposition.len(),
+        plan.alpha,
+        plan.rho,
+        plan.lambda2,
+        plan.expected_comm_units()
+    );
+    if args.bool("dry-run") {
+        println!("dry-run: spec valid, stopping before execution");
+        return Ok(());
+    }
+    let result = experiment::run_planned(&spec, &plan, &mut experiment::NoopObserver)?;
+    print_run_summary(
+        &format!("run iters={}", spec.iterations),
+        &result,
+    );
+    if result.events > 0 {
+        println!(
+            "events processed: {}, links dropped by failure injection: {}",
+            result.events, result.dropped_links
+        );
+    }
+    save_metrics(args, &result.metrics)
 }
 
 fn cmd_decompose(args: &Args) -> Result<(), String> {
@@ -203,12 +277,10 @@ fn cmd_probs(args: &Args) -> Result<(), String> {
 fn cmd_alpha(args: &Args) -> Result<(), String> {
     let g = graph_arg(args)?;
     let cb = args.f64_or("budget", 0.5)?;
-    let d = decompose(&g);
-    let probs = optimize_activation_probabilities(&d, cb);
-    let mix = optimize_alpha(&d, &probs.probabilities);
-    let van = vanilla_design(&g.laplacian());
-    let per = optimize_alpha_periodic(&g.laplacian(), cb);
-    println!("MATCHA    CB={cb}: α = {:.5}, ρ = {:.6}", mix.alpha, mix.rho);
+    let matcha = experiment::Plan::for_graph(g.clone(), Strategy::Matcha { budget: cb })?;
+    let per = experiment::Plan::for_graph(g.clone(), Strategy::Periodic { budget: cb })?;
+    let van = experiment::Plan::for_graph(g, Strategy::Vanilla)?;
+    println!("MATCHA    CB={cb}: α = {:.5}, ρ = {:.6}", matcha.alpha, matcha.rho);
     println!("P-DecenSGD CB={cb}: α = {:.5}, ρ = {:.6}", per.alpha, per.rho);
     println!("vanilla   CB=1.0: α = {:.5}, ρ = {:.6}", van.alpha, van.rho);
     Ok(())
@@ -249,16 +321,17 @@ fn cmd_schedule(args: &Args) -> Result<(), String> {
     let cb = args.f64_or("budget", 0.5)?;
     let steps = args.usize_or("steps", 100)?;
     let seed = args.usize_or("seed", 0)? as u64;
-    let plan = plan_matcha(&g, cb, steps, seed);
+    let plan = experiment::Plan::for_graph(g, Strategy::Matcha { budget: cb })?;
+    let schedule = plan.schedule(steps, seed);
     println!(
         "schedule: {} rounds, α = {:.5}, ρ = {:.6}, mean comm = {:.3} units/iter",
-        plan.schedule.rounds.len(),
+        schedule.rounds.len(),
         plan.alpha,
         plan.rho,
-        plan.schedule.mean_comm_units()
+        schedule.mean_comm_units()
     );
     if let Some(out) = args.flags.get("out") {
-        plan.schedule
+        schedule
             .save(std::path::Path::new(out))
             .map_err(|e| e.to_string())?;
         println!("wrote {out}");
@@ -266,153 +339,86 @@ fn cmd_schedule(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Assemble the shared `RunConfig` for `sim`/`engine`/`sweep`.
-fn run_config_from(args: &Args, alpha: f64, iters: usize, seed: u64) -> Result<RunConfig, String> {
-    Ok(RunConfig {
-        lr: args.f64_or("lr", 0.05)?,
-        iterations: iters,
-        record_every: (iters / 50).max(1),
-        alpha,
-        compute_units: args.f64_or("compute-units", 1.0)?,
-        delay: DelayModel::parse(args.str_or("delay", "unit"))?,
-        seed,
-        ..RunConfig::default()
-    })
-}
-
-/// Build the problem named by `--problem` for an `m`-node graph.
-enum CliProblem {
-    Quad(QuadraticProblem),
-    Logreg(LogisticProblem),
-}
-
-fn problem_from(args: &Args, m: usize, seed: u64) -> Result<CliProblem, String> {
-    match args.str_or("problem", "logreg") {
-        "quad" => {
-            let mut rng = Rng::new(seed ^ 0x9a9a);
-            Ok(CliProblem::Quad(QuadraticProblem::generate(m, 20, 1.0, 0.2, &mut rng)))
-        }
-        "logreg" => {
-            let spec = LogisticSpec {
-                num_workers: m,
-                non_iid: args.f64_or("non-iid", 0.0)?,
-                seed: seed ^ 0x10f,
-                ..LogisticSpec::default()
-            };
-            Ok(CliProblem::Logreg(LogisticProblem::generate(spec)))
-        }
-        other => Err(format!("unknown problem '{other}'")),
-    }
-}
-
 fn cmd_sim(args: &Args) -> Result<(), String> {
-    let g = graph_arg(args)?;
-    let cb = args.f64_or("budget", 0.5)?;
-    let iters = args.usize_or("iters", 1000)?;
-    let seed = args.usize_or("seed", 0)? as u64;
-    let strategy = args.str_or("strategy", "matcha");
-    let d = decompose(&g);
-    let (alpha, mut sampler) = build_strategy(strategy, &g, &d, cb, seed)?;
-    let cfg = run_config_from(args, alpha, iters, seed)?;
-
-    let problem = args.str_or("problem", "logreg").to_string();
-    let result = match problem_from(args, g.num_nodes(), seed)? {
-        CliProblem::Quad(p) => run_decentralized(&p, &d.matchings, &mut sampler, &cfg),
-        CliProblem::Logreg(p) => run_decentralized(&p, &d.matchings, &mut sampler, &cfg),
-    };
-
-    println!(
-        "strategy={strategy} problem={problem} iters={iters} CB={cb}: \
-         final loss {:.5}, total virtual time {:.1} units, comm {:.1} units",
-        result.metrics.last("loss_vs_iter").unwrap_or(f64::NAN),
-        result.total_time,
-        result.total_comm_units
+    let spec = spec_from_args(args, Backend::SimReference)?;
+    let result = experiment::run(&spec)?;
+    print_run_summary(
+        &format!(
+            "strategy={} problem={} iters={} CB={}",
+            spec.strategy.name(),
+            spec.problem.name(),
+            spec.iterations,
+            spec.strategy.budget().unwrap_or(1.0)
+        ),
+        &result,
     );
-    if let Some(acc) = result.metrics.last("test_acc_vs_iter") {
-        println!("final test accuracy {acc:.4}");
-    }
-    if let Some(out) = args.flags.get("out") {
-        result
-            .metrics
-            .save_json(std::path::Path::new(out))
-            .map_err(|e| e.to_string())?;
-        println!("wrote {out}");
-    }
-    Ok(())
+    save_metrics(args, &result.metrics)
 }
 
 fn cmd_engine(args: &Args) -> Result<(), String> {
-    let g = graph_arg(args)?;
-    let cb = args.f64_or("budget", 0.5)?;
-    let iters = args.usize_or("iters", 1000)?;
-    let seed = args.usize_or("seed", 0)? as u64;
     let threads = args.usize_or("threads", 1)?;
-    let strategy = args.str_or("strategy", "matcha");
-    let d = decompose(&g);
-    let (alpha, mut sampler) = build_strategy(strategy, &g, &d, cb, seed)?;
-    let run = run_config_from(args, alpha, iters, seed)?;
-    let mut policy = parse_policy(args.str_or("policy", "analytic"), &g, &run)?;
-    let policy_name = policy.name();
+    let backend = if threads <= 1 {
+        Backend::EngineSequential
+    } else {
+        Backend::EngineActors { threads }
+    };
+    let spec = spec_from_args(args, backend)?;
+    let plan = experiment::plan(&spec)?;
     // `threads` is a mode switch, not a pool size: actor mode runs one
     // thread per worker (sequential fallback beyond the worker cap).
     // Surface the real count so nobody is surprised.
     if threads > 1 {
-        if g.num_nodes() > crate::engine::MAX_ACTOR_WORKERS {
+        let nodes = plan.graph.num_nodes();
+        if nodes > crate::engine::MAX_ACTOR_WORKERS {
             println!(
                 "note: {} workers exceed the actor cap ({}); running sequentially",
-                g.num_nodes(),
+                nodes,
                 crate::engine::MAX_ACTOR_WORKERS
             );
-        } else if g.num_nodes() != threads {
-            println!(
-                "note: actor mode spawns one thread per worker ({} threads)",
-                g.num_nodes()
-            );
+        } else if nodes != threads {
+            println!("note: actor mode spawns one thread per worker ({nodes} threads)");
         }
     }
-    let engine_cfg = EngineConfig { run, threads };
-
-    let result = match problem_from(args, g.num_nodes(), seed)? {
-        CliProblem::Quad(p) => {
-            run_engine(&p, &d.matchings, &mut sampler, policy.as_mut(), &engine_cfg)
-        }
-        CliProblem::Logreg(p) => {
-            run_engine(&p, &d.matchings, &mut sampler, policy.as_mut(), &engine_cfg)
-        }
-    };
-
-    println!(
-        "engine strategy={strategy} policy={policy_name} threads={threads} iters={iters} CB={cb}: \
-         final loss {:.5}, total virtual time {:.1} units, comm {:.1} units",
-        result.run.metrics.last("loss_vs_iter").unwrap_or(f64::NAN),
-        result.run.total_time,
-        result.run.total_comm_units
+    let result = experiment::run_planned(&spec, &plan, &mut experiment::NoopObserver)?;
+    print_run_summary(
+        &format!(
+            "engine strategy={} policy={} threads={threads} iters={} CB={}",
+            spec.strategy.name(),
+            spec.policy,
+            spec.iterations,
+            spec.strategy.budget().unwrap_or(1.0)
+        ),
+        &result,
     );
     println!(
         "events processed: {}, links dropped by failure injection: {}",
         result.events, result.dropped_links
     );
-    if let Some(out) = args.flags.get("out") {
-        result
-            .run
-            .metrics
-            .save_json(std::path::Path::new(out))
-            .map_err(|e| e.to_string())?;
-        println!("wrote {out}");
+    save_metrics(args, &result.metrics)
+}
+
+/// Streams one JSON line per finished sweep point (completion order).
+struct SweepJsonLines<'a> {
+    budgets: &'a [f64],
+}
+
+impl Observer for SweepJsonLines<'_> {
+    fn on_point(&mut self, index: usize, result: &ExperimentResult) {
+        let mut line = result.summary_json();
+        if let Json::Obj(map) = &mut line {
+            map.insert("point".to_string(), Json::Num(index as f64));
+            map.insert("cb".to_string(), Json::Num(self.budgets[index]));
+        }
+        println!("{line}");
     }
-    Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
-    let g = graph_arg(args)?;
-    let iters = args.usize_or("iters", 1000)?;
-    let seed = args.usize_or("seed", 0)? as u64;
     let threads = if args.bool("serial") {
         1
     } else {
-        args.usize_or("threads", available_threads())?
+        args.usize_or("threads", crate::engine::available_threads())?
     };
-    let strategy = args.str_or("strategy", "matcha").to_string();
     let budgets: Vec<f64> = args
         .str_or("budgets", "0.1,0.25,0.5,0.75,1.0")
         .split(',')
@@ -421,24 +427,13 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if budgets.is_empty() {
         return Err("--budgets: need at least one value".into());
     }
-    let d = decompose(&g);
-    let problem = problem_from(args, g.num_nodes(), seed)?;
+    // Each grid point runs on the sequential engine; parallelism comes
+    // from fanning points across threads.
+    let base = spec_from_args(args, Backend::EngineSequential)?;
 
     let wall = std::time::Instant::now();
-    let results = sweep_parallel(&budgets, threads, |_i, &cb| {
-        let (alpha, mut sampler) = build_strategy(&strategy, &g, &d, cb, seed)?;
-        let run = run_config_from(args, alpha, iters, seed)?;
-        let engine_cfg = EngineConfig { run, threads: 1 };
-        let r = match &problem {
-            CliProblem::Quad(p) => {
-                crate::engine::run_engine_analytic(p, &d.matchings, &mut sampler, &engine_cfg)
-            }
-            CliProblem::Logreg(p) => {
-                crate::engine::run_engine_analytic(p, &d.matchings, &mut sampler, &engine_cfg)
-            }
-        };
-        Ok::<_, String>((cb, r))
-    });
+    let mut streamer = SweepJsonLines { budgets: &budgets };
+    let results = experiment::run_sweep(&base, &budgets, threads, &mut streamer)?;
     let elapsed = wall.elapsed().as_secs_f64();
 
     let mut table = crate::benchkit::Table::new(&[
@@ -448,33 +443,27 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         "comm units",
     ]);
     let mut merged = crate::metrics::Recorder::new();
-    for res in results {
-        let (cb, r) = res?;
+    for (cb, r) in &results {
         table.row(&[
             format!("{cb}"),
-            format!("{:.5}", r.run.metrics.last("loss_vs_iter").unwrap_or(f64::NAN)),
-            format!("{:.1}", r.run.total_time),
-            format!("{:.1}", r.run.total_comm_units),
+            format!("{:.5}", r.final_loss()),
+            format!("{:.1}", r.total_time),
+            format!("{:.1}", r.total_comm_units),
         ]);
-        merged.merge(&format!("cb={cb}"), &r.run.metrics);
+        merged.merge(&format!("cb={cb}"), &r.metrics);
     }
     table.print();
     println!(
-        "sweep: {} points × {iters} iters on {threads} thread(s) in {elapsed:.2}s wallclock",
-        budgets.len()
+        "sweep: {} points × {} iters on {threads} thread(s) in {elapsed:.2}s wallclock",
+        budgets.len(),
+        base.iterations
     );
-    if let Some(out) = args.flags.get("out") {
-        merged
-            .save_json(std::path::Path::new(out))
-            .map_err(|e| e.to_string())?;
-        println!("wrote {out}");
-    }
-    Ok(())
+    save_metrics(args, &merged)
 }
 
 #[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<(), String> {
-    use crate::coordinator::{plan_periodic, plan_vanilla, Trainer, TrainerConfig};
+    use crate::coordinator::{plan_matcha, plan_periodic, plan_vanilla, Trainer, TrainerConfig};
     let g = graph_arg(args)?;
     let cb = args.f64_or("budget", 0.5)?;
     let steps = args.usize_or("steps", 200)?;
@@ -581,6 +570,24 @@ mod tests {
     }
 
     #[test]
+    fn args_reject_duplicate_flags() {
+        let r = Args::parse(&sv(&["--graph", "ring:5", "--graph", "ring:6"]));
+        assert!(r.is_err());
+        assert!(r.unwrap_err().contains("duplicate flag --graph"));
+        // Boolean/value mixtures are duplicates too.
+        let r = Args::parse(&sv(&["--pallas", "--pallas"]));
+        assert!(r.unwrap_err().contains("duplicate flag --pallas"));
+        let r = Args::parse(&sv(&["--seed", "1", "--seed"]));
+        assert!(r.unwrap_err().contains("duplicate flag --seed"));
+    }
+
+    #[test]
+    fn duplicate_flags_surface_through_run_dispatch() {
+        let r = run(&sv(&["sim", "--iters", "5", "--iters", "9"]));
+        assert!(r.unwrap_err().contains("duplicate flag --iters"));
+    }
+
+    #[test]
     fn run_dispatches_fast_commands() {
         run(&sv(&["decompose", "--graph", "ring:6"])).unwrap();
         run(&sv(&["commtime", "--graph", "fig1", "--budget", "0.5"])).unwrap();
@@ -600,6 +607,24 @@ mod tests {
             "ring:6",
             "--strategy",
             "matcha",
+            "--budget",
+            "0.5",
+            "--iters",
+            "50",
+            "--problem",
+            "quad",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn sim_single_matching_strategy_smoke() {
+        run(&sv(&[
+            "sim",
+            "--graph",
+            "ring:6",
+            "--strategy",
+            "single",
             "--budget",
             "0.5",
             "--iters",
@@ -655,6 +680,12 @@ mod tests {
     }
 
     #[test]
+    fn sim_rejects_engine_policy() {
+        let r = run(&sv(&["sim", "--graph", "ring:4", "--iters", "5", "--policy", "flaky:0.2"]));
+        assert!(r.unwrap_err().contains("policy"));
+    }
+
+    #[test]
     fn sweep_smoke() {
         run(&sv(&[
             "sweep",
@@ -675,6 +706,29 @@ mod tests {
     #[test]
     fn sweep_rejects_bad_budget_list() {
         assert!(run(&sv(&["sweep", "--graph", "ring:4", "--budgets", "0.3,oops"])).is_err());
+    }
+
+    #[test]
+    fn run_command_executes_and_dry_runs_spec_files() {
+        let spec = ExperimentSpec::new("ring:6")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::EngineSequential)
+            .iterations(30)
+            .record_every(10);
+        let dir = std::env::temp_dir().join("matcha_cli_run");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.json");
+        spec.save(&path).unwrap();
+        let p = path.to_str().unwrap();
+        run(&sv(&["run", "--spec", p, "--dry-run"])).unwrap();
+        run(&sv(&["run", "--spec", p])).unwrap();
+    }
+
+    #[test]
+    fn run_command_requires_spec_and_rejects_missing_file() {
+        assert!(run(&sv(&["run"])).unwrap_err().contains("--spec"));
+        let r = run(&sv(&["run", "--spec", "/nonexistent/spec.json"]));
+        assert!(r.is_err());
     }
 
     #[cfg(not(feature = "xla"))]

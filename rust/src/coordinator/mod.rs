@@ -2,7 +2,7 @@
 //! and the strategy *planners* shared with the pure-Rust paths.
 //!
 //! Planning (decompose → probabilities → α → apriori schedule) is pure
-//! Rust and always available; the [`Trainer`] that executes AOT-compiled
+//! Rust and always available; the `Trainer` that executes AOT-compiled
 //! XLA artifacts lives behind the `xla` feature because the offline image
 //! cannot build the `xla`/`anyhow` crates (see `Cargo.toml`).
 
@@ -69,9 +69,12 @@ pub struct TrainReport {
     pub wallclock_secs: f64,
 }
 
-/// Convenience: build the full MATCHA pipeline (decompose → probabilities
-/// → α → schedule) for a base graph and budget, returning everything a
-/// run needs. This is the library's "one call" entry point.
+/// **Legacy path.** The planning math now lives in
+/// [`crate::experiment::Plan`]; this struct and the `plan_*` helpers
+/// below are thin wrappers kept for the XLA `Trainer` path and older
+/// harnesses. New code should build an
+/// [`crate::experiment::ExperimentSpec`] and call
+/// [`crate::experiment::plan()`].
 pub struct MatchaPlan {
     pub decomposition: MatchingDecomposition,
     pub probabilities: Vec<f64>,
@@ -81,69 +84,43 @@ pub struct MatchaPlan {
     pub schedule: Schedule,
 }
 
-/// Assemble a MATCHA plan: matching decomposition, optimized activation
+fn plan_with(base: &Graph, strategy: crate::experiment::Strategy, steps: usize, seed: u64) -> MatchaPlan {
+    // Infallible signature kept for legacy callers; invalid inputs (bad
+    // budget, disconnected graph) panicked here historically too, via the
+    // optimizer's own asserts.
+    let plan = crate::experiment::Plan::for_graph(base.clone(), strategy)
+        .unwrap_or_else(|e| panic!("legacy plan_* helper: {e}"));
+    let schedule = plan.schedule(steps, seed);
+    MatchaPlan {
+        decomposition: plan.decomposition,
+        probabilities: plan.probabilities,
+        lambda2: plan.lambda2,
+        alpha: plan.alpha,
+        rho: plan.rho,
+        schedule,
+    }
+}
+
+/// **Legacy.** MATCHA plan: decomposition, optimized activation
 /// probabilities at budget `cb`, optimized mixing weight, and a
-/// pregenerated `steps`-round schedule.
+/// pregenerated `steps`-round schedule. Delegates to
+/// [`crate::experiment::Plan::for_graph`].
 pub fn plan_matcha(base: &Graph, cb: f64, steps: usize, seed: u64) -> MatchaPlan {
-    use crate::budget::optimize_activation_probabilities;
-    use crate::mixing::optimize_alpha;
-    use crate::topology::MatchaSampler;
-
-    let decomposition = crate::matching::decompose(base);
-    let probs = optimize_activation_probabilities(&decomposition, cb);
-    let mix = optimize_alpha(&decomposition, &probs.probabilities);
-    let mut sampler = MatchaSampler::new(probs.probabilities.clone(), seed);
-    let schedule = Schedule::generate(&mut sampler, mix.alpha, decomposition.len(), steps);
-    MatchaPlan {
-        decomposition,
-        probabilities: probs.probabilities,
-        lambda2: probs.lambda2,
-        alpha: mix.alpha,
-        rho: mix.rho,
-        schedule,
-    }
+    plan_with(base, crate::experiment::Strategy::Matcha { budget: cb }, steps, seed)
 }
 
-/// Assemble the vanilla-DecenSGD plan on the same graph (all matchings
-/// every round, closed-form optimal α).
+/// **Legacy.** Vanilla-DecenSGD plan (all matchings every round,
+/// closed-form optimal α). Delegates to
+/// [`crate::experiment::Plan::for_graph`].
 pub fn plan_vanilla(base: &Graph, steps: usize) -> MatchaPlan {
-    use crate::mixing::vanilla_design;
-    use crate::topology::VanillaSampler;
-
-    let decomposition = crate::matching::decompose(base);
-    let design = vanilla_design(&base.laplacian());
-    let mut sampler = VanillaSampler::new(decomposition.len());
-    let schedule = Schedule::generate(&mut sampler, design.alpha, decomposition.len(), steps);
-    let m = decomposition.len();
-    MatchaPlan {
-        decomposition,
-        probabilities: vec![1.0; m],
-        lambda2: crate::graph::algebraic_connectivity(base),
-        alpha: design.alpha,
-        rho: design.rho,
-        schedule,
-    }
+    plan_with(base, crate::experiment::Strategy::Vanilla, steps, 0)
 }
 
-/// Assemble the P-DecenSGD plan at budget `cb` (full graph every ⌈1/cb⌉
-/// rounds, α optimized for the correlated activation model).
+/// **Legacy.** P-DecenSGD plan at budget `cb` (full graph every ⌈1/cb⌉
+/// rounds, α optimized for the correlated activation model). Delegates to
+/// [`crate::experiment::Plan::for_graph`].
 pub fn plan_periodic(base: &Graph, cb: f64, steps: usize) -> MatchaPlan {
-    use crate::mixing::optimize_alpha_periodic;
-    use crate::topology::PeriodicSampler;
-
-    let decomposition = crate::matching::decompose(base);
-    let design = optimize_alpha_periodic(&base.laplacian(), cb);
-    let mut sampler = PeriodicSampler::from_budget(decomposition.len(), cb);
-    let schedule = Schedule::generate(&mut sampler, design.alpha, decomposition.len(), steps);
-    let m = decomposition.len();
-    MatchaPlan {
-        decomposition,
-        probabilities: vec![cb; m],
-        lambda2: cb * crate::graph::algebraic_connectivity(base),
-        alpha: design.alpha,
-        rho: design.rho,
-        schedule,
-    }
+    plan_with(base, crate::experiment::Strategy::Periodic { budget: cb }, steps, 0)
 }
 
 #[cfg(test)]

@@ -56,5 +56,8 @@ pub use policy::{
     parse_policy, AnalyticPolicy, DelayPolicy, FlakyLinkPolicy, HeterogeneousPolicy,
     StragglerPolicy,
 };
-pub use runner::{run_engine, run_engine_analytic, EngineConfig, EngineResult, MAX_ACTOR_WORKERS};
-pub use sweep::{available_threads, sweep_parallel, sweep_serial};
+pub use runner::{
+    run_engine, run_engine_analytic, run_engine_observed, EngineConfig, EngineResult,
+    MAX_ACTOR_WORKERS,
+};
+pub use sweep::{available_threads, sweep_parallel, sweep_parallel_streaming, sweep_serial};

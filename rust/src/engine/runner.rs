@@ -13,7 +13,7 @@
 //!    slowest link. Failure injection marks links dead: they charge their
 //!    timeout but drop out of the mix.
 //!
-//! State updates go through an [`Executor`]: in-process (sequential
+//! State updates go through an `Executor`: in-process (sequential
 //! deterministic mode) or the actor pool of [`super::actor`] (one
 //! `std::thread` per worker). Both produce bit-for-bit identical
 //! trajectories, and under [`AnalyticPolicy`] they reproduce
@@ -23,6 +23,7 @@ use super::actor::{worker_loop, Cmd, GossipMsg, Reply};
 use super::event::{EventKind, EventQueue};
 use super::policy::{AnalyticPolicy, DelayPolicy};
 use crate::delay::VirtualClock;
+use crate::experiment::{NoopObserver, Observer};
 use crate::graph::Graph;
 use crate::metrics::Recorder;
 use crate::sim::kernel::{
@@ -187,6 +188,25 @@ where
     P: Problem + Sync,
     S: TopologySampler,
 {
+    run_engine_observed(problem, matchings, sampler, policy, config, &mut NoopObserver)
+}
+
+/// [`run_engine`] with streaming observation: `observer` receives a
+/// callback (on the driving thread, even in actor mode) after every
+/// iteration and at every metrics record. The trajectory is identical to
+/// the unobserved run.
+pub fn run_engine_observed<P, S>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &EngineConfig,
+    observer: &mut dyn Observer,
+) -> EngineResult
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
     let m = problem.num_workers();
     let d = problem.dim();
     if config.threads <= 1 || m > MAX_ACTOR_WORKERS {
@@ -198,7 +218,7 @@ where
             compression: config.run.compression.clone(),
             seed: config.run.seed,
         };
-        return drive(problem, matchings, sampler, policy, &config.run, exec);
+        return drive(problem, matchings, sampler, policy, &config.run, exec, observer);
     }
 
     let xs0 = init_iterates(config.run.seed, m, d);
@@ -218,7 +238,7 @@ where
         }
         drop(reply_tx);
         let exec = ActorExec { cmd_txs: &cmd_txs, reply_rx: &reply_rx };
-        let result = drive(problem, matchings, sampler, policy, &config.run, exec);
+        let result = drive(problem, matchings, sampler, policy, &config.run, exec, observer);
         for tx in &cmd_txs {
             let _ = tx.send(Cmd::Stop);
         }
@@ -250,6 +270,7 @@ fn drive<P, S, E>(
     policy: &mut dyn DelayPolicy,
     config: &RunConfig,
     mut exec: E,
+    observer: &mut dyn Observer,
 ) -> EngineResult
 where
     P: Problem + ?Sized,
@@ -267,6 +288,7 @@ where
     let mut lr = config.lr;
 
     record_metrics(problem, 0, 0.0, 0.0, &xs, &mut metrics);
+    observer.on_record(0, 0.0, &metrics);
 
     for k in 0..config.iterations {
         let t0 = clock.elapsed();
@@ -336,7 +358,9 @@ where
         }
         if (k + 1) % config.record_every == 0 || k + 1 == config.iterations {
             record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics);
+            observer.on_record(k + 1, now, &metrics);
         }
+        observer.on_iteration(k + 1, now, total_comm);
     }
 
     EngineResult {

@@ -35,13 +35,41 @@ where
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
+    sweep_parallel_streaming(points, threads, f, |_, _| {})
+}
+
+/// [`sweep_parallel`] with per-point streaming: `on_done(index, &result)`
+/// runs on the **calling thread** as each grid point finishes, in
+/// completion order — long points no longer hide the short ones until the
+/// final join. The returned vector is still in input order, so this is a
+/// drop-in replacement wherever ordering mattered.
+pub fn sweep_parallel_streaming<T, R, F, C>(
+    points: &[T],
+    threads: usize,
+    f: F,
+    mut on_done: C,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+    C: FnMut(usize, &R),
+{
     let n = points.len();
-    let threads = threads.clamp(1, n.max(1));
     if n == 0 {
         return Vec::new();
     }
+    let threads = threads.clamp(1, n);
     if threads == 1 {
-        return sweep_serial(points, f);
+        return points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let r = f(i, p);
+                on_done(i, &r);
+                r
+            })
+            .collect();
     }
 
     let cursor = AtomicUsize::new(0);
@@ -49,25 +77,26 @@ where
     std::thread::scope(|scope| {
         let cursor = &cursor;
         let f = &f;
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                scope.spawn(move || {
-                    let mut local: Vec<(usize, R)> = Vec::new();
-                    loop {
-                        let i = cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        local.push((i, f(i, &points[i])));
-                    }
-                    local
-                })
-            })
-            .collect();
-        for h in handles {
-            for (i, r) in h.join().expect("sweep worker panicked") {
-                slots[i] = Some(r);
-            }
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, R)>();
+        for _ in 0..threads {
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, f(i, &points[i]))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        // The receiver lives on the calling thread: results stream in as
+        // workers finish them, and the channel closes once every worker
+        // has exited.
+        for (i, r) in rx {
+            on_done(i, &r);
+            slots[i] = Some(r);
         }
     });
     slots
@@ -142,5 +171,25 @@ mod tests {
     #[test]
     fn available_threads_positive() {
         assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn streaming_callback_sees_every_point_exactly_once() {
+        let points: Vec<usize> = (0..31).collect();
+        for threads in [1, 4] {
+            let mut seen: Vec<usize> = Vec::new();
+            let results = sweep_parallel_streaming(
+                &points,
+                threads,
+                |_i, &p| p * 2,
+                |i, &r| {
+                    assert_eq!(r, points[i] * 2);
+                    seen.push(i);
+                },
+            );
+            assert_eq!(results, points.iter().map(|p| p * 2).collect::<Vec<_>>());
+            seen.sort_unstable();
+            assert_eq!(seen, points, "threads={threads}");
+        }
     }
 }

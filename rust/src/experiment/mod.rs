@@ -1,0 +1,56 @@
+//! The unified experiment API: **spec → plan → run → observe**.
+//!
+//! This layer is the crate's front door. MATCHA's contribution is a
+//! *pipeline* — decompose the base topology into matchings, optimize the
+//! activation probabilities under a communication budget, optimize the
+//! mixing weight, then run DecenSGD (paper §3, steps 1–3) — and this
+//! module exposes that pipeline as four composable stages instead of the
+//! per-call-site wiring the CLI, benches and examples used to carry:
+//!
+//! - **Spec** ([`ExperimentSpec`]) — a typed, validated, serializable
+//!   description of a full run: graph source, strategy
+//!   (`matcha | vanilla | periodic | single`) and budget, workload
+//!   (`quad | logreg`), delay model and policy (stragglers, heterogeneous
+//!   links, link failures), execution backend (`sim | engine | actors`),
+//!   and run hyperparameters. Build fluently or load from JSON
+//!   (`matcha run --spec exp.json`).
+//! - **Plan** ([`Plan`], [`plan()`]) — the decompose → probabilities → α
+//!   math, exposing matchings, λ₂, α and ρ before anything executes
+//!   (`--dry-run` stops here). Absorbs the legacy `coordinator::plan_*`
+//!   helpers.
+//! - **Run** ([`run()`], [`run_observed`], [`run_sweep`]) — one entry point
+//!   for every backend, returning one [`ExperimentResult`] (superseding
+//!   the `RunResult` / `EngineResult` split). Spec-driven runs reproduce
+//!   the legacy entry points bit-for-bit per seed.
+//! - **Observe** ([`Observer`]) — streaming callbacks per iteration, per
+//!   metrics record, and per finished sweep grid point.
+//!
+//! ```
+//! use matcha::experiment::{self, Backend, ExperimentSpec, ProblemSpec, Strategy};
+//!
+//! let spec = ExperimentSpec::new("fig1")
+//!     .strategy(Strategy::Matcha { budget: 0.5 })
+//!     .problem(ProblemSpec::quadratic())
+//!     .backend(Backend::EngineSequential)
+//!     .lr(0.03)
+//!     .iterations(50)
+//!     .validated()
+//!     .unwrap();
+//!
+//! let plan = experiment::plan(&spec).unwrap();
+//! assert!(plan.rho < 1.0); // Theorem 2: convergence guaranteed
+//!
+//! let result = experiment::run(&spec).unwrap();
+//! assert!(result.total_time > 0.0);
+//! assert!(result.final_loss().is_finite());
+//! ```
+
+mod observer;
+mod plan;
+mod run;
+mod spec;
+
+pub use observer::{NoopObserver, Observer};
+pub use plan::{plan, Plan};
+pub use run::{run, run_observed, run_planned, run_sweep, ExperimentResult};
+pub use spec::{Backend, ExperimentSpec, GraphSource, ProblemSpec, Strategy};

@@ -1,0 +1,48 @@
+//! Streaming observation of running experiments.
+//!
+//! An [`Observer`] receives callbacks while an experiment executes —
+//! after every iteration, at every metrics record, and (from the sweep
+//! driver) as each grid point finishes — instead of waiting for the final
+//! result object. All callbacks default to no-ops, so implementors
+//! override only what they consume. The sim and engine loops invoke the
+//! same callbacks at the same points, so an observer is
+//! backend-agnostic.
+
+use crate::metrics::Recorder;
+
+use super::run::ExperimentResult;
+
+/// Callbacks fired while a run (or sweep) is in flight. Iteration and
+/// record callbacks arrive on the thread driving the run; sweep point
+/// callbacks arrive on the thread that called the sweep, in completion
+/// order (not input order).
+pub trait Observer {
+    /// After iteration `k` (1-based) completes: current virtual time and
+    /// cumulative communication units.
+    fn on_iteration(&mut self, _k: usize, _time: f64, _comm_units: f64) {}
+
+    /// After a metrics row is recorded at iteration `k` (including the
+    /// initial `k = 0` record). `metrics` is the recorder so far.
+    fn on_record(&mut self, _k: usize, _time: f64, _metrics: &Recorder) {}
+
+    /// A sweep grid point finished: `index` is its position in the input
+    /// grid.
+    fn on_point(&mut self, _index: usize, _result: &ExperimentResult) {}
+}
+
+/// The do-nothing observer; what the non-observed entry points use.
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_methods_are_noops() {
+        let mut obs = NoopObserver;
+        obs.on_iteration(1, 2.0, 3.0);
+        obs.on_record(1, 2.0, &Recorder::new());
+    }
+}

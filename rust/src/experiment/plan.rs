@@ -1,0 +1,231 @@
+//! The plan stage: spec → derived mathematical artifacts, before any run.
+//!
+//! Planning owns the paper's three-step pipeline (decompose the base
+//! graph into matchings, optimize the activation probabilities under the
+//! communication budget, optimize the mixing weight α) and exposes every
+//! derived quantity — matchings, probabilities, λ₂, α, ρ — so callers can
+//! inspect an experiment's convergence characteristics without running
+//! it. This is the layer that absorbed the `coordinator::plan_*` helpers;
+//! those remain as thin legacy wrappers.
+
+use super::spec::{ExperimentSpec, Strategy};
+use crate::budget::{expected_laplacian, optimize_activation_probabilities};
+use crate::delay::DelayModel;
+use crate::graph::{algebraic_connectivity, lambda2_of, Graph};
+use crate::matching::{decompose, MatchingDecomposition};
+use crate::mixing::{
+    optimize_alpha, optimize_alpha_from_laplacians, optimize_alpha_periodic, vanilla_design,
+};
+use crate::sim::RunConfig;
+use crate::topology::{
+    MatchaSampler, PeriodicSampler, Schedule, SingleMatchingSampler, TopologySampler,
+    VanillaSampler,
+};
+
+/// Everything derived from a spec before execution: the resolved graph,
+/// its matching decomposition, per-matching activation probabilities (or
+/// draw weights for the single-matching strategy), λ₂ of the expected
+/// topology, the mixing weight α and the spectral norm ρ (Theorem 2:
+/// ρ < 1 guarantees convergence).
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub graph: Graph,
+    pub decomposition: MatchingDecomposition,
+    /// Per-matching activation probabilities. For
+    /// [`Strategy::SingleMatching`] these are the normalized draw weights
+    /// (Σ = 1); for [`Strategy::Vanilla`] all ones; for
+    /// [`Strategy::Periodic`] the budget replicated.
+    pub probabilities: Vec<f64>,
+    /// λ₂ of the expected activated Laplacian.
+    pub lambda2: f64,
+    /// Optimized mixing weight α.
+    pub alpha: f64,
+    /// Spectral norm ρ of `E[WᵀW] − J` at α.
+    pub rho: f64,
+    /// The strategy this plan was derived for (drives sampler choice).
+    pub strategy: Strategy,
+}
+
+/// Derive the full plan for a spec (validates the spec first). The cheap
+/// half of [`crate::experiment::run()`] — `matcha run --spec f --dry-run`
+/// stops here.
+pub fn plan(spec: &ExperimentSpec) -> Result<Plan, String> {
+    let graph = spec.validate_resolving()?;
+    Plan::for_graph(graph, spec.strategy)
+}
+
+impl Plan {
+    /// Plan a strategy directly on a graph object (the spec-free entry
+    /// point used by harnesses that generate graphs programmatically).
+    pub fn for_graph(graph: Graph, strategy: Strategy) -> Result<Plan, String> {
+        if graph.num_nodes() < 2 || graph.num_edges() == 0 {
+            return Err("graph: need at least 2 nodes and 1 edge".into());
+        }
+        if !graph.is_connected() {
+            return Err("graph: base topology must be connected".into());
+        }
+        if let Some(cb) = strategy.budget() {
+            if !cb.is_finite() || cb <= 0.0 || cb > 1.0 {
+                return Err(format!("strategy: budget {cb} out of (0, 1]"));
+            }
+        }
+        let decomposition = decompose(&graph);
+        let m = decomposition.len();
+        let (probabilities, lambda2, design) = match strategy {
+            Strategy::Matcha { budget } => {
+                let probs = optimize_activation_probabilities(&decomposition, budget);
+                let mix = optimize_alpha(&decomposition, &probs.probabilities);
+                (probs.probabilities, probs.lambda2, mix)
+            }
+            Strategy::Vanilla => {
+                let design = vanilla_design(&graph.laplacian());
+                (vec![1.0; m], algebraic_connectivity(&graph), design)
+            }
+            Strategy::Periodic { budget } => {
+                let design = optimize_alpha_periodic(&graph.laplacian(), budget);
+                (vec![budget; m], budget * algebraic_connectivity(&graph), design)
+            }
+            Strategy::SingleMatching { budget } => {
+                // Draw weights ∝ the optimized Bernoulli probabilities.
+                let probs = optimize_activation_probabilities(&decomposition, budget);
+                let total: f64 = probs.probabilities.iter().sum();
+                let q: Vec<f64> = probs.probabilities.iter().map(|p| p / total).collect();
+                let laps = decomposition.laplacians();
+                let lbar = expected_laplacian(&laps, &q);
+                // Single-matching law: E[L²] = Σ qⱼ Lⱼ² = 2L̄ (matching
+                // Laplacians satisfy Lⱼ² = 2Lⱼ), and the generic
+                // optimizer expects E[L²] = L̄² + 2L̃ — so L̃ = L̄ − L̄²/2.
+                let mut ltilde = lbar.clone();
+                let lbar2 = lbar.matmul(&lbar);
+                ltilde.axpy(-0.5, &lbar2);
+                let design = optimize_alpha_from_laplacians(&lbar, &ltilde);
+                (q, lambda2_of(&lbar), design)
+            }
+        };
+        Ok(Plan {
+            graph,
+            decomposition,
+            probabilities,
+            lambda2,
+            alpha: design.alpha,
+            rho: design.rho,
+            strategy,
+        })
+    }
+
+    /// Expected communication units per iteration, Σ over matchings of
+    /// the long-run activation frequency.
+    pub fn expected_comm_units(&self) -> f64 {
+        match self.strategy {
+            Strategy::SingleMatching { .. } => 1.0,
+            _ => self.probabilities.iter().sum(),
+        }
+    }
+
+    /// The activation sampler realizing this plan's strategy.
+    pub fn sampler(&self, seed: u64) -> Box<dyn TopologySampler> {
+        match self.strategy {
+            Strategy::Matcha { .. } => {
+                Box::new(MatchaSampler::new(self.probabilities.clone(), seed))
+            }
+            Strategy::Vanilla => Box::new(VanillaSampler::new(self.decomposition.len())),
+            Strategy::Periodic { budget } => {
+                Box::new(PeriodicSampler::from_budget(self.decomposition.len(), budget))
+            }
+            Strategy::SingleMatching { .. } => {
+                Box::new(SingleMatchingSampler::new(self.probabilities.clone(), seed))
+            }
+        }
+    }
+
+    /// Pregenerate an apriori activation schedule (paper §1: zero runtime
+    /// scheduling overhead).
+    pub fn schedule(&self, steps: usize, seed: u64) -> Schedule {
+        let mut sampler = self.sampler(seed);
+        Schedule::generate(&mut sampler, self.alpha, self.decomposition.len(), steps)
+    }
+
+    /// Assemble the runner configuration for this plan from a spec's
+    /// hyperparameters (the spec-driven replacement for hand-built
+    /// `RunConfig` literals, which are now a legacy path).
+    pub fn run_config(&self, spec: &ExperimentSpec) -> Result<RunConfig, String> {
+        Ok(RunConfig {
+            lr: spec.lr,
+            lr_decay: spec.lr_decay,
+            lr_decay_every: spec.lr_decay_every,
+            iterations: spec.iterations,
+            record_every: spec.record_every.unwrap_or_else(|| (spec.iterations / 50).max(1)),
+            alpha: self.alpha,
+            compute_units: spec.compute_units,
+            delay: DelayModel::parse(&spec.delay).map_err(|e| format!("delay: {e}"))?,
+            compression: spec.compression.clone(),
+            latency_floor: spec.latency_floor,
+            seed: spec.seed,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_figure1_graph;
+
+    #[test]
+    fn plan_matches_legacy_pipeline_for_matcha() {
+        let g = paper_figure1_graph();
+        let plan = Plan::for_graph(g.clone(), Strategy::Matcha { budget: 0.5 }).unwrap();
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.5);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        assert_eq!(plan.probabilities, probs.probabilities);
+        assert_eq!(plan.lambda2, probs.lambda2);
+        assert_eq!(plan.alpha, mix.alpha);
+        assert_eq!(plan.rho, mix.rho);
+    }
+
+    #[test]
+    fn all_strategies_plan_with_rho_below_one() {
+        let g = paper_figure1_graph();
+        for strategy in [
+            Strategy::Matcha { budget: 0.4 },
+            Strategy::Vanilla,
+            Strategy::Periodic { budget: 0.4 },
+            Strategy::SingleMatching { budget: 0.4 },
+        ] {
+            let plan = Plan::for_graph(g.clone(), strategy).unwrap();
+            assert!(plan.rho < 1.0, "{}: rho {}", strategy.name(), plan.rho);
+            assert!(plan.alpha > 0.0 && plan.alpha.is_finite(), "{}", strategy.name());
+            assert!(plan.lambda2 > 0.0, "{}", strategy.name());
+        }
+    }
+
+    #[test]
+    fn single_matching_weights_normalize() {
+        let g = paper_figure1_graph();
+        let plan = Plan::for_graph(g, Strategy::SingleMatching { budget: 0.3 }).unwrap();
+        let total: f64 = plan.probabilities.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "Σq = {total}");
+        assert_eq!(plan.expected_comm_units(), 1.0);
+    }
+
+    #[test]
+    fn plan_rejects_bad_inputs() {
+        let g = paper_figure1_graph();
+        assert!(Plan::for_graph(g.clone(), Strategy::Matcha { budget: 0.0 }).is_err());
+        assert!(Plan::for_graph(g, Strategy::Matcha { budget: 2.0 }).is_err());
+        let disconnected = Graph::new(4, &[(0, 1), (2, 3)]);
+        assert!(Plan::for_graph(disconnected, Strategy::Vanilla).is_err());
+    }
+
+    #[test]
+    fn schedule_generation_matches_sampler_stream() {
+        let g = paper_figure1_graph();
+        let plan = Plan::for_graph(g, Strategy::Matcha { budget: 0.5 }).unwrap();
+        let sched = plan.schedule(100, 3);
+        assert_eq!(sched.rounds.len(), 100);
+        let mut sampler = plan.sampler(3);
+        for (k, round) in sched.rounds.iter().enumerate() {
+            assert_eq!(round.activated, sampler.round(k).activated, "round {k}");
+        }
+    }
+}

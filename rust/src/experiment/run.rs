@@ -1,0 +1,330 @@
+//! Unified execution: one `run()` for every backend, one result type.
+//!
+//! [`run()`] takes a validated [`ExperimentSpec`], derives the [`Plan`],
+//! builds the workload and sampler with the same seed derivations the
+//! legacy entry points used (so spec-driven runs reproduce
+//! [`crate::sim::run_decentralized`] and the engine's analytic mode
+//! **bit-for-bit** per seed — enforced by `rust/tests/experiment.rs`),
+//! and dispatches on the backend. [`ExperimentResult`] supersedes the
+//! `RunResult`/`EngineResult` split: engine-only counters are zero on the
+//! sim backend.
+
+use super::observer::{NoopObserver, Observer};
+use super::plan::{plan, Plan};
+use super::spec::{Backend, ExperimentSpec, ProblemSpec};
+use crate::engine::{parse_policy, run_engine_observed, sweep_parallel_streaming, EngineConfig};
+use crate::json::Json;
+use crate::metrics::Recorder;
+use crate::rng::Rng;
+use crate::sim::{
+    run_decentralized_observed, LogisticProblem, LogisticSpec, QuadraticProblem, RunResult,
+};
+
+/// The unified outcome of a spec-driven run: plan-derived quantities,
+/// the metric series, and summary statistics from whichever backend
+/// executed it.
+pub struct ExperimentResult {
+    /// Mixing weight the run used.
+    pub alpha: f64,
+    /// Spectral norm of the activation design (Theorem 2).
+    pub rho: f64,
+    /// λ₂ of the expected activated topology.
+    pub lambda2: f64,
+    /// Number of matchings in the decomposition.
+    pub num_matchings: usize,
+    /// All recorded metric series (`loss_vs_iter`, `loss_vs_time`, ...).
+    pub metrics: Recorder,
+    /// Final averaged iterate x̄.
+    pub final_mean: Vec<f64>,
+    /// Total virtual time elapsed.
+    pub total_time: f64,
+    /// Total communication units spent.
+    pub total_comm_units: f64,
+    /// Links dropped by failure injection (0 on the sim backend).
+    pub dropped_links: usize,
+    /// Discrete events processed (0 on the sim backend).
+    pub events: u64,
+}
+
+impl ExperimentResult {
+    /// Final training loss (NaN if the run recorded nothing).
+    pub fn final_loss(&self) -> f64 {
+        self.metrics.last("loss_vs_iter").unwrap_or(f64::NAN)
+    }
+
+    /// One-line JSON summary (what `matcha sweep` streams per point).
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("final_loss", num_or_null(self.final_loss())),
+            ("total_time", num_or_null(self.total_time)),
+            ("comm_units", num_or_null(self.total_comm_units)),
+            ("alpha", num_or_null(self.alpha)),
+            ("rho", num_or_null(self.rho)),
+            ("dropped_links", Json::Num(self.dropped_links as f64)),
+            ("events", Json::Num(self.events as f64)),
+        ])
+    }
+
+    fn from_sim(plan: &Plan, r: RunResult) -> ExperimentResult {
+        ExperimentResult {
+            alpha: plan.alpha,
+            rho: plan.rho,
+            lambda2: plan.lambda2,
+            num_matchings: plan.decomposition.len(),
+            metrics: r.metrics,
+            final_mean: r.final_mean,
+            total_time: r.total_time,
+            total_comm_units: r.total_comm_units,
+            dropped_links: 0,
+            events: 0,
+        }
+    }
+
+    fn from_engine(plan: &Plan, r: crate::engine::EngineResult) -> ExperimentResult {
+        ExperimentResult {
+            alpha: plan.alpha,
+            rho: plan.rho,
+            lambda2: plan.lambda2,
+            num_matchings: plan.decomposition.len(),
+            metrics: r.run.metrics,
+            final_mean: r.run.final_mean,
+            total_time: r.run.total_time,
+            total_comm_units: r.run.total_comm_units,
+            dropped_links: r.dropped_links,
+            events: r.events,
+        }
+    }
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// The materialized workload. Kept private: callers talk specs.
+enum BuiltProblem {
+    Quad(QuadraticProblem),
+    Logreg(LogisticProblem),
+}
+
+fn build_problem(spec: &ExperimentSpec, num_workers: usize) -> BuiltProblem {
+    match &spec.problem {
+        ProblemSpec::Quadratic { dim, hetero, noise_std, seed } => {
+            // `None` derives the run seed exactly as the legacy CLI did.
+            let mut rng = Rng::new(seed.unwrap_or(spec.seed ^ 0x9a9a));
+            BuiltProblem::Quad(QuadraticProblem::generate(
+                num_workers,
+                *dim,
+                *hetero,
+                *noise_std,
+                &mut rng,
+            ))
+        }
+        ProblemSpec::Logistic { non_iid, separation, seed } => {
+            BuiltProblem::Logreg(LogisticProblem::generate(LogisticSpec {
+                num_workers,
+                non_iid: *non_iid,
+                separation: *separation,
+                seed: seed.unwrap_or(spec.seed ^ 0x10f),
+                ..LogisticSpec::default()
+            }))
+        }
+    }
+}
+
+/// Run the experiment described by `spec`. Equivalent to
+/// [`run_observed`] with a no-op observer.
+pub fn run(spec: &ExperimentSpec) -> Result<ExperimentResult, String> {
+    run_observed(spec, &mut NoopObserver)
+}
+
+/// Run the experiment, streaming progress through `observer`.
+pub fn run_observed(
+    spec: &ExperimentSpec,
+    observer: &mut dyn Observer,
+) -> Result<ExperimentResult, String> {
+    let plan = plan(spec)?;
+    run_planned(spec, &plan, observer)
+}
+
+/// Run with a precomputed plan (lets callers plan once and reuse — the
+/// sweep driver and `--dry-run` both lean on this split).
+pub fn run_planned(
+    spec: &ExperimentSpec,
+    plan: &Plan,
+    observer: &mut dyn Observer,
+) -> Result<ExperimentResult, String> {
+    let cfg = plan.run_config(spec)?;
+    let mut sampler = plan.sampler(spec.sampler_seed.unwrap_or(spec.seed));
+    let problem = build_problem(spec, plan.graph.num_nodes());
+    let matchings = &plan.decomposition.matchings;
+
+    let result = match spec.backend {
+        Backend::SimReference => {
+            let r = match &problem {
+                BuiltProblem::Quad(p) => {
+                    run_decentralized_observed(p, matchings, &mut sampler, &cfg, observer)
+                }
+                BuiltProblem::Logreg(p) => {
+                    run_decentralized_observed(p, matchings, &mut sampler, &cfg, observer)
+                }
+            };
+            ExperimentResult::from_sim(plan, r)
+        }
+        Backend::EngineSequential | Backend::EngineActors { .. } => {
+            let threads = match spec.backend {
+                Backend::EngineActors { threads } => threads,
+                _ => 1,
+            };
+            let mut policy = parse_policy(&spec.policy, &plan.graph, &cfg)
+                .map_err(|e| format!("policy: {e}"))?;
+            let engine_cfg = EngineConfig { run: cfg, threads };
+            let r = match &problem {
+                BuiltProblem::Quad(p) => run_engine_observed(
+                    p,
+                    matchings,
+                    &mut sampler,
+                    policy.as_mut(),
+                    &engine_cfg,
+                    observer,
+                ),
+                BuiltProblem::Logreg(p) => run_engine_observed(
+                    p,
+                    matchings,
+                    &mut sampler,
+                    policy.as_mut(),
+                    &engine_cfg,
+                    observer,
+                ),
+            };
+            ExperimentResult::from_engine(plan, r)
+        }
+    };
+    Ok(result)
+}
+
+/// Sweep the spec's strategy over a budget grid, fanning points across
+/// `threads` OS threads. Each point is an independent spec-driven run;
+/// `observer.on_point` fires on the calling thread **as each point
+/// finishes** (completion order), and the full results come back in
+/// input order.
+pub fn run_sweep(
+    base: &ExperimentSpec,
+    budgets: &[f64],
+    threads: usize,
+    observer: &mut dyn Observer,
+) -> Result<Vec<(f64, ExperimentResult)>, String> {
+    if budgets.is_empty() {
+        return Err("sweep: need at least one budget".into());
+    }
+    // Validate and plan every grid point up front: errors surface before
+    // any thread spawns, and the decompose → probabilities → α work is
+    // not repeated inside the workers.
+    let mut points: Vec<(ExperimentSpec, Plan)> = Vec::with_capacity(budgets.len());
+    for &cb in budgets {
+        let spec = base.clone().with_budget(cb);
+        let point_plan = plan(&spec)?;
+        points.push((spec, point_plan));
+    }
+    let results = sweep_parallel_streaming(
+        &points,
+        threads,
+        |_i, point| run_planned(&point.0, &point.1, &mut NoopObserver),
+        |i, r| {
+            if let Ok(res) = r {
+                observer.on_point(i, res);
+            }
+        },
+    );
+    let mut out = Vec::with_capacity(results.len());
+    for (r, &cb) in results.into_iter().zip(budgets) {
+        out.push((cb, r?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::Strategy;
+
+    fn quick_spec() -> ExperimentSpec {
+        ExperimentSpec::new("ring:6")
+            .problem(ProblemSpec::quadratic())
+            .strategy(Strategy::Matcha { budget: 0.5 })
+            .lr(0.03)
+            .iterations(60)
+            .record_every(20)
+            .seed(9)
+    }
+
+    #[test]
+    fn sim_and_engine_backends_agree_bit_for_bit() {
+        let sim = run(&quick_spec()).unwrap();
+        let engine = run(&quick_spec().backend(Backend::EngineSequential)).unwrap();
+        assert_eq!(sim.final_mean, engine.final_mean);
+        assert_eq!(sim.total_time, engine.total_time);
+        assert_eq!(sim.total_comm_units, engine.total_comm_units);
+        assert_eq!(sim.events, 0);
+        assert!(engine.events > 0);
+    }
+
+    #[test]
+    fn observer_sees_iterations_and_records() {
+        struct Counting {
+            iterations: usize,
+            records: usize,
+            last_time: f64,
+        }
+        impl Observer for Counting {
+            fn on_iteration(&mut self, _k: usize, time: f64, _comm: f64) {
+                self.iterations += 1;
+                assert!(time >= self.last_time);
+                self.last_time = time;
+            }
+            fn on_record(&mut self, _k: usize, _time: f64, metrics: &Recorder) {
+                self.records += 1;
+                assert!(!metrics.get("loss_vs_iter").is_empty());
+            }
+        }
+        let mut obs = Counting { iterations: 0, records: 0, last_time: 0.0 };
+        run_observed(&quick_spec(), &mut obs).unwrap();
+        assert_eq!(obs.iterations, 60);
+        // Initial record + one per record_every stride.
+        assert_eq!(obs.records, 1 + 60 / 20);
+    }
+
+    #[test]
+    fn sweep_streams_every_point() {
+        struct Points(Vec<usize>);
+        impl Observer for Points {
+            fn on_point(&mut self, index: usize, result: &ExperimentResult) {
+                assert!(result.total_time > 0.0);
+                self.0.push(index);
+            }
+        }
+        let base = quick_spec().backend(Backend::EngineSequential);
+        let budgets = [0.3, 0.6, 1.0];
+        let mut obs = Points(Vec::new());
+        let results = run_sweep(&base, &budgets, 2, &mut obs).unwrap();
+        assert_eq!(results.len(), 3);
+        let mut seen = obs.0.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2], "every point must stream exactly once");
+        // Results in input order regardless of completion order.
+        for ((cb, _), expect) in results.iter().zip(&budgets) {
+            assert_eq!(cb, expect);
+        }
+    }
+
+    #[test]
+    fn summary_json_is_parseable() {
+        let res = run(&quick_spec()).unwrap();
+        let j = res.summary_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert!(parsed.get("final_loss").unwrap().as_f64().is_some());
+    }
+}

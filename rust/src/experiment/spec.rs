@@ -1,0 +1,1027 @@
+//! The typed experiment specification: one declarative, serializable
+//! description of a full MATCHA run.
+//!
+//! An [`ExperimentSpec`] names everything a run needs — the base graph,
+//! the activation strategy and its communication budget, the workload,
+//! the delay policy, the execution backend, and the run hyperparameters —
+//! and is the single input to [`crate::experiment::plan()`] and
+//! [`crate::experiment::run()`]. Specs are built fluently in code or loaded
+//! from JSON files (`matcha run --spec exp.json`), with cross-field
+//! validation in both directions and an exact JSON round-trip
+//! (`parse(to_json_string(s)) == s`).
+
+use crate::graph::{parse_graph_spec, Graph};
+use crate::json::Json;
+use crate::sim::Compression;
+use std::collections::BTreeMap;
+
+/// Where the base communication topology comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphSource {
+    /// A generator spec string (`fig1`, `ring:8`, `er:16:8:303`, ...) in
+    /// the [`parse_graph_spec`] grammar.
+    Spec(String),
+    /// An explicit graph (e.g. a measured cluster topology). JSON form:
+    /// `{"nodes": 8, "edges": [[0,1], [1,2], ...]}`.
+    Explicit(Graph),
+}
+
+impl GraphSource {
+    /// Materialize the graph, validating connectivity (the paper requires
+    /// a connected base topology).
+    pub fn resolve(&self) -> Result<Graph, String> {
+        let g = match self {
+            GraphSource::Spec(s) => parse_graph_spec(s).map_err(|e| format!("graph: {e}"))?,
+            GraphSource::Explicit(g) => g.clone(),
+        };
+        if g.num_nodes() < 2 || g.num_edges() == 0 {
+            return Err("graph: need at least 2 nodes and 1 edge".into());
+        }
+        if !g.is_connected() {
+            return Err("graph: base topology must be connected".into());
+        }
+        Ok(g)
+    }
+}
+
+/// The activation strategy: which matchings communicate each iteration
+/// (paper §3 and its comparators).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    /// MATCHA: independent Bernoulli activation with optimized
+    /// probabilities at communication budget `budget ∈ (0, 1]`.
+    Matcha { budget: f64 },
+    /// Vanilla DecenSGD: every matching, every iteration.
+    Vanilla,
+    /// P-DecenSGD: the whole base topology every `⌈1/budget⌉` rounds.
+    Periodic { budget: f64 },
+    /// Exactly one matching per round, drawn ∝ the optimized
+    /// probabilities at `budget` (paper §3 "Extension to Other Design
+    /// Choices").
+    SingleMatching { budget: f64 },
+}
+
+impl Strategy {
+    /// The communication budget, if this strategy has one.
+    pub fn budget(&self) -> Option<f64> {
+        match self {
+            Strategy::Matcha { budget }
+            | Strategy::Periodic { budget }
+            | Strategy::SingleMatching { budget } => Some(*budget),
+            Strategy::Vanilla => None,
+        }
+    }
+
+    /// The same strategy at a different budget (no-op for `Vanilla`).
+    /// This is what the sweep driver maps over a budget grid.
+    pub fn with_budget(self, cb: f64) -> Strategy {
+        match self {
+            Strategy::Matcha { .. } => Strategy::Matcha { budget: cb },
+            Strategy::Periodic { .. } => Strategy::Periodic { budget: cb },
+            Strategy::SingleMatching { .. } => Strategy::SingleMatching { budget: cb },
+            Strategy::Vanilla => Strategy::Vanilla,
+        }
+    }
+
+    /// Short name for logs and JSON (`matcha`, `vanilla`, `periodic`,
+    /// `single`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Matcha { .. } => "matcha",
+            Strategy::Vanilla => "vanilla",
+            Strategy::Periodic { .. } => "periodic",
+            Strategy::SingleMatching { .. } => "single",
+        }
+    }
+}
+
+/// The optimization workload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemSpec {
+    /// Distributed noisy quadratic with a known optimum.
+    Quadratic {
+        /// Parameter dimension.
+        dim: usize,
+        /// How far apart the workers' local optima are (0 = IID).
+        hetero: f64,
+        /// Gradient noise standard deviation.
+        noise_std: f64,
+        /// Generation seed; `None` derives `run.seed ^ 0x9a9a` (the
+        /// historical CLI derivation, kept for parity).
+        seed: Option<u64>,
+    },
+    /// Synthetic logistic regression with train/test splits.
+    Logistic {
+        /// Shard skew: 0 = IID, 1 = strongly non-IID.
+        non_iid: f64,
+        /// Class-mean separation (higher = easier).
+        separation: f64,
+        /// Generation seed; `None` derives `run.seed ^ 0x10f`.
+        seed: Option<u64>,
+    },
+}
+
+impl ProblemSpec {
+    /// The default quadratic workload (dim 20, hetero 1.0, noise 0.2).
+    pub fn quadratic() -> ProblemSpec {
+        ProblemSpec::Quadratic { dim: 20, hetero: 1.0, noise_std: 0.2, seed: None }
+    }
+
+    /// The default logistic-regression workload (IID shards).
+    pub fn logistic() -> ProblemSpec {
+        ProblemSpec::Logistic { non_iid: 0.0, separation: 1.5, seed: None }
+    }
+
+    /// Short name for logs and JSON (`quad`, `logreg`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProblemSpec::Quadratic { .. } => "quad",
+            ProblemSpec::Logistic { .. } => "logreg",
+        }
+    }
+}
+
+/// Which execution path runs the DecenSGD recursion. All backends share
+/// the step/mix kernel (`sim::kernel`) and agree bit-for-bit per seed
+/// under the analytic delay policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Backend {
+    /// The sequential reference simulator with closed-form time
+    /// accounting ([`crate::sim::run_decentralized`]).
+    SimReference,
+    /// The event-driven engine, in-process sequential executor.
+    EngineSequential,
+    /// The event-driven engine's actor pool: one worker per
+    /// `std::thread`. `threads` is a mode switch, not a pool size.
+    EngineActors { threads: usize },
+}
+
+impl Backend {
+    /// Short name for logs and JSON (`sim`, `engine`, `actors`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::SimReference => "sim",
+            Backend::EngineSequential => "engine",
+            Backend::EngineActors { .. } => "actors",
+        }
+    }
+}
+
+/// A complete, declarative description of one experiment. See the module
+/// docs for the JSON schema; every field except `graph` has a default.
+///
+/// Build fluently and finish with [`ExperimentSpec::validated`]:
+///
+/// ```
+/// use matcha::experiment::{Backend, ExperimentSpec, ProblemSpec, Strategy};
+/// let spec = ExperimentSpec::new("ring:6")
+///     .strategy(Strategy::Matcha { budget: 0.5 })
+///     .problem(ProblemSpec::quadratic())
+///     .backend(Backend::EngineSequential)
+///     .iterations(50)
+///     .validated()
+///     .unwrap();
+/// assert_eq!(spec.strategy.name(), "matcha");
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    pub graph: GraphSource,
+    pub strategy: Strategy,
+    pub problem: ProblemSpec,
+    /// Delay model spec in the [`crate::delay::DelayModel::parse`]
+    /// grammar: `unit` | `maxdeg` | `stochastic:lo:hi`.
+    pub delay: String,
+    /// Engine delay-policy spec in the [`crate::engine::parse_policy`]
+    /// grammar: `analytic` | `hetero:SEED` | `straggler:W:F` |
+    /// `flaky:P`. The sim backend supports only `analytic`.
+    pub policy: String,
+    pub backend: Backend,
+    /// Learning rate η.
+    pub lr: f64,
+    /// Step decay: multiply lr by `lr_decay` every `lr_decay_every`
+    /// iterations (`lr_decay = 1.0` disables).
+    pub lr_decay: f64,
+    pub lr_decay_every: usize,
+    /// Total iterations K.
+    pub iterations: usize,
+    /// Metric recording stride; `None` = `max(iterations / 50, 1)`.
+    pub record_every: Option<usize>,
+    /// Computation time per iteration in delay units.
+    pub compute_units: f64,
+    /// Optional gossip-message compression.
+    pub compression: Option<Compression>,
+    /// Handshake-latency floor for the compression time factor.
+    pub latency_floor: f64,
+    /// Run seed: gradient noise, batch sampling, delay draws.
+    pub seed: u64,
+    /// Topology-sampler seed; `None` = `seed`. Overridable so legacy
+    /// harnesses that seeded the sampler independently stay bit-exact.
+    pub sampler_seed: Option<u64>,
+}
+
+impl ExperimentSpec {
+    /// A spec on a generator graph with every other field defaulted
+    /// (MATCHA at CB 0.5, logistic regression, analytic policy, the
+    /// reference simulator, 1000 iterations).
+    pub fn new(graph_spec: &str) -> ExperimentSpec {
+        Self::on_source(GraphSource::Spec(graph_spec.to_string()))
+    }
+
+    /// A spec on an explicit graph object.
+    pub fn on_graph(graph: Graph) -> ExperimentSpec {
+        Self::on_source(GraphSource::Explicit(graph))
+    }
+
+    fn on_source(graph: GraphSource) -> ExperimentSpec {
+        ExperimentSpec {
+            graph,
+            strategy: Strategy::Matcha { budget: 0.5 },
+            problem: ProblemSpec::logistic(),
+            delay: "unit".to_string(),
+            policy: "analytic".to_string(),
+            backend: Backend::SimReference,
+            lr: 0.05,
+            lr_decay: 1.0,
+            lr_decay_every: usize::MAX,
+            iterations: 1000,
+            record_every: None,
+            compute_units: 1.0,
+            compression: None,
+            latency_floor: 0.05,
+            seed: 0,
+            sampler_seed: None,
+        }
+    }
+
+    // ---- fluent builder --------------------------------------------------
+
+    pub fn strategy(mut self, s: Strategy) -> Self {
+        self.strategy = s;
+        self
+    }
+
+    pub fn problem(mut self, p: ProblemSpec) -> Self {
+        self.problem = p;
+        self
+    }
+
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn delay(mut self, d: &str) -> Self {
+        self.delay = d.to_string();
+        self
+    }
+
+    pub fn policy(mut self, p: &str) -> Self {
+        self.policy = p.to_string();
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn lr_decay(mut self, factor: f64, every: usize) -> Self {
+        self.lr_decay = factor;
+        self.lr_decay_every = every;
+        self
+    }
+
+    pub fn iterations(mut self, k: usize) -> Self {
+        self.iterations = k;
+        self
+    }
+
+    pub fn record_every(mut self, every: usize) -> Self {
+        self.record_every = Some(every);
+        self
+    }
+
+    pub fn compute_units(mut self, units: f64) -> Self {
+        self.compute_units = units;
+        self
+    }
+
+    pub fn compression(mut self, c: Compression) -> Self {
+        self.compression = Some(c);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn sampler_seed(mut self, seed: u64) -> Self {
+        self.sampler_seed = Some(seed);
+        self
+    }
+
+    /// Replace the strategy's communication budget (sweep helper).
+    pub fn with_budget(mut self, cb: f64) -> Self {
+        self.strategy = self.strategy.with_budget(cb);
+        self
+    }
+
+    /// Builder terminator: validate and return the spec.
+    pub fn validated(self) -> Result<ExperimentSpec, String> {
+        self.validate()?;
+        Ok(self)
+    }
+
+    // ---- validation ------------------------------------------------------
+
+    /// Cross-field validation. Every rejection message names the field it
+    /// is about (`graph:`, `strategy:`, `run:`, ...).
+    pub fn validate(&self) -> Result<(), String> {
+        self.validate_resolving().map(|_| ())
+    }
+
+    /// [`ExperimentSpec::validate`], returning the resolved graph so
+    /// callers that need it next don't resolve twice (generator specs
+    /// like `er:M:D:SEED` run a seed search on every resolve).
+    pub fn validate_resolving(&self) -> Result<Graph, String> {
+        let g = self.graph.resolve()?;
+        if let Some(cb) = self.strategy.budget() {
+            if !cb.is_finite() || cb <= 0.0 || cb > 1.0 {
+                return Err(format!("strategy: budget {cb} out of (0, 1]"));
+            }
+        }
+        match &self.problem {
+            ProblemSpec::Quadratic { dim, hetero, noise_std, .. } => {
+                if *dim == 0 {
+                    return Err("problem: quadratic dim must be >= 1".into());
+                }
+                if !hetero.is_finite() || *hetero < 0.0 {
+                    return Err(format!("problem: quadratic hetero {hetero} must be >= 0"));
+                }
+                if !noise_std.is_finite() || *noise_std < 0.0 {
+                    return Err(format!("problem: quadratic noise_std {noise_std} must be >= 0"));
+                }
+            }
+            ProblemSpec::Logistic { non_iid, separation, .. } => {
+                if !non_iid.is_finite() || !(0.0..=1.0).contains(non_iid) {
+                    return Err(format!("problem: logreg non_iid {non_iid} out of [0, 1]"));
+                }
+                if !separation.is_finite() || *separation <= 0.0 {
+                    return Err(format!("problem: logreg separation {separation} must be > 0"));
+                }
+            }
+        }
+        let delay = crate::delay::DelayModel::parse(&self.delay)
+            .map_err(|e| format!("delay: {e}"))?;
+        if !self.lr.is_finite() || self.lr <= 0.0 {
+            return Err(format!("run: lr {} must be positive", self.lr));
+        }
+        if !self.lr_decay.is_finite() || self.lr_decay <= 0.0 || self.lr_decay > 1.0 {
+            return Err(format!("run: lr_decay {} out of (0, 1]", self.lr_decay));
+        }
+        if self.lr_decay_every == 0 {
+            return Err("run: lr_decay_every must be >= 1".into());
+        }
+        if self.iterations == 0 {
+            return Err("run: iterations must be >= 1".into());
+        }
+        if self.record_every == Some(0) {
+            return Err("run: record_every must be >= 1".into());
+        }
+        if !self.compute_units.is_finite() || self.compute_units < 0.0 {
+            return Err(format!("run: compute_units {} must be >= 0", self.compute_units));
+        }
+        if !self.latency_floor.is_finite() || self.latency_floor < 0.0 {
+            return Err(format!("run: latency_floor {} must be >= 0", self.latency_floor));
+        }
+        // Seeds ride through JSON as f64 numbers; at or beyond 2^53 they
+        // silently lose precision and break the exact round-trip. The
+        // bound is strict (`>=`) so a written value that the JSON parser
+        // already rounded *down to* 2^53 is still caught here.
+        const MAX_JSON_SEED: u64 = 1 << 53;
+        for (name, seed) in [
+            ("run: seed", Some(self.seed)),
+            ("run: sampler_seed", self.sampler_seed),
+            (
+                "problem: seed",
+                match &self.problem {
+                    ProblemSpec::Quadratic { seed, .. } | ProblemSpec::Logistic { seed, .. } => {
+                        *seed
+                    }
+                },
+            ),
+        ] {
+            if let Some(s) = seed {
+                if s >= MAX_JSON_SEED {
+                    return Err(format!(
+                        "{name} {s} is not below 2^53 and cannot round-trip through JSON"
+                    ));
+                }
+            }
+        }
+        match &self.compression {
+            Some(Compression::TopK { frac }) => {
+                if !frac.is_finite() || *frac <= 0.0 || *frac > 1.0 {
+                    return Err(format!("run: compression top-k frac {frac} out of (0, 1]"));
+                }
+            }
+            Some(Compression::Quantize { bits }) => {
+                if *bits == 0 || *bits > 32 {
+                    return Err(format!("run: compression quantize bits {bits} out of [1, 32]"));
+                }
+            }
+            None => {}
+        }
+        if let Backend::EngineActors { threads } = self.backend {
+            if threads < 2 {
+                return Err(format!(
+                    "backend: actors needs threads >= 2 (got {threads}); \
+                     use the 'engine' backend for sequential execution"
+                ));
+            }
+        }
+        // The policy grammar needs the graph and the run config, so
+        // validate it with a probe config mirroring what the run builds.
+        let probe = crate::sim::RunConfig {
+            delay,
+            compute_units: self.compute_units,
+            seed: self.seed,
+            ..crate::sim::RunConfig::default()
+        };
+        crate::engine::parse_policy(&self.policy, &g, &probe)
+            .map_err(|e| format!("policy: {e}"))?;
+        if self.backend == Backend::SimReference && self.policy != "analytic" {
+            return Err(format!(
+                "policy: the sim backend supports only 'analytic' (got '{}'); \
+                 pick an engine backend for '{}'",
+                self.policy, self.policy
+            ));
+        }
+        Ok(g)
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    /// Serialize to a [`Json`] value (compact, round-trips exactly).
+    pub fn to_json(&self) -> Json {
+        let graph = match &self.graph {
+            GraphSource::Spec(s) => Json::Str(s.clone()),
+            GraphSource::Explicit(g) => Json::obj(vec![
+                ("nodes", Json::Num(g.num_nodes() as f64)),
+                (
+                    "edges",
+                    Json::Arr(
+                        g.edges()
+                            .iter()
+                            .map(|&(u, v)| {
+                                Json::Arr(vec![Json::Num(u as f64), Json::Num(v as f64)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        let mut strategy = vec![("kind", Json::Str(self.strategy.name().into()))];
+        if let Some(cb) = self.strategy.budget() {
+            strategy.push(("budget", Json::Num(cb)));
+        }
+        let problem = match &self.problem {
+            ProblemSpec::Quadratic { dim, hetero, noise_std, seed } => {
+                let mut p = vec![
+                    ("kind", Json::Str("quad".into())),
+                    ("dim", Json::Num(*dim as f64)),
+                    ("hetero", Json::Num(*hetero)),
+                    ("noise_std", Json::Num(*noise_std)),
+                ];
+                if let Some(s) = seed {
+                    p.push(("seed", Json::Num(*s as f64)));
+                }
+                p
+            }
+            ProblemSpec::Logistic { non_iid, separation, seed } => {
+                let mut p = vec![
+                    ("kind", Json::Str("logreg".into())),
+                    ("non_iid", Json::Num(*non_iid)),
+                    ("separation", Json::Num(*separation)),
+                ];
+                if let Some(s) = seed {
+                    p.push(("seed", Json::Num(*s as f64)));
+                }
+                p
+            }
+        };
+        let mut backend = vec![("kind", Json::Str(self.backend.name().into()))];
+        if let Backend::EngineActors { threads } = self.backend {
+            backend.push(("threads", Json::Num(threads as f64)));
+        }
+        let mut run = vec![
+            ("lr", Json::Num(self.lr)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("compute_units", Json::Num(self.compute_units)),
+            ("latency_floor", Json::Num(self.latency_floor)),
+            ("seed", Json::Num(self.seed as f64)),
+        ];
+        if self.lr_decay != 1.0 {
+            run.push(("lr_decay", Json::Num(self.lr_decay)));
+        }
+        if self.lr_decay_every != usize::MAX {
+            run.push(("lr_decay_every", Json::Num(self.lr_decay_every as f64)));
+        }
+        if let Some(every) = self.record_every {
+            run.push(("record_every", Json::Num(every as f64)));
+        }
+        if let Some(s) = self.sampler_seed {
+            run.push(("sampler_seed", Json::Num(s as f64)));
+        }
+        match &self.compression {
+            Some(Compression::TopK { frac }) => run.push((
+                "compression",
+                Json::obj(vec![("kind", Json::Str("topk".into())), ("frac", Json::Num(*frac))]),
+            )),
+            Some(Compression::Quantize { bits }) => run.push((
+                "compression",
+                Json::obj(vec![
+                    ("kind", Json::Str("quantize".into())),
+                    ("bits", Json::Num(*bits as f64)),
+                ]),
+            )),
+            None => {}
+        }
+        Json::obj(vec![
+            ("graph", graph),
+            ("strategy", Json::obj(strategy)),
+            ("problem", Json::obj(problem)),
+            ("delay", Json::Str(self.delay.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("backend", Json::obj(backend)),
+            ("run", Json::obj(run)),
+        ])
+    }
+
+    /// Compact JSON string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse a spec from JSON text and validate it.
+    pub fn parse(text: &str) -> Result<ExperimentSpec, String> {
+        let json = Json::parse(text).map_err(|e| format!("spec: {e}"))?;
+        let spec = Self::from_json(&json)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load and validate a spec file.
+    pub fn load(path: &std::path::Path) -> Result<ExperimentSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("spec: cannot read {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Write the spec as JSON.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json_string())
+    }
+
+    /// Build a spec from parsed JSON. Structural errors only; semantic
+    /// checks live in [`ExperimentSpec::validate`]. Unknown keys are
+    /// rejected at every level.
+    pub fn from_json(json: &Json) -> Result<ExperimentSpec, String> {
+        let obj = json.as_object().ok_or("spec: top level must be an object")?;
+        known_keys(
+            obj,
+            "spec",
+            &["graph", "strategy", "problem", "delay", "policy", "backend", "run"],
+        )?;
+
+        let graph = match obj.get("graph") {
+            None => return Err("spec: missing required key 'graph'".into()),
+            Some(Json::Str(s)) => GraphSource::Spec(s.clone()),
+            Some(g) => GraphSource::Explicit(parse_explicit_graph(g)?),
+        };
+        let mut spec = Self::on_source(graph);
+
+        if let Some(s) = obj.get("strategy") {
+            spec.strategy = parse_strategy(s)?;
+        }
+        if let Some(p) = obj.get("problem") {
+            spec.problem = parse_problem(p)?;
+        }
+        if let Some(d) = obj.get("delay") {
+            spec.delay = d
+                .as_str()
+                .ok_or("delay: must be a string (unit | maxdeg | stochastic:lo:hi)")?
+                .to_string();
+        }
+        if let Some(p) = obj.get("policy") {
+            spec.policy = p.as_str().ok_or("policy: must be a string")?.to_string();
+        }
+        if let Some(b) = obj.get("backend") {
+            spec.backend = parse_backend(b)?;
+        }
+        if let Some(r) = obj.get("run") {
+            parse_run_params(r, &mut spec)?;
+        }
+        Ok(spec)
+    }
+}
+
+fn known_keys(obj: &BTreeMap<String, Json>, ctx: &str, known: &[&str]) -> Result<(), String> {
+    for k in obj.keys() {
+        if !known.contains(&k.as_str()) {
+            return Err(format!("{ctx}: unknown key '{k}'"));
+        }
+    }
+    Ok(())
+}
+
+fn get_f64(obj: &BTreeMap<String, Json>, ctx: &str, key: &str, default: f64) -> Result<f64, String> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| format!("{ctx}: '{key}' must be a number")),
+    }
+}
+
+fn get_usize(
+    obj: &BTreeMap<String, Json>,
+    ctx: &str,
+    key: &str,
+    default: usize,
+) -> Result<usize, String> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| format!("{ctx}: '{key}' must be a non-negative integer")),
+    }
+}
+
+fn get_seed(obj: &BTreeMap<String, Json>, ctx: &str, key: &str) -> Result<Option<u64>, String> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(|s| Some(s as u64))
+            .ok_or_else(|| format!("{ctx}: '{key}' must be a non-negative integer")),
+    }
+}
+
+fn parse_explicit_graph(json: &Json) -> Result<Graph, String> {
+    let obj = json
+        .as_object()
+        .ok_or("graph: must be a spec string or {\"nodes\": N, \"edges\": [[u,v],...]}")?;
+    known_keys(obj, "graph", &["nodes", "edges"])?;
+    let nodes = get_usize(obj, "graph", "nodes", 0)?;
+    if nodes < 2 {
+        return Err("graph: 'nodes' must be >= 2".into());
+    }
+    let edges_json = obj
+        .get("edges")
+        .and_then(Json::as_array)
+        .ok_or("graph: 'edges' must be an array of [u, v] pairs")?;
+    let mut edges = Vec::with_capacity(edges_json.len());
+    for e in edges_json {
+        let pair = e.as_array().filter(|a| a.len() == 2).ok_or("graph: each edge must be [u, v]")?;
+        let u = pair[0].as_usize().ok_or("graph: edge endpoints must be integers")?;
+        let v = pair[1].as_usize().ok_or("graph: edge endpoints must be integers")?;
+        if u == v {
+            return Err(format!("graph: self-loop [{u}, {v}] not allowed"));
+        }
+        if u >= nodes || v >= nodes {
+            return Err(format!("graph: edge [{u}, {v}] out of range for {nodes} nodes"));
+        }
+        edges.push((u, v));
+    }
+    Ok(Graph::new(nodes, &edges))
+}
+
+fn parse_strategy(json: &Json) -> Result<Strategy, String> {
+    // Allow the shorthand `"strategy": "vanilla"` only for kinds without
+    // parameters — a budgeted kind written as a bare string would
+    // otherwise run at an unstated default budget.
+    if let Some(kind) = json.as_str() {
+        if matches!(kind, "matcha" | "periodic" | "single") {
+            return Err(format!(
+                "strategy: '{kind}' needs a budget — use \
+                 {{\"kind\": \"{kind}\", \"budget\": CB}}"
+            ));
+        }
+        return strategy_from(kind, 0.5);
+    }
+    let obj = json.as_object().ok_or("strategy: must be a string or an object with 'kind'")?;
+    known_keys(obj, "strategy", &["kind", "budget"])?;
+    let kind = obj
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("strategy: missing string key 'kind'")?;
+    let budget = match obj.get("budget") {
+        None => None,
+        Some(v) => Some(v.as_f64().ok_or("strategy: 'budget' must be a number")?),
+    };
+    match kind {
+        "vanilla" => {
+            if budget.is_some() {
+                return Err("strategy: vanilla takes no budget".into());
+            }
+            Ok(Strategy::Vanilla)
+        }
+        "matcha" | "periodic" | "single" => {
+            let cb = budget
+                .ok_or_else(|| format!("strategy: '{kind}' needs a numeric 'budget'"))?;
+            strategy_from(kind, cb)
+        }
+        other => Err(format!(
+            "strategy: unknown kind '{other}' (expected matcha | vanilla | periodic | single)"
+        )),
+    }
+}
+
+fn strategy_from(kind: &str, budget: f64) -> Result<Strategy, String> {
+    match kind {
+        "matcha" => Ok(Strategy::Matcha { budget }),
+        "vanilla" => Ok(Strategy::Vanilla),
+        "periodic" => Ok(Strategy::Periodic { budget }),
+        "single" => Ok(Strategy::SingleMatching { budget }),
+        other => Err(format!(
+            "strategy: unknown kind '{other}' (expected matcha | vanilla | periodic | single)"
+        )),
+    }
+}
+
+fn parse_problem(json: &Json) -> Result<ProblemSpec, String> {
+    if let Some(kind) = json.as_str() {
+        return match kind {
+            "quad" => Ok(ProblemSpec::quadratic()),
+            "logreg" => Ok(ProblemSpec::logistic()),
+            other => Err(format!("problem: unknown kind '{other}' (expected quad | logreg)")),
+        };
+    }
+    let obj = json.as_object().ok_or("problem: must be a string or an object with 'kind'")?;
+    let kind = obj
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("problem: missing string key 'kind'")?;
+    match kind {
+        "quad" => {
+            known_keys(obj, "problem", &["kind", "dim", "hetero", "noise_std", "seed"])?;
+            Ok(ProblemSpec::Quadratic {
+                dim: get_usize(obj, "problem", "dim", 20)?,
+                hetero: get_f64(obj, "problem", "hetero", 1.0)?,
+                noise_std: get_f64(obj, "problem", "noise_std", 0.2)?,
+                seed: get_seed(obj, "problem", "seed")?,
+            })
+        }
+        "logreg" => {
+            known_keys(obj, "problem", &["kind", "non_iid", "separation", "seed"])?;
+            Ok(ProblemSpec::Logistic {
+                non_iid: get_f64(obj, "problem", "non_iid", 0.0)?,
+                separation: get_f64(obj, "problem", "separation", 1.5)?,
+                seed: get_seed(obj, "problem", "seed")?,
+            })
+        }
+        other => Err(format!("problem: unknown kind '{other}' (expected quad | logreg)")),
+    }
+}
+
+fn parse_backend(json: &Json) -> Result<Backend, String> {
+    if let Some(kind) = json.as_str() {
+        return match kind {
+            "sim" => Ok(Backend::SimReference),
+            "engine" => Ok(Backend::EngineSequential),
+            "actors" => Err("backend: 'actors' needs {\"kind\": \"actors\", \"threads\": N}".into()),
+            other => Err(format!(
+                "backend: unknown kind '{other}' (expected sim | engine | actors)"
+            )),
+        };
+    }
+    let obj = json.as_object().ok_or("backend: must be a string or an object with 'kind'")?;
+    known_keys(obj, "backend", &["kind", "threads"])?;
+    let kind = obj
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("backend: missing string key 'kind'")?;
+    match kind {
+        "sim" => Ok(Backend::SimReference),
+        "engine" => Ok(Backend::EngineSequential),
+        "actors" => Ok(Backend::EngineActors { threads: get_usize(obj, "backend", "threads", 2)? }),
+        other => Err(format!("backend: unknown kind '{other}' (expected sim | engine | actors)")),
+    }
+}
+
+fn parse_run_params(json: &Json, spec: &mut ExperimentSpec) -> Result<(), String> {
+    let obj = json.as_object().ok_or("run: must be an object")?;
+    known_keys(
+        obj,
+        "run",
+        &[
+            "lr",
+            "lr_decay",
+            "lr_decay_every",
+            "iterations",
+            "record_every",
+            "compute_units",
+            "latency_floor",
+            "seed",
+            "sampler_seed",
+            "compression",
+        ],
+    )?;
+    spec.lr = get_f64(obj, "run", "lr", spec.lr)?;
+    spec.lr_decay = get_f64(obj, "run", "lr_decay", spec.lr_decay)?;
+    spec.lr_decay_every = get_usize(obj, "run", "lr_decay_every", spec.lr_decay_every)?;
+    spec.iterations = get_usize(obj, "run", "iterations", spec.iterations)?;
+    if obj.contains_key("record_every") {
+        spec.record_every = Some(get_usize(obj, "run", "record_every", 1)?);
+    }
+    spec.compute_units = get_f64(obj, "run", "compute_units", spec.compute_units)?;
+    spec.latency_floor = get_f64(obj, "run", "latency_floor", spec.latency_floor)?;
+    spec.seed = get_seed(obj, "run", "seed")?.unwrap_or(spec.seed);
+    spec.sampler_seed = get_seed(obj, "run", "sampler_seed")?;
+    if let Some(c) = obj.get("compression") {
+        spec.compression = Some(parse_compression(c)?);
+    }
+    Ok(())
+}
+
+fn parse_compression(json: &Json) -> Result<Compression, String> {
+    let obj = json.as_object().ok_or("run: 'compression' must be an object with 'kind'")?;
+    let kind = obj
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("run: compression missing string key 'kind'")?;
+    match kind {
+        "topk" => {
+            known_keys(obj, "run: compression", &["kind", "frac"])?;
+            Ok(Compression::TopK { frac: get_f64(obj, "run: compression", "frac", 0.25)? })
+        }
+        "quantize" => {
+            known_keys(obj, "run: compression", &["kind", "bits"])?;
+            let bits = get_usize(obj, "run: compression", "bits", 8)?;
+            if bits > u32::MAX as usize {
+                return Err("run: compression bits out of range".into());
+            }
+            Ok(Compression::Quantize { bits: bits as u32 })
+        }
+        other => Err(format!(
+            "run: unknown compression kind '{other}' (expected topk | quantize)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_validate() {
+        let spec = ExperimentSpec::new("fig1").validated().unwrap();
+        assert_eq!(spec.strategy, Strategy::Matcha { budget: 0.5 });
+        assert_eq!(spec.backend, Backend::SimReference);
+        assert_eq!(spec.policy, "analytic");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let spec = ExperimentSpec::new("ring:8")
+            .strategy(Strategy::Periodic { budget: 0.25 })
+            .problem(ProblemSpec::Quadratic {
+                dim: 24,
+                hetero: 4.0,
+                noise_std: 1.0,
+                seed: Some(88),
+            })
+            .delay("stochastic:0.5:2.0")
+            .policy("straggler:0:3.0")
+            .backend(Backend::EngineActors { threads: 8 })
+            .lr(0.04)
+            .lr_decay(0.5, 200)
+            .iterations(300)
+            .record_every(25)
+            .compute_units(0.2)
+            .compression(Compression::TopK { frac: 0.25 })
+            .seed(7)
+            .sampler_seed(31);
+        let text = spec.to_json_string();
+        let back = ExperimentSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn explicit_graph_roundtrip() {
+        let g = crate::graph::ring(5);
+        let spec = ExperimentSpec::on_graph(g.clone())
+            .problem(ProblemSpec::quadratic())
+            .iterations(10);
+        let back = ExperimentSpec::parse(&spec.to_json_string()).unwrap();
+        assert_eq!(back.graph, GraphSource::Explicit(g));
+    }
+
+    #[test]
+    fn rejects_unknown_keys_everywhere() {
+        for (text, needle) in [
+            (r#"{"graph": "fig1", "bogus": 1}"#, "unknown key 'bogus'"),
+            (r#"{"graph": "fig1", "strategy": {"kind": "matcha", "x": 1}}"#, "unknown key 'x'"),
+            (r#"{"graph": "fig1", "run": {"warp": 9}}"#, "unknown key 'warp'"),
+        ] {
+            let err = ExperimentSpec::parse(text).unwrap_err();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_each_bad_field_with_its_name() {
+        let base = || ExperimentSpec::new("fig1").problem(ProblemSpec::quadratic());
+        let cases: Vec<(ExperimentSpec, &str)> = vec![
+            (ExperimentSpec::new("warp:9"), "graph"),
+            (base().strategy(Strategy::Matcha { budget: 0.0 }), "strategy"),
+            (base().strategy(Strategy::Matcha { budget: 1.5 }), "strategy"),
+            (base().lr(0.0), "run: lr"),
+            (base().iterations(0), "run: iterations"),
+            (base().record_every(0), "run: record_every"),
+            (base().delay("warp"), "delay"),
+            (base().policy("warp"), "policy"),
+            (base().policy("straggler:99:2.0"), "policy"),
+            (base().delay("maxdeg").policy("flaky:0.2").backend(Backend::EngineSequential), "policy"),
+            (base().policy("flaky:0.2"), "policy"),
+            (base().backend(Backend::EngineActors { threads: 1 }), "backend"),
+            (
+                base().compression(Compression::TopK { frac: 0.0 }),
+                "run: compression",
+            ),
+        ];
+        for (spec, needle) in cases {
+            let err = spec.validate().unwrap_err();
+            assert!(err.contains(needle), "expected '{needle}' in: {err}");
+        }
+    }
+
+    #[test]
+    fn sim_backend_accepts_engine_policies_only_on_engine() {
+        let spec = ExperimentSpec::new("fig1")
+            .policy("hetero:3")
+            .backend(Backend::EngineSequential);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn with_budget_maps_over_strategies() {
+        assert_eq!(
+            Strategy::Matcha { budget: 0.5 }.with_budget(0.2),
+            Strategy::Matcha { budget: 0.2 }
+        );
+        assert_eq!(Strategy::Vanilla.with_budget(0.2), Strategy::Vanilla);
+    }
+
+    #[test]
+    fn shorthand_strings_parse() {
+        let spec = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "strategy": "vanilla", "problem": "quad", "backend": "engine"}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.strategy, Strategy::Vanilla);
+        assert_eq!(spec.problem, ProblemSpec::quadratic());
+        assert_eq!(spec.backend, Backend::EngineSequential);
+    }
+
+    #[test]
+    fn budgeted_strategy_shorthand_is_rejected() {
+        for kind in ["matcha", "periodic", "single"] {
+            let text = format!(r#"{{"graph": "fig1", "strategy": "{kind}"}}"#);
+            let err = ExperimentSpec::parse(&text).unwrap_err();
+            assert!(err.contains("needs a budget"), "{kind}: {err}");
+        }
+    }
+
+    #[test]
+    fn seeds_at_or_beyond_2_53_are_rejected() {
+        let err = ExperimentSpec::new("fig1").seed(u64::MAX).validate().unwrap_err();
+        assert!(err.contains("2^53"), "{err}");
+        let err = ExperimentSpec::new("fig1")
+            .sampler_seed(1 << 60)
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("sampler_seed"), "{err}");
+        // 2^53 itself is rejected: a JSON integer just above it rounds
+        // down to exactly 2^53 during parsing, so allowing the boundary
+        // would let that silent rounding through.
+        assert!(ExperimentSpec::new("fig1").seed(1 << 53).validate().is_err());
+        // The largest exactly-representable seed is fine.
+        ExperimentSpec::new("fig1").seed((1 << 53) - 1).validate().unwrap();
+    }
+
+    #[test]
+    fn object_strategy_requires_explicit_budget() {
+        let err = ExperimentSpec::parse(r#"{"graph": "fig1", "strategy": {"kind": "periodic"}}"#)
+            .unwrap_err();
+        assert!(err.contains("needs a numeric 'budget'"), "{err}");
+        let err = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "strategy": {"kind": "vanilla", "budget": 0.2}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("vanilla takes no budget"), "{err}");
+    }
+}

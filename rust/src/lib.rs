@@ -17,10 +17,51 @@
 //!   transformer LM and Pallas kernels, lowered once to HLO text in
 //!   `artifacts/`; Python is never on the training path.
 //!
-//! ## Execution paths
+//! ## The front door: [`experiment`]
 //!
-//! Two paths run the DecenSGD recursion and share one step/mix kernel
-//! ([`sim::kernel`]), so they agree **bit-for-bit** per seed:
+//! The crate's public API is the unified experiment pipeline
+//! **spec → plan → run → observe**: one typed, serializable
+//! [`experiment::ExperimentSpec`] describes a full run (graph, strategy +
+//! budget, workload, delay policy, backend, hyperparameters), planning
+//! exposes the derived math (matchings, probabilities, α, ρ) before
+//! anything executes, and a single [`experiment::run()`] drives every
+//! backend, returning one [`experiment::ExperimentResult`]. Specs load
+//! from JSON files: `matcha run --spec exp.json`.
+//!
+//! Quick tour (runs as a doctest — the default build is pure Rust now
+//! that the XLA path is feature-gated):
+//!
+//! ```
+//! use matcha::experiment::{self, Backend, ExperimentSpec, ProblemSpec, Strategy};
+//!
+//! // Declare the whole experiment: MATCHA at half budget on the paper's
+//! // Figure-1 graph, a quadratic workload, the event-driven engine.
+//! let spec = ExperimentSpec::new("fig1")
+//!     .strategy(Strategy::Matcha { budget: 0.5 })
+//!     .problem(ProblemSpec::quadratic())
+//!     .backend(Backend::EngineSequential)
+//!     .lr(0.03)
+//!     .iterations(60)
+//!     .validated()
+//!     .unwrap();
+//!
+//! // Plan: decompose → probabilities → α (paper §3, steps 1–3).
+//! let plan = experiment::plan(&spec).unwrap();
+//! assert!(plan.rho < 1.0); // Theorem 2: convergence guaranteed
+//!
+//! // Run: same entry point for sim / engine / actor backends.
+//! let result = experiment::run(&spec).unwrap();
+//! assert!(result.final_loss().is_finite());
+//!
+//! // The spec round-trips through JSON, so it is a loadable artifact.
+//! let reloaded = ExperimentSpec::parse(&spec.to_json_string()).unwrap();
+//! assert_eq!(reloaded, spec);
+//! ```
+//!
+//! ## Execution backends
+//!
+//! The backends share one step/mix kernel ([`sim::kernel`]), so they
+//! agree **bit-for-bit** per seed:
 //!
 //! - [`sim::run_decentralized`] — the sequential reference loop with
 //!   closed-form time accounting ([`delay::DelayModel`]).
@@ -29,23 +70,13 @@
 //!   stragglers / heterogeneous links / link failures) whose parallel
 //!   mode runs each worker as an actor on a `std::thread`, exchanging
 //!   gossip messages over channels. [`engine::sweep`] fans independent
-//!   budget/topology grid points across cores.
+//!   budget/topology grid points across cores, streaming each finished
+//!   point through an [`experiment::Observer`].
 //!
-//! Quick tour (runs as a doctest — the default build is pure Rust now
-//! that the XLA path is feature-gated):
-//!
-//! ```
-//! use matcha::graph::paper_figure1_graph;
-//! use matcha::matching::decompose;
-//! use matcha::budget::optimize_activation_probabilities;
-//! use matcha::mixing::optimize_alpha;
-//!
-//! let g = paper_figure1_graph();
-//! let decomp = decompose(&g);                  // Step 1: matchings
-//! let probs = optimize_activation_probabilities(&decomp, 0.5); // Step 2
-//! let mix = optimize_alpha(&decomp, &probs.probabilities);     // Step 3
-//! assert!(mix.rho < 1.0); // Theorem 2: convergence guaranteed
-//! ```
+//! Direct use of the lower layers ([`matching`], [`budget`], [`mixing`],
+//! hand-built [`sim::RunConfig`]s, `coordinator::plan_*`) remains
+//! supported as the **legacy path** for specialized harnesses; new code
+//! should speak [`experiment`] specs.
 
 // The codebase favors explicit index loops for the numerical kernels
 // (mirrors the paper's equations); keep clippy's style lints from
@@ -60,6 +91,7 @@ pub mod coordinator;
 pub mod data;
 pub mod delay;
 pub mod engine;
+pub mod experiment;
 pub mod graph;
 pub mod json;
 pub mod linalg;

@@ -4,8 +4,8 @@
 //! edge coloring: each color class is a set of node-disjoint links that
 //! can all communicate in parallel (1 time unit). The paper uses the
 //! Misra & Gries constructive proof of Vizing's theorem, which guarantees
-//! `M ≤ Δ(G) + 1`; we implement it in [`misra_gries`], plus a simple
-//! greedy baseline ([`greedy`]) used in ablations (greedy may need up to
+//! `M ≤ Δ(G) + 1`; we implement it in `misra_gries`, plus a simple
+//! greedy baseline (`greedy`) used in ablations (greedy may need up to
 //! `2Δ − 1` colors).
 
 mod greedy;

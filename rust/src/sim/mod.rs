@@ -26,7 +26,7 @@ mod runner;
 pub use compress::Compression;
 pub use logreg::{LogisticProblem, LogisticSpec};
 pub use quadratic::QuadraticProblem;
-pub use runner::{run_decentralized, RunConfig, RunResult};
+pub use runner::{run_decentralized, run_decentralized_observed, RunConfig, RunResult};
 
 use crate::rng::Rng;
 

@@ -12,6 +12,7 @@ use super::kernel::{
 };
 use super::{mean_iterate, Compression, Problem};
 use crate::delay::{DelayModel, VirtualClock};
+use crate::experiment::{NoopObserver, Observer};
 use crate::graph::Graph;
 use crate::metrics::Recorder;
 use crate::rng::Rng;
@@ -101,6 +102,19 @@ pub fn run_decentralized<P: Problem, S: TopologySampler>(
     sampler: &mut S,
     config: &RunConfig,
 ) -> RunResult {
+    run_decentralized_observed(problem, matchings, sampler, config, &mut NoopObserver)
+}
+
+/// [`run_decentralized`] with streaming observation: `observer` receives
+/// a callback after every iteration and at every metrics record. The
+/// trajectory is identical to the unobserved run.
+pub fn run_decentralized_observed<P: Problem, S: TopologySampler>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    config: &RunConfig,
+    observer: &mut dyn Observer,
+) -> RunResult {
     let m = problem.num_workers();
     let d = problem.dim();
     let mut xs = init_iterates(config.seed, m, d);
@@ -115,6 +129,7 @@ pub fn run_decentralized<P: Problem, S: TopologySampler>(
     let mut delay_rng = config.delay_rng();
 
     record_metrics(problem, 0, 0.0, 0.0, &xs, &mut metrics);
+    observer.on_record(0, 0.0, &metrics);
 
     for k in 0..config.iterations {
         // --- local SGD step on every worker -------------------------
@@ -150,7 +165,9 @@ pub fn run_decentralized<P: Problem, S: TopologySampler>(
         }
         if (k + 1) % config.record_every == 0 || k + 1 == config.iterations {
             record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics);
+            observer.on_record(k + 1, now, &metrics);
         }
+        observer.on_iteration(k + 1, now, total_comm);
     }
 
     RunResult {

@@ -1,0 +1,440 @@
+//! Acceptance tests for the unified `experiment` API (ISSUE 2):
+//!
+//! - golden-file JSON round-trips (parse → serialize → parse) plus a
+//!   rejection message for each invalid field;
+//! - **bit-for-bit parity**: spec-driven runs reproduce the legacy
+//!   `sim::run_decentralized` and `engine::run_engine_analytic`
+//!   entry points exactly, per seed;
+//! - the full scenario matrix: all four strategies × both problems × all
+//!   three backends through one `ExperimentSpec`;
+//! - streaming: the `Observer` sees every iteration/record, and the sweep
+//!   driver streams every grid point.
+
+use matcha::engine::{run_engine_analytic, EngineConfig};
+use matcha::experiment::{
+    self, Backend, ExperimentResult, ExperimentSpec, Observer, Plan, ProblemSpec, Strategy,
+};
+use matcha::graph::parse_graph_spec;
+use matcha::rng::Rng;
+use matcha::sim::{run_decentralized, LogisticProblem, LogisticSpec, QuadraticProblem};
+
+// ---------------------------------------------------------------------------
+// JSON round-trips
+// ---------------------------------------------------------------------------
+
+/// A "golden" spec file exercising every field, written the way a user
+/// would write it by hand (pretty-printed, shorthand forms mixed in).
+const GOLDEN_FULL: &str = r#"
+{
+  "graph": "er:16:8:303",
+  "strategy": {"kind": "matcha", "budget": 0.4},
+  "problem": {"kind": "logreg", "non_iid": 0.8, "separation": 2.0, "seed": 5},
+  "delay": "stochastic:0.5:2.0",
+  "policy": "straggler:3:2.5",
+  "backend": {"kind": "actors", "threads": 4},
+  "run": {
+    "lr": 0.1,
+    "lr_decay": 0.5,
+    "lr_decay_every": 200,
+    "iterations": 500,
+    "record_every": 25,
+    "compute_units": 0.2,
+    "latency_floor": 0.05,
+    "seed": 7,
+    "sampler_seed": 21,
+    "compression": {"kind": "quantize", "bits": 8}
+  }
+}
+"#;
+
+const GOLDEN_MINIMAL: &str = r#"{"graph": "fig1"}"#;
+
+const GOLDEN_EXPLICIT_GRAPH: &str = r#"
+{
+  "graph": {"nodes": 5, "edges": [[0,1],[1,2],[2,3],[3,4],[4,0]]},
+  "strategy": "vanilla",
+  "problem": "quad",
+  "backend": "engine",
+  "run": {"iterations": 40}
+}
+"#;
+
+#[test]
+fn golden_specs_roundtrip_exactly() {
+    for (name, text) in [
+        ("full", GOLDEN_FULL),
+        ("minimal", GOLDEN_MINIMAL),
+        ("explicit-graph", GOLDEN_EXPLICIT_GRAPH),
+    ] {
+        let first = ExperimentSpec::parse(text).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let emitted = first.to_json_string();
+        let second = ExperimentSpec::parse(&emitted)
+            .unwrap_or_else(|e| panic!("{name} re-parse: {e}\n{emitted}"));
+        assert_eq!(second, first, "{name}: parse → serialize → parse must be identity");
+        // And serialization is a fixpoint.
+        assert_eq!(second.to_json_string(), emitted, "{name}");
+    }
+}
+
+#[test]
+fn golden_full_spec_fields_land_where_expected() {
+    let spec = ExperimentSpec::parse(GOLDEN_FULL).unwrap();
+    assert_eq!(spec.strategy, Strategy::Matcha { budget: 0.4 });
+    assert_eq!(
+        spec.problem,
+        ProblemSpec::Logistic { non_iid: 0.8, separation: 2.0, seed: Some(5) }
+    );
+    assert_eq!(spec.delay, "stochastic:0.5:2.0");
+    assert_eq!(spec.policy, "straggler:3:2.5");
+    assert_eq!(spec.backend, Backend::EngineActors { threads: 4 });
+    assert_eq!(spec.lr, 0.1);
+    assert_eq!(spec.lr_decay, 0.5);
+    assert_eq!(spec.lr_decay_every, 200);
+    assert_eq!(spec.iterations, 500);
+    assert_eq!(spec.record_every, Some(25));
+    assert_eq!(spec.compute_units, 0.2);
+    assert_eq!(spec.seed, 7);
+    assert_eq!(spec.sampler_seed, Some(21));
+    assert!(spec.compression.is_some());
+}
+
+#[test]
+fn rejection_messages_name_the_offending_field() {
+    let cases: &[(&str, &str)] = &[
+        // Structural.
+        (r#"[1, 2]"#, "top level"),
+        (r#"{"strategy": "matcha"}"#, "graph"),
+        (r#"{"graph": "fig1", "wormhole": 1}"#, "unknown key 'wormhole'"),
+        (r#"{"graph": "fig1", "strategy": {"kind": "warp"}}"#, "strategy"),
+        (r#"{"graph": "fig1", "strategy": {"kind": "matcha", "x": 1}}"#, "unknown key 'x'"),
+        (r#"{"graph": "fig1", "problem": {"kind": "tsp"}}"#, "problem"),
+        (r#"{"graph": "fig1", "backend": {"kind": "gpu"}}"#, "backend"),
+        (r#"{"graph": "fig1", "backend": "actors"}"#, "threads"),
+        (r#"{"graph": "fig1", "run": {"lr": "fast"}}"#, "'lr' must be a number"),
+        (r#"{"graph": "fig1", "run": {"iterations": 2.5}}"#, "'iterations'"),
+        (
+            r#"{"graph": "fig1", "run": {"compression": {"kind": "zip"}}}"#,
+            "compression",
+        ),
+        // Graph semantics.
+        (r#"{"graph": "warp:9"}"#, "graph"),
+        (r#"{"graph": {"nodes": 4, "edges": [[0,1],[2,3]]}}"#, "connected"),
+        (r#"{"graph": {"nodes": 3, "edges": [[0,3]]}}"#, "out of range"),
+        (r#"{"graph": {"nodes": 3, "edges": [[1,1]]}}"#, "self-loop"),
+        // Field semantics (validate()).
+        (r#"{"graph": "fig1", "strategy": {"kind": "matcha", "budget": 0}}"#, "strategy"),
+        (r#"{"graph": "fig1", "strategy": {"kind": "periodic", "budget": 1.5}}"#, "strategy"),
+        (r#"{"graph": "fig1", "run": {"lr": 0}}"#, "run: lr"),
+        (r#"{"graph": "fig1", "run": {"iterations": 0}}"#, "run: iterations"),
+        (r#"{"graph": "fig1", "run": {"record_every": 0}}"#, "run: record_every"),
+        (r#"{"graph": "fig1", "delay": "stochastic:2:1"}"#, "delay"),
+        (r#"{"graph": "fig1", "policy": "flaky:7"}"#, "policy"),
+        (r#"{"graph": "fig1", "policy": "straggler:99:2.0"}"#, "policy"),
+        (
+            // Link-failure injection needs a link-granular delay model.
+            r#"{"graph": "fig1", "backend": "engine", "delay": "maxdeg", "policy": "flaky:0.1"}"#,
+            "policy",
+        ),
+        (
+            // Engine-only policies cannot run on the reference simulator.
+            r#"{"graph": "fig1", "backend": "sim", "policy": "hetero:3"}"#,
+            "policy",
+        ),
+        (
+            r#"{"graph": "fig1", "problem": {"kind": "logreg", "non_iid": 2.0}}"#,
+            "problem",
+        ),
+        (
+            r#"{"graph": "fig1", "backend": {"kind": "actors", "threads": 1}}"#,
+            "backend",
+        ),
+    ];
+    for (text, needle) in cases {
+        let err = ExperimentSpec::parse(text)
+            .err()
+            .unwrap_or_else(|| panic!("spec should be rejected: {text}"));
+        assert!(
+            err.contains(needle),
+            "error for {text} should mention '{needle}', got: {err}"
+        );
+    }
+}
+
+#[test]
+fn spec_files_roundtrip_through_disk() {
+    let dir = std::env::temp_dir().join("matcha_experiment_specs");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.json");
+    let spec = ExperimentSpec::parse(GOLDEN_FULL).unwrap();
+    spec.save(&path).unwrap();
+    let loaded = ExperimentSpec::load(&path).unwrap();
+    assert_eq!(loaded, spec);
+}
+
+// ---------------------------------------------------------------------------
+// Bit-for-bit parity with the legacy entry points
+// ---------------------------------------------------------------------------
+
+fn parity_spec(seed: u64, backend: Backend) -> ExperimentSpec {
+    ExperimentSpec::new("grid:3x4")
+        .strategy(Strategy::Matcha { budget: 0.5 })
+        .problem(ProblemSpec::quadratic())
+        .backend(backend)
+        .lr(0.02)
+        .iterations(150)
+        .record_every(50)
+        .seed(seed)
+}
+
+/// Rebuild exactly what the spec-driven path should produce, using only
+/// legacy APIs: hand-wired plan + problem + sampler + `RunConfig`.
+fn legacy_pieces(
+    spec: &ExperimentSpec,
+) -> (Plan, QuadraticProblem, matcha::sim::RunConfig) {
+    let g = parse_graph_spec("grid:3x4").unwrap();
+    let plan = Plan::for_graph(g, spec.strategy).unwrap();
+    let mut rng = Rng::new(spec.seed ^ 0x9a9a);
+    let problem = QuadraticProblem::generate(plan.graph.num_nodes(), 20, 1.0, 0.2, &mut rng);
+    let cfg = plan.run_config(spec).unwrap();
+    (plan, problem, cfg)
+}
+
+#[test]
+fn spec_driven_sim_matches_run_decentralized_bit_for_bit() {
+    for seed in [0u64, 7, 0xfeed] {
+        let spec = parity_spec(seed, Backend::SimReference);
+        let res = experiment::run(&spec).unwrap();
+
+        let (plan, problem, cfg) = legacy_pieces(&spec);
+        let mut sampler = plan.sampler(seed);
+        let legacy = run_decentralized(&problem, &plan.decomposition.matchings, &mut sampler, &cfg);
+
+        assert_eq!(res.final_mean, legacy.final_mean, "seed {seed}");
+        assert_eq!(res.total_time, legacy.total_time, "seed {seed}");
+        assert_eq!(res.total_comm_units, legacy.total_comm_units, "seed {seed}");
+        let spec_loss = res.metrics.get("loss_vs_iter");
+        let legacy_loss = legacy.metrics.get("loss_vs_iter");
+        assert_eq!(spec_loss, legacy_loss, "seed {seed}: full loss series must match");
+    }
+}
+
+#[test]
+fn spec_driven_engine_matches_run_engine_analytic_bit_for_bit() {
+    for seed in [3u64, 11] {
+        let spec = parity_spec(seed, Backend::EngineSequential);
+        let res = experiment::run(&spec).unwrap();
+
+        let (plan, problem, cfg) = legacy_pieces(&spec);
+        let mut sampler = plan.sampler(seed);
+        let legacy = run_engine_analytic(
+            &problem,
+            &plan.decomposition.matchings,
+            &mut sampler,
+            &EngineConfig { run: cfg, threads: 1 },
+        );
+
+        assert_eq!(res.final_mean, legacy.run.final_mean, "seed {seed}");
+        assert_eq!(res.total_time, legacy.run.total_time, "seed {seed}");
+        assert_eq!(res.total_comm_units, legacy.run.total_comm_units, "seed {seed}");
+        assert_eq!(res.events, legacy.events, "seed {seed}");
+    }
+}
+
+#[test]
+fn logreg_spec_matches_legacy_problem_generation() {
+    // The logistic seed derivation (run.seed ^ 0x10f) must match the
+    // historical CLI wiring.
+    let spec = ExperimentSpec::new("ring:6")
+        .problem(ProblemSpec::Logistic { non_iid: 0.3, separation: 1.5, seed: None })
+        .lr(0.1)
+        .iterations(80)
+        .record_every(40)
+        .seed(42);
+    let res = experiment::run(&spec).unwrap();
+
+    let g = parse_graph_spec("ring:6").unwrap();
+    let plan = Plan::for_graph(g, spec.strategy).unwrap();
+    let problem = LogisticProblem::generate(LogisticSpec {
+        num_workers: 6,
+        non_iid: 0.3,
+        seed: 42 ^ 0x10f,
+        ..LogisticSpec::default()
+    });
+    let cfg = plan.run_config(&spec).unwrap();
+    let mut sampler = plan.sampler(42);
+    let legacy = run_decentralized(&problem, &plan.decomposition.matchings, &mut sampler, &cfg);
+    assert_eq!(res.final_mean, legacy.final_mean);
+    assert_eq!(res.total_time, legacy.total_time);
+}
+
+// ---------------------------------------------------------------------------
+// The full scenario matrix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_strategy_problem_backend_combination_runs() {
+    let strategies = [
+        Strategy::Matcha { budget: 0.5 },
+        Strategy::Vanilla,
+        Strategy::Periodic { budget: 0.5 },
+        Strategy::SingleMatching { budget: 0.5 },
+    ];
+    let problems = [ProblemSpec::quadratic(), ProblemSpec::logistic()];
+    let backends = [
+        Backend::SimReference,
+        Backend::EngineSequential,
+        Backend::EngineActors { threads: 8 },
+    ];
+    for strategy in strategies {
+        for problem in &problems {
+            for backend in backends {
+                let spec = ExperimentSpec::new("fig1")
+                    .strategy(strategy)
+                    .problem(problem.clone())
+                    .backend(backend)
+                    .lr(0.03)
+                    .iterations(30)
+                    .record_every(10)
+                    .seed(1);
+                let res = experiment::run(&spec).unwrap_or_else(|e| {
+                    panic!("{} × {} × {}: {e}", strategy.name(), problem.name(), backend.name())
+                });
+                assert!(
+                    res.final_loss().is_finite(),
+                    "{} × {} × {}",
+                    strategy.name(),
+                    problem.name(),
+                    backend.name()
+                );
+                assert!(res.total_time > 0.0);
+                assert!(res.rho < 1.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn backends_agree_bit_for_bit_per_strategy() {
+    // Sim reference, sequential engine and the actor pool must produce
+    // identical trajectories for every strategy under the analytic policy.
+    for strategy in [
+        Strategy::Matcha { budget: 0.4 },
+        Strategy::Vanilla,
+        Strategy::Periodic { budget: 0.4 },
+        Strategy::SingleMatching { budget: 0.4 },
+    ] {
+        let spec = |backend: Backend| {
+            ExperimentSpec::new("fig1")
+                .strategy(strategy)
+                .problem(ProblemSpec::quadratic())
+                .backend(backend)
+                .lr(0.02)
+                .iterations(80)
+                .record_every(20)
+                .seed(5)
+        };
+        let sim = experiment::run(&spec(Backend::SimReference)).unwrap();
+        let eng = experiment::run(&spec(Backend::EngineSequential)).unwrap();
+        let act = experiment::run(&spec(Backend::EngineActors { threads: 8 })).unwrap();
+        assert_eq!(sim.final_mean, eng.final_mean, "{}", strategy.name());
+        assert_eq!(sim.total_time, eng.total_time, "{}", strategy.name());
+        assert_eq!(eng.final_mean, act.final_mean, "{}", strategy.name());
+        assert_eq!(eng.total_time, act.total_time, "{}", strategy.name());
+    }
+}
+
+#[test]
+fn engine_policies_run_through_specs() {
+    for policy in ["analytic", "hetero:17", "straggler:0:4.0", "flaky:0.2"] {
+        let spec = ExperimentSpec::new("ring:8")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::EngineSequential)
+            .policy(policy)
+            .lr(0.02)
+            .iterations(60)
+            .record_every(20)
+            .seed(2);
+        let res = experiment::run(&spec).unwrap_or_else(|e| panic!("{policy}: {e}"));
+        assert!(res.final_loss().is_finite(), "{policy}");
+        if policy.starts_with("flaky") {
+            assert!(res.dropped_links > 0, "failure injection must trigger");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming
+// ---------------------------------------------------------------------------
+
+#[test]
+fn observer_streams_iterations_records_and_sweep_points() {
+    #[derive(Default)]
+    struct Tally {
+        iterations: usize,
+        records: usize,
+        points: Vec<usize>,
+    }
+    impl Observer for Tally {
+        fn on_iteration(&mut self, _k: usize, _t: f64, _c: f64) {
+            self.iterations += 1;
+        }
+        fn on_record(&mut self, _k: usize, _t: f64, _m: &matcha::metrics::Recorder) {
+            self.records += 1;
+        }
+        fn on_point(&mut self, index: usize, _r: &ExperimentResult) {
+            self.points.push(index);
+        }
+    }
+
+    // Per-run streaming, on both execution paths.
+    for backend in [Backend::SimReference, Backend::EngineSequential] {
+        let spec = ExperimentSpec::new("ring:6")
+            .problem(ProblemSpec::quadratic())
+            .backend(backend)
+            .iterations(40)
+            .record_every(10)
+            .seed(3);
+        let mut tally = Tally::default();
+        experiment::run_observed(&spec, &mut tally).unwrap();
+        assert_eq!(tally.iterations, 40, "{}", backend.name());
+        assert_eq!(tally.records, 1 + 4, "{}", backend.name());
+    }
+
+    // Sweep streaming: every grid point observed exactly once, results in
+    // input order.
+    let base = ExperimentSpec::new("ring:6")
+        .problem(ProblemSpec::quadratic())
+        .backend(Backend::EngineSequential)
+        .iterations(30)
+        .record_every(30)
+        .seed(3);
+    let budgets = [0.2, 0.5, 0.8, 1.0];
+    let mut tally = Tally::default();
+    let results = experiment::run_sweep(&base, &budgets, 4, &mut tally).unwrap();
+    let mut seen = tally.points.clone();
+    seen.sort_unstable();
+    assert_eq!(seen, vec![0, 1, 2, 3]);
+    assert_eq!(results.len(), 4);
+    for ((cb, r), expect) in results.iter().zip(&budgets) {
+        assert_eq!(cb, expect);
+        assert!(r.total_time > 0.0);
+    }
+}
+
+#[test]
+fn sweep_matches_individual_runs_bit_for_bit() {
+    let base = ExperimentSpec::new("ring:6")
+        .problem(ProblemSpec::quadratic())
+        .backend(Backend::EngineSequential)
+        .iterations(50)
+        .record_every(25)
+        .seed(8);
+    let budgets = [0.3, 0.7];
+    let swept =
+        experiment::run_sweep(&base, &budgets, 2, &mut experiment::NoopObserver).unwrap();
+    for (cb, r) in &swept {
+        let solo = experiment::run(&base.clone().with_budget(*cb)).unwrap();
+        assert_eq!(r.final_mean, solo.final_mean, "cb {cb}");
+        assert_eq!(r.total_time, solo.total_time, "cb {cb}");
+    }
+}
