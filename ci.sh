@@ -30,5 +30,7 @@ done
 echo "==> bench smoke (--dry-run)"
 cargo bench --bench hotpath -- --dry-run
 cargo bench --bench engine_sweep -- --dry-run
+# Async-vs-barrier smoke: also emits BENCH_async.json (perf trajectory).
+cargo bench --bench async_vs_barrier -- --dry-run
 
 echo "CI OK"

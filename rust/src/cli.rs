@@ -89,11 +89,17 @@ COMMANDS
   schedule   --graph SPEC --budget CB --steps K [--out FILE]   apriori schedule
   sim        --graph SPEC --strategy S --budget CB --iters N [--problem quad|logreg]
   engine     like sim, through the event-driven engine; adds
-             [--policy analytic|hetero:SEED|straggler:W:F|flaky:P] [--threads T]
-             (T>1 is a mode switch: the actor pool runs ONE THREAD PER WORKER)
+             [--backend engine|actors|async] [--threads T] [--max-staleness S]
+             [--policy analytic|hetero:SEED|straggler:W:F|flaky:P]
+             (actors: bounded pool, workers multiplexed over min(T, workers)
+             threads; async: barrier-free gossip with staleness-aware mixing,
+             S bounds the version drift and S=0 reproduces the sync kernel)
   sweep      --graph SPEC --budgets A,B,... --iters N [--threads T] [--serial]
-             parallel budget sweep across cores; finished points stream as
-             JSON lines before the final table
+             [--spec FILE] [--backend sim|engine|async] parallel budget sweep
+             across cores; finished points stream as JSON lines before the
+             final table. --spec sweeps the budget axis of a JSON experiment
+             file, like run --spec (multi-threaded spec backends are demoted
+             to their single-threaded equivalents — points already fan out)
   train      --graph SPEC --strategy S --budget CB --steps N [--artifacts DIR] [--pallas]
              (requires a build with --features xla)
   info       [--artifacts DIR]                  artifact metadata
@@ -357,32 +363,60 @@ fn cmd_sim(args: &Args) -> Result<(), String> {
 
 fn cmd_engine(args: &Args) -> Result<(), String> {
     let threads = args.usize_or("threads", 1)?;
-    let backend = if threads <= 1 {
-        Backend::EngineSequential
-    } else {
-        Backend::EngineActors { threads }
+    let backend = match args.str_or("backend", "auto") {
+        // Legacy behavior: --threads alone picks sequential vs actors.
+        "auto" => {
+            if threads <= 1 {
+                Backend::EngineSequential
+            } else {
+                Backend::EngineActors { threads }
+            }
+        }
+        "engine" => Backend::EngineSequential,
+        "actors" => {
+            if threads < 2 {
+                return Err(
+                    "--backend actors needs --threads >= 2 (a pool of at least two); \
+                     use --backend engine for sequential execution"
+                        .into(),
+                );
+            }
+            Backend::EngineActors { threads }
+        }
+        "async" => Backend::Async {
+            threads: threads.max(1),
+            max_staleness: args
+                .usize_or("max-staleness", crate::gossip::DEFAULT_MAX_STALENESS)?,
+        },
+        other => {
+            return Err(format!(
+                "unknown backend '{other}' (expected engine | actors | async)"
+            ))
+        }
     };
     let spec = spec_from_args(args, backend)?;
     let plan = experiment::plan(&spec)?;
-    // `threads` is a mode switch, not a pool size: actor mode runs one
-    // thread per worker (sequential fallback beyond the worker cap).
-    // Surface the real count so nobody is surprised.
-    if threads > 1 {
+    // The pool multiplexes workers over min(threads, workers) OS
+    // threads; surface the clamp so nobody is surprised.
+    if let Backend::EngineActors { threads } = spec.backend {
         let nodes = plan.graph.num_nodes();
-        if nodes > crate::engine::MAX_ACTOR_WORKERS {
-            println!(
-                "note: {} workers exceed the actor cap ({}); running sequentially",
-                nodes,
-                crate::engine::MAX_ACTOR_WORKERS
-            );
-        } else if nodes != threads {
-            println!("note: actor mode spawns one thread per worker ({nodes} threads)");
+        let pool = threads.min(nodes);
+        if pool < threads {
+            println!("note: actor pool clamped to {pool} thread(s) for {nodes} workers");
         }
     }
     let result = experiment::run_planned(&spec, &plan, &mut experiment::NoopObserver)?;
+    // Report the effective thread count of the chosen backend, not the
+    // raw --threads flag (defaults and clamps may differ).
+    let effective_threads = match spec.backend {
+        Backend::EngineActors { threads } => threads.min(plan.graph.num_nodes()),
+        Backend::Async { threads, .. } => threads.min(plan.graph.num_nodes()),
+        _ => 1,
+    };
     print_run_summary(
         &format!(
-            "engine strategy={} policy={} threads={threads} iters={} CB={}",
+            "engine backend={} strategy={} policy={} threads={effective_threads} iters={} CB={}",
+            spec.backend.name(),
             spec.strategy.name(),
             spec.policy,
             spec.iterations,
@@ -394,6 +428,15 @@ fn cmd_engine(args: &Args) -> Result<(), String> {
         "events processed: {}, links dropped by failure injection: {}",
         result.events, result.dropped_links
     );
+    if let Some(stats) = &result.async_stats {
+        println!(
+            "staleness: mean {:.3}, max {}, exchanges {}, total idle {:.1} units",
+            stats.mean_staleness(),
+            stats.max_staleness(),
+            stats.total_exchanges(),
+            stats.total_idle()
+        );
+    }
     save_metrics(args, &result.metrics)
 }
 
@@ -427,9 +470,66 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     if budgets.is_empty() {
         return Err("--budgets: need at least one value".into());
     }
-    // Each grid point runs on the sequential engine; parallelism comes
-    // from fanning points across threads.
-    let base = spec_from_args(args, Backend::EngineSequential)?;
+    // Point-level backend is threaded through, so sync and async points
+    // can be swept side by side (virtual times are comparable; note that
+    // comm_units have different semantics — see `gossip::runtime`).
+    // Parallelism comes from fanning points across threads; per-point
+    // execution is normalized to single-threaded (also enforced in
+    // `experiment::run_sweep` for library callers).
+    let base = if let Some(path) = args.flags.get("spec") {
+        // A spec file defines the whole experiment; reject config flags
+        // it would silently override.
+        for flag in [
+            "backend", "max-staleness", "graph", "strategy", "budget", "problem", "delay",
+            "policy", "lr", "iters", "compute-units", "seed", "non-iid",
+        ] {
+            if args.flags.contains_key(flag) {
+                return Err(format!(
+                    "sweep: --{flag} conflicts with --spec (the spec file defines it); \
+                     edit the spec or drop the flag"
+                ));
+            }
+        }
+        let mut spec = ExperimentSpec::load(std::path::Path::new(path))?;
+        // Thread counts never change results on any backend, so a
+        // multi-threaded spec backend is demoted to its sequential
+        // equivalent rather than oversubscribing cores point × pool.
+        match spec.backend {
+            Backend::EngineActors { .. } => {
+                println!("note: sweep points run single-threaded; using the 'engine' backend");
+                spec.backend = Backend::EngineSequential;
+            }
+            Backend::Async { threads, max_staleness } if threads > 1 => {
+                println!("note: sweep points run single-threaded; async pool clamped to 1");
+                spec.backend = Backend::Async { threads: 1, max_staleness };
+            }
+            _ => {}
+        }
+        spec
+    } else {
+        let backend = match args.str_or("backend", "engine") {
+            "engine" => Backend::EngineSequential,
+            "sim" => Backend::SimReference,
+            "async" => Backend::Async {
+                threads: 1,
+                max_staleness: args
+                    .usize_or("max-staleness", crate::gossip::DEFAULT_MAX_STALENESS)?,
+            },
+            "actors" => {
+                return Err(
+                    "sweep points fan across threads already; use --backend engine \
+                     (or async) for per-point execution"
+                        .into(),
+                )
+            }
+            other => {
+                return Err(format!(
+                    "unknown backend '{other}' (expected sim | engine | async)"
+                ))
+            }
+        };
+        spec_from_args(args, backend)?
+    };
 
     let wall = std::time::Instant::now();
     let mut streamer = SweepJsonLines { budgets: &budgets };
@@ -671,6 +771,86 @@ mod tests {
             "4",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn engine_async_backend_smoke() {
+        run(&sv(&[
+            "engine",
+            "--graph",
+            "ring:6",
+            "--backend",
+            "async",
+            "--threads",
+            "2",
+            "--max-staleness",
+            "3",
+            "--iters",
+            "40",
+            "--problem",
+            "quad",
+            "--policy",
+            "straggler:0:4.0",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn engine_rejects_unknown_backend() {
+        let r = run(&sv(&["engine", "--graph", "ring:4", "--backend", "warp"]));
+        assert!(r.unwrap_err().contains("backend"));
+    }
+
+    #[test]
+    fn sweep_async_backend_smoke() {
+        run(&sv(&[
+            "sweep",
+            "--graph",
+            "ring:6",
+            "--backend",
+            "async",
+            "--budgets",
+            "0.4,0.9",
+            "--iters",
+            "30",
+            "--problem",
+            "quad",
+            "--threads",
+            "2",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn sweep_accepts_spec_files() {
+        let spec = ExperimentSpec::new("ring:6")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::Async { threads: 1, max_staleness: 2 })
+            .iterations(30)
+            .record_every(10);
+        let dir = std::env::temp_dir().join("matcha_cli_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.json");
+        spec.save(&path).unwrap();
+        let p = path.to_str().unwrap();
+        run(&sv(&["sweep", "--spec", p, "--budgets", "0.3,0.7", "--threads", "2"])).unwrap();
+    }
+
+    #[test]
+    fn sweep_demotes_multithreaded_spec_backends() {
+        // An actors-backend spec must sweep via the (identical-result)
+        // sequential engine instead of nesting thread pools per point.
+        let spec = ExperimentSpec::new("ring:6")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::EngineActors { threads: 8 })
+            .iterations(20)
+            .record_every(10);
+        let dir = std::env::temp_dir().join("matcha_cli_sweep_demote");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.json");
+        spec.save(&path).unwrap();
+        let p = path.to_str().unwrap();
+        run(&sv(&["sweep", "--spec", p, "--budgets", "0.5", "--threads", "2"])).unwrap();
     }
 
     #[test]

@@ -1,28 +1,34 @@
-//! Worker actors for the engine's parallel execution mode.
+//! Worker shards for the engine's parallel execution mode.
 //!
-//! Each worker is an actor on its own `std::thread`, owning its iterate
-//! and its private gradient-noise RNG stream, and exchanging messages
-//! with the coordinator over `mpsc` channels:
+//! The actor mode multiplexes all logical workers over a **bounded pool**
+//! of OS threads ([`crate::gossip::ShardedPool`] — shared with the
+//! asynchronous gossip runtime). Each shard thread owns the sticky state
+//! (iterate + private gradient-noise RNG stream) of the workers assigned
+//! to it round-robin, and the coordinator drives the pool with
+//! phase-broadcast commands:
 //!
 //! ```text
-//!   coordinator ── Cmd::Step ──▶ worker     (local SGD step)
-//!   coordinator ◀─ Reply::Stepped ── worker (post-step iterate)
-//!   coordinator ── Cmd::Mix ───▶ worker     (peer iterates for its
-//!                                            activated incident links)
-//!   coordinator ◀─ Reply::Mixed ─── worker  (post-mix iterate)
+//!   coordinator ── ShardCmd::Step ──▶ shard   (local SGD step, every
+//!                                              owned worker)
+//!   coordinator ◀─ ShardReply ─────── shard   (post-step iterates)
+//!   coordinator ── ShardCmd::Mix ───▶ shard   (peer iterates for each
+//!                                              owned worker's activated
+//!                                              incident links)
+//!   coordinator ◀─ ShardReply ─────── shard   (post-mix iterates)
 //! ```
 //!
 //! Determinism: a worker's gradient draws depend only on its own stream,
 //! and gossip-message compression randomness is derived per edge
 //! ([`crate::sim::kernel::edge_rng`]), so the result is bit-for-bit
-//! identical to the sequential path regardless of thread scheduling. The
-//! coordinator's per-iteration barrier (collect all `Stepped`, then all
-//! `Mixed`) is what the ISSUE calls deterministic mode.
+//! identical to the sequential path regardless of thread scheduling or
+//! pool size. The coordinator's per-iteration barrier (collect every
+//! shard's `Step` reply, then every `Mix` reply) is what makes this the
+//! engine's deterministic mode. There is no worker cap: 10k workers run
+//! fine on 8 threads.
 
 use crate::rng::Rng;
 use crate::sim::kernel::{edge_diff_message, local_sgd_step};
 use crate::sim::{Compression, Problem};
-use std::sync::mpsc::{Receiver, Sender};
 
 /// One gossip message routed to a worker: the peer's post-step iterate
 /// for one activated, live link. `(u, v)` is the canonical edge (u < v);
@@ -34,99 +40,159 @@ pub(crate) struct GossipMsg {
     pub peer_x: Vec<f64>,
 }
 
-/// Coordinator → worker commands.
-pub(crate) enum Cmd {
-    /// Run one local SGD step at learning rate `lr`. (The iteration
-    /// index is not needed worker-side: gradient draws come from the
-    /// worker's own stream; only `Mix` needs `k`, for the per-edge
-    /// compression RNG.)
+/// Coordinator → shard commands. Each command covers **all** workers the
+/// shard owns and yields exactly one [`ShardReply`].
+pub(crate) enum ShardCmd {
+    /// Run one local SGD step at learning rate `lr` on every owned
+    /// worker. (The iteration index is not needed worker-side: gradient
+    /// draws come from each worker's own stream; only `Mix` needs `k`,
+    /// for the per-edge compression RNG.)
     Step { lr: f64 },
-    /// Apply the gossip mix for iteration `k`. `msgs` lists this worker's
-    /// live activated incident links in global (activation, edge) order —
-    /// possibly empty, in which case the mix is a no-op add of zero
-    /// (matching the sequential kernel exactly).
-    Mix { k: usize, alpha: f64, msgs: Vec<GossipMsg> },
-    /// Shut down the actor.
-    Stop,
+    /// Apply the gossip mix for iteration `k`. `msgs[i]` lists the live
+    /// activated incident links of the shard's `i`-th owned worker in
+    /// global (activation, edge) order — possibly empty, in which case
+    /// that worker's mix is a no-op add of zero (matching the sequential
+    /// kernel exactly).
+    Mix { k: usize, alpha: f64, msgs: Vec<Vec<GossipMsg>> },
 }
 
-/// Worker → coordinator replies (carrying the worker's current iterate so
-/// the coordinator's mirror stays authoritative for routing/metrics).
-pub(crate) enum Reply {
-    Stepped { worker: usize, x: Vec<f64> },
-    Mixed { worker: usize, x: Vec<f64> },
+/// Shard → coordinator reply: the post-phase iterate of every owned
+/// worker, so the coordinator's mirror stays authoritative for routing
+/// and metrics.
+pub(crate) struct ShardReply {
+    pub states: Vec<(usize, Vec<f64>)>,
 }
 
-/// The actor body. Runs until `Cmd::Stop` or a closed channel.
-pub(crate) fn worker_loop<P: Problem + ?Sized>(
-    problem: &P,
-    worker: usize,
-    mut x: Vec<f64>,
-    mut rng: Rng,
+/// Sticky per-worker state owned by a shard thread.
+pub(crate) struct WorkerSlot {
+    pub worker: usize,
+    pub x: Vec<f64>,
+    pub rng: Rng,
+}
+
+/// One shard of the bounded actor pool: a bundle of workers multiplexed
+/// on one OS thread, plus the shared scratch buffers.
+pub(crate) struct ActorShard<'p, P: Problem + ?Sized> {
+    problem: &'p P,
     compression: Option<Compression>,
     seed: u64,
-    rx: Receiver<Cmd>,
-    tx: Sender<Reply>,
+    slots: Vec<WorkerSlot>,
+    grad: Vec<f64>,
+    diff: Vec<f64>,
+    delta: Vec<f64>,
+}
+
+impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
+    pub fn new(
+        problem: &'p P,
+        compression: Option<Compression>,
+        seed: u64,
+        slots: Vec<WorkerSlot>,
+    ) -> Self {
+        let d = problem.dim();
+        ActorShard {
+            problem,
+            compression,
+            seed,
+            slots,
+            grad: vec![0.0; d],
+            diff: vec![0.0; d],
+            delta: vec![0.0; d],
+        }
+    }
+
+    /// Handle one phase command for every owned worker and report the
+    /// resulting iterates.
+    pub fn handle(&mut self, cmd: ShardCmd) -> ShardReply {
+        match cmd {
+            ShardCmd::Step { lr } => {
+                for slot in self.slots.iter_mut() {
+                    local_sgd_step(
+                        self.problem,
+                        slot.worker,
+                        lr,
+                        &mut slot.x,
+                        &mut slot.rng,
+                        &mut self.grad,
+                    );
+                }
+            }
+            ShardCmd::Mix { k, alpha, msgs } => {
+                assert_eq!(msgs.len(), self.slots.len(), "one message list per owned worker");
+                for (slot, worker_msgs) in self.slots.iter_mut().zip(&msgs) {
+                    mix_worker(
+                        slot.worker,
+                        &mut slot.x,
+                        worker_msgs,
+                        k,
+                        alpha,
+                        self.compression.as_ref(),
+                        self.seed,
+                        &mut self.diff,
+                        &mut self.delta,
+                    );
+                }
+            }
+        }
+        ShardReply {
+            states: self.slots.iter().map(|s| (s.worker, s.x.clone())).collect(),
+        }
+    }
+}
+
+/// Apply one worker's gossip mix from its routed peer messages: fold the
+/// canonical edge diffs (x_v − x_u, this worker on the `u` side iff
+/// `worker == msg.u`) into a delta in message order, then apply
+/// `x += α·Δ` — the same accumulation the sequential kernel performs.
+pub(crate) fn mix_worker(
+    worker: usize,
+    x: &mut [f64],
+    msgs: &[GossipMsg],
+    k: usize,
+    alpha: f64,
+    compression: Option<&Compression>,
+    seed: u64,
+    diff: &mut [f64],
+    delta: &mut [f64],
 ) {
     let d = x.len();
-    let mut grad = vec![0.0; d];
-    let mut diff = vec![0.0; d];
-    let mut delta = vec![0.0; d];
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Cmd::Step { lr } => {
-                local_sgd_step(problem, worker, lr, &mut x, &mut rng, &mut grad);
-                if tx.send(Reply::Stepped { worker, x: x.clone() }).is_err() {
-                    return;
-                }
+    delta.iter_mut().for_each(|v| *v = 0.0);
+    for msg in msgs {
+        let on_lower = worker == msg.u;
+        if on_lower {
+            edge_diff_message(
+                x,
+                &msg.peer_x,
+                diff,
+                compression,
+                seed,
+                k,
+                msg.matching,
+                msg.u,
+                msg.v,
+            );
+            for i in 0..d {
+                delta[i] += diff[i];
             }
-            Cmd::Mix { k, alpha, msgs } => {
-                delta.iter_mut().for_each(|v| *v = 0.0);
-                for msg in &msgs {
-                    // Canonical message diff = x_v − x_u; this worker is
-                    // the u side iff worker == msg.u.
-                    let on_lower = worker == msg.u;
-                    if on_lower {
-                        edge_diff_message(
-                            &x,
-                            &msg.peer_x,
-                            &mut diff,
-                            compression.as_ref(),
-                            seed,
-                            k,
-                            msg.matching,
-                            msg.u,
-                            msg.v,
-                        );
-                        for i in 0..d {
-                            delta[i] += diff[i];
-                        }
-                    } else {
-                        edge_diff_message(
-                            &msg.peer_x,
-                            &x,
-                            &mut diff,
-                            compression.as_ref(),
-                            seed,
-                            k,
-                            msg.matching,
-                            msg.u,
-                            msg.v,
-                        );
-                        for i in 0..d {
-                            delta[i] -= diff[i];
-                        }
-                    }
-                }
-                for i in 0..d {
-                    x[i] += alpha * delta[i];
-                }
-                if tx.send(Reply::Mixed { worker, x: x.clone() }).is_err() {
-                    return;
-                }
+        } else {
+            edge_diff_message(
+                &msg.peer_x,
+                x,
+                diff,
+                compression,
+                seed,
+                k,
+                msg.matching,
+                msg.u,
+                msg.v,
+            );
+            for i in 0..d {
+                delta[i] -= diff[i];
             }
-            Cmd::Stop => return,
         }
+    }
+    for i in 0..d {
+        x[i] += alpha * delta[i];
     }
 }
 
@@ -135,61 +201,93 @@ mod tests {
     use super::*;
     use crate::sim::kernel::{init_iterates, worker_streams};
     use crate::sim::QuadraticProblem;
-    use std::sync::mpsc;
 
     #[test]
-    fn actor_step_matches_inprocess_kernel() {
+    fn shard_step_matches_inprocess_kernel() {
         let mut prng = Rng::new(17);
         let problem = QuadraticProblem::generate(3, 6, 1.0, 0.2, &mut prng);
         let seed = 5u64;
         let xs = init_iterates(seed, 3, 6);
         let rngs = worker_streams(seed, 3);
 
-        // Reference: in-process kernel step for worker 1.
-        let mut x_ref = xs[1].clone();
-        let mut rng_ref = rngs[1].clone();
-        let mut grad = vec![0.0; 6];
-        local_sgd_step(&problem, 1, 0.03, &mut x_ref, &mut rng_ref, &mut grad);
+        // Reference: in-process kernel step for workers 1 and 2.
+        let mut expect = Vec::new();
+        for w in [1usize, 2] {
+            let mut x_ref = xs[w].clone();
+            let mut rng_ref = rngs[w].clone();
+            let mut grad = vec![0.0; 6];
+            local_sgd_step(&problem, w, 0.03, &mut x_ref, &mut rng_ref, &mut grad);
+            expect.push((w, x_ref));
+        }
 
-        // Actor path.
-        std::thread::scope(|scope| {
-            let (cmd_tx, cmd_rx) = mpsc::channel();
-            let (reply_tx, reply_rx) = mpsc::channel();
-            let x0 = xs[1].clone();
-            let rng = rngs[1].clone();
-            let p = &problem;
-            scope.spawn(move || worker_loop(p, 1, x0, rng, None, seed, cmd_rx, reply_tx));
-            cmd_tx.send(Cmd::Step { lr: 0.03 }).unwrap();
-            match reply_rx.recv().unwrap() {
-                Reply::Stepped { worker, x } => {
-                    assert_eq!(worker, 1);
-                    assert_eq!(x, x_ref, "actor step must be bit-identical");
-                }
-                _ => panic!("expected Stepped"),
-            }
-            cmd_tx.send(Cmd::Stop).unwrap();
-        });
+        // Shard path: one shard owning workers 1 and 2.
+        let slots = [1usize, 2]
+            .iter()
+            .map(|&w| WorkerSlot { worker: w, x: xs[w].clone(), rng: rngs[w].clone() })
+            .collect();
+        let mut shard = ActorShard::new(&problem, None, seed, slots);
+        let reply = shard.handle(ShardCmd::Step { lr: 0.03 });
+        assert_eq!(reply.states, expect, "shard step must be bit-identical");
     }
 
     #[test]
-    fn actor_mix_empty_message_list_applies_zero_delta() {
+    fn shard_mix_empty_message_list_applies_zero_delta() {
         let mut prng = Rng::new(23);
         let problem = QuadraticProblem::generate(2, 4, 1.0, 0.0, &mut prng);
         let x0 = vec![1.0, -2.0, 3.0, 0.5];
-        std::thread::scope(|scope| {
-            let (cmd_tx, cmd_rx) = mpsc::channel();
-            let (reply_tx, reply_rx) = mpsc::channel();
-            let p = &problem;
-            let x = x0.clone();
-            scope.spawn(move || worker_loop(p, 0, x, Rng::new(1), None, 0, cmd_rx, reply_tx));
-            cmd_tx
-                .send(Cmd::Mix { k: 0, alpha: 0.4, msgs: vec![] })
-                .unwrap();
-            match reply_rx.recv().unwrap() {
-                Reply::Mixed { x, .. } => assert_eq!(x, x0),
-                _ => panic!("expected Mixed"),
+        let slots = vec![WorkerSlot { worker: 0, x: x0.clone(), rng: Rng::new(1) }];
+        let mut shard = ActorShard::new(&problem, None, 0, slots);
+        let reply = shard.handle(ShardCmd::Mix { k: 0, alpha: 0.4, msgs: vec![vec![]] });
+        assert_eq!(reply.states, vec![(0, x0)]);
+    }
+
+    #[test]
+    fn mix_worker_matches_sequential_gossip_kernel() {
+        use crate::sim::kernel::{apply_gossip, GossipScratch};
+        let g = crate::graph::paper_figure1_graph();
+        let d = crate::matching::decompose(&g);
+        let m = 8;
+        let dim = 5;
+        let mut rng = Rng::new(4);
+        let xs: Vec<Vec<f64>> = (0..m)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        let activated: Vec<usize> = (0..d.len()).collect();
+        let (alpha, k, seed) = (0.21, 3, 9);
+
+        // Reference: the full-state simultaneous kernel.
+        let mut reference = xs.clone();
+        let mut scratch = GossipScratch::new(m, dim);
+        apply_gossip(
+            &mut reference,
+            &d.matchings,
+            &activated,
+            alpha,
+            None,
+            None,
+            seed,
+            k,
+            &mut scratch,
+        );
+
+        // Per-worker path: route each worker's incident messages in
+        // global order and fold them with mix_worker.
+        for w in 0..m {
+            let mut msgs = Vec::new();
+            for &j in &activated {
+                for &(u, v) in d.matchings[j].edges() {
+                    if u == w {
+                        msgs.push(GossipMsg { matching: j, u, v, peer_x: xs[v].clone() });
+                    } else if v == w {
+                        msgs.push(GossipMsg { matching: j, u, v, peer_x: xs[u].clone() });
+                    }
+                }
             }
-            cmd_tx.send(Cmd::Stop).unwrap();
-        });
+            let mut x = xs[w].clone();
+            let mut diff = vec![0.0; dim];
+            let mut delta = vec![0.0; dim];
+            mix_worker(w, &mut x, &msgs, k, alpha, None, seed, &mut diff, &mut delta);
+            assert_eq!(x, reference[w], "worker {w} diverged from the kernel");
+        }
     }
 }

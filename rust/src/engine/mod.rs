@@ -14,8 +14,10 @@
 //!   to heterogeneous links ([`HeterogeneousPolicy`]), straggler
 //!   injection ([`StragglerPolicy`]) and link failures
 //!   ([`FlakyLinkPolicy`]).
-//! - [`actor`] — each worker is an actor on a `std::thread`, exchanging
-//!   gossip messages over `mpsc` channels.
+//! - [`actor`] — logical workers multiplexed over a bounded pool of OS
+//!   threads ([`crate::gossip::ShardedPool`], shared with the
+//!   asynchronous gossip runtime); each shard owns its workers' iterates
+//!   and RNG streams and exchanges phase commands over `mpsc` channels.
 //! - [`runner`] — the engine loop: compute phase → link events → gossip
 //!   mix, with a barrier per iteration (**deterministic mode**). Under
 //!   [`AnalyticPolicy`] the trajectory and the virtual clock reproduce
@@ -26,8 +28,12 @@
 //!   budget/topology grid points across cores (the figure harnesses'
 //!   serial loops, parallelized).
 //!
-//! (`no_run`: the example spawns the one-thread-per-worker actor pool;
-//! the same path is executed for real by `rust/tests/engine.rs`.)
+//! For a **barrier-free** execution mode on the same event queue and
+//! delay policies — asynchronous gossip with staleness-aware mixing —
+//! see [`crate::gossip`].
+//!
+//! (`no_run`: the example spawns the bounded actor pool; the same path
+//! is executed for real by `rust/tests/engine.rs`.)
 //!
 //! ```no_run
 //! use matcha::engine::{run_engine_analytic, EngineConfig};
@@ -56,8 +62,5 @@ pub use policy::{
     parse_policy, AnalyticPolicy, DelayPolicy, FlakyLinkPolicy, HeterogeneousPolicy,
     StragglerPolicy,
 };
-pub use runner::{
-    run_engine, run_engine_analytic, run_engine_observed, EngineConfig, EngineResult,
-    MAX_ACTOR_WORKERS,
-};
+pub use runner::{run_engine, run_engine_analytic, run_engine_observed, EngineConfig, EngineResult};
 pub use sweep::{available_threads, sweep_parallel, sweep_parallel_streaming, sweep_serial};

@@ -14,16 +14,18 @@
 //!    timeout but drop out of the mix.
 //!
 //! State updates go through an `Executor`: in-process (sequential
-//! deterministic mode) or the actor pool of [`super::actor`] (one
-//! `std::thread` per worker). Both produce bit-for-bit identical
-//! trajectories, and under [`AnalyticPolicy`] they reproduce
-//! [`crate::sim::run_decentralized`] exactly (see `rust/tests/engine.rs`).
+//! deterministic mode) or the bounded actor pool of [`super::actor`]
+//! (logical workers sharded over [`crate::gossip::ShardedPool`] threads).
+//! Both produce bit-for-bit identical trajectories, and under
+//! [`AnalyticPolicy`] they reproduce [`crate::sim::run_decentralized`]
+//! exactly (see `rust/tests/engine.rs`).
 
-use super::actor::{worker_loop, Cmd, GossipMsg, Reply};
+use super::actor::{ActorShard, GossipMsg, ShardCmd, ShardReply, WorkerSlot};
 use super::event::{EventKind, EventQueue};
 use super::policy::{AnalyticPolicy, DelayPolicy};
 use crate::delay::VirtualClock;
 use crate::experiment::{NoopObserver, Observer};
+use crate::gossip::{shard_of, shard_workers, ShardedPool};
 use crate::graph::Graph;
 use crate::metrics::Recorder;
 use crate::sim::kernel::{
@@ -31,13 +33,12 @@ use crate::sim::kernel::{
 };
 use crate::sim::{mean_iterate, Compression, Problem, RunConfig, RunResult};
 use crate::topology::TopologySampler;
-use std::sync::mpsc;
-use std::sync::mpsc::{Receiver, Sender};
 
 /// Engine configuration: the shared run parameters plus the execution
 /// mode. `threads <= 1` runs the in-process sequential mode; larger
-/// values enable the actor pool (one thread per worker — the knob is a
-/// mode switch, not a pool size).
+/// values enable the bounded actor pool, which multiplexes all logical
+/// workers over `min(threads, workers)` OS threads. The thread count
+/// never changes results — only wall-clock.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub run: RunConfig,
@@ -114,18 +115,18 @@ impl<P: Problem + ?Sized> Executor for SequentialExec<'_, P> {
     }
 }
 
-/// Actor-pool executor: broadcasts commands, gathers replies, and keeps
-/// the coordinator's mirror of the iterates authoritative for routing.
+/// Actor-pool executor: broadcasts phase commands to every shard,
+/// gathers replies, and keeps the coordinator's mirror of the iterates
+/// authoritative for routing.
 struct ActorExec<'a> {
-    cmd_txs: &'a [Sender<Cmd>],
-    reply_rx: &'a Receiver<Reply>,
+    pool: &'a ShardedPool<ShardCmd, ShardReply>,
 }
 
 impl ActorExec<'_> {
     fn collect(&self, xs: &mut [Vec<f64>]) {
-        for _ in 0..xs.len() {
-            match self.reply_rx.recv().expect("worker actor died") {
-                Reply::Stepped { worker, x } | Reply::Mixed { worker, x } => xs[worker] = x,
+        for _ in 0..self.pool.num_shards() {
+            for (worker, x) in self.pool.recv().states {
+                xs[worker] = x;
             }
         }
     }
@@ -133,8 +134,8 @@ impl ActorExec<'_> {
 
 impl Executor for ActorExec<'_> {
     fn step(&mut self, _k: usize, lr: f64, xs: &mut [Vec<f64>]) {
-        for tx in self.cmd_txs {
-            tx.send(Cmd::Step { lr }).expect("worker actor died");
+        for s in 0..self.pool.num_shards() {
+            self.pool.send(s, ShardCmd::Step { lr });
         }
         self.collect(xs);
     }
@@ -161,22 +162,23 @@ impl Executor for ActorExec<'_> {
                 per[v].push(GossipMsg { matching: j, u, v, peer_x: xs[u].clone() });
             }
         }
-        for (tx, msgs) in self.cmd_txs.iter().zip(per.into_iter()) {
-            tx.send(Cmd::Mix { k, alpha, msgs }).expect("worker actor died");
+        // Group per shard, ascending worker order == the shard's slot
+        // order (round-robin assignment).
+        let shards = self.pool.num_shards();
+        let mut shard_msgs: Vec<Vec<Vec<GossipMsg>>> = (0..shards).map(|_| Vec::new()).collect();
+        for (w, msgs) in per.into_iter().enumerate() {
+            shard_msgs[shard_of(w, shards)].push(msgs);
+        }
+        for (s, msgs) in shard_msgs.into_iter().enumerate() {
+            self.pool.send(s, ShardCmd::Mix { k, alpha, msgs });
         }
         self.collect(xs);
     }
 }
 
-/// Actor mode spawns one OS thread per worker; beyond this many workers
-/// the engine falls back to the (identical-result) sequential executor
-/// rather than exhausting OS threads on large graphs. Bounded-pool
-/// multiplexing is a ROADMAP item.
-pub const MAX_ACTOR_WORKERS: usize = 256;
-
-/// Run the engine. Dispatches on `config.threads`:
-/// sequential in-process mode (`<= 1`) or the actor pool. Graphs with
-/// more than [`MAX_ACTOR_WORKERS`] workers always run sequentially.
+/// Run the engine. Dispatches on `config.threads`: sequential in-process
+/// mode (`<= 1`) or the bounded actor pool (`min(threads, workers)` OS
+/// threads, any number of workers).
 pub fn run_engine<P, S>(
     problem: &P,
     matchings: &[Graph],
@@ -209,7 +211,7 @@ where
 {
     let m = problem.num_workers();
     let d = problem.dim();
-    if config.threads <= 1 || m > MAX_ACTOR_WORKERS {
+    if config.threads <= 1 {
         let exec = SequentialExec {
             problem,
             worker_rngs: worker_streams(config.run.seed, m),
@@ -221,27 +223,24 @@ where
         return drive(problem, matchings, sampler, policy, &config.run, exec, observer);
     }
 
+    let threads = config.threads.min(m);
     let xs0 = init_iterates(config.run.seed, m, d);
     let rngs = worker_streams(config.run.seed, m);
     std::thread::scope(|scope| {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(m);
-        for (w, (x0, rng)) in xs0.iter().zip(rngs.iter()).enumerate() {
-            let (tx, rx) = mpsc::channel();
-            cmd_txs.push(tx);
-            let rtx = reply_tx.clone();
-            let x0 = x0.clone();
-            let rng = rng.clone();
-            let comp = config.run.compression.clone();
-            let seed = config.run.seed;
-            scope.spawn(move || worker_loop(problem, w, x0, rng, comp, seed, rx, rtx));
-        }
-        drop(reply_tx);
-        let exec = ActorExec { cmd_txs: &cmd_txs, reply_rx: &reply_rx };
+        let shards: Vec<ActorShard<'_, P>> = (0..threads)
+            .map(|s| {
+                let slots = shard_workers(s, threads, m)
+                    .map(|w| WorkerSlot { worker: w, x: xs0[w].clone(), rng: rngs[w].clone() })
+                    .collect();
+                ActorShard::new(problem, config.run.compression.clone(), config.run.seed, slots)
+            })
+            .collect();
+        let pool = ShardedPool::spawn(scope, shards, |shard: &mut ActorShard<'_, P>, cmd| {
+            shard.handle(cmd)
+        });
+        let exec = ActorExec { pool: &pool };
         let result = drive(problem, matchings, sampler, policy, &config.run, exec, observer);
-        for tx in &cmd_txs {
-            let _ = tx.send(Cmd::Stop);
-        }
+        drop(pool);
         result
     })
 }
@@ -452,6 +451,33 @@ mod tests {
             &d.matchings,
             &mut s2,
             &EngineConfig { run: cfg, threads: 8 },
+        );
+        assert_eq!(par.run.final_mean, seq.run.final_mean);
+        assert_eq!(par.run.total_time, seq.run.total_time);
+    }
+
+    #[test]
+    fn bounded_pool_multiplexes_more_workers_than_threads() {
+        // 300 workers on a 3-thread pool — beyond the old 256-worker
+        // one-thread-per-worker cap — must still match the sequential
+        // executor bit-for-bit.
+        let g = crate::graph::ring(300);
+        let d = decompose(&g);
+        let p = quad(300);
+        let cfg = RunConfig { lr: 0.03, iterations: 8, alpha: 0.2, seed: 2, ..RunConfig::default() };
+        let mut s1 = VanillaSampler::new(d.len());
+        let seq = run_engine_analytic(
+            &p,
+            &d.matchings,
+            &mut s1,
+            &EngineConfig { run: cfg.clone(), threads: 1 },
+        );
+        let mut s2 = VanillaSampler::new(d.len());
+        let par = run_engine_analytic(
+            &p,
+            &d.matchings,
+            &mut s2,
+            &EngineConfig { run: cfg, threads: 3 },
         );
         assert_eq!(par.run.final_mean, seq.run.final_mean);
         assert_eq!(par.run.total_time, seq.run.total_time);

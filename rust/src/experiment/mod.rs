@@ -11,8 +11,10 @@
 //!   description of a full run: graph source, strategy
 //!   (`matcha | vanilla | periodic | single`) and budget, workload
 //!   (`quad | logreg`), delay model and policy (stragglers, heterogeneous
-//!   links, link failures), execution backend (`sim | engine | actors`),
-//!   and run hyperparameters. Build fluently or load from JSON
+//!   links, link failures), execution backend
+//!   (`sim | engine | actors | async` — the last is the barrier-free
+//!   asynchronous gossip runtime of [`crate::gossip`]), and run
+//!   hyperparameters. Build fluently or load from JSON
 //!   (`matcha run --spec exp.json`).
 //! - **Plan** ([`Plan`], [`plan()`]) — the decompose → probabilities → α
 //!   math, exposing matchings, λ₂, α and ρ before anything executes

@@ -13,6 +13,7 @@ use super::observer::{NoopObserver, Observer};
 use super::plan::{plan, Plan};
 use super::spec::{Backend, ExperimentSpec, ProblemSpec};
 use crate::engine::{parse_policy, run_engine_observed, sweep_parallel_streaming, EngineConfig};
+use crate::gossip::{run_async_observed, AsyncConfig, AsyncStats};
 use crate::json::Json;
 use crate::metrics::Recorder;
 use crate::rng::Rng;
@@ -44,6 +45,9 @@ pub struct ExperimentResult {
     pub dropped_links: usize,
     /// Discrete events processed (0 on the sim backend).
     pub events: u64,
+    /// Per-worker staleness / idle-time statistics; `Some` only for the
+    /// async backend.
+    pub async_stats: Option<AsyncStats>,
 }
 
 impl ExperimentResult {
@@ -62,6 +66,13 @@ impl ExperimentResult {
             ("rho", num_or_null(self.rho)),
             ("dropped_links", Json::Num(self.dropped_links as f64)),
             ("events", Json::Num(self.events as f64)),
+            (
+                "mean_staleness",
+                match &self.async_stats {
+                    Some(s) => Json::Num(s.mean_staleness()),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -77,6 +88,7 @@ impl ExperimentResult {
             total_comm_units: r.total_comm_units,
             dropped_links: 0,
             events: 0,
+            async_stats: None,
         }
     }
 
@@ -92,6 +104,23 @@ impl ExperimentResult {
             total_comm_units: r.run.total_comm_units,
             dropped_links: r.dropped_links,
             events: r.events,
+            async_stats: None,
+        }
+    }
+
+    fn from_async(plan: &Plan, r: crate::gossip::AsyncResult) -> ExperimentResult {
+        ExperimentResult {
+            alpha: plan.alpha,
+            rho: plan.rho,
+            lambda2: plan.lambda2,
+            num_matchings: plan.decomposition.len(),
+            metrics: r.run.metrics,
+            final_mean: r.run.final_mean,
+            total_time: r.run.total_time,
+            total_comm_units: r.run.total_comm_units,
+            dropped_links: r.dropped_links,
+            events: r.events,
+            async_stats: Some(r.stats),
         }
     }
 }
@@ -202,6 +231,30 @@ pub fn run_planned(
             };
             ExperimentResult::from_engine(plan, r)
         }
+        Backend::Async { threads, max_staleness } => {
+            let mut policy = parse_policy(&spec.policy, &plan.graph, &cfg)
+                .map_err(|e| format!("policy: {e}"))?;
+            let async_cfg = AsyncConfig { run: cfg, threads, max_staleness };
+            let r = match &problem {
+                BuiltProblem::Quad(p) => run_async_observed(
+                    p,
+                    matchings,
+                    &mut sampler,
+                    policy.as_mut(),
+                    &async_cfg,
+                    observer,
+                ),
+                BuiltProblem::Logreg(p) => run_async_observed(
+                    p,
+                    matchings,
+                    &mut sampler,
+                    policy.as_mut(),
+                    &async_cfg,
+                    observer,
+                ),
+            };
+            ExperimentResult::from_async(plan, r)
+        }
     };
     Ok(result)
 }
@@ -211,6 +264,12 @@ pub fn run_planned(
 /// `observer.on_point` fires on the calling thread **as each point
 /// finishes** (completion order), and the full results come back in
 /// input order.
+///
+/// Per-point execution is kept single-threaded: since thread counts
+/// never change results on any backend, a multi-threaded point backend
+/// (`actors`, or `async` with `threads > 1`) is demoted to its
+/// sequential equivalent instead of nesting a worker pool inside every
+/// fanned-out point.
 pub fn run_sweep(
     base: &ExperimentSpec,
     budgets: &[f64],
@@ -220,6 +279,15 @@ pub fn run_sweep(
     if budgets.is_empty() {
         return Err("sweep: need at least one budget".into());
     }
+    let mut base = base.clone();
+    match base.backend {
+        Backend::EngineActors { .. } => base.backend = Backend::EngineSequential,
+        Backend::Async { threads: t, max_staleness } if t > 1 => {
+            base.backend = Backend::Async { threads: 1, max_staleness };
+        }
+        _ => {}
+    }
+    let base = &base;
     // Validate and plan every grid point up front: errors surface before
     // any thread spawns, and the decompose → probabilities → α work is
     // not repeated inside the workers.
@@ -273,6 +341,52 @@ mod tests {
     }
 
     #[test]
+    fn async_backend_at_staleness_zero_matches_sim_bit_for_bit() {
+        let sim = run(&quick_spec()).unwrap();
+        let spec = quick_spec().backend(Backend::Async { threads: 2, max_staleness: 0 });
+        let asy = run(&spec).unwrap();
+        assert_eq!(sim.final_mean, asy.final_mean);
+        let stats = asy.async_stats.expect("async stats present");
+        assert_eq!(stats.max_staleness(), 0);
+        assert!(asy.events > 0);
+    }
+
+    #[test]
+    fn async_backend_reports_staleness_in_summary() {
+        let spec = quick_spec()
+            .policy("straggler:0:4.0")
+            .backend(Backend::Async { threads: 1, max_staleness: 3 });
+        let res = run(&spec).unwrap();
+        let j = res.summary_json();
+        assert!(j.get("mean_staleness").unwrap().as_f64().is_some());
+        let stats = res.async_stats.expect("stats");
+        assert!(stats.max_staleness() <= 3);
+        assert_eq!(stats.per_worker.len(), 6);
+    }
+
+    #[test]
+    fn async_observer_sees_iterations_and_records() {
+        struct Counting {
+            iterations: usize,
+            records: usize,
+        }
+        impl Observer for Counting {
+            fn on_iteration(&mut self, _k: usize, _time: f64, _comm: f64) {
+                self.iterations += 1;
+            }
+            fn on_record(&mut self, _k: usize, _time: f64, metrics: &Recorder) {
+                self.records += 1;
+                assert!(!metrics.get("loss_vs_iter").is_empty());
+            }
+        }
+        let spec = quick_spec().backend(Backend::Async { threads: 2, max_staleness: 2 });
+        let mut obs = Counting { iterations: 0, records: 0 };
+        run_observed(&spec, &mut obs).unwrap();
+        assert_eq!(obs.iterations, 60);
+        assert_eq!(obs.records, 1 + 60 / 20);
+    }
+
+    #[test]
     fn observer_sees_iterations_and_records() {
         struct Counting {
             iterations: usize,
@@ -318,6 +432,17 @@ mod tests {
         for ((cb, _), expect) in results.iter().zip(&budgets) {
             assert_eq!(cb, expect);
         }
+    }
+
+    #[test]
+    fn sweep_demotes_multithreaded_point_backends() {
+        // Thread counts never change results, so an actors-backend base
+        // sweeps via the sequential engine instead of nesting pools.
+        let base = quick_spec().backend(Backend::EngineActors { threads: 8 });
+        let results = run_sweep(&base, &[0.5], 2, &mut NoopObserver).unwrap();
+        assert_eq!(results.len(), 1);
+        let seq = run(&quick_spec().backend(Backend::EngineSequential)).unwrap();
+        assert_eq!(results[0].1.final_mean, seq.final_mean);
     }
 
     #[test]

@@ -142,8 +142,9 @@ impl ProblemSpec {
 }
 
 /// Which execution path runs the DecenSGD recursion. All backends share
-/// the step/mix kernel (`sim::kernel`) and agree bit-for-bit per seed
-/// under the analytic delay policy.
+/// the step/mix kernel (`sim::kernel`); the barrier backends agree
+/// bit-for-bit per seed under the analytic delay policy, and the async
+/// backend joins them at `max_staleness = 0`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Backend {
     /// The sequential reference simulator with closed-form time
@@ -151,18 +152,25 @@ pub enum Backend {
     SimReference,
     /// The event-driven engine, in-process sequential executor.
     EngineSequential,
-    /// The event-driven engine's actor pool: one worker per
-    /// `std::thread`. `threads` is a mode switch, not a pool size.
+    /// The event-driven engine's bounded actor pool: all workers
+    /// multiplexed over `min(threads, workers)` OS threads.
     EngineActors { threads: usize },
+    /// The barrier-free asynchronous gossip runtime
+    /// ([`crate::gossip::run_async`]): per-worker virtual clocks,
+    /// staleness-aware pairwise mixing bounded by `max_staleness`
+    /// (0 reproduces the synchronous kernel exactly), gradient steps on
+    /// a bounded pool of `threads` OS threads.
+    Async { threads: usize, max_staleness: usize },
 }
 
 impl Backend {
-    /// Short name for logs and JSON (`sim`, `engine`, `actors`).
+    /// Short name for logs and JSON (`sim`, `engine`, `actors`, `async`).
     pub fn name(&self) -> &'static str {
         match self {
             Backend::SimReference => "sim",
             Backend::EngineSequential => "engine",
             Backend::EngineActors { .. } => "actors",
+            Backend::Async { .. } => "async",
         }
     }
 }
@@ -441,6 +449,19 @@ impl ExperimentSpec {
                 ));
             }
         }
+        if let Backend::Async { threads, .. } = self.backend {
+            if threads == 0 {
+                return Err("backend: async needs threads >= 1".into());
+            }
+            if matches!(delay, crate::delay::DelayModel::MaxDegree) {
+                return Err(
+                    "backend: the async runtime needs a link-granular delay model; \
+                     'maxdeg' has no per-link schedule (use delay 'unit' or \
+                     'stochastic:lo:hi')"
+                        .into(),
+                );
+            }
+        }
         // The policy grammar needs the graph and the run config, so
         // validate it with a probe config mirroring what the run builds.
         let probe = crate::sim::RunConfig {
@@ -512,8 +533,15 @@ impl ExperimentSpec {
             }
         };
         let mut backend = vec![("kind", Json::Str(self.backend.name().into()))];
-        if let Backend::EngineActors { threads } = self.backend {
-            backend.push(("threads", Json::Num(threads as f64)));
+        match self.backend {
+            Backend::EngineActors { threads } => {
+                backend.push(("threads", Json::Num(threads as f64)));
+            }
+            Backend::Async { threads, max_staleness } => {
+                backend.push(("threads", Json::Num(threads as f64)));
+                backend.push(("max_staleness", Json::Num(max_staleness as f64)));
+            }
+            _ => {}
         }
         let mut run = vec![
             ("lr", Json::Num(self.lr)),
@@ -793,22 +821,41 @@ fn parse_backend(json: &Json) -> Result<Backend, String> {
             "sim" => Ok(Backend::SimReference),
             "engine" => Ok(Backend::EngineSequential),
             "actors" => Err("backend: 'actors' needs {\"kind\": \"actors\", \"threads\": N}".into()),
+            "async" => Ok(Backend::Async {
+                threads: 1,
+                max_staleness: crate::gossip::DEFAULT_MAX_STALENESS,
+            }),
             other => Err(format!(
-                "backend: unknown kind '{other}' (expected sim | engine | actors)"
+                "backend: unknown kind '{other}' (expected sim | engine | actors | async)"
             )),
         };
     }
     let obj = json.as_object().ok_or("backend: must be a string or an object with 'kind'")?;
-    known_keys(obj, "backend", &["kind", "threads"])?;
     let kind = obj
         .get("kind")
         .and_then(Json::as_str)
         .ok_or("backend: missing string key 'kind'")?;
     match kind {
+        "sim" | "engine" | "actors" => known_keys(obj, "backend", &["kind", "threads"])?,
+        "async" => known_keys(obj, "backend", &["kind", "threads", "max_staleness"])?,
+        _ => {}
+    }
+    match kind {
         "sim" => Ok(Backend::SimReference),
         "engine" => Ok(Backend::EngineSequential),
         "actors" => Ok(Backend::EngineActors { threads: get_usize(obj, "backend", "threads", 2)? }),
-        other => Err(format!("backend: unknown kind '{other}' (expected sim | engine | actors)")),
+        "async" => Ok(Backend::Async {
+            threads: get_usize(obj, "backend", "threads", 1)?,
+            max_staleness: get_usize(
+                obj,
+                "backend",
+                "max_staleness",
+                crate::gossip::DEFAULT_MAX_STALENESS,
+            )?,
+        }),
+        other => Err(format!(
+            "backend: unknown kind '{other}' (expected sim | engine | actors | async)"
+        )),
     }
 }
 
@@ -882,6 +929,42 @@ mod tests {
         assert_eq!(spec.strategy, Strategy::Matcha { budget: 0.5 });
         assert_eq!(spec.backend, Backend::SimReference);
         assert_eq!(spec.policy, "analytic");
+    }
+
+    #[test]
+    fn async_backend_roundtrips_and_validates() {
+        let spec = ExperimentSpec::new("ring:8")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::Async { threads: 4, max_staleness: 7 })
+            .iterations(20)
+            .validated()
+            .unwrap();
+        let text = spec.to_json_string();
+        assert!(text.contains("max_staleness"), "{text}");
+        let back = ExperimentSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+        // Bare string shorthand picks the defaults.
+        let short = ExperimentSpec::parse(r#"{"graph": "fig1", "backend": "async"}"#).unwrap();
+        assert_eq!(
+            short.backend,
+            Backend::Async { threads: 1, max_staleness: crate::gossip::DEFAULT_MAX_STALENESS }
+        );
+    }
+
+    #[test]
+    fn async_backend_rejects_maxdeg_delay_and_zero_threads() {
+        let err = ExperimentSpec::new("fig1")
+            .problem(ProblemSpec::quadratic())
+            .delay("maxdeg")
+            .backend(Backend::Async { threads: 2, max_staleness: 4 })
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("link-granular"), "{err}");
+        let err = ExperimentSpec::new("fig1")
+            .backend(Backend::Async { threads: 0, max_staleness: 4 })
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("threads"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,62 @@
+//! Barrier-free asynchronous gossip runtime with staleness-aware mixing.
+//!
+//! MATCHA's wall-clock win comes from parallelizing communication over
+//! sampled matchings, but the barrier engine ([`crate::engine`]) still
+//! synchronizes every worker once per iteration — the slowest link gates
+//! everyone, exactly the straggler effect asynchronous gossip (AD-PSGD,
+//! Lian et al., 1705.09056) removes. This subsystem executes the same
+//! DecenSGD recursion with **no barrier at all**:
+//!
+//! - [`runtime`] — the barrier-free scheduler: each worker advances
+//!   through compute/gossip events on its own virtual clock (reusing the
+//!   engine's deterministic event queue and [`crate::engine::DelayPolicy`]
+//!   durations), with AD-PSGD-style pairwise averaging over the sampled
+//!   matching, per-edge model-version tracking, a `1 / (1 + τ)` staleness
+//!   damping, and a configurable `max_staleness` bound that degrades
+//!   gracefully to the synchronous kernel at staleness 0 (bit-for-bit
+//!   parity with [`crate::sim::run_decentralized`], property-tested in
+//!   `rust/tests/gossip.rs`).
+//! - [`pool`] — the bounded worker pool: N logical workers multiplexed
+//!   over `threads` OS threads with sticky per-worker state. Shared with
+//!   the barrier engine's actor mode, which no longer spawns one thread
+//!   per worker (and no longer falls back to sequential above 256
+//!   workers).
+//! - [`rounds`] — the apriori activation sequence, flattened to
+//!   per-round edge lists in the global fold order both runtimes share.
+//!
+//! Reachable end-to-end as `backend: "async"` in an
+//! [`crate::experiment::ExperimentSpec`] (JSON:
+//! `{"kind": "async", "threads": T, "max_staleness": S}`), from the CLI
+//! (`matcha engine --backend async`, `matcha run --spec ...`), and in
+//! `benches/async_vs_barrier.rs`, which measures the async speedup over
+//! barrier mode under straggler and flaky-link policies.
+//!
+//! ```
+//! use matcha::engine::AnalyticPolicy;
+//! use matcha::gossip::{run_async, AsyncConfig};
+//! use matcha::graph::paper_figure1_graph;
+//! use matcha::matching::decompose;
+//! use matcha::rng::Rng;
+//! use matcha::sim::{QuadraticProblem, RunConfig};
+//! use matcha::topology::VanillaSampler;
+//!
+//! let d = decompose(&paper_figure1_graph());
+//! let problem = QuadraticProblem::generate(8, 10, 1.0, 0.1, &mut Rng::new(1));
+//! let mut sampler = VanillaSampler::new(d.len());
+//! let run = RunConfig { iterations: 50, alpha: 0.1, ..RunConfig::default() };
+//! let mut policy = AnalyticPolicy::matching_run_config(&run);
+//! let config = AsyncConfig { run, threads: 2, max_staleness: 4 };
+//! let result = run_async(&problem, &d.matchings, &mut sampler, &mut policy, &config);
+//! assert!(result.stats.max_staleness() <= 4);
+//! ```
+
+pub mod pool;
+pub mod rounds;
+pub mod runtime;
+
+pub use pool::{shard_of, shard_slot, shard_workers, ShardedPool};
+pub use rounds::{RoundEdge, RoundPlan};
+pub use runtime::{
+    run_async, run_async_observed, AsyncConfig, AsyncResult, AsyncStats, WorkerStats,
+    DEFAULT_MAX_STALENESS,
+};

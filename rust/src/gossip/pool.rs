@@ -1,0 +1,165 @@
+//! Bounded sharded worker pool: multiplex N logical workers over a fixed
+//! number of OS threads.
+//!
+//! The engine's original actor mode spawned **one thread per worker**,
+//! which forced a sequential fallback above 256 workers. This pool
+//! removes that cap: logical workers are sharded round-robin across
+//! `threads` OS threads (`shard_of`), each shard owning the sticky
+//! per-worker state (iterates, RNG streams) for its workers. Commands for
+//! one worker are always handled by the same shard thread **in send
+//! order**, so per-worker RNG streams advance deterministically and
+//! results are independent of the pool size — the property both users of
+//! the pool (the barrier engine's actor executor and the asynchronous
+//! gossip runtime of [`crate::gossip::runtime`]) rely on for bit-for-bit
+//! reproducibility.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::Scope;
+
+/// Which shard owns logical worker `worker` in a pool of `shards` threads.
+pub fn shard_of(worker: usize, shards: usize) -> usize {
+    worker % shards
+}
+
+/// The slot index of `worker` within its shard's worker list (shards own
+/// workers `s, s + shards, s + 2·shards, ...` in ascending order).
+pub fn shard_slot(worker: usize, shards: usize) -> usize {
+    worker / shards
+}
+
+/// The workers shard `shard` owns out of `m`, in slot order. The single
+/// source of truth for the round-robin assignment: every pool user must
+/// build its per-shard state with this iterator so that
+/// [`shard_of`]/[`shard_slot`] routing stays consistent (bit-for-bit
+/// reproducibility depends on each worker's sticky state — RNG stream,
+/// iterate — living at exactly this slot).
+pub fn shard_workers(shard: usize, shards: usize, m: usize) -> impl Iterator<Item = usize> {
+    (shard..m).step_by(shards)
+}
+
+/// A pool of shard threads, each folding commands into its private state
+/// with a shared handler function. One reply per command; replies arrive
+/// on a single channel in completion order.
+pub struct ShardedPool<C, R> {
+    txs: Vec<Sender<C>>,
+    rx: Receiver<R>,
+}
+
+impl<C: Send, R: Send> ShardedPool<C, R> {
+    /// Spawn one thread per element of `shards` inside `scope`. Each
+    /// thread loops `reply = handler(&mut state, cmd)` until the pool is
+    /// dropped (which closes the command channels).
+    ///
+    /// Dropping the pool before the scope ends is what lets the scope
+    /// join: keep it alive only as long as commands are in flight.
+    pub fn spawn<'scope, 'env, S, F>(
+        scope: &'scope Scope<'scope, 'env>,
+        shards: Vec<S>,
+        handler: F,
+    ) -> Self
+    where
+        S: Send + 'scope,
+        C: 'scope,
+        R: 'scope,
+        F: Fn(&mut S, C) -> R + Send + Clone + 'scope,
+    {
+        let (reply_tx, reply_rx) = channel::<R>();
+        let mut txs = Vec::with_capacity(shards.len());
+        for state in shards {
+            let (tx, rx) = channel::<C>();
+            txs.push(tx);
+            let rtx = reply_tx.clone();
+            let f = handler.clone();
+            scope.spawn(move || {
+                let mut state = state;
+                while let Ok(cmd) = rx.recv() {
+                    if rtx.send(f(&mut state, cmd)).is_err() {
+                        return;
+                    }
+                }
+            });
+        }
+        ShardedPool { txs, rx: reply_rx }
+    }
+
+    /// Send a command to shard `shard`.
+    pub fn send(&self, shard: usize, cmd: C) {
+        self.txs[shard].send(cmd).expect("pool shard thread died");
+    }
+
+    /// Receive the next reply (blocking), in completion order across
+    /// shards.
+    pub fn recv(&self) -> R {
+        self.rx.recv().expect("pool shard thread died")
+    }
+
+    /// Number of shard threads.
+    pub fn num_shards(&self) -> usize {
+        self.txs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_assignment_round_robin() {
+        assert_eq!(shard_of(0, 4), 0);
+        assert_eq!(shard_of(5, 4), 1);
+        assert_eq!(shard_slot(0, 4), 0);
+        assert_eq!(shard_slot(5, 4), 1);
+        assert_eq!(shard_slot(9, 4), 2);
+    }
+
+    #[test]
+    fn pool_routes_commands_to_sticky_state() {
+        // Each shard's state is a counter; commands increment it and
+        // return (shard id, count). Worker stickiness means each shard
+        // sees exactly its own commands, in order.
+        std::thread::scope(|scope| {
+            let shards = vec![(0usize, 0usize), (1usize, 0usize)];
+            let pool = ShardedPool::spawn(scope, shards, |st: &mut (usize, usize), add: usize| {
+                st.1 += add;
+                (st.0, st.1)
+            });
+            pool.send(0, 1);
+            pool.send(1, 10);
+            pool.send(0, 2);
+            pool.send(1, 20);
+            let mut finals = [0usize; 2];
+            for _ in 0..4 {
+                let (shard, count) = pool.recv();
+                finals[shard] = finals[shard].max(count);
+            }
+            assert_eq!(finals, [3, 30]);
+            drop(pool);
+        });
+    }
+
+    #[test]
+    fn pool_handles_many_workers_on_few_threads() {
+        // 300 logical workers multiplexed over 3 shard threads — the
+        // scenario the old one-thread-per-worker actor mode could not run.
+        let workers = 300usize;
+        let threads = 3usize;
+        std::thread::scope(|scope| {
+            let shards: Vec<Vec<usize>> = (0..threads)
+                .map(|s| (s..workers).step_by(threads).collect())
+                .collect();
+            let pool = ShardedPool::spawn(scope, shards, |owned: &mut Vec<usize>, w: usize| {
+                assert!(owned.contains(&w), "worker routed to wrong shard");
+                w * 2
+            });
+            for w in 0..workers {
+                pool.send(shard_of(w, threads), w);
+            }
+            let mut sum = 0usize;
+            for _ in 0..workers {
+                sum += pool.recv();
+            }
+            assert_eq!(sum, workers * (workers - 1));
+            drop(pool);
+        });
+    }
+}

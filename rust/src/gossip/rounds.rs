@@ -1,0 +1,143 @@
+//! Precomputed activation rounds for the asynchronous runtime.
+//!
+//! The barrier engine consumes the [`crate::topology::TopologySampler`]
+//! round-by-round on a single driving thread. The asynchronous runtime
+//! has no such global loop — workers reach a given round at different
+//! times — so the whole activation sequence is materialized up front
+//! (the paper's "apriori schedule" observation makes this free) and every
+//! round's activated edges are flattened into one list in global
+//! **(activation order, edge order)**. That order is load-bearing: it is
+//! the accumulation order of the shared gossip kernel
+//! ([`crate::sim::kernel::apply_gossip`]), and the runtime folds each
+//! worker's per-round mix contributions in exactly this order to stay
+//! bit-for-bit compatible with the synchronous paths at staleness 0.
+
+use crate::graph::Graph;
+use crate::topology::TopologySampler;
+
+/// One activated edge: `(matching, u, v)` with the canonical `u < v`
+/// orientation of the matching storage.
+pub type RoundEdge = (usize, usize, usize);
+
+/// The full activation sequence of a run, flattened to per-round edge
+/// lists.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    /// `rounds[k]` = activated edges of iteration `k` in global
+    /// (activation order, edge order). Empty when the sampler activated
+    /// nothing that round (e.g. P-DecenSGD off-rounds).
+    pub rounds: Vec<Vec<RoundEdge>>,
+    /// Per round: `(worker, incident edge indices)` pairs sorted by
+    /// worker; only workers with at least one incident edge appear.
+    /// Built once in [`RoundPlan::generate`] so [`RoundPlan::incident`]
+    /// costs a binary search instead of a scan of the whole edge list.
+    incidence: Vec<Vec<(usize, Vec<usize>)>>,
+}
+
+impl RoundPlan {
+    /// Materialize `iterations` rounds from the sampler. Consumes the
+    /// sampler's RNG stream exactly as the synchronous loops do (one
+    /// `round(k)` call per iteration, in order), so a given
+    /// `(sampler seed, iterations)` yields the same activation sequence
+    /// on every backend.
+    pub fn generate<S: TopologySampler + ?Sized>(
+        sampler: &mut S,
+        matchings: &[Graph],
+        iterations: usize,
+    ) -> RoundPlan {
+        let mut rounds = Vec::with_capacity(iterations);
+        let mut incidence = Vec::with_capacity(iterations);
+        for k in 0..iterations {
+            let round = sampler.round(k);
+            let mut edges = Vec::new();
+            for &j in &round.activated {
+                for &(u, v) in matchings[j].edges() {
+                    edges.push((j, u, v));
+                }
+            }
+            let mut by_worker: std::collections::BTreeMap<usize, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            for (i, &(_, u, v)) in edges.iter().enumerate() {
+                by_worker.entry(u).or_default().push(i);
+                by_worker.entry(v).or_default().push(i);
+            }
+            rounds.push(edges);
+            incidence.push(by_worker.into_iter().collect());
+        }
+        RoundPlan { rounds, incidence }
+    }
+
+    /// Indices (into `rounds[k]`) of the edges incident to `worker` at
+    /// round `k`, in global order.
+    pub fn incident(&self, k: usize, worker: usize) -> Vec<usize> {
+        let row = &self.incidence[k];
+        match row.binary_search_by_key(&worker, |&(w, _)| w) {
+            Ok(i) => row[i].1.clone(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Number of rounds.
+    pub fn len(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// True when the plan holds no rounds.
+    pub fn is_empty(&self) -> bool {
+        self.rounds.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+    use crate::topology::{MatchaSampler, VanillaSampler};
+
+    #[test]
+    fn vanilla_plan_lists_every_edge_every_round() {
+        let d = decompose(&paper_figure1_graph());
+        let total_edges: usize = d.matchings.iter().map(|m| m.edges().len()).sum();
+        let mut s = VanillaSampler::new(d.len());
+        let plan = RoundPlan::generate(&mut s, &d.matchings, 5);
+        assert_eq!(plan.len(), 5);
+        for k in 0..5 {
+            assert_eq!(plan.rounds[k].len(), total_edges);
+        }
+    }
+
+    #[test]
+    fn plan_matches_sampler_stream() {
+        let d = decompose(&paper_figure1_graph());
+        let probs = vec![0.5; d.len()];
+        let mut s1 = MatchaSampler::new(probs.clone(), 7);
+        let plan = RoundPlan::generate(&mut s1, &d.matchings, 50);
+        let mut s2 = MatchaSampler::new(probs, 7);
+        for k in 0..50 {
+            let round = s2.round(k);
+            let mut expect = Vec::new();
+            for &j in &round.activated {
+                for &(u, v) in d.matchings[j].edges() {
+                    expect.push((j, u, v));
+                }
+            }
+            assert_eq!(plan.rounds[k], expect, "round {k}");
+        }
+    }
+
+    #[test]
+    fn incident_edges_are_in_global_order() {
+        let d = decompose(&paper_figure1_graph());
+        let mut s = VanillaSampler::new(d.len());
+        let plan = RoundPlan::generate(&mut s, &d.matchings, 1);
+        for w in 0..8 {
+            let inc = plan.incident(0, w);
+            assert!(inc.windows(2).all(|p| p[0] < p[1]), "unsorted incidence");
+            for &i in &inc {
+                let (_, u, v) = plan.rounds[0][i];
+                assert!(u == w || v == w);
+            }
+        }
+    }
+}

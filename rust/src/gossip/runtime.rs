@@ -1,0 +1,918 @@
+//! The barrier-free asynchronous gossip runtime.
+//!
+//! The barrier engine ([`crate::engine`]) synchronizes every worker at a
+//! per-iteration barrier: the slowest link gates everyone. This runtime
+//! removes the barrier — each worker advances through its own
+//! compute/gossip events on its **own virtual clock** (reusing the
+//! engine's deterministic event queue and [`DelayPolicy`] durations), in
+//! the spirit of AD-PSGD (Lian et al., 1705.09056):
+//!
+//! - **Compute** overlaps communication: a worker starts its next local
+//!   SGD step while its previous round's exchanges are still in flight.
+//!   Gradients are evaluated at the compute-*start* state (the AD-PSGD
+//!   stale-gradient model); deltas arriving mid-step apply to the live
+//!   iterate.
+//! - **Gossip** is pairwise per activated edge: edge `(u, v)` of round
+//!   `k` is a rendezvous that starts once both endpoints have produced
+//!   their round-`k` post-step iterate and both link ports are free
+//!   (links at one node serialize, node-disjoint links run in parallel —
+//!   the paper's §2 delay model at per-edge granularity, without the
+//!   global barrier).
+//! - **Staleness-aware mixing**: each exchange's model-version drift
+//!   `τ = max(version_u, version_v) − (k + 1)` is tracked per edge and
+//!   the pairwise update is damped to `α / (1 + τ)` — stale exchanges
+//!   pull less. A configurable `max_staleness` bound gates how far a
+//!   worker may run ahead of its own unapplied rounds; at
+//!   `max_staleness = 0` every worker waits for its round's exchanges
+//!   before stepping again, `τ ≡ 0`, and the runtime **degrades to the
+//!   synchronous kernel**: trajectories are bit-for-bit equal to
+//!   [`crate::sim::run_decentralized`] per seed (property-tested in
+//!   `rust/tests/gossip.rs`).
+//! - **Bounded worker pool**: `threads` OS threads multiplex all logical
+//!   workers ([`ShardedPool`]); per-worker RNG streams make the result
+//!   independent of the pool size.
+//!
+//! Determinism: the event queue's `(time, seq)` order, the per-worker
+//! gradient streams, the per-edge compression RNG and the fixed global
+//! fold order of each round's contributions make the whole simulation a
+//! pure function of the spec — rerunning a seed reproduces trajectories,
+//! timings and staleness statistics exactly, at any thread count.
+
+use super::pool::{shard_of, shard_slot, shard_workers, ShardedPool};
+use super::rounds::RoundPlan;
+use crate::delay::DelayModel;
+use crate::engine::{DelayPolicy, EventKind, EventQueue};
+use crate::experiment::{NoopObserver, Observer};
+use crate::metrics::Recorder;
+use crate::rng::Rng;
+use crate::sim::kernel::{edge_diff_message, init_iterates, record_metrics, worker_streams};
+use crate::sim::{mean_iterate, Problem, RunConfig, RunResult};
+use crate::topology::TopologySampler;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Default version-drift bound used by spec defaults and the CLI.
+pub const DEFAULT_MAX_STALENESS: usize = 4;
+
+/// Configuration of an asynchronous run: the shared run parameters, the
+/// bounded pool size, and the staleness bound.
+#[derive(Clone, Debug)]
+pub struct AsyncConfig {
+    pub run: RunConfig,
+    /// OS threads multiplexing the logical workers (clamped to the
+    /// worker count; `<= 1` computes in-process). Changes wall-clock
+    /// only, never results.
+    pub threads: usize,
+    /// How many rounds a worker may run ahead of its oldest unapplied
+    /// gossip round. `0` reproduces the synchronous kernel exactly.
+    pub max_staleness: usize,
+}
+
+impl Default for AsyncConfig {
+    fn default() -> Self {
+        AsyncConfig {
+            run: RunConfig::default(),
+            threads: 1,
+            max_staleness: DEFAULT_MAX_STALENESS,
+        }
+    }
+}
+
+/// Per-worker observability counters of an asynchronous run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerStats {
+    /// Edge exchanges this worker participated in (failed ones included).
+    pub exchanges: usize,
+    /// Sum of per-exchange staleness values (for the mean).
+    pub staleness_sum: usize,
+    /// Largest per-exchange staleness observed.
+    pub max_staleness: usize,
+    /// Virtual time spent blocked on the staleness gate.
+    pub idle_time: f64,
+    /// Virtual time at which this worker finished its last round.
+    pub finish_time: f64,
+}
+
+impl WorkerStats {
+    /// Mean staleness over this worker's exchanges (0 when it had none).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.exchanges == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.exchanges as f64
+        }
+    }
+}
+
+/// Staleness / idle-time statistics of an asynchronous run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AsyncStats {
+    pub per_worker: Vec<WorkerStats>,
+}
+
+impl AsyncStats {
+    /// Mean staleness over every exchange of the run.
+    pub fn mean_staleness(&self) -> f64 {
+        let (sum, n) = self
+            .per_worker
+            .iter()
+            .fold((0usize, 0usize), |(s, n), w| (s + w.staleness_sum, n + w.exchanges));
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+
+    /// Largest staleness observed on any exchange.
+    pub fn max_staleness(&self) -> usize {
+        self.per_worker.iter().map(|w| w.max_staleness).max().unwrap_or(0)
+    }
+
+    /// Total virtual idle time across workers (staleness-gate waits).
+    pub fn total_idle(&self) -> f64 {
+        self.per_worker.iter().map(|w| w.idle_time).sum()
+    }
+
+    /// Total exchanges across workers (each edge counts once per
+    /// endpoint).
+    pub fn total_exchanges(&self) -> usize {
+        self.per_worker.iter().map(|w| w.exchanges).sum()
+    }
+}
+
+/// Outcome of an asynchronous run: the standard [`RunResult`] plus
+/// engine-level counters and the staleness statistics.
+///
+/// Metric semantics vs the barrier backends: `run.total_time` is the
+/// same quantity (virtual time until the last worker finishes) and is
+/// directly comparable. `run.total_comm_units` is **not**: the barrier
+/// engine charges the per-iteration critical path (max link time per
+/// matching, matchings serialized), while the barrier-free runtime has
+/// no global critical path and instead accumulates every link's busy
+/// time — an aggregate-bandwidth figure that upper-bounds any
+/// serialization of the same exchanges.
+pub struct AsyncResult {
+    pub run: RunResult,
+    /// Links dropped by failure injection over the whole run.
+    pub dropped_links: usize,
+    /// Discrete events processed by the queue.
+    pub events: u64,
+    pub stats: AsyncStats,
+}
+
+// ---------------------------------------------------------------------
+// Gradient execution: inline or on the bounded pool.
+// ---------------------------------------------------------------------
+
+/// Where local gradient steps execute. Gradients are evaluated from the
+/// compute-start iterate with the worker's private RNG stream, so the
+/// result is identical whichever implementation runs it.
+trait GradSource {
+    fn dispatch(&mut self, worker: usize, round: usize, x: &[f64]);
+    fn harvest(&mut self, worker: usize, round: usize) -> Vec<f64>;
+}
+
+struct InlineGrad<'p, P: Problem + ?Sized> {
+    problem: &'p P,
+    rngs: Vec<Rng>,
+    ready: Vec<Option<(usize, Vec<f64>)>>,
+}
+
+impl<P: Problem + ?Sized> GradSource for InlineGrad<'_, P> {
+    fn dispatch(&mut self, worker: usize, round: usize, x: &[f64]) {
+        let mut g = vec![0.0; x.len()];
+        self.problem.stoch_grad(worker, x, &mut self.rngs[worker], &mut g);
+        self.ready[worker] = Some((round, g));
+    }
+
+    fn harvest(&mut self, worker: usize, round: usize) -> Vec<f64> {
+        let (r, g) = self.ready[worker].take().expect("gradient not dispatched");
+        assert_eq!(r, round, "gradient round mismatch");
+        g
+    }
+}
+
+struct GradCmd {
+    worker: usize,
+    round: usize,
+    x: Vec<f64>,
+}
+
+struct GradReply {
+    worker: usize,
+    round: usize,
+    grad: Vec<f64>,
+}
+
+struct GradShard<'p, P: Problem + ?Sized> {
+    problem: &'p P,
+    shards: usize,
+    /// RNG streams of the workers this shard owns, in slot order.
+    rngs: Vec<Rng>,
+}
+
+impl<P: Problem + ?Sized> GradShard<'_, P> {
+    fn handle(&mut self, cmd: GradCmd) -> GradReply {
+        let slot = shard_slot(cmd.worker, self.shards);
+        let mut g = vec![0.0; cmd.x.len()];
+        self.problem.stoch_grad(cmd.worker, &cmd.x, &mut self.rngs[slot], &mut g);
+        GradReply { worker: cmd.worker, round: cmd.round, grad: g }
+    }
+}
+
+struct PoolGrad<'a> {
+    pool: &'a ShardedPool<GradCmd, GradReply>,
+    shards: usize,
+    stash: BTreeMap<(usize, usize), Vec<f64>>,
+}
+
+impl GradSource for PoolGrad<'_> {
+    fn dispatch(&mut self, worker: usize, round: usize, x: &[f64]) {
+        self.pool
+            .send(shard_of(worker, self.shards), GradCmd { worker, round, x: x.to_vec() });
+    }
+
+    fn harvest(&mut self, worker: usize, round: usize) -> Vec<f64> {
+        loop {
+            if let Some(g) = self.stash.remove(&(worker, round)) {
+                return g;
+            }
+            let reply = self.pool.recv();
+            self.stash.insert((reply.worker, reply.round), reply.grad);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The discrete-event coordinator.
+// ---------------------------------------------------------------------
+
+/// One arrived-but-unapplied round of a worker: the post-step snapshot
+/// the exchanges read from, and the per-edge mix contributions collected
+/// until every incident edge completes.
+struct RoundMix {
+    /// Post-step, pre-mix iterate of this worker at this round.
+    snapshot: Vec<f64>,
+    /// Virtual time the snapshot was produced (exchange lower bound).
+    ready: f64,
+    /// This worker's incident edge indices into the round's global edge
+    /// list, ascending.
+    incident: Vec<usize>,
+    /// Signed, staleness-damped diff per incident edge, filled as links
+    /// complete; folded in `incident` order at application so the fold
+    /// matches the synchronous kernel regardless of completion order.
+    slots: Vec<Option<Vec<f64>>>,
+    remaining: usize,
+}
+
+struct Worker {
+    x: Vec<f64>,
+    lr: f64,
+    /// Next round this worker will compute.
+    next_round: usize,
+    /// Completed compute steps (the model version).
+    ver: usize,
+    /// First round whose mix is not yet applied (rounds `< through` are
+    /// fully absorbed).
+    through: usize,
+    computing: bool,
+    /// When this worker's link port is next free (its exchanges
+    /// serialize; they overlap with its own compute).
+    port_free: f64,
+    blocked_since: Option<f64>,
+    /// Unfinished exchanges as `(round, edge index)`, in global order.
+    pending: VecDeque<(usize, usize)>,
+    /// Arrived, unapplied rounds.
+    open: BTreeMap<usize, RoundMix>,
+    exchanges: usize,
+    staleness_sum: usize,
+    staleness_max: usize,
+    idle: f64,
+    finish: f64,
+}
+
+impl Worker {
+    fn new(x: Vec<f64>, lr: f64) -> Worker {
+        Worker {
+            x,
+            lr,
+            next_round: 0,
+            ver: 0,
+            through: 0,
+            computing: false,
+            port_free: 0.0,
+            blocked_since: None,
+            pending: VecDeque::new(),
+            open: BTreeMap::new(),
+            exchanges: 0,
+            staleness_sum: 0,
+            staleness_max: 0,
+            idle: 0.0,
+            finish: 0.0,
+        }
+    }
+}
+
+struct Driver<'a, P: Problem + ?Sized> {
+    problem: &'a P,
+    plan: &'a RoundPlan,
+    policy: &'a mut dyn DelayPolicy,
+    cfg: &'a RunConfig,
+    max_staleness: usize,
+    iterations: usize,
+    m: usize,
+    /// Compression time factor applied to every link duration (event
+    /// timestamps are authoritative here, unlike the barrier engine).
+    comm_scale: f64,
+    workers: Vec<Worker>,
+    queue: EventQueue,
+    metrics: Recorder,
+    /// Per record-round: each worker's iterate captured when its
+    /// `through` first passed that round.
+    record_snaps: BTreeMap<usize, Vec<Option<Vec<f64>>>>,
+    /// Rounds fully applied by every worker (drives `on_iteration`).
+    global_through: usize,
+    total_comm: f64,
+    dropped: usize,
+    max_time: f64,
+    diff: Vec<f64>,
+    delta: Vec<f64>,
+}
+
+impl<P: Problem + ?Sized> Driver<'_, P> {
+    fn is_record_round(&self, r: usize) -> bool {
+        (r + 1) % self.cfg.record_every == 0 || r + 1 == self.iterations
+    }
+
+    /// Start worker `w`'s next compute step if it is free, has rounds
+    /// left, and the staleness gate allows it.
+    fn start_compute(&mut self, w: usize, now: f64, grads: &mut dyn GradSource) {
+        let (r, gate_ok) = {
+            let wk = &self.workers[w];
+            if wk.computing || wk.next_round >= self.iterations {
+                return;
+            }
+            let r = wk.next_round;
+            let ok = match wk.open.keys().next() {
+                Some(&oldest) => r <= oldest + self.max_staleness,
+                None => true,
+            };
+            (r, ok)
+        };
+        if !gate_ok {
+            if self.workers[w].blocked_since.is_none() {
+                self.workers[w].blocked_since = Some(now);
+            }
+            return;
+        }
+        if let Some(t0) = self.workers[w].blocked_since.take() {
+            self.workers[w].idle += (now - t0).max(0.0);
+        }
+        let ct = self.policy.compute_time(w, r);
+        grads.dispatch(w, r, &self.workers[w].x);
+        self.workers[w].computing = true;
+        self.queue.schedule(now + ct, EventKind::ComputeDone { worker: w, k: r });
+    }
+
+    fn on_compute_done(
+        &mut self,
+        w: usize,
+        r: usize,
+        t: f64,
+        grads: &mut dyn GradSource,
+        observer: &mut dyn Observer,
+    ) {
+        let plan = self.plan;
+        let g = grads.harvest(w, r);
+        {
+            let wk = &mut self.workers[w];
+            wk.computing = false;
+            wk.ver = r + 1;
+            let lr = wk.lr;
+            for (xi, &gi) in wk.x.iter_mut().zip(&g) {
+                *xi -= lr * gi;
+            }
+            if (r + 1) % self.cfg.lr_decay_every == 0 {
+                wk.lr *= self.cfg.lr_decay;
+            }
+            wk.next_round = r + 1;
+        }
+        let incident = plan.incident(r, w);
+        let round_active = !plan.rounds[r].is_empty();
+        if incident.is_empty() {
+            if round_active {
+                // The synchronous kernel adds `α · 0` to non-incident
+                // workers of an active round; replay that exactly.
+                let alpha = self.cfg.alpha;
+                for xi in self.workers[w].x.iter_mut() {
+                    *xi += alpha * 0.0;
+                }
+            }
+            self.after_round_applied(w, t, observer);
+        } else {
+            let n = incident.len();
+            let snapshot = self.workers[w].x.clone();
+            {
+                let wk = &mut self.workers[w];
+                for &idx in &incident {
+                    wk.pending.push_back((r, idx));
+                }
+                wk.open.insert(
+                    r,
+                    RoundMix { snapshot, ready: t, incident, slots: vec![None; n], remaining: n },
+                );
+            }
+            self.try_launch(w);
+        }
+        self.start_compute(w, t, grads);
+    }
+
+    /// Launch every rendezvous that just became enabled, cascading: an
+    /// edge starts when it heads both endpoints' pending queues and both
+    /// round snapshots exist. Ports serialize a worker's own exchanges;
+    /// the global `(round, edge)` order of the queues makes the cascade
+    /// deadlock-free.
+    fn try_launch(&mut self, w0: usize) {
+        let plan = self.plan;
+        let mut stack = vec![w0];
+        while let Some(a) = stack.pop() {
+            loop {
+                let Some(&(k, idx)) = self.workers[a].pending.front() else { break };
+                let (j, u, v) = plan.rounds[k][idx];
+                let peer = if a == u { v } else { u };
+                if !self.workers[peer].open.contains_key(&k) {
+                    break;
+                }
+                if self.workers[peer].pending.front() != Some(&(k, idx)) {
+                    break;
+                }
+                self.workers[a].pending.pop_front();
+                self.workers[peer].pending.pop_front();
+                let start = self.workers[a]
+                    .port_free
+                    .max(self.workers[peer].port_free)
+                    .max(self.workers[a].open[&k].ready)
+                    .max(self.workers[peer].open[&k].ready);
+                let failed = self.policy.link_fails(u, v, k);
+                let lt = self.policy.link_time(j, u, v, k) * self.comm_scale;
+                let done = start + lt;
+                self.workers[a].port_free = done;
+                self.workers[peer].port_free = done;
+                self.total_comm += lt;
+                self.queue
+                    .schedule(done, EventKind::LinkDone { matching: j, edge: (u, v), k, failed });
+                stack.push(peer);
+            }
+        }
+    }
+
+    fn on_link_done(
+        &mut self,
+        j: usize,
+        (u, v): (usize, usize),
+        k: usize,
+        failed: bool,
+        t: f64,
+        grads: &mut dyn GradSource,
+        observer: &mut dyn Observer,
+    ) {
+        if failed {
+            self.dropped += 1;
+        }
+        // Per-edge model-version drift: how many steps past round k the
+        // faster endpoint already is. Bounded by `max_staleness` via the
+        // compute gate.
+        let tau = self.workers[u].ver.max(self.workers[v].ver).saturating_sub(k + 1);
+        for w in [u, v] {
+            let wk = &mut self.workers[w];
+            wk.exchanges += 1;
+            wk.staleness_sum += tau;
+            wk.staleness_max = wk.staleness_max.max(tau);
+        }
+        if !failed {
+            let mut diff = std::mem::take(&mut self.diff);
+            {
+                let su = &self.workers[u].open[&k].snapshot;
+                let sv = &self.workers[v].open[&k].snapshot;
+                edge_diff_message(
+                    su,
+                    sv,
+                    &mut diff,
+                    self.cfg.compression.as_ref(),
+                    self.cfg.seed,
+                    k,
+                    j,
+                    u,
+                    v,
+                );
+            }
+            // Staleness-aware pairwise rule: damp the exchange by
+            // 1 / (1 + τ). τ = 0 leaves the synchronous update intact
+            // (±1.0 · diff is bit-exact).
+            let damp = 1.0 / (1.0 + tau as f64);
+            let plan = self.plan;
+            for (w, sign) in [(u, 1.0), (v, -1.0)] {
+                let rm = self.workers[w].open.get_mut(&k).expect("round open");
+                let pos = rm
+                    .incident
+                    .iter()
+                    .position(|&e| plan.rounds[k][e] == (j, u, v))
+                    .expect("edge incident to endpoint");
+                rm.slots[pos] = Some(diff.iter().map(|&d| sign * damp * d).collect());
+            }
+            self.diff = diff;
+        }
+        for w in [u, v] {
+            let complete = {
+                let rm = self.workers[w].open.get_mut(&k).expect("round open");
+                rm.remaining -= 1;
+                rm.remaining == 0
+            };
+            if complete {
+                self.apply_round(w, k, t, observer);
+                self.start_compute(w, t, grads);
+            }
+        }
+    }
+
+    /// All of `w`'s round-`k` exchanges completed: fold the collected
+    /// contributions in global edge order and apply the mix to the live
+    /// iterate (which may already include later compute steps — the
+    /// AD-PSGD delayed update).
+    fn apply_round(&mut self, w: usize, k: usize, t: f64, observer: &mut dyn Observer) {
+        let rm = self.workers[w].open.remove(&k).expect("round open");
+        let mut delta = std::mem::take(&mut self.delta);
+        delta.iter_mut().for_each(|v| *v = 0.0);
+        for c in rm.slots.iter().flatten() {
+            for (di, &ci) in delta.iter_mut().zip(c) {
+                *di += ci;
+            }
+        }
+        let alpha = self.cfg.alpha;
+        for (xi, &di) in self.workers[w].x.iter_mut().zip(&delta) {
+            *xi += alpha * di;
+        }
+        self.delta = delta;
+        self.after_round_applied(w, t, observer);
+    }
+
+    /// Advance `through`, capture record snapshots, and fire the
+    /// streaming callbacks for rounds that just became globally applied.
+    fn after_round_applied(&mut self, w: usize, t: f64, observer: &mut dyn Observer) {
+        let new_through = {
+            let wk = &self.workers[w];
+            wk.open.keys().next().copied().unwrap_or(wk.next_round)
+        };
+        let old = self.workers[w].through;
+        if new_through <= old {
+            return;
+        }
+        self.workers[w].through = new_through;
+        for r in old..new_through {
+            if self.is_record_round(r) {
+                let x = self.workers[w].x.clone();
+                let m = self.m;
+                let entry = self.record_snaps.entry(r).or_insert_with(|| vec![None; m]);
+                entry[w] = Some(x);
+                if entry.iter().all(Option::is_some) {
+                    let snap = self.record_snaps.remove(&r).expect("record entry");
+                    let xs: Vec<Vec<f64>> =
+                        snap.into_iter().map(|s| s.expect("snapshot")).collect();
+                    record_metrics(self.problem, r + 1, t, self.total_comm, &xs, &mut self.metrics);
+                    observer.on_record(r + 1, t, &self.metrics);
+                }
+            }
+        }
+        let new_global = self.workers.iter().map(|wk| wk.through).min().unwrap_or(0);
+        while self.global_through < new_global {
+            self.global_through += 1;
+            observer.on_iteration(self.global_through, t, self.total_comm);
+        }
+        if self.workers[w].through == self.iterations {
+            self.workers[w].finish = t;
+        }
+    }
+}
+
+fn drive_async<P: Problem + ?Sized>(
+    problem: &P,
+    plan: &RoundPlan,
+    policy: &mut dyn DelayPolicy,
+    config: &AsyncConfig,
+    grads: &mut dyn GradSource,
+    observer: &mut dyn Observer,
+) -> AsyncResult {
+    let cfg = &config.run;
+    assert!(
+        !matches!(cfg.delay, DelayModel::MaxDegree),
+        "the async runtime needs a link-granular delay model (unit or stochastic); \
+         maxdeg has no per-link schedule"
+    );
+    let m = problem.num_workers();
+    let d = problem.dim();
+    let xs0 = init_iterates(cfg.seed, m, d);
+    let mut metrics = Recorder::new();
+    record_metrics(problem, 0, 0.0, 0.0, &xs0, &mut metrics);
+    observer.on_record(0, 0.0, &metrics);
+
+    let comm_scale = match &cfg.compression {
+        Some(c) => c.time_factor(cfg.latency_floor),
+        None => 1.0,
+    };
+    let mut driver = Driver {
+        problem,
+        plan,
+        policy,
+        cfg,
+        max_staleness: config.max_staleness,
+        iterations: cfg.iterations,
+        m,
+        comm_scale,
+        workers: xs0.into_iter().map(|x| Worker::new(x, cfg.lr)).collect(),
+        queue: EventQueue::new(),
+        metrics,
+        record_snaps: BTreeMap::new(),
+        global_through: 0,
+        total_comm: 0.0,
+        dropped: 0,
+        max_time: 0.0,
+        diff: vec![0.0; d],
+        delta: vec![0.0; d],
+    };
+
+    for w in 0..m {
+        driver.start_compute(w, 0.0, grads);
+    }
+    loop {
+        let Some(ev) = driver.queue.pop() else { break };
+        driver.max_time = driver.max_time.max(ev.time);
+        match ev.kind {
+            EventKind::ComputeDone { worker, k } => {
+                driver.on_compute_done(worker, k, ev.time, grads, observer)
+            }
+            EventKind::LinkDone { matching, edge, k, failed } => {
+                driver.on_link_done(matching, edge, k, failed, ev.time, grads, observer)
+            }
+        }
+    }
+    for (w, wk) in driver.workers.iter().enumerate() {
+        assert!(
+            wk.through == driver.iterations
+                && !wk.computing
+                && wk.open.is_empty()
+                && wk.pending.is_empty(),
+            "async runtime stalled: worker {w} stopped at round {}/{}",
+            wk.through,
+            driver.iterations
+        );
+    }
+
+    let xs: Vec<Vec<f64>> = driver.workers.iter().map(|wk| wk.x.clone()).collect();
+    let stats = AsyncStats {
+        per_worker: driver
+            .workers
+            .iter()
+            .map(|wk| WorkerStats {
+                exchanges: wk.exchanges,
+                staleness_sum: wk.staleness_sum,
+                max_staleness: wk.staleness_max,
+                idle_time: wk.idle,
+                finish_time: wk.finish,
+            })
+            .collect(),
+    };
+    AsyncResult {
+        run: RunResult {
+            final_mean: mean_iterate(&xs),
+            total_time: driver.max_time,
+            total_comm_units: driver.total_comm,
+            metrics: driver.metrics,
+        },
+        dropped_links: driver.dropped,
+        events: driver.queue.processed(),
+        stats,
+    }
+}
+
+/// Run the asynchronous gossip runtime. Equivalent to
+/// [`run_async_observed`] with a no-op observer.
+pub fn run_async<P, S>(
+    problem: &P,
+    matchings: &[crate::graph::Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &AsyncConfig,
+) -> AsyncResult
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
+    run_async_observed(problem, matchings, sampler, policy, config, &mut NoopObserver)
+}
+
+/// [`run_async`] with streaming observation: `observer.on_iteration`
+/// fires as each round becomes globally applied, `observer.on_record` at
+/// each metrics record (captured per worker as its own clock passes the
+/// record round). All callbacks run on the driving thread.
+pub fn run_async_observed<P, S>(
+    problem: &P,
+    matchings: &[crate::graph::Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &AsyncConfig,
+    observer: &mut dyn Observer,
+) -> AsyncResult
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
+    let m = problem.num_workers();
+    let plan = RoundPlan::generate(sampler, matchings, config.run.iterations);
+    let threads = config.threads.min(m);
+    if threads <= 1 {
+        let mut grads = InlineGrad {
+            problem,
+            rngs: worker_streams(config.run.seed, m),
+            ready: (0..m).map(|_| None).collect(),
+        };
+        drive_async(problem, &plan, policy, config, &mut grads, observer)
+    } else {
+        std::thread::scope(|scope| {
+            let all_rngs = worker_streams(config.run.seed, m);
+            let shards: Vec<GradShard<'_, P>> = (0..threads)
+                .map(|s| GradShard {
+                    problem,
+                    shards: threads,
+                    rngs: shard_workers(s, threads, m).map(|w| all_rngs[w].clone()).collect(),
+                })
+                .collect();
+            let pool =
+                ShardedPool::spawn(scope, shards, |st: &mut GradShard<'_, P>, c: GradCmd| {
+                    st.handle(c)
+                });
+            let mut grads = PoolGrad { pool: &pool, shards: threads, stash: BTreeMap::new() };
+            let result = drive_async(problem, &plan, policy, config, &mut grads, observer);
+            drop(grads);
+            drop(pool);
+            result
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::optimize_activation_probabilities;
+    use crate::engine::AnalyticPolicy;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+    use crate::mixing::optimize_alpha;
+    use crate::sim::{run_decentralized, QuadraticProblem};
+    use crate::topology::{MatchaSampler, VanillaSampler};
+
+    fn quad(m: usize) -> QuadraticProblem {
+        let mut rng = Rng::new(99);
+        QuadraticProblem::generate(m, 10, 1.0, 0.1, &mut rng)
+    }
+
+    fn cfg(iterations: usize, alpha: f64, seed: u64) -> RunConfig {
+        RunConfig { lr: 0.02, iterations, alpha, seed, ..RunConfig::default() }
+    }
+
+    #[test]
+    fn staleness_zero_matches_sim_bit_for_bit() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let probs = optimize_activation_probabilities(&d, 0.5);
+        let mix = optimize_alpha(&d, &probs.probabilities);
+        let p = quad(8);
+        let run_cfg = cfg(200, mix.alpha, 12);
+
+        let mut s1 = MatchaSampler::new(probs.probabilities.clone(), 4);
+        let reference = run_decentralized(&p, &d.matchings, &mut s1, &run_cfg);
+
+        let mut s2 = MatchaSampler::new(probs.probabilities.clone(), 4);
+        let mut policy = AnalyticPolicy::matching_run_config(&run_cfg);
+        let async_cfg = AsyncConfig { run: run_cfg, threads: 1, max_staleness: 0 };
+        let res = run_async(&p, &d.matchings, &mut s2, &mut policy, &async_cfg);
+
+        assert_eq!(res.run.final_mean, reference.final_mean);
+        let a = res.run.metrics.get("loss_vs_iter");
+        let b = reference.metrics.get("loss_vs_iter");
+        assert_eq!(a.len(), b.len());
+        for (pa, pb) in a.iter().zip(b) {
+            assert_eq!(pa.x, pb.x);
+            assert_eq!(pa.y, pb.y);
+        }
+        assert_eq!(res.stats.max_staleness(), 0);
+        assert!(res.events > 0);
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let p = quad(8);
+        for staleness in [0usize, 3] {
+            let run = |threads: usize| {
+                let mut sampler = VanillaSampler::new(d.len());
+                let run_cfg = cfg(120, 0.12, 7);
+                let mut policy = AnalyticPolicy::matching_run_config(&run_cfg);
+                let async_cfg = AsyncConfig { run: run_cfg, threads, max_staleness: staleness };
+                run_async(&p, &d.matchings, &mut sampler, &mut policy, &async_cfg)
+            };
+            let a = run(1);
+            let b = run(4);
+            assert_eq!(a.run.final_mean, b.run.final_mean, "staleness {staleness}");
+            assert_eq!(a.run.total_time, b.run.total_time, "staleness {staleness}");
+            assert_eq!(a.stats, b.stats, "staleness {staleness}");
+        }
+    }
+
+    #[test]
+    fn staleness_respects_the_configured_bound() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let p = quad(8);
+        for bound in [0usize, 1, 2, 5] {
+            let mut sampler = VanillaSampler::new(d.len());
+            let run_cfg = cfg(150, 0.1, 3);
+            let mut policy = crate::engine::StragglerPolicy::new(
+                AnalyticPolicy::matching_run_config(&run_cfg),
+                vec![2],
+                5.0,
+            );
+            let async_cfg = AsyncConfig { run: run_cfg, threads: 1, max_staleness: bound };
+            let res = run_async(&p, &d.matchings, &mut sampler, &mut policy, &async_cfg);
+            assert!(
+                res.stats.max_staleness() <= bound,
+                "bound {bound} violated: {}",
+                res.stats.max_staleness()
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_run_is_faster_without_the_barrier() {
+        // Barrier mode pays (straggler compute + full comm) per
+        // iteration; async overlaps the straggler's compute with its
+        // (shorter) communication, so virtual time strictly drops.
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let p = quad(8);
+        let iters = 120;
+        let run_cfg = cfg(iters, 0.1, 5);
+
+        let mut s1 = VanillaSampler::new(d.len());
+        let mut barrier_policy = crate::engine::StragglerPolicy::new(
+            AnalyticPolicy::matching_run_config(&run_cfg),
+            vec![0],
+            8.0,
+        );
+        let barrier = crate::engine::run_engine(
+            &p,
+            &d.matchings,
+            &mut s1,
+            &mut barrier_policy,
+            &crate::engine::EngineConfig { run: run_cfg.clone(), threads: 1 },
+        );
+
+        let mut s2 = VanillaSampler::new(d.len());
+        let mut async_policy = crate::engine::StragglerPolicy::new(
+            AnalyticPolicy::matching_run_config(&run_cfg),
+            vec![0],
+            8.0,
+        );
+        let async_cfg = AsyncConfig { run: run_cfg, threads: 1, max_staleness: 8 };
+        let res = run_async(&p, &d.matchings, &mut s2, &mut async_policy, &async_cfg);
+
+        assert!(
+            res.run.total_time < barrier.run.total_time,
+            "async {} vs barrier {}",
+            res.run.total_time,
+            barrier.run.total_time
+        );
+        assert!(res.stats.mean_staleness() > 0.0, "straggler should induce staleness");
+        assert!(res.stats.total_idle() > 0.0, "fast workers should log gate waits");
+    }
+
+    #[test]
+    fn flaky_links_drop_but_still_converge() {
+        let g = paper_figure1_graph();
+        let d = decompose(&g);
+        let p = quad(8);
+        let run_cfg = cfg(400, 0.15, 3);
+        let mut sampler = VanillaSampler::new(d.len());
+        let mut policy = crate::engine::FlakyLinkPolicy::new(
+            AnalyticPolicy::matching_run_config(&run_cfg),
+            0.3,
+            11,
+        );
+        let async_cfg = AsyncConfig { run: run_cfg, threads: 2, max_staleness: 2 };
+        let res = run_async(&p, &d.matchings, &mut sampler, &mut policy, &async_cfg);
+        assert!(res.dropped_links > 0, "failure injection must trigger");
+        let sub0 = res.run.metrics.get("subopt_vs_iter")[0].y;
+        let subf = res.run.metrics.last("subopt_vs_iter").unwrap();
+        assert!(subf < 0.2 * sub0, "no convergence under flaky links: {sub0} -> {subf}");
+    }
+}

@@ -49,6 +49,17 @@ const GOLDEN_FULL: &str = r#"
 
 const GOLDEN_MINIMAL: &str = r#"{"graph": "fig1"}"#;
 
+const GOLDEN_ASYNC: &str = r#"
+{
+  "graph": "ring:12",
+  "strategy": {"kind": "matcha", "budget": 0.5},
+  "problem": "quad",
+  "policy": "flaky:0.1",
+  "backend": {"kind": "async", "threads": 3, "max_staleness": 6},
+  "run": {"iterations": 80, "record_every": 20}
+}
+"#;
+
 const GOLDEN_EXPLICIT_GRAPH: &str = r#"
 {
   "graph": {"nodes": 5, "edges": [[0,1],[1,2],[2,3],[3,4],[4,0]]},
@@ -65,6 +76,7 @@ fn golden_specs_roundtrip_exactly() {
         ("full", GOLDEN_FULL),
         ("minimal", GOLDEN_MINIMAL),
         ("explicit-graph", GOLDEN_EXPLICIT_GRAPH),
+        ("async", GOLDEN_ASYNC),
     ] {
         let first = ExperimentSpec::parse(text).unwrap_or_else(|e| panic!("{name}: {e}"));
         let emitted = first.to_json_string();
@@ -284,6 +296,7 @@ fn every_strategy_problem_backend_combination_runs() {
         Backend::SimReference,
         Backend::EngineSequential,
         Backend::EngineActors { threads: 8 },
+        Backend::Async { threads: 2, max_staleness: 2 },
     ];
     for strategy in strategies {
         for problem in &problems {
@@ -336,10 +349,15 @@ fn backends_agree_bit_for_bit_per_strategy() {
         let sim = experiment::run(&spec(Backend::SimReference)).unwrap();
         let eng = experiment::run(&spec(Backend::EngineSequential)).unwrap();
         let act = experiment::run(&spec(Backend::EngineActors { threads: 8 })).unwrap();
+        let asy =
+            experiment::run(&spec(Backend::Async { threads: 2, max_staleness: 0 })).unwrap();
         assert_eq!(sim.final_mean, eng.final_mean, "{}", strategy.name());
         assert_eq!(sim.total_time, eng.total_time, "{}", strategy.name());
         assert_eq!(eng.final_mean, act.final_mean, "{}", strategy.name());
         assert_eq!(eng.total_time, act.total_time, "{}", strategy.name());
+        // Staleness-0 async joins the trajectory agreement (its clock is
+        // barrier-free, so only the iterates are compared).
+        assert_eq!(sim.final_mean, asy.final_mean, "{}", strategy.name());
     }
 }
 

@@ -1,0 +1,257 @@
+//! Asynchronous gossip runtime contract tests.
+//!
+//! The contract under test (ISSUE 3): at `max_staleness = 0` the
+//! barrier-free runtime degrades to the synchronous kernel — identical
+//! trajectories to `sim::run_decentralized` **bit-for-bit** per seed, for
+//! arbitrary graphs, strategies, seeds and compression settings — while
+//! under a positive staleness bound it stays deterministic, respects the
+//! bound, converges on the quadratic workload, and beats the barrier
+//! engine's virtual time under stragglers.
+
+use matcha::budget::optimize_activation_probabilities;
+use matcha::engine::{run_engine, AnalyticPolicy, EngineConfig, StragglerPolicy};
+use matcha::experiment::{self, Backend, ExperimentSpec, ProblemSpec, Strategy};
+use matcha::gossip::{run_async, AsyncConfig};
+use matcha::graph;
+use matcha::matching::decompose;
+use matcha::mixing::optimize_alpha;
+use matcha::proptest::{check, PropConfig};
+use matcha::rng::Rng;
+use matcha::sim::{run_decentralized, Compression, QuadraticProblem, RunConfig};
+use matcha::topology::{MatchaSampler, PeriodicSampler, VanillaSampler};
+
+#[test]
+fn property_staleness_zero_matches_sim_bit_for_bit() {
+    // Random connected ER graphs × strategies × seeds × thread counts ×
+    // compression: staleness-0 async and the reference simulator must
+    // produce identical trajectories (final iterate and every recorded
+    // state-derived metric).
+    check(
+        PropConfig { cases: 18, seed: 0x90551b },
+        |rng| {
+            let m = 4 + rng.below(8);
+            let g = graph::erdos_renyi_connected(m, 0.5, rng);
+            let cb = rng.uniform_in(0.2, 1.0);
+            let seed = rng.next_u64();
+            let strategy = rng.below(3);
+            let threads = 1 + rng.below(4);
+            let compress = rng.below(2) == 1;
+            (g, cb, seed, strategy, threads, compress)
+        },
+        |(g, cb, seed, strategy, threads, compress)| {
+            let d = decompose(g);
+            let probs = optimize_activation_probabilities(&d, *cb);
+            let mix = optimize_alpha(&d, &probs.probabilities);
+            let problem = {
+                let mut r = Rng::new(seed ^ 0x5eed);
+                QuadraticProblem::generate(g.num_nodes(), 6, 1.0, 0.2, &mut r)
+            };
+            let cfg = RunConfig {
+                lr: 0.02,
+                iterations: 60,
+                record_every: 20,
+                alpha: mix.alpha,
+                compression: if *compress {
+                    Some(Compression::TopK { frac: 0.5 })
+                } else {
+                    None
+                },
+                seed: *seed,
+                ..RunConfig::default()
+            };
+            fn make_sampler(
+                strategy: usize,
+                probs: &[f64],
+                num_matchings: usize,
+                cb: f64,
+                seed: u64,
+            ) -> Box<dyn matcha::topology::TopologySampler> {
+                match strategy {
+                    0 => Box::new(MatchaSampler::new(probs.to_vec(), seed ^ 1)),
+                    1 => Box::new(VanillaSampler::new(num_matchings)),
+                    _ => Box::new(PeriodicSampler::from_budget(num_matchings, cb)),
+                }
+            }
+            let mut s1 =
+                make_sampler(*strategy, &probs.probabilities, d.len(), *cb, *seed);
+            let mut s2 =
+                make_sampler(*strategy, &probs.probabilities, d.len(), *cb, *seed);
+            let reference = run_decentralized(&problem, &d.matchings, &mut s1, &cfg);
+
+            let mut policy = AnalyticPolicy::matching_run_config(&cfg);
+            let async_cfg =
+                AsyncConfig { run: cfg.clone(), threads: *threads, max_staleness: 0 };
+            let res = run_async(&problem, &d.matchings, &mut s2, &mut policy, &async_cfg);
+
+            if res.run.final_mean != reference.final_mean {
+                return Err(format!(
+                    "final iterates diverged: {:?} vs {:?}",
+                    res.run.final_mean, reference.final_mean
+                ));
+            }
+            for series in ["loss_vs_iter", "consensus_vs_iter", "gradnorm2_vs_iter"] {
+                let a = res.run.metrics.get(series);
+                let b = reference.metrics.get(series);
+                if a.len() != b.len() {
+                    return Err(format!("{series}: {} vs {} records", a.len(), b.len()));
+                }
+                for (pa, pb) in a.iter().zip(b) {
+                    if pa.x != pb.x || pa.y != pb.y {
+                        return Err(format!(
+                            "{series} diverged at x={}: {} vs {}",
+                            pa.x, pa.y, pb.y
+                        ));
+                    }
+                }
+            }
+            if res.stats.max_staleness() != 0 {
+                return Err(format!(
+                    "staleness 0 run observed staleness {}",
+                    res.stats.max_staleness()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_bounded_staleness_is_deterministic_and_bounded() {
+    // Under a positive bound the trajectory differs from the sync kernel
+    // but must be a pure function of the seed (any thread count) and
+    // never exceed the bound.
+    check(
+        PropConfig { cases: 10, seed: 0xb0417d },
+        |rng| {
+            let m = 4 + rng.below(6);
+            let g = graph::erdos_renyi_connected(m, 0.55, rng);
+            let seed = rng.next_u64();
+            let bound = 1 + rng.below(4);
+            (g, seed, bound)
+        },
+        |(g, seed, bound)| {
+            let d = decompose(g);
+            let run_one = |threads: usize| {
+                let mut sampler = VanillaSampler::new(d.len());
+                let cfg = RunConfig {
+                    lr: 0.02,
+                    iterations: 80,
+                    record_every: 40,
+                    alpha: 0.1,
+                    seed: *seed,
+                    ..RunConfig::default()
+                };
+                let problem = {
+                    let mut r = Rng::new(seed ^ 0x5eed);
+                    QuadraticProblem::generate(g.num_nodes(), 6, 1.0, 0.2, &mut r)
+                };
+                let mut policy = StragglerPolicy::new(
+                    AnalyticPolicy::matching_run_config(&cfg),
+                    vec![0],
+                    4.0,
+                );
+                let async_cfg = AsyncConfig { run: cfg, threads, max_staleness: *bound };
+                run_async(&problem, &d.matchings, &mut sampler, &mut policy, &async_cfg)
+            };
+            let a = run_one(1);
+            let b = run_one(3);
+            if a.run.final_mean != b.run.final_mean {
+                return Err("thread count changed the trajectory".into());
+            }
+            if a.run.total_time != b.run.total_time {
+                return Err("thread count changed the virtual clock".into());
+            }
+            if a.stats != b.stats {
+                return Err("thread count changed the staleness stats".into());
+            }
+            if a.stats.max_staleness() > *bound {
+                return Err(format!(
+                    "bound {bound} violated: observed {}",
+                    a.stats.max_staleness()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn bounded_staleness_converges_on_the_quadratic() {
+    // The convergence half of the ROADMAP item: under a straggler and a
+    // positive staleness bound, loss still decreases to tolerance.
+    let spec = ExperimentSpec::new("er:16:4:3")
+        .strategy(Strategy::Matcha { budget: 0.5 })
+        .problem(ProblemSpec::Quadratic { dim: 12, hetero: 1.0, noise_std: 0.1, seed: Some(2) })
+        .policy("straggler:0:5.0")
+        .backend(Backend::Async { threads: 2, max_staleness: 4 })
+        .lr(0.03)
+        .iterations(800)
+        .record_every(100)
+        .seed(11)
+        .validated()
+        .unwrap();
+    let res = experiment::run(&spec).unwrap();
+    let sub = res.metrics.get("subopt_vs_iter");
+    let sub0 = sub[0].y;
+    let subf = res.metrics.last("subopt_vs_iter").unwrap();
+    assert!(
+        subf < 0.05 * sub0,
+        "bounded-staleness async did not converge: {sub0} -> {subf}"
+    );
+    let stats = res.async_stats.expect("async stats");
+    assert!(stats.max_staleness() <= 4);
+    assert!(stats.mean_staleness() > 0.0, "straggler should induce staleness");
+}
+
+#[test]
+fn async_beats_barrier_virtual_time_under_straggler() {
+    // The wall-clock claim's deterministic core: the straggler gates
+    // every barrier iteration (compute + full comm serialized); async
+    // overlaps the straggler's compute with communication.
+    let g = graph::ring(16);
+    let d = decompose(&g);
+    let problem = {
+        let mut r = Rng::new(5);
+        QuadraticProblem::generate(16, 8, 1.0, 0.1, &mut r)
+    };
+    let cfg = RunConfig { lr: 0.02, iterations: 200, alpha: 0.2, seed: 3, ..RunConfig::default() };
+
+    let mut s1 = VanillaSampler::new(d.len());
+    let mut p1 = StragglerPolicy::new(AnalyticPolicy::matching_run_config(&cfg), vec![0], 8.0);
+    let barrier = run_engine(
+        &problem,
+        &d.matchings,
+        &mut s1,
+        &mut p1,
+        &EngineConfig { run: cfg.clone(), threads: 1 },
+    );
+
+    let mut s2 = VanillaSampler::new(d.len());
+    let mut p2 = StragglerPolicy::new(AnalyticPolicy::matching_run_config(&cfg), vec![0], 8.0);
+    let async_cfg = AsyncConfig { run: cfg, threads: 2, max_staleness: 8 };
+    let res = run_async(&problem, &d.matchings, &mut s2, &mut p2, &async_cfg);
+
+    assert!(
+        res.run.total_time < barrier.run.total_time,
+        "async should finish sooner: {} vs {}",
+        res.run.total_time,
+        barrier.run.total_time
+    );
+    // The non-straggling workers log idle time waiting at the bound.
+    let stats = &res.stats;
+    assert!(stats.total_idle() > 0.0);
+    assert!(stats.per_worker.iter().any(|w| w.exchanges > 0));
+}
+
+#[test]
+fn async_spec_runs_end_to_end_from_committed_example() {
+    // The committed example spec must execute (not just dry-run plan).
+    let path = std::path::Path::new("examples/specs/async_straggler.json");
+    let mut spec = ExperimentSpec::load(path).expect("committed async spec loads");
+    assert_eq!(spec.backend.name(), "async");
+    spec.iterations = 60; // keep the test quick; the full run is the bench's job
+    spec.record_every = Some(20);
+    let res = experiment::run(&spec).unwrap();
+    assert!(res.final_loss().is_finite());
+    assert!(res.async_stats.is_some());
+}
