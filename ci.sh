@@ -13,6 +13,12 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+echo "==> cargo fmt --check (advisory)"
+# Advisory until the whole pre-existing tree is rustfmt-clean: report
+# drift loudly, but don't fail CI on it (the enforced gates below are
+# build, tests, clippy, rustdoc and the smoke runs).
+cargo fmt --check || echo "WARNING: cargo fmt --check reported drift (advisory, not a gate yet)"
+
 echo "==> cargo clippy --all-targets -- -D warnings"
 # All default-feature targets: lib, bin, tests, examples, benches.
 cargo clippy --all-targets -- -D warnings
@@ -28,7 +34,11 @@ for spec in examples/specs/*.json; do
 done
 
 echo "==> bench smoke (--dry-run)"
+# Hotpath smoke includes the state-arena mixing sweep: asserts zero
+# allocations per iteration in the gossip mix hot path and emits
+# BENCH_state.json (perf trajectory).
 cargo bench --bench hotpath -- --dry-run
+test -f BENCH_state.json || { echo "BENCH_state.json not emitted"; exit 1; }
 cargo bench --bench engine_sweep -- --dry-run
 # Async-vs-barrier smoke: also emits BENCH_async.json (perf trajectory).
 cargo bench --bench async_vs_barrier -- --dry-run

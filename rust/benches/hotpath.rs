@@ -7,16 +7,164 @@
 //! and schedule sampling — plus the full spec→plan→run experiment
 //! pipeline, so API-layer overhead stays visible. Numbers land in
 //! EXPERIMENTS.md §Perf.
+//!
+//! The **state-arena mixing sweep** measures the gossip mix kernel over a
+//! (workers × dim) grid under an allocation-counting global allocator:
+//! the arena path must perform **zero** heap allocations per iteration
+//! (asserted), and the sweep also times the pre-arena per-message-clone
+//! behavior as the before/after record. Results land in
+//! `BENCH_state.json` (emitted in `--dry-run` too, so `ci.sh` smokes it).
 
 use matcha::benchkit::bench_auto;
 use matcha::budget::project_capped_simplex;
 use matcha::experiment::{self, Backend, ExperimentSpec, Plan, ProblemSpec, Strategy};
-use matcha::graph::{complete, erdos_renyi, paper_figure1_graph};
+use matcha::graph::{complete, erdos_renyi, paper_figure1_graph, ring};
+use matcha::json::Json;
 use matcha::linalg::{symmetric_eigen, Mat};
 use matcha::matching::decompose;
 use matcha::rng::Rng;
+use matcha::sim::kernel::edge_diff_message;
 use matcha::sim::{run_decentralized, QuadraticProblem};
+use matcha::state::{DeltaPool, MixKernel, StateMatrix};
 use matcha::topology::TopologySampler;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Allocation-counting wrapper over the system allocator — how the sweep
+/// proves the arena mix hot path is allocation-free.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Mixing-throughput sweep over a (workers × dim) grid: arena kernel vs
+/// the pre-arena per-message-clone fold, allocations-per-iteration and
+/// elements/sec, written to `BENCH_state.json`.
+fn state_mix_sweep(dry_run: bool) {
+    println!("\n=== state arena: gossip mix throughput (workers x dim) ===");
+    let grid: &[(usize, usize)] = if dry_run {
+        &[(8, 50)]
+    } else {
+        &[(8, 50), (32, 200), (128, 500), (512, 1000)]
+    };
+    let iters = if dry_run { 50usize } else { 200 };
+    let mut points = Vec::new();
+    for &(m, dim) in grid {
+        let d = decompose(&ring(m));
+        let activated: Vec<usize> = (0..d.len()).collect();
+        let edges: usize = activated.iter().map(|&j| d.matchings[j].edges().len()).sum();
+        let mut xs = StateMatrix::init(7, m, dim);
+        let mut rng = Rng::new(13);
+        for w in 0..m {
+            for x in xs.row_mut(w).iter_mut() {
+                *x += 0.1 * rng.normal();
+            }
+        }
+        let mut pool = DeltaPool::new(m, dim);
+        let kernel = MixKernel::new(3, None);
+
+        // Arena path: one warmup mix, then count allocations and time.
+        kernel.apply(&mut xs, &d.matchings, &activated, 0.3, None, 0, &mut pool);
+        let before = ALLOC_COUNT.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        for k in 0..iters {
+            kernel.apply(&mut xs, &d.matchings, &activated, 0.3, None, k, &mut pool);
+        }
+        let arena_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let arena_allocs =
+            (ALLOC_COUNT.load(Ordering::Relaxed) - before) as f64 / iters as f64;
+        std::hint::black_box(xs.row(0));
+
+        // Pre-arena baseline: the same fold, but every message clones
+        // the two endpoint iterates (what the engine's actor messages and
+        // the async runtime's snapshots used to do per exchange).
+        let mut deltas: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; dim]).collect();
+        let mut diff = vec![0.0; dim];
+        let before = ALLOC_COUNT.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        for k in 0..iters {
+            for dv in deltas.iter_mut() {
+                dv.iter_mut().for_each(|v| *v = 0.0);
+            }
+            for &j in &activated {
+                for &(u, v) in d.matchings[j].edges() {
+                    let xu = xs.row(u).to_vec();
+                    let xv = xs.row(v).to_vec();
+                    edge_diff_message(&xu, &xv, &mut diff, None, 3, k, j, u, v);
+                    for (a, &b) in deltas[u].iter_mut().zip(diff.iter()) {
+                        *a += b;
+                    }
+                    for (a, &b) in deltas[v].iter_mut().zip(diff.iter()) {
+                        *a -= b;
+                    }
+                }
+            }
+            for (w, dv) in deltas.iter().enumerate() {
+                for (xi, &di) in xs.row_mut(w).iter_mut().zip(dv) {
+                    *xi += 0.3 * di;
+                }
+            }
+        }
+        let clone_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let clone_allocs =
+            (ALLOC_COUNT.load(Ordering::Relaxed) - before) as f64 / iters as f64;
+        std::hint::black_box(xs.row(0));
+
+        // Elements touched per mix: both endpoint rows of every edge.
+        let elements = (2 * edges * dim) as f64;
+        let elements_per_sec = elements / (arena_ns / 1e9);
+        println!(
+            "state mix m={m:<4} d={dim:<5} edges/iter={edges:<4} \
+             arena: {arena_allocs:.1} allocs/iter {arena_ns:>12.0} ns/iter \
+             ({elements_per_sec:.3e} elem/s)  clone-baseline: \
+             {clone_allocs:.1} allocs/iter {clone_ns:>12.0} ns/iter"
+        );
+        assert!(
+            arena_allocs == 0.0,
+            "arena gossip mix hot path must be allocation-free, saw {arena_allocs} allocs/iter"
+        );
+        assert!(
+            clone_allocs > 0.0,
+            "clone baseline should allocate per message (sanity check of the counter)"
+        );
+        points.push(Json::obj(vec![
+            ("workers", Json::Num(m as f64)),
+            ("dim", Json::Num(dim as f64)),
+            ("edges_per_iter", Json::Num(edges as f64)),
+            ("allocs_per_iter_arena", Json::Num(arena_allocs)),
+            ("allocs_per_iter_clone_baseline", Json::Num(clone_allocs)),
+            ("ns_per_iter_arena", Json::Num(arena_ns)),
+            ("ns_per_iter_clone_baseline", Json::Num(clone_ns)),
+            ("elements_per_sec", Json::Num(elements_per_sec)),
+        ]));
+    }
+    let summary = Json::obj(vec![
+        ("mode", Json::Str(if dry_run { "dry" } else { "full" }.into())),
+        ("iters_per_point", Json::Num(iters as f64)),
+        ("grid", Json::Arr(points)),
+    ]);
+    std::fs::write("BENCH_state.json", summary.to_string()).expect("write BENCH_state.json");
+    println!("wrote BENCH_state.json");
+}
 
 fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
     let mut a = Mat::zeros(n, n);
@@ -62,6 +210,7 @@ fn main() {
             let spec = throughput_spec(20, Backend::EngineSequential);
             std::hint::black_box(experiment::run(&spec).unwrap());
         });
+        state_mix_sweep(true);
         println!("dry-run complete");
         return;
     }
@@ -145,4 +294,6 @@ fn main() {
     bench_auto("sampler round", 50, || {
         std::hint::black_box(s.round(0));
     });
+
+    state_mix_sweep(false);
 }

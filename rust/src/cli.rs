@@ -374,10 +374,10 @@ fn cmd_engine(args: &Args) -> Result<(), String> {
         }
         "engine" => Backend::EngineSequential,
         "actors" => {
-            if threads < 2 {
+            if threads == 0 {
                 return Err(
-                    "--backend actors needs --threads >= 2 (a pool of at least two); \
-                     use --backend engine for sequential execution"
+                    "--backend actors needs --threads >= 1 (a one-thread pool is valid \
+                     and matches the sequential engine bit-for-bit)"
                         .into(),
                 );
             }

@@ -3,19 +3,31 @@
 //! The actor mode multiplexes all logical workers over a **bounded pool**
 //! of OS threads ([`crate::gossip::ShardedPool`] — shared with the
 //! asynchronous gossip runtime). Each shard thread owns the sticky state
-//! (iterate + private gradient-noise RNG stream) of the workers assigned
-//! to it round-robin, and the coordinator drives the pool with
-//! phase-broadcast commands:
+//! of the workers assigned to it round-robin — their iterates live in a
+//! private [`StateMatrix`] **arena segment**, one row per owned worker,
+//! next to their private gradient-noise RNG streams — and the coordinator
+//! drives the pool with phase-broadcast commands:
 //!
 //! ```text
 //!   coordinator ── ShardCmd::Step ──▶ shard   (local SGD step, every
 //!                                              owned worker)
-//!   coordinator ◀─ ShardReply ─────── shard   (post-step iterates)
-//!   coordinator ── ShardCmd::Mix ───▶ shard   (peer iterates for each
-//!                                              owned worker's activated
-//!                                              incident links)
-//!   coordinator ◀─ ShardReply ─────── shard   (post-mix iterates)
+//!   coordinator ◀─ ShardReply ─────── shard   (post-step iterates, one
+//!                                              flat buffer)
+//!   coordinator ── ShardCmd::Mix ───▶ shard   (one MixBatch: message
+//!                                              metadata + staged peer
+//!                                              rows for every owned
+//!                                              worker's activated links)
+//!   coordinator ◀─ ShardReply ─────── shard   (post-mix iterates + the
+//!                                              batch, returned for reuse)
 //! ```
+//!
+//! **Zero per-message allocation**: gossip messages are `(slot, matching,
+//! u, v)` metadata plus the peer row staged into the batch's flat
+//! `staging` buffer — never a cloned `Vec<f64>` per message. The staging
+//! buffers, message vectors and state-return buffers shuttle between
+//! coordinator and shard inside the commands/replies, so after the first
+//! iteration the steady state allocates nothing in the mix path (measured
+//! in `benches/hotpath.rs` → `BENCH_state.json`).
 //!
 //! Determinism: a worker's gradient draws depend only on its own stream,
 //! and gossip-message compression randomness is derived per edge
@@ -27,56 +39,69 @@
 //! fine on 8 threads.
 
 use crate::rng::Rng;
-use crate::sim::kernel::{edge_diff_message, local_sgd_step};
+use crate::sim::kernel::local_sgd_step;
 use crate::sim::{Compression, Problem};
+use crate::state::{MixKernel, StateMatrix};
 
-/// One gossip message routed to a worker: the peer's post-step iterate
-/// for one activated, live link. `(u, v)` is the canonical edge (u < v);
-/// the receiving worker is one of the two endpoints.
-pub(crate) struct GossipMsg {
+/// One gossip message routed to a worker: the metadata of one activated,
+/// live link. `(u, v)` is the canonical edge (u < v); the receiving
+/// worker (`slot`-th owned worker of its shard) is one of the two
+/// endpoints. The peer's post-step row is staged at the message's index
+/// in the enclosing [`MixBatch::staging`] buffer.
+pub(crate) struct MsgMeta {
+    pub slot: usize,
     pub matching: usize,
     pub u: usize,
     pub v: usize,
-    pub peer_x: Vec<f64>,
+}
+
+/// One shard's gossip traffic for one iteration: message metadata sorted
+/// by owner slot (global (activation, edge) order within each slot) and
+/// the matching peer rows, message `i`'s peer at `staging[i*d..(i+1)*d]`.
+/// Round-trips coordinator → shard → coordinator so both vectors keep
+/// their capacity across iterations.
+#[derive(Default)]
+pub(crate) struct MixBatch {
+    pub msgs: Vec<MsgMeta>,
+    pub staging: Vec<f64>,
 }
 
 /// Coordinator → shard commands. Each command covers **all** workers the
-/// shard owns and yields exactly one [`ShardReply`].
+/// shard owns and yields exactly one [`ShardReply`]. `ret` is the
+/// recycled flat buffer the shard fills with its post-phase iterates.
 pub(crate) enum ShardCmd {
     /// Run one local SGD step at learning rate `lr` on every owned
     /// worker. (The iteration index is not needed worker-side: gradient
     /// draws come from each worker's own stream; only `Mix` needs `k`,
     /// for the per-edge compression RNG.)
-    Step { lr: f64 },
-    /// Apply the gossip mix for iteration `k`. `msgs[i]` lists the live
-    /// activated incident links of the shard's `i`-th owned worker in
-    /// global (activation, edge) order — possibly empty, in which case
-    /// that worker's mix is a no-op add of zero (matching the sequential
+    Step { lr: f64, ret: Vec<f64> },
+    /// Apply the gossip mix for iteration `k`. Workers without messages
+    /// in the batch get a no-op add of zero (matching the sequential
     /// kernel exactly).
-    Mix { k: usize, alpha: f64, msgs: Vec<Vec<GossipMsg>> },
+    Mix { k: usize, alpha: f64, batch: MixBatch, ret: Vec<f64> },
 }
 
-/// Shard → coordinator reply: the post-phase iterate of every owned
-/// worker, so the coordinator's mirror stays authoritative for routing
-/// and metrics.
+/// Shard → coordinator reply: the post-phase iterates of every owned
+/// worker (slot order, flat `slots × d`), so the coordinator's arena
+/// stays authoritative for routing and metrics. `batch` returns the mix
+/// buffers for reuse (`None` after a step).
 pub(crate) struct ShardReply {
-    pub states: Vec<(usize, Vec<f64>)>,
-}
-
-/// Sticky per-worker state owned by a shard thread.
-pub(crate) struct WorkerSlot {
-    pub worker: usize,
-    pub x: Vec<f64>,
-    pub rng: Rng,
+    pub shard: usize,
+    pub states: Vec<f64>,
+    pub batch: Option<MixBatch>,
 }
 
 /// One shard of the bounded actor pool: a bundle of workers multiplexed
-/// on one OS thread, plus the shared scratch buffers.
+/// on one OS thread. Worker `workers[slot]`'s iterate is row `slot` of
+/// the `seg` arena segment; `rngs[slot]` is its gradient stream.
 pub(crate) struct ActorShard<'p, P: Problem + ?Sized> {
     problem: &'p P,
     compression: Option<Compression>,
     seed: u64,
-    slots: Vec<WorkerSlot>,
+    shard: usize,
+    workers: Vec<usize>,
+    seg: StateMatrix,
+    rngs: Vec<Rng>,
     grad: Vec<f64>,
     diff: Vec<f64>,
     delta: Vec<f64>,
@@ -87,112 +112,86 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
         problem: &'p P,
         compression: Option<Compression>,
         seed: u64,
-        slots: Vec<WorkerSlot>,
+        shard: usize,
+        workers: Vec<usize>,
+        seg: StateMatrix,
+        rngs: Vec<Rng>,
     ) -> Self {
+        assert_eq!(workers.len(), seg.rows(), "one segment row per owned worker");
+        assert_eq!(workers.len(), rngs.len(), "one RNG stream per owned worker");
         let d = problem.dim();
         ActorShard {
             problem,
             compression,
             seed,
-            slots,
+            shard,
+            workers,
+            seg,
+            rngs,
             grad: vec![0.0; d],
             diff: vec![0.0; d],
             delta: vec![0.0; d],
         }
     }
 
+    /// Copy the segment into the recycled return buffer.
+    fn states_into(&self, mut ret: Vec<f64>) -> Vec<f64> {
+        ret.clear();
+        ret.extend_from_slice(self.seg.as_slice());
+        ret
+    }
+
     /// Handle one phase command for every owned worker and report the
     /// resulting iterates.
     pub fn handle(&mut self, cmd: ShardCmd) -> ShardReply {
         match cmd {
-            ShardCmd::Step { lr } => {
-                for slot in self.slots.iter_mut() {
+            ShardCmd::Step { lr, ret } => {
+                for (slot, &w) in self.workers.iter().enumerate() {
                     local_sgd_step(
                         self.problem,
-                        slot.worker,
+                        w,
                         lr,
-                        &mut slot.x,
-                        &mut slot.rng,
+                        self.seg.row_mut(slot),
+                        &mut self.rngs[slot],
                         &mut self.grad,
                     );
                 }
+                ShardReply { shard: self.shard, states: self.states_into(ret), batch: None }
             }
-            ShardCmd::Mix { k, alpha, msgs } => {
-                assert_eq!(msgs.len(), self.slots.len(), "one message list per owned worker");
-                for (slot, worker_msgs) in self.slots.iter_mut().zip(&msgs) {
-                    mix_worker(
-                        slot.worker,
-                        &mut slot.x,
-                        worker_msgs,
+            ShardCmd::Mix { k, alpha, batch, ret } => {
+                let d = self.seg.dim();
+                let kernel = MixKernel::new(self.seed, self.compression.as_ref());
+                let mut i = 0usize;
+                for (slot, &w) in self.workers.iter().enumerate() {
+                    let start = i;
+                    while i < batch.msgs.len() && batch.msgs[i].slot == slot {
+                        i += 1;
+                    }
+                    // Every owned worker folds — an empty message run is
+                    // the sequential kernel's `x += α·0` on non-incident
+                    // workers of an active round.
+                    let msgs = batch.msgs[start..i].iter().enumerate().map(|(o, m)| {
+                        let at = (start + o) * d;
+                        (m.matching, m.u, m.v, &batch.staging[at..at + d])
+                    });
+                    kernel.fold_worker(
+                        w,
+                        self.seg.row_mut(slot),
+                        msgs,
                         k,
                         alpha,
-                        self.compression.as_ref(),
-                        self.seed,
                         &mut self.diff,
                         &mut self.delta,
                     );
                 }
+                assert_eq!(
+                    i,
+                    batch.msgs.len(),
+                    "mix batch not consumed: messages must be sorted by owner slot"
+                );
+                ShardReply { shard: self.shard, states: self.states_into(ret), batch: Some(batch) }
             }
         }
-        ShardReply {
-            states: self.slots.iter().map(|s| (s.worker, s.x.clone())).collect(),
-        }
-    }
-}
-
-/// Apply one worker's gossip mix from its routed peer messages: fold the
-/// canonical edge diffs (x_v − x_u, this worker on the `u` side iff
-/// `worker == msg.u`) into a delta in message order, then apply
-/// `x += α·Δ` — the same accumulation the sequential kernel performs.
-pub(crate) fn mix_worker(
-    worker: usize,
-    x: &mut [f64],
-    msgs: &[GossipMsg],
-    k: usize,
-    alpha: f64,
-    compression: Option<&Compression>,
-    seed: u64,
-    diff: &mut [f64],
-    delta: &mut [f64],
-) {
-    let d = x.len();
-    delta.iter_mut().for_each(|v| *v = 0.0);
-    for msg in msgs {
-        let on_lower = worker == msg.u;
-        if on_lower {
-            edge_diff_message(
-                x,
-                &msg.peer_x,
-                diff,
-                compression,
-                seed,
-                k,
-                msg.matching,
-                msg.u,
-                msg.v,
-            );
-            for i in 0..d {
-                delta[i] += diff[i];
-            }
-        } else {
-            edge_diff_message(
-                &msg.peer_x,
-                x,
-                diff,
-                compression,
-                seed,
-                k,
-                msg.matching,
-                msg.u,
-                msg.v,
-            );
-            for i in 0..d {
-                delta[i] -= diff[i];
-            }
-        }
-    }
-    for i in 0..d {
-        x[i] += alpha * delta[i];
     }
 }
 
@@ -201,6 +200,21 @@ mod tests {
     use super::*;
     use crate::sim::kernel::{init_iterates, worker_streams};
     use crate::sim::QuadraticProblem;
+
+    fn shard_for<'p>(
+        problem: &'p QuadraticProblem,
+        seed: u64,
+        workers: Vec<usize>,
+        xs: &StateMatrix,
+        rngs: &[Rng],
+    ) -> ActorShard<'p, QuadraticProblem> {
+        let mut seg = StateMatrix::zeros(workers.len(), xs.dim());
+        for (slot, &w) in workers.iter().enumerate() {
+            seg.row_mut(slot).copy_from_slice(xs.row(w));
+        }
+        let shard_rngs = workers.iter().map(|&w| rngs[w].clone()).collect();
+        ActorShard::new(problem, None, seed, 0, workers, seg, shard_rngs)
+    }
 
     #[test]
     fn shard_step_matches_inprocess_kernel() {
@@ -213,51 +227,63 @@ mod tests {
         // Reference: in-process kernel step for workers 1 and 2.
         let mut expect = Vec::new();
         for w in [1usize, 2] {
-            let mut x_ref = xs[w].clone();
+            let mut x_ref = xs.row(w).to_vec();
             let mut rng_ref = rngs[w].clone();
             let mut grad = vec![0.0; 6];
             local_sgd_step(&problem, w, 0.03, &mut x_ref, &mut rng_ref, &mut grad);
-            expect.push((w, x_ref));
+            expect.extend_from_slice(&x_ref);
         }
 
         // Shard path: one shard owning workers 1 and 2.
-        let slots = [1usize, 2]
-            .iter()
-            .map(|&w| WorkerSlot { worker: w, x: xs[w].clone(), rng: rngs[w].clone() })
-            .collect();
-        let mut shard = ActorShard::new(&problem, None, seed, slots);
-        let reply = shard.handle(ShardCmd::Step { lr: 0.03 });
+        let mut shard = shard_for(&problem, seed, vec![1, 2], &xs, &rngs);
+        let reply = shard.handle(ShardCmd::Step { lr: 0.03, ret: Vec::new() });
         assert_eq!(reply.states, expect, "shard step must be bit-identical");
+        assert_eq!(reply.shard, 0);
+        assert!(reply.batch.is_none());
     }
 
     #[test]
-    fn shard_mix_empty_message_list_applies_zero_delta() {
+    fn shard_mix_without_messages_applies_zero_delta() {
         let mut prng = Rng::new(23);
         let problem = QuadraticProblem::generate(2, 4, 1.0, 0.0, &mut prng);
         let x0 = vec![1.0, -2.0, 3.0, 0.5];
-        let slots = vec![WorkerSlot { worker: 0, x: x0.clone(), rng: Rng::new(1) }];
-        let mut shard = ActorShard::new(&problem, None, 0, slots);
-        let reply = shard.handle(ShardCmd::Mix { k: 0, alpha: 0.4, msgs: vec![vec![]] });
-        assert_eq!(reply.states, vec![(0, x0)]);
+        let xs = StateMatrix::from_vecs(&[x0.clone(), vec![0.0; 4]]);
+        let rngs = worker_streams(0, 2);
+        let mut shard = shard_for(&problem, 0, vec![0], &xs, &rngs);
+        let reply = shard.handle(ShardCmd::Mix {
+            k: 0,
+            alpha: 0.4,
+            batch: MixBatch::default(),
+            ret: Vec::new(),
+        });
+        assert_eq!(reply.states, x0);
+        let batch = reply.batch.expect("mix returns its batch for reuse");
+        assert!(batch.msgs.is_empty() && batch.staging.is_empty());
     }
 
     #[test]
-    fn mix_worker_matches_sequential_gossip_kernel() {
-        use crate::sim::kernel::{apply_gossip, GossipScratch};
+    fn shard_mix_matches_sequential_gossip_kernel() {
+        use crate::sim::kernel::apply_gossip;
+        use crate::state::DeltaPool;
         let g = crate::graph::paper_figure1_graph();
         let d = crate::matching::decompose(&g);
         let m = 8;
         let dim = 5;
         let mut rng = Rng::new(4);
-        let xs: Vec<Vec<f64>> = (0..m)
-            .map(|_| (0..dim).map(|_| rng.normal()).collect())
-            .collect();
+        let mut xs = StateMatrix::zeros(m, dim);
+        for w in 0..m {
+            for x in xs.row_mut(w).iter_mut() {
+                *x = rng.normal();
+            }
+        }
         let activated: Vec<usize> = (0..d.len()).collect();
         let (alpha, k, seed) = (0.21, 3, 9);
+        let mut rng2 = Rng::new(1);
+        let problem = QuadraticProblem::generate(m, dim, 1.0, 0.0, &mut rng2);
 
         // Reference: the full-state simultaneous kernel.
         let mut reference = xs.clone();
-        let mut scratch = GossipScratch::new(m, dim);
+        let mut pool = DeltaPool::new(m, dim);
         apply_gossip(
             &mut reference,
             &d.matchings,
@@ -267,27 +293,27 @@ mod tests {
             None,
             seed,
             k,
-            &mut scratch,
+            &mut pool,
         );
 
-        // Per-worker path: route each worker's incident messages in
-        // global order and fold them with mix_worker.
-        for w in 0..m {
-            let mut msgs = Vec::new();
+        // Shard path: one shard owning all workers, messages staged in
+        // slot order with global (activation, edge) order within a slot.
+        let rngs = worker_streams(seed, m);
+        let workers: Vec<usize> = (0..m).collect();
+        let mut batch = MixBatch::default();
+        for (slot, &w) in workers.iter().enumerate() {
             for &j in &activated {
                 for &(u, v) in d.matchings[j].edges() {
-                    if u == w {
-                        msgs.push(GossipMsg { matching: j, u, v, peer_x: xs[v].clone() });
-                    } else if v == w {
-                        msgs.push(GossipMsg { matching: j, u, v, peer_x: xs[u].clone() });
+                    if u == w || v == w {
+                        let peer = if u == w { v } else { u };
+                        batch.msgs.push(MsgMeta { slot, matching: j, u, v });
+                        batch.staging.extend_from_slice(xs.row(peer));
                     }
                 }
             }
-            let mut x = xs[w].clone();
-            let mut diff = vec![0.0; dim];
-            let mut delta = vec![0.0; dim];
-            mix_worker(w, &mut x, &msgs, k, alpha, None, seed, &mut diff, &mut delta);
-            assert_eq!(x, reference[w], "worker {w} diverged from the kernel");
         }
+        let mut shard = shard_for(&problem, seed, workers, &xs, &rngs);
+        let reply = shard.handle(ShardCmd::Mix { k, alpha, batch, ret: Vec::new() });
+        assert_eq!(reply.states, reference.as_slice(), "shard mix diverged from the kernel");
     }
 }

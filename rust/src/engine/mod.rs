@@ -17,13 +17,18 @@
 //! - [`actor`] — logical workers multiplexed over a bounded pool of OS
 //!   threads ([`crate::gossip::ShardedPool`], shared with the
 //!   asynchronous gossip runtime); each shard owns its workers' iterates
-//!   and RNG streams and exchanges phase commands over `mpsc` channels.
+//!   in a private [`crate::state::StateMatrix`] arena segment next to
+//!   their RNG streams, and exchanges phase commands over `mpsc`
+//!   channels. Gossip messages are metadata plus staged peer rows in
+//!   recycled flat buffers — no per-message cloning.
 //! - [`runner`] — the engine loop: compute phase → link events → gossip
 //!   mix, with a barrier per iteration (**deterministic mode**). Under
 //!   [`AnalyticPolicy`] the trajectory and the virtual clock reproduce
 //!   [`crate::sim::run_decentralized`] **bit-for-bit** — the step/mix
-//!   math lives once in [`crate::sim::kernel`] and is shared by both
-//!   paths (enforced by the property tests in `rust/tests/engine.rs`).
+//!   math lives once in [`crate::state::kernel`] (bound to run semantics
+//!   by [`crate::sim::kernel`]) and is shared by both paths (enforced by
+//!   the property tests in `rust/tests/engine.rs` and the golden
+//!   fixtures in `rust/tests/golden.rs`).
 //! - [`sweep`] — a parallel sweep driver that fans independent
 //!   budget/topology grid points across cores (the figure harnesses'
 //!   serial loops, parallelized).

@@ -20,18 +20,19 @@
 //! [`AnalyticPolicy`] they reproduce [`crate::sim::run_decentralized`]
 //! exactly (see `rust/tests/engine.rs`).
 
-use super::actor::{ActorShard, GossipMsg, ShardCmd, ShardReply, WorkerSlot};
+use super::actor::{ActorShard, MixBatch, MsgMeta, ShardCmd, ShardReply};
 use super::event::{EventKind, EventQueue};
 use super::policy::{AnalyticPolicy, DelayPolicy};
 use crate::delay::VirtualClock;
 use crate::experiment::{NoopObserver, Observer};
-use crate::gossip::{shard_of, shard_workers, ShardedPool};
+use crate::gossip::{shard_workers, ShardedPool};
 use crate::graph::Graph;
 use crate::metrics::Recorder;
 use crate::sim::kernel::{
-    apply_gossip, init_iterates, local_sgd_step, record_metrics, worker_streams, GossipScratch,
+    apply_gossip, init_iterates, local_sgd_step, record_metrics, worker_streams,
 };
-use crate::sim::{mean_iterate, Compression, Problem, RunConfig, RunResult};
+use crate::sim::{Compression, Problem, RunConfig, RunResult};
+use crate::state::{DeltaPool, StateMatrix};
 use crate::topology::TopologySampler;
 
 /// Engine configuration: the shared run parameters plus the execution
@@ -61,9 +62,10 @@ pub struct EngineResult {
     pub events: u64,
 }
 
-/// How iterate state is advanced each phase.
+/// How iterate state is advanced each phase. State lives in the
+/// coordinator's [`StateMatrix`] arena; executors keep it authoritative.
 trait Executor {
-    fn step(&mut self, k: usize, lr: f64, xs: &mut [Vec<f64>]);
+    fn step(&mut self, k: usize, lr: f64, xs: &mut StateMatrix);
     fn mix(
         &mut self,
         k: usize,
@@ -71,7 +73,7 @@ trait Executor {
         matchings: &[Graph],
         activated: &[usize],
         dead: &[(usize, usize)],
-        xs: &mut [Vec<f64>],
+        xs: &mut StateMatrix,
     );
 }
 
@@ -79,16 +81,22 @@ trait Executor {
 struct SequentialExec<'p, P: Problem + ?Sized> {
     problem: &'p P,
     worker_rngs: Vec<crate::rng::Rng>,
-    grad: Vec<f64>,
-    scratch: GossipScratch,
+    pool: DeltaPool,
     compression: Option<Compression>,
     seed: u64,
 }
 
 impl<P: Problem + ?Sized> Executor for SequentialExec<'_, P> {
-    fn step(&mut self, _k: usize, lr: f64, xs: &mut [Vec<f64>]) {
-        for (w, x) in xs.iter_mut().enumerate() {
-            local_sgd_step(self.problem, w, lr, x, &mut self.worker_rngs[w], &mut self.grad);
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix) {
+        for w in 0..xs.rows() {
+            local_sgd_step(
+                self.problem,
+                w,
+                lr,
+                xs.row_mut(w),
+                &mut self.worker_rngs[w],
+                self.pool.grad_mut(),
+            );
         }
     }
 
@@ -99,7 +107,7 @@ impl<P: Problem + ?Sized> Executor for SequentialExec<'_, P> {
         matchings: &[Graph],
         activated: &[usize],
         dead: &[(usize, usize)],
-        xs: &mut [Vec<f64>],
+        xs: &mut StateMatrix,
     ) {
         apply_gossip(
             xs,
@@ -110,32 +118,66 @@ impl<P: Problem + ?Sized> Executor for SequentialExec<'_, P> {
             Some(dead),
             self.seed,
             k,
-            &mut self.scratch,
+            &mut self.pool,
         );
     }
 }
 
 /// Actor-pool executor: broadcasts phase commands to every shard,
-/// gathers replies, and keeps the coordinator's mirror of the iterates
-/// authoritative for routing.
+/// gathers replies, and keeps the coordinator's arena authoritative for
+/// routing. All per-iteration buffers — the per-worker message lists,
+/// each shard's [`MixBatch`] (message metadata + staged peer rows) and
+/// state-return buffer — are allocated once and recycled through the
+/// command/reply cycle, so the mix path performs no per-message heap
+/// allocation.
 struct ActorExec<'a> {
     pool: &'a ShardedPool<ShardCmd, ShardReply>,
+    workers: usize,
+    /// Per-worker `(matching, u, v)` routes for the current round, in
+    /// global (activation, edge) order; reused across iterations.
+    per: Vec<Vec<(usize, usize, usize)>>,
+    /// Recycled per-shard mix batches.
+    batches: Vec<Option<MixBatch>>,
+    /// Recycled per-shard state-return buffers.
+    rets: Vec<Option<Vec<f64>>>,
 }
 
-impl ActorExec<'_> {
-    fn collect(&self, xs: &mut [Vec<f64>]) {
-        for _ in 0..self.pool.num_shards() {
-            for (worker, x) in self.pool.recv().states {
-                xs[worker] = x;
+impl<'a> ActorExec<'a> {
+    fn new(pool: &'a ShardedPool<ShardCmd, ShardReply>, workers: usize) -> Self {
+        let shards = pool.num_shards();
+        ActorExec {
+            pool,
+            workers,
+            per: (0..workers).map(|_| Vec::new()).collect(),
+            batches: (0..shards).map(|_| Some(MixBatch::default())).collect(),
+            rets: (0..shards).map(|_| Some(Vec::new())).collect(),
+        }
+    }
+
+    /// Receive every shard's reply, copy its segment back into the
+    /// arena, and reclaim the recycled buffers.
+    fn collect(&mut self, xs: &mut StateMatrix) {
+        let shards = self.pool.num_shards();
+        let d = xs.dim();
+        for _ in 0..shards {
+            let reply = self.pool.recv();
+            let s = reply.shard;
+            for (slot, w) in shard_workers(s, shards, self.workers).enumerate() {
+                xs.row_mut(w).copy_from_slice(&reply.states[slot * d..(slot + 1) * d]);
+            }
+            self.rets[s] = Some(reply.states);
+            if let Some(batch) = reply.batch {
+                self.batches[s] = Some(batch);
             }
         }
     }
 }
 
 impl Executor for ActorExec<'_> {
-    fn step(&mut self, _k: usize, lr: f64, xs: &mut [Vec<f64>]) {
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix) {
         for s in 0..self.pool.num_shards() {
-            self.pool.send(s, ShardCmd::Step { lr });
+            let ret = self.rets[s].take().expect("return buffer leased out");
+            self.pool.send(s, ShardCmd::Step { lr, ret });
         }
         self.collect(xs);
     }
@@ -147,30 +189,40 @@ impl Executor for ActorExec<'_> {
         matchings: &[Graph],
         activated: &[usize],
         dead: &[(usize, usize)],
-        xs: &mut [Vec<f64>],
+        xs: &mut StateMatrix,
     ) {
-        // Route each live activated edge's peer iterate to both
-        // endpoints, in global (activation, edge) order so each worker's
-        // fold order matches the sequential kernel.
-        let mut per: Vec<Vec<GossipMsg>> = (0..xs.len()).map(|_| Vec::new()).collect();
+        // Route each live activated edge to both endpoints, in global
+        // (activation, edge) order so each worker's fold order matches
+        // the sequential kernel.
+        for routes in self.per.iter_mut() {
+            routes.clear();
+        }
         for &j in activated {
             for &(u, v) in matchings[j].edges() {
                 if dead.contains(&(u, v)) {
                     continue;
                 }
-                per[u].push(GossipMsg { matching: j, u, v, peer_x: xs[v].clone() });
-                per[v].push(GossipMsg { matching: j, u, v, peer_x: xs[u].clone() });
+                self.per[u].push((j, u, v));
+                self.per[v].push((j, u, v));
             }
         }
-        // Group per shard, ascending worker order == the shard's slot
-        // order (round-robin assignment).
+        // Stage each shard's batch: messages in slot order, each peer's
+        // post-step row copied from the arena into the flat staging
+        // buffer at the message's index.
         let shards = self.pool.num_shards();
-        let mut shard_msgs: Vec<Vec<Vec<GossipMsg>>> = (0..shards).map(|_| Vec::new()).collect();
-        for (w, msgs) in per.into_iter().enumerate() {
-            shard_msgs[shard_of(w, shards)].push(msgs);
-        }
-        for (s, msgs) in shard_msgs.into_iter().enumerate() {
-            self.pool.send(s, ShardCmd::Mix { k, alpha, msgs });
+        for s in 0..shards {
+            let mut batch = self.batches[s].take().expect("mix batch leased out");
+            batch.msgs.clear();
+            batch.staging.clear();
+            for (slot, w) in shard_workers(s, shards, self.workers).enumerate() {
+                for &(j, u, v) in &self.per[w] {
+                    let peer = if w == u { v } else { u };
+                    batch.msgs.push(MsgMeta { slot, matching: j, u, v });
+                    batch.staging.extend_from_slice(xs.row(peer));
+                }
+            }
+            let ret = self.rets[s].take().expect("return buffer leased out");
+            self.pool.send(s, ShardCmd::Mix { k, alpha, batch, ret });
         }
         self.collect(xs);
     }
@@ -215,8 +267,7 @@ where
         let exec = SequentialExec {
             problem,
             worker_rngs: worker_streams(config.run.seed, m),
-            grad: vec![0.0; d],
-            scratch: GossipScratch::new(m, d),
+            pool: DeltaPool::new(m, d),
             compression: config.run.compression.clone(),
             seed: config.run.seed,
         };
@@ -229,16 +280,27 @@ where
     std::thread::scope(|scope| {
         let shards: Vec<ActorShard<'_, P>> = (0..threads)
             .map(|s| {
-                let slots = shard_workers(s, threads, m)
-                    .map(|w| WorkerSlot { worker: w, x: xs0[w].clone(), rng: rngs[w].clone() })
-                    .collect();
-                ActorShard::new(problem, config.run.compression.clone(), config.run.seed, slots)
+                let workers: Vec<usize> = shard_workers(s, threads, m).collect();
+                let mut seg = StateMatrix::zeros(workers.len(), d);
+                for (slot, &w) in workers.iter().enumerate() {
+                    seg.row_mut(slot).copy_from_slice(xs0.row(w));
+                }
+                let shard_rngs = workers.iter().map(|&w| rngs[w].clone()).collect();
+                ActorShard::new(
+                    problem,
+                    config.run.compression.clone(),
+                    config.run.seed,
+                    s,
+                    workers,
+                    seg,
+                    shard_rngs,
+                )
             })
             .collect();
         let pool = ShardedPool::spawn(scope, shards, |shard: &mut ActorShard<'_, P>, cmd| {
             shard.handle(cmd)
         });
-        let exec = ActorExec { pool: &pool };
+        let exec = ActorExec::new(&pool, m);
         let result = drive(problem, matchings, sampler, policy, &config.run, exec, observer);
         drop(pool);
         result
@@ -364,7 +426,8 @@ where
 
     EngineResult {
         run: RunResult {
-            final_mean: mean_iterate(&xs),
+            final_mean: xs.mean(),
+            final_states: xs,
             total_time: clock.elapsed(),
             total_comm_units: total_comm,
             metrics,

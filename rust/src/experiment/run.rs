@@ -20,6 +20,7 @@ use crate::rng::Rng;
 use crate::sim::{
     run_decentralized_observed, LogisticProblem, LogisticSpec, QuadraticProblem, RunResult,
 };
+use crate::state::StateMatrix;
 
 /// The unified outcome of a spec-driven run: plan-derived quantities,
 /// the metric series, and summary statistics from whichever backend
@@ -37,6 +38,11 @@ pub struct ExperimentResult {
     pub metrics: Recorder,
     /// Final averaged iterate x̄.
     pub final_mean: Vec<f64>,
+    /// Every worker's final iterate, straight from the run's state arena
+    /// (one row per worker). `Some` for single runs; [`run_sweep`] drops
+    /// each grid point's arena (keeping only `final_mean`) so a large
+    /// sweep does not retain one full `workers × dim` matrix per point.
+    pub final_states: Option<StateMatrix>,
     /// Total virtual time elapsed.
     pub total_time: f64,
     /// Total communication units spent.
@@ -84,6 +90,7 @@ impl ExperimentResult {
             num_matchings: plan.decomposition.len(),
             metrics: r.metrics,
             final_mean: r.final_mean,
+            final_states: Some(r.final_states),
             total_time: r.total_time,
             total_comm_units: r.total_comm_units,
             dropped_links: 0,
@@ -100,6 +107,7 @@ impl ExperimentResult {
             num_matchings: plan.decomposition.len(),
             metrics: r.run.metrics,
             final_mean: r.run.final_mean,
+            final_states: Some(r.run.final_states),
             total_time: r.run.total_time,
             total_comm_units: r.run.total_comm_units,
             dropped_links: r.dropped_links,
@@ -116,6 +124,7 @@ impl ExperimentResult {
             num_matchings: plan.decomposition.len(),
             metrics: r.run.metrics,
             final_mean: r.run.final_mean,
+            final_states: Some(r.run.final_states),
             total_time: r.run.total_time,
             total_comm_units: r.run.total_comm_units,
             dropped_links: r.dropped_links,
@@ -300,7 +309,14 @@ pub fn run_sweep(
     let results = sweep_parallel_streaming(
         &points,
         threads,
-        |_i, point| run_planned(&point.0, &point.1, &mut NoopObserver),
+        // Per-point arenas are dropped right away: a sweep keeps summary
+        // statistics and series, not one workers × dim matrix per point.
+        |_i, point| {
+            run_planned(&point.0, &point.1, &mut NoopObserver).map(|mut r| {
+                r.final_states = None;
+                r
+            })
+        },
         |i, r| {
             if let Ok(res) = r {
                 observer.on_point(i, res);
@@ -334,10 +350,23 @@ mod tests {
         let sim = run(&quick_spec()).unwrap();
         let engine = run(&quick_spec().backend(Backend::EngineSequential)).unwrap();
         assert_eq!(sim.final_mean, engine.final_mean);
+        assert_eq!(sim.final_states, engine.final_states);
+        assert!(sim.final_states.is_some(), "single runs expose the final arena");
         assert_eq!(sim.total_time, engine.total_time);
         assert_eq!(sim.total_comm_units, engine.total_comm_units);
         assert_eq!(sim.events, 0);
         assert!(engine.events > 0);
+    }
+
+    #[test]
+    fn actors_single_thread_matches_sequential_engine() {
+        // threads >= 1 is accepted for the actors backend; one thread
+        // must reproduce the sequential engine exactly.
+        let seq = run(&quick_spec().backend(Backend::EngineSequential)).unwrap();
+        let act = run(&quick_spec().backend(Backend::EngineActors { threads: 1 })).unwrap();
+        assert_eq!(act.final_mean, seq.final_mean);
+        assert_eq!(act.final_states, seq.final_states);
+        assert_eq!(act.total_time, seq.total_time);
     }
 
     #[test]
@@ -425,6 +454,9 @@ mod tests {
         let mut obs = Points(Vec::new());
         let results = run_sweep(&base, &budgets, 2, &mut obs).unwrap();
         assert_eq!(results.len(), 3);
+        for (_, r) in &results {
+            assert!(r.final_states.is_none(), "sweeps drop per-point arenas");
+        }
         let mut seen = obs.0.clone();
         seen.sort_unstable();
         assert_eq!(seen, vec![0, 1, 2], "every point must stream exactly once");

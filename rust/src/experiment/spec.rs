@@ -153,7 +153,9 @@ pub enum Backend {
     /// The event-driven engine, in-process sequential executor.
     EngineSequential,
     /// The event-driven engine's bounded actor pool: all workers
-    /// multiplexed over `min(threads, workers)` OS threads.
+    /// multiplexed over `min(threads, workers)` OS threads. `threads`
+    /// must be >= 1; the pool never changes results, only wall-clock
+    /// (one thread degenerates to the sequential engine).
     EngineActors { threads: usize },
     /// The barrier-free asynchronous gossip runtime
     /// ([`crate::gossip::run_async`]): per-worker virtual clocks,
@@ -442,10 +444,11 @@ impl ExperimentSpec {
             None => {}
         }
         if let Backend::EngineActors { threads } = self.backend {
-            if threads < 2 {
+            if threads == 0 {
                 return Err(format!(
-                    "backend: actors needs threads >= 2 (got {threads}); \
-                     use the 'engine' backend for sequential execution"
+                    "backend: actors needs threads >= 1 (got {threads}); \
+                     a one-thread pool is valid and matches the sequential \
+                     engine bit-for-bit"
                 ));
             }
         }
@@ -1030,7 +1033,7 @@ mod tests {
             (base().policy("straggler:99:2.0"), "policy"),
             (base().delay("maxdeg").policy("flaky:0.2").backend(Backend::EngineSequential), "policy"),
             (base().policy("flaky:0.2"), "policy"),
-            (base().backend(Backend::EngineActors { threads: 1 }), "backend"),
+            (base().backend(Backend::EngineActors { threads: 0 }), "backend"),
             (
                 base().compression(Compression::TopK { frac: 0.0 }),
                 "run: compression",
@@ -1040,6 +1043,17 @@ mod tests {
             let err = spec.validate().unwrap_err();
             assert!(err.contains(needle), "expected '{needle}' in: {err}");
         }
+    }
+
+    #[test]
+    fn actors_backend_accepts_a_single_thread() {
+        // The shared pool handles one thread fine (and matches the
+        // sequential engine bit-for-bit), so threads >= 1 validates.
+        ExperimentSpec::new("fig1")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::EngineActors { threads: 1 })
+            .validated()
+            .unwrap();
     }
 
     #[test]

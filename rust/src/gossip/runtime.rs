@@ -46,7 +46,8 @@ use crate::experiment::{NoopObserver, Observer};
 use crate::metrics::Recorder;
 use crate::rng::Rng;
 use crate::sim::kernel::{edge_diff_message, init_iterates, record_metrics, worker_streams};
-use crate::sim::{mean_iterate, Problem, RunConfig, RunResult};
+use crate::sim::{Problem, RunConfig, RunResult};
+use crate::state::{SnapshotPool, StateMatrix};
 use crate::topology::TopologySampler;
 use std::collections::{BTreeMap, VecDeque};
 
@@ -166,29 +167,34 @@ pub struct AsyncResult {
 
 /// Where local gradient steps execute. Gradients are evaluated from the
 /// compute-start iterate with the worker's private RNG stream, so the
-/// result is identical whichever implementation runs it.
+/// result is identical whichever implementation runs it. `harvest_into`
+/// copies the finished gradient into the caller's scratch row — the
+/// gradient buffers themselves are arena rows (inline) or recycled
+/// vectors (pool), so the steady state allocates nothing per step.
 trait GradSource {
     fn dispatch(&mut self, worker: usize, round: usize, x: &[f64]);
-    fn harvest(&mut self, worker: usize, round: usize) -> Vec<f64>;
+    fn harvest_into(&mut self, worker: usize, round: usize, out: &mut [f64]);
 }
 
 struct InlineGrad<'p, P: Problem + ?Sized> {
     problem: &'p P,
     rngs: Vec<Rng>,
-    ready: Vec<Option<(usize, Vec<f64>)>>,
+    /// One arena row per worker holds its in-flight gradient.
+    grads: StateMatrix,
+    /// The round each worker's gradient row belongs to.
+    ready: Vec<Option<usize>>,
 }
 
 impl<P: Problem + ?Sized> GradSource for InlineGrad<'_, P> {
     fn dispatch(&mut self, worker: usize, round: usize, x: &[f64]) {
-        let mut g = vec![0.0; x.len()];
-        self.problem.stoch_grad(worker, x, &mut self.rngs[worker], &mut g);
-        self.ready[worker] = Some((round, g));
+        self.problem.stoch_grad(worker, x, &mut self.rngs[worker], self.grads.row_mut(worker));
+        self.ready[worker] = Some(round);
     }
 
-    fn harvest(&mut self, worker: usize, round: usize) -> Vec<f64> {
-        let (r, g) = self.ready[worker].take().expect("gradient not dispatched");
+    fn harvest_into(&mut self, worker: usize, round: usize, out: &mut [f64]) {
+        let r = self.ready[worker].take().expect("gradient not dispatched");
         assert_eq!(r, round, "gradient round mismatch");
-        g
+        out.copy_from_slice(self.grads.row(worker));
     }
 }
 
@@ -209,14 +215,18 @@ struct GradShard<'p, P: Problem + ?Sized> {
     shards: usize,
     /// RNG streams of the workers this shard owns, in slot order.
     rngs: Vec<Rng>,
+    /// Gradient scratch (the command's `x` buffer is recycled as the
+    /// reply's `grad` buffer).
+    scratch: Vec<f64>,
 }
 
 impl<P: Problem + ?Sized> GradShard<'_, P> {
     fn handle(&mut self, cmd: GradCmd) -> GradReply {
-        let slot = shard_slot(cmd.worker, self.shards);
-        let mut g = vec![0.0; cmd.x.len()];
-        self.problem.stoch_grad(cmd.worker, &cmd.x, &mut self.rngs[slot], &mut g);
-        GradReply { worker: cmd.worker, round: cmd.round, grad: g }
+        let GradCmd { worker, round, mut x } = cmd;
+        let slot = shard_slot(worker, self.shards);
+        self.problem.stoch_grad(worker, &x, &mut self.rngs[slot], &mut self.scratch);
+        x.copy_from_slice(&self.scratch);
+        GradReply { worker, round, grad: x }
     }
 }
 
@@ -224,18 +234,24 @@ struct PoolGrad<'a> {
     pool: &'a ShardedPool<GradCmd, GradReply>,
     shards: usize,
     stash: BTreeMap<(usize, usize), Vec<f64>>,
+    /// Recycled dispatch/reply buffers.
+    spare: Vec<Vec<f64>>,
 }
 
 impl GradSource for PoolGrad<'_> {
     fn dispatch(&mut self, worker: usize, round: usize, x: &[f64]) {
-        self.pool
-            .send(shard_of(worker, self.shards), GradCmd { worker, round, x: x.to_vec() });
+        let mut buf = self.spare.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(x);
+        self.pool.send(shard_of(worker, self.shards), GradCmd { worker, round, x: buf });
     }
 
-    fn harvest(&mut self, worker: usize, round: usize) -> Vec<f64> {
+    fn harvest_into(&mut self, worker: usize, round: usize, out: &mut [f64]) {
         loop {
             if let Some(g) = self.stash.remove(&(worker, round)) {
-                return g;
+                out.copy_from_slice(&g);
+                self.spare.push(g);
+                return;
             }
             let reply = self.pool.recv();
             self.stash.insert((reply.worker, reply.round), reply.grad);
@@ -249,24 +265,27 @@ impl GradSource for PoolGrad<'_> {
 
 /// One arrived-but-unapplied round of a worker: the post-step snapshot
 /// the exchanges read from, and the per-edge mix contributions collected
-/// until every incident edge completes.
+/// until every incident edge completes. All model-sized buffers are rows
+/// borrowed from the driver's [`SnapshotPool`] and recycled when the
+/// round applies — no per-round heap allocation at steady state.
 struct RoundMix {
-    /// Post-step, pre-mix iterate of this worker at this round.
-    snapshot: Vec<f64>,
+    /// Post-step, pre-mix iterate of this worker at this round (pool
+    /// row).
+    snapshot: usize,
     /// Virtual time the snapshot was produced (exchange lower bound).
     ready: f64,
     /// This worker's incident edge indices into the round's global edge
     /// list, ascending.
     incident: Vec<usize>,
-    /// Signed, staleness-damped diff per incident edge, filled as links
-    /// complete; folded in `incident` order at application so the fold
-    /// matches the synchronous kernel regardless of completion order.
-    slots: Vec<Option<Vec<f64>>>,
+    /// Signed, staleness-damped diff per incident edge (pool rows),
+    /// filled as links complete; folded in `incident` order at
+    /// application so the fold matches the synchronous kernel regardless
+    /// of completion order.
+    slots: Vec<Option<usize>>,
     remaining: usize,
 }
 
 struct Worker {
-    x: Vec<f64>,
     lr: f64,
     /// Next round this worker will compute.
     next_round: usize,
@@ -292,9 +311,8 @@ struct Worker {
 }
 
 impl Worker {
-    fn new(x: Vec<f64>, lr: f64) -> Worker {
+    fn new(lr: f64) -> Worker {
         Worker {
-            x,
             lr,
             next_round: 0,
             ver: 0,
@@ -325,16 +343,25 @@ struct Driver<'a, P: Problem + ?Sized> {
     /// timestamps are authoritative here, unlike the barrier engine).
     comm_scale: f64,
     workers: Vec<Worker>,
+    /// Every worker's live iterate, one arena row per worker.
+    arena: StateMatrix,
+    /// Recycled rows for round snapshots, staged per-edge contributions
+    /// and record snapshots.
+    snap: SnapshotPool,
     queue: EventQueue,
     metrics: Recorder,
-    /// Per record-round: each worker's iterate captured when its
-    /// `through` first passed that round.
-    record_snaps: BTreeMap<usize, Vec<Option<Vec<f64>>>>,
+    /// Per record-round: each worker's iterate (pool row) captured when
+    /// its `through` first passed that round.
+    record_snaps: BTreeMap<usize, Vec<Option<usize>>>,
+    /// Staging arena the completed record snapshots are gathered into
+    /// before metrics run (worker order).
+    record_stage: StateMatrix,
     /// Rounds fully applied by every worker (drives `on_iteration`).
     global_through: usize,
     total_comm: f64,
     dropped: usize,
     max_time: f64,
+    grad: Vec<f64>,
     diff: Vec<f64>,
     delta: Vec<f64>,
 }
@@ -369,7 +396,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
             self.workers[w].idle += (now - t0).max(0.0);
         }
         let ct = self.policy.compute_time(w, r);
-        grads.dispatch(w, r, &self.workers[w].x);
+        grads.dispatch(w, r, self.arena.row(w));
         self.workers[w].computing = true;
         self.queue.schedule(now + ct, EventKind::ComputeDone { worker: w, k: r });
     }
@@ -383,15 +410,18 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
         observer: &mut dyn Observer,
     ) {
         let plan = self.plan;
-        let g = grads.harvest(w, r);
         {
+            let mut grad = std::mem::take(&mut self.grad);
+            grads.harvest_into(w, r, &mut grad);
             let wk = &mut self.workers[w];
             wk.computing = false;
             wk.ver = r + 1;
             let lr = wk.lr;
-            for (xi, &gi) in wk.x.iter_mut().zip(&g) {
+            for (xi, &gi) in self.arena.row_mut(w).iter_mut().zip(grad.iter()) {
                 *xi -= lr * gi;
             }
+            self.grad = grad;
+            let wk = &mut self.workers[w];
             if (r + 1) % self.cfg.lr_decay_every == 0 {
                 wk.lr *= self.cfg.lr_decay;
             }
@@ -404,14 +434,14 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
                 // The synchronous kernel adds `α · 0` to non-incident
                 // workers of an active round; replay that exactly.
                 let alpha = self.cfg.alpha;
-                for xi in self.workers[w].x.iter_mut() {
+                for xi in self.arena.row_mut(w).iter_mut() {
                     *xi += alpha * 0.0;
                 }
             }
             self.after_round_applied(w, t, observer);
         } else {
             let n = incident.len();
-            let snapshot = self.workers[w].x.clone();
+            let snapshot = self.snap.alloc_from(self.arena.row(w));
             {
                 let wk = &mut self.workers[w];
                 for &idx in &incident {
@@ -490,35 +520,37 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
             wk.staleness_max = wk.staleness_max.max(tau);
         }
         if !failed {
+            let su = self.workers[u].open[&k].snapshot;
+            let sv = self.workers[v].open[&k].snapshot;
             let mut diff = std::mem::take(&mut self.diff);
-            {
-                let su = &self.workers[u].open[&k].snapshot;
-                let sv = &self.workers[v].open[&k].snapshot;
-                edge_diff_message(
-                    su,
-                    sv,
-                    &mut diff,
-                    self.cfg.compression.as_ref(),
-                    self.cfg.seed,
-                    k,
-                    j,
-                    u,
-                    v,
-                );
-            }
+            edge_diff_message(
+                self.snap.row(su),
+                self.snap.row(sv),
+                &mut diff,
+                self.cfg.compression.as_ref(),
+                self.cfg.seed,
+                k,
+                j,
+                u,
+                v,
+            );
             // Staleness-aware pairwise rule: damp the exchange by
             // 1 / (1 + τ). τ = 0 leaves the synchronous update intact
             // (±1.0 · diff is bit-exact).
             let damp = 1.0 / (1.0 + tau as f64);
             let plan = self.plan;
             for (w, sign) in [(u, 1.0), (v, -1.0)] {
+                let staged = self.snap.alloc();
+                for (o, &di) in self.snap.row_mut(staged).iter_mut().zip(diff.iter()) {
+                    *o = sign * damp * di;
+                }
                 let rm = self.workers[w].open.get_mut(&k).expect("round open");
                 let pos = rm
                     .incident
                     .iter()
                     .position(|&e| plan.rounds[k][e] == (j, u, v))
                     .expect("edge incident to endpoint");
-                rm.slots[pos] = Some(diff.iter().map(|&d| sign * damp * d).collect());
+                rm.slots[pos] = Some(staged);
             }
             self.diff = diff;
         }
@@ -543,16 +575,21 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
         let rm = self.workers[w].open.remove(&k).expect("round open");
         let mut delta = std::mem::take(&mut self.delta);
         delta.iter_mut().for_each(|v| *v = 0.0);
-        for c in rm.slots.iter().flatten() {
-            for (di, &ci) in delta.iter_mut().zip(c) {
+        for &staged in rm.slots.iter().flatten() {
+            for (di, &ci) in delta.iter_mut().zip(self.snap.row(staged)) {
                 *di += ci;
             }
         }
         let alpha = self.cfg.alpha;
-        for (xi, &di) in self.workers[w].x.iter_mut().zip(&delta) {
+        for (xi, &di) in self.arena.row_mut(w).iter_mut().zip(&delta) {
             *xi += alpha * di;
         }
         self.delta = delta;
+        // The round is absorbed: recycle its pool rows.
+        self.snap.release(rm.snapshot);
+        for staged in rm.slots.into_iter().flatten() {
+            self.snap.release(staged);
+        }
         self.after_round_applied(w, t, observer);
     }
 
@@ -570,15 +607,25 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
         self.workers[w].through = new_through;
         for r in old..new_through {
             if self.is_record_round(r) {
-                let x = self.workers[w].x.clone();
+                let row = self.snap.alloc_from(self.arena.row(w));
                 let m = self.m;
                 let entry = self.record_snaps.entry(r).or_insert_with(|| vec![None; m]);
-                entry[w] = Some(x);
+                entry[w] = Some(row);
                 if entry.iter().all(Option::is_some) {
-                    let snap = self.record_snaps.remove(&r).expect("record entry");
-                    let xs: Vec<Vec<f64>> =
-                        snap.into_iter().map(|s| s.expect("snapshot")).collect();
-                    record_metrics(self.problem, r + 1, t, self.total_comm, &xs, &mut self.metrics);
+                    let rows = self.record_snaps.remove(&r).expect("record entry");
+                    for (wi, row) in rows.into_iter().enumerate() {
+                        let row = row.expect("snapshot");
+                        self.record_stage.row_mut(wi).copy_from_slice(self.snap.row(row));
+                        self.snap.release(row);
+                    }
+                    record_metrics(
+                        self.problem,
+                        r + 1,
+                        t,
+                        self.total_comm,
+                        &self.record_stage,
+                        &mut self.metrics,
+                    );
                     observer.on_record(r + 1, t, &self.metrics);
                 }
             }
@@ -628,14 +675,18 @@ fn drive_async<P: Problem + ?Sized>(
         iterations: cfg.iterations,
         m,
         comm_scale,
-        workers: xs0.into_iter().map(|x| Worker::new(x, cfg.lr)).collect(),
+        workers: (0..m).map(|_| Worker::new(cfg.lr)).collect(),
+        arena: xs0,
+        snap: SnapshotPool::new(d),
         queue: EventQueue::new(),
         metrics,
         record_snaps: BTreeMap::new(),
+        record_stage: StateMatrix::zeros(m, d),
         global_through: 0,
         total_comm: 0.0,
         dropped: 0,
         max_time: 0.0,
+        grad: vec![0.0; d],
         diff: vec![0.0; d],
         delta: vec![0.0; d],
     };
@@ -667,7 +718,6 @@ fn drive_async<P: Problem + ?Sized>(
         );
     }
 
-    let xs: Vec<Vec<f64>> = driver.workers.iter().map(|wk| wk.x.clone()).collect();
     let stats = AsyncStats {
         per_worker: driver
             .workers
@@ -683,7 +733,8 @@ fn drive_async<P: Problem + ?Sized>(
     };
     AsyncResult {
         run: RunResult {
-            final_mean: mean_iterate(&xs),
+            final_mean: driver.arena.mean(),
+            final_states: driver.arena,
             total_time: driver.max_time,
             total_comm_units: driver.total_comm,
             metrics: driver.metrics,
@@ -727,12 +778,14 @@ where
     S: TopologySampler,
 {
     let m = problem.num_workers();
+    let d = problem.dim();
     let plan = RoundPlan::generate(sampler, matchings, config.run.iterations);
     let threads = config.threads.min(m);
     if threads <= 1 {
         let mut grads = InlineGrad {
             problem,
             rngs: worker_streams(config.run.seed, m),
+            grads: StateMatrix::zeros(m, d),
             ready: (0..m).map(|_| None).collect(),
         };
         drive_async(problem, &plan, policy, config, &mut grads, observer)
@@ -744,13 +797,19 @@ where
                     problem,
                     shards: threads,
                     rngs: shard_workers(s, threads, m).map(|w| all_rngs[w].clone()).collect(),
+                    scratch: vec![0.0; d],
                 })
                 .collect();
             let pool =
                 ShardedPool::spawn(scope, shards, |st: &mut GradShard<'_, P>, c: GradCmd| {
                     st.handle(c)
                 });
-            let mut grads = PoolGrad { pool: &pool, shards: threads, stash: BTreeMap::new() };
+            let mut grads = PoolGrad {
+                pool: &pool,
+                shards: threads,
+                stash: BTreeMap::new(),
+                spare: Vec::new(),
+            };
             let result = drive_async(problem, &plan, policy, config, &mut grads, observer);
             drop(grads);
             drop(pool);

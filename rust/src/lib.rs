@@ -65,8 +65,13 @@
 //!
 //! ## Execution backends
 //!
-//! The backends share one step/mix kernel ([`sim::kernel`]), so they
-//! agree **bit-for-bit** per seed:
+//! The backends share one **arena-backed** step/mix kernel: all worker
+//! iterates live in a contiguous [`state::StateMatrix`] (one row per
+//! worker), scratch comes from once-per-run pools, and the gossip fold
+//! ([`state::MixKernel`], bound to run semantics by [`sim::kernel`])
+//! runs in place with zero per-message heap allocation. Every backend
+//! therefore agrees **bit-for-bit** per seed (pinned against the golden
+//! fixtures of `rust/tests/golden.rs`):
 //!
 //! - [`sim::run_decentralized`] — the sequential reference loop with
 //!   closed-form time accounting ([`delay::DelayModel`]).
@@ -117,4 +122,5 @@ pub mod rng;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sim;
+pub mod state;
 pub mod topology;

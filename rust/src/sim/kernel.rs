@@ -1,10 +1,11 @@
 //! The single step/mix kernel shared by the sequential simulator
-//! ([`crate::sim::run_decentralized`]) and the event-driven engine
-//! ([`crate::engine`]).
+//! ([`crate::sim::run_decentralized`]), the event-driven engine
+//! ([`crate::engine`]) and the asynchronous gossip runtime
+//! ([`crate::gossip`]).
 //!
-//! Both execution paths must produce **bit-for-bit identical**
-//! trajectories for the same seed, so everything that touches the
-//! iterates or draws randomness for them lives here exactly once:
+//! All execution paths must produce **bit-for-bit identical**
+//! trajectories for the same seed, so everything that draws randomness
+//! for the iterates lives here exactly once:
 //!
 //! - [`worker_streams`] — the per-worker gradient-noise RNG derivation.
 //!   Giving each worker its own stream (instead of one shared generator
@@ -12,21 +13,29 @@
 //!   mode reproducible: a worker's draws depend only on `(seed, worker)`,
 //!   never on thread scheduling.
 //! - [`init_iterates`] — the common initial point (Theorem 1 starts all
-//!   workers at the same iterate).
-//! - [`local_sgd_step`] — one worker's local stochastic-gradient step.
-//! - [`apply_gossip`] / [`fold_edge_into_deltas`] — the simultaneous
-//!   gossip mix `X ← X + α Σ_{j∈activated} (−L_j) X`, applied edge-wise,
-//!   with optional message compression and an optional set of dead links
-//!   (the engine's failure injection; the sequential simulator passes
-//!   none).
+//!   workers at the same iterate), materialized as a
+//!   [`StateMatrix`] arena.
+//! - [`local_sgd_step`] — one worker's local stochastic-gradient step
+//!   over an arena row.
+//! - [`apply_gossip`] — the simultaneous gossip mix
+//!   `X ← X + α Σ_{j∈activated} (−L_j) X`, applied edge-wise in place
+//!   over arena rows by the shared [`MixKernel`]
+//!   ([`crate::state::kernel`]), with optional message compression and an
+//!   optional set of dead links (the engine's failure injection; the
+//!   sequential simulator passes none).
 //! - [`edge_rng`] — compression randomness derived per
 //!   `(seed, iteration, matching, edge)`, so both endpoints of a link —
-//!   and both execution paths — quantize a message identically no matter
+//!   and all execution paths — quantize a message identically no matter
 //!   in which order edges are processed.
+//!
+//! The state *representation* (contiguous arena, scratch pools, the mix
+//! fold itself) lives in [`crate::state`]; this module binds it to the
+//! run semantics (RNG streams, the step rule, metric recording).
 
 use super::{Compression, Problem};
 use crate::graph::Graph;
 use crate::rng::Rng;
+use crate::state::{DeltaPool, MixKernel, StateMatrix};
 
 /// Domain-separation constant for the gossip/compression RNG stream.
 pub const MIX_STREAM_SALT: u64 = 0xc03f_5eed;
@@ -44,14 +53,14 @@ pub fn worker_streams(seed: u64, m: usize) -> Vec<Rng> {
         .collect()
 }
 
-/// Initial iterates: every worker starts from the same random point.
-pub fn init_iterates(seed: u64, m: usize, d: usize) -> Vec<Vec<f64>> {
-    let mut rng = Rng::new(seed);
-    let x0: Vec<f64> = (0..d).map(|_| 0.01 * rng.normal()).collect();
-    vec![x0; m]
+/// Initial iterates: every worker starts from the same random point, in
+/// one contiguous arena.
+pub fn init_iterates(seed: u64, m: usize, d: usize) -> StateMatrix {
+    StateMatrix::init(seed, m, d)
 }
 
-/// One worker's local SGD step: `x ← x − η g(x)`. `grad` is scratch.
+/// One worker's local SGD step: `x ← x − η g(x)`. `grad` is scratch
+/// (lives in the run's [`DeltaPool`]).
 pub fn local_sgd_step<P: Problem + ?Sized>(
     problem: &P,
     worker: usize,
@@ -78,22 +87,10 @@ pub fn edge_rng(seed: u64, k: usize, j: usize, u: usize, v: usize) -> Rng {
     Rng::new(seed ^ MIX_STREAM_SALT ^ h)
 }
 
-/// Reusable scratch buffers for [`apply_gossip`].
-pub struct GossipScratch {
-    deltas: Vec<Vec<f64>>,
-    diff: Vec<f64>,
-}
-
-impl GossipScratch {
-    pub fn new(m: usize, d: usize) -> Self {
-        GossipScratch { deltas: vec![vec![0.0; d]; m], diff: vec![0.0; d] }
-    }
-}
-
 /// Compute the canonical compressed difference message of edge `(u,v)`
 /// (`u < v` in matching storage): `diff = x_v − x_u`, compressed in place
-/// when compression is configured. Shared by the full-state mix below and
-/// the engine's per-worker actor mix.
+/// when compression is configured. Shared by the full-state mix and the
+/// per-worker folds of the actor shards and the async runtime.
 pub fn edge_diff_message(
     xu: &[f64],
     xv: &[f64],
@@ -114,23 +111,15 @@ pub fn edge_diff_message(
     }
 }
 
-/// Fold one edge's (already computed) message into the delta accumulators:
-/// `Δ_u += diff`, `Δ_v −= diff`.
-pub fn fold_edge_into_deltas(deltas: &mut [Vec<f64>], u: usize, v: usize, diff: &[f64]) {
-    for i in 0..diff.len() {
-        deltas[u][i] += diff[i];
-        deltas[v][i] -= diff[i];
-    }
-}
-
-/// Apply one simultaneous gossip step in place:
+/// Apply one simultaneous gossip step in place over the arena:
 /// `X ← X + α Σ_{j∈activated} (−L_j^live) X`, where `L_j^live` omits any
 /// links listed in `dead` (failure injection; `dead` uses the canonical
 /// `u < v` orientation). This is exactly the matrix product
 /// `X ← W⁽ᵏ⁾ X` when no links are dead (verified by
-/// `sim::runner::tests::edgewise_mix_equals_matrix_mix`).
+/// `sim::runner::tests::edgewise_mix_equals_matrix_mix`). Thin binding of
+/// [`MixKernel::apply`] to the run parameters.
 pub fn apply_gossip(
-    xs: &mut [Vec<f64>],
+    xs: &mut StateMatrix,
     matchings: &[Graph],
     activated: &[usize],
     alpha: f64,
@@ -138,56 +127,29 @@ pub fn apply_gossip(
     dead: Option<&[(usize, usize)]>,
     seed: u64,
     k: usize,
-    scratch: &mut GossipScratch,
+    pool: &mut DeltaPool,
 ) {
-    if activated.is_empty() {
-        return;
-    }
-    for dv in scratch.deltas.iter_mut() {
-        dv.iter_mut().for_each(|v| *v = 0.0);
-    }
-    for &j in activated {
-        for &(u, v) in matchings[j].edges() {
-            if let Some(dead) = dead {
-                if dead.contains(&(u, v)) {
-                    continue;
-                }
-            }
-            // Split-borrow xs to read two rows while writing the diff.
-            {
-                let (xu, xv) = (&xs[u], &xs[v]);
-                // Safe: u != v in a simple graph; read-only borrows.
-                let diff = &mut scratch.diff;
-                edge_diff_message(xu, xv, diff, compression, seed, k, j, u, v);
-            }
-            fold_edge_into_deltas(&mut scratch.deltas, u, v, &scratch.diff);
-        }
-    }
-    for (x, dv) in xs.iter_mut().zip(&scratch.deltas) {
-        for (xi, &di) in x.iter_mut().zip(dv) {
-            *xi += alpha * di;
-        }
-    }
+    MixKernel::new(seed, compression).apply(xs, matchings, activated, alpha, dead, k, pool);
 }
 
 /// Push the standard per-record metrics for the current state. Shared by
-/// the sequential runner and the engine so their [`crate::metrics::Recorder`]
-/// contents are comparable series-for-series.
+/// every runner so their [`crate::metrics::Recorder`] contents are
+/// comparable series-for-series.
 pub fn record_metrics<P: Problem + ?Sized>(
     problem: &P,
     k: usize,
     time: f64,
     comm: f64,
-    xs: &[Vec<f64>],
+    xs: &StateMatrix,
     metrics: &mut crate::metrics::Recorder,
 ) {
-    let mean = super::mean_iterate(xs);
+    let mean = xs.mean();
     let loss = problem.global_loss(&mean);
     metrics.push("loss_vs_iter", k as f64, loss);
     metrics.push("loss_vs_time", time, loss);
-    metrics.push("consensus_vs_iter", k as f64, super::consensus_distance(xs));
+    metrics.push("consensus_vs_iter", k as f64, xs.consensus_distance());
     metrics.push("comm_units_vs_iter", k as f64, comm);
-    let mut g = vec![0.0; xs[0].len()];
+    let mut g = vec![0.0; xs.dim()];
     problem.global_grad(&mean, &mut g);
     let gn2: f64 = g.iter().map(|v| v * v).sum();
     metrics.push("gradnorm2_vs_iter", k as f64, gn2);
@@ -223,8 +185,8 @@ mod tests {
     #[test]
     fn init_iterates_identical_across_workers() {
         let xs = init_iterates(3, 5, 8);
-        for x in &xs[1..] {
-            assert_eq!(x, &xs[0]);
+        for w in 1..5 {
+            assert_eq!(xs.row(w), xs.row(0));
         }
         assert_eq!(xs, init_iterates(3, 5, 8));
     }
@@ -246,12 +208,15 @@ mod tests {
         let m = 8;
         let dim = 6;
         let mut rng = Rng::new(9);
-        let mut xs: Vec<Vec<f64>> = (0..m)
-            .map(|_| (0..dim).map(|_| rng.normal()).collect())
-            .collect();
-        let mean_before = crate::sim::mean_iterate(&xs);
+        let mut xs = StateMatrix::zeros(m, dim);
+        for w in 0..m {
+            for x in xs.row_mut(w).iter_mut() {
+                *x = rng.normal();
+            }
+        }
+        let mean_before = xs.mean();
         let dead = vec![d.matchings[0].edges()[0]];
-        let mut scratch = GossipScratch::new(m, dim);
+        let mut pool = DeltaPool::new(m, dim);
         let activated: Vec<usize> = (0..d.len()).collect();
         apply_gossip(
             &mut xs,
@@ -262,51 +227,12 @@ mod tests {
             Some(&dead),
             5,
             0,
-            &mut scratch,
+            &mut pool,
         );
-        let mean_after = crate::sim::mean_iterate(&xs);
+        let mean_after = xs.mean();
         for (a, b) in mean_before.iter().zip(&mean_after) {
             assert!((a - b).abs() < 1e-12, "mean drifted: {a} vs {b}");
         }
-    }
-
-    #[test]
-    fn dead_link_freezes_only_that_exchange() {
-        let d = decompose(&paper_figure1_graph());
-        // Pick a matching with at least two links so one can stay live.
-        let j0 = (0..d.len())
-            .find(|&j| d.matchings[j].edges().len() >= 2)
-            .expect("fig1 decomposition has a multi-link matching");
-        let (u, v) = d.matchings[j0].edges()[0];
-        let m = 8;
-        let dim = 3;
-        let mut rng = Rng::new(4);
-        let xs0: Vec<Vec<f64>> = (0..m)
-            .map(|_| (0..dim).map(|_| rng.normal()).collect())
-            .collect();
-        // Activate only matching j0 with its first edge dead.
-        let mut with_dead = xs0.clone();
-        let mut scratch = GossipScratch::new(m, dim);
-        apply_gossip(
-            &mut with_dead,
-            &d.matchings,
-            &[j0],
-            0.2,
-            None,
-            Some(&[(u, v)]),
-            1,
-            0,
-            &mut scratch,
-        );
-        // u and v did not move; other endpoints of matching j0 did.
-        assert_eq!(with_dead[u], xs0[u]);
-        assert_eq!(with_dead[v], xs0[v]);
-        let moved = d.matchings[j0]
-            .edges()
-            .iter()
-            .filter(|&&e| e != (u, v))
-            .any(|&(a, _)| with_dead[a] != xs0[a]);
-        assert!(moved, "live links should still exchange");
     }
 
     #[test]

@@ -8,14 +8,15 @@
 //! trajectories bit-for-bit (enforced by `rust/tests/engine.rs`).
 
 use super::kernel::{
-    apply_gossip, init_iterates, local_sgd_step, record_metrics, worker_streams, GossipScratch,
+    apply_gossip, init_iterates, local_sgd_step, record_metrics, worker_streams,
 };
-use super::{mean_iterate, Compression, Problem};
+use super::{Compression, Problem};
 use crate::delay::{DelayModel, VirtualClock};
 use crate::experiment::{NoopObserver, Observer};
 use crate::graph::Graph;
 use crate::metrics::Recorder;
 use crate::rng::Rng;
+use crate::state::{DeltaPool, StateMatrix};
 use crate::topology::TopologySampler;
 
 /// Configuration for one simulated training run.
@@ -77,6 +78,9 @@ pub struct RunResult {
     pub metrics: Recorder,
     /// Final averaged iterate x̄.
     pub final_mean: Vec<f64>,
+    /// Every worker's final iterate — the run's state arena, one row per
+    /// worker.
+    pub final_states: StateMatrix,
     /// Total virtual time elapsed.
     pub total_time: f64,
     /// Total communication units spent.
@@ -119,8 +123,7 @@ pub fn run_decentralized_observed<P: Problem, S: TopologySampler>(
     let d = problem.dim();
     let mut xs = init_iterates(config.seed, m, d);
     let mut worker_rngs = worker_streams(config.seed, m);
-    let mut grad = vec![0.0; d];
-    let mut scratch = GossipScratch::new(m, d);
+    let mut pool = DeltaPool::new(m, d);
 
     let mut clock = VirtualClock::new(config.compute_units);
     let mut metrics = Recorder::new();
@@ -133,8 +136,8 @@ pub fn run_decentralized_observed<P: Problem, S: TopologySampler>(
 
     for k in 0..config.iterations {
         // --- local SGD step on every worker -------------------------
-        for (w, x) in xs.iter_mut().enumerate() {
-            local_sgd_step(problem, w, lr, x, &mut worker_rngs[w], &mut grad);
+        for w in 0..m {
+            local_sgd_step(problem, w, lr, xs.row_mut(w), &mut worker_rngs[w], pool.grad_mut());
         }
 
         // --- consensus over the activated topology ------------------
@@ -148,7 +151,7 @@ pub fn run_decentralized_observed<P: Problem, S: TopologySampler>(
             None,
             config.seed,
             k,
-            &mut scratch,
+            &mut pool,
         );
 
         // --- time accounting ----------------------------------------
@@ -171,7 +174,8 @@ pub fn run_decentralized_observed<P: Problem, S: TopologySampler>(
     }
 
     RunResult {
-        final_mean: mean_iterate(&xs),
+        final_mean: xs.mean(),
+        final_states: xs,
         total_time: clock.elapsed(),
         total_comm_units: total_comm,
         metrics,
@@ -306,7 +310,7 @@ mod tests {
     fn edgewise_mix_equals_matrix_mix() {
         // The edge-wise delta application must equal X ← WX exactly.
         use crate::linalg::Mat;
-        use crate::sim::kernel::{apply_gossip, GossipScratch};
+        use crate::sim::kernel::apply_gossip;
         use crate::topology::mixing_matrix;
         let g = paper_figure1_graph();
         let d = decompose(&g);
@@ -321,8 +325,8 @@ mod tests {
             .collect();
 
         // Edge-wise (the shared kernel, as in run_decentralized).
-        let mut edgewise = xs.clone();
-        let mut scratch = GossipScratch::new(m, dim);
+        let mut edgewise = StateMatrix::from_vecs(&xs);
+        let mut pool = DeltaPool::new(m, dim);
         apply_gossip(
             &mut edgewise,
             &d.matchings,
@@ -332,7 +336,7 @@ mod tests {
             None,
             0,
             0,
-            &mut scratch,
+            &mut pool,
         );
 
         // Matrix: W (m×m) times X (m×dim).
@@ -347,7 +351,7 @@ mod tests {
         for r in 0..m {
             for c in 0..dim {
                 assert!(
-                    (mixed.get(r, c) - edgewise[r][c]).abs() < 1e-12,
+                    (mixed.get(r, c) - edgewise.row(r)[c]).abs() < 1e-12,
                     "mismatch at ({r},{c})"
                 );
             }

@@ -1,0 +1,308 @@
+//! The contiguous model-state arena.
+//!
+//! [`StateMatrix`] stores all `rows` worker iterates in **one** row-major
+//! `rows × dim` buffer. Every execution backend (sequential simulator,
+//! event-driven engine, actor pool, asynchronous gossip runtime) keeps its
+//! iterates — and its scratch state — in arenas instead of `Vec<Vec<f64>>`,
+//! which buys:
+//!
+//! - one allocation per run instead of one per worker (and none at all in
+//!   the mixing hot path — see [`super::DeltaPool`]),
+//! - cache-friendly row-major traversal for the gossip fold,
+//! - a single place for later performance work (SIMD chunking,
+//!   compression staging, multi-node sharding) to land.
+//!
+//! The arena changes the *representation* only: row accessors hand out
+//! exactly the `&[f64]` / `&mut [f64]` slices the kernels always operated
+//! on, in the same iteration order, so trajectories are bit-for-bit
+//! identical to the historical `Vec<Vec<f64>>` code (enforced by
+//! `rust/tests/golden.rs`).
+
+use crate::rng::Rng;
+
+/// All worker iterates of a run in one contiguous row-major buffer.
+///
+/// Row `w` is worker `w`'s iterate `x_w ∈ R^dim`. Use [`StateMatrix::row`]
+/// / [`StateMatrix::row_mut`] for raw slices, [`StateMatrix::view`] /
+/// [`StateMatrix::view_mut`] for typed views that remember their row
+/// index, and [`StateMatrix::pair`] to read two distinct rows at once
+/// (the edge-wise gossip access pattern).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StateMatrix {
+    data: Vec<f64>,
+    rows: usize,
+    dim: usize,
+}
+
+impl StateMatrix {
+    /// A `rows × dim` arena of zeros.
+    pub fn zeros(rows: usize, dim: usize) -> StateMatrix {
+        StateMatrix { data: vec![0.0; rows * dim], rows, dim }
+    }
+
+    /// The common initial point: every worker starts from the same random
+    /// iterate (Theorem 1 starts all workers at the same point). Exactly
+    /// the historical `init_iterates` derivation: `0.01 · N(0,1)` per
+    /// coordinate from `Rng::new(seed)`.
+    pub fn init(seed: u64, rows: usize, dim: usize) -> StateMatrix {
+        let mut rng = Rng::new(seed);
+        let x0: Vec<f64> = (0..dim).map(|_| 0.01 * rng.normal()).collect();
+        let mut m = StateMatrix::zeros(rows, dim);
+        for r in 0..rows {
+            m.row_mut(r).copy_from_slice(&x0);
+        }
+        m
+    }
+
+    /// Build an arena from per-worker vectors (tests, compatibility).
+    /// All vectors must share one length.
+    pub fn from_vecs(xs: &[Vec<f64>]) -> StateMatrix {
+        let rows = xs.len();
+        let dim = if rows == 0 { 0 } else { xs[0].len() };
+        let mut m = StateMatrix::zeros(rows, dim);
+        for (r, x) in xs.iter().enumerate() {
+            m.row_mut(r).copy_from_slice(x);
+        }
+        m
+    }
+
+    /// Copy out as per-worker vectors (serialization, compatibility).
+    pub fn to_vecs(&self) -> Vec<Vec<f64>> {
+        self.iter_rows().map(|r| r.to_vec()).collect()
+    }
+
+    /// Number of rows (workers).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row length (parameter dimension `d`).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Row `r` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Typed read view of row `r` (carries the row index).
+    #[inline]
+    pub fn view(&self, r: usize) -> RowRef<'_> {
+        RowRef { row: r, data: self.row(r) }
+    }
+
+    /// Typed write view of row `r` (carries the row index).
+    #[inline]
+    pub fn view_mut(&mut self, r: usize) -> RowMut<'_> {
+        let dim = self.dim;
+        RowMut { row: r, data: &mut self.data[r * dim..(r + 1) * dim] }
+    }
+
+    /// Two distinct rows at once — the gossip kernel reads both endpoints
+    /// of an edge from the pre-mix state. Panics if `u == v`.
+    #[inline]
+    pub fn pair(&self, u: usize, v: usize) -> (&[f64], &[f64]) {
+        assert_ne!(u, v, "pair: rows must be distinct");
+        (self.row(u), self.row(v))
+    }
+
+    /// Two distinct mutable rows at once (split borrow). Panics if
+    /// `u == v`.
+    pub fn pair_mut(&mut self, u: usize, v: usize) -> (&mut [f64], &mut [f64]) {
+        assert_ne!(u, v, "pair_mut: rows must be distinct");
+        let dim = self.dim;
+        let (lo, hi) = (u.min(v), u.max(v));
+        let (head, tail) = self.data.split_at_mut(hi * dim);
+        let lo_row = &mut head[lo * dim..(lo + 1) * dim];
+        let hi_row = &mut tail[..dim];
+        if u < v {
+            (lo_row, hi_row)
+        } else {
+            (hi_row, lo_row)
+        }
+    }
+
+    /// Iterate rows in worker order.
+    #[inline]
+    pub fn iter_rows(&self) -> std::slice::ChunksExact<'_, f64> {
+        self.data.chunks_exact(self.dim)
+    }
+
+    /// Iterate mutable rows in worker order.
+    #[inline]
+    pub fn iter_rows_mut(&mut self) -> std::slice::ChunksExactMut<'_, f64> {
+        self.data.chunks_exact_mut(self.dim)
+    }
+
+    /// The whole arena as one flat slice (row-major).
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// The whole arena as one flat mutable slice (row-major).
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Set every element to `v` (delta-accumulator reset).
+    pub fn fill(&mut self, v: f64) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Mean iterate x̄ = (1/rows) Σ x_w, in the same accumulation order
+    /// as the historical `sim::mean_iterate` (bit-for-bit).
+    pub fn mean(&self) -> Vec<f64> {
+        let mut mean = vec![0.0; self.dim];
+        for x in self.iter_rows() {
+            for (a, &b) in mean.iter_mut().zip(x) {
+                *a += b;
+            }
+        }
+        for a in mean.iter_mut() {
+            *a /= self.rows as f64;
+        }
+        mean
+    }
+
+    /// Consensus distance `(1/rows) Σ_w ‖x_w − x̄‖²` (paper eq. 62), same
+    /// accumulation order as the historical `sim::consensus_distance`.
+    pub fn consensus_distance(&self) -> f64 {
+        let mean = self.mean();
+        self.iter_rows()
+            .map(|x| x.iter().zip(&mean).map(|(a, b)| (a - b) * (a - b)).sum::<f64>())
+            .sum::<f64>()
+            / self.rows as f64
+    }
+}
+
+/// A typed read-only view of one arena row: derefs to `&[f64]` and
+/// remembers which worker it belongs to.
+#[derive(Clone, Copy)]
+pub struct RowRef<'a> {
+    row: usize,
+    data: &'a [f64],
+}
+
+impl<'a> RowRef<'a> {
+    /// The worker (row) index this view points at.
+    pub fn index(&self) -> usize {
+        self.row
+    }
+
+    /// The underlying slice with the view's lifetime.
+    pub fn as_slice(&self) -> &'a [f64] {
+        self.data
+    }
+}
+
+impl std::ops::Deref for RowRef<'_> {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        self.data
+    }
+}
+
+/// A typed mutable view of one arena row: derefs to `&mut [f64]` and
+/// remembers which worker it belongs to.
+pub struct RowMut<'a> {
+    row: usize,
+    data: &'a mut [f64],
+}
+
+impl RowMut<'_> {
+    /// The worker (row) index this view points at.
+    pub fn index(&self) -> usize {
+        self.row
+    }
+}
+
+impl std::ops::Deref for RowMut<'_> {
+    type Target = [f64];
+    fn deref(&self) -> &[f64] {
+        self.data
+    }
+}
+
+impl std::ops::DerefMut for RowMut<'_> {
+    fn deref_mut(&mut self) -> &mut [f64] {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_contiguous_and_ordered() {
+        let mut m = StateMatrix::zeros(3, 2);
+        for r in 0..3 {
+            for c in 0..2 {
+                m.row_mut(r)[c] = (r * 2 + c) as f64;
+            }
+        }
+        assert_eq!(m.as_slice(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(m.row(1), &[2.0, 3.0]);
+        let rows: Vec<&[f64]> = m.iter_rows().collect();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2], &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn init_matches_historical_derivation() {
+        // Same RNG recipe as the old `init_iterates`: one x0, replicated.
+        let m = StateMatrix::init(3, 5, 8);
+        let mut rng = Rng::new(3);
+        let x0: Vec<f64> = (0..8).map(|_| 0.01 * rng.normal()).collect();
+        for r in 0..5 {
+            assert_eq!(m.row(r), &x0[..]);
+        }
+        assert_eq!(m, StateMatrix::init(3, 5, 8));
+    }
+
+    #[test]
+    fn pair_mut_splits_either_orientation() {
+        let mut m = StateMatrix::from_vecs(&[vec![1.0], vec![2.0], vec![3.0]]);
+        {
+            let (a, b) = m.pair_mut(0, 2);
+            assert_eq!((a[0], b[0]), (1.0, 3.0));
+            a[0] = 10.0;
+            b[0] = 30.0;
+        }
+        {
+            let (a, b) = m.pair_mut(2, 0);
+            assert_eq!((a[0], b[0]), (30.0, 10.0));
+        }
+    }
+
+    #[test]
+    fn mean_and_consensus_match_vec_helpers() {
+        let xs = vec![vec![1.0, 0.0], vec![3.0, 0.0]];
+        let m = StateMatrix::from_vecs(&xs);
+        assert_eq!(m.mean(), crate::sim::mean_iterate(&xs));
+        assert_eq!(m.consensus_distance(), crate::sim::consensus_distance(&xs));
+        assert_eq!(m.to_vecs(), xs);
+    }
+
+    #[test]
+    fn views_carry_their_index() {
+        let mut m = StateMatrix::zeros(2, 3);
+        {
+            let mut v = m.view_mut(1);
+            assert_eq!(v.index(), 1);
+            v[0] = 7.0;
+        }
+        let v = m.view(1);
+        assert_eq!(v.index(), 1);
+        assert_eq!(v.as_slice()[0], 7.0);
+        assert_eq!(&*v, &[7.0, 0.0, 0.0]);
+    }
+}

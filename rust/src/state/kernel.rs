@@ -1,0 +1,220 @@
+//! The arena-backed gossip mix kernel.
+//!
+//! [`MixKernel`] performs the simultaneous gossip step
+//! `X ← X + α Σ_{j∈activated} (−L_j^live) X` edge-wise, **in place** over
+//! [`StateMatrix`] rows, with all scratch coming from a once-per-run
+//! [`DeltaPool`] — zero heap allocation per message, per edge, or per
+//! iteration. The arithmetic (message formation, fold order, final apply)
+//! is exactly the historical `sim::kernel::apply_gossip`, so every
+//! backend built on this kernel reproduces the pre-arena trajectories
+//! bit-for-bit (`rust/tests/golden.rs`).
+//!
+//! Two entry points cover the two execution shapes:
+//!
+//! - [`MixKernel::apply`] — the full-state fold used by the sequential
+//!   simulator and the engine's in-process executor: one pass over every
+//!   activated edge, reading both endpoint rows from the pre-mix arena.
+//! - [`MixKernel::fold_worker`] — one worker's fold from routed peer-row
+//!   messages, used by the actor shards (per-shard staging buffers) —
+//!   same accumulation order per worker as the full-state fold.
+
+use super::arena::StateMatrix;
+use super::pool::DeltaPool;
+use crate::graph::Graph;
+use crate::sim::kernel::edge_diff_message;
+use crate::sim::Compression;
+
+/// The gossip-mix context of one run: the run seed (per-edge compression
+/// RNG derivation) and the optional message compression. Copy-cheap;
+/// construct it once per run next to the [`DeltaPool`].
+#[derive(Clone, Copy)]
+pub struct MixKernel<'a> {
+    seed: u64,
+    compression: Option<&'a Compression>,
+}
+
+impl<'a> MixKernel<'a> {
+    pub fn new(seed: u64, compression: Option<&'a Compression>) -> MixKernel<'a> {
+        MixKernel { seed, compression }
+    }
+
+    /// Apply one simultaneous gossip step in place over the arena:
+    /// `X ← X + α Σ_{j∈activated} (−L_j^live) X`, where `L_j^live` omits
+    /// links listed in `dead` (failure injection; canonical `u < v`
+    /// orientation). Edge traversal, message formation and fold order are
+    /// the shared global (activation, edge) order every backend uses.
+    pub fn apply(
+        &self,
+        xs: &mut StateMatrix,
+        matchings: &[Graph],
+        activated: &[usize],
+        alpha: f64,
+        dead: Option<&[(usize, usize)]>,
+        k: usize,
+        pool: &mut DeltaPool,
+    ) {
+        if activated.is_empty() {
+            return;
+        }
+        {
+            let (deltas, diff) = pool.deltas_and_diff();
+            deltas.fill(0.0);
+            for &j in activated {
+                for &(u, v) in matchings[j].edges() {
+                    if let Some(dead) = dead {
+                        if dead.contains(&(u, v)) {
+                            continue;
+                        }
+                    }
+                    // Read both endpoints from the pre-mix state; the
+                    // deltas arena keeps the update simultaneous.
+                    let (xu, xv) = xs.pair(u, v);
+                    edge_diff_message(xu, xv, diff, self.compression, self.seed, k, j, u, v);
+                    let du = deltas.row_mut(u);
+                    for (a, &b) in du.iter_mut().zip(diff.iter()) {
+                        *a += b;
+                    }
+                    let dv = deltas.row_mut(v);
+                    for (a, &b) in dv.iter_mut().zip(diff.iter()) {
+                        *a -= b;
+                    }
+                }
+            }
+        }
+        for (x, dv) in xs.iter_rows_mut().zip(pool.deltas().iter_rows()) {
+            for (xi, &di) in x.iter_mut().zip(dv) {
+                *xi += alpha * di;
+            }
+        }
+    }
+
+    /// Fold one worker's gossip mix from routed peer messages: for each
+    /// `(matching, u, v, peer_row)` in global (activation, edge) order,
+    /// form the canonical diff (`x_v − x_u`, this worker on the `u` side
+    /// iff `worker == u`), accumulate `±diff` into `delta`, then apply
+    /// `x += α·Δ` — the per-worker projection of [`MixKernel::apply`].
+    /// An empty message iterator still applies the zero delta, matching
+    /// the full-state kernel on non-incident workers of an active round.
+    pub fn fold_worker<'m, I>(
+        &self,
+        worker: usize,
+        x: &mut [f64],
+        msgs: I,
+        k: usize,
+        alpha: f64,
+        diff: &mut [f64],
+        delta: &mut [f64],
+    ) where
+        I: IntoIterator<Item = (usize, usize, usize, &'m [f64])>,
+    {
+        delta.iter_mut().for_each(|v| *v = 0.0);
+        for (j, u, v, peer) in msgs {
+            if worker == u {
+                edge_diff_message(x, peer, diff, self.compression, self.seed, k, j, u, v);
+                for (a, &b) in delta.iter_mut().zip(diff.iter()) {
+                    *a += b;
+                }
+            } else {
+                edge_diff_message(peer, x, diff, self.compression, self.seed, k, j, u, v);
+                for (a, &b) in delta.iter_mut().zip(diff.iter()) {
+                    *a -= b;
+                }
+            }
+        }
+        for (xi, &di) in x.iter_mut().zip(delta.iter()) {
+            *xi += alpha * di;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::paper_figure1_graph;
+    use crate::matching::decompose;
+    use crate::rng::Rng;
+
+    fn random_state(m: usize, dim: usize, seed: u64) -> StateMatrix {
+        let mut rng = Rng::new(seed);
+        let mut xs = StateMatrix::zeros(m, dim);
+        for r in 0..m {
+            for x in xs.row_mut(r).iter_mut() {
+                *x = rng.normal();
+            }
+        }
+        xs
+    }
+
+    #[test]
+    fn apply_preserves_worker_mean() {
+        let d = decompose(&paper_figure1_graph());
+        let mut xs = random_state(8, 6, 9);
+        let before = xs.mean();
+        let activated: Vec<usize> = (0..d.len()).collect();
+        let mut pool = DeltaPool::new(8, 6);
+        MixKernel::new(5, None).apply(&mut xs, &d.matchings, &activated, 0.31, None, 0, &mut pool);
+        for (a, b) in before.iter().zip(&xs.mean()) {
+            assert!((a - b).abs() < 1e-12, "mean drifted: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn fold_worker_matches_full_state_apply() {
+        let d = decompose(&paper_figure1_graph());
+        let (m, dim, alpha, k, seed) = (8usize, 5usize, 0.21, 3usize, 9u64);
+        let xs = random_state(m, dim, 4);
+        let activated: Vec<usize> = (0..d.len()).collect();
+
+        let mut reference = xs.clone();
+        let mut pool = DeltaPool::new(m, dim);
+        let kernel = MixKernel::new(seed, None);
+        kernel.apply(&mut reference, &d.matchings, &activated, alpha, None, k, &mut pool);
+
+        let mut diff = vec![0.0; dim];
+        let mut delta = vec![0.0; dim];
+        for w in 0..m {
+            let mut msgs: Vec<(usize, usize, usize, &[f64])> = Vec::new();
+            for &j in &activated {
+                for &(u, v) in d.matchings[j].edges() {
+                    if u == w {
+                        msgs.push((j, u, v, xs.row(v)));
+                    } else if v == w {
+                        msgs.push((j, u, v, xs.row(u)));
+                    }
+                }
+            }
+            let mut x = xs.row(w).to_vec();
+            kernel.fold_worker(w, &mut x, msgs, k, alpha, &mut diff, &mut delta);
+            assert_eq!(&x[..], reference.row(w), "worker {w} diverged");
+        }
+    }
+
+    #[test]
+    fn dead_links_drop_out_of_the_fold() {
+        let d = decompose(&paper_figure1_graph());
+        let j0 = (0..d.len())
+            .find(|&j| d.matchings[j].edges().len() >= 2)
+            .expect("fig1 decomposition has a multi-link matching");
+        let (u, v) = d.matchings[j0].edges()[0];
+        let xs0 = random_state(8, 3, 4);
+        let mut with_dead = xs0.clone();
+        let mut pool = DeltaPool::new(8, 3);
+        MixKernel::new(1, None).apply(
+            &mut with_dead,
+            &d.matchings,
+            &[j0],
+            0.2,
+            Some(&[(u, v)]),
+            0,
+            &mut pool,
+        );
+        assert_eq!(with_dead.row(u), xs0.row(u));
+        assert_eq!(with_dead.row(v), xs0.row(v));
+        let moved = d.matchings[j0]
+            .edges()
+            .iter()
+            .filter(|&&e| e != (u, v))
+            .any(|&(a, _)| with_dead.row(a) != xs0.row(a));
+        assert!(moved, "live links should still exchange");
+    }
+}

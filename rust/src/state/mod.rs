@@ -1,0 +1,36 @@
+//! Contiguous model-state arena shared by every execution backend.
+//!
+//! MATCHA's per-iteration cost is dominated by the gossip mix
+//! `X ← X + α Σ_j (−L_j) X`, and the memory layout of that step — not
+//! the math — decides real-world throughput. This module owns the
+//! layout:
+//!
+//! - [`StateMatrix`] ([`arena`]) — all worker iterates in one contiguous
+//!   row-major `workers × dim` buffer, with typed [`RowRef`] / [`RowMut`]
+//!   views and split-borrow row access.
+//! - [`DeltaPool`] / [`SnapshotPool`] ([`pool`]) — once-per-run scratch:
+//!   delta accumulators, edge-message and gradient buffers, and a
+//!   recycled row pool for the async runtime's transient snapshots.
+//! - [`MixKernel`] ([`kernel`]) — the edge-wise gossip fold applied in
+//!   place over arena rows, plus the per-worker staged fold the actor
+//!   shards use.
+//!
+//! Every execution layer runs on this module: the sequential simulator
+//! ([`crate::sim`]), both engine executors ([`crate::engine`]), and the
+//! barrier-free gossip runtime ([`crate::gossip`]). The refactor changed
+//! representation only — message formation, fold order and apply order
+//! are untouched — so all backends remain bit-for-bit equal to the
+//! pre-arena trajectories per seed (`rust/tests/golden.rs` pins them
+//! against golden fixtures, generated on first run and committed
+//! thereafter). The payoff is zero per-message heap
+//! allocation in the mixing hot path (measured by `benches/hotpath.rs`,
+//! `BENCH_state.json`) and a memory footprint that scales to thousands
+//! of workers × large `dim`.
+
+pub mod arena;
+pub mod kernel;
+pub mod pool;
+
+pub use arena::{RowMut, RowRef, StateMatrix};
+pub use kernel::MixKernel;
+pub use pool::{DeltaPool, SnapshotPool};

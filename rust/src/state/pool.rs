@@ -1,0 +1,146 @@
+//! Reusable scratch-state pools: allocate once per run, reuse every
+//! iteration, never allocate in the mixing hot path.
+
+use super::arena::StateMatrix;
+
+/// Per-run scratch for the step/mix kernels: the per-worker delta
+/// accumulators of the simultaneous gossip fold, the per-edge difference
+/// message, and the gradient buffer. One `DeltaPool` is allocated at run
+/// start and threaded through every iteration — the historical code
+/// allocated the gradient with the runner and the deltas with a separate
+/// `GossipScratch`; this pool is their single arena-backed replacement.
+pub struct DeltaPool {
+    /// `workers × dim` delta accumulators (`Δ_w` of the gossip fold).
+    deltas: StateMatrix,
+    /// One edge's difference message `x_v − x_u` (post-compression).
+    diff: Vec<f64>,
+    /// One worker's stochastic-gradient scratch.
+    grad: Vec<f64>,
+}
+
+impl DeltaPool {
+    /// Scratch for `workers` workers of dimension `dim`.
+    pub fn new(workers: usize, dim: usize) -> DeltaPool {
+        DeltaPool {
+            deltas: StateMatrix::zeros(workers, dim),
+            diff: vec![0.0; dim],
+            grad: vec![0.0; dim],
+        }
+    }
+
+    /// The gradient scratch buffer (for [`crate::sim::kernel::local_sgd_step`]).
+    pub fn grad_mut(&mut self) -> &mut [f64] {
+        &mut self.grad
+    }
+
+    /// Split borrow of the delta arena and the diff buffer — the two
+    /// pieces the gossip fold writes concurrently.
+    pub(crate) fn deltas_and_diff(&mut self) -> (&mut StateMatrix, &mut [f64]) {
+        (&mut self.deltas, &mut self.diff)
+    }
+
+    /// Read access to the delta accumulators (the apply step).
+    pub(crate) fn deltas(&self) -> &StateMatrix {
+        &self.deltas
+    }
+}
+
+/// A grow-only row pool with a free list: fixed-width rows borrowed for a
+/// while (a round snapshot, a staged per-edge contribution, a metrics
+/// snapshot) and recycled instead of freed. The asynchronous gossip
+/// runtime keeps every transient model-sized buffer here, so its steady
+/// state performs no per-message heap allocation: `alloc` only touches
+/// the heap while the pool is still growing toward the run's peak
+/// concurrency.
+pub struct SnapshotPool {
+    data: Vec<f64>,
+    dim: usize,
+    rows: usize,
+    free_rows: Vec<usize>,
+}
+
+impl SnapshotPool {
+    /// An empty pool of `dim`-wide rows.
+    pub fn new(dim: usize) -> SnapshotPool {
+        SnapshotPool { data: Vec::new(), dim, rows: 0, free_rows: Vec::new() }
+    }
+
+    /// Borrow a row (contents unspecified until written).
+    pub fn alloc(&mut self) -> usize {
+        if let Some(r) = self.free_rows.pop() {
+            r
+        } else {
+            self.rows += 1;
+            self.data.resize(self.rows * self.dim, 0.0);
+            self.rows - 1
+        }
+    }
+
+    /// Borrow a row initialized to a copy of `src` (`src.len() == dim`).
+    pub fn alloc_from(&mut self, src: &[f64]) -> usize {
+        let r = self.alloc();
+        self.row_mut(r).copy_from_slice(src);
+        r
+    }
+
+    /// Return a row to the free list.
+    pub fn release(&mut self, r: usize) {
+        debug_assert!(!self.free_rows.contains(&r), "double release of row {r}");
+        self.free_rows.push(r);
+    }
+
+    /// Row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Row `r` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Rows currently lent out.
+    pub fn in_use(&self) -> usize {
+        self.rows - self.free_rows.len()
+    }
+
+    /// Peak row count reached so far (the pool never shrinks).
+    pub fn capacity_rows(&self) -> usize {
+        self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_pool_shapes() {
+        let mut p = DeltaPool::new(4, 3);
+        assert_eq!(p.grad_mut().len(), 3);
+        let (deltas, diff) = p.deltas_and_diff();
+        assert_eq!(deltas.rows(), 4);
+        assert_eq!(deltas.dim(), 3);
+        assert_eq!(diff.len(), 3);
+    }
+
+    #[test]
+    fn snapshot_pool_recycles_rows() {
+        let mut p = SnapshotPool::new(2);
+        let a = p.alloc_from(&[1.0, 2.0]);
+        let b = p.alloc_from(&[3.0, 4.0]);
+        assert_ne!(a, b);
+        assert_eq!(p.row(a), &[1.0, 2.0]);
+        assert_eq!(p.in_use(), 2);
+        p.release(a);
+        assert_eq!(p.in_use(), 1);
+        let c = p.alloc();
+        assert_eq!(c, a, "freed row must be reused before growing");
+        assert_eq!(p.capacity_rows(), 2);
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.in_use(), 0);
+    }
+}

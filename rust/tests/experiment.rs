@@ -157,7 +157,7 @@ fn rejection_messages_name_the_offending_field() {
             "problem",
         ),
         (
-            r#"{"graph": "fig1", "backend": {"kind": "actors", "threads": 1}}"#,
+            r#"{"graph": "fig1", "backend": {"kind": "actors", "threads": 0}}"#,
             "backend",
         ),
     ];

@@ -1,0 +1,226 @@
+//! Golden-trajectory fixtures: every backend × strategy pair is pinned
+//! against a committed JSON fixture, bit-for-bit.
+//!
+//! The in-process parity tests (`rust/tests/engine.rs`,
+//! `rust/tests/gossip.rs`, `rust/tests/experiment.rs`) prove the
+//! backends agree with *each other*; these fixtures additionally pin the
+//! trajectories across **time**, so a future refactor that changed the
+//! arithmetic identically in every backend would still be caught.
+//!
+//! Every `f64` is stored as the hex of its IEEE-754 bit pattern, so the
+//! comparison survives the JSON round-trip exactly.
+//!
+//! Fixtures live in `rust/tests/fixtures/golden_<strategy>.json`. A
+//! missing fixture is (re)generated from the reference simulator on the
+//! first run — commit the generated files. Set `MATCHA_UPDATE_FIXTURES=1`
+//! to regenerate after an *intentional* trajectory change.
+
+use matcha::experiment::{self, Backend, ExperimentSpec, ExperimentResult, ProblemSpec, Strategy};
+use matcha::json::Json;
+use std::path::PathBuf;
+
+/// Iteration-indexed series every backend must reproduce exactly
+/// (excludes the time-indexed and comm series: the async runtime's
+/// per-link clock and aggregate-bandwidth accounting are intentionally
+/// different quantities).
+const CORE_SERIES: &[&str] =
+    &["loss_vs_iter", "consensus_vs_iter", "gradnorm2_vs_iter", "subopt_vs_iter"];
+
+/// The backend-independent part of a trajectory, as raw f64 bit patterns.
+#[derive(Clone, Debug, PartialEq)]
+struct Core {
+    series: Vec<Vec<(u64, u64)>>,
+    final_mean: Vec<u64>,
+}
+
+/// The full barrier-backend trajectory: core + the shared time/comm
+/// accounting.
+#[derive(Clone, Debug, PartialEq)]
+struct Full {
+    core: Core,
+    comm_series: Vec<(u64, u64)>,
+    total_time: u64,
+    total_comm: u64,
+}
+
+fn capture_core(res: &ExperimentResult) -> Core {
+    Core {
+        series: CORE_SERIES
+            .iter()
+            .map(|name| {
+                res.metrics.get(name).iter().map(|s| (s.x.to_bits(), s.y.to_bits())).collect()
+            })
+            .collect(),
+        final_mean: res.final_mean.iter().map(|v| v.to_bits()).collect(),
+    }
+}
+
+fn capture(res: &ExperimentResult) -> Full {
+    Full {
+        core: capture_core(res),
+        comm_series: res
+            .metrics
+            .get("comm_units_vs_iter")
+            .iter()
+            .map(|s| (s.x.to_bits(), s.y.to_bits()))
+            .collect(),
+        total_time: res.total_time.to_bits(),
+        total_comm: res.total_comm_units.to_bits(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixture encode / decode (hex bit patterns through the Json module)
+// ---------------------------------------------------------------------
+
+fn hex(bits: u64) -> Json {
+    Json::Str(format!("{bits:016x}"))
+}
+
+fn unhex(j: &Json) -> u64 {
+    u64::from_str_radix(j.as_str().expect("fixture: hex string"), 16).expect("fixture: hex u64")
+}
+
+fn series_json(series: &[(u64, u64)]) -> Json {
+    Json::Arr(series.iter().map(|&(x, y)| Json::Arr(vec![hex(x), hex(y)])).collect())
+}
+
+fn series_from(j: &Json) -> Vec<(u64, u64)> {
+    j.as_array()
+        .expect("fixture: series array")
+        .iter()
+        .map(|p| {
+            let pair = p.as_array().expect("fixture: [x, y] pair");
+            (unhex(&pair[0]), unhex(&pair[1]))
+        })
+        .collect()
+}
+
+fn fixture_json(spec: &ExperimentSpec, full: &Full) -> Json {
+    let series = CORE_SERIES
+        .iter()
+        .zip(&full.core.series)
+        .map(|(name, s)| (*name, series_json(s)))
+        .collect();
+    Json::obj(vec![
+        // Provenance only — the comparison uses the bit patterns below.
+        ("spec", Json::Str(spec.to_json_string())),
+        ("series", Json::obj(series)),
+        ("comm_units_vs_iter", series_json(&full.comm_series)),
+        (
+            "final_mean",
+            Json::Arr(full.core.final_mean.iter().map(|&b| hex(b)).collect()),
+        ),
+        ("total_time", hex(full.total_time)),
+        ("total_comm_units", hex(full.total_comm)),
+    ])
+}
+
+fn fixture_from(j: &Json) -> Full {
+    let series_obj = j.get("series").expect("fixture: series");
+    Full {
+        core: Core {
+            series: CORE_SERIES
+                .iter()
+                .map(|name| series_from(series_obj.get(name).expect("fixture: named series")))
+                .collect(),
+            final_mean: j
+                .get("final_mean")
+                .and_then(Json::as_array)
+                .expect("fixture: final_mean")
+                .iter()
+                .map(unhex)
+                .collect(),
+        },
+        comm_series: series_from(j.get("comm_units_vs_iter").expect("fixture: comm series")),
+        total_time: unhex(j.get("total_time").expect("fixture: total_time")),
+        total_comm: unhex(j.get("total_comm_units").expect("fixture: total_comm_units")),
+    }
+}
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(format!("golden_{name}.json"))
+}
+
+// ---------------------------------------------------------------------
+// The pinned scenario
+// ---------------------------------------------------------------------
+
+/// One fixed scenario per strategy: the paper's Figure-1 graph, the
+/// default quadratic workload, fixed run/sampler seeds. Small enough to
+/// run 4 backends × 4 strategies in a blink, long enough to catch
+/// order-of-accumulation drift.
+fn base_spec(strategy: Strategy) -> ExperimentSpec {
+    ExperimentSpec::new("fig1")
+        .strategy(strategy)
+        .problem(ProblemSpec::quadratic())
+        .lr(0.03)
+        .iterations(80)
+        .record_every(20)
+        .seed(11)
+        .sampler_seed(5)
+}
+
+fn check_strategy(name: &str, strategy: Strategy) {
+    let spec = base_spec(strategy);
+    let reference = experiment::run(&spec).expect("sim reference run");
+    let observed = capture(&reference);
+
+    let path = fixture_path(name);
+    if std::env::var_os("MATCHA_UPDATE_FIXTURES").is_some() || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("fixtures dir");
+        std::fs::write(&path, fixture_json(&spec, &observed).to_string())
+            .expect("write golden fixture");
+        eprintln!("golden: wrote {}", path.display());
+    }
+    let text = std::fs::read_to_string(&path).expect("read golden fixture");
+    let fixture = fixture_from(&Json::parse(&text).expect("parse golden fixture"));
+
+    assert_eq!(
+        observed, fixture,
+        "{name}: sim reference drifted from the committed golden fixture"
+    );
+
+    // Barrier backends: full parity, including time/comm accounting.
+    for backend in [Backend::EngineSequential, Backend::EngineActors { threads: 3 }] {
+        let res = experiment::run(&spec.clone().backend(backend)).expect("backend run");
+        assert_eq!(
+            capture(&res),
+            fixture,
+            "{name}: backend {:?} drifted from the golden fixture",
+            backend
+        );
+    }
+
+    // Async runtime at staleness 0 degrades to the synchronous kernel:
+    // identical iterates, per-link time accounting (compared via core).
+    let async_backend = Backend::Async { threads: 2, max_staleness: 0 };
+    let res = experiment::run(&spec.clone().backend(async_backend)).expect("async run");
+    assert_eq!(
+        capture_core(&res),
+        fixture.core,
+        "{name}: async (staleness 0) drifted from the golden fixture"
+    );
+}
+
+#[test]
+fn golden_matcha() {
+    check_strategy("matcha", Strategy::Matcha { budget: 0.5 });
+}
+
+#[test]
+fn golden_vanilla() {
+    check_strategy("vanilla", Strategy::Vanilla);
+}
+
+#[test]
+fn golden_periodic() {
+    check_strategy("periodic", Strategy::Periodic { budget: 0.5 });
+}
+
+#[test]
+fn golden_single() {
+    check_strategy("single", Strategy::SingleMatching { budget: 0.5 });
+}
