@@ -13,11 +13,9 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
-echo "==> cargo fmt --check (advisory)"
-# Advisory until the whole pre-existing tree is rustfmt-clean: report
-# drift loudly, but don't fail CI on it (the enforced gates below are
-# build, tests, clippy, rustdoc and the smoke runs).
-cargo fmt --check || echo "WARNING: cargo fmt --check reported drift (advisory, not a gate yet)"
+echo "==> cargo fmt --check"
+# Enforced: formatting drift fails CI. Run `cargo fmt` before pushing.
+cargo fmt --check
 
 echo "==> cargo clippy --all-targets -- -D warnings"
 # All default-feature targets: lib, bin, tests, examples, benches.
@@ -42,5 +40,9 @@ test -f BENCH_state.json || { echo "BENCH_state.json not emitted"; exit 1; }
 cargo bench --bench engine_sweep -- --dry-run
 # Async-vs-barrier smoke: also emits BENCH_async.json (perf trajectory).
 cargo bench --bench async_vs_barrier -- --dry-run
+# Cluster transport smoke: bytes/iteration + loopback-vs-TCP throughput
+# (emits BENCH_cluster.json; exercises the wire over real localhost TCP).
+cargo bench --bench cluster_transport -- --dry-run
+test -f BENCH_cluster.json || { echo "BENCH_cluster.json not emitted"; exit 1; }
 
 echo "CI OK"

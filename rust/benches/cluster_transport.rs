@@ -1,0 +1,146 @@
+//! Cluster transport bench: what the wire actually costs.
+//!
+//! Runs the same MATCHA schedule through the cluster backend over both
+//! transports and reports (a) bytes-on-wire per iteration — the number
+//! the per-link byte accounting exists for — and (b) loopback-vs-TCP
+//! wall-clock throughput, with the in-process actors backend as the
+//! no-serialization baseline. The wire-clock conversion puts the
+//! observed traffic on the same virtual-unit scale as the schedule's
+//! simulated communication time.
+//!
+//! Run: `cargo bench --bench cluster_transport` (append `-- --dry-run`
+//! for the CI smoke variant: tiny runs, no assertions). Emits
+//! `BENCH_cluster.json` either way.
+
+use matcha::cluster::{TransportKind, WireClock};
+use matcha::experiment::{self, Backend, ExperimentResult, ExperimentSpec, ProblemSpec, Strategy};
+use matcha::json::Json;
+use std::time::Instant;
+
+fn base_spec(iters: usize, backend: Backend) -> ExperimentSpec {
+    ExperimentSpec::new("er:16:4:7")
+        .strategy(Strategy::Matcha { budget: 0.5 })
+        .problem(ProblemSpec::Quadratic { dim: 64, hetero: 1.0, noise_std: 0.2, seed: Some(7) })
+        .backend(backend)
+        .lr(0.02)
+        .iterations(iters)
+        .record_every(iters.max(1))
+        .seed(11)
+        .sampler_seed(5)
+}
+
+/// Run the spec `repeats` times; return the (identical) result and the
+/// fastest wall-clock in seconds.
+fn timed(spec: &ExperimentSpec, repeats: usize) -> (ExperimentResult, f64) {
+    let mut best = f64::INFINITY;
+    let mut result = None;
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        let r = experiment::run(spec).expect("bench run");
+        best = best.min(t0.elapsed().as_secs_f64());
+        result = Some(r);
+    }
+    (result.expect("at least one repeat"), best)
+}
+
+fn main() {
+    let dry_run = std::env::args().any(|a| a == "--dry-run");
+    let (iters, repeats) = if dry_run { (20, 1) } else { (300, 3) };
+    let shards = 4usize;
+    let dim = 64usize;
+    println!("=== cluster transports: 16 workers over {shards} shards, {iters} iters ===");
+
+    let (actors, actors_wall) =
+        timed(&base_spec(iters, Backend::EngineActors { threads: shards }), repeats);
+    let (loopback, loopback_wall) = timed(
+        &base_spec(
+            iters,
+            Backend::Cluster { shards, transport: TransportKind::Loopback },
+        ),
+        repeats,
+    );
+    let (tcp, tcp_wall) = timed(
+        &base_spec(iters, Backend::Cluster { shards, transport: TransportKind::Tcp }),
+        repeats,
+    );
+
+    let lb_stats = loopback.cluster_stats.as_ref().expect("loopback stats");
+    let tcp_stats = tcp.cluster_stats.as_ref().expect("tcp stats");
+    let bytes_per_iter = lb_stats.total_bytes() as f64 / iters as f64;
+    let frames_per_iter = lb_stats.total_frames() as f64 / iters as f64;
+    // One model row per link activation at unit link time — the delay
+    // models' scale for the wire clock.
+    let wire_units = lb_stats.wire_units(WireClock::per_row(dim, 1.0));
+
+    let mut table = matcha::benchkit::Table::new(&[
+        "mode",
+        "wall (s)",
+        "iters/s",
+        "bytes/iter",
+        "final loss",
+    ]);
+    let rows: [(&str, f64, Option<f64>, &ExperimentResult); 3] = [
+        ("actors (in-process)", actors_wall, None, &actors),
+        ("cluster loopback", loopback_wall, Some(bytes_per_iter), &loopback),
+        ("cluster tcp", tcp_wall, Some(bytes_per_iter), &tcp),
+    ];
+    for (name, wall, bytes, res) in rows {
+        table.row(&[
+            name.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.1}", iters as f64 / wall.max(1e-9)),
+            bytes.map_or("-".to_string(), |b| format!("{b:.0}")),
+            format!("{:.5}", res.final_loss()),
+        ]);
+    }
+    table.print();
+    println!(
+        "wire clock: {wire_units:.1} virtual units of traffic vs {:.1} simulated comm units",
+        loopback.total_comm_units
+    );
+
+    let summary = Json::obj(vec![
+        ("mode", Json::Str(if dry_run { "dry" } else { "full" }.into())),
+        ("workers", Json::Num(16.0)),
+        ("shards", Json::Num(shards as f64)),
+        ("iterations", Json::Num(iters as f64)),
+        ("dim", Json::Num(dim as f64)),
+        ("bytes_per_iter", Json::Num(bytes_per_iter)),
+        ("frames_per_iter", Json::Num(frames_per_iter)),
+        ("wire_units", Json::Num(wire_units)),
+        ("simulated_comm_units", Json::Num(loopback.total_comm_units)),
+        ("wall_actors_s", Json::Num(actors_wall)),
+        ("wall_loopback_s", Json::Num(loopback_wall)),
+        ("wall_tcp_s", Json::Num(tcp_wall)),
+        (
+            "loopback_iters_per_s",
+            Json::Num(iters as f64 / loopback_wall.max(1e-9)),
+        ),
+        ("tcp_iters_per_s", Json::Num(iters as f64 / tcp_wall.max(1e-9))),
+        (
+            "tcp_vs_loopback_slowdown",
+            Json::Num(tcp_wall / loopback_wall.max(1e-9)),
+        ),
+    ]);
+    std::fs::write("BENCH_cluster.json", summary.to_string()).expect("write BENCH_cluster.json");
+    println!("\nwrote BENCH_cluster.json");
+
+    if dry_run {
+        println!("dry-run: skipping assertions");
+        return;
+    }
+    assert_eq!(
+        loopback.final_mean, actors.final_mean,
+        "loopback cluster must match the actors backend bit-for-bit"
+    );
+    assert_eq!(
+        tcp.final_mean, loopback.final_mean,
+        "tcp cluster must match loopback bit-for-bit"
+    );
+    assert_eq!(
+        lb_stats.total_bytes(),
+        tcp_stats.total_bytes(),
+        "identical schedule must put identical bytes on either transport"
+    );
+    assert!(bytes_per_iter > 0.0, "byte accounting must observe traffic");
+}

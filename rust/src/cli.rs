@@ -89,11 +89,15 @@ COMMANDS
   schedule   --graph SPEC --budget CB --steps K [--out FILE]   apriori schedule
   sim        --graph SPEC --strategy S --budget CB --iters N [--problem quad|logreg]
   engine     like sim, through the event-driven engine; adds
-             [--backend engine|actors|async] [--threads T] [--max-staleness S]
+             [--backend engine|actors|async|cluster] [--threads T]
+             [--max-staleness S|unbounded] [--shards N] [--transport loopback|tcp]
              [--policy analytic|hetero:SEED|straggler:W:F|flaky:P]
              (actors: bounded pool, workers multiplexed over min(T, workers)
              threads; async: barrier-free gossip with staleness-aware mixing,
-             S bounds the version drift and S=0 reproduces the sync kernel)
+             S bounds the version drift, S=0 reproduces the sync kernel and
+             'unbounded' is pure AD-PSGD; cluster: workers partitioned over N
+             transport-separated shards speaking the wire format — loopback
+             is bit-for-bit equal to actors, tcp runs over localhost sockets)
   sweep      --graph SPEC --budgets A,B,... --iters N [--threads T] [--serial]
              [--spec FILE] [--backend sim|engine|async] parallel budget sweep
              across cores; finished points stream as JSON lines before the
@@ -151,6 +155,18 @@ pub fn run(argv: &[String]) -> Result<(), String> {
 
 fn graph_arg(args: &Args) -> Result<Graph, String> {
     parse_graph_spec(args.str_or("graph", "fig1"))
+}
+
+/// Parse `--max-staleness`: a bound, or `unbounded` for the pure
+/// AD-PSGD mode ([`crate::gossip::UNBOUNDED_STALENESS`]).
+fn max_staleness_arg(args: &Args) -> Result<usize, String> {
+    match args.flags.get("max-staleness").map(String::as_str) {
+        None => Ok(crate::gossip::DEFAULT_MAX_STALENESS),
+        Some("unbounded") => Ok(crate::gossip::UNBOUNDED_STALENESS),
+        Some(v) => v
+            .parse()
+            .map_err(|e| format!("--max-staleness: {e} (use a bound or 'unbounded')")),
+    }
 }
 
 /// Assemble an [`ExperimentSpec`] from `sim`/`engine`/`sweep`-style flags.
@@ -385,12 +401,21 @@ fn cmd_engine(args: &Args) -> Result<(), String> {
         }
         "async" => Backend::Async {
             threads: threads.max(1),
-            max_staleness: args
-                .usize_or("max-staleness", crate::gossip::DEFAULT_MAX_STALENESS)?,
+            max_staleness: max_staleness_arg(args)?,
         },
+        "cluster" => {
+            let shards = args.usize_or("shards", 2)?;
+            if shards == 0 {
+                return Err("--backend cluster needs --shards >= 1".into());
+            }
+            let transport =
+                crate::cluster::TransportKind::parse(args.str_or("transport", "loopback"))
+                    .map_err(|e| format!("--transport: {e}"))?;
+            Backend::Cluster { shards, transport }
+        }
         other => {
             return Err(format!(
-                "unknown backend '{other}' (expected engine | actors | async)"
+                "unknown backend '{other}' (expected engine | actors | async | cluster)"
             ))
         }
     };
@@ -411,6 +436,7 @@ fn cmd_engine(args: &Args) -> Result<(), String> {
     let effective_threads = match spec.backend {
         Backend::EngineActors { threads } => threads.min(plan.graph.num_nodes()),
         Backend::Async { threads, .. } => threads.min(plan.graph.num_nodes()),
+        Backend::Cluster { shards, .. } => shards.min(plan.graph.num_nodes()),
         _ => 1,
     };
     print_run_summary(
@@ -435,6 +461,15 @@ fn cmd_engine(args: &Args) -> Result<(), String> {
             stats.max_staleness(),
             stats.total_exchanges(),
             stats.total_idle()
+        );
+    }
+    if let Some(stats) = &result.cluster_stats {
+        println!(
+            "wire: transport {}, {} frames / {} bytes across {} links",
+            stats.transport.name(),
+            stats.total_frames(),
+            stats.total_bytes(),
+            stats.per_link.len()
         );
     }
     save_metrics(args, &result.metrics)
@@ -480,8 +515,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         // A spec file defines the whole experiment; reject config flags
         // it would silently override.
         for flag in [
-            "backend", "max-staleness", "graph", "strategy", "budget", "problem", "delay",
-            "policy", "lr", "iters", "compute-units", "seed", "non-iid",
+            "backend", "max-staleness", "shards", "transport", "graph", "strategy", "budget",
+            "problem", "delay", "policy", "lr", "iters", "compute-units", "seed", "non-iid",
         ] {
             if args.flags.contains_key(flag) {
                 return Err(format!(
@@ -499,6 +534,13 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
                 println!("note: sweep points run single-threaded; using the 'engine' backend");
                 spec.backend = Backend::EngineSequential;
             }
+            Backend::Cluster { .. } => {
+                println!(
+                    "note: sweep points run single-threaded; using the 'engine' backend \
+                     (identical results, no shard fleet per point)"
+                );
+                spec.backend = Backend::EngineSequential;
+            }
             Backend::Async { threads, max_staleness } if threads > 1 => {
                 println!("note: sweep points run single-threaded; async pool clamped to 1");
                 spec.backend = Backend::Async { threads: 1, max_staleness };
@@ -510,12 +552,8 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         let backend = match args.str_or("backend", "engine") {
             "engine" => Backend::EngineSequential,
             "sim" => Backend::SimReference,
-            "async" => Backend::Async {
-                threads: 1,
-                max_staleness: args
-                    .usize_or("max-staleness", crate::gossip::DEFAULT_MAX_STALENESS)?,
-            },
-            "actors" => {
+            "async" => Backend::Async { threads: 1, max_staleness: max_staleness_arg(args)? },
+            "actors" | "cluster" => {
                 return Err(
                     "sweep points fan across threads already; use --backend engine \
                      (or async) for per-point execution"
@@ -793,6 +831,64 @@ mod tests {
             "straggler:0:4.0",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn engine_cluster_backend_smoke() {
+        for transport in ["loopback", "tcp"] {
+            run(&sv(&[
+                "engine",
+                "--graph",
+                "ring:6",
+                "--backend",
+                "cluster",
+                "--shards",
+                "3",
+                "--transport",
+                transport,
+                "--iters",
+                "20",
+                "--problem",
+                "quad",
+            ]))
+            .unwrap_or_else(|e| panic!("transport {transport}: {e}"));
+        }
+    }
+
+    #[test]
+    fn engine_cluster_rejects_bad_flags() {
+        let r = run(&sv(&[
+            "engine", "--graph", "ring:4", "--backend", "cluster", "--shards", "0",
+        ]));
+        assert!(r.unwrap_err().contains("--shards"));
+        let r = run(&sv(&[
+            "engine", "--graph", "ring:4", "--backend", "cluster", "--transport", "pigeon",
+        ]));
+        assert!(r.unwrap_err().contains("transport"));
+    }
+
+    #[test]
+    fn engine_async_unbounded_staleness_smoke() {
+        run(&sv(&[
+            "engine",
+            "--graph",
+            "ring:6",
+            "--backend",
+            "async",
+            "--max-staleness",
+            "unbounded",
+            "--iters",
+            "30",
+            "--problem",
+            "quad",
+            "--policy",
+            "straggler:0:4.0",
+        ]))
+        .unwrap();
+        let r = run(&sv(&[
+            "engine", "--graph", "ring:4", "--backend", "async", "--max-staleness", "lots",
+        ]));
+        assert!(r.unwrap_err().contains("--max-staleness"));
     }
 
     #[test]

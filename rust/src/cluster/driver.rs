@@ -1,0 +1,652 @@
+//! The cluster shard driver: the barrier engine's schedule executed over
+//! transport-separated shards.
+//!
+//! Topology of one run:
+//!
+//! ```text
+//!                       ┌── Transport ──▶ shard 0 (ActorShard: arena
+//!   coordinator ────────┤                 segment + RNG streams)
+//!   (drive loop +       ├── Transport ──▶ shard 1
+//!    RoundPlan replay)  └── Transport ──▶ shard 2 ...
+//! ```
+//!
+//! The coordinator materializes the activation schedule up front
+//! ([`RoundPlan`] — the paper's apriori-schedule observation) and then
+//! runs the **exact** barrier iteration loop of the engine
+//! ([`crate::engine::runner`]'s `drive`): compute phase, per-link delay
+//! events, gossip mix, one `Observer` stream. Only the executor differs —
+//! `ClusterExec` serializes each phase command into [`super::wire`]
+//! frames and ships them over a per-shard [`Transport`] instead of an
+//! in-process channel. Each shard owns a per-shard [`StateMatrix`] arena
+//! segment (the same `ActorShard` the actor pool runs, so the mix fold is
+//! `MixKernel::fold_worker` with unchanged arithmetic order), which makes
+//! the loopback cluster backend **bit-for-bit** equal to the actors
+//! backend per seed — pinned by `rust/tests/golden.rs` — and the TCP
+//! backend byte-identical on the wire.
+//!
+//! The per-link byte accounting ([`LinkStats`]) comes back in
+//! [`ClusterStats`], alongside a [`WireClock`] conversion so the
+//! schedule's simulated communication time and the observed bytes-on-wire
+//! can be compared on one scale.
+
+use super::transport::{
+    loopback_pair, LinkStats, TcpTransport, Transport, TransportKind, WireClock,
+};
+use super::wire::{WireError, WireMeta, WireMsg};
+use crate::engine::actor::{ActorShard, MixBatch, MsgMeta, ShardCmd};
+use crate::engine::runner::{drive, route_per_worker, stage_shard_messages, Executor};
+use crate::engine::DelayPolicy;
+use crate::experiment::{NoopObserver, Observer};
+use crate::gossip::{shard_workers, RoundPlan};
+use crate::graph::Graph;
+use crate::sim::kernel::{init_iterates, worker_streams};
+use crate::sim::{Problem, RunConfig, RunResult};
+use crate::state::StateMatrix;
+use crate::topology::{Round, TopologySampler};
+use std::net::{TcpListener, TcpStream};
+
+/// Configuration of a cluster run: the shared run parameters, the shard
+/// count, and which transport carries the frames.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub run: RunConfig,
+    /// Shards the workers are partitioned over (round-robin, clamped to
+    /// the worker count). Never changes results, only the partition.
+    pub shards: usize,
+    /// Loopback (deterministic in-memory pipes) or TCP over localhost.
+    pub transport: TransportKind,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { run: RunConfig::default(), shards: 2, transport: TransportKind::Loopback }
+    }
+}
+
+/// Communication observability of a cluster run: what actually crossed
+/// each coordinator↔shard link.
+///
+/// Note on what the counts mean: the protocol stages **every** routed
+/// peer row into the Mix frame, including rows whose peer lives on the
+/// same shard — a uniform protocol that keeps the staging layout
+/// identical to the in-process actor batches (and the simultaneous-mix
+/// snapshot semantics trivially correct). Intra-shard rows therefore
+/// count as wire bytes too; suppressing them (reading local peers from
+/// a pre-mix segment snapshot instead) is a planned optimization — see
+/// the ROADMAP — that would make these stats pure inter-node traffic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterStats {
+    pub transport: TransportKind,
+    /// Byte accounting per link, indexed by shard.
+    pub per_link: Vec<LinkStats>,
+}
+
+impl ClusterStats {
+    /// Total bytes on the wire across all links, both directions.
+    pub fn total_bytes(&self) -> u64 {
+        self.per_link.iter().map(|l| l.total_bytes()).sum()
+    }
+
+    /// Total frames across all links, both directions.
+    pub fn total_frames(&self) -> u64 {
+        self.per_link.iter().map(|l| l.frames_sent + l.frames_received).sum()
+    }
+
+    /// The observed traffic expressed in the delay models' virtual units
+    /// via `clock` — the number to put next to the schedule's simulated
+    /// `total_comm_units` when comparing model and wire.
+    pub fn wire_units(&self, clock: WireClock) -> f64 {
+        clock.units(self.total_bytes())
+    }
+}
+
+/// Outcome of a cluster run: the standard [`RunResult`] plus the
+/// engine-level counters and the per-link wire statistics.
+pub struct ClusterResult {
+    pub run: RunResult,
+    /// Links dropped by failure injection over the whole run.
+    pub dropped_links: usize,
+    /// Discrete events processed by the queue.
+    pub events: u64,
+    pub stats: ClusterStats,
+}
+
+// ---------------------------------------------------------------------
+// Schedule replay
+// ---------------------------------------------------------------------
+
+/// Replays a materialized [`RoundPlan`] as a [`TopologySampler`], so the
+/// engine's drive loop consumes the cluster's apriori schedule exactly
+/// as it would consume the live sampler (same activation sequence: the
+/// plan was generated from the same sampler stream).
+struct PlanReplay<'a> {
+    plan: &'a RoundPlan,
+}
+
+impl TopologySampler for PlanReplay<'_> {
+    fn round(&mut self, k: usize) -> Round {
+        Round { activated: self.plan.activated(k).to_vec() }
+    }
+
+    fn expected_comm_units(&self) -> f64 {
+        if self.plan.is_empty() {
+            return 0.0;
+        }
+        let total: usize = (0..self.plan.len()).map(|k| self.plan.activated(k).len()).sum();
+        total as f64 / self.plan.len() as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "cluster-replay"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shard node: serve wire commands against an ActorShard
+// ---------------------------------------------------------------------
+
+/// One shard node's serve loop: announce the shard id, then fold wire
+/// commands into the owned [`ActorShard`] until `Shutdown`. The frame
+/// scratch, state-return and mix-batch buffers are recycled across
+/// frames; decoding still materializes each incoming frame's vectors
+/// (the wire path is transport-bound — it does not share the in-process
+/// hot path's zero-allocation guarantee).
+fn serve_shard<P: Problem + ?Sized>(
+    mut link: Box<dyn Transport>,
+    mut shard: ActorShard<'_, P>,
+    shard_id: usize,
+    dim: usize,
+) -> Result<(), WireError> {
+    let mut scratch = Vec::new();
+    let mut body = Vec::new();
+    let mut ret: Vec<f64> = Vec::new();
+    let mut batch = MixBatch::default();
+    link.send_msg(&WireMsg::Hello { shard: shard_id as u32 }, &mut scratch)?;
+    loop {
+        let cmd = match link.recv_msg(&mut body)? {
+            WireMsg::Step { lr } => ShardCmd::Step { lr, ret: std::mem::take(&mut ret) },
+            WireMsg::Mix { k, alpha, dim: d, msgs, staging } => {
+                assert_eq!(d as usize, dim, "mix frame dim mismatch");
+                batch.msgs.clear();
+                batch.msgs.extend(msgs.iter().map(|m| MsgMeta {
+                    slot: m.slot as usize,
+                    matching: m.matching as usize,
+                    u: m.u as usize,
+                    v: m.v as usize,
+                }));
+                batch.staging.clear();
+                batch.staging.extend_from_slice(&staging);
+                ShardCmd::Mix {
+                    k: k as usize,
+                    alpha,
+                    batch: std::mem::take(&mut batch),
+                    ret: std::mem::take(&mut ret),
+                }
+            }
+            WireMsg::Shutdown => return Ok(()),
+            other => panic!("cluster shard {shard_id}: unexpected command {other:?}"),
+        };
+        let reply = shard.handle(cmd);
+        if let Some(b) = reply.batch {
+            batch = b;
+        }
+        let msg =
+            WireMsg::States { shard: shard_id as u32, dim: dim as u32, states: reply.states };
+        link.send_msg(&msg, &mut scratch)?;
+        let WireMsg::States { states, .. } = msg else { unreachable!() };
+        ret = states;
+    }
+}
+
+/// Accept-side handshake of one TCP connection: switch the socket to
+/// blocking with a short read timeout (so a silent stray connection
+/// cannot stall the accept loop), read the `Hello`, clear the timeout,
+/// and return the announced shard with its link. Any failure rejects
+/// only this connection — the caller keeps accepting.
+fn admit_tcp(stream: TcpStream) -> Result<(usize, TcpTransport), String> {
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| format!("blocking mode: {e}"))?;
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(2)))
+        .map_err(|e| format!("handshake timeout: {e}"))?;
+    let mut link = TcpTransport::new(stream).map_err(|e| e.to_string())?;
+    let mut body = Vec::new();
+    let hello = link.recv_msg(&mut body).map_err(|e| e.to_string())?;
+    let shard = match hello {
+        WireMsg::Hello { shard } => shard as usize,
+        other => return Err(format!("handshake expected Hello, got {other:?}")),
+    };
+    link.stream()
+        .set_read_timeout(None)
+        .map_err(|e| format!("clear handshake timeout: {e}"))?;
+    Ok((shard, link))
+}
+
+// ---------------------------------------------------------------------
+// Coordinator executor
+// ---------------------------------------------------------------------
+
+/// The coordinator-side executor: the cluster twin of the actor pool's
+/// `ActorExec`, with the command/reply cycle serialized through the
+/// per-shard transports. Routing, staging order and fold order are
+/// identical — the shards run the same `ActorShard::handle` — so the
+/// trajectory matches the in-process backends bit-for-bit.
+struct ClusterExec<'a> {
+    links: &'a mut [Box<dyn Transport>],
+    workers: usize,
+    dim: usize,
+    /// Per-worker `(matching, u, v)` routes of the current round, in
+    /// global (activation, edge) order; reused across iterations.
+    per: Vec<Vec<(usize, usize, usize)>>,
+    /// Recycled encode / decode / staging buffers.
+    scratch: Vec<u8>,
+    body: Vec<u8>,
+    msgs: Vec<WireMeta>,
+    staging: Vec<f64>,
+}
+
+impl<'a> ClusterExec<'a> {
+    fn new(links: &'a mut [Box<dyn Transport>], workers: usize, dim: usize) -> Self {
+        ClusterExec {
+            links,
+            workers,
+            dim,
+            per: (0..workers).map(|_| Vec::new()).collect(),
+            scratch: Vec::new(),
+            body: Vec::new(),
+            msgs: Vec::new(),
+            staging: Vec::new(),
+        }
+    }
+
+    /// Receive every shard's `States` reply (links are point-to-point
+    /// and strictly request/reply, so shard order is fine) and copy the
+    /// segments back into the coordinator's arena.
+    fn collect(&mut self, xs: &mut StateMatrix) {
+        let shards = self.links.len();
+        let d = self.dim;
+        for (s, link) in self.links.iter_mut().enumerate() {
+            let msg = link
+                .recv_msg(&mut self.body)
+                .unwrap_or_else(|e| panic!("cluster link {s}: {e}"));
+            let (shard, dim, states) = match msg {
+                WireMsg::States { shard, dim, states } => (shard, dim, states),
+                other => panic!("cluster link {s}: expected States reply, got {other:?}"),
+            };
+            assert_eq!(shard as usize, s, "reply from the wrong shard");
+            assert_eq!(dim as usize, d, "reply dim mismatch");
+            for (slot, w) in shard_workers(s, shards, self.workers).enumerate() {
+                xs.row_mut(w).copy_from_slice(&states[slot * d..(slot + 1) * d]);
+            }
+        }
+    }
+}
+
+impl Executor for ClusterExec<'_> {
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix) {
+        let msg = WireMsg::Step { lr };
+        for (s, link) in self.links.iter_mut().enumerate() {
+            link.send_msg(&msg, &mut self.scratch)
+                .unwrap_or_else(|e| panic!("cluster link {s}: {e}"));
+        }
+        self.collect(xs);
+    }
+
+    fn mix(
+        &mut self,
+        k: usize,
+        alpha: f64,
+        matchings: &[Graph],
+        activated: &[usize],
+        dead: &[(usize, usize)],
+        xs: &mut StateMatrix,
+    ) {
+        // One routing + staging implementation shared with the actor
+        // executor — the fold-order parity contract lives in one place.
+        route_per_worker(&mut self.per, matchings, activated, dead);
+        let shards = self.links.len();
+        let d = self.dim;
+        for s in 0..shards {
+            stage_shard_messages(
+                s,
+                shards,
+                self.workers,
+                &self.per,
+                xs,
+                &mut self.msgs,
+                &mut self.staging,
+                |slot, j, u, v| WireMeta {
+                    slot: slot as u32,
+                    matching: j as u32,
+                    u: u as u32,
+                    v: v as u32,
+                },
+            );
+            let msg = WireMsg::Mix {
+                k: k as u64,
+                alpha,
+                dim: d as u32,
+                msgs: std::mem::take(&mut self.msgs),
+                staging: std::mem::take(&mut self.staging),
+            };
+            self.links[s]
+                .send_msg(&msg, &mut self.scratch)
+                .unwrap_or_else(|e| panic!("cluster link {s}: {e}"));
+            let WireMsg::Mix { msgs, staging, .. } = msg else { unreachable!() };
+            self.msgs = msgs;
+            self.staging = staging;
+        }
+        self.collect(xs);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The run entry points
+// ---------------------------------------------------------------------
+
+/// Run the cluster backend. Equivalent to [`run_cluster_observed`] with
+/// a no-op observer.
+pub fn run_cluster<P, S>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &ClusterConfig,
+) -> Result<ClusterResult, String>
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
+    run_cluster_observed(problem, matchings, sampler, policy, config, &mut NoopObserver)
+}
+
+/// [`run_cluster`] with streaming observation (callbacks run on the
+/// coordinator thread, exactly as in the other barrier backends).
+///
+/// Materializes the [`RoundPlan`], spawns one shard node per partition
+/// behind the configured transport, performs the `Hello` handshake, and
+/// drives the engine's barrier loop through the wire executor. Errors
+/// from setup (socket binding, handshake) surface as `Err`; transport
+/// failures mid-run panic the run (the shards hold borrowed state that
+/// cannot outlive a half-finished schedule).
+pub fn run_cluster_observed<P, S>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &ClusterConfig,
+    observer: &mut dyn Observer,
+) -> Result<ClusterResult, String>
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
+    let m = problem.num_workers();
+    let d = problem.dim();
+    let shards = config.shards.clamp(1, m);
+    let plan = RoundPlan::generate(sampler, matchings, config.run.iterations);
+    let xs0 = init_iterates(config.run.seed, m, d);
+    let rngs = worker_streams(config.run.seed, m);
+
+    // Sticky shard state, built by the same construction path as the
+    // actor pool's shards (identical partition, segments and streams).
+    let make_shard = |s: usize| {
+        ActorShard::for_partition(
+            problem,
+            config.run.compression.clone(),
+            config.run.seed,
+            s,
+            shards,
+            &xs0,
+            &rngs,
+        )
+    };
+
+    let listener = match config.transport {
+        TransportKind::Tcp => Some(
+            TcpListener::bind(("127.0.0.1", 0))
+                .map_err(|e| format!("cluster: bind localhost listener: {e}"))?,
+        ),
+        TransportKind::Loopback => None,
+    };
+
+    std::thread::scope(|scope| -> Result<ClusterResult, String> {
+        // Connect one transport per shard, spawn its serve loop, and
+        // handshake: every link announces its shard id, and the links
+        // are ordered by id (TCP arrival order is whichever shard
+        // dialed in first).
+        let mut slots: Vec<Option<Box<dyn Transport>>> = (0..shards).map(|_| None).collect();
+        let mut body = Vec::new();
+        match config.transport {
+            TransportKind::Loopback => {
+                let mut raw: Vec<Box<dyn Transport>> = Vec::with_capacity(shards);
+                for s in 0..shards {
+                    let (coord, node) = loopback_pair();
+                    raw.push(Box::new(coord));
+                    let shard = make_shard(s);
+                    // A transport error shard-side means the coordinator
+                    // hung up (setup error or panic); the coordinator's
+                    // own recv/send is the loud failure, so the shard
+                    // logs and exits instead of turning a coordinator
+                    // Err return into a join panic.
+                    scope.spawn(move || {
+                        let boxed = Box::new(node) as Box<dyn Transport>;
+                        if let Err(e) = serve_shard(boxed, shard, s, d) {
+                            eprintln!("cluster shard {s}: link closed: {e}");
+                        }
+                    });
+                }
+                for mut link in raw {
+                    let hello = link
+                        .recv_msg(&mut body)
+                        .map_err(|e| format!("cluster: handshake: {e}"))?;
+                    let shard = match hello {
+                        WireMsg::Hello { shard } => shard,
+                        other => {
+                            return Err(format!(
+                                "cluster: handshake expected Hello, got {other:?}"
+                            ))
+                        }
+                    };
+                    let s = shard as usize;
+                    if s >= shards || slots[s].is_some() {
+                        return Err(format!("cluster: handshake announced bogus shard {s}"));
+                    }
+                    slots[s] = Some(link);
+                }
+            }
+            TransportKind::Tcp => {
+                let listener = listener.as_ref().expect("tcp listener bound above");
+                let addr = listener
+                    .local_addr()
+                    .map_err(|e| format!("cluster: listener address: {e}"))?;
+                for s in 0..shards {
+                    let shard = make_shard(s);
+                    // Same log-and-exit contract as the loopback shards.
+                    // A connect failure also logs and exits: the
+                    // deadline on the accept loop below turns the
+                    // missing connection into a coordinator-side Err
+                    // instead of an unbounded accept() block.
+                    scope.spawn(move || {
+                        let stream = match TcpStream::connect(addr) {
+                            Ok(stream) => stream,
+                            Err(e) => {
+                                eprintln!("cluster shard {s}: connect failed: {e}");
+                                return;
+                            }
+                        };
+                        let link = match TcpTransport::new(stream) {
+                            Ok(link) => link,
+                            Err(e) => {
+                                eprintln!("cluster shard {s}: {e}");
+                                return;
+                            }
+                        };
+                        let boxed = Box::new(link) as Box<dyn Transport>;
+                        if let Err(e) = serve_shard(boxed, shard, s, d) {
+                            eprintln!("cluster shard {s}: link closed: {e}");
+                        }
+                    });
+                }
+                // Accept with a deadline: if a shard never dials in (its
+                // connect failed), surface an error instead of blocking
+                // in accept() forever inside the scope. The ephemeral
+                // localhost port is reachable by any local process, so
+                // each connection must earn its slot with a valid Hello
+                // — strays are rejected and accepting continues.
+                listener
+                    .set_nonblocking(true)
+                    .map_err(|e| format!("cluster: listener nonblocking: {e}"))?;
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+                while slots.iter().any(Option::is_none) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => match admit_tcp(stream) {
+                            Ok((s, link)) if s < shards && slots[s].is_none() => {
+                                slots[s] = Some(Box::new(link));
+                            }
+                            Ok((s, _)) => {
+                                eprintln!(
+                                    "cluster: rejected connection from {peer} announcing \
+                                     bogus or duplicate shard {s}"
+                                );
+                            }
+                            Err(e) => {
+                                eprintln!("cluster: rejected connection from {peer}: {e}");
+                            }
+                        },
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            if std::time::Instant::now() >= deadline {
+                                let arrived = slots.iter().filter(|l| l.is_some()).count();
+                                return Err(format!(
+                                    "cluster: timed out waiting for shard connections \
+                                     ({arrived}/{shards} arrived)"
+                                ));
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(e) => return Err(format!("cluster: accept shard connection: {e}")),
+                    }
+                }
+            }
+        }
+        let mut links: Vec<Box<dyn Transport>> =
+            slots.into_iter().map(|l| l.expect("every shard slot handshaken")).collect();
+
+        // The engine's barrier loop, verbatim, over the wire executor.
+        let exec = ClusterExec::new(&mut links, m, d);
+        let mut replay = PlanReplay { plan: &plan };
+        let result =
+            drive(problem, matchings, &mut replay, policy, &config.run, exec, observer);
+
+        let mut scratch = Vec::new();
+        for (s, link) in links.iter_mut().enumerate() {
+            link.send_msg(&WireMsg::Shutdown, &mut scratch)
+                .map_err(|e| format!("cluster: shutdown shard {s}: {e}"))?;
+        }
+        let stats = ClusterStats {
+            transport: config.transport,
+            per_link: links.iter().map(|l| l.stats()).collect(),
+        };
+        Ok(ClusterResult {
+            run: result.run,
+            dropped_links: result.dropped_links,
+            events: result.events,
+            stats,
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{run_engine_analytic, AnalyticPolicy, EngineConfig};
+    use crate::matching::decompose;
+    use crate::rng::Rng;
+    use crate::sim::QuadraticProblem;
+    use crate::topology::{MatchaSampler, VanillaSampler};
+
+    fn quad(m: usize) -> QuadraticProblem {
+        let mut rng = Rng::new(99);
+        QuadraticProblem::generate(m, 10, 1.0, 0.1, &mut rng)
+    }
+
+    fn cfg(iterations: usize, alpha: f64, seed: u64) -> RunConfig {
+        RunConfig { lr: 0.02, iterations, alpha, seed, ..RunConfig::default() }
+    }
+
+    #[test]
+    fn loopback_cluster_matches_actor_pool_bit_for_bit() {
+        let g = crate::graph::paper_figure1_graph();
+        let d = decompose(&g);
+        let p = quad(8);
+        let run_cfg = cfg(60, 0.15, 21);
+
+        let mut s1 = MatchaSampler::new(vec![0.6; d.len()], 4);
+        let actors = run_engine_analytic(
+            &p,
+            &d.matchings,
+            &mut s1,
+            &EngineConfig { run: run_cfg.clone(), threads: 3 },
+        );
+
+        let mut s2 = MatchaSampler::new(vec![0.6; d.len()], 4);
+        let mut policy = AnalyticPolicy::matching_run_config(&run_cfg);
+        let cluster_cfg =
+            ClusterConfig { run: run_cfg, shards: 3, transport: TransportKind::Loopback };
+        let cluster =
+            run_cluster(&p, &d.matchings, &mut s2, &mut policy, &cluster_cfg).unwrap();
+
+        assert_eq!(cluster.run.final_mean, actors.run.final_mean);
+        assert_eq!(cluster.run.final_states, actors.run.final_states);
+        assert_eq!(cluster.run.total_time, actors.run.total_time);
+        assert_eq!(cluster.run.total_comm_units, actors.run.total_comm_units);
+        assert!(cluster.stats.total_bytes() > 0, "traffic must be accounted");
+        assert_eq!(cluster.stats.per_link.len(), 3);
+    }
+
+    #[test]
+    fn shard_count_never_changes_results() {
+        let g = crate::graph::ring(9);
+        let d = decompose(&g);
+        let p = quad(9);
+        let run = |shards: usize| {
+            let mut sampler = VanillaSampler::new(d.len());
+            let run_cfg = cfg(25, 0.2, 3);
+            let mut policy = AnalyticPolicy::matching_run_config(&run_cfg);
+            let cluster_cfg =
+                ClusterConfig { run: run_cfg, shards, transport: TransportKind::Loopback };
+            run_cluster(&p, &d.matchings, &mut sampler, &mut policy, &cluster_cfg).unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        // Shard counts above the worker count clamp harmlessly.
+        let c = run(64);
+        assert_eq!(a.run.final_mean, b.run.final_mean);
+        assert_eq!(a.run.final_mean, c.run.final_mean);
+        assert_eq!(a.run.total_time, b.run.total_time);
+        assert_eq!(c.stats.per_link.len(), 9, "clamped to one shard per worker");
+    }
+
+    #[test]
+    fn wire_stats_scale_with_schedule_traffic() {
+        // More iterations → strictly more frames and bytes on every link.
+        let g = crate::graph::ring(6);
+        let d = decompose(&g);
+        let p = quad(6);
+        let run = |iters: usize| {
+            let mut sampler = VanillaSampler::new(d.len());
+            let run_cfg = cfg(iters, 0.2, 3);
+            let mut policy = AnalyticPolicy::matching_run_config(&run_cfg);
+            let cluster_cfg =
+                ClusterConfig { run: run_cfg, shards: 2, transport: TransportKind::Loopback };
+            run_cluster(&p, &d.matchings, &mut sampler, &mut policy, &cluster_cfg).unwrap()
+        };
+        let short = run(5);
+        let long = run(20);
+        assert!(long.stats.total_bytes() > short.stats.total_bytes());
+        assert!(long.stats.total_frames() > short.stats.total_frames());
+        let clock = WireClock::per_row(10, 1.0);
+        assert!(long.stats.wire_units(clock) > short.stats.wire_units(clock));
+    }
+}

@@ -1,0 +1,72 @@
+//! Multi-node cluster runtime: the gossip workers across
+//! transport-separated shards instead of one address space.
+//!
+//! Every other backend in this crate exchanges gossip through in-process
+//! memory; MATCHA's whole premise, though, is that **communication** is
+//! the bottleneck, and realizing the algorithm's wall-clock win requires
+//! real inter-node links (the AD-PSGD deployment model; see also "From
+//! promise to practice", Wang et al., 2024). This subsystem is that
+//! step, in three layers:
+//!
+//! - [`wire`] — a versioned, dependency-free framed binary encoding
+//!   (length-prefixed, little-endian `f64` rows) of the actor mode's
+//!   message format: phase commands, routed gossip metadata + staged
+//!   peer rows, and state replies. Decoding is total — truncation, bad
+//!   version bytes and overflowing length prefixes return typed
+//!   [`WireError`]s, never panics — and `f64` bit patterns cross
+//!   losslessly.
+//! - [`transport`] — the [`Transport`] link trait with two
+//!   implementations: an in-memory loopback (deterministic; what tests
+//!   and parity proofs use) and a real [`std::net::TcpStream`] transport.
+//!   Both carry a per-link byte-accounting layer ([`LinkStats`]) and a
+//!   [`WireClock`] that converts observed bytes into the delay models'
+//!   virtual units, so simulated and wire communication time can be
+//!   compared on one scale.
+//! - [`driver`] — the shard driver: each shard owns a per-shard
+//!   [`crate::state::StateMatrix`] arena segment (the actor pool's
+//!   `ActorShard`, unchanged), and the coordinator replays the
+//!   materialized [`crate::gossip::RoundPlan`] schedule through the
+//!   barrier engine's own drive loop, with phase commands serialized
+//!   over the per-shard transports.
+//!
+//! Because the shards run the identical `MixKernel::fold_worker`
+//! arithmetic in the identical order and the wire is lossless, the
+//! loopback cluster backend is **bit-for-bit** equal to the actors
+//! backend per seed (pinned by `rust/tests/golden.rs`), and a TCP run
+//! over localhost executes the same schedule with the same result.
+//!
+//! Reachable end-to-end as `backend: "cluster"` in an
+//! [`crate::experiment::ExperimentSpec`] (JSON: `{"kind": "cluster",
+//! "shards": N, "transport": "loopback" | "tcp"}`), from the CLI
+//! (`matcha engine --backend cluster --shards N --transport tcp`), and
+//! in `benches/cluster_transport.rs`, which measures bytes/iteration and
+//! loopback-vs-TCP throughput (`BENCH_cluster.json`).
+//!
+//! ```
+//! use matcha::cluster::{run_cluster, ClusterConfig, TransportKind};
+//! use matcha::engine::AnalyticPolicy;
+//! use matcha::graph::paper_figure1_graph;
+//! use matcha::matching::decompose;
+//! use matcha::rng::Rng;
+//! use matcha::sim::{QuadraticProblem, RunConfig};
+//! use matcha::topology::VanillaSampler;
+//!
+//! let d = decompose(&paper_figure1_graph());
+//! let problem = QuadraticProblem::generate(8, 10, 1.0, 0.1, &mut Rng::new(1));
+//! let mut sampler = VanillaSampler::new(d.len());
+//! let run = RunConfig { iterations: 20, alpha: 0.1, ..RunConfig::default() };
+//! let mut policy = AnalyticPolicy::matching_run_config(&run);
+//! let config = ClusterConfig { run, shards: 3, transport: TransportKind::Loopback };
+//! let result = run_cluster(&problem, &d.matchings, &mut sampler, &mut policy, &config).unwrap();
+//! assert!(result.stats.total_bytes() > 0);
+//! ```
+
+pub mod driver;
+pub mod transport;
+pub mod wire;
+
+pub use driver::{run_cluster, run_cluster_observed, ClusterConfig, ClusterResult, ClusterStats};
+pub use transport::{
+    loopback_pair, LinkStats, LoopbackTransport, TcpTransport, Transport, TransportKind, WireClock,
+};
+pub use wire::{frame_len, WireError, WireMeta, WireMsg, MAX_FRAME_BYTES, WIRE_VERSION};

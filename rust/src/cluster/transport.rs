@@ -1,0 +1,353 @@
+//! Cluster transports: how wire frames move between the coordinator and
+//! a shard.
+//!
+//! [`Transport`] is one duplex, ordered, reliable link carrying the
+//! frames of [`super::wire`]. Two implementations:
+//!
+//! - [`LoopbackTransport`] — in-memory channels. Deterministic and
+//!   dependency-free; what the parity tests use to prove the cluster
+//!   backend is **bit-for-bit** equal to the in-process actors backend
+//!   (the bytes are identical to what TCP would carry — the whole wire
+//!   layer is exercised, only the pipe differs).
+//! - [`TcpTransport`] — a real [`std::net::TcpStream`] (`TCP_NODELAY`),
+//!   the production shape: shards in other processes or on other
+//!   machines, coordinator dialed in over the network.
+//!
+//! Every transport carries a **byte-accounting layer** ([`LinkStats`]):
+//! frames and bytes in each direction, counted at the link. This is the
+//! bridge between the paper's simulated communication model and real
+//! deployment: [`WireClock`] converts accumulated bytes into the same
+//! virtual units the [`crate::engine::DelayPolicy`] clock charges, so a
+//! run can report, side by side, what the activation schedule *predicts*
+//! communication costs and what the serialized model rows *actually* put
+//! on the wire (`ClusterStats` in [`super::driver`]).
+
+use super::wire::{frame_len, WireError, WireMsg, FRAME_HEADER_BYTES};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// Per-link byte accounting: every frame and byte that crossed this
+/// link, per direction. Counted where the link is held, so loopback and
+/// TCP report identical numbers for identical traffic.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    pub frames_sent: u64,
+    pub bytes_sent: u64,
+    pub frames_received: u64,
+    pub bytes_received: u64,
+}
+
+impl LinkStats {
+    /// Total traffic in both directions, in bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent + self.bytes_received
+    }
+}
+
+/// Convert accumulated wire bytes into the virtual time units of the
+/// delay models: a link moving `bytes_per_unit` bytes per unit needs
+/// `bytes / bytes_per_unit` units to drain the observed traffic. With
+/// `bytes_per_unit = 8 · dim / link_time` (one model row per link
+/// activation), wire-clock time and the schedule's analytic
+/// communication time land on the same scale and can be compared
+/// directly.
+#[derive(Clone, Copy, Debug)]
+pub struct WireClock {
+    bytes_per_unit: f64,
+}
+
+impl WireClock {
+    /// A clock rating the link at `bytes_per_unit` bytes per virtual
+    /// delay unit (must be positive and finite).
+    pub fn new(bytes_per_unit: f64) -> WireClock {
+        assert!(
+            bytes_per_unit.is_finite() && bytes_per_unit > 0.0,
+            "wire clock needs a positive finite bandwidth"
+        );
+        WireClock { bytes_per_unit }
+    }
+
+    /// A clock calibrated so one `dim`-row payload costs one `link_time`
+    /// unit — the delay models' per-link charge. Degenerate inputs never
+    /// panic: an infinite `link_time` (a link that never delivers) rates
+    /// the link maximally slow, while a zero, negative or NaN one rates
+    /// it effectively free.
+    pub fn per_row(dim: usize, link_time: f64) -> WireClock {
+        let bytes = 8.0 * dim.max(1) as f64;
+        let bytes_per_unit = if link_time.is_finite() && link_time > 0.0 {
+            (bytes / link_time).clamp(f64::MIN_POSITIVE, f64::MAX)
+        } else if link_time == f64::INFINITY {
+            f64::MIN_POSITIVE
+        } else {
+            f64::MAX
+        };
+        WireClock::new(bytes_per_unit)
+    }
+
+    /// Virtual units the given byte count costs on this clock.
+    pub fn units(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bytes_per_unit
+    }
+}
+
+/// One duplex, ordered, reliable frame link. `send` ships one complete
+/// frame (length prefix included, as produced by [`WireMsg::encode`]);
+/// `recv_into` blocks for the next frame and leaves its **body** (prefix
+/// stripped and validated) in `body`.
+pub trait Transport: Send {
+    fn send(&mut self, frame: &[u8]) -> Result<(), WireError>;
+    fn recv_into(&mut self, body: &mut Vec<u8>) -> Result<(), WireError>;
+    fn stats(&self) -> LinkStats;
+
+    /// Encode and ship `msg`, recycling `scratch` as the frame buffer
+    /// (the encode side allocates nothing per frame at steady state;
+    /// the decode side of [`Transport::recv_msg`] materializes the
+    /// message's vectors — an accepted cost on a transport-bound path).
+    fn send_msg(&mut self, msg: &WireMsg, scratch: &mut Vec<u8>) -> Result<(), WireError> {
+        scratch.clear();
+        msg.encode(scratch);
+        self.send(scratch)
+    }
+
+    /// Receive and decode the next message, recycling `scratch` as the
+    /// body buffer.
+    fn recv_msg(&mut self, scratch: &mut Vec<u8>) -> Result<WireMsg, WireError> {
+        self.recv_into(scratch)?;
+        WireMsg::decode(scratch)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Loopback: in-memory channels
+// ---------------------------------------------------------------------
+
+/// In-memory transport endpoint: frames travel over `mpsc` channels as
+/// owned byte vectors, in order, with the same framing and accounting as
+/// TCP. Used by tests and the deterministic loopback cluster backend.
+pub struct LoopbackTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    stats: LinkStats,
+}
+
+/// A connected pair of loopback endpoints (coordinator side, shard
+/// side).
+pub fn loopback_pair() -> (LoopbackTransport, LoopbackTransport) {
+    let (atx, brx) = channel();
+    let (btx, arx) = channel();
+    (
+        LoopbackTransport { tx: atx, rx: arx, stats: LinkStats::default() },
+        LoopbackTransport { tx: btx, rx: brx, stats: LinkStats::default() },
+    )
+}
+
+impl Transport for LoopbackTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<(), WireError> {
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += frame.len() as u64;
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| WireError::Io("loopback peer hung up".into()))
+    }
+
+    fn recv_into(&mut self, body: &mut Vec<u8>) -> Result<(), WireError> {
+        let frame = self
+            .rx
+            .recv()
+            .map_err(|_| WireError::Io("loopback peer hung up".into()))?;
+        if frame.len() < FRAME_HEADER_BYTES {
+            return Err(WireError::Truncated { needed: FRAME_HEADER_BYTES, got: frame.len() });
+        }
+        let len = frame_len(frame[..FRAME_HEADER_BYTES].try_into().expect("4-byte header"))?;
+        if frame.len() != FRAME_HEADER_BYTES + len {
+            return Err(WireError::Truncated {
+                needed: FRAME_HEADER_BYTES + len,
+                got: frame.len(),
+            });
+        }
+        self.stats.frames_received += 1;
+        self.stats.bytes_received += frame.len() as u64;
+        body.clear();
+        body.extend_from_slice(&frame[FRAME_HEADER_BYTES..]);
+        Ok(())
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.stats
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP: std::net::TcpStream
+// ---------------------------------------------------------------------
+
+/// A frame link over one TCP connection. `TCP_NODELAY` is set — the
+/// protocol is strictly request/reply per phase, and Nagle batching
+/// would serialize the whole cluster on the ACK clock.
+pub struct TcpTransport {
+    stream: TcpStream,
+    stats: LinkStats,
+}
+
+impl TcpTransport {
+    /// Wrap a connected stream (either end of the connection).
+    pub fn new(stream: TcpStream) -> Result<TcpTransport, WireError> {
+        stream
+            .set_nodelay(true)
+            .map_err(|e| WireError::Io(format!("set_nodelay: {e}")))?;
+        Ok(TcpTransport { stream, stats: LinkStats::default() })
+    }
+
+    /// The underlying stream, for socket-option tweaks (e.g. a read
+    /// timeout while handshaking an unauthenticated connection).
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<(), WireError> {
+        self.stream
+            .write_all(frame)
+            .map_err(|e| WireError::Io(format!("send: {e}")))?;
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += frame.len() as u64;
+        Ok(())
+    }
+
+    fn recv_into(&mut self, body: &mut Vec<u8>) -> Result<(), WireError> {
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        self.stream
+            .read_exact(&mut header)
+            .map_err(|e| WireError::Io(format!("recv header: {e}")))?;
+        let len = frame_len(header)?;
+        body.clear();
+        body.resize(len, 0);
+        self.stream
+            .read_exact(body)
+            .map_err(|e| WireError::Io(format!("recv body: {e}")))?;
+        self.stats.frames_received += 1;
+        self.stats.bytes_received += (FRAME_HEADER_BYTES + len) as u64;
+        Ok(())
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.stats
+    }
+}
+
+/// Which transport a cluster run uses. `Loopback` is deterministic and
+/// in-process (tests, parity proofs); `Tcp` runs the same protocol over
+/// localhost sockets — the deployment shape, exercised end-to-end by
+/// `rust/tests/cluster.rs` and `benches/cluster_transport.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    Loopback,
+    Tcp,
+}
+
+impl TransportKind {
+    /// Short name for logs and JSON (`loopback`, `tcp`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Loopback => "loopback",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    /// Parse a spec/CLI transport name.
+    pub fn parse(s: &str) -> Result<TransportKind, String> {
+        match s {
+            "loopback" => Ok(TransportKind::Loopback),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(format!("unknown transport '{other}' (expected loopback | tcp)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise_pair(mut a: Box<dyn Transport>, mut b: Box<dyn Transport>) {
+        let mut scratch = Vec::new();
+        let mut body = Vec::new();
+        let msg = WireMsg::States { shard: 3, dim: 2, states: vec![1.0, -2.0, 3.5, 0.25] };
+        a.send_msg(&msg, &mut scratch).unwrap();
+        a.send_msg(&WireMsg::Shutdown, &mut scratch).unwrap();
+        assert_eq!(b.recv_msg(&mut body).unwrap(), msg, "frames arrive in order");
+        assert_eq!(b.recv_msg(&mut body).unwrap(), WireMsg::Shutdown);
+
+        b.send_msg(&WireMsg::Hello { shard: 3 }, &mut scratch).unwrap();
+        assert_eq!(a.recv_msg(&mut body).unwrap(), WireMsg::Hello { shard: 3 });
+
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.frames_sent, 2);
+        assert_eq!(sb.frames_received, 2);
+        assert_eq!(sa.bytes_sent, sb.bytes_received, "both ends count the same bytes");
+        assert_eq!(sb.bytes_sent, sa.bytes_received);
+        assert!(sa.total_bytes() > 0);
+    }
+
+    #[test]
+    fn loopback_duplex_ordered_and_accounted() {
+        let (a, b) = loopback_pair();
+        exercise_pair(Box::new(a), Box::new(b));
+    }
+
+    #[test]
+    fn tcp_duplex_ordered_and_accounted() {
+        let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind localhost");
+        let addr = listener.local_addr().unwrap();
+        let dial = std::thread::spawn(move || {
+            TcpTransport::new(TcpStream::connect(addr).expect("connect")).unwrap()
+        });
+        let (accepted, _) = listener.accept().expect("accept");
+        let a = TcpTransport::new(accepted).unwrap();
+        let b = dial.join().expect("dial thread");
+        exercise_pair(Box::new(a), Box::new(b));
+    }
+
+    #[test]
+    fn loopback_rejects_corrupt_frames_with_typed_errors() {
+        let (mut a, mut b) = loopback_pair();
+        // Undersized frame: shorter than the header itself.
+        a.send(&[1, 2]).unwrap();
+        // Length prefix claiming more than the carried body.
+        let mut frame = Vec::new();
+        WireMsg::Shutdown.encode(&mut frame);
+        frame.truncate(frame.len() - 1);
+        a.send(&frame).unwrap();
+        let mut body = Vec::new();
+        assert!(matches!(b.recv_into(&mut body), Err(WireError::Truncated { .. })));
+        assert!(matches!(b.recv_into(&mut body), Err(WireError::Truncated { .. })));
+        // Hung-up peer surfaces as Io, not a panic.
+        drop(a);
+        assert!(matches!(b.recv_into(&mut body), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn wire_clock_converts_bytes_to_delay_units() {
+        let clock = WireClock::per_row(16, 1.0); // one 16-dim row per unit
+        assert_eq!(clock.units(128), 1.0);
+        assert_eq!(clock.units(256), 2.0);
+        let faster = WireClock::new(1024.0);
+        assert!(faster.units(128) < clock.units(128));
+        // Degenerate link times never panic: zero/negative/NaN rate the
+        // link as free, an infinite link time as maximally slow.
+        for bad in [0.0, -1.0, f64::NAN] {
+            let units = WireClock::per_row(64, bad).units(1 << 20);
+            assert!(units >= 0.0 && units < 1e-290, "link_time {bad}: units {units}");
+        }
+        assert!(WireClock::per_row(64, f64::INFINITY).units(1 << 20) > 1e290);
+    }
+
+    #[test]
+    fn transport_kind_names_roundtrip() {
+        for kind in [TransportKind::Loopback, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(kind.name()), Ok(kind));
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+    }
+}

@@ -1,0 +1,533 @@
+//! The cluster wire format: a versioned, dependency-free framed binary
+//! encoding of the coordinator ↔ shard protocol.
+//!
+//! This promotes the actor mode's in-memory message format
+//! (`engine::actor::MsgMeta` + per-shard flat staging buffers) to bytes
+//! that can cross a process or machine boundary. Design rules:
+//!
+//! - **Framed**: every message is `[len: u32 LE][version: u8][tag: u8]
+//!   [payload]`, where `len` counts the bytes after the prefix. A reader
+//!   needs exactly one 4-byte header read to know how much to pull off
+//!   the stream — no in-band scanning, no delimiters.
+//! - **Versioned**: the first body byte is [`WIRE_VERSION`]; a decoder
+//!   refuses anything else with a typed error instead of misreading.
+//! - **Little-endian `f64` rows**: model state crosses the wire as raw
+//!   IEEE-754 bit patterns (`f64::to_le_bytes`), so a loopback or TCP
+//!   round-trip is **lossless** — the cluster backend stays bit-for-bit
+//!   equal to the in-process actors backend (`rust/tests/golden.rs`).
+//! - **Total decode safety**: malformed input (truncation, bad version,
+//!   unknown tag, oversized or overflowing length prefixes, inconsistent
+//!   interior counts) returns a [`WireError`] — decoding never panics
+//!   and never allocates more than the validated frame length.
+//!
+//! Encoding round-trips exactly (`encode` ∘ `decode` = id), fuzz-tested
+//! below over randomized messages and corruptions.
+
+/// Current wire protocol version (first body byte of every frame).
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard upper bound on a frame body, in bytes (1 GiB). A length prefix
+/// above this is rejected before any allocation happens — the guard
+/// against hostile or corrupted prefixes like `0xffff_ffff`.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Frame header size on the wire: the `u32` length prefix.
+pub const FRAME_HEADER_BYTES: usize = 4;
+
+// Message tags (second body byte).
+const TAG_HELLO: u8 = 0x01;
+const TAG_STEP: u8 = 0x02;
+const TAG_MIX: u8 = 0x03;
+const TAG_STATES: u8 = 0x04;
+const TAG_SHUTDOWN: u8 = 0x05;
+
+/// Typed decode/transport failure. Every malformed input maps to one of
+/// these — the wire layer never panics on bytes it did not produce.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The input ended before the declared or required length.
+    Truncated { needed: usize, got: usize },
+    /// The version byte is not [`WIRE_VERSION`].
+    BadVersion(u8),
+    /// Unknown message tag byte.
+    BadTag(u8),
+    /// A length prefix (or an interior count scaled to bytes) exceeds
+    /// [`MAX_FRAME_BYTES`] or overflows `usize`.
+    FrameTooLarge(u64),
+    /// Interior structure disagrees with itself (e.g. staging bytes not
+    /// a multiple of the row width, or trailing bytes after the payload).
+    Inconsistent(String),
+    /// Transport-level I/O failure (TCP reset, closed channel, ...).
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { needed, got } => {
+                write!(f, "wire: truncated frame (needed {needed} bytes, got {got})")
+            }
+            WireError::BadVersion(v) => {
+                write!(f, "wire: unsupported version {v} (expected {WIRE_VERSION})")
+            }
+            WireError::BadTag(t) => write!(f, "wire: unknown message tag {t:#04x}"),
+            WireError::FrameTooLarge(n) => {
+                write!(f, "wire: length {n} exceeds the {MAX_FRAME_BYTES}-byte frame bound")
+            }
+            WireError::Inconsistent(msg) => write!(f, "wire: inconsistent frame: {msg}"),
+            WireError::Io(msg) => write!(f, "wire: transport I/O: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One routed gossip message's metadata on the wire: the wire twin of
+/// the actor mode's `MsgMeta` (owner slot within the shard, matching
+/// index, canonical `u < v` edge). The peer row itself lives at the
+/// message's index in the enclosing [`WireMsg::Mix`] staging buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireMeta {
+    pub slot: u32,
+    pub matching: u32,
+    pub u: u32,
+    pub v: u32,
+}
+
+/// The coordinator ↔ shard protocol. `Hello`/`Step`/`Mix`/`Shutdown`
+/// travel coordinator-bound or shard-bound as noted; `States` is the
+/// single reply shape (one per command, post-phase iterates in slot
+/// order).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// Shard → coordinator, once per connection: identifies which shard
+    /// this link belongs to (TCP accept order is nondeterministic).
+    Hello { shard: u32 },
+    /// Coordinator → shard: run one local SGD step on every owned
+    /// worker at learning rate `lr`.
+    Step { lr: f64 },
+    /// Coordinator → shard: apply the gossip mix of iteration `k`.
+    /// `msgs` are sorted by owner slot (global (activation, edge) order
+    /// within a slot); message `i`'s peer row is
+    /// `staging[i*dim..(i+1)*dim]`.
+    Mix { k: u64, alpha: f64, dim: u32, msgs: Vec<WireMeta>, staging: Vec<f64> },
+    /// Shard → coordinator: the post-phase iterates of every owned
+    /// worker, flat `rows × dim` in slot order.
+    States { shard: u32, dim: u32, states: Vec<f64> },
+    /// Coordinator → shard: the run is over; close the link.
+    Shutdown,
+}
+
+impl WireMsg {
+    /// Append the full frame (length prefix included) to `out`. `out` is
+    /// not cleared — callers recycle one buffer per link and clear it
+    /// themselves, so the steady state allocates nothing per frame.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let at = out.len();
+        out.extend_from_slice(&[0, 0, 0, 0]); // length prefix backpatched below
+        out.push(WIRE_VERSION);
+        match self {
+            WireMsg::Hello { shard } => {
+                out.push(TAG_HELLO);
+                put_u32(out, *shard);
+            }
+            WireMsg::Step { lr } => {
+                out.push(TAG_STEP);
+                put_f64(out, *lr);
+            }
+            WireMsg::Mix { k, alpha, dim, msgs, staging } => {
+                out.push(TAG_MIX);
+                put_u64(out, *k);
+                put_f64(out, *alpha);
+                put_u32(out, *dim);
+                put_u32(out, u32::try_from(msgs.len()).expect("mix message count fits u32"));
+                for m in msgs {
+                    put_u32(out, m.slot);
+                    put_u32(out, m.matching);
+                    put_u32(out, m.u);
+                    put_u32(out, m.v);
+                }
+                debug_assert_eq!(staging.len(), msgs.len() * *dim as usize);
+                for &x in staging {
+                    put_f64(out, x);
+                }
+            }
+            WireMsg::States { shard, dim, states } => {
+                out.push(TAG_STATES);
+                put_u32(out, *shard);
+                put_u32(out, *dim);
+                put_u32(out, u32::try_from(states.len()).expect("state length fits u32"));
+                for &x in states {
+                    put_f64(out, x);
+                }
+            }
+            WireMsg::Shutdown => out.push(TAG_SHUTDOWN),
+        }
+        let body = out.len() - at - FRAME_HEADER_BYTES;
+        assert!(body <= MAX_FRAME_BYTES, "frame body {body} exceeds MAX_FRAME_BYTES");
+        out[at..at + 4].copy_from_slice(&(body as u32).to_le_bytes());
+    }
+
+    /// Decode one frame **body** (everything after the length prefix —
+    /// transports strip and validate the prefix via [`frame_len`]).
+    /// Total: every malformed input returns a [`WireError`].
+    pub fn decode(body: &[u8]) -> Result<WireMsg, WireError> {
+        let mut r = Reader { buf: body, at: 0 };
+        let version = r.u8()?;
+        if version != WIRE_VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let tag = r.u8()?;
+        let msg = match tag {
+            TAG_HELLO => WireMsg::Hello { shard: r.u32()? },
+            TAG_STEP => WireMsg::Step { lr: r.f64()? },
+            TAG_MIX => {
+                let k = r.u64()?;
+                let alpha = r.f64()?;
+                let dim = r.u32()?;
+                let count = r.u32()? as usize;
+                // Guard the count before allocating or looping: the
+                // metadata alone must fit the remaining bytes.
+                r.need(count, 16)?;
+                let mut msgs = Vec::with_capacity(count);
+                for _ in 0..count {
+                    msgs.push(WireMeta {
+                        slot: r.u32()?,
+                        matching: r.u32()?,
+                        u: r.u32()?,
+                        v: r.u32()?,
+                    });
+                }
+                let rows = count
+                    .checked_mul(dim as usize)
+                    .ok_or(WireError::FrameTooLarge(u64::MAX))?;
+                r.need(rows, 8)?;
+                let mut staging = Vec::with_capacity(rows);
+                for _ in 0..rows {
+                    staging.push(r.f64()?);
+                }
+                WireMsg::Mix { k, alpha, dim, msgs, staging }
+            }
+            TAG_STATES => {
+                let shard = r.u32()?;
+                let dim = r.u32()?;
+                let count = r.u32()? as usize;
+                if dim > 0 && count % dim as usize != 0 {
+                    return Err(WireError::Inconsistent(format!(
+                        "state length {count} is not a multiple of dim {dim}"
+                    )));
+                }
+                r.need(count, 8)?;
+                let mut states = Vec::with_capacity(count);
+                for _ in 0..count {
+                    states.push(r.f64()?);
+                }
+                WireMsg::States { shard, dim, states }
+            }
+            TAG_SHUTDOWN => WireMsg::Shutdown,
+            other => return Err(WireError::BadTag(other)),
+        };
+        if r.at != body.len() {
+            return Err(WireError::Inconsistent(format!(
+                "{} trailing bytes after the payload",
+                body.len() - r.at
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+/// Validate a frame's length prefix and return the body length. Shared
+/// by every transport so the [`MAX_FRAME_BYTES`] bound is enforced
+/// before a single body byte is read or allocated.
+pub fn frame_len(header: [u8; FRAME_HEADER_BYTES]) -> Result<usize, WireError> {
+    let len = u32::from_le_bytes(header) as u64;
+    if len as usize > MAX_FRAME_BYTES {
+        return Err(WireError::FrameTooLarge(len));
+    }
+    Ok(len as usize)
+}
+
+// -- little-endian primitives -----------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked cursor over a frame body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], WireError> {
+        if self.at + n > self.buf.len() {
+            return Err(WireError::Truncated { needed: self.at + n, got: self.buf.len() });
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    /// Require `count` items of `width` bytes each to remain, with
+    /// overflow-safe arithmetic (the length-prefix overflow guard for
+    /// interior counts).
+    fn need(&self, count: usize, width: usize) -> Result<(), WireError> {
+        let bytes = count
+            .checked_mul(width)
+            .ok_or(WireError::FrameTooLarge(u64::MAX))?;
+        let end = self
+            .at
+            .checked_add(bytes)
+            .ok_or(WireError::FrameTooLarge(u64::MAX))?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated { needed: end, got: self.buf.len() });
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn roundtrip(msg: &WireMsg) -> WireMsg {
+        let mut frame = Vec::new();
+        msg.encode(&mut frame);
+        let len = frame_len(frame[..4].try_into().unwrap()).expect("valid prefix");
+        assert_eq!(len, frame.len() - FRAME_HEADER_BYTES, "prefix must cover the body");
+        WireMsg::decode(&frame[FRAME_HEADER_BYTES..]).expect("decode of own encoding")
+    }
+
+    fn random_msg(rng: &mut Rng) -> WireMsg {
+        match rng.next_u64() % 5 {
+            0 => WireMsg::Hello { shard: (rng.next_u64() % 1000) as u32 },
+            1 => WireMsg::Step { lr: rng.normal() },
+            2 => {
+                let dim = (rng.next_u64() % 7) as usize + 1;
+                let n = (rng.next_u64() % 9) as usize;
+                let msgs: Vec<WireMeta> = (0..n)
+                    .map(|_| WireMeta {
+                        slot: (rng.next_u64() % 64) as u32,
+                        matching: (rng.next_u64() % 16) as u32,
+                        u: (rng.next_u64() % 128) as u32,
+                        v: (rng.next_u64() % 128) as u32,
+                    })
+                    .collect();
+                let staging: Vec<f64> = (0..n * dim).map(|_| rng.normal()).collect();
+                WireMsg::Mix {
+                    k: rng.next_u64() % (1 << 40),
+                    alpha: rng.normal(),
+                    dim: dim as u32,
+                    msgs,
+                    staging,
+                }
+            }
+            3 => {
+                let dim = (rng.next_u64() % 5) as usize + 1;
+                let rows = (rng.next_u64() % 6) as usize;
+                WireMsg::States {
+                    shard: (rng.next_u64() % 32) as u32,
+                    dim: dim as u32,
+                    states: (0..rows * dim).map(|_| rng.normal()).collect(),
+                }
+            }
+            _ => WireMsg::Shutdown,
+        }
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        let msgs = [
+            WireMsg::Hello { shard: 7 },
+            WireMsg::Step { lr: 0.03 },
+            WireMsg::Mix {
+                k: 42,
+                alpha: 0.25,
+                dim: 2,
+                msgs: vec![WireMeta { slot: 0, matching: 1, u: 0, v: 3 }],
+                staging: vec![1.5, -2.5],
+            },
+            WireMsg::States { shard: 1, dim: 3, states: vec![0.0, f64::MIN, f64::MAX] },
+            WireMsg::Shutdown,
+        ];
+        for msg in &msgs {
+            assert_eq!(&roundtrip(msg), msg);
+        }
+    }
+
+    #[test]
+    fn fuzz_roundtrip_randomized_messages() {
+        let mut rng = Rng::new(0x173e);
+        for _ in 0..500 {
+            let msg = random_msg(&mut rng);
+            assert_eq!(roundtrip(&msg), msg);
+        }
+    }
+
+    #[test]
+    fn f64_bit_patterns_survive_the_wire() {
+        // Non-finite and denormal payloads must cross losslessly — the
+        // cluster backend's bit-for-bit guarantee rides on this.
+        let specials =
+            [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, f64::MIN_POSITIVE / 2.0];
+        let msg = WireMsg::States { shard: 0, dim: 5, states: specials.to_vec() };
+        let WireMsg::States { states, .. } = roundtrip(&msg) else {
+            panic!("variant changed in flight")
+        };
+        for (a, b) in specials.iter().zip(&states) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_length_is_a_typed_error() {
+        let msg = WireMsg::Mix {
+            k: 3,
+            alpha: 0.5,
+            dim: 2,
+            msgs: vec![
+                WireMeta { slot: 0, matching: 0, u: 0, v: 1 },
+                WireMeta { slot: 1, matching: 0, u: 0, v: 1 },
+            ],
+            staging: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let mut frame = Vec::new();
+        msg.encode(&mut frame);
+        let body = &frame[FRAME_HEADER_BYTES..];
+        for cut in 0..body.len() {
+            match WireMsg::decode(&body[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_version_byte_is_rejected() {
+        let mut frame = Vec::new();
+        WireMsg::Step { lr: 0.1 }.encode(&mut frame);
+        let mut body = frame[FRAME_HEADER_BYTES..].to_vec();
+        body[0] = WIRE_VERSION + 1;
+        assert_eq!(WireMsg::decode(&body), Err(WireError::BadVersion(WIRE_VERSION + 1)));
+        body[0] = 0;
+        assert_eq!(WireMsg::decode(&body), Err(WireError::BadVersion(0)));
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        let body = [WIRE_VERSION, 0xee];
+        assert_eq!(WireMsg::decode(&body), Err(WireError::BadTag(0xee)));
+    }
+
+    #[test]
+    fn length_prefix_overflow_is_rejected_before_allocation() {
+        // A hostile 4 GiB prefix must die in frame_len, not in a Vec
+        // reservation.
+        assert_eq!(
+            frame_len(u32::MAX.to_le_bytes()),
+            Err(WireError::FrameTooLarge(u32::MAX as u64))
+        );
+        assert_eq!(
+            frame_len(((MAX_FRAME_BYTES as u32) + 1).to_le_bytes()),
+            Err(WireError::FrameTooLarge(MAX_FRAME_BYTES as u64 + 1))
+        );
+        assert_eq!(frame_len(8u32.to_le_bytes()), Ok(8));
+    }
+
+    #[test]
+    fn interior_count_overflow_is_rejected() {
+        // A Mix frame claiming u32::MAX messages with a large dim would
+        // overflow count*dim on 32-bit math; the decoder must refuse
+        // without reserving memory for it.
+        let mut body = vec![WIRE_VERSION, TAG_MIX];
+        body.extend_from_slice(&0u64.to_le_bytes()); // k
+        body.extend_from_slice(&0.5f64.to_le_bytes()); // alpha
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+        match WireMsg::decode(&body) {
+            Err(WireError::Truncated { .. }) | Err(WireError::FrameTooLarge(_)) => {}
+            other => panic!("expected overflow rejection, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut frame = Vec::new();
+        WireMsg::Shutdown.encode(&mut frame);
+        let mut body = frame[FRAME_HEADER_BYTES..].to_vec();
+        body.push(0);
+        match WireMsg::decode(&body) {
+            Err(WireError::Inconsistent(msg)) => assert!(msg.contains("trailing"), "{msg}"),
+            other => panic!("expected Inconsistent, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn inconsistent_states_length_is_rejected() {
+        let mut body = vec![WIRE_VERSION, TAG_STATES];
+        body.extend_from_slice(&0u32.to_le_bytes()); // shard
+        body.extend_from_slice(&3u32.to_le_bytes()); // dim
+        body.extend_from_slice(&4u32.to_le_bytes()); // count: not a multiple of 3
+        body.extend_from_slice(&[0u8; 32]);
+        match WireMsg::decode(&body) {
+            Err(WireError::Inconsistent(msg)) => assert!(msg.contains("multiple"), "{msg}"),
+            other => panic!("expected Inconsistent, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fuzz_random_bytes_never_panic() {
+        // Arbitrary garbage must decode to Ok or a typed error — never a
+        // panic. (Running under `cargo test` catches panics as failures.)
+        let mut rng = Rng::new(77);
+        for _ in 0..2000 {
+            let len = (rng.next_u64() % 96) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+            let _ = WireMsg::decode(&bytes);
+        }
+    }
+
+    #[test]
+    fn corrupted_encodings_never_panic() {
+        // Flip one byte at a time in valid frames: decode must return
+        // either Ok (the flip hit a payload float) or a typed error.
+        let mut rng = Rng::new(5);
+        for _ in 0..60 {
+            let msg = random_msg(&mut rng);
+            let mut frame = Vec::new();
+            msg.encode(&mut frame);
+            for i in FRAME_HEADER_BYTES..frame.len() {
+                let mut corrupt = frame[FRAME_HEADER_BYTES..].to_vec();
+                corrupt[i - FRAME_HEADER_BYTES] ^= 0xff;
+                let _ = WireMsg::decode(&corrupt);
+            }
+        }
+    }
+}

@@ -84,7 +84,12 @@ pub struct MatchaPlan {
     pub schedule: Schedule,
 }
 
-fn plan_with(base: &Graph, strategy: crate::experiment::Strategy, steps: usize, seed: u64) -> MatchaPlan {
+fn plan_with(
+    base: &Graph,
+    strategy: crate::experiment::Strategy,
+    steps: usize,
+    seed: u64,
+) -> MatchaPlan {
     // Infallible signature kept for legacy callers; invalid inputs (bad
     // budget, disconnected graph) panicked here historically too, via the
     // optimizer's own asserts.

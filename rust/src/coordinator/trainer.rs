@@ -104,9 +104,11 @@ impl Trainer {
             .enumerate()
             .map(|(w, s)| BatchIter::new(&s.tokens, meta.batch, meta.seq_len, cfg.seed ^ w as u64))
             .collect();
-        let mut eval_iter = BatchIter::new(&corpus.eval, meta.batch, meta.seq_len, cfg.seed ^ 0xe7a1);
+        let mut eval_iter =
+            BatchIter::new(&corpus.eval, meta.batch, meta.seq_len, cfg.seed ^ 0xe7a1);
         // Fixed eval batches for a stable eval metric.
-        let eval_batches: Vec<(Vec<i32>, Vec<i32>)> = (0..4).map(|_| eval_iter.next_batch()).collect();
+        let eval_batches: Vec<(Vec<i32>, Vec<i32>)> =
+            (0..4).map(|_| eval_iter.next_batch()).collect();
 
         // --- worker states --------------------------------------------
         // All workers start from the same point (Theorem 1 initialization).

@@ -38,6 +38,7 @@
 //! engine's deterministic mode. There is no worker cap: 10k workers run
 //! fine on 8 threads.
 
+use crate::gossip::shard_workers;
 use crate::rng::Rng;
 use crate::sim::kernel::local_sgd_step;
 use crate::sim::{Compression, Problem};
@@ -132,6 +133,31 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
             diff: vec![0.0; d],
             delta: vec![0.0; d],
         }
+    }
+
+    /// Build the shard owning partition `shard` of `shards` over the
+    /// workers of `xs0`: the slot-ordered worker list from the shared
+    /// round-robin assignment, a per-shard arena segment copied out of
+    /// `xs0`, and the owned workers' RNG streams cloned from `rngs`.
+    /// The single construction path the actor pool and the cluster
+    /// driver ([`crate::cluster`]) share — bit-for-bit parity between
+    /// them rides on building shards identically.
+    pub fn for_partition(
+        problem: &'p P,
+        compression: Option<Compression>,
+        seed: u64,
+        shard: usize,
+        shards: usize,
+        xs0: &StateMatrix,
+        rngs: &[Rng],
+    ) -> Self {
+        let workers: Vec<usize> = shard_workers(shard, shards, xs0.rows()).collect();
+        let mut seg = StateMatrix::zeros(workers.len(), xs0.dim());
+        for (slot, &w) in workers.iter().enumerate() {
+            seg.row_mut(slot).copy_from_slice(xs0.row(w));
+        }
+        let shard_rngs = workers.iter().map(|&w| rngs[w].clone()).collect();
+        ActorShard::new(problem, compression, seed, shard, workers, seg, shard_rngs)
     }
 
     /// Copy the segment into the recycled return buffer.

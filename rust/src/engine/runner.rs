@@ -64,7 +64,9 @@ pub struct EngineResult {
 
 /// How iterate state is advanced each phase. State lives in the
 /// coordinator's [`StateMatrix`] arena; executors keep it authoritative.
-trait Executor {
+/// Crate-visible so the cluster backend ([`crate::cluster`]) can drive
+/// the exact same iteration loop over a wire transport.
+pub(crate) trait Executor {
     fn step(&mut self, k: usize, lr: f64, xs: &mut StateMatrix);
     fn mix(
         &mut self,
@@ -75,6 +77,60 @@ trait Executor {
         dead: &[(usize, usize)],
         xs: &mut StateMatrix,
     );
+}
+
+/// Route each live activated edge of a round to both of its endpoints,
+/// in global (activation, edge) order — the fold order every worker
+/// shares with the sequential kernel. `per` is the reusable per-worker
+/// route list (cleared here). One copy serves both the actor executor
+/// and the cluster executor ([`crate::cluster`]): their bit-for-bit
+/// parity rides on routing identically.
+pub(crate) fn route_per_worker(
+    per: &mut [Vec<(usize, usize, usize)>],
+    matchings: &[Graph],
+    activated: &[usize],
+    dead: &[(usize, usize)],
+) {
+    for routes in per.iter_mut() {
+        routes.clear();
+    }
+    for &j in activated {
+        for &(u, v) in matchings[j].edges() {
+            if dead.contains(&(u, v)) {
+                continue;
+            }
+            per[u].push((j, u, v));
+            per[v].push((j, u, v));
+        }
+    }
+}
+
+/// Stage one shard's gossip messages for a round: walk the shard's
+/// workers in slot order, and for each routed edge push its metadata
+/// (via `make`) and copy the peer's post-step row into the flat staging
+/// buffer at the message's index. The other half of the staging-order
+/// contract next to [`route_per_worker`] — the actor executor
+/// (`MsgMeta` batches) and the cluster executor (`WireMeta` frames,
+/// [`crate::cluster`]) must stage identically, so both call this.
+pub(crate) fn stage_shard_messages<M>(
+    shard: usize,
+    shards: usize,
+    workers: usize,
+    per: &[Vec<(usize, usize, usize)>],
+    xs: &StateMatrix,
+    msgs: &mut Vec<M>,
+    staging: &mut Vec<f64>,
+    make: impl Fn(usize, usize, usize, usize) -> M,
+) {
+    msgs.clear();
+    staging.clear();
+    for (slot, w) in shard_workers(shard, shards, workers).enumerate() {
+        for &(j, u, v) in &per[w] {
+            let peer = if w == u { v } else { u };
+            msgs.push(make(slot, j, u, v));
+            staging.extend_from_slice(xs.row(peer));
+        }
+    }
 }
 
 /// In-process executor: the shared kernel, worker loop in index order.
@@ -191,36 +247,23 @@ impl Executor for ActorExec<'_> {
         dead: &[(usize, usize)],
         xs: &mut StateMatrix,
     ) {
-        // Route each live activated edge to both endpoints, in global
-        // (activation, edge) order so each worker's fold order matches
-        // the sequential kernel.
-        for routes in self.per.iter_mut() {
-            routes.clear();
-        }
-        for &j in activated {
-            for &(u, v) in matchings[j].edges() {
-                if dead.contains(&(u, v)) {
-                    continue;
-                }
-                self.per[u].push((j, u, v));
-                self.per[v].push((j, u, v));
-            }
-        }
+        route_per_worker(&mut self.per, matchings, activated, dead);
         // Stage each shard's batch: messages in slot order, each peer's
         // post-step row copied from the arena into the flat staging
         // buffer at the message's index.
         let shards = self.pool.num_shards();
         for s in 0..shards {
             let mut batch = self.batches[s].take().expect("mix batch leased out");
-            batch.msgs.clear();
-            batch.staging.clear();
-            for (slot, w) in shard_workers(s, shards, self.workers).enumerate() {
-                for &(j, u, v) in &self.per[w] {
-                    let peer = if w == u { v } else { u };
-                    batch.msgs.push(MsgMeta { slot, matching: j, u, v });
-                    batch.staging.extend_from_slice(xs.row(peer));
-                }
-            }
+            stage_shard_messages(
+                s,
+                shards,
+                self.workers,
+                &self.per,
+                xs,
+                &mut batch.msgs,
+                &mut batch.staging,
+                |slot, j, u, v| MsgMeta { slot, matching: j, u, v },
+            );
             let ret = self.rets[s].take().expect("return buffer leased out");
             self.pool.send(s, ShardCmd::Mix { k, alpha, batch, ret });
         }
@@ -280,20 +323,14 @@ where
     std::thread::scope(|scope| {
         let shards: Vec<ActorShard<'_, P>> = (0..threads)
             .map(|s| {
-                let workers: Vec<usize> = shard_workers(s, threads, m).collect();
-                let mut seg = StateMatrix::zeros(workers.len(), d);
-                for (slot, &w) in workers.iter().enumerate() {
-                    seg.row_mut(slot).copy_from_slice(xs0.row(w));
-                }
-                let shard_rngs = workers.iter().map(|&w| rngs[w].clone()).collect();
-                ActorShard::new(
+                ActorShard::for_partition(
                     problem,
                     config.run.compression.clone(),
                     config.run.seed,
                     s,
-                    workers,
-                    seg,
-                    shard_rngs,
+                    threads,
+                    &xs0,
+                    &rngs,
                 )
             })
             .collect();
@@ -323,8 +360,11 @@ where
     run_engine(problem, matchings, sampler, &mut policy, config)
 }
 
-/// The shared event-driven iteration loop.
-fn drive<P, S, E>(
+/// The shared event-driven iteration loop. Crate-visible so every
+/// barrier backend — in-process, actor pool, and the transport-separated
+/// cluster ([`crate::cluster::run_cluster`]) — runs the one loop and
+/// shares its time accounting bit-for-bit.
+pub(crate) fn drive<P, S, E>(
     problem: &P,
     matchings: &[Graph],
     sampler: &mut S,
@@ -527,7 +567,8 @@ mod tests {
         let g = crate::graph::ring(300);
         let d = decompose(&g);
         let p = quad(300);
-        let cfg = RunConfig { lr: 0.03, iterations: 8, alpha: 0.2, seed: 2, ..RunConfig::default() };
+        let cfg =
+            RunConfig { lr: 0.03, iterations: 8, alpha: 0.2, seed: 2, ..RunConfig::default() };
         let mut s1 = VanillaSampler::new(d.len());
         let seq = run_engine_analytic(
             &p,

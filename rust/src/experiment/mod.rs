@@ -12,10 +12,11 @@
 //!   (`matcha | vanilla | periodic | single`) and budget, workload
 //!   (`quad | logreg`), delay model and policy (stragglers, heterogeneous
 //!   links, link failures), execution backend
-//!   (`sim | engine | actors | async` — the last is the barrier-free
-//!   asynchronous gossip runtime of [`crate::gossip`]), and run
-//!   hyperparameters. Build fluently or load from JSON
-//!   (`matcha run --spec exp.json`).
+//!   (`sim | engine | actors | async | cluster` — `async` is the
+//!   barrier-free asynchronous gossip runtime of [`crate::gossip`],
+//!   `cluster` the transport-separated multi-node runtime of
+//!   [`crate::cluster`]), and run hyperparameters. Build fluently or
+//!   load from JSON (`matcha run --spec exp.json`).
 //! - **Plan** ([`Plan`], [`plan()`]) — the decompose → probabilities → α
 //!   math, exposing matchings, λ₂, α and ρ before anything executes
 //!   (`--dry-run` stops here). Absorbs the legacy `coordinator::plan_*`

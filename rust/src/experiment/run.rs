@@ -12,6 +12,7 @@
 use super::observer::{NoopObserver, Observer};
 use super::plan::{plan, Plan};
 use super::spec::{Backend, ExperimentSpec, ProblemSpec};
+use crate::cluster::{run_cluster_observed, ClusterConfig, ClusterStats};
 use crate::engine::{parse_policy, run_engine_observed, sweep_parallel_streaming, EngineConfig};
 use crate::gossip::{run_async_observed, AsyncConfig, AsyncStats};
 use crate::json::Json;
@@ -54,6 +55,9 @@ pub struct ExperimentResult {
     /// Per-worker staleness / idle-time statistics; `Some` only for the
     /// async backend.
     pub async_stats: Option<AsyncStats>,
+    /// Per-link bytes-on-wire statistics; `Some` only for the cluster
+    /// backend.
+    pub cluster_stats: Option<ClusterStats>,
 }
 
 impl ExperimentResult {
@@ -79,6 +83,13 @@ impl ExperimentResult {
                     None => Json::Null,
                 },
             ),
+            (
+                "wire_bytes",
+                match &self.cluster_stats {
+                    Some(s) => Json::Num(s.total_bytes() as f64),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -96,6 +107,7 @@ impl ExperimentResult {
             dropped_links: 0,
             events: 0,
             async_stats: None,
+            cluster_stats: None,
         }
     }
 
@@ -113,6 +125,7 @@ impl ExperimentResult {
             dropped_links: r.dropped_links,
             events: r.events,
             async_stats: None,
+            cluster_stats: None,
         }
     }
 
@@ -130,6 +143,25 @@ impl ExperimentResult {
             dropped_links: r.dropped_links,
             events: r.events,
             async_stats: Some(r.stats),
+            cluster_stats: None,
+        }
+    }
+
+    fn from_cluster(plan: &Plan, r: crate::cluster::ClusterResult) -> ExperimentResult {
+        ExperimentResult {
+            alpha: plan.alpha,
+            rho: plan.rho,
+            lambda2: plan.lambda2,
+            num_matchings: plan.decomposition.len(),
+            metrics: r.run.metrics,
+            final_mean: r.run.final_mean,
+            final_states: Some(r.run.final_states),
+            total_time: r.run.total_time,
+            total_comm_units: r.run.total_comm_units,
+            dropped_links: r.dropped_links,
+            events: r.events,
+            async_stats: None,
+            cluster_stats: Some(r.stats),
         }
     }
 }
@@ -264,6 +296,30 @@ pub fn run_planned(
             };
             ExperimentResult::from_async(plan, r)
         }
+        Backend::Cluster { shards, transport } => {
+            let mut policy = parse_policy(&spec.policy, &plan.graph, &cfg)
+                .map_err(|e| format!("policy: {e}"))?;
+            let cluster_cfg = ClusterConfig { run: cfg, shards, transport };
+            let r = match &problem {
+                BuiltProblem::Quad(p) => run_cluster_observed(
+                    p,
+                    matchings,
+                    &mut sampler,
+                    policy.as_mut(),
+                    &cluster_cfg,
+                    observer,
+                )?,
+                BuiltProblem::Logreg(p) => run_cluster_observed(
+                    p,
+                    matchings,
+                    &mut sampler,
+                    policy.as_mut(),
+                    &cluster_cfg,
+                    observer,
+                )?,
+            };
+            ExperimentResult::from_cluster(plan, r)
+        }
     };
     Ok(result)
 }
@@ -291,6 +347,10 @@ pub fn run_sweep(
     let mut base = base.clone();
     match base.backend {
         Backend::EngineActors { .. } => base.backend = Backend::EngineSequential,
+        // The cluster backend's per-point results are identical to the
+        // sequential engine's; sweeps do not need a shard fleet per
+        // point.
+        Backend::Cluster { .. } => base.backend = Backend::EngineSequential,
         Backend::Async { threads: t, max_staleness } if t > 1 => {
             base.backend = Backend::Async { threads: 1, max_staleness };
         }
@@ -367,6 +427,38 @@ mod tests {
         assert_eq!(act.final_mean, seq.final_mean);
         assert_eq!(act.final_states, seq.final_states);
         assert_eq!(act.total_time, seq.total_time);
+    }
+
+    #[test]
+    fn cluster_loopback_matches_actors_bit_for_bit() {
+        use crate::cluster::TransportKind;
+        let act = run(&quick_spec().backend(Backend::EngineActors { threads: 2 })).unwrap();
+        let clu = run(&quick_spec()
+            .backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }))
+        .unwrap();
+        assert_eq!(clu.final_mean, act.final_mean);
+        assert_eq!(clu.final_states, act.final_states);
+        assert_eq!(clu.total_time, act.total_time);
+        assert_eq!(clu.total_comm_units, act.total_comm_units);
+        let stats = clu.cluster_stats.expect("cluster stats present");
+        assert_eq!(stats.per_link.len(), 2);
+        assert!(stats.total_bytes() > 0);
+        let j = clu.summary_json();
+        assert!(j.get("wire_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert!(act.cluster_stats.is_none());
+    }
+
+    #[test]
+    fn unbounded_async_backend_is_deterministic() {
+        let spec = quick_spec().policy("straggler:0:4.0").backend(Backend::Async {
+            threads: 2,
+            max_staleness: crate::gossip::UNBOUNDED_STALENESS,
+        });
+        let a = run(&spec).unwrap();
+        let b = run(&spec).unwrap();
+        assert_eq!(a.final_mean, b.final_mean);
+        assert_eq!(a.total_time, b.total_time);
+        assert!(a.final_loss().is_finite());
     }
 
     #[test]

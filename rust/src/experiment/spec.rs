@@ -10,6 +10,7 @@
 //! validation in both directions and an exact JSON round-trip
 //! (`parse(to_json_string(s)) == s`).
 
+use crate::cluster::TransportKind;
 use crate::graph::{parse_graph_spec, Graph};
 use crate::json::Json;
 use crate::sim::Compression;
@@ -160,19 +161,31 @@ pub enum Backend {
     /// The barrier-free asynchronous gossip runtime
     /// ([`crate::gossip::run_async`]): per-worker virtual clocks,
     /// staleness-aware pairwise mixing bounded by `max_staleness`
-    /// (0 reproduces the synchronous kernel exactly), gradient steps on
-    /// a bounded pool of `threads` OS threads.
+    /// (0 reproduces the synchronous kernel exactly;
+    /// [`crate::gossip::UNBOUNDED_STALENESS`] — JSON
+    /// `"max_staleness": null` — removes the bound entirely, the
+    /// throughput-oriented AD-PSGD mode), gradient steps on a bounded
+    /// pool of `threads` OS threads.
     Async { threads: usize, max_staleness: usize },
+    /// The multi-node cluster runtime ([`crate::cluster::run_cluster`]):
+    /// workers partitioned over `shards` transport-separated shard
+    /// nodes, phase commands serialized through the versioned wire
+    /// format. `loopback` is deterministic and bit-for-bit equal to the
+    /// actors backend per seed; `tcp` runs the same schedule over real
+    /// localhost sockets. Shard count never changes results.
+    Cluster { shards: usize, transport: TransportKind },
 }
 
 impl Backend {
-    /// Short name for logs and JSON (`sim`, `engine`, `actors`, `async`).
+    /// Short name for logs and JSON (`sim`, `engine`, `actors`, `async`,
+    /// `cluster`).
     pub fn name(&self) -> &'static str {
         match self {
             Backend::SimReference => "sim",
             Backend::EngineSequential => "engine",
             Backend::EngineActors { .. } => "actors",
             Backend::Async { .. } => "async",
+            Backend::Cluster { .. } => "cluster",
         }
     }
 }
@@ -452,7 +465,7 @@ impl ExperimentSpec {
                 ));
             }
         }
-        if let Backend::Async { threads, .. } = self.backend {
+        if let Backend::Async { threads, max_staleness } = self.backend {
             if threads == 0 {
                 return Err("backend: async needs threads >= 1".into());
             }
@@ -461,6 +474,25 @@ impl ExperimentSpec {
                     "backend: the async runtime needs a link-granular delay model; \
                      'maxdeg' has no per-link schedule (use delay 'unit' or \
                      'stochastic:lo:hi')"
+                        .into(),
+                );
+            }
+            // Bounded values must survive the JSON number round-trip;
+            // the unbounded sentinel serializes as `null` instead.
+            if max_staleness != crate::gossip::UNBOUNDED_STALENESS
+                && max_staleness as u64 >= (1 << 53)
+            {
+                return Err(format!(
+                    "backend: max_staleness {max_staleness} is not below 2^53 and cannot \
+                     round-trip through JSON (use null for the unbounded AD-PSGD mode)"
+                ));
+            }
+        }
+        if let Backend::Cluster { shards, .. } = self.backend {
+            if shards == 0 {
+                return Err(
+                    "backend: cluster needs shards >= 1 (a one-shard cluster is valid \
+                     and matches the in-process backends bit-for-bit)"
                         .into(),
                 );
             }
@@ -542,7 +574,20 @@ impl ExperimentSpec {
             }
             Backend::Async { threads, max_staleness } => {
                 backend.push(("threads", Json::Num(threads as f64)));
-                backend.push(("max_staleness", Json::Num(max_staleness as f64)));
+                // The unbounded AD-PSGD sentinel round-trips as `null`
+                // (the usize value itself cannot survive a JSON number).
+                backend.push((
+                    "max_staleness",
+                    if max_staleness == crate::gossip::UNBOUNDED_STALENESS {
+                        Json::Null
+                    } else {
+                        Json::Num(max_staleness as f64)
+                    },
+                ));
+            }
+            Backend::Cluster { shards, transport } => {
+                backend.push(("shards", Json::Num(shards as f64)));
+                backend.push(("transport", Json::Str(transport.name().into())));
             }
             _ => {}
         }
@@ -670,7 +715,12 @@ fn known_keys(obj: &BTreeMap<String, Json>, ctx: &str, known: &[&str]) -> Result
     Ok(())
 }
 
-fn get_f64(obj: &BTreeMap<String, Json>, ctx: &str, key: &str, default: f64) -> Result<f64, String> {
+fn get_f64(
+    obj: &BTreeMap<String, Json>,
+    ctx: &str,
+    key: &str,
+    default: f64,
+) -> Result<f64, String> {
     match obj.get(key) {
         None => Ok(default),
         Some(v) => v.as_f64().ok_or_else(|| format!("{ctx}: '{key}' must be a number")),
@@ -823,13 +873,21 @@ fn parse_backend(json: &Json) -> Result<Backend, String> {
         return match kind {
             "sim" => Ok(Backend::SimReference),
             "engine" => Ok(Backend::EngineSequential),
-            "actors" => Err("backend: 'actors' needs {\"kind\": \"actors\", \"threads\": N}".into()),
+            "actors" => {
+                Err("backend: 'actors' needs {\"kind\": \"actors\", \"threads\": N}".into())
+            }
+            "cluster" => Err(
+                "backend: 'cluster' needs {\"kind\": \"cluster\", \"shards\": N, \
+                 \"transport\": \"loopback\" | \"tcp\"}"
+                    .into(),
+            ),
             "async" => Ok(Backend::Async {
                 threads: 1,
                 max_staleness: crate::gossip::DEFAULT_MAX_STALENESS,
             }),
             other => Err(format!(
-                "backend: unknown kind '{other}' (expected sim | engine | actors | async)"
+                "backend: unknown kind '{other}' \
+                 (expected sim | engine | actors | async | cluster)"
             )),
         };
     }
@@ -841,6 +899,7 @@ fn parse_backend(json: &Json) -> Result<Backend, String> {
     match kind {
         "sim" | "engine" | "actors" => known_keys(obj, "backend", &["kind", "threads"])?,
         "async" => known_keys(obj, "backend", &["kind", "threads", "max_staleness"])?,
+        "cluster" => known_keys(obj, "backend", &["kind", "shards", "transport"])?,
         _ => {}
     }
     match kind {
@@ -849,15 +908,32 @@ fn parse_backend(json: &Json) -> Result<Backend, String> {
         "actors" => Ok(Backend::EngineActors { threads: get_usize(obj, "backend", "threads", 2)? }),
         "async" => Ok(Backend::Async {
             threads: get_usize(obj, "backend", "threads", 1)?,
-            max_staleness: get_usize(
-                obj,
-                "backend",
-                "max_staleness",
-                crate::gossip::DEFAULT_MAX_STALENESS,
-            )?,
+            // `null` selects the unbounded AD-PSGD mode; a number is the
+            // version-drift bound.
+            max_staleness: match obj.get("max_staleness") {
+                None => crate::gossip::DEFAULT_MAX_STALENESS,
+                Some(Json::Null) => crate::gossip::UNBOUNDED_STALENESS,
+                Some(v) => v.as_usize().ok_or(
+                    "backend: 'max_staleness' must be a non-negative integer or null \
+                     (null = unbounded AD-PSGD mode)",
+                )?,
+            },
+        }),
+        "cluster" => Ok(Backend::Cluster {
+            shards: get_usize(obj, "backend", "shards", 2)?,
+            transport: match obj.get("transport") {
+                None => TransportKind::Loopback,
+                Some(v) => {
+                    let name = v
+                        .as_str()
+                        .ok_or("backend: 'transport' must be a string (loopback | tcp)")?;
+                    TransportKind::parse(name).map_err(|e| format!("backend: {e}"))?
+                }
+            },
         }),
         other => Err(format!(
-            "backend: unknown kind '{other}' (expected sim | engine | actors | async)"
+            "backend: unknown kind '{other}' \
+             (expected sim | engine | actors | async | cluster)"
         )),
     }
 }
@@ -971,6 +1047,79 @@ mod tests {
     }
 
     #[test]
+    fn cluster_backend_roundtrips_and_validates() {
+        for transport in [TransportKind::Loopback, TransportKind::Tcp] {
+            let spec = ExperimentSpec::new("ring:8")
+                .problem(ProblemSpec::quadratic())
+                .backend(Backend::Cluster { shards: 3, transport })
+                .iterations(20)
+                .validated()
+                .unwrap();
+            let text = spec.to_json_string();
+            assert!(text.contains("cluster") && text.contains(transport.name()), "{text}");
+            assert_eq!(ExperimentSpec::parse(&text).unwrap(), spec);
+        }
+        // Transport defaults to loopback when omitted.
+        let short = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "backend": {"kind": "cluster", "shards": 2}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            short.backend,
+            Backend::Cluster { shards: 2, transport: TransportKind::Loopback }
+        );
+    }
+
+    #[test]
+    fn cluster_backend_rejects_bad_forms() {
+        let err = ExperimentSpec::parse(r#"{"graph": "fig1", "backend": "cluster"}"#).unwrap_err();
+        assert!(err.contains("shards"), "{err}");
+        let err = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "backend": {"kind": "cluster", "transport": "carrier"}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("transport"), "{err}");
+        let err = ExperimentSpec::new("fig1")
+            .backend(Backend::Cluster { shards: 0, transport: TransportKind::Loopback })
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("shards >= 1"), "{err}");
+    }
+
+    #[test]
+    fn unbounded_staleness_roundtrips_as_null() {
+        let spec = ExperimentSpec::new("ring:8")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::Async {
+                threads: 2,
+                max_staleness: crate::gossip::UNBOUNDED_STALENESS,
+            })
+            .iterations(20)
+            .validated()
+            .unwrap();
+        let text = spec.to_json_string();
+        assert!(text.contains("\"max_staleness\":null"), "{text}");
+        assert_eq!(ExperimentSpec::parse(&text).unwrap(), spec);
+        // Explicit null in hand-written JSON selects the unbounded mode.
+        let parsed = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "backend": {"kind": "async", "threads": 1,
+                "max_staleness": null}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            parsed.backend,
+            Backend::Async { threads: 1, max_staleness: crate::gossip::UNBOUNDED_STALENESS }
+        );
+        // A bounded value at or beyond 2^53 cannot round-trip and is
+        // rejected with a pointer at the null spelling.
+        let err = ExperimentSpec::new("fig1")
+            .backend(Backend::Async { threads: 1, max_staleness: (1 << 53) + 1 })
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("2^53") && err.contains("null"), "{err}");
+    }
+
+    #[test]
     fn json_roundtrip_preserves_every_field() {
         let spec = ExperimentSpec::new("ring:8")
             .strategy(Strategy::Periodic { budget: 0.25 })
@@ -1031,7 +1180,10 @@ mod tests {
             (base().delay("warp"), "delay"),
             (base().policy("warp"), "policy"),
             (base().policy("straggler:99:2.0"), "policy"),
-            (base().delay("maxdeg").policy("flaky:0.2").backend(Backend::EngineSequential), "policy"),
+            (
+                base().delay("maxdeg").policy("flaky:0.2").backend(Backend::EngineSequential),
+                "policy",
+            ),
             (base().policy("flaky:0.2"), "policy"),
             (base().backend(Backend::EngineActors { threads: 0 }), "backend"),
             (

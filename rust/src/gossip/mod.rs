@@ -58,5 +58,5 @@ pub use pool::{shard_of, shard_slot, shard_workers, ShardedPool};
 pub use rounds::{RoundEdge, RoundPlan};
 pub use runtime::{
     run_async, run_async_observed, AsyncConfig, AsyncResult, AsyncStats, WorkerStats,
-    DEFAULT_MAX_STALENESS,
+    DEFAULT_MAX_STALENESS, UNBOUNDED_STALENESS,
 };

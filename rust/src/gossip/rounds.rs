@@ -27,6 +27,11 @@ pub struct RoundPlan {
     /// (activation order, edge order). Empty when the sampler activated
     /// nothing that round (e.g. P-DecenSGD off-rounds).
     pub rounds: Vec<Vec<RoundEdge>>,
+    /// `activated[k]` = the matching indices the sampler activated at
+    /// round `k`, in activation order — the pre-flattening view. The
+    /// cluster coordinator replays these through the barrier engine's
+    /// drive loop ([`RoundPlan::activated`]).
+    activated: Vec<Vec<usize>>,
     /// Per round: `(worker, incident edge indices)` pairs sorted by
     /// worker; only workers with at least one incident edge appear.
     /// Built once in [`RoundPlan::generate`] so [`RoundPlan::incident`]
@@ -47,6 +52,7 @@ impl RoundPlan {
     ) -> RoundPlan {
         let mut rounds = Vec::with_capacity(iterations);
         let mut incidence = Vec::with_capacity(iterations);
+        let mut activated = Vec::with_capacity(iterations);
         for k in 0..iterations {
             let round = sampler.round(k);
             let mut edges = Vec::new();
@@ -55,6 +61,7 @@ impl RoundPlan {
                     edges.push((j, u, v));
                 }
             }
+            activated.push(round.activated);
             let mut by_worker: std::collections::BTreeMap<usize, Vec<usize>> =
                 std::collections::BTreeMap::new();
             for (i, &(_, u, v)) in edges.iter().enumerate() {
@@ -64,7 +71,14 @@ impl RoundPlan {
             rounds.push(edges);
             incidence.push(by_worker.into_iter().collect());
         }
-        RoundPlan { rounds, incidence }
+        RoundPlan { rounds, activated, incidence }
+    }
+
+    /// The matching indices activated at round `k`, in activation order
+    /// (exactly what the sampler returned — the input the barrier
+    /// engine's drive loop expects per round).
+    pub fn activated(&self, k: usize) -> &[usize] {
+        &self.activated[k]
     }
 
     /// Indices (into `rounds[k]`) of the edges incident to `worker` at
@@ -123,6 +137,7 @@ mod tests {
                 }
             }
             assert_eq!(plan.rounds[k], expect, "round {k}");
+            assert_eq!(plan.activated(k), &round.activated[..], "activated {k}");
         }
     }
 

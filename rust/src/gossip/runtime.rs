@@ -54,6 +54,15 @@ use std::collections::{BTreeMap, VecDeque};
 /// Default version-drift bound used by spec defaults and the CLI.
 pub const DEFAULT_MAX_STALENESS: usize = 4;
 
+/// Sentinel bound for the **unbounded** AD-PSGD mode: the staleness gate
+/// is skipped entirely and workers run ahead as far as the event
+/// schedule lets them (throughput-oriented runs; the `1/(1+τ)` damping
+/// still scales stale exchanges down). Selected in a spec with
+/// `"max_staleness": null`. Still a pure function of the seed: the event
+/// queue's deterministic order makes the unbounded run reproducible at
+/// any thread count (tested in `rust/tests/gossip.rs`).
+pub const UNBOUNDED_STALENESS: usize = usize::MAX;
+
 /// Configuration of an asynchronous run: the shared run parameters, the
 /// bounded pool size, and the staleness bound.
 #[derive(Clone, Debug)]
@@ -64,7 +73,8 @@ pub struct AsyncConfig {
     /// only, never results.
     pub threads: usize,
     /// How many rounds a worker may run ahead of its oldest unapplied
-    /// gossip round. `0` reproduces the synchronous kernel exactly.
+    /// gossip round. `0` reproduces the synchronous kernel exactly;
+    /// [`UNBOUNDED_STALENESS`] skips the gate entirely (pure AD-PSGD).
     pub max_staleness: usize,
 }
 
@@ -380,8 +390,10 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
                 return;
             }
             let r = wk.next_round;
+            // `UNBOUNDED_STALENESS` saturates the bound: the gate never
+            // closes and the run degenerates to pure AD-PSGD.
             let ok = match wk.open.keys().next() {
-                Some(&oldest) => r <= oldest + self.max_staleness,
+                Some(&oldest) => r <= oldest.saturating_add(self.max_staleness),
                 None => true,
             };
             (r, ok)

@@ -49,7 +49,8 @@
 //! let plan = experiment::plan(&spec).unwrap();
 //! assert!(plan.rho < 1.0); // Theorem 2: convergence guaranteed
 //!
-//! // Run: same entry point for sim / engine / actors / async backends.
+//! // Run: same entry point for sim / engine / actors / async / cluster
+//! // backends.
 //! let result = experiment::run(&spec).unwrap();
 //! assert!(result.final_loss().is_finite());
 //!
@@ -57,6 +58,16 @@
 //! let async_spec = spec.clone().backend(Backend::Async { threads: 2, max_staleness: 3 });
 //! let async_result = experiment::run(&async_spec).unwrap();
 //! assert!(async_result.async_stats.is_some());
+//!
+//! // The cluster backend runs the shards behind a wire-format transport
+//! // and reports per-link bytes-on-wire (loopback here; "tcp" uses real
+//! // localhost sockets).
+//! let cluster_spec = spec.clone().backend(Backend::Cluster {
+//!     shards: 2,
+//!     transport: matcha::cluster::TransportKind::Loopback,
+//! });
+//! let cluster_result = experiment::run(&cluster_spec).unwrap();
+//! assert!(cluster_result.cluster_stats.unwrap().total_bytes() > 0);
 //!
 //! // The spec round-trips through JSON, so it is a loadable artifact.
 //! let reloaded = ExperimentSpec::parse(&spec.to_json_string()).unwrap();
@@ -87,9 +98,20 @@
 //!   its own virtual clock, exchanges are AD-PSGD-style pairwise
 //!   averages with per-edge model-version tracking and staleness-damped
 //!   mixing, bounded by a configurable `max_staleness`. At staleness 0
-//!   it degrades to the synchronous kernel bit-for-bit; under stragglers
-//!   it beats barrier mode in both virtual and wall-clock time
+//!   it degrades to the synchronous kernel bit-for-bit; with
+//!   [`gossip::UNBOUNDED_STALENESS`] (`"max_staleness": null`) the gate
+//!   is off entirely — pure AD-PSGD; under stragglers it beats barrier
+//!   mode in both virtual and wall-clock time
 //!   (`benches/async_vs_barrier.rs`).
+//! - [`cluster::run_cluster`] — the **multi-node** cluster runtime
+//!   (`backend: "cluster"`): workers partitioned over
+//!   transport-separated shards, phase commands serialized through a
+//!   versioned length-prefixed wire format ([`cluster::wire`]), carried
+//!   by an in-memory loopback or a real TCP transport with per-link
+//!   byte accounting ([`cluster::transport`]). The loopback cluster is
+//!   bit-for-bit equal to the actors backend per seed; the TCP cluster
+//!   runs the same schedule over localhost sockets
+//!   (`rust/tests/cluster.rs`, `benches/cluster_transport.rs`).
 //!
 //! Direct use of the lower layers ([`matching`], [`budget`], [`mixing`],
 //! hand-built [`sim::RunConfig`]s, `coordinator::plan_*`) remains
@@ -104,6 +126,7 @@
 pub mod benchkit;
 pub mod budget;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -292,6 +292,43 @@ mod tests {
         assert_eq!(m.to_vecs(), xs);
     }
 
+    // -- contract coverage: the panicking paths -----------------------
+
+    #[test]
+    #[should_panic(expected = "pair: rows must be distinct")]
+    fn pair_rejects_identical_rows() {
+        let m = StateMatrix::zeros(3, 2);
+        let _ = m.pair(1, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "pair_mut: rows must be distinct")]
+    fn pair_mut_rejects_identical_rows() {
+        let mut m = StateMatrix::zeros(3, 2);
+        let _ = m.pair_mut(2, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_out_of_range_panics() {
+        let m = StateMatrix::zeros(2, 3);
+        let _ = m.row(2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_mut_out_of_range_panics() {
+        let mut m = StateMatrix::zeros(2, 3);
+        let _ = m.row_mut(5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pair_mut_out_of_range_panics() {
+        let mut m = StateMatrix::zeros(2, 3);
+        let _ = m.pair_mut(0, 2);
+    }
+
     #[test]
     fn views_carry_their_index() {
         let mut m = StateMatrix::zeros(2, 3);

@@ -1,0 +1,128 @@
+//! End-to-end tests of the multi-node cluster runtime: the spec-driven
+//! cluster backend against the in-process backends, over both
+//! transports.
+//!
+//! The bit-for-bit loopback pin against the committed golden fixtures
+//! lives in `rust/tests/golden.rs`; here the cluster backend is compared
+//! directly against the actors backend across every strategy, and the
+//! TCP transport is exercised over real localhost sockets.
+
+use matcha::cluster::TransportKind;
+use matcha::experiment::{self, Backend, ExperimentSpec, ProblemSpec, Strategy};
+use matcha::metrics::Recorder;
+
+fn spec(strategy: Strategy, backend: Backend) -> ExperimentSpec {
+    ExperimentSpec::new("fig1")
+        .strategy(strategy)
+        .problem(ProblemSpec::quadratic())
+        .backend(backend)
+        .lr(0.03)
+        .iterations(50)
+        .record_every(10)
+        .seed(13)
+        .sampler_seed(7)
+}
+
+const STRATEGIES: [Strategy; 4] = [
+    Strategy::Matcha { budget: 0.5 },
+    Strategy::Vanilla,
+    Strategy::Periodic { budget: 0.5 },
+    Strategy::SingleMatching { budget: 0.5 },
+];
+
+#[test]
+fn loopback_cluster_matches_actors_across_all_strategies() {
+    for strategy in STRATEGIES {
+        let actors =
+            experiment::run(&spec(strategy, Backend::EngineActors { threads: 3 })).unwrap();
+        let cluster = experiment::run(&spec(
+            strategy,
+            Backend::Cluster { shards: 3, transport: TransportKind::Loopback },
+        ))
+        .unwrap();
+        let name = strategy.name();
+        assert_eq!(cluster.final_mean, actors.final_mean, "{name}: final mean diverged");
+        assert_eq!(cluster.final_states, actors.final_states, "{name}: arenas diverged");
+        assert_eq!(cluster.total_time, actors.total_time, "{name}: virtual time diverged");
+        assert_eq!(
+            cluster.total_comm_units, actors.total_comm_units,
+            "{name}: comm accounting diverged"
+        );
+        for series in ["loss_vs_iter", "consensus_vs_iter", "comm_units_vs_iter"] {
+            let a = actors.metrics.get(series);
+            let c = cluster.metrics.get(series);
+            assert_eq!(a.len(), c.len(), "{name}: {series} length");
+            for (pa, pc) in a.iter().zip(c) {
+                assert_eq!(pa.x.to_bits(), pc.x.to_bits(), "{name}: {series} x");
+                assert_eq!(pa.y.to_bits(), pc.y.to_bits(), "{name}: {series} y");
+            }
+        }
+        assert!(cluster.cluster_stats.unwrap().total_bytes() > 0, "{name}: no wire traffic");
+    }
+}
+
+#[test]
+fn tcp_cluster_over_localhost_completes_the_same_schedule() {
+    let strategy = Strategy::Matcha { budget: 0.5 };
+    let loopback = experiment::run(&spec(
+        strategy,
+        Backend::Cluster { shards: 3, transport: TransportKind::Loopback },
+    ))
+    .unwrap();
+    let tcp = experiment::run(&spec(
+        strategy,
+        Backend::Cluster { shards: 3, transport: TransportKind::Tcp },
+    ))
+    .unwrap();
+    // Acceptance bound: final loss within 1e-9. The wire is actually
+    // lossless (LE f64 bit patterns), so the trajectories are identical.
+    let diff = (tcp.final_loss() - loopback.final_loss()).abs();
+    assert!(diff <= 1e-9, "tcp vs loopback final loss diff {diff}");
+    assert_eq!(tcp.final_mean, loopback.final_mean, "tcp trajectory diverged");
+    assert_eq!(tcp.total_time, loopback.total_time);
+    // Identical schedule + protocol → identical traffic, byte for byte.
+    let (lb, tc) = (
+        loopback.cluster_stats.expect("loopback stats"),
+        tcp.cluster_stats.expect("tcp stats"),
+    );
+    assert_eq!(lb.total_bytes(), tc.total_bytes(), "transports must carry the same frames");
+    assert_eq!(lb.total_frames(), tc.total_frames());
+    assert_eq!(lb.transport, TransportKind::Loopback);
+    assert_eq!(tc.transport, TransportKind::Tcp);
+}
+
+#[test]
+fn cluster_backend_streams_observer_callbacks() {
+    struct Counting {
+        iterations: usize,
+        records: usize,
+    }
+    impl experiment::Observer for Counting {
+        fn on_iteration(&mut self, _k: usize, _time: f64, _comm: f64) {
+            self.iterations += 1;
+        }
+        fn on_record(&mut self, _k: usize, _time: f64, metrics: &Recorder) {
+            self.records += 1;
+            assert!(!metrics.get("loss_vs_iter").is_empty());
+        }
+    }
+    let mut obs = Counting { iterations: 0, records: 0 };
+    let s = spec(
+        Strategy::Matcha { budget: 0.5 },
+        Backend::Cluster { shards: 2, transport: TransportKind::Loopback },
+    );
+    experiment::run_observed(&s, &mut obs).unwrap();
+    assert_eq!(obs.iterations, 50);
+    assert_eq!(obs.records, 1 + 50 / 10);
+}
+
+#[test]
+fn committed_cluster_spec_executes() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("examples/specs/cluster_ring.json");
+    let spec = ExperimentSpec::load(&path).expect("committed cluster spec loads");
+    assert!(matches!(spec.backend, Backend::Cluster { .. }), "spec must use the cluster backend");
+    let result = experiment::run(&spec).expect("committed cluster spec runs");
+    assert!(result.final_loss().is_finite());
+    assert!(result.cluster_stats.expect("cluster stats").total_bytes() > 0);
+}

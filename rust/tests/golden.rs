@@ -15,6 +15,7 @@
 //! first run — commit the generated files. Set `MATCHA_UPDATE_FIXTURES=1`
 //! to regenerate after an *intentional* trajectory change.
 
+use matcha::cluster::TransportKind;
 use matcha::experiment::{self, Backend, ExperimentSpec, ExperimentResult, ProblemSpec, Strategy};
 use matcha::json::Json;
 use std::path::PathBuf;
@@ -184,7 +185,13 @@ fn check_strategy(name: &str, strategy: Strategy) {
     );
 
     // Barrier backends: full parity, including time/comm accounting.
-    for backend in [Backend::EngineSequential, Backend::EngineActors { threads: 3 }] {
+    // The loopback cluster backend serializes every phase command
+    // through the wire format and must land on the same bits.
+    for backend in [
+        Backend::EngineSequential,
+        Backend::EngineActors { threads: 3 },
+        Backend::Cluster { shards: 3, transport: TransportKind::Loopback },
+    ] {
         let res = experiment::run(&spec.clone().backend(backend)).expect("backend run");
         assert_eq!(
             capture(&res),

@@ -176,6 +176,73 @@ fn property_bounded_staleness_is_deterministic_and_bounded() {
 }
 
 #[test]
+fn unbounded_staleness_is_deterministic_at_any_thread_count() {
+    // The unbounded AD-PSGD mode (ROADMAP item): no staleness gate at
+    // all, yet still a pure function of the seed — same trajectory,
+    // virtual clock and stats for repeated runs and any pool size.
+    use matcha::gossip::UNBOUNDED_STALENESS;
+    let g = graph::erdos_renyi_connected(9, 0.5, &mut Rng::new(42));
+    let d = decompose(&g);
+    let run_one = |threads: usize| {
+        let mut sampler = VanillaSampler::new(d.len());
+        let cfg = RunConfig {
+            lr: 0.02,
+            iterations: 100,
+            record_every: 50,
+            alpha: 0.1,
+            seed: 17,
+            ..RunConfig::default()
+        };
+        let problem = {
+            let mut r = Rng::new(0x5eed);
+            QuadraticProblem::generate(g.num_nodes(), 6, 1.0, 0.2, &mut r)
+        };
+        let mut policy =
+            StragglerPolicy::new(AnalyticPolicy::matching_run_config(&cfg), vec![0], 6.0);
+        let async_cfg = AsyncConfig { run: cfg, threads, max_staleness: UNBOUNDED_STALENESS };
+        run_async(&problem, &d.matchings, &mut sampler, &mut policy, &async_cfg)
+    };
+    let a = run_one(1);
+    let b = run_one(1);
+    let c = run_one(4);
+    assert_eq!(a.run.final_mean, b.run.final_mean, "rerun changed the trajectory");
+    assert_eq!(a.run.final_mean, c.run.final_mean, "thread count changed the trajectory");
+    assert_eq!(a.run.total_time, c.run.total_time, "thread count changed the clock");
+    assert_eq!(a.stats, c.stats, "thread count changed the stats");
+    // With a 6× straggler and no gate, the fast workers must actually
+    // run ahead beyond the old default bound — the mode is observably
+    // different from the bounded runs.
+    assert!(
+        a.stats.max_staleness() > matcha::gossip::DEFAULT_MAX_STALENESS,
+        "straggler should induce staleness beyond the default bound, got {}",
+        a.stats.max_staleness()
+    );
+    assert!(a.run.final_mean.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn unbounded_staleness_spec_runs_end_to_end() {
+    // `"max_staleness": null` through the whole spec pipeline.
+    let text = r#"{
+        "graph": "ring:8",
+        "strategy": {"kind": "matcha", "budget": 0.5},
+        "problem": {"kind": "quad", "dim": 8, "hetero": 1.0, "noise_std": 0.2},
+        "policy": "straggler:0:5.0",
+        "backend": {"kind": "async", "threads": 2, "max_staleness": null},
+        "run": {"lr": 0.03, "iterations": 60, "record_every": 20, "seed": 3}
+    }"#;
+    let spec = ExperimentSpec::parse(text).unwrap();
+    assert_eq!(
+        spec.backend,
+        Backend::Async { threads: 2, max_staleness: matcha::gossip::UNBOUNDED_STALENESS }
+    );
+    let a = experiment::run(&spec).unwrap();
+    let b = experiment::run(&spec).unwrap();
+    assert_eq!(a.final_mean, b.final_mean, "unbounded spec runs must be deterministic");
+    assert!(a.final_loss().is_finite());
+}
+
+#[test]
 fn bounded_staleness_converges_on_the_quadratic() {
     // The convergence half of the ROADMAP item: under a straggler and a
     // positive staleness bound, loss still decreases to tolerance.
