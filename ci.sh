@@ -31,18 +31,38 @@ for spec in examples/specs/*.json; do
   ./target/release/matcha run --spec "$spec" --dry-run
 done
 
-echo "==> bench smoke (--dry-run)"
-# Hotpath smoke includes the state-arena mixing sweep: asserts zero
-# allocations per iteration in the gossip mix hot path and emits
-# BENCH_state.json (perf trajectory).
+echo "==> trace smoke (matcha run --trace + trace-check)"
+# A traced run must produce well-formed Chrome trace-event JSON
+# (Perfetto-loadable); trace-check validates structure and prints the
+# event/track counts.
+./target/release/matcha run --spec examples/specs/cluster_ring.json \
+  --trace /tmp/matcha_ci_trace.json
+./target/release/matcha trace-check --file /tmp/matcha_ci_trace.json
+rm -f /tmp/matcha_ci_trace.json
+
+echo "==> bench smoke (--dry-run) + perf-trajectory gate"
+# Hotpath smoke includes the state-arena mixing sweep (asserts zero
+# allocations per iteration in the gossip mix hot path) and the
+# disabled-tracer emission check (asserts zero allocations per emit);
+# both land in BENCH_state.json (perf trajectory). Each BENCH artifact
+# is then gated against the last committed BENCH_history/ entry —
+# >25% regression on a gated key fails CI — and appended to the
+# history, so committing the updated JSONL records the trajectory.
 cargo bench --bench hotpath -- --dry-run
 test -f BENCH_state.json || { echo "BENCH_state.json not emitted"; exit 1; }
+tools/bench_regress --artifact BENCH_state.json \
+  --history BENCH_history/state.jsonl --append
 cargo bench --bench engine_sweep -- --dry-run
 # Async-vs-barrier smoke: also emits BENCH_async.json (perf trajectory).
 cargo bench --bench async_vs_barrier -- --dry-run
+test -f BENCH_async.json || { echo "BENCH_async.json not emitted"; exit 1; }
+tools/bench_regress --artifact BENCH_async.json \
+  --history BENCH_history/async.jsonl --append
 # Cluster transport smoke: bytes/iteration + loopback-vs-TCP throughput
 # (emits BENCH_cluster.json; exercises the wire over real localhost TCP).
 cargo bench --bench cluster_transport -- --dry-run
 test -f BENCH_cluster.json || { echo "BENCH_cluster.json not emitted"; exit 1; }
+tools/bench_regress --artifact BENCH_cluster.json \
+  --history BENCH_history/cluster.jsonl --append
 
 echo "CI OK"

@@ -27,6 +27,7 @@ use matcha::sim::kernel::edge_diff_message;
 use matcha::sim::{run_decentralized, QuadraticProblem};
 use matcha::state::{DeltaPool, MixKernel, StateMatrix};
 use matcha::topology::TopologySampler;
+use matcha::trace::{Counter, Hist, TraceEvent, Tracer};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -56,9 +57,38 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static ALLOCATOR: CountingAlloc = CountingAlloc;
 
+/// Emission through a sink-less [`Tracer`] must stay a single branch:
+/// zero heap allocations per `emit`/`count`/`observe` (asserted) —
+/// the property that lets tracing calls live unconditionally inside
+/// every backend's hot loop. Returns allocs/emit for `BENCH_state.json`.
+fn trace_disabled_allocs(iters: usize) -> f64 {
+    let mut tracer = Tracer::disabled();
+    tracer.emit(TraceEvent::RoundBarrier { k: 0 });
+    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for k in 0..iters {
+        tracer.set_now(k as f64);
+        tracer.emit(TraceEvent::ComputeBegin { worker: k % 8, k });
+        tracer.emit(TraceEvent::MixApplied { k, activated: 3 });
+        tracer.count(Counter::MixRounds, 1);
+        tracer.observe(Hist::QueueDepth, (k % 5) as f64);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let emits = (iters * 4) as f64;
+    let allocs = (ALLOC_COUNT.load(Ordering::Relaxed) - before) as f64 / emits;
+    std::hint::black_box(tracer.registry.counter(Counter::MixRounds));
+    println!("trace disabled: {allocs:.1} allocs/emit over {emits:.0} emits ({ns:.0} ns/iter)");
+    assert!(
+        allocs == 0.0,
+        "disabled tracer emission must be allocation-free, saw {allocs} allocs/emit"
+    );
+    allocs
+}
+
 /// Mixing-throughput sweep over a (workers × dim) grid: arena kernel vs
 /// the pre-arena per-message-clone fold, allocations-per-iteration and
-/// elements/sec, written to `BENCH_state.json`.
+/// elements/sec, written to `BENCH_state.json` along with the
+/// disabled-tracer allocation assertion above.
 fn state_mix_sweep(dry_run: bool) {
     println!("\n=== state arena: gossip mix throughput (workers x dim) ===");
     let grid: &[(usize, usize)] = if dry_run {
@@ -157,9 +187,12 @@ fn state_mix_sweep(dry_run: bool) {
             ("elements_per_sec", Json::Num(elements_per_sec)),
         ]));
     }
+    println!("\n=== trace: disabled-tracer emission overhead ===");
+    let trace_allocs = trace_disabled_allocs(if dry_run { 10_000 } else { 1_000_000 });
     let summary = Json::obj(vec![
         ("mode", Json::Str(if dry_run { "dry" } else { "full" }.into())),
         ("iters_per_point", Json::Num(iters as f64)),
+        ("trace_disabled_allocs_per_emit", Json::Num(trace_allocs)),
         ("grid", Json::Arr(points)),
     ]);
     std::fs::write("BENCH_state.json", summary.to_string()).expect("write BENCH_state.json");

@@ -78,9 +78,17 @@ matcha — MATCHA: decentralized SGD with matching decomposition sampling
 USAGE: matcha <command> [--flag value ...]
 
 COMMANDS
-  run        --spec FILE [--dry-run] [--out FILE]   execute a JSON experiment
-             spec (the spec → plan → run pipeline; --dry-run stops after
-             planning and prints the derived quantities)
+  run        --spec FILE [--dry-run] [--out FILE] [--trace FILE]   execute a
+             JSON experiment spec (the spec → plan → run pipeline; --dry-run
+             stops after planning and prints the derived quantities; --trace
+             writes a Chrome trace-event JSON of the run, Perfetto-loadable)
+  trace-check --file FILE                       validate a Chrome trace file
+  bench-regress --artifact FILE --history FILE [--append] [--tolerance T]
+             gate a bench artifact against its committed history (JSONL):
+             exact-match keys (workers, dim, alloc counts) must be equal,
+             lower-is-better keys may grow at most T (default 0.25) over the
+             last history entry; wall-clock timings are never gated.
+             --append records the current values as a new history line
   decompose  --graph SPEC [--greedy]            matching decomposition
   probs      --graph SPEC --budget CB           activation probabilities (problem 4)
   alpha      --graph SPEC --budget CB           mixing weight + spectral norm (Lemma 1)
@@ -145,6 +153,8 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
+        "trace-check" => cmd_trace_check(&args),
+        "bench-regress" => cmd_bench_regress(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -231,7 +241,16 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let Some(path) = args.flags.get("spec") else {
         return Err("run: --spec FILE is required".into());
     };
-    let spec = ExperimentSpec::load(std::path::Path::new(path))?;
+    let mut spec = ExperimentSpec::load(std::path::Path::new(path))?;
+    if let Some(trace_path) = args.flags.get("trace") {
+        // The flag overrides any trace block in the spec file: Chrome
+        // format at the default ring capacity.
+        spec.trace = Some(experiment::TraceSpec {
+            path: trace_path.clone(),
+            format: crate::trace::TraceFormat::Chrome,
+            capacity: crate::experiment::DEFAULT_TRACE_CAPACITY,
+        });
+    }
     let plan = experiment::plan(&spec)?;
     println!(
         "plan: strategy={} problem={} backend={} policy={} | {} nodes, M={} matchings, \
@@ -261,6 +280,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             "events processed: {}, links dropped by failure injection: {}",
             result.events, result.dropped_links
         );
+    }
+    if let Some(trace) = &spec.trace {
+        println!("wrote trace to {} ({})", trace.path, trace.format.name());
     }
     save_metrics(args, &result.metrics)
 }
@@ -671,6 +693,159 @@ fn cmd_train(_args: &Args) -> Result<(), String> {
         .into())
 }
 
+fn cmd_trace_check(args: &Args) -> Result<(), String> {
+    let Some(path) = args.flags.get("file") else {
+        return Err("trace-check: --file FILE is required".into());
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("trace-check: cannot read {path}: {e}"))?;
+    let check = crate::trace::validate_chrome_trace(&text)?;
+    println!(
+        "{path}: well-formed Chrome trace, {} events on {} tracks",
+        check.events, check.tracks
+    );
+    Ok(())
+}
+
+/// Flatten a JSON tree to its numeric leaves under dotted keys
+/// (`grid.0.workers`). Non-numeric leaves are skipped.
+fn flatten_numbers(json: &Json, prefix: &str, out: &mut Vec<(String, f64)>) {
+    match json {
+        Json::Num(n) => out.push((prefix.to_string(), *n)),
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let key =
+                    if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten_numbers(v, &key, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, v) in items.iter().enumerate() {
+                let key =
+                    if prefix.is_empty() { i.to_string() } else { format!("{prefix}.{i}") };
+                flatten_numbers(v, &key, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Deterministic keys that must match the baseline exactly.
+const REGRESS_EXACT: &[&str] =
+    &["workers", "shards", "dim", "allocs_per_iter_arena", "trace_disabled_allocs_per_emit"];
+
+/// Lower-is-better keys gated by the fractional tolerance. Wall-clock
+/// timings are deliberately absent — they are machine-dependent and
+/// never gated.
+const REGRESS_TOLERANCE: &[&str] = &[
+    "bytes_per_iter",
+    "frames_per_iter",
+    "virtual_time_barrier",
+    "virtual_time_async",
+    "wire_units",
+    "simulated_comm_units",
+    "dropped_links",
+];
+
+fn cmd_bench_regress(args: &Args) -> Result<(), String> {
+    let Some(artifact) = args.flags.get("artifact") else {
+        return Err("bench-regress: --artifact FILE is required".into());
+    };
+    let Some(history) = args.flags.get("history") else {
+        return Err("bench-regress: --history FILE is required".into());
+    };
+    let tolerance = args.f64_or("tolerance", 0.25)?;
+    if !tolerance.is_finite() || tolerance < 0.0 {
+        return Err(format!("bench-regress: --tolerance {tolerance} must be >= 0"));
+    }
+    let text = std::fs::read_to_string(artifact)
+        .map_err(|e| format!("bench-regress: cannot read {artifact}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| format!("bench-regress: {artifact}: {e}"))?;
+    let mut current = Vec::new();
+    flatten_numbers(&json, "", &mut current);
+
+    // Baseline = last non-empty line of the history JSONL, if the file
+    // exists (a fresh history passes with nothing to compare).
+    let baseline = match std::fs::read_to_string(history) {
+        Err(_) => None,
+        Ok(h) => match h.lines().rev().find(|l| !l.trim().is_empty()) {
+            None => None,
+            Some(line) => {
+                let j = Json::parse(line)
+                    .map_err(|e| format!("bench-regress: {history}: {e}"))?;
+                let mut flat = Vec::new();
+                flatten_numbers(&j, "", &mut flat);
+                Some(flat)
+            }
+        },
+    };
+
+    let mut checked = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    if let Some(base) = &baseline {
+        let base_map: std::collections::BTreeMap<&str, f64> =
+            base.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        for (key, cur) in &current {
+            let Some(prev) = base_map.get(key.as_str()).copied() else { continue };
+            let seg = key.rsplit('.').next().unwrap_or(key);
+            if REGRESS_EXACT.contains(&seg) {
+                checked += 1;
+                if *cur != prev {
+                    failures.push(format!("{key}: {prev} -> {cur} (exact-match key)"));
+                }
+            } else if REGRESS_TOLERANCE.contains(&seg) {
+                checked += 1;
+                if prev == 0.0 {
+                    if *cur > 0.0 {
+                        failures.push(format!("{key}: baseline 0 -> {cur}"));
+                    }
+                } else if *cur > prev * (1.0 + tolerance) {
+                    failures.push(format!(
+                        "{key}: {prev} -> {cur} (over the {:.0}% budget)",
+                        tolerance * 100.0
+                    ));
+                }
+            }
+        }
+    }
+
+    if args.bool("append") {
+        use std::io::Write;
+        if let Some(parent) = std::path::Path::new(history).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("bench-regress: {}: {e}", parent.display()))?;
+            }
+        }
+        let obj: std::collections::BTreeMap<String, Json> =
+            current.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(history)
+            .map_err(|e| format!("bench-regress: cannot open {history}: {e}"))?;
+        writeln!(f, "{}", Json::Obj(obj))
+            .map_err(|e| format!("bench-regress: cannot append to {history}: {e}"))?;
+        println!("appended {} metrics to {history}", current.len());
+    }
+
+    if !failures.is_empty() {
+        return Err(format!(
+            "bench-regress: {} regression(s) vs {history}:\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        ));
+    }
+    match baseline {
+        Some(_) if checked > 0 => {
+            println!("bench-regress: {checked} gated key(s) within budget vs {history}");
+        }
+        Some(_) => println!("bench-regress: no comparable gated keys vs {history}; pass"),
+        None => println!("bench-regress: no baseline in {history}; pass"),
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<(), String> {
     let artifacts = ArtifactPaths::new(args.str_or("artifacts", "artifacts"));
     let meta = crate::config::ModelMeta::load(&artifacts.meta())?;
@@ -1005,6 +1180,73 @@ mod tests {
         assert!(run(&sv(&["run"])).unwrap_err().contains("--spec"));
         let r = run(&sv(&["run", "--spec", "/nonexistent/spec.json"]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn run_command_trace_flag_writes_checkable_trace() {
+        let spec = ExperimentSpec::new("ring:6")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::EngineSequential)
+            .iterations(20)
+            .record_every(10);
+        let dir = std::env::temp_dir().join("matcha_cli_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.json");
+        spec.save(&path).unwrap();
+        let trace = dir.join("trace.json");
+        let p = path.to_str().unwrap();
+        let t = trace.to_str().unwrap();
+        run(&sv(&["run", "--spec", p, "--trace", t])).unwrap();
+        run(&sv(&["trace-check", "--file", t])).unwrap();
+        assert!(run(&sv(&["trace-check"])).unwrap_err().contains("--file"));
+        assert!(run(&sv(&["trace-check", "--file", "/nonexistent.json"])).is_err());
+    }
+
+    #[test]
+    fn bench_regress_gates_exact_and_tolerance_keys() {
+        let dir = std::env::temp_dir().join("matcha_cli_regress");
+        std::fs::create_dir_all(&dir).unwrap();
+        let artifact = dir.join("bench.json");
+        let history = dir.join("hist.jsonl");
+        std::fs::remove_file(&history).ok();
+        let a = artifact.to_str().unwrap().to_string();
+        let h = history.to_str().unwrap().to_string();
+        let good = r#"{"grid": [{"workers": 8, "ns_per_iter": 100.0, "bytes_per_iter": 64.0}]}"#;
+        std::fs::write(&artifact, good).unwrap();
+
+        // No history yet: passes, --append seeds the first entry.
+        run(&sv(&["bench-regress", "--artifact", &a, "--history", &h, "--append"])).unwrap();
+        // Identical values gate cleanly against that entry.
+        run(&sv(&["bench-regress", "--artifact", &a, "--history", &h])).unwrap();
+
+        // A wall-clock blowup alone is never gated.
+        let wall =
+            r#"{"grid": [{"workers": 8, "ns_per_iter": 9000.0, "bytes_per_iter": 64.0}]}"#;
+        std::fs::write(&artifact, wall).unwrap();
+        run(&sv(&["bench-regress", "--artifact", &a, "--history", &h])).unwrap();
+
+        // >25% growth on a lower-is-better key fails.
+        let slow =
+            r#"{"grid": [{"workers": 8, "ns_per_iter": 100.0, "bytes_per_iter": 100.0}]}"#;
+        std::fs::write(&artifact, slow).unwrap();
+        let err =
+            run(&sv(&["bench-regress", "--artifact", &a, "--history", &h])).unwrap_err();
+        assert!(err.contains("bytes_per_iter"), "{err}");
+        // ... but a loose enough --tolerance accepts it.
+        run(&sv(&[
+            "bench-regress", "--artifact", &a, "--history", &h, "--tolerance", "0.8",
+        ]))
+        .unwrap();
+
+        // Exact-match keys reject any drift.
+        let drift = r#"{"grid": [{"workers": 9, "ns_per_iter": 100.0, "bytes_per_iter": 64.0}]}"#;
+        std::fs::write(&artifact, drift).unwrap();
+        let err =
+            run(&sv(&["bench-regress", "--artifact", &a, "--history", &h])).unwrap_err();
+        assert!(err.contains("workers"), "{err}");
+
+        assert!(run(&sv(&["bench-regress", "--history", &h])).unwrap_err().contains("--artifact"));
+        assert!(run(&sv(&["bench-regress", "--artifact", &a])).unwrap_err().contains("--history"));
     }
 
     #[cfg(not(feature = "xla"))]

@@ -43,6 +43,7 @@ use crate::sim::kernel::{init_iterates, worker_streams};
 use crate::sim::{Problem, RunConfig, RunResult};
 use crate::state::StateMatrix;
 use crate::topology::{Round, TopologySampler};
+use crate::trace::{Counter, TraceEvent, Tracer};
 use std::net::{TcpListener, TcpStream};
 
 /// Configuration of a cluster run: the shared run parameters, the shard
@@ -244,10 +245,14 @@ struct ClusterExec<'a> {
     body: Vec<u8>,
     msgs: Vec<WireMeta>,
     staging: Vec<f64>,
+    /// Per-link stats snapshot taken at each phase start, so the phase's
+    /// wire traffic can be counted as a delta (recycled across phases).
+    prev_stats: Vec<LinkStats>,
 }
 
 impl<'a> ClusterExec<'a> {
     fn new(links: &'a mut [Box<dyn Transport>], workers: usize, dim: usize) -> Self {
+        let shards = links.len();
         ClusterExec {
             links,
             workers,
@@ -257,6 +262,28 @@ impl<'a> ClusterExec<'a> {
             body: Vec::new(),
             msgs: Vec::new(),
             staging: Vec::new(),
+            prev_stats: vec![LinkStats::default(); shards],
+        }
+    }
+
+    /// Capture every link's running stats at the start of a phase.
+    fn snapshot_stats(&mut self) {
+        for (s, link) in self.links.iter().enumerate() {
+            self.prev_stats[s] = link.stats();
+        }
+    }
+
+    /// Fold the phase's per-link traffic (since [`Self::snapshot_stats`])
+    /// into the registry and emit one frame-traffic marker pair per link.
+    fn account_traffic(&mut self, tracer: &mut Tracer<'_>) {
+        for (s, link) in self.links.iter().enumerate() {
+            let delta = link.stats().delta(&self.prev_stats[s]);
+            tracer.count(Counter::WireFramesSent, delta.frames_sent);
+            tracer.count(Counter::WireBytesSent, delta.bytes_sent);
+            tracer.count(Counter::WireFramesReceived, delta.frames_received);
+            tracer.count(Counter::WireBytesReceived, delta.bytes_received);
+            tracer.emit(TraceEvent::FrameSent { link: s, bytes: delta.bytes_sent });
+            tracer.emit(TraceEvent::FrameReceived { link: s, bytes: delta.bytes_received });
         }
     }
 
@@ -284,13 +311,15 @@ impl<'a> ClusterExec<'a> {
 }
 
 impl Executor for ClusterExec<'_> {
-    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix) {
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix, tracer: &mut Tracer<'_>) {
+        self.snapshot_stats();
         let msg = WireMsg::Step { lr };
         for (s, link) in self.links.iter_mut().enumerate() {
             link.send_msg(&msg, &mut self.scratch)
                 .unwrap_or_else(|e| panic!("cluster link {s}: {e}"));
         }
         self.collect(xs);
+        self.account_traffic(tracer);
     }
 
     fn mix(
@@ -301,7 +330,9 @@ impl Executor for ClusterExec<'_> {
         activated: &[usize],
         dead: &[(usize, usize)],
         xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
     ) {
+        self.snapshot_stats();
         // One routing + staging implementation shared with the actor
         // executor — the fold-order parity contract lives in one place.
         route_per_worker(&mut self.per, matchings, activated, dead);
@@ -338,6 +369,7 @@ impl Executor for ClusterExec<'_> {
             self.staging = staging;
         }
         self.collect(xs);
+        self.account_traffic(tracer);
     }
 }
 
@@ -377,6 +409,35 @@ pub fn run_cluster_observed<P, S>(
     policy: &mut dyn DelayPolicy,
     config: &ClusterConfig,
     observer: &mut dyn Observer,
+) -> Result<ClusterResult, String>
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
+    run_cluster_traced(
+        problem,
+        matchings,
+        sampler,
+        policy,
+        config,
+        observer,
+        &mut Tracer::disabled(),
+    )
+}
+
+/// [`run_cluster_observed`] with trace emission: the engine loop's
+/// compute/link spans plus per-phase wire-frame traffic markers and the
+/// wire byte/frame counters flow through `tracer`. With a disabled
+/// tracer this **is** the observed run — the trajectory never depends
+/// on tracing.
+pub fn run_cluster_traced<P, S>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &ClusterConfig,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
 ) -> Result<ClusterResult, String>
 where
     P: Problem + Sync,
@@ -537,7 +598,7 @@ where
         let exec = ClusterExec::new(&mut links, m, d);
         let mut replay = PlanReplay { plan: &plan };
         let result =
-            drive(problem, matchings, &mut replay, policy, &config.run, exec, observer);
+            drive(problem, matchings, &mut replay, policy, &config.run, exec, observer, tracer);
 
         let mut scratch = Vec::new();
         for (s, link) in links.iter_mut().enumerate() {

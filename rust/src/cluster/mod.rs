@@ -65,7 +65,10 @@ pub mod driver;
 pub mod transport;
 pub mod wire;
 
-pub use driver::{run_cluster, run_cluster_observed, ClusterConfig, ClusterResult, ClusterStats};
+pub use driver::{
+    run_cluster, run_cluster_observed, run_cluster_traced, ClusterConfig, ClusterResult,
+    ClusterStats,
+};
 pub use transport::{
     loopback_pair, LinkStats, LoopbackTransport, TcpTransport, Transport, TransportKind, WireClock,
 };

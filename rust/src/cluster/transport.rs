@@ -43,6 +43,18 @@ impl LinkStats {
     pub fn total_bytes(&self) -> u64 {
         self.bytes_sent + self.bytes_received
     }
+
+    /// Field-wise difference `self − prev`: the traffic that crossed the
+    /// link since `prev` was captured. Used for per-phase frame
+    /// accounting in the cluster driver's trace emission.
+    pub fn delta(&self, prev: &LinkStats) -> LinkStats {
+        LinkStats {
+            frames_sent: self.frames_sent - prev.frames_sent,
+            bytes_sent: self.bytes_sent - prev.bytes_sent,
+            frames_received: self.frames_received - prev.frames_received,
+            bytes_received: self.bytes_received - prev.bytes_received,
+        }
+    }
 }
 
 /// Convert accumulated wire bytes into the virtual time units of the
@@ -341,6 +353,20 @@ mod tests {
             assert!(units >= 0.0 && units < 1e-290, "link_time {bad}: units {units}");
         }
         assert!(WireClock::per_row(64, f64::INFINITY).units(1 << 20) > 1e290);
+    }
+
+    #[test]
+    fn link_stats_delta_is_fieldwise() {
+        let prev =
+            LinkStats { frames_sent: 2, bytes_sent: 100, frames_received: 1, bytes_received: 40 };
+        let cur =
+            LinkStats { frames_sent: 5, bytes_sent: 260, frames_received: 4, bytes_received: 90 };
+        let d = cur.delta(&prev);
+        assert_eq!(
+            d,
+            LinkStats { frames_sent: 3, bytes_sent: 160, frames_received: 3, bytes_received: 50 }
+        );
+        assert_eq!(cur.delta(&cur), LinkStats::default());
     }
 
     #[test]

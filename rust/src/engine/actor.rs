@@ -85,11 +85,15 @@ pub(crate) enum ShardCmd {
 /// Shard → coordinator reply: the post-phase iterates of every owned
 /// worker (slot order, flat `slots × d`), so the coordinator's arena
 /// stays authoritative for routing and metrics. `batch` returns the mix
-/// buffers for reuse (`None` after a step).
+/// buffers for reuse (`None` after a step). `steps` / `folded` report
+/// the shard-side work done by the phase (SGD steps run, gossip
+/// messages folded) for the run's metric registry.
 pub(crate) struct ShardReply {
     pub shard: usize,
     pub states: Vec<f64>,
     pub batch: Option<MixBatch>,
+    pub steps: u64,
+    pub folded: u64,
 }
 
 /// One shard of the bounded actor pool: a bundle of workers multiplexed
@@ -182,7 +186,13 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
                         &mut self.grad,
                     );
                 }
-                ShardReply { shard: self.shard, states: self.states_into(ret), batch: None }
+                ShardReply {
+                    shard: self.shard,
+                    states: self.states_into(ret),
+                    batch: None,
+                    steps: self.workers.len() as u64,
+                    folded: 0,
+                }
             }
             ShardCmd::Mix { k, alpha, batch, ret } => {
                 let d = self.seg.dim();
@@ -215,7 +225,14 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
                     batch.msgs.len(),
                     "mix batch not consumed: messages must be sorted by owner slot"
                 );
-                ShardReply { shard: self.shard, states: self.states_into(ret), batch: Some(batch) }
+                let folded = batch.msgs.len() as u64;
+                ShardReply {
+                    shard: self.shard,
+                    states: self.states_into(ret),
+                    batch: Some(batch),
+                    steps: 0,
+                    folded,
+                }
             }
         }
     }

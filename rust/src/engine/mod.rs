@@ -67,5 +67,8 @@ pub use policy::{
     parse_policy, AnalyticPolicy, DelayPolicy, FlakyLinkPolicy, HeterogeneousPolicy,
     StragglerPolicy,
 };
-pub use runner::{run_engine, run_engine_analytic, run_engine_observed, EngineConfig, EngineResult};
+pub use runner::{
+    run_engine, run_engine_analytic, run_engine_observed, run_engine_traced, EngineConfig,
+    EngineResult,
+};
 pub use sweep::{available_threads, sweep_parallel, sweep_parallel_streaming, sweep_serial};

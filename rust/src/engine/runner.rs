@@ -34,6 +34,7 @@ use crate::sim::kernel::{
 use crate::sim::{Compression, Problem, RunConfig, RunResult};
 use crate::state::{DeltaPool, StateMatrix};
 use crate::topology::TopologySampler;
+use crate::trace::{Counter, TraceEvent, Tracer};
 
 /// Engine configuration: the shared run parameters plus the execution
 /// mode. `threads <= 1` runs the in-process sequential mode; larger
@@ -67,7 +68,7 @@ pub struct EngineResult {
 /// Crate-visible so the cluster backend ([`crate::cluster`]) can drive
 /// the exact same iteration loop over a wire transport.
 pub(crate) trait Executor {
-    fn step(&mut self, k: usize, lr: f64, xs: &mut StateMatrix);
+    fn step(&mut self, k: usize, lr: f64, xs: &mut StateMatrix, tracer: &mut Tracer<'_>);
     fn mix(
         &mut self,
         k: usize,
@@ -76,6 +77,7 @@ pub(crate) trait Executor {
         activated: &[usize],
         dead: &[(usize, usize)],
         xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
     );
 }
 
@@ -143,7 +145,7 @@ struct SequentialExec<'p, P: Problem + ?Sized> {
 }
 
 impl<P: Problem + ?Sized> Executor for SequentialExec<'_, P> {
-    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix) {
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix, _tracer: &mut Tracer<'_>) {
         for w in 0..xs.rows() {
             local_sgd_step(
                 self.problem,
@@ -164,6 +166,7 @@ impl<P: Problem + ?Sized> Executor for SequentialExec<'_, P> {
         activated: &[usize],
         dead: &[(usize, usize)],
         xs: &mut StateMatrix,
+        _tracer: &mut Tracer<'_>,
     ) {
         apply_gossip(
             xs,
@@ -211,8 +214,9 @@ impl<'a> ActorExec<'a> {
     }
 
     /// Receive every shard's reply, copy its segment back into the
-    /// arena, and reclaim the recycled buffers.
-    fn collect(&mut self, xs: &mut StateMatrix) {
+    /// arena, reclaim the recycled buffers, and fold the shard-side
+    /// work counters into the run's metric registry.
+    fn collect(&mut self, xs: &mut StateMatrix, tracer: &mut Tracer<'_>) {
         let shards = self.pool.num_shards();
         let d = xs.dim();
         for _ in 0..shards {
@@ -221,6 +225,8 @@ impl<'a> ActorExec<'a> {
             for (slot, w) in shard_workers(s, shards, self.workers).enumerate() {
                 xs.row_mut(w).copy_from_slice(&reply.states[slot * d..(slot + 1) * d]);
             }
+            tracer.count(Counter::ShardSteps, reply.steps);
+            tracer.count(Counter::ShardMsgsFolded, reply.folded);
             self.rets[s] = Some(reply.states);
             if let Some(batch) = reply.batch {
                 self.batches[s] = Some(batch);
@@ -230,12 +236,12 @@ impl<'a> ActorExec<'a> {
 }
 
 impl Executor for ActorExec<'_> {
-    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix) {
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix, tracer: &mut Tracer<'_>) {
         for s in 0..self.pool.num_shards() {
             let ret = self.rets[s].take().expect("return buffer leased out");
             self.pool.send(s, ShardCmd::Step { lr, ret });
         }
-        self.collect(xs);
+        self.collect(xs, tracer);
     }
 
     fn mix(
@@ -246,6 +252,7 @@ impl Executor for ActorExec<'_> {
         activated: &[usize],
         dead: &[(usize, usize)],
         xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
     ) {
         route_per_worker(&mut self.per, matchings, activated, dead);
         // Stage each shard's batch: messages in slot order, each peer's
@@ -267,7 +274,7 @@ impl Executor for ActorExec<'_> {
             let ret = self.rets[s].take().expect("return buffer leased out");
             self.pool.send(s, ShardCmd::Mix { k, alpha, batch, ret });
         }
-        self.collect(xs);
+        self.collect(xs, tracer);
     }
 }
 
@@ -304,6 +311,34 @@ where
     P: Problem + Sync,
     S: TopologySampler,
 {
+    run_engine_traced(
+        problem,
+        matchings,
+        sampler,
+        policy,
+        config,
+        observer,
+        &mut Tracer::disabled(),
+    )
+}
+
+/// [`run_engine_observed`] with trace emission: compute/link spans,
+/// mix/barrier markers and run counters flow through `tracer`. With a
+/// disabled tracer this **is** the observed run — the trajectory never
+/// depends on tracing.
+pub fn run_engine_traced<P, S>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &EngineConfig,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
+) -> EngineResult
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
     let m = problem.num_workers();
     let d = problem.dim();
     if config.threads <= 1 {
@@ -314,7 +349,7 @@ where
             compression: config.run.compression.clone(),
             seed: config.run.seed,
         };
-        return drive(problem, matchings, sampler, policy, &config.run, exec, observer);
+        return drive(problem, matchings, sampler, policy, &config.run, exec, observer, tracer);
     }
 
     let threads = config.threads.min(m);
@@ -338,7 +373,8 @@ where
             shard.handle(cmd)
         });
         let exec = ActorExec::new(&pool, m);
-        let result = drive(problem, matchings, sampler, policy, &config.run, exec, observer);
+        let result =
+            drive(problem, matchings, sampler, policy, &config.run, exec, observer, tracer);
         drop(pool);
         result
     })
@@ -372,6 +408,7 @@ pub(crate) fn drive<P, S, E>(
     config: &RunConfig,
     mut exec: E,
     observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
 ) -> EngineResult
 where
     P: Problem + ?Sized,
@@ -398,11 +435,21 @@ where
         let mut compute_dur = 0.0f64;
         for w in 0..m {
             let ct = policy.compute_time(w, k);
+            tracer.emit_at(t0, TraceEvent::ComputeBegin { worker: w, k });
             queue.schedule(t0 + ct, EventKind::ComputeDone { worker: w, k });
             compute_dur = compute_dur.max(ct);
         }
-        queue.run_to_barrier();
-        exec.step(k, lr, &mut xs);
+        // Drain the phase barrier explicitly so each completion is
+        // traced at its own event time (in deterministic (time, seq)
+        // pop order).
+        while let Some(ev) = queue.pop() {
+            if let EventKind::ComputeDone { worker, k: ek } = ev.kind {
+                tracer.emit_at(ev.time, TraceEvent::ComputeEnd { worker, k: ek });
+                tracer.count(Counter::ComputeEvents, 1);
+            }
+        }
+        tracer.set_now(t0 + compute_dur);
+        exec.step(k, lr, &mut xs, tracer);
 
         // --- communication phase -------------------------------------
         let round = sampler.round(k);
@@ -421,6 +468,7 @@ where
                     for &(u, v) in matchings[j].edges() {
                         let failed = policy.link_fails(u, v, k);
                         let lt = policy.link_time(j, u, v, k);
+                        tracer.emit_at(t_matching, TraceEvent::LinkBegin { matching: j, u, v, k });
                         // Event times carry the *unscaled* link duration;
                         // the compression time factor below applies to the
                         // iteration total only. If event timestamps ever
@@ -434,7 +482,17 @@ where
                         }
                         dur = dur.max(lt);
                     }
-                    queue.run_to_barrier();
+                    while let Some(ev) = queue.pop() {
+                        if let EventKind::LinkDone { matching, edge: (u, v), k: ek, failed } =
+                            ev.kind
+                        {
+                            tracer.emit_at(
+                                ev.time,
+                                TraceEvent::LinkEnd { matching, u, v, k: ek, failed },
+                            );
+                            tracer.count(Counter::LinkEvents, 1);
+                        }
+                    }
                     t_matching += dur;
                     total += dur;
                 }
@@ -445,15 +503,21 @@ where
             comm_t *= comp.time_factor(config.latency_floor);
         }
         dropped += dead.len();
+        tracer.count(Counter::DroppedLinks, dead.len() as u64);
 
         // --- mix phase -----------------------------------------------
+        tracer.set_now(t0 + compute_dur + comm_t);
         if !round.activated.is_empty() {
-            exec.mix(k, config.alpha, matchings, &round.activated, &dead, &mut xs);
+            exec.mix(k, config.alpha, matchings, &round.activated, &dead, &mut xs, tracer);
         }
 
         // --- time accounting & recording -----------------------------
         total_comm += comm_t;
         let now = clock.advance(compute_dur + comm_t);
+        tracer.set_now(now);
+        tracer.emit(TraceEvent::MixApplied { k, activated: round.activated.len() });
+        tracer.emit(TraceEvent::RoundBarrier { k });
+        tracer.count(Counter::MixRounds, 1);
         if (k + 1) % config.lr_decay_every == 0 {
             lr *= config.lr_decay;
         }

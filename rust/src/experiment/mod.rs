@@ -55,5 +55,10 @@ mod spec;
 
 pub use observer::{NoopObserver, Observer};
 pub use plan::{plan, Plan};
-pub use run::{run, run_observed, run_planned, run_sweep, ExperimentResult};
-pub use spec::{Backend, ExperimentSpec, GraphSource, ProblemSpec, Strategy};
+pub use run::{
+    run, run_observed, run_planned, run_planned_traced, run_sweep, ExperimentResult,
+};
+pub use spec::{
+    Backend, ExperimentSpec, GraphSource, ProblemSpec, Strategy, TraceSpec,
+    DEFAULT_TRACE_CAPACITY,
+};

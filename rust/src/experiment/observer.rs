@@ -41,8 +41,14 @@ mod tests {
 
     #[test]
     fn default_methods_are_noops() {
+        use crate::experiment::{run, ExperimentSpec, ProblemSpec};
         let mut obs = NoopObserver;
         obs.on_iteration(1, 2.0, 3.0);
         obs.on_record(1, 2.0, &Recorder::new());
+        let result = run(&ExperimentSpec::new("fig1")
+            .problem(ProblemSpec::quadratic())
+            .iterations(5))
+        .unwrap();
+        obs.on_point(0, &result);
     }
 }

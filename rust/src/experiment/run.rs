@@ -12,16 +12,17 @@
 use super::observer::{NoopObserver, Observer};
 use super::plan::{plan, Plan};
 use super::spec::{Backend, ExperimentSpec, ProblemSpec};
-use crate::cluster::{run_cluster_observed, ClusterConfig, ClusterStats};
-use crate::engine::{parse_policy, run_engine_observed, sweep_parallel_streaming, EngineConfig};
-use crate::gossip::{run_async_observed, AsyncConfig, AsyncStats};
+use crate::cluster::{run_cluster_traced, ClusterConfig, ClusterStats};
+use crate::engine::{parse_policy, run_engine_traced, sweep_parallel_streaming, EngineConfig};
+use crate::gossip::{run_async_traced, AsyncConfig, AsyncStats};
 use crate::json::Json;
 use crate::metrics::Recorder;
 use crate::rng::Rng;
 use crate::sim::{
-    run_decentralized_observed, LogisticProblem, LogisticSpec, QuadraticProblem, RunResult,
+    run_decentralized_traced, LogisticProblem, LogisticSpec, QuadraticProblem, RunResult,
 };
 use crate::state::StateMatrix;
+use crate::trace::{write_trace, MetricsSnapshot, RingSink, Tracer};
 
 /// The unified outcome of a spec-driven run: plan-derived quantities,
 /// the metric series, and summary statistics from whichever backend
@@ -58,6 +59,10 @@ pub struct ExperimentResult {
     /// Per-link bytes-on-wire statistics; `Some` only for the cluster
     /// backend.
     pub cluster_stats: Option<ClusterStats>,
+    /// The unified counter/histogram snapshot read out of the run's
+    /// [`crate::trace::Tracer`] registry — same schema on every
+    /// backend, zeros where a metric does not apply.
+    pub snapshot: MetricsSnapshot,
 }
 
 impl ExperimentResult {
@@ -108,6 +113,7 @@ impl ExperimentResult {
             events: 0,
             async_stats: None,
             cluster_stats: None,
+            snapshot: MetricsSnapshot::default(),
         }
     }
 
@@ -126,6 +132,7 @@ impl ExperimentResult {
             events: r.events,
             async_stats: None,
             cluster_stats: None,
+            snapshot: MetricsSnapshot::default(),
         }
     }
 
@@ -144,6 +151,7 @@ impl ExperimentResult {
             events: r.events,
             async_stats: Some(r.stats),
             cluster_stats: None,
+            snapshot: MetricsSnapshot::default(),
         }
     }
 
@@ -162,6 +170,7 @@ impl ExperimentResult {
             events: r.events,
             async_stats: None,
             cluster_stats: Some(r.stats),
+            snapshot: MetricsSnapshot::default(),
         }
     }
 }
@@ -222,24 +231,69 @@ pub fn run_observed(
 
 /// Run with a precomputed plan (lets callers plan once and reuse — the
 /// sweep driver and `--dry-run` both lean on this split).
+///
+/// When the spec carries a `trace` block, the run records events into a
+/// ring sink of the requested capacity and writes the trace file when
+/// it finishes; otherwise this is [`run_planned_traced`] with a
+/// disabled tracer (metrics still accumulate into
+/// [`ExperimentResult::snapshot`]).
 pub fn run_planned(
     spec: &ExperimentSpec,
     plan: &Plan,
     observer: &mut dyn Observer,
+) -> Result<ExperimentResult, String> {
+    match &spec.trace {
+        Some(ts) => {
+            let mut sink = RingSink::new(ts.capacity);
+            let result = {
+                let mut tracer = Tracer::attached(&mut sink);
+                run_planned_traced(spec, plan, observer, &mut tracer)?
+            };
+            let other = trace_side_data(&result);
+            let path = std::path::Path::new(&ts.path);
+            write_trace(path, ts.format, &sink.records(), &other)?;
+            Ok(result)
+        }
+        None => run_planned_traced(spec, plan, observer, &mut Tracer::disabled()),
+    }
+}
+
+/// The `otherData` payload attached to Chrome exports: the run's
+/// counter/histogram snapshot plus a per-series summary of the metric
+/// recorder.
+fn trace_side_data(result: &ExperimentResult) -> Json {
+    let mut series = Vec::new();
+    for (name, s) in result.metrics.summaries() {
+        series.push((name, s.to_json()));
+    }
+    Json::obj(vec![
+        ("metrics", result.snapshot.to_json()),
+        ("series", Json::obj(series)),
+    ])
+}
+
+/// Run with a precomputed plan, emitting events and metrics through
+/// `tracer`. The result's [`ExperimentResult::snapshot`] is read out of
+/// the tracer's registry when the backend returns.
+pub fn run_planned_traced(
+    spec: &ExperimentSpec,
+    plan: &Plan,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
 ) -> Result<ExperimentResult, String> {
     let cfg = plan.run_config(spec)?;
     let mut sampler = plan.sampler(spec.sampler_seed.unwrap_or(spec.seed));
     let problem = build_problem(spec, plan.graph.num_nodes());
     let matchings = &plan.decomposition.matchings;
 
-    let result = match spec.backend {
+    let mut result = match spec.backend {
         Backend::SimReference => {
             let r = match &problem {
                 BuiltProblem::Quad(p) => {
-                    run_decentralized_observed(p, matchings, &mut sampler, &cfg, observer)
+                    run_decentralized_traced(p, matchings, &mut sampler, &cfg, observer, tracer)
                 }
                 BuiltProblem::Logreg(p) => {
-                    run_decentralized_observed(p, matchings, &mut sampler, &cfg, observer)
+                    run_decentralized_traced(p, matchings, &mut sampler, &cfg, observer, tracer)
                 }
             };
             ExperimentResult::from_sim(plan, r)
@@ -253,21 +307,23 @@ pub fn run_planned(
                 .map_err(|e| format!("policy: {e}"))?;
             let engine_cfg = EngineConfig { run: cfg, threads };
             let r = match &problem {
-                BuiltProblem::Quad(p) => run_engine_observed(
+                BuiltProblem::Quad(p) => run_engine_traced(
                     p,
                     matchings,
                     &mut sampler,
                     policy.as_mut(),
                     &engine_cfg,
                     observer,
+                    tracer,
                 ),
-                BuiltProblem::Logreg(p) => run_engine_observed(
+                BuiltProblem::Logreg(p) => run_engine_traced(
                     p,
                     matchings,
                     &mut sampler,
                     policy.as_mut(),
                     &engine_cfg,
                     observer,
+                    tracer,
                 ),
             };
             ExperimentResult::from_engine(plan, r)
@@ -277,21 +333,23 @@ pub fn run_planned(
                 .map_err(|e| format!("policy: {e}"))?;
             let async_cfg = AsyncConfig { run: cfg, threads, max_staleness };
             let r = match &problem {
-                BuiltProblem::Quad(p) => run_async_observed(
+                BuiltProblem::Quad(p) => run_async_traced(
                     p,
                     matchings,
                     &mut sampler,
                     policy.as_mut(),
                     &async_cfg,
                     observer,
+                    tracer,
                 ),
-                BuiltProblem::Logreg(p) => run_async_observed(
+                BuiltProblem::Logreg(p) => run_async_traced(
                     p,
                     matchings,
                     &mut sampler,
                     policy.as_mut(),
                     &async_cfg,
                     observer,
+                    tracer,
                 ),
             };
             ExperimentResult::from_async(plan, r)
@@ -301,26 +359,29 @@ pub fn run_planned(
                 .map_err(|e| format!("policy: {e}"))?;
             let cluster_cfg = ClusterConfig { run: cfg, shards, transport };
             let r = match &problem {
-                BuiltProblem::Quad(p) => run_cluster_observed(
+                BuiltProblem::Quad(p) => run_cluster_traced(
                     p,
                     matchings,
                     &mut sampler,
                     policy.as_mut(),
                     &cluster_cfg,
                     observer,
+                    tracer,
                 )?,
-                BuiltProblem::Logreg(p) => run_cluster_observed(
+                BuiltProblem::Logreg(p) => run_cluster_traced(
                     p,
                     matchings,
                     &mut sampler,
                     policy.as_mut(),
                     &cluster_cfg,
                     observer,
+                    tracer,
                 )?,
             };
             ExperimentResult::from_cluster(plan, r)
         }
     };
+    result.snapshot = MetricsSnapshot::from_registry(&tracer.registry);
     Ok(result)
 }
 
@@ -575,5 +636,68 @@ mod tests {
         let j = res.summary_json().to_string();
         let parsed = Json::parse(&j).unwrap();
         assert!(parsed.get("final_loss").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn sweep_line_schema_is_uniform_across_backends() {
+        // Non-cluster, non-async backends pin `wire_bytes` and
+        // `mean_staleness` to null, so every sweep JSON line carries
+        // the same keys regardless of backend.
+        let sim = run(&quick_spec()).unwrap().summary_json();
+        assert_eq!(sim.get("wire_bytes"), Some(&Json::Null));
+        assert_eq!(sim.get("mean_staleness"), Some(&Json::Null));
+        for key in ["final_loss", "total_time", "comm_units", "alpha", "rho"] {
+            assert!(sim.get(key).is_some(), "missing {key}");
+        }
+        let eng = run(&quick_spec().backend(Backend::EngineSequential)).unwrap().summary_json();
+        assert_eq!(eng.get("wire_bytes"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn snapshot_rides_on_every_backend() {
+        use crate::cluster::TransportKind;
+        use crate::trace::Counter;
+        let sim = run(&quick_spec()).unwrap();
+        assert_eq!(sim.snapshot.counter(Counter::MixRounds), 60);
+        assert!(sim.snapshot.counter(Counter::ComputeEvents) > 0);
+        assert_eq!(sim.snapshot.wire_bytes(), 0);
+        let clu = run(&quick_spec()
+            .backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }))
+        .unwrap();
+        assert!(clu.snapshot.wire_bytes() > 0, "cluster runs account wire traffic");
+        assert!(clu.snapshot.counter(Counter::ShardSteps) > 0);
+    }
+
+    #[test]
+    fn traced_run_records_events_and_snapshot() {
+        use crate::trace::Counter;
+        let spec = quick_spec().backend(Backend::EngineSequential);
+        let pl = plan(&spec).unwrap();
+        let mut sink = RingSink::new(65_536);
+        let mut tracer = Tracer::attached(&mut sink);
+        let res = run_planned_traced(&spec, &pl, &mut NoopObserver, &mut tracer).unwrap();
+        drop(tracer);
+        assert_eq!(res.snapshot.counter(Counter::MixRounds), 60);
+        assert!(!sink.is_empty());
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn spec_trace_block_writes_chrome_trace() {
+        use crate::experiment::spec::TraceSpec;
+        use crate::trace::{validate_chrome_trace, Counter, TraceFormat};
+        let path = std::env::temp_dir().join("matcha_run_planned_trace.json");
+        let spec = quick_spec().trace(TraceSpec {
+            path: path.to_string_lossy().into_owned(),
+            format: TraceFormat::Chrome,
+            capacity: 8192,
+        });
+        let res = run(&spec).unwrap();
+        assert!(res.snapshot.counter(Counter::ComputeEvents) > 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let check = validate_chrome_trace(&text).unwrap();
+        assert!(check.events > 0);
+        assert!(text.contains("otherData"), "metric summaries attach to the export");
+        std::fs::remove_file(&path).ok();
     }
 }

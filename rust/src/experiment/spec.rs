@@ -14,6 +14,7 @@ use crate::cluster::TransportKind;
 use crate::graph::{parse_graph_spec, Graph};
 use crate::json::Json;
 use crate::sim::Compression;
+use crate::trace::TraceFormat;
 use std::collections::BTreeMap;
 
 /// Where the base communication topology comes from.
@@ -190,6 +191,23 @@ impl Backend {
     }
 }
 
+/// Default trace ring capacity when the spec's `trace` block omits it.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// Where and how a run writes its event trace. JSON form:
+/// `{"path": "out.json", "format": "chrome" | "jsonl",
+/// "capacity": 65536}` (`format` and `capacity` optional).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpec {
+    /// Output file path.
+    pub path: String,
+    /// Export format (defaults to Chrome trace-event JSON).
+    pub format: TraceFormat,
+    /// Ring-buffer capacity in records; when a run emits more, the
+    /// oldest records are dropped.
+    pub capacity: usize,
+}
+
 /// A complete, declarative description of one experiment. See the module
 /// docs for the JSON schema; every field except `graph` has a default.
 ///
@@ -240,6 +258,9 @@ pub struct ExperimentSpec {
     /// Topology-sampler seed; `None` = `seed`. Overridable so legacy
     /// harnesses that seeded the sampler independently stay bit-exact.
     pub sampler_seed: Option<u64>,
+    /// Optional event-trace output (`None` = tracing disabled; metric
+    /// counters still accumulate).
+    pub trace: Option<TraceSpec>,
 }
 
 impl ExperimentSpec {
@@ -273,6 +294,7 @@ impl ExperimentSpec {
             latency_floor: 0.05,
             seed: 0,
             sampler_seed: None,
+            trace: None,
         }
     }
 
@@ -341,6 +363,12 @@ impl ExperimentSpec {
 
     pub fn sampler_seed(mut self, seed: u64) -> Self {
         self.sampler_seed = Some(seed);
+        self
+    }
+
+    /// Attach an event-trace output to the run.
+    pub fn trace(mut self, t: TraceSpec) -> Self {
+        self.trace = Some(t);
         self
     }
 
@@ -497,6 +525,14 @@ impl ExperimentSpec {
                 );
             }
         }
+        if let Some(trace) = &self.trace {
+            if trace.path.is_empty() {
+                return Err("trace: path must be non-empty".into());
+            }
+            if trace.capacity == 0 {
+                return Err("trace: capacity must be >= 1".into());
+            }
+        }
         // The policy grammar needs the graph and the run config, so
         // validate it with a probe config mirroring what the run builds.
         let probe = crate::sim::RunConfig {
@@ -624,7 +660,7 @@ impl ExperimentSpec {
             )),
             None => {}
         }
-        Json::obj(vec![
+        let mut top = vec![
             ("graph", graph),
             ("strategy", Json::obj(strategy)),
             ("problem", Json::obj(problem)),
@@ -632,7 +668,20 @@ impl ExperimentSpec {
             ("policy", Json::Str(self.policy.clone())),
             ("backend", Json::obj(backend)),
             ("run", Json::obj(run)),
-        ])
+        ];
+        if let Some(trace) = &self.trace {
+            // All three fields are emitted so the round-trip is exact
+            // even when they match the parse defaults.
+            top.push((
+                "trace",
+                Json::obj(vec![
+                    ("path", Json::Str(trace.path.clone())),
+                    ("format", Json::Str(trace.format.name().into())),
+                    ("capacity", Json::Num(trace.capacity as f64)),
+                ]),
+            ));
+        }
+        Json::obj(top)
     }
 
     /// Compact JSON string.
@@ -671,7 +720,7 @@ impl ExperimentSpec {
         known_keys(
             obj,
             "spec",
-            &["graph", "strategy", "problem", "delay", "policy", "backend", "run"],
+            &["graph", "strategy", "problem", "delay", "policy", "backend", "run", "trace"],
         )?;
 
         let graph = match obj.get("graph") {
@@ -702,8 +751,32 @@ impl ExperimentSpec {
         if let Some(r) = obj.get("run") {
             parse_run_params(r, &mut spec)?;
         }
+        if let Some(t) = obj.get("trace") {
+            spec.trace = Some(parse_trace(t)?);
+        }
         Ok(spec)
     }
+}
+
+fn parse_trace(json: &Json) -> Result<TraceSpec, String> {
+    let obj = json
+        .as_object()
+        .ok_or("trace: must be {\"path\": \"...\", \"format\": ..., \"capacity\": ...}")?;
+    known_keys(obj, "trace", &["path", "format", "capacity"])?;
+    let path = obj
+        .get("path")
+        .and_then(Json::as_str)
+        .ok_or("trace: missing required string 'path'")?
+        .to_string();
+    let format = match obj.get("format") {
+        None => TraceFormat::Chrome,
+        Some(f) => {
+            let name = f.as_str().ok_or("trace: 'format' must be a string")?;
+            TraceFormat::parse(name).map_err(|e| format!("trace: {e}"))?
+        }
+    };
+    let capacity = get_usize(obj, "trace", "capacity", DEFAULT_TRACE_CAPACITY)?;
+    Ok(TraceSpec { path, format, capacity })
 }
 
 fn known_keys(obj: &BTreeMap<String, Json>, ctx: &str, known: &[&str]) -> Result<(), String> {
@@ -1139,10 +1212,45 @@ mod tests {
             .compute_units(0.2)
             .compression(Compression::TopK { frac: 0.25 })
             .seed(7)
-            .sampler_seed(31);
+            .sampler_seed(31)
+            .trace(TraceSpec {
+                path: "out/trace.json".into(),
+                format: TraceFormat::Jsonl,
+                capacity: 1024,
+            });
         let text = spec.to_json_string();
         let back = ExperimentSpec::parse(&text).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn trace_block_parses_defaults_and_validates() {
+        let spec = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "trace": {"path": "t.json"}}"#,
+        )
+        .unwrap();
+        let trace = spec.trace.expect("trace block parsed");
+        assert_eq!(trace.path, "t.json");
+        assert_eq!(trace.format, TraceFormat::Chrome);
+        assert_eq!(trace.capacity, DEFAULT_TRACE_CAPACITY);
+
+        let err = ExperimentSpec::parse(r#"{"graph": "fig1", "trace": {}}"#).unwrap_err();
+        assert!(err.contains("path"), "{err}");
+        let err = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "trace": {"path": "t", "format": "pprof"}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("format"), "{err}");
+        let err = ExperimentSpec::new("fig1")
+            .trace(TraceSpec { path: String::new(), format: TraceFormat::Chrome, capacity: 16 })
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("trace: path"), "{err}");
+        let err = ExperimentSpec::new("fig1")
+            .trace(TraceSpec { path: "t".into(), format: TraceFormat::Chrome, capacity: 0 })
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("trace: capacity"), "{err}");
     }
 
     #[test]
@@ -1161,6 +1269,10 @@ mod tests {
             (r#"{"graph": "fig1", "bogus": 1}"#, "unknown key 'bogus'"),
             (r#"{"graph": "fig1", "strategy": {"kind": "matcha", "x": 1}}"#, "unknown key 'x'"),
             (r#"{"graph": "fig1", "run": {"warp": 9}}"#, "unknown key 'warp'"),
+            (
+                r#"{"graph": "fig1", "trace": {"path": "t", "color": "red"}}"#,
+                "unknown key 'color'",
+            ),
         ] {
             let err = ExperimentSpec::parse(text).unwrap_err();
             assert!(err.contains(needle), "{text}: {err}");

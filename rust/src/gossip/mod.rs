@@ -57,6 +57,6 @@ pub mod runtime;
 pub use pool::{shard_of, shard_slot, shard_workers, ShardedPool};
 pub use rounds::{RoundEdge, RoundPlan};
 pub use runtime::{
-    run_async, run_async_observed, AsyncConfig, AsyncResult, AsyncStats, WorkerStats,
-    DEFAULT_MAX_STALENESS, UNBOUNDED_STALENESS,
+    run_async, run_async_observed, run_async_traced, AsyncConfig, AsyncResult, AsyncStats,
+    WorkerStats, DEFAULT_MAX_STALENESS, UNBOUNDED_STALENESS,
 };

@@ -49,6 +49,7 @@ use crate::sim::kernel::{edge_diff_message, init_iterates, record_metrics, worke
 use crate::sim::{Problem, RunConfig, RunResult};
 use crate::state::{SnapshotPool, StateMatrix};
 use crate::topology::TopologySampler;
+use crate::trace::{Counter, Hist, TraceEvent, Tracer};
 use std::collections::{BTreeMap, VecDeque};
 
 /// Default version-drift bound used by spec defaults and the CLI.
@@ -383,7 +384,13 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
 
     /// Start worker `w`'s next compute step if it is free, has rounds
     /// left, and the staleness gate allows it.
-    fn start_compute(&mut self, w: usize, now: f64, grads: &mut dyn GradSource) {
+    fn start_compute(
+        &mut self,
+        w: usize,
+        now: f64,
+        grads: &mut dyn GradSource,
+        tracer: &mut Tracer<'_>,
+    ) {
         let (r, gate_ok) = {
             let wk = &self.workers[w];
             if wk.computing || wk.next_round >= self.iterations {
@@ -406,10 +413,12 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
         }
         if let Some(t0) = self.workers[w].blocked_since.take() {
             self.workers[w].idle += (now - t0).max(0.0);
+            tracer.observe(Hist::IdleUnits, (now - t0).max(0.0));
         }
         let ct = self.policy.compute_time(w, r);
         grads.dispatch(w, r, self.arena.row(w));
         self.workers[w].computing = true;
+        tracer.emit_at(now, TraceEvent::ComputeBegin { worker: w, k: r });
         self.queue.schedule(now + ct, EventKind::ComputeDone { worker: w, k: r });
     }
 
@@ -420,7 +429,10 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
         t: f64,
         grads: &mut dyn GradSource,
         observer: &mut dyn Observer,
+        tracer: &mut Tracer<'_>,
     ) {
+        tracer.emit_at(t, TraceEvent::ComputeEnd { worker: w, k: r });
+        tracer.count(Counter::ComputeEvents, 1);
         let plan = self.plan;
         {
             let mut grad = std::mem::take(&mut self.grad);
@@ -464,9 +476,9 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
                     RoundMix { snapshot, ready: t, incident, slots: vec![None; n], remaining: n },
                 );
             }
-            self.try_launch(w);
+            self.try_launch(w, tracer);
         }
-        self.start_compute(w, t, grads);
+        self.start_compute(w, t, grads, tracer);
     }
 
     /// Launch every rendezvous that just became enabled, cascading: an
@@ -474,7 +486,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
     /// round snapshots exist. Ports serialize a worker's own exchanges;
     /// the global `(round, edge)` order of the queues makes the cascade
     /// deadlock-free.
-    fn try_launch(&mut self, w0: usize) {
+    fn try_launch(&mut self, w0: usize, tracer: &mut Tracer<'_>) {
         let plan = self.plan;
         let mut stack = vec![w0];
         while let Some(a) = stack.pop() {
@@ -498,6 +510,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
                 let failed = self.policy.link_fails(u, v, k);
                 let lt = self.policy.link_time(j, u, v, k) * self.comm_scale;
                 let done = start + lt;
+                tracer.emit_at(start, TraceEvent::LinkBegin { matching: j, u, v, k });
                 self.workers[a].port_free = done;
                 self.workers[peer].port_free = done;
                 self.total_comm += lt;
@@ -517,14 +530,21 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
         t: f64,
         grads: &mut dyn GradSource,
         observer: &mut dyn Observer,
+        tracer: &mut Tracer<'_>,
     ) {
         if failed {
             self.dropped += 1;
+            tracer.count(Counter::DroppedLinks, 1);
         }
+        tracer.emit_at(t, TraceEvent::LinkEnd { matching: j, u, v, k, failed });
+        tracer.count(Counter::LinkEvents, 1);
         // Per-edge model-version drift: how many steps past round k the
         // faster endpoint already is. Bounded by `max_staleness` via the
         // compute gate.
         let tau = self.workers[u].ver.max(self.workers[v].ver).saturating_sub(k + 1);
+        tracer.emit_at(t, TraceEvent::StaleExchange { worker: u, peer: v, staleness: tau, k });
+        tracer.count(Counter::Exchanges, 1);
+        tracer.observe(Hist::Staleness, tau as f64);
         for w in [u, v] {
             let wk = &mut self.workers[w];
             wk.exchanges += 1;
@@ -574,7 +594,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
             };
             if complete {
                 self.apply_round(w, k, t, observer);
-                self.start_compute(w, t, grads);
+                self.start_compute(w, t, grads, tracer);
             }
         }
     }
@@ -660,6 +680,7 @@ fn drive_async<P: Problem + ?Sized>(
     config: &AsyncConfig,
     grads: &mut dyn GradSource,
     observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
 ) -> AsyncResult {
     let cfg = &config.run;
     assert!(
@@ -704,17 +725,18 @@ fn drive_async<P: Problem + ?Sized>(
     };
 
     for w in 0..m {
-        driver.start_compute(w, 0.0, grads);
+        driver.start_compute(w, 0.0, grads, tracer);
     }
     loop {
         let Some(ev) = driver.queue.pop() else { break };
+        tracer.observe(Hist::QueueDepth, driver.queue.len() as f64);
         driver.max_time = driver.max_time.max(ev.time);
         match ev.kind {
             EventKind::ComputeDone { worker, k } => {
-                driver.on_compute_done(worker, k, ev.time, grads, observer)
+                driver.on_compute_done(worker, k, ev.time, grads, observer, tracer)
             }
             EventKind::LinkDone { matching, edge, k, failed } => {
-                driver.on_link_done(matching, edge, k, failed, ev.time, grads, observer)
+                driver.on_link_done(matching, edge, k, failed, ev.time, grads, observer, tracer)
             }
         }
     }
@@ -789,6 +811,26 @@ where
     P: Problem + Sync,
     S: TopologySampler,
 {
+    run_async_traced(problem, matchings, sampler, policy, config, observer, &mut Tracer::disabled())
+}
+
+/// [`run_async_observed`] with trace emission: compute/link spans,
+/// stale-exchange markers and run counters/histograms flow through
+/// `tracer`. With a disabled tracer this **is** the observed run — the
+/// trajectory never depends on tracing.
+pub fn run_async_traced<P, S>(
+    problem: &P,
+    matchings: &[crate::graph::Graph],
+    sampler: &mut S,
+    policy: &mut dyn DelayPolicy,
+    config: &AsyncConfig,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
+) -> AsyncResult
+where
+    P: Problem + Sync,
+    S: TopologySampler,
+{
     let m = problem.num_workers();
     let d = problem.dim();
     let plan = RoundPlan::generate(sampler, matchings, config.run.iterations);
@@ -800,7 +842,7 @@ where
             grads: StateMatrix::zeros(m, d),
             ready: (0..m).map(|_| None).collect(),
         };
-        drive_async(problem, &plan, policy, config, &mut grads, observer)
+        drive_async(problem, &plan, policy, config, &mut grads, observer, tracer)
     } else {
         std::thread::scope(|scope| {
             let all_rngs = worker_streams(config.run.seed, m);
@@ -822,7 +864,7 @@ where
                 stash: BTreeMap::new(),
                 spare: Vec::new(),
             };
-            let result = drive_async(problem, &plan, policy, config, &mut grads, observer);
+            let result = drive_async(problem, &plan, policy, config, &mut grads, observer, tracer);
             drop(grads);
             drop(pool);
             result

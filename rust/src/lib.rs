@@ -72,6 +72,24 @@
 //! // The spec round-trips through JSON, so it is a loadable artifact.
 //! let reloaded = ExperimentSpec::parse(&spec.to_json_string()).unwrap();
 //! assert_eq!(reloaded, spec);
+//!
+//! // Any run can be traced: attach a ring sink and the backends emit
+//! // typed events (compute/link spans, mix/barrier markers) that export
+//! // to Perfetto-loadable Chrome trace JSON. `matcha run --spec ...
+//! // --trace out.json` does exactly this.
+//! use matcha::trace::{chrome_trace, validate_chrome_trace, RingSink, Tracer};
+//! let mut sink = RingSink::new(4096);
+//! let mut tracer = Tracer::attached(&mut sink);
+//! let traced = experiment::run_planned_traced(
+//!     &spec,
+//!     &plan,
+//!     &mut experiment::NoopObserver,
+//!     &mut tracer,
+//! )
+//! .unwrap();
+//! assert!(!sink.is_empty());
+//! let trace_json = chrome_trace(&sink.records(), &traced.snapshot.to_json());
+//! validate_chrome_trace(&trace_json.to_string()).unwrap();
 //! ```
 //!
 //! ## Execution backends
@@ -147,3 +165,4 @@ pub mod runtime;
 pub mod sim;
 pub mod state;
 pub mod topology;
+pub mod trace;

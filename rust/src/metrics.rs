@@ -16,6 +16,36 @@ pub struct Sample {
     pub y: f64,
 }
 
+/// Summary statistics over one series' y values — what the trace
+/// exporters attach as per-series metadata instead of the full series.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SeriesSummary {
+    /// Number of samples.
+    pub count: usize,
+    /// Smallest y.
+    pub min: f64,
+    /// Largest y.
+    pub max: f64,
+    /// Mean of y.
+    pub mean: f64,
+    /// Final y.
+    pub last: f64,
+}
+
+impl SeriesSummary {
+    /// JSON form: `{"count": ..., "min": ..., "max": ..., "mean": ...,
+    /// "last": ...}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("mean", Json::Num(self.mean)),
+            ("last", Json::Num(self.last)),
+        ])
+    }
+}
+
 /// A collection of named metric series.
 #[derive(Clone, Debug, Default)]
 pub struct Recorder {
@@ -66,6 +96,36 @@ impl Recorder {
             .iter()
             .map(|s| s.y)
             .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Summary statistics of a series' y values (`None` if the series
+    /// is absent or empty).
+    pub fn summary(&self, series: &str) -> Option<SeriesSummary> {
+        let samples = self.get(series);
+        let last = samples.last()?.y;
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        for s in samples {
+            min = min.min(s.y);
+            max = max.max(s.y);
+            sum += s.y;
+        }
+        Some(SeriesSummary {
+            count: samples.len(),
+            min,
+            max,
+            mean: sum / samples.len() as f64,
+            last,
+        })
+    }
+
+    /// Summaries of every recorded series, in name order.
+    pub fn summaries(&self) -> Vec<(&str, SeriesSummary)> {
+        self.series
+            .keys()
+            .filter_map(|name| self.summary(name).map(|s| (name.as_str(), s)))
+            .collect()
     }
 
     /// Merge another recorder's series into this one under a prefix:
@@ -154,6 +214,36 @@ mod tests {
         assert_eq!(a.last("cb=0.5/loss"), Some(2.0));
         assert_eq!(a.last("cb=0.5/acc"), Some(0.5));
         assert_eq!(a.names().len(), 3);
+    }
+
+    #[test]
+    fn summary_reports_min_max_mean_last() {
+        let mut r = Recorder::new();
+        for (x, y) in [(0.0, 4.0), (1.0, 1.0), (2.0, 2.5)] {
+            r.push("loss", x, y);
+        }
+        let s = r.summary("loss").unwrap();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.last, 2.5);
+        assert_eq!(r.summary("missing"), None);
+        let j = s.to_json();
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("last").unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn summaries_cover_every_series_in_name_order() {
+        let mut r = Recorder::new();
+        r.push("b", 0.0, 1.0);
+        r.push("a", 0.0, 2.0);
+        let all = r.summaries();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, "a");
+        assert_eq!(all[1].0, "b");
+        assert_eq!(all[0].1.last, 2.0);
     }
 
     #[test]

@@ -26,7 +26,9 @@ mod runner;
 pub use compress::Compression;
 pub use logreg::{LogisticProblem, LogisticSpec};
 pub use quadratic::QuadraticProblem;
-pub use runner::{run_decentralized, run_decentralized_observed, RunConfig, RunResult};
+pub use runner::{
+    run_decentralized, run_decentralized_observed, run_decentralized_traced, RunConfig, RunResult,
+};
 
 use crate::rng::Rng;
 

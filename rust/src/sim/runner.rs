@@ -18,6 +18,7 @@ use crate::metrics::Recorder;
 use crate::rng::Rng;
 use crate::state::{DeltaPool, StateMatrix};
 use crate::topology::TopologySampler;
+use crate::trace::{Counter, TraceEvent, Tracer};
 
 /// Configuration for one simulated training run.
 #[derive(Clone, Debug)]
@@ -119,6 +120,26 @@ pub fn run_decentralized_observed<P: Problem, S: TopologySampler>(
     config: &RunConfig,
     observer: &mut dyn Observer,
 ) -> RunResult {
+    run_decentralized_traced(problem, matchings, sampler, config, observer, &mut Tracer::disabled())
+}
+
+/// [`run_decentralized_observed`] with trace emission: compute spans,
+/// mix/barrier markers and run counters flow through `tracer`. With a
+/// disabled tracer this **is** the observed run — the trajectory never
+/// depends on tracing.
+///
+/// The reference simulator accounts communication time in closed form,
+/// so it emits no per-link events; its per-round
+/// compute/mix/barrier sequence matches the engine's exactly under the
+/// analytic policy (pinned by `rust/tests/trace.rs`).
+pub fn run_decentralized_traced<P: Problem, S: TopologySampler>(
+    problem: &P,
+    matchings: &[Graph],
+    sampler: &mut S,
+    config: &RunConfig,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
+) -> RunResult {
     let m = problem.num_workers();
     let d = problem.dim();
     let mut xs = init_iterates(config.seed, m, d);
@@ -136,8 +157,14 @@ pub fn run_decentralized_observed<P: Problem, S: TopologySampler>(
 
     for k in 0..config.iterations {
         // --- local SGD step on every worker -------------------------
+        let t0 = clock.elapsed();
         for w in 0..m {
+            tracer.emit_at(t0, TraceEvent::ComputeBegin { worker: w, k });
             local_sgd_step(problem, w, lr, xs.row_mut(w), &mut worker_rngs[w], pool.grad_mut());
+        }
+        for w in 0..m {
+            tracer.emit_at(t0 + config.compute_units, TraceEvent::ComputeEnd { worker: w, k });
+            tracer.count(Counter::ComputeEvents, 1);
         }
 
         // --- consensus over the activated topology ------------------
@@ -161,6 +188,10 @@ pub fn run_decentralized_observed<P: Problem, S: TopologySampler>(
         }
         total_comm += comm_t;
         let now = clock.tick(comm_t);
+        tracer.set_now(now);
+        tracer.emit(TraceEvent::MixApplied { k, activated: round.activated.len() });
+        tracer.emit(TraceEvent::RoundBarrier { k });
+        tracer.count(Counter::MixRounds, 1);
 
         // --- lr schedule & recording --------------------------------
         if (k + 1) % config.lr_decay_every == 0 {

@@ -1,0 +1,447 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing` loadable) and a line-per-event JSONL stream.
+//!
+//! The Chrome export lays a trace out as one process (`pid` 0) with one
+//! track per worker, one per distinct gossip link, one per cluster wire
+//! link, and a control track for round markers. Compute and link spans
+//! become complete (`"ph": "X"`) events paired from their
+//! `Begin`/`End` records; mixes, barriers, frames and stale exchanges
+//! become instants (`"ph": "i"`). All non-metadata events are sorted by
+//! timestamp, so `ts` is monotone per track by construction — the
+//! property [`validate_chrome_trace`] (and `matcha trace-check`)
+//! verifies.
+//!
+//! Timestamps are microseconds as the format requires; one virtual
+//! delay unit maps to 1000 µs so sub-unit link times stay visible.
+
+use super::span::{TraceEvent, TraceRecord};
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+/// Trace file format selector (`ExperimentSpec` `trace.format`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// Chrome trace-event JSON (`{"traceEvents": [...]}`).
+    Chrome,
+    /// One JSON object per line, one line per record.
+    Jsonl,
+}
+
+impl TraceFormat {
+    /// Short name for specs and logs (`chrome`, `jsonl`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceFormat::Chrome => "chrome",
+            TraceFormat::Jsonl => "jsonl",
+        }
+    }
+
+    /// Parse a spec format name.
+    pub fn parse(s: &str) -> Result<TraceFormat, String> {
+        match s {
+            "chrome" => Ok(TraceFormat::Chrome),
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            other => Err(format!("unknown trace format '{other}' (expected chrome | jsonl)")),
+        }
+    }
+}
+
+/// Microseconds per virtual delay unit in the Chrome export.
+const US_PER_UNIT: f64 = 1000.0;
+/// Track id of the control track (mix/barrier instants).
+const CONTROL_TID: usize = 9_000;
+/// First track id of the per-gossip-link tracks.
+const LINK_TID_BASE: usize = 10_000;
+/// First track id of the per-wire-link (cluster frame) tracks.
+const FRAME_TID_BASE: usize = 20_000;
+
+fn meta_event(tid: usize, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str("thread_name".into())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::Str(name.into()))])),
+    ])
+}
+
+fn span_event(name: String, tid: usize, ts: f64, dur: f64, args: Json) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name)),
+        ("ph", Json::Str("X".into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts)),
+        ("dur", Json::Num(dur)),
+        ("args", args),
+    ])
+}
+
+fn instant_event(name: &str, tid: usize, ts: f64, args: Json) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.into())),
+        ("ph", Json::Str("i".into())),
+        ("s", Json::Str("t".into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts)),
+        ("args", args),
+    ])
+}
+
+/// Build the Chrome trace-event JSON for `records`. `other_data` (any
+/// non-`Null` value, conventionally the run's metric summaries) lands
+/// under the format's `otherData` key.
+pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
+    // Track assignment: workers keep their id, links get stable tids in
+    // first-seen order.
+    let mut link_tids: BTreeMap<(usize, usize, usize), usize> = BTreeMap::new();
+    let mut frame_tids: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut worker_tids: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut control_used = false;
+    let mut worker = |w: usize, map: &mut BTreeMap<usize, usize>| -> usize {
+        map.entry(w).or_insert(w);
+        w
+    };
+    let mut link_tid = |j: usize, u: usize, v: usize| -> usize {
+        let next = LINK_TID_BASE + link_tids.len();
+        *link_tids.entry((j, u, v)).or_insert(next)
+    };
+
+    // Pair Begin/End records into complete spans; everything else is an
+    // instant. Unpaired records (ring overflow) are skipped.
+    let mut open_compute: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let mut open_link: BTreeMap<(usize, usize, usize, usize), f64> = BTreeMap::new();
+    let mut timed: Vec<(f64, Json)> = Vec::new();
+    for rec in records {
+        let ts = rec.vt * US_PER_UNIT;
+        match rec.ev {
+            TraceEvent::ComputeBegin { worker: w, k } => {
+                open_compute.insert((w, k), ts);
+            }
+            TraceEvent::ComputeEnd { worker: w, k } => {
+                if let Some(beg) = open_compute.remove(&(w, k)) {
+                    let tid = worker(w, &mut worker_tids);
+                    let args = Json::obj(vec![("k", Json::Num(k as f64))]);
+                    timed.push((beg, span_event("compute".into(), tid, beg, ts - beg, args)));
+                }
+            }
+            TraceEvent::LinkBegin { matching, u, v, k } => {
+                open_link.insert((matching, u, v, k), ts);
+            }
+            TraceEvent::LinkEnd { matching, u, v, k, failed } => {
+                if let Some(beg) = open_link.remove(&(matching, u, v, k)) {
+                    let tid = link_tid(matching, u, v);
+                    let args = Json::obj(vec![
+                        ("k", Json::Num(k as f64)),
+                        ("failed", Json::Bool(failed)),
+                    ]);
+                    let name = format!("m{matching} {u}-{v}");
+                    timed.push((beg, span_event(name, tid, beg, ts - beg, args)));
+                }
+            }
+            TraceEvent::MixApplied { k, activated } => {
+                control_used = true;
+                let args = Json::obj(vec![
+                    ("k", Json::Num(k as f64)),
+                    ("activated", Json::Num(activated as f64)),
+                ]);
+                timed.push((ts, instant_event("mix", CONTROL_TID, ts, args)));
+            }
+            TraceEvent::RoundBarrier { k } => {
+                control_used = true;
+                let args = Json::obj(vec![("k", Json::Num(k as f64))]);
+                timed.push((ts, instant_event("barrier", CONTROL_TID, ts, args)));
+            }
+            TraceEvent::FrameSent { link, bytes } => {
+                let next = FRAME_TID_BASE + frame_tids.len();
+                let tid = *frame_tids.entry(link).or_insert(next);
+                let args = Json::obj(vec![("bytes", Json::Num(bytes as f64))]);
+                timed.push((ts, instant_event("frame_sent", tid, ts, args)));
+            }
+            TraceEvent::FrameReceived { link, bytes } => {
+                let next = FRAME_TID_BASE + frame_tids.len();
+                let tid = *frame_tids.entry(link).or_insert(next);
+                let args = Json::obj(vec![("bytes", Json::Num(bytes as f64))]);
+                timed.push((ts, instant_event("frame_recv", tid, ts, args)));
+            }
+            TraceEvent::StaleExchange { worker: w, peer, staleness, k } => {
+                let tid = worker(w, &mut worker_tids);
+                let args = Json::obj(vec![
+                    ("peer", Json::Num(peer as f64)),
+                    ("staleness", Json::Num(staleness as f64)),
+                    ("k", Json::Num(k as f64)),
+                ]);
+                timed.push((ts, instant_event("stale_exchange", tid, ts, args)));
+            }
+        }
+    }
+
+    // Global sort by timestamp makes `ts` monotone on every track
+    // (stable, so same-instant events keep emission order).
+    timed.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    let mut events = Vec::with_capacity(timed.len() + 8);
+    events.push(Json::obj(vec![
+        ("name", Json::Str("process_name".into())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(0.0)),
+        ("args", Json::obj(vec![("name", Json::Str("matcha".into()))])),
+    ]));
+    for (&w, &tid) in &worker_tids {
+        events.push(meta_event(tid, &format!("worker {w}")));
+    }
+    for (&(j, u, v), &tid) in &link_tids {
+        events.push(meta_event(tid, &format!("link m{j} {u}-{v}")));
+    }
+    for (&link, &tid) in &frame_tids {
+        events.push(meta_event(tid, &format!("wire link {link}")));
+    }
+    if control_used {
+        events.push(meta_event(CONTROL_TID, "rounds"));
+    }
+    events.extend(timed.into_iter().map(|(_, e)| e));
+
+    let mut top = vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ];
+    if *other_data != Json::Null {
+        top.push(("otherData", other_data.clone()));
+    }
+    Json::obj(top)
+}
+
+/// One JSON object per record, one record per line (chronological).
+pub fn jsonl_lines(records: &[TraceRecord]) -> String {
+    let mut out = String::new();
+    for rec in records {
+        let mut fields = vec![("ev", Json::Str(rec.ev.name().into()))];
+        match rec.ev {
+            TraceEvent::ComputeBegin { worker, k } | TraceEvent::ComputeEnd { worker, k } => {
+                fields.push(("worker", Json::Num(worker as f64)));
+                fields.push(("k", Json::Num(k as f64)));
+            }
+            TraceEvent::LinkBegin { matching, u, v, k } => {
+                fields.push(("matching", Json::Num(matching as f64)));
+                fields.push(("u", Json::Num(u as f64)));
+                fields.push(("v", Json::Num(v as f64)));
+                fields.push(("k", Json::Num(k as f64)));
+            }
+            TraceEvent::LinkEnd { matching, u, v, k, failed } => {
+                fields.push(("matching", Json::Num(matching as f64)));
+                fields.push(("u", Json::Num(u as f64)));
+                fields.push(("v", Json::Num(v as f64)));
+                fields.push(("k", Json::Num(k as f64)));
+                fields.push(("failed", Json::Bool(failed)));
+            }
+            TraceEvent::MixApplied { k, activated } => {
+                fields.push(("k", Json::Num(k as f64)));
+                fields.push(("activated", Json::Num(activated as f64)));
+            }
+            TraceEvent::RoundBarrier { k } => {
+                fields.push(("k", Json::Num(k as f64)));
+            }
+            TraceEvent::FrameSent { link, bytes } | TraceEvent::FrameReceived { link, bytes } => {
+                fields.push(("link", Json::Num(link as f64)));
+                fields.push(("bytes", Json::Num(bytes as f64)));
+            }
+            TraceEvent::StaleExchange { worker, peer, staleness, k } => {
+                fields.push(("worker", Json::Num(worker as f64)));
+                fields.push(("peer", Json::Num(peer as f64)));
+                fields.push(("staleness", Json::Num(staleness as f64)));
+                fields.push(("k", Json::Num(k as f64)));
+            }
+        }
+        fields.push(("vt", Json::Num(rec.vt)));
+        fields.push(("wall_ns", Json::Num(rec.wall_ns as f64)));
+        out.push_str(&Json::obj(fields).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write `records` to `path` in `format`, with `other_data` attached to
+/// Chrome exports (ignored for JSONL).
+pub fn write_trace(
+    path: &std::path::Path,
+    format: TraceFormat,
+    records: &[TraceRecord],
+    other_data: &Json,
+) -> Result<(), String> {
+    let text = match format {
+        TraceFormat::Chrome => chrome_trace(records, other_data).to_string(),
+        TraceFormat::Jsonl => jsonl_lines(records),
+    };
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("trace: cannot create {}: {e}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, text).map_err(|e| format!("trace: cannot write {}: {e}", path.display()))
+}
+
+/// What [`validate_chrome_trace`] found in a well-formed trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Non-metadata events.
+    pub events: usize,
+    /// Distinct `(pid, tid)` tracks carrying events.
+    pub tracks: usize,
+}
+
+/// Validate Chrome trace-event JSON text: a top-level object with a
+/// `traceEvents` array whose entries carry `ph`/`pid`/`tid`/`ts`, with
+/// `ts` non-decreasing per `(pid, tid)` track (metadata `"M"` events
+/// are exempt). This is what `matcha trace-check` and `ci.sh` run over
+/// emitted traces.
+pub fn validate_chrome_trace(text: &str) -> Result<TraceCheck, String> {
+    let json = Json::parse(text).map_err(|e| format!("trace: {e}"))?;
+    let obj = json.as_object().ok_or("trace: top level must be an object")?;
+    let events = obj
+        .get("traceEvents")
+        .ok_or("trace: missing 'traceEvents' key")?
+        .as_array()
+        .ok_or("trace: 'traceEvents' must be an array")?;
+    let mut last_ts: BTreeMap<(u64, u64), f64> = BTreeMap::new();
+    let mut counted = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let e = ev.as_object().ok_or(format!("trace: event {i} is not an object"))?;
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or(format!("trace: event {i} missing string 'ph'"))?;
+        if ph == "M" {
+            continue;
+        }
+        let pid = e
+            .get("pid")
+            .and_then(Json::as_f64)
+            .ok_or(format!("trace: event {i} missing numeric 'pid'"))?;
+        let tid = e
+            .get("tid")
+            .and_then(Json::as_f64)
+            .ok_or(format!("trace: event {i} missing numeric 'tid'"))?;
+        let ts = e
+            .get("ts")
+            .and_then(Json::as_f64)
+            .ok_or(format!("trace: event {i} missing numeric 'ts'"))?;
+        if !ts.is_finite() {
+            return Err(format!("trace: event {i} has non-finite ts"));
+        }
+        let key = (pid.to_bits(), tid.to_bits());
+        if let Some(prev) = last_ts.get(&key) {
+            if ts < *prev {
+                return Err(format!(
+                    "trace: ts went backwards on track pid {pid} tid {tid} at event {i}: \
+                     {ts} < {prev}"
+                ));
+            }
+        }
+        last_ts.insert(key, ts);
+        counted += 1;
+    }
+    Ok(TraceCheck { events: counted, tracks: last_ts.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records() -> Vec<TraceRecord> {
+        let mut recs = Vec::new();
+        let mut push = |vt: f64, ev: TraceEvent| recs.push(TraceRecord { ev, vt, wall_ns: 0 });
+        for w in 0..2 {
+            push(0.0, TraceEvent::ComputeBegin { worker: w, k: 0 });
+        }
+        for w in 0..2 {
+            push(1.0, TraceEvent::ComputeEnd { worker: w, k: 0 });
+        }
+        push(1.0, TraceEvent::LinkBegin { matching: 0, u: 0, v: 1, k: 0 });
+        push(2.0, TraceEvent::LinkEnd { matching: 0, u: 0, v: 1, k: 0, failed: false });
+        push(2.0, TraceEvent::FrameSent { link: 0, bytes: 64 });
+        push(2.0, TraceEvent::FrameReceived { link: 0, bytes: 32 });
+        push(2.0, TraceEvent::StaleExchange { worker: 1, peer: 0, staleness: 1, k: 0 });
+        push(2.0, TraceEvent::MixApplied { k: 0, activated: 1 });
+        push(2.0, TraceEvent::RoundBarrier { k: 0 });
+        recs
+    }
+
+    #[test]
+    fn chrome_export_validates_with_expected_tracks() {
+        let json = chrome_trace(&sample_records(), &Json::Null);
+        let text = json.to_string();
+        let check = validate_chrome_trace(&text).unwrap();
+        // 2 compute spans + 1 link span + 5 instants.
+        assert_eq!(check.events, 8);
+        // 2 worker tracks, 1 link track, 1 wire track, 1 control track.
+        assert_eq!(check.tracks, 5);
+        // Thread-name metadata names every track kind.
+        assert!(text.contains("worker 0"), "{text}");
+        assert!(text.contains("link m0 0-1"), "{text}");
+        assert!(text.contains("wire link 0"), "{text}");
+        assert!(text.contains("\"displayTimeUnit\""), "{text}");
+    }
+
+    #[test]
+    fn chrome_export_attaches_other_data() {
+        let meta = Json::obj(vec![("final_loss", Json::Num(0.5))]);
+        let json = chrome_trace(&sample_records(), &meta);
+        assert_eq!(json.get("otherData"), Some(&meta));
+        assert_eq!(chrome_trace(&[], &Json::Null).get("otherData"), None);
+    }
+
+    #[test]
+    fn unpaired_begins_are_skipped_not_exported() {
+        let recs = vec![TraceRecord {
+            ev: TraceEvent::ComputeBegin { worker: 0, k: 0 },
+            vt: 0.0,
+            wall_ns: 0,
+        }];
+        let check = validate_chrome_trace(&chrome_trace(&recs, &Json::Null).to_string()).unwrap();
+        assert_eq!(check.events, 0);
+    }
+
+    #[test]
+    fn jsonl_is_one_parseable_object_per_line() {
+        let text = jsonl_lines(&sample_records());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), sample_records().len());
+        for line in &lines {
+            let json = Json::parse(line).unwrap();
+            assert!(json.get("ev").and_then(Json::as_str).is_some(), "{line}");
+            assert!(json.get("vt").and_then(Json::as_f64).is_some(), "{line}");
+        }
+        assert!(lines[0].contains("compute_begin"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        assert!(validate_chrome_trace("[]").unwrap_err().contains("object"));
+        assert!(validate_chrome_trace("{}").unwrap_err().contains("traceEvents"));
+        let backwards = r#"{"traceEvents": [
+            {"ph": "i", "pid": 0, "tid": 1, "ts": 5.0},
+            {"ph": "i", "pid": 0, "tid": 1, "ts": 4.0}
+        ]}"#;
+        assert!(validate_chrome_trace(backwards).unwrap_err().contains("backwards"));
+        // Different tracks may interleave timestamps freely.
+        let two_tracks = r#"{"traceEvents": [
+            {"ph": "i", "pid": 0, "tid": 1, "ts": 5.0},
+            {"ph": "i", "pid": 0, "tid": 2, "ts": 4.0},
+            {"ph": "M", "pid": 0, "tid": 1, "name": "thread_name"}
+        ]}"#;
+        let check = validate_chrome_trace(two_tracks).unwrap();
+        assert_eq!(check.events, 2);
+        assert_eq!(check.tracks, 2);
+    }
+
+    #[test]
+    fn trace_format_names_roundtrip() {
+        for f in [TraceFormat::Chrome, TraceFormat::Jsonl] {
+            assert_eq!(TraceFormat::parse(f.name()), Ok(f));
+        }
+        assert!(TraceFormat::parse("pprof").is_err());
+    }
+}

@@ -1,0 +1,384 @@
+//! The counter/histogram registry: fixed-slot, allocation-free run
+//! metrics unifying what used to live scattered across `LinkStats`,
+//! `AsyncStats` and `ClusterStats`.
+//!
+//! Every named metric has a compile-time slot ([`Counter`] /
+//! [`Hist`] enums indexing fixed arrays), so recording is an array
+//! increment — no hashing, no allocation, safe to leave always-on in
+//! every backend's hot loop. The per-run [`MetricsRegistry`] rides on
+//! the [`crate::trace::Tracer`] and is summarized into a
+//! [`MetricsSnapshot`] carried on
+//! [`crate::experiment::ExperimentResult`].
+
+use crate::json::Json;
+
+/// Monotonic counters with fixed registry slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Worker compute completions processed (engine/async event loops,
+    /// sim step loops).
+    ComputeEvents,
+    /// Per-link transmissions completed (engine/async schedules).
+    LinkEvents,
+    /// Gossip mix rounds applied (one per iteration, all backends).
+    MixRounds,
+    /// Links dropped by failure injection.
+    DroppedLinks,
+    /// Pairwise exchanges applied by the async runtime.
+    Exchanges,
+    /// Wire frames the cluster coordinator sent.
+    WireFramesSent,
+    /// Wire frames the cluster coordinator received.
+    WireFramesReceived,
+    /// Wire bytes the cluster coordinator sent.
+    WireBytesSent,
+    /// Wire bytes the cluster coordinator received.
+    WireBytesReceived,
+    /// Local SGD steps executed inside actor/cluster shards.
+    ShardSteps,
+    /// Gossip messages folded inside actor/cluster shards.
+    ShardMsgsFolded,
+}
+
+/// Number of counter slots.
+pub const NUM_COUNTERS: usize = 11;
+
+impl Counter {
+    /// Every counter, in slot order.
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::ComputeEvents,
+        Counter::LinkEvents,
+        Counter::MixRounds,
+        Counter::DroppedLinks,
+        Counter::Exchanges,
+        Counter::WireFramesSent,
+        Counter::WireFramesReceived,
+        Counter::WireBytesSent,
+        Counter::WireBytesReceived,
+        Counter::ShardSteps,
+        Counter::ShardMsgsFolded,
+    ];
+
+    /// Stable metric name (the key in [`MetricsSnapshot::to_json`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::ComputeEvents => "compute_events",
+            Counter::LinkEvents => "link_events",
+            Counter::MixRounds => "mix_rounds",
+            Counter::DroppedLinks => "dropped_links",
+            Counter::Exchanges => "exchanges",
+            Counter::WireFramesSent => "wire_frames_sent",
+            Counter::WireFramesReceived => "wire_frames_received",
+            Counter::WireBytesSent => "wire_bytes_sent",
+            Counter::WireBytesReceived => "wire_bytes_received",
+            Counter::ShardSteps => "shard_steps",
+            Counter::ShardMsgsFolded => "shard_msgs_folded",
+        }
+    }
+
+    fn slot(self) -> usize {
+        self as usize
+    }
+}
+
+/// Histograms with fixed registry slots.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// Version drift τ of applied async exchanges.
+    Staleness,
+    /// Event-queue depth sampled at each async event pop.
+    QueueDepth,
+    /// Virtual units a gated async worker spent idle before restarting.
+    IdleUnits,
+}
+
+/// Number of histogram slots.
+pub const NUM_HISTS: usize = 3;
+
+impl Hist {
+    /// Every histogram, in slot order.
+    pub const ALL: [Hist; NUM_HISTS] = [Hist::Staleness, Hist::QueueDepth, Hist::IdleUnits];
+
+    /// Stable metric name (the key in [`MetricsSnapshot::to_json`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::Staleness => "staleness",
+            Hist::QueueDepth => "queue_depth",
+            Hist::IdleUnits => "idle_units",
+        }
+    }
+
+    fn slot(self) -> usize {
+        self as usize
+    }
+}
+
+/// Number of buckets per histogram.
+pub const HIST_BUCKETS: usize = 8;
+
+/// Upper bounds of the first `HIST_BUCKETS - 1` buckets (`value <=
+/// bound`); the last bucket is the overflow. Coarse doubling bounds
+/// cover the small-integer distributions (staleness, queue depth) and
+/// the idle-unit scale alike.
+pub const HIST_BOUNDS: [f64; HIST_BUCKETS - 1] = [0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 64.0];
+
+/// A fixed-bucket histogram: count/sum/min/max plus doubling buckets.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    buckets: [u64; HIST_BUCKETS],
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&mut self, value: f64) {
+        if self.count == 0 {
+            self.min = value;
+            self.max = value;
+        } else {
+            self.min = self.min.min(value);
+            self.max = self.max.max(value);
+        }
+        self.count += 1;
+        self.sum += value;
+        let mut slot = HIST_BUCKETS - 1;
+        for (i, bound) in HIST_BOUNDS.iter().enumerate() {
+            if value <= *bound {
+                slot = i;
+                break;
+            }
+        }
+        self.buckets[slot] += 1;
+    }
+
+    /// Mean of the observations (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Bucket occupancy, in [`HIST_BOUNDS`] order (last = overflow).
+    pub fn buckets(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Fold another histogram's observations into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = *other;
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("min", Json::Num(if self.count == 0 { 0.0 } else { self.min })),
+            ("max", Json::Num(if self.count == 0 { 0.0 } else { self.max })),
+            ("mean", Json::Num(self.mean())),
+        ])
+    }
+}
+
+/// The per-run metric store: one `u64` per [`Counter`], one
+/// [`Histogram`] per [`Hist`]. Plain fixed arrays — recording never
+/// allocates, so it stays on in every backend whether or not a trace
+/// sink is attached.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: [u64; NUM_COUNTERS],
+    hists: [Histogram; NUM_HISTS],
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to counter `c`.
+    pub fn count(&mut self, c: Counter, by: u64) {
+        self.counters[c.slot()] += by;
+    }
+
+    /// Current value of counter `c`.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c.slot()]
+    }
+
+    /// Record one observation into histogram `h`.
+    pub fn observe(&mut self, h: Hist, value: f64) {
+        self.hists[h.slot()].observe(value);
+    }
+
+    /// Histogram `h` so far.
+    pub fn hist(&self, h: Hist) -> &Histogram {
+        &self.hists[h.slot()]
+    }
+
+    /// Fold another registry into this one (used when a run phase keeps
+    /// its own registry, e.g. merged shard replies).
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (a, b) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.hists.iter_mut().zip(other.hists.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.iter().all(|&c| c == 0) && self.hists.iter().all(|h| h.count == 0)
+    }
+}
+
+/// The immutable end-of-run summary carried on
+/// [`crate::experiment::ExperimentResult`]: the final registry, ready
+/// for JSON export and exporter metadata.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub registry: MetricsRegistry,
+}
+
+impl MetricsSnapshot {
+    /// Snapshot a registry (cheap fixed-size copy).
+    pub fn from_registry(registry: &MetricsRegistry) -> MetricsSnapshot {
+        MetricsSnapshot { registry: registry.clone() }
+    }
+
+    /// Counter value by id.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.registry.counter(c)
+    }
+
+    /// Histogram by id.
+    pub fn hist(&self, h: Hist) -> &Histogram {
+        self.registry.hist(h)
+    }
+
+    /// Total wire bytes in both directions (the `ClusterStats` headline
+    /// number, now uniform across backends: 0 where nothing crossed a
+    /// wire).
+    pub fn wire_bytes(&self) -> u64 {
+        self.counter(Counter::WireBytesSent) + self.counter(Counter::WireBytesReceived)
+    }
+
+    /// JSON form: `{"counters": {...}, "hists": {name: {count, sum,
+    /// min, max, mean}}}`. Zero counters and empty histograms are
+    /// included, so the schema is identical across backends.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Vec::with_capacity(NUM_COUNTERS);
+        for c in Counter::ALL {
+            counters.push((c.name(), Json::Num(self.registry.counter(c) as f64)));
+        }
+        let mut hists = Vec::with_capacity(NUM_HISTS);
+        for h in Hist::ALL {
+            hists.push((h.name(), self.registry.hist(h).to_json()));
+        }
+        Json::obj(vec![("counters", Json::obj(counters)), ("hists", Json::obj(hists))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_slot() {
+        let mut r = MetricsRegistry::new();
+        assert!(r.is_empty());
+        r.count(Counter::MixRounds, 3);
+        r.count(Counter::MixRounds, 2);
+        r.count(Counter::WireBytesSent, 100);
+        assert_eq!(r.counter(Counter::MixRounds), 5);
+        assert_eq!(r.counter(Counter::WireBytesSent), 100);
+        assert_eq!(r.counter(Counter::WireBytesReceived), 0);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn histogram_stats_and_buckets() {
+        let mut h = Histogram::default();
+        assert_eq!(h.mean(), 0.0);
+        for v in [0.0, 1.0, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count, 4);
+        assert_eq!(h.min, 0.0);
+        assert_eq!(h.max, 100.0);
+        assert!((h.mean() - 26.0).abs() < 1e-12);
+        // 0.0 -> bucket 0, 1.0 -> bucket 1, 3.0 -> bucket 3 (<= 4),
+        // 100.0 -> overflow.
+        assert_eq!(h.buckets()[0], 1);
+        assert_eq!(h.buckets()[1], 1);
+        assert_eq!(h.buckets()[3], 1);
+        assert_eq!(h.buckets()[HIST_BUCKETS - 1], 1);
+        assert_eq!(h.buckets().iter().sum::<u64>(), h.count);
+    }
+
+    #[test]
+    fn histogram_merge_matches_direct_observation() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut both = Histogram::default();
+        for v in [1.0, 5.0] {
+            a.observe(v);
+            both.observe(v);
+        }
+        for v in [0.5, 9.0, 2.0] {
+            b.observe(v);
+            both.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+        // Merging into/with empties is the identity.
+        let mut empty = Histogram::default();
+        empty.merge(&both);
+        assert_eq!(empty, both);
+        both.merge(&Histogram::default());
+        assert_eq!(empty, both);
+    }
+
+    #[test]
+    fn registry_merge_adds_everything() {
+        let mut a = MetricsRegistry::new();
+        let mut b = MetricsRegistry::new();
+        a.count(Counter::Exchanges, 2);
+        b.count(Counter::Exchanges, 3);
+        b.observe(Hist::Staleness, 1.0);
+        a.merge(&b);
+        assert_eq!(a.counter(Counter::Exchanges), 5);
+        assert_eq!(a.hist(Hist::Staleness).count, 1);
+    }
+
+    #[test]
+    fn snapshot_json_has_uniform_schema() {
+        let snap = MetricsSnapshot::default();
+        let json = snap.to_json();
+        let counters = json.get("counters").and_then(Json::as_object).unwrap();
+        assert_eq!(counters.len(), NUM_COUNTERS);
+        for c in Counter::ALL {
+            assert_eq!(counters.get(c.name()).and_then(Json::as_f64), Some(0.0));
+        }
+        let hists = json.get("hists").and_then(Json::as_object).unwrap();
+        assert_eq!(hists.len(), NUM_HISTS);
+        assert_eq!(snap.wire_bytes(), 0);
+    }
+}

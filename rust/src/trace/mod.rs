@@ -1,0 +1,65 @@
+//! Unified tracing & metrics: the cross-backend observability layer.
+//!
+//! MATCHA's argument is an error-*runtime* trade-off, so seeing **where**
+//! time goes inside a run — which links stall, which workers idle, how
+//! staleness evolves — matters as much as the final loss curve. This
+//! module is that lens, threaded through every execution backend:
+//!
+//! - [`span`] — the typed event vocabulary ([`TraceEvent`]:
+//!   compute/link spans, mix/barrier markers, wire frames, stale
+//!   exchanges) and the stamped [`TraceRecord`] (virtual time +
+//!   wall-clock nanoseconds).
+//! - [`sink`] — the [`TraceSink`] trait, the preallocated [`RingSink`]
+//!   collector, and the [`Tracer`] handle the backends emit through.
+//!   With no sink attached, emission is one branch and the hot paths
+//!   stay allocation-free (asserted in `benches/hotpath.rs`).
+//! - [`metrics`] — fixed-slot counters and histograms
+//!   ([`MetricsRegistry`]) that are always on, summarized into the
+//!   [`MetricsSnapshot`] every
+//!   [`crate::experiment::ExperimentResult`] carries — one uniform
+//!   home for what used to live in `LinkStats` / `AsyncStats` /
+//!   `ClusterStats`.
+//! - [`export`] — Chrome trace-event JSON (Perfetto /
+//!   `chrome://tracing` loadable; one track per worker, per link and
+//!   per wire link) and a JSONL event stream, plus the well-formedness
+//!   validator behind `matcha trace-check`.
+//!
+//! Reachable end-to-end as `matcha run --spec exp.json --trace out.json`
+//! or a `"trace": {"path": ...}` block in the spec; in-process via
+//! [`crate::experiment::run_planned_traced`]:
+//!
+//! ```
+//! use matcha::experiment::{self, ExperimentSpec, NoopObserver, ProblemSpec};
+//! use matcha::trace::{chrome_trace, validate_chrome_trace, RingSink, Tracer};
+//!
+//! let spec = ExperimentSpec::new("ring:6")
+//!     .problem(ProblemSpec::quadratic())
+//!     .iterations(10)
+//!     .validated()
+//!     .unwrap();
+//! let plan = experiment::plan(&spec).unwrap();
+//! let mut sink = RingSink::new(4096);
+//! let mut tracer = Tracer::attached(&mut sink);
+//! let result =
+//!     experiment::run_planned_traced(&spec, &plan, &mut NoopObserver, &mut tracer).unwrap();
+//! assert!(!sink.is_empty());
+//! let trace = chrome_trace(&sink.records(), &result.snapshot.to_json());
+//! validate_chrome_trace(&trace.to_string()).unwrap();
+//! ```
+//!
+//! Per seed, the barrier backends emit **identical virtual-time event
+//! sequences** (sim ≡ engine modulo per-link events; cluster loopback ≡
+//! actors event-for-event modulo wire frames) — pinned by
+//! `rust/tests/trace.rs`.
+
+pub mod export;
+pub mod metrics;
+pub mod sink;
+pub mod span;
+
+pub use export::{
+    chrome_trace, jsonl_lines, validate_chrome_trace, write_trace, TraceCheck, TraceFormat,
+};
+pub use metrics::{Counter, Hist, Histogram, MetricsRegistry, MetricsSnapshot};
+pub use sink::{RingSink, TraceSink, Tracer};
+pub use span::{TraceEvent, TraceRecord};

@@ -1,0 +1,219 @@
+//! Trace sinks and the [`Tracer`] handle the backends emit through.
+//!
+//! A [`TraceSink`] consumes stamped [`TraceRecord`]s; the standard
+//! implementation is [`RingSink`], a preallocated ring buffer that
+//! keeps the most recent `capacity` records and counts what it dropped.
+//!
+//! The [`Tracer`] is what actually threads through the execution
+//! layers: an optional borrowed sink plus the always-on
+//! [`MetricsRegistry`]. With no sink attached (the
+//! [`Tracer::disabled`] default every non-traced entry point uses),
+//! event emission is a single branch and **allocates nothing** — the
+//! property `benches/hotpath.rs` asserts under its counting global
+//! allocator.
+
+use super::metrics::{Counter, Hist, MetricsRegistry};
+use super::span::{TraceEvent, TraceRecord};
+use std::time::Instant;
+
+/// Consumes trace records as a run emits them.
+pub trait TraceSink {
+    fn record(&mut self, rec: &TraceRecord);
+}
+
+/// A bounded, preallocated ring of the most recent trace records.
+/// Recording never allocates once constructed; when full, the oldest
+/// record is overwritten and [`RingSink::dropped`] counts the loss.
+pub struct RingSink {
+    buf: Vec<TraceRecord>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+}
+
+impl RingSink {
+    /// A ring holding up to `capacity` records (must be >= 1). The
+    /// buffer is allocated up front.
+    pub fn new(capacity: usize) -> RingSink {
+        assert!(capacity >= 1, "trace ring needs capacity >= 1");
+        RingSink { buf: Vec::with_capacity(capacity), cap: capacity, head: 0, dropped: 0 }
+    }
+
+    /// Records currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// How many records were overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The held records in chronological (emission) order.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+impl TraceSink for RingSink {
+    fn record(&mut self, rec: &TraceRecord) {
+        if self.buf.len() < self.cap {
+            self.buf.push(*rec);
+        } else {
+            self.buf[self.head] = *rec;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+}
+
+/// The emission handle threaded through every backend: an optional
+/// borrowed [`TraceSink`] plus the always-on [`MetricsRegistry`].
+///
+/// Emission stamps each event with the tracer's current virtual time
+/// ([`Tracer::set_now`], maintained by the run loops) and the
+/// wall-clock nanoseconds since the tracer was created. Counter and
+/// histogram recording is unconditional (fixed-array increments);
+/// event recording happens only when a sink is attached.
+pub struct Tracer<'a> {
+    sink: Option<&'a mut dyn TraceSink>,
+    /// The run's metric registry; read out into a
+    /// [`super::metrics::MetricsSnapshot`] when the run finishes.
+    pub registry: MetricsRegistry,
+    now: f64,
+    epoch: Instant,
+}
+
+impl<'a> Tracer<'a> {
+    /// A tracer with no sink: events vanish in one branch, metrics
+    /// still accumulate. What every non-traced entry point passes.
+    pub fn disabled() -> Tracer<'static> {
+        Tracer { sink: None, registry: MetricsRegistry::new(), now: 0.0, epoch: Instant::now() }
+    }
+
+    /// A tracer recording events into `sink`.
+    pub fn attached(sink: &'a mut dyn TraceSink) -> Tracer<'a> {
+        Tracer {
+            sink: Some(sink),
+            registry: MetricsRegistry::new(),
+            now: 0.0,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Is a sink attached?
+    pub fn enabled(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Set the current virtual time; subsequent [`Tracer::emit`] calls
+    /// stamp it.
+    pub fn set_now(&mut self, vt: f64) {
+        self.now = vt;
+    }
+
+    /// The current virtual time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Emit `ev` at the current virtual time.
+    pub fn emit(&mut self, ev: TraceEvent) {
+        let vt = self.now;
+        self.emit_at(vt, ev);
+    }
+
+    /// Emit `ev` at virtual time `vt`. A no-op (no allocation, no
+    /// clock read) when no sink is attached.
+    pub fn emit_at(&mut self, vt: f64, ev: TraceEvent) {
+        if let Some(sink) = self.sink.as_deref_mut() {
+            let wall_ns = self.epoch.elapsed().as_nanos() as u64;
+            sink.record(&TraceRecord { ev, vt, wall_ns });
+        }
+    }
+
+    /// Add `by` to counter `c` (always on).
+    pub fn count(&mut self, c: Counter, by: u64) {
+        self.registry.count(c, by);
+    }
+
+    /// Record one histogram observation (always on).
+    pub fn observe(&mut self, h: Hist, value: f64) {
+        self.registry.observe(h, value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(k: usize) -> TraceRecord {
+        TraceRecord { ev: TraceEvent::RoundBarrier { k }, vt: k as f64, wall_ns: 0 }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent_in_order() {
+        let mut ring = RingSink::new(3);
+        assert!(ring.is_empty());
+        for k in 0..5 {
+            ring.record(&rec(k));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let ks: Vec<f64> = ring.records().iter().map(|r| r.vt).collect();
+        assert_eq!(ks, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn ring_under_capacity_is_chronological() {
+        let mut ring = RingSink::new(8);
+        for k in 0..3 {
+            ring.record(&rec(k));
+        }
+        assert_eq!(ring.dropped(), 0);
+        let ks: Vec<f64> = ring.records().iter().map(|r| r.vt).collect();
+        assert_eq!(ks, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn ring_rejects_zero_capacity() {
+        RingSink::new(0);
+    }
+
+    #[test]
+    fn disabled_tracer_discards_events_but_counts() {
+        let mut tracer = Tracer::disabled();
+        assert!(!tracer.enabled());
+        tracer.set_now(4.5);
+        assert_eq!(tracer.now(), 4.5);
+        tracer.emit(TraceEvent::RoundBarrier { k: 0 });
+        tracer.count(Counter::MixRounds, 1);
+        tracer.observe(Hist::QueueDepth, 2.0);
+        assert_eq!(tracer.registry.counter(Counter::MixRounds), 1);
+        assert_eq!(tracer.registry.hist(Hist::QueueDepth).count, 1);
+    }
+
+    #[test]
+    fn attached_tracer_stamps_time() {
+        let mut ring = RingSink::new(16);
+        let mut tracer = Tracer::attached(&mut ring);
+        assert!(tracer.enabled());
+        tracer.set_now(2.0);
+        tracer.emit(TraceEvent::MixApplied { k: 7, activated: 2 });
+        tracer.emit_at(3.5, TraceEvent::RoundBarrier { k: 7 });
+        drop(tracer);
+        let recs = ring.records();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].vt, 2.0);
+        assert_eq!(recs[0].ev, TraceEvent::MixApplied { k: 7, activated: 2 });
+        assert_eq!(recs[1].vt, 3.5);
+    }
+}

@@ -1,0 +1,123 @@
+//! Typed trace events and the stamped records the sinks collect.
+//!
+//! A [`TraceEvent`] is a `Copy` description of one thing that happened
+//! inside a run — a worker starting or finishing its local step, a link
+//! transmitting, a mix round applying, wire frames moving, a stale
+//! exchange resolving. Every backend emits the same vocabulary, which is
+//! what makes cross-backend trace comparison (and the determinism tests
+//! in `rust/tests/trace.rs`) possible.
+//!
+//! A [`TraceRecord`] stamps an event with the virtual time it happened
+//! at and the wall-clock nanoseconds since the tracer was created. The
+//! barrier backends are virtual-time deterministic, so their `(event,
+//! vt)` sequences are bit-for-bit reproducible per seed; `wall_ns` is
+//! informational (actors/async/cluster thread timing) and never part of
+//! any determinism contract.
+
+/// One thing that happened inside a run, tagged with the ids needed to
+/// place it on a per-worker or per-link track.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Worker `worker` began its local gradient step for iteration `k`.
+    ComputeBegin { worker: usize, k: usize },
+    /// Worker `worker` finished its local gradient step for iteration `k`.
+    ComputeEnd { worker: usize, k: usize },
+    /// Link `(u, v)` of matching `matching` began transmitting at
+    /// iteration `k`.
+    LinkBegin { matching: usize, u: usize, v: usize, k: usize },
+    /// Link `(u, v)` of matching `matching` finished at iteration `k`;
+    /// `failed` marks failure-injected links (time elapsed, edge
+    /// excluded from the mix).
+    LinkEnd { matching: usize, u: usize, v: usize, k: usize, failed: bool },
+    /// The gossip mix for iteration `k` was applied over `activated`
+    /// matchings (0 = a round with no communication).
+    MixApplied { k: usize, activated: usize },
+    /// The barrier closing iteration `k`: every backend's "round done"
+    /// point, stamped at the round's final virtual time.
+    RoundBarrier { k: usize },
+    /// The cluster coordinator finished sending `bytes` of wire frames
+    /// to shard link `link` during one phase.
+    FrameSent { link: usize, bytes: u64 },
+    /// The cluster coordinator finished receiving `bytes` of wire frames
+    /// from shard link `link` during one phase.
+    FrameReceived { link: usize, bytes: u64 },
+    /// The async runtime applied a pairwise exchange between `worker`
+    /// and `peer` for round `k` at version drift `staleness`.
+    StaleExchange { worker: usize, peer: usize, staleness: usize, k: usize },
+}
+
+impl TraceEvent {
+    /// Stable event name used by both exporters.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::ComputeBegin { .. } => "compute_begin",
+            TraceEvent::ComputeEnd { .. } => "compute_end",
+            TraceEvent::LinkBegin { .. } => "link_begin",
+            TraceEvent::LinkEnd { .. } => "link_end",
+            TraceEvent::MixApplied { .. } => "mix_applied",
+            TraceEvent::RoundBarrier { .. } => "round_barrier",
+            TraceEvent::FrameSent { .. } => "frame_sent",
+            TraceEvent::FrameReceived { .. } => "frame_received",
+            TraceEvent::StaleExchange { .. } => "stale_exchange",
+        }
+    }
+
+    /// Is this a wire-frame event? The cluster backend emits these on
+    /// top of the schedule events the actors backend produces, so the
+    /// cluster-vs-actors trace parity test filters them out.
+    pub fn is_frame(&self) -> bool {
+        matches!(self, TraceEvent::FrameSent { .. } | TraceEvent::FrameReceived { .. })
+    }
+
+    /// Is this a per-link schedule event? The sequential simulator
+    /// accounts communication time in closed form and emits no link
+    /// events, so the sim-vs-engine parity test filters these.
+    pub fn is_link(&self) -> bool {
+        matches!(self, TraceEvent::LinkBegin { .. } | TraceEvent::LinkEnd { .. })
+    }
+}
+
+/// One collected event: what happened, when in virtual time, and how
+/// many wall-clock nanoseconds into the run it was recorded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub ev: TraceEvent,
+    /// Virtual time of the event (delay-model units; deterministic per
+    /// seed for the barrier backends).
+    pub vt: f64,
+    /// Wall-clock nanoseconds since the tracer's creation
+    /// (informational only).
+    pub wall_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable_and_distinct() {
+        let events = [
+            TraceEvent::ComputeBegin { worker: 0, k: 0 },
+            TraceEvent::ComputeEnd { worker: 0, k: 0 },
+            TraceEvent::LinkBegin { matching: 0, u: 0, v: 1, k: 0 },
+            TraceEvent::LinkEnd { matching: 0, u: 0, v: 1, k: 0, failed: false },
+            TraceEvent::MixApplied { k: 0, activated: 1 },
+            TraceEvent::RoundBarrier { k: 0 },
+            TraceEvent::FrameSent { link: 0, bytes: 1 },
+            TraceEvent::FrameReceived { link: 0, bytes: 1 },
+            TraceEvent::StaleExchange { worker: 0, peer: 1, staleness: 0, k: 0 },
+        ];
+        let mut names: Vec<&str> = events.iter().map(|e| e.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), events.len(), "event names must be distinct");
+    }
+
+    #[test]
+    fn filters_classify_events() {
+        assert!(TraceEvent::FrameSent { link: 0, bytes: 8 }.is_frame());
+        assert!(!TraceEvent::RoundBarrier { k: 3 }.is_frame());
+        assert!(TraceEvent::LinkBegin { matching: 0, u: 0, v: 1, k: 0 }.is_link());
+        assert!(!TraceEvent::ComputeBegin { worker: 0, k: 0 }.is_link());
+    }
+}

@@ -1,0 +1,98 @@
+//! Cross-backend trace determinism and export integration tests.
+//!
+//! Per seed, the barrier backends emit identical virtual-time event
+//! sequences: sim ≡ engine once per-link schedule events are filtered
+//! out (the sequential simulator accounts communication time in closed
+//! form and emits none), and cluster loopback ≡ actors event-for-event
+//! once wire-frame events are filtered out. Every backend's trace
+//! exports as well-formed Chrome trace-event JSON.
+
+use matcha::cluster::TransportKind;
+use matcha::experiment::{self, Backend, ExperimentSpec, NoopObserver, ProblemSpec, Strategy};
+use matcha::trace::{chrome_trace, validate_chrome_trace, RingSink, TraceEvent, Tracer};
+
+fn base_spec(seed: u64) -> ExperimentSpec {
+    ExperimentSpec::new("ring:6")
+        .problem(ProblemSpec::quadratic())
+        .strategy(Strategy::Matcha { budget: 0.5 })
+        .lr(0.03)
+        .iterations(40)
+        .record_every(10)
+        .seed(seed)
+}
+
+/// Run the spec with a tracer attached and return the `(event, vt)`
+/// sequence. `wall_ns` is deliberately excluded: it is informational
+/// and never part of the determinism contract.
+fn traced_events(spec: &ExperimentSpec) -> Vec<(TraceEvent, f64)> {
+    let plan = experiment::plan(spec).unwrap();
+    let mut sink = RingSink::new(1 << 17);
+    let mut tracer = Tracer::attached(&mut sink);
+    experiment::run_planned_traced(spec, &plan, &mut NoopObserver, &mut tracer).unwrap();
+    drop(tracer);
+    assert_eq!(sink.dropped(), 0, "ring must hold the whole run");
+    sink.records().iter().map(|r| (r.ev, r.vt)).collect()
+}
+
+#[test]
+fn sim_and_engine_emit_identical_event_sequences_per_seed() {
+    for seed in [1, 9, 42] {
+        let sim = traced_events(&base_spec(seed));
+        let engine = traced_events(&base_spec(seed).backend(Backend::EngineSequential));
+        assert!(engine.iter().any(|(ev, _)| ev.is_link()), "engine emits link events");
+        assert!(!sim.iter().any(|(ev, _)| ev.is_link()), "sim emits no link events");
+        let engine_filtered: Vec<_> =
+            engine.into_iter().filter(|(ev, _)| !ev.is_link()).collect();
+        assert_eq!(sim, engine_filtered, "seed {seed}");
+    }
+}
+
+#[test]
+fn cluster_loopback_trace_matches_actors_event_for_event() {
+    let actors = traced_events(&base_spec(7).backend(Backend::EngineActors { threads: 2 }));
+    let cluster = traced_events(
+        &base_spec(7)
+            .backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }),
+    );
+    assert!(cluster.iter().any(|(ev, _)| ev.is_frame()), "cluster emits frame events");
+    assert!(!actors.iter().any(|(ev, _)| ev.is_frame()));
+    let cluster_filtered: Vec<_> =
+        cluster.into_iter().filter(|(ev, _)| !ev.is_frame()).collect();
+    assert_eq!(actors, cluster_filtered);
+}
+
+#[test]
+fn async_trace_is_deterministic_per_seed() {
+    let spec = base_spec(5)
+        .policy("straggler:0:4.0")
+        .backend(Backend::Async { threads: 2, max_staleness: 3 });
+    let a = traced_events(&spec);
+    let b = traced_events(&spec);
+    assert_eq!(a, b, "async traces are reproducible per seed");
+    assert!(a.iter().any(|(ev, _)| matches!(ev, TraceEvent::StaleExchange { .. })));
+}
+
+#[test]
+fn every_backend_exports_a_valid_chrome_trace() {
+    let backends = [
+        Backend::EngineSequential,
+        Backend::EngineActors { threads: 2 },
+        Backend::Async { threads: 2, max_staleness: 3 },
+        Backend::Cluster { shards: 2, transport: TransportKind::Loopback },
+    ];
+    for backend in backends {
+        let spec = base_spec(3).backend(backend);
+        let plan = experiment::plan(&spec).unwrap();
+        let mut sink = RingSink::new(1 << 17);
+        let mut tracer = Tracer::attached(&mut sink);
+        let result =
+            experiment::run_planned_traced(&spec, &plan, &mut NoopObserver, &mut tracer)
+                .unwrap();
+        drop(tracer);
+        let json = chrome_trace(&sink.records(), &result.snapshot.to_json());
+        let check = validate_chrome_trace(&json.to_string()).unwrap();
+        assert!(check.events > 0, "{:?}", spec.backend);
+        assert!(check.tracks >= 2, "{:?}", spec.backend);
+        assert_eq!(json.get("otherData"), Some(&result.snapshot.to_json()));
+    }
+}
