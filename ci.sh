@@ -40,6 +40,20 @@ echo "==> trace smoke (matcha run --trace + trace-check)"
 ./target/release/matcha trace-check --file /tmp/matcha_ci_trace.json
 rm -f /tmp/matcha_ci_trace.json
 
+echo "==> shard-node process smoke (two daemons + remote coordinator)"
+# The deployment shape end-to-end across real processes: two shard-node
+# daemons on the ports committed in cluster_remote.json, driven by a
+# remote-coordinator run of that same spec. `--once` makes each daemon
+# exit cleanly on the coordinator's Shutdown, so `wait` doubles as the
+# success check.
+./target/release/matcha shard-node --listen 127.0.0.1:7841 --once &
+NODE_A=$!
+./target/release/matcha shard-node --listen 127.0.0.1:7842 --once &
+NODE_B=$!
+sleep 1
+./target/release/matcha run --spec examples/specs/cluster_remote.json
+wait "$NODE_A" "$NODE_B"
+
 echo "==> bench smoke (--dry-run) + perf-trajectory gate"
 # Hotpath smoke includes the state-arena mixing sweep (asserts zero
 # allocations per iteration in the gossip mix hot path) and the
@@ -64,5 +78,11 @@ cargo bench --bench cluster_transport -- --dry-run
 test -f BENCH_cluster.json || { echo "BENCH_cluster.json not emitted"; exit 1; }
 tools/bench_regress --artifact BENCH_cluster.json \
   --history BENCH_history/cluster.jsonl --append
+# Shard-node pipeline smoke: real daemons on localhost, window sweep
+# (emits BENCH_node.json; exercises the pipelined remote coordinator).
+cargo bench --bench node_pipeline -- --dry-run
+test -f BENCH_node.json || { echo "BENCH_node.json not emitted"; exit 1; }
+tools/bench_regress --artifact BENCH_node.json \
+  --history BENCH_history/node.jsonl --append
 
 echo "CI OK"

@@ -1,0 +1,161 @@
+//! Shard-node pipeline bench: what command pipelining buys back from the
+//! network round-trip.
+//!
+//! The in-process cluster driver is strictly request/reply — every phase
+//! pays a full round-trip per shard, twice per mixing iteration. The
+//! remote coordinator (`matcha::node`) streams commands ahead of the
+//! replies instead, bounded by `RemoteOptions::window`. This bench runs
+//! the same MATCHA schedule against real shard-node daemons on localhost
+//! at increasing window depths, with the in-process TCP cluster as the
+//! unpipelined baseline, and asserts the window never changes the
+//! result — pipelining is a latency optimization, not a semantic one.
+//!
+//! Run: `cargo bench --bench node_pipeline` (append `-- --dry-run` for
+//! the CI smoke variant: tiny runs, no assertions). Emits
+//! `BENCH_node.json` either way.
+
+use matcha::cluster::{ClusterResult, TransportKind};
+use matcha::experiment::{self, Backend, ExperimentResult, ExperimentSpec, ProblemSpec, Strategy};
+use matcha::json::Json;
+use matcha::node::{run_daemon, run_remote, DaemonOptions, RemoteOptions};
+use std::net::TcpListener;
+use std::time::Instant;
+
+fn base_spec(iters: usize, backend: Backend) -> ExperimentSpec {
+    ExperimentSpec::new("er:16:4:7")
+        .strategy(Strategy::Matcha { budget: 0.5 })
+        .problem(ProblemSpec::Quadratic { dim: 64, hetero: 1.0, noise_std: 0.2, seed: Some(7) })
+        .backend(backend)
+        .lr(0.02)
+        .iterations(iters)
+        .record_every(iters.max(1))
+        .seed(11)
+        .sampler_seed(5)
+}
+
+/// Serve a default shard-node daemon on an ephemeral localhost port from
+/// a background thread; return its address. `once: false`, so one daemon
+/// serves every run of the sweep back to back.
+fn spawn_daemon() -> String {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind daemon port");
+    let addr = listener.local_addr().expect("daemon addr").to_string();
+    let opts = DaemonOptions::default();
+    std::thread::spawn(move || run_daemon(listener, &opts));
+    addr
+}
+
+/// Run the spec `repeats` times through the unified runner; return the
+/// (identical) result and the fastest wall-clock in seconds.
+fn timed(spec: &ExperimentSpec, repeats: usize) -> (ExperimentResult, f64) {
+    let mut best = f64::INFINITY;
+    let mut result = None;
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        let r = experiment::run(spec).expect("bench run");
+        best = best.min(t0.elapsed().as_secs_f64());
+        result = Some(r);
+    }
+    (result.expect("at least one repeat"), best)
+}
+
+/// Run the remote spec `repeats` times at one pipeline window depth.
+fn timed_remote(spec: &ExperimentSpec, window: usize, repeats: usize) -> (ClusterResult, f64) {
+    let opts = RemoteOptions { window, ..RemoteOptions::default() };
+    let mut best = f64::INFINITY;
+    let mut result = None;
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        let r = run_remote(spec, &opts).expect("remote bench run");
+        best = best.min(t0.elapsed().as_secs_f64());
+        result = Some(r);
+    }
+    (result.expect("at least one repeat"), best)
+}
+
+fn main() {
+    let dry_run = std::env::args().any(|a| a == "--dry-run");
+    let (iters, repeats) = if dry_run { (20, 1) } else { (300, 3) };
+    let shards = 2usize;
+    let dim = 64usize;
+    let windows = [1usize, 2, 4, 8];
+    println!("=== shard-node pipeline: 16 workers over {shards} daemons, {iters} iters ===");
+
+    // Baseline: the in-process cluster backend over real localhost TCP —
+    // the same wire, strictly request/reply.
+    let (tcp, tcp_wall) = timed(
+        &base_spec(iters, Backend::Cluster { shards, transport: TransportKind::Tcp }),
+        repeats,
+    );
+
+    let addrs: Vec<String> = (0..shards).map(|_| spawn_daemon()).collect();
+    let spec = base_spec(
+        iters,
+        Backend::Cluster { shards, transport: TransportKind::Remote { addrs } },
+    );
+    let runs: Vec<(usize, ClusterResult, f64)> = windows
+        .iter()
+        .map(|&w| {
+            let (r, wall) = timed_remote(&spec, w, repeats);
+            (w, r, wall)
+        })
+        .collect();
+
+    let bytes_per_iter = runs[0].1.stats.total_bytes() as f64 / iters as f64;
+    let frames_per_iter = runs[0].1.stats.total_frames() as f64 / iters as f64;
+
+    let mut table =
+        matcha::benchkit::Table::new(&["mode", "wall (s)", "iters/s", "final loss"]);
+    table.row(&[
+        "cluster tcp (request/reply)".to_string(),
+        format!("{tcp_wall:.3}"),
+        format!("{:.1}", iters as f64 / tcp_wall.max(1e-9)),
+        format!("{:.5}", tcp.final_loss()),
+    ]);
+    for (w, r, wall) in &runs {
+        table.row(&[
+            format!("shard-node window={w}"),
+            format!("{wall:.3}"),
+            format!("{:.1}", iters as f64 / wall.max(1e-9)),
+            format!("{:.5}", r.run.metrics.last("loss_vs_iter").unwrap_or(f64::NAN)),
+        ]);
+    }
+    table.print();
+    println!("bytes/iter on the wire: {bytes_per_iter:.0} ({frames_per_iter:.1} frames)");
+
+    let mut summary = vec![
+        ("mode".to_string(), Json::Str(if dry_run { "dry" } else { "full" }.into())),
+        ("workers".to_string(), Json::Num(16.0)),
+        ("shards".to_string(), Json::Num(shards as f64)),
+        ("iterations".to_string(), Json::Num(iters as f64)),
+        ("dim".to_string(), Json::Num(dim as f64)),
+        ("bytes_per_iter".to_string(), Json::Num(bytes_per_iter)),
+        ("frames_per_iter".to_string(), Json::Num(frames_per_iter)),
+        ("wall_tcp_cluster_s".to_string(), Json::Num(tcp_wall)),
+        (
+            "pipeline_speedup_w8".to_string(),
+            Json::Num(runs[0].2 / runs[runs.len() - 1].2.max(1e-9)),
+        ),
+    ];
+    for (w, _, wall) in &runs {
+        summary.push((format!("wall_window_{w}_s"), Json::Num(*wall)));
+    }
+    let json = Json::Obj(summary.into_iter().collect());
+    std::fs::write("BENCH_node.json", json.to_string()).expect("write BENCH_node.json");
+    println!("\nwrote BENCH_node.json");
+
+    if dry_run {
+        println!("dry-run: skipping assertions");
+        return;
+    }
+    for (w, r, _) in &runs {
+        assert_eq!(
+            r.run.final_mean, tcp.final_mean,
+            "window={w} must match the in-process TCP cluster bit-for-bit"
+        );
+        assert_eq!(
+            r.stats.total_bytes(),
+            runs[0].1.stats.total_bytes(),
+            "window={w} must put identical bytes on the wire"
+        );
+    }
+}

@@ -106,6 +106,16 @@ COMMANDS
              'unbounded' is pure AD-PSGD; cluster: workers partitioned over N
              transport-separated shards speaking the wire format — loopback
              is bit-for-bit equal to actors, tcp runs over localhost sockets)
+  shard-node --listen HOST:PORT [--once] [--io-timeout-ms N] [--drop-after N]
+             serve one cluster shard as a standalone daemon: a remote
+             coordinator (run --spec with backend \"cluster\" and
+             \"transport\": {\"tcp\": [\"host:port\", ...]}) assigns it a shard
+             and the full spec over the wire, and the daemon rebuilds the
+             identical workload and keeps its session across reconnects.
+             --once exits after the first completed run (CI-friendly);
+             --io-timeout-ms bounds mid-session peer silence (0 = wait
+             forever); --drop-after N drops a connection after N commands
+             once (fault injection for reconnect testing)
   sweep      --graph SPEC --budgets A,B,... --iters N [--threads T] [--serial]
              [--spec FILE] [--backend sim|engine|async] parallel budget sweep
              across cores; finished points stream as JSON lines before the
@@ -150,6 +160,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         "schedule" => cmd_schedule(&args),
         "sim" => cmd_sim(&args),
         "engine" => cmd_engine(&args),
+        "shard-node" => cmd_shard_node(&args),
         "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "info" => cmd_info(&args),
@@ -487,14 +498,33 @@ fn cmd_engine(args: &Args) -> Result<(), String> {
     }
     if let Some(stats) = &result.cluster_stats {
         println!(
-            "wire: transport {}, {} frames / {} bytes across {} links",
+            "wire: transport {}, {} frames / {} bytes across {} links \
+             ({} bytes genuinely cross-shard)",
             stats.transport.name(),
             stats.total_frames(),
             stats.total_bytes(),
-            stats.per_link.len()
+            stats.per_link.len(),
+            stats.remote_bytes()
         );
     }
     save_metrics(args, &result.metrics)
+}
+
+/// `matcha shard-node`: block serving one cluster shard until a
+/// coordinator finishes a run (with `--once`) or the process is killed.
+fn cmd_shard_node(args: &Args) -> Result<(), String> {
+    let Some(addr) = args.flags.get("listen") else {
+        return Err("shard-node: --listen HOST:PORT is required".into());
+    };
+    let opts = crate::node::DaemonOptions {
+        once: args.bool("once"),
+        io_timeout_ms: args.usize_or("io-timeout-ms", 0)? as u64,
+        drop_after: match args.flags.get("drop-after") {
+            None => None,
+            Some(v) => Some(v.parse().map_err(|e| format!("--drop-after: {e}"))?),
+        },
+    };
+    crate::node::listen_and_serve(addr, &opts)
 }
 
 /// Streams one JSON line per finished sweep point (completion order).
@@ -1064,6 +1094,21 @@ mod tests {
             "engine", "--graph", "ring:4", "--backend", "async", "--max-staleness", "lots",
         ]));
         assert!(r.unwrap_err().contains("--max-staleness"));
+    }
+
+    #[test]
+    fn shard_node_requires_listen_and_rejects_bad_flags() {
+        assert!(run(&sv(&["shard-node"])).unwrap_err().contains("--listen"));
+        let r = run(&sv(&[
+            "shard-node", "--listen", "127.0.0.1:0", "--drop-after", "soon",
+        ]));
+        assert!(r.unwrap_err().contains("--drop-after"));
+        let r = run(&sv(&[
+            "shard-node", "--listen", "127.0.0.1:0", "--io-timeout-ms", "many",
+        ]));
+        assert!(r.unwrap_err().contains("--io-timeout-ms"));
+        // An unbindable address fails fast instead of serving.
+        assert!(run(&sv(&["shard-node", "--listen", "256.0.0.1:0"])).is_err());
     }
 
     #[test]

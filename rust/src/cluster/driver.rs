@@ -71,10 +71,12 @@ impl Default for ClusterConfig {
 /// peer row into the Mix frame, including rows whose peer lives on the
 /// same shard — a uniform protocol that keeps the staging layout
 /// identical to the in-process actor batches (and the simultaneous-mix
-/// snapshot semantics trivially correct). Intra-shard rows therefore
-/// count as wire bytes too; suppressing them (reading local peers from
-/// a pre-mix segment snapshot instead) is a planned optimization — see
-/// the ROADMAP — that would make these stats pure inter-node traffic.
+/// snapshot semantics trivially correct). The raw link counters
+/// therefore include intra-shard rows; the driver accounts those at
+/// staging time into [`LinkStats::intra_bytes`], and
+/// [`Self::remote_bytes`] / [`LinkStats::remote_bytes`] report the
+/// traffic that genuinely crossed shards — the number wire-efficiency
+/// comparisons (and `wire_bytes` in sweep JSON lines) use.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterStats {
     pub transport: TransportKind,
@@ -83,9 +85,17 @@ pub struct ClusterStats {
 }
 
 impl ClusterStats {
-    /// Total bytes on the wire across all links, both directions.
+    /// Total bytes on the wire across all links, both directions
+    /// (intra-shard staged rows included — the raw link counter).
     pub fn total_bytes(&self) -> u64 {
         self.per_link.iter().map(|l| l.total_bytes()).sum()
+    }
+
+    /// Bytes that genuinely had to cross shards: [`Self::total_bytes`]
+    /// minus the staged Mix rows whose peer lived on the receiving
+    /// shard.
+    pub fn remote_bytes(&self) -> u64 {
+        self.per_link.iter().map(|l| l.remote_bytes()).sum()
     }
 
     /// Total frames across all links, both directions.
@@ -119,9 +129,11 @@ pub struct ClusterResult {
 /// Replays a materialized [`RoundPlan`] as a [`TopologySampler`], so the
 /// engine's drive loop consumes the cluster's apriori schedule exactly
 /// as it would consume the live sampler (same activation sequence: the
-/// plan was generated from the same sampler stream).
-struct PlanReplay<'a> {
-    plan: &'a RoundPlan,
+/// plan was generated from the same sampler stream). Shared with the
+/// remote coordinator ([`crate::node`]), which replays the identical
+/// schedule against standalone daemons.
+pub(crate) struct PlanReplay<'a> {
+    pub(crate) plan: &'a RoundPlan,
 }
 
 impl TopologySampler for PlanReplay<'_> {
@@ -146,6 +158,44 @@ impl TopologySampler for PlanReplay<'_> {
 // Shard node: serve wire commands against an ActorShard
 // ---------------------------------------------------------------------
 
+/// Convert one coordinator phase frame (`Step` or `Mix`) into the
+/// actor-shard command, recycling `batch` and `ret`. Shared between the
+/// in-process serve loop below and the standalone shard-node daemon
+/// ([`crate::node`]), so both execute byte-identical frames identically.
+pub(crate) fn phase_cmd_from_wire(
+    msg: WireMsg,
+    dim: usize,
+    batch: &mut MixBatch,
+    ret: &mut Vec<f64>,
+) -> Result<ShardCmd, WireError> {
+    match msg {
+        WireMsg::Step { lr } => Ok(ShardCmd::Step { lr, ret: std::mem::take(ret) }),
+        WireMsg::Mix { k, alpha, dim: d, msgs, staging } => {
+            if d as usize != dim {
+                return Err(WireError::Inconsistent(format!(
+                    "mix frame dim {d} does not match shard dim {dim}"
+                )));
+            }
+            batch.msgs.clear();
+            batch.msgs.extend(msgs.iter().map(|m| MsgMeta {
+                slot: m.slot as usize,
+                matching: m.matching as usize,
+                u: m.u as usize,
+                v: m.v as usize,
+            }));
+            batch.staging.clear();
+            batch.staging.extend_from_slice(&staging);
+            Ok(ShardCmd::Mix {
+                k: k as usize,
+                alpha,
+                batch: std::mem::take(batch),
+                ret: std::mem::take(ret),
+            })
+        }
+        other => Err(WireError::Inconsistent(format!("unexpected phase command {other:?}"))),
+    }
+}
+
 /// One shard node's serve loop: announce the shard id, then fold wire
 /// commands into the owned [`ActorShard`] until `Shutdown`. The frame
 /// scratch, state-return and mix-batch buffers are recycled across
@@ -162,30 +212,14 @@ fn serve_shard<P: Problem + ?Sized>(
     let mut body = Vec::new();
     let mut ret: Vec<f64> = Vec::new();
     let mut batch = MixBatch::default();
-    link.send_msg(&WireMsg::Hello { shard: shard_id as u32 }, &mut scratch)?;
+    link.send_msg(
+        &WireMsg::Hello { shard: shard_id as u32, proto: super::wire::PROTO_VERSION },
+        &mut scratch,
+    )?;
     loop {
         let cmd = match link.recv_msg(&mut body)? {
-            WireMsg::Step { lr } => ShardCmd::Step { lr, ret: std::mem::take(&mut ret) },
-            WireMsg::Mix { k, alpha, dim: d, msgs, staging } => {
-                assert_eq!(d as usize, dim, "mix frame dim mismatch");
-                batch.msgs.clear();
-                batch.msgs.extend(msgs.iter().map(|m| MsgMeta {
-                    slot: m.slot as usize,
-                    matching: m.matching as usize,
-                    u: m.u as usize,
-                    v: m.v as usize,
-                }));
-                batch.staging.clear();
-                batch.staging.extend_from_slice(&staging);
-                ShardCmd::Mix {
-                    k: k as usize,
-                    alpha,
-                    batch: std::mem::take(&mut batch),
-                    ret: std::mem::take(&mut ret),
-                }
-            }
             WireMsg::Shutdown => return Ok(()),
-            other => panic!("cluster shard {shard_id}: unexpected command {other:?}"),
+            msg => phase_cmd_from_wire(msg, dim, &mut batch, &mut ret)?,
         };
         let reply = shard.handle(cmd);
         if let Some(b) = reply.batch {
@@ -215,7 +249,16 @@ fn admit_tcp(stream: TcpStream) -> Result<(usize, TcpTransport), String> {
     let mut body = Vec::new();
     let hello = link.recv_msg(&mut body).map_err(|e| e.to_string())?;
     let shard = match hello {
-        WireMsg::Hello { shard } => shard as usize,
+        WireMsg::Hello { shard, proto } => {
+            if let Err(e) = super::wire::check_proto(proto) {
+                // Echo what we speak before dropping the link, so the
+                // mismatched peer can log something actionable.
+                let reject = WireMsg::VersionReject { supported: super::wire::PROTO_VERSION };
+                let _ = link.send_msg(&reject, &mut body);
+                return Err(e.to_string());
+            }
+            shard as usize
+        }
         other => return Err(format!("handshake expected Hello, got {other:?}")),
     };
     link.stream()
@@ -248,11 +291,22 @@ struct ClusterExec<'a> {
     /// Per-link stats snapshot taken at each phase start, so the phase's
     /// wire traffic can be counted as a delta (recycled across phases).
     prev_stats: Vec<LinkStats>,
+    /// Per-link count of staged Mix rows whose peer lived on the
+    /// receiving shard. Borrowed from the run entry point (drive
+    /// consumes the executor) so the intra/remote byte split can be
+    /// folded into [`ClusterStats`] after the run.
+    intra_rows: &'a mut [u64],
 }
 
 impl<'a> ClusterExec<'a> {
-    fn new(links: &'a mut [Box<dyn Transport>], workers: usize, dim: usize) -> Self {
+    fn new(
+        links: &'a mut [Box<dyn Transport>],
+        workers: usize,
+        dim: usize,
+        intra_rows: &'a mut [u64],
+    ) -> Self {
         let shards = links.len();
+        assert_eq!(intra_rows.len(), shards, "one intra-row counter per link");
         ClusterExec {
             links,
             workers,
@@ -263,6 +317,7 @@ impl<'a> ClusterExec<'a> {
             msgs: Vec::new(),
             staging: Vec::new(),
             prev_stats: vec![LinkStats::default(); shards],
+            intra_rows,
         }
     }
 
@@ -319,6 +374,11 @@ impl Executor for ClusterExec<'_> {
                 .unwrap_or_else(|e| panic!("cluster link {s}: {e}"));
         }
         self.collect(xs);
+        // The shards report their per-reply step counts, but the phase
+        // total is fixed by the partition — every worker steps exactly
+        // once — so the coordinator accounts it directly (the counter
+        // totals match the actor pool's reply-side accounting).
+        tracer.count(Counter::ShardSteps, self.workers as u64);
         self.account_traffic(tracer);
     }
 
@@ -347,6 +407,7 @@ impl Executor for ClusterExec<'_> {
                 xs,
                 &mut self.msgs,
                 &mut self.staging,
+                &mut self.intra_rows[s],
                 |slot, j, u, v| WireMeta {
                     slot: slot as u32,
                     matching: j as u32,
@@ -354,6 +415,10 @@ impl Executor for ClusterExec<'_> {
                     v: v as u32,
                 },
             );
+            // Staged-message count is decided here, at routing time, so
+            // the coordinator accounts the fold counter the actor pool
+            // accounts from its replies — identical totals.
+            tracer.count(Counter::ShardMsgsFolded, self.msgs.len() as u64);
             let msg = WireMsg::Mix {
                 k: k as u64,
                 alpha,
@@ -464,12 +529,22 @@ where
         )
     };
 
-    let listener = match config.transport {
+    if let TransportKind::Remote { .. } = &config.transport {
+        // Remote runs talk to pre-existing shard-node daemons with a
+        // pipelined executor; that coordinator lives in `crate::node`
+        // (spec-driven runs dispatch there automatically).
+        return Err(
+            "cluster: the remote transport is driven by the shard-node coordinator \
+             (crate::node::run_remote), not run_cluster"
+                .into(),
+        );
+    }
+    let listener = match &config.transport {
         TransportKind::Tcp => Some(
             TcpListener::bind(("127.0.0.1", 0))
                 .map_err(|e| format!("cluster: bind localhost listener: {e}"))?,
         ),
-        TransportKind::Loopback => None,
+        _ => None,
     };
 
     std::thread::scope(|scope| -> Result<ClusterResult, String> {
@@ -479,7 +554,8 @@ where
         // dialed in first).
         let mut slots: Vec<Option<Box<dyn Transport>>> = (0..shards).map(|_| None).collect();
         let mut body = Vec::new();
-        match config.transport {
+        match &config.transport {
+            TransportKind::Remote { .. } => unreachable!("remote rejected above"),
             TransportKind::Loopback => {
                 let mut raw: Vec<Box<dyn Transport>> = Vec::with_capacity(shards);
                 for s in 0..shards {
@@ -503,7 +579,11 @@ where
                         .recv_msg(&mut body)
                         .map_err(|e| format!("cluster: handshake: {e}"))?;
                     let shard = match hello {
-                        WireMsg::Hello { shard } => shard,
+                        WireMsg::Hello { shard, proto } => {
+                            super::wire::check_proto(proto)
+                                .map_err(|e| format!("cluster: handshake: {e}"))?;
+                            shard
+                        }
                         other => {
                             return Err(format!(
                                 "cluster: handshake expected Hello, got {other:?}"
@@ -595,7 +675,8 @@ where
             slots.into_iter().map(|l| l.expect("every shard slot handshaken")).collect();
 
         // The engine's barrier loop, verbatim, over the wire executor.
-        let exec = ClusterExec::new(&mut links, m, d);
+        let mut intra_rows = vec![0u64; shards];
+        let exec = ClusterExec::new(&mut links, m, d, &mut intra_rows);
         let mut replay = PlanReplay { plan: &plan };
         let result =
             drive(problem, matchings, &mut replay, policy, &config.run, exec, observer, tracer);
@@ -606,8 +687,18 @@ where
                 .map_err(|e| format!("cluster: shutdown shard {s}: {e}"))?;
         }
         let stats = ClusterStats {
-            transport: config.transport,
-            per_link: links.iter().map(|l| l.stats()).collect(),
+            transport: config.transport.clone(),
+            per_link: links
+                .iter()
+                .zip(&intra_rows)
+                .map(|(l, &rows)| {
+                    let mut ls = l.stats();
+                    // Each staged local-peer row carried 8·dim payload
+                    // bytes that never needed a wire.
+                    ls.intra_bytes = rows * 8 * d as u64;
+                    ls
+                })
+                .collect(),
         };
         Ok(ClusterResult {
             run: result.run,
@@ -709,5 +800,35 @@ mod tests {
         assert!(long.stats.total_frames() > short.stats.total_frames());
         let clock = WireClock::per_row(10, 1.0);
         assert!(long.stats.wire_units(clock) > short.stats.wire_units(clock));
+    }
+
+    #[test]
+    fn intra_shard_rows_split_out_of_remote_bytes() {
+        let g = crate::graph::ring(6);
+        let d = decompose(&g);
+        let p = quad(6);
+        let run = |shards: usize| {
+            let mut sampler = VanillaSampler::new(d.len());
+            let run_cfg = cfg(10, 0.2, 3);
+            let mut policy = AnalyticPolicy::matching_run_config(&run_cfg);
+            let cluster_cfg =
+                ClusterConfig { run: run_cfg, shards, transport: TransportKind::Loopback };
+            run_cluster(&p, &d.matchings, &mut sampler, &mut policy, &cluster_cfg).unwrap()
+        };
+        // Two shards over ring(6): round-robin puts consecutive worker
+        // ids on opposite shards, and every ring edge connects
+        // consecutive ids — no staged peer is ever local, so the whole
+        // byte count is genuine cross-shard traffic.
+        let two = run(2);
+        assert!(two.stats.total_bytes() > 0);
+        assert_eq!(two.stats.remote_bytes(), two.stats.total_bytes());
+        // One shard: every peer is local, so remote traffic is exactly
+        // the non-staging protocol overhead (headers, Step frames,
+        // replies) — strictly less than the raw total.
+        let one = run(1);
+        let intra: u64 = one.stats.per_link.iter().map(|l| l.intra_bytes).sum();
+        assert!(intra > 0, "single-shard mix payload must be counted intra");
+        assert_eq!(one.stats.remote_bytes(), one.stats.total_bytes() - intra);
+        assert!(one.stats.remote_bytes() < one.stats.total_bytes());
     }
 }

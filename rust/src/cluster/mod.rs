@@ -72,4 +72,7 @@ pub use driver::{
 pub use transport::{
     loopback_pair, LinkStats, LoopbackTransport, TcpTransport, Transport, TransportKind, WireClock,
 };
-pub use wire::{frame_len, WireError, WireMeta, WireMsg, MAX_FRAME_BYTES, WIRE_VERSION};
+pub use wire::{
+    check_proto, frame_len, WireError, WireMeta, WireMsg, MAX_FRAME_BYTES, PROTO_VERSION,
+    WIRE_VERSION,
+};

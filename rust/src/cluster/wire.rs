@@ -26,6 +26,14 @@
 /// Current wire protocol version (first body byte of every frame).
 pub const WIRE_VERSION: u8 = 1;
 
+/// Application-level protocol version carried inside [`WireMsg::Hello`].
+/// Distinct from [`WIRE_VERSION`]: the frame byte guards the *encoding*,
+/// this guards the *conversation* (command set, handshake order). A
+/// coordinator that sees a mismatched `proto` answers with
+/// [`WireMsg::VersionReject`] echoing what it supports and fails with
+/// [`WireError::ProtocolMismatch`].
+pub const PROTO_VERSION: u32 = 1;
+
 /// Hard upper bound on a frame body, in bytes (1 GiB). A length prefix
 /// above this is rejected before any allocation happens — the guard
 /// against hostile or corrupted prefixes like `0xffff_ffff`.
@@ -40,6 +48,9 @@ const TAG_STEP: u8 = 0x02;
 const TAG_MIX: u8 = 0x03;
 const TAG_STATES: u8 = 0x04;
 const TAG_SHUTDOWN: u8 = 0x05;
+const TAG_ASSIGN: u8 = 0x06;
+const TAG_VERSION_REJECT: u8 = 0x07;
+const TAG_RESUME: u8 = 0x08;
 
 /// Typed decode/transport failure. Every malformed input maps to one of
 /// these — the wire layer never panics on bytes it did not produce.
@@ -59,6 +70,13 @@ pub enum WireError {
     Inconsistent(String),
     /// Transport-level I/O failure (TCP reset, closed channel, ...).
     Io(String),
+    /// A read or write exceeded the transport's configured deadline —
+    /// the peer is silent or gone, distinct from a hard I/O failure so
+    /// lifecycle code can choose to reconnect instead of abort.
+    TimedOut,
+    /// The peer's [`WireMsg::Hello`] carried an application protocol
+    /// version other than [`PROTO_VERSION`].
+    ProtocolMismatch { got: u32, supported: u32 },
 }
 
 impl std::fmt::Display for WireError {
@@ -76,6 +94,10 @@ impl std::fmt::Display for WireError {
             }
             WireError::Inconsistent(msg) => write!(f, "wire: inconsistent frame: {msg}"),
             WireError::Io(msg) => write!(f, "wire: transport I/O: {msg}"),
+            WireError::TimedOut => write!(f, "wire: peer deadline exceeded (timed out)"),
+            WireError::ProtocolMismatch { got, supported } => {
+                write!(f, "wire: protocol version {got} not supported (coordinator speaks {supported})")
+            }
         }
     }
 }
@@ -101,8 +123,9 @@ pub struct WireMeta {
 #[derive(Clone, Debug, PartialEq)]
 pub enum WireMsg {
     /// Shard → coordinator, once per connection: identifies which shard
-    /// this link belongs to (TCP accept order is nondeterministic).
-    Hello { shard: u32 },
+    /// this link belongs to (TCP accept order is nondeterministic) and
+    /// the application protocol version it speaks ([`PROTO_VERSION`]).
+    Hello { shard: u32, proto: u32 },
     /// Coordinator → shard: run one local SGD step on every owned
     /// worker at learning rate `lr`.
     Step { lr: f64 },
@@ -116,6 +139,22 @@ pub enum WireMsg {
     States { shard: u32, dim: u32, states: Vec<f64> },
     /// Coordinator → shard: the run is over; close the link.
     Shutdown,
+    /// Coordinator → standalone node, first frame of every connection:
+    /// which shard of how many this node is, plus the full experiment
+    /// spec as JSON so the node can rebuild the identical workload and
+    /// initial iterates (the bit-for-bit contract needs the node to
+    /// derive everything from the same seeds).
+    Assign { shard: u32, shards: u32, spec_json: String },
+    /// Coordinator → node, instead of proceeding past a `Hello` whose
+    /// `proto` it cannot speak: echoes the supported version so the
+    /// node can log a useful error before the link closes.
+    VersionReject { supported: u32 },
+    /// Node → coordinator, right after `Hello`: the node's cumulative
+    /// progress (`done` commands executed, shard-side step/fold work
+    /// counters) and its current iterates, so a coordinator can resume
+    /// a rejoining shard from the last fully-acked round instead of
+    /// restarting the run.
+    Resume { done: u64, steps: u64, folded: u64, dim: u32, states: Vec<f64> },
 }
 
 impl WireMsg {
@@ -127,9 +166,10 @@ impl WireMsg {
         out.extend_from_slice(&[0, 0, 0, 0]); // length prefix backpatched below
         out.push(WIRE_VERSION);
         match self {
-            WireMsg::Hello { shard } => {
+            WireMsg::Hello { shard, proto } => {
                 out.push(TAG_HELLO);
                 put_u32(out, *shard);
+                put_u32(out, *proto);
             }
             WireMsg::Step { lr } => {
                 out.push(TAG_STEP);
@@ -162,6 +202,27 @@ impl WireMsg {
                 }
             }
             WireMsg::Shutdown => out.push(TAG_SHUTDOWN),
+            WireMsg::Assign { shard, shards, spec_json } => {
+                out.push(TAG_ASSIGN);
+                put_u32(out, *shard);
+                put_u32(out, *shards);
+                put_str(out, spec_json);
+            }
+            WireMsg::VersionReject { supported } => {
+                out.push(TAG_VERSION_REJECT);
+                put_u32(out, *supported);
+            }
+            WireMsg::Resume { done, steps, folded, dim, states } => {
+                out.push(TAG_RESUME);
+                put_u64(out, *done);
+                put_u64(out, *steps);
+                put_u64(out, *folded);
+                put_u32(out, *dim);
+                put_u32(out, u32::try_from(states.len()).expect("state length fits u32"));
+                for &x in states {
+                    put_f64(out, x);
+                }
+            }
         }
         let body = out.len() - at - FRAME_HEADER_BYTES;
         assert!(body <= MAX_FRAME_BYTES, "frame body {body} exceeds MAX_FRAME_BYTES");
@@ -179,7 +240,7 @@ impl WireMsg {
         }
         let tag = r.u8()?;
         let msg = match tag {
-            TAG_HELLO => WireMsg::Hello { shard: r.u32()? },
+            TAG_HELLO => WireMsg::Hello { shard: r.u32()?, proto: r.u32()? },
             TAG_STEP => WireMsg::Step { lr: r.f64()? },
             TAG_MIX => {
                 let k = r.u64()?;
@@ -225,6 +286,31 @@ impl WireMsg {
                 WireMsg::States { shard, dim, states }
             }
             TAG_SHUTDOWN => WireMsg::Shutdown,
+            TAG_ASSIGN => {
+                let shard = r.u32()?;
+                let shards = r.u32()?;
+                let spec_json = r.string()?;
+                WireMsg::Assign { shard, shards, spec_json }
+            }
+            TAG_VERSION_REJECT => WireMsg::VersionReject { supported: r.u32()? },
+            TAG_RESUME => {
+                let done = r.u64()?;
+                let steps = r.u64()?;
+                let folded = r.u64()?;
+                let dim = r.u32()?;
+                let count = r.u32()? as usize;
+                if dim > 0 && count % dim as usize != 0 {
+                    return Err(WireError::Inconsistent(format!(
+                        "resume state length {count} is not a multiple of dim {dim}"
+                    )));
+                }
+                r.need(count, 8)?;
+                let mut states = Vec::with_capacity(count);
+                for _ in 0..count {
+                    states.push(r.f64()?);
+                }
+                WireMsg::Resume { done, steps, folded, dim, states }
+            }
             other => return Err(WireError::BadTag(other)),
         };
         if r.at != body.len() {
@@ -234,6 +320,18 @@ impl WireMsg {
             )));
         }
         Ok(msg)
+    }
+}
+
+/// Validate a peer `Hello`'s application protocol version against
+/// [`PROTO_VERSION`]. Callers that hold the link (the coordinator, the
+/// shard-node daemon) send a [`WireMsg::VersionReject`] echoing the
+/// supported version before surfacing the error.
+pub fn check_proto(proto: u32) -> Result<(), WireError> {
+    if proto == PROTO_VERSION {
+        Ok(())
+    } else {
+        Err(WireError::ProtocolMismatch { got: proto, supported: PROTO_VERSION })
     }
 }
 
@@ -260,6 +358,13 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
 
 fn put_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Strings travel as `[len: u64 LE][UTF-8 bytes]` — used only for the
+/// spec JSON in [`WireMsg::Assign`], which is small and infrequent.
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
 }
 
 /// Bounds-checked cursor over a frame body.
@@ -310,6 +415,17 @@ impl Reader<'_> {
     fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
     }
+
+    fn string(&mut self) -> Result<String, WireError> {
+        let len = self.u64()?;
+        let len = usize::try_from(len).map_err(|_| WireError::FrameTooLarge(len))?;
+        if len > MAX_FRAME_BYTES {
+            return Err(WireError::FrameTooLarge(len as u64));
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Inconsistent("string payload is not UTF-8".into()))
+    }
 }
 
 #[cfg(test)]
@@ -326,8 +442,11 @@ mod tests {
     }
 
     fn random_msg(rng: &mut Rng) -> WireMsg {
-        match rng.next_u64() % 5 {
-            0 => WireMsg::Hello { shard: (rng.next_u64() % 1000) as u32 },
+        match rng.next_u64() % 8 {
+            0 => WireMsg::Hello {
+                shard: (rng.next_u64() % 1000) as u32,
+                proto: (rng.next_u64() % 4) as u32,
+            },
             1 => WireMsg::Step { lr: rng.normal() },
             2 => {
                 let dim = (rng.next_u64() % 7) as usize + 1;
@@ -358,6 +477,28 @@ mod tests {
                     states: (0..rows * dim).map(|_| rng.normal()).collect(),
                 }
             }
+            4 => {
+                let len = (rng.next_u64() % 48) as usize;
+                let spec_json: String =
+                    (0..len).map(|_| (b'a' + (rng.next_u64() % 26) as u8) as char).collect();
+                WireMsg::Assign {
+                    shard: (rng.next_u64() % 32) as u32,
+                    shards: (rng.next_u64() % 32) as u32 + 1,
+                    spec_json,
+                }
+            }
+            5 => WireMsg::VersionReject { supported: (rng.next_u64() % 8) as u32 },
+            6 => {
+                let dim = (rng.next_u64() % 5) as usize + 1;
+                let rows = (rng.next_u64() % 6) as usize;
+                WireMsg::Resume {
+                    done: rng.next_u64() % (1 << 40),
+                    steps: rng.next_u64() % (1 << 40),
+                    folded: rng.next_u64() % (1 << 40),
+                    dim: dim as u32,
+                    states: (0..rows * dim).map(|_| rng.normal()).collect(),
+                }
+            }
             _ => WireMsg::Shutdown,
         }
     }
@@ -365,7 +506,7 @@ mod tests {
     #[test]
     fn every_variant_roundtrips() {
         let msgs = [
-            WireMsg::Hello { shard: 7 },
+            WireMsg::Hello { shard: 7, proto: PROTO_VERSION },
             WireMsg::Step { lr: 0.03 },
             WireMsg::Mix {
                 k: 42,
@@ -376,6 +517,19 @@ mod tests {
             },
             WireMsg::States { shard: 1, dim: 3, states: vec![0.0, f64::MIN, f64::MAX] },
             WireMsg::Shutdown,
+            WireMsg::Assign {
+                shard: 1,
+                shards: 2,
+                spec_json: "{\"graph\": \"ring:8\", \"α\": true}".into(),
+            },
+            WireMsg::VersionReject { supported: PROTO_VERSION },
+            WireMsg::Resume {
+                done: 120,
+                steps: 480,
+                folded: 96,
+                dim: 2,
+                states: vec![1.0, -0.5, 3.25, 0.0],
+            },
         ];
         for msg in &msgs {
             assert_eq!(&roundtrip(msg), msg);
@@ -493,6 +647,58 @@ mod tests {
     fn inconsistent_states_length_is_rejected() {
         let mut body = vec![WIRE_VERSION, TAG_STATES];
         body.extend_from_slice(&0u32.to_le_bytes()); // shard
+        body.extend_from_slice(&3u32.to_le_bytes()); // dim
+        body.extend_from_slice(&4u32.to_le_bytes()); // count: not a multiple of 3
+        body.extend_from_slice(&[0u8; 32]);
+        match WireMsg::decode(&body) {
+            Err(WireError::Inconsistent(msg)) => assert!(msg.contains("multiple"), "{msg}"),
+            other => panic!("expected Inconsistent, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_with_wrong_proto_version_is_a_typed_error() {
+        // The frame-level version byte is fine — the *application*
+        // version inside the Hello is what mismatches. check_proto is
+        // the coordinator/daemon-side gate.
+        let msg = WireMsg::Hello { shard: 2, proto: PROTO_VERSION + 9 };
+        let WireMsg::Hello { proto, .. } = roundtrip(&msg) else {
+            panic!("variant changed in flight")
+        };
+        assert_eq!(
+            check_proto(proto),
+            Err(WireError::ProtocolMismatch {
+                got: PROTO_VERSION + 9,
+                supported: PROTO_VERSION
+            })
+        );
+        assert_eq!(check_proto(PROTO_VERSION), Ok(()));
+        // The rejection frame a coordinator answers with round-trips.
+        assert_eq!(
+            roundtrip(&WireMsg::VersionReject { supported: PROTO_VERSION }),
+            WireMsg::VersionReject { supported: PROTO_VERSION }
+        );
+    }
+
+    #[test]
+    fn assign_rejects_non_utf8_spec_payload() {
+        let mut frame = Vec::new();
+        WireMsg::Assign { shard: 0, shards: 1, spec_json: "ok".into() }.encode(&mut frame);
+        let mut body = frame[FRAME_HEADER_BYTES..].to_vec();
+        let n = body.len();
+        body[n - 1] = 0xff; // continuation byte with no lead → invalid UTF-8
+        match WireMsg::decode(&body) {
+            Err(WireError::Inconsistent(msg)) => assert!(msg.contains("UTF-8"), "{msg}"),
+            other => panic!("expected Inconsistent, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resume_with_inconsistent_state_length_is_rejected() {
+        let mut body = vec![WIRE_VERSION, TAG_RESUME];
+        body.extend_from_slice(&1u64.to_le_bytes()); // done
+        body.extend_from_slice(&2u64.to_le_bytes()); // steps
+        body.extend_from_slice(&3u64.to_le_bytes()); // folded
         body.extend_from_slice(&3u32.to_le_bytes()); // dim
         body.extend_from_slice(&4u32.to_le_bytes()); // count: not a multiple of 3
         body.extend_from_slice(&[0u8; 32]);

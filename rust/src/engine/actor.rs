@@ -164,6 +164,15 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
         ActorShard::new(problem, compression, seed, shard, workers, seg, shard_rngs)
     }
 
+    /// The shard's current iterates (slot order, flat `slots × dim`) —
+    /// exactly what a [`ShardReply`] carries. The shard-node daemon
+    /// ([`crate::node`]) sends this in its `Resume` handshake frame so a
+    /// reconnecting coordinator can re-synchronize its arena with work
+    /// whose replies were lost with the previous connection.
+    pub fn states(&self) -> &[f64] {
+        self.seg.as_slice()
+    }
+
     /// Copy the segment into the recycled return buffer.
     fn states_into(&self, mut ret: Vec<f64>) -> Vec<f64> {
         ret.clear();

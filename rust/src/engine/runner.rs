@@ -79,6 +79,22 @@ pub(crate) trait Executor {
         xs: &mut StateMatrix,
         tracer: &mut Tracer<'_>,
     );
+
+    /// Make the arena authoritative **now**: a pipelined executor (the
+    /// remote coordinator of [`crate::node`]) drains every in-flight
+    /// reply into `xs`. [`drive`] calls this before reading the arena
+    /// for metric records, so pipelining never changes what gets
+    /// recorded. Synchronous executors have nothing in flight — the
+    /// default is a no-op.
+    fn flush(&mut self, _xs: &mut StateMatrix, _tracer: &mut Tracer<'_>) {}
+
+    /// An unrecoverable transport failure the executor absorbed (it
+    /// cannot return errors through `step`/`mix`). [`drive`] checks this
+    /// each iteration and stops replaying the schedule early; the owner
+    /// of the executor surfaces the error after `drive` returns.
+    fn poisoned(&self) -> bool {
+        false
+    }
 }
 
 /// Route each live activated edge of a round to both of its endpoints,
@@ -122,6 +138,7 @@ pub(crate) fn stage_shard_messages<M>(
     xs: &StateMatrix,
     msgs: &mut Vec<M>,
     staging: &mut Vec<f64>,
+    intra_rows: &mut u64,
     make: impl Fn(usize, usize, usize, usize) -> M,
 ) {
     msgs.clear();
@@ -129,6 +146,13 @@ pub(crate) fn stage_shard_messages<M>(
     for (slot, w) in shard_workers(shard, shards, workers).enumerate() {
         for &(j, u, v) in &per[w] {
             let peer = if w == u { v } else { u };
+            // A peer on the receiving shard means this staged row never
+            // needed a wire — the report-only intra/remote byte split
+            // of `LinkStats` keys off this count (round-robin
+            // assignment: worker w lives on shard w % shards).
+            if peer % shards == shard {
+                *intra_rows += 1;
+            }
             msgs.push(make(slot, j, u, v));
             staging.extend_from_slice(xs.row(peer));
         }
@@ -269,6 +293,7 @@ impl Executor for ActorExec<'_> {
                 xs,
                 &mut batch.msgs,
                 &mut batch.staging,
+                &mut 0, // in-process: the intra/remote split is wire-only
                 |slot, j, u, v| MsgMeta { slot, matching: j, u, v },
             );
             let ret = self.rets[s].take().expect("return buffer leased out");
@@ -429,6 +454,12 @@ where
     observer.on_record(0, 0.0, &metrics);
 
     for k in 0..config.iterations {
+        if exec.poisoned() {
+            // The executor hit an unrecoverable transport failure:
+            // replaying more schedule would only queue commands into a
+            // dead link. Its owner reports the error after drive returns.
+            break;
+        }
         let t0 = clock.elapsed();
 
         // --- compute phase (barrier at the slowest worker) -----------
@@ -522,11 +553,15 @@ where
             lr *= config.lr_decay;
         }
         if (k + 1) % config.record_every == 0 || k + 1 == config.iterations {
+            // A pipelined executor may still have replies in flight;
+            // records must read the same arena a synchronous run would.
+            exec.flush(&mut xs, tracer);
             record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics);
             observer.on_record(k + 1, now, &metrics);
         }
         observer.on_iteration(k + 1, now, total_comm);
     }
+    exec.flush(&mut xs, tracer);
 
     EngineResult {
         run: RunResult {

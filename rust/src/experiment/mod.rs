@@ -55,6 +55,7 @@ mod spec;
 
 pub use observer::{NoopObserver, Observer};
 pub use plan::{plan, Plan};
+pub(crate) use run::{build_problem, BuiltProblem};
 pub use run::{
     run, run_observed, run_planned, run_planned_traced, run_sweep, ExperimentResult,
 };

@@ -12,7 +12,7 @@
 use super::observer::{NoopObserver, Observer};
 use super::plan::{plan, Plan};
 use super::spec::{Backend, ExperimentSpec, ProblemSpec};
-use crate::cluster::{run_cluster_traced, ClusterConfig, ClusterStats};
+use crate::cluster::{run_cluster_traced, ClusterConfig, ClusterStats, TransportKind};
 use crate::engine::{parse_policy, run_engine_traced, sweep_parallel_streaming, EngineConfig};
 use crate::gossip::{run_async_traced, AsyncConfig, AsyncStats};
 use crate::json::Json;
@@ -89,9 +89,13 @@ impl ExperimentResult {
                 },
             ),
             (
+                // Bytes that genuinely crossed shards: staged Mix rows
+                // whose peer lived on the receiving shard are split out
+                // (`LinkStats::intra_bytes`), so this is the number
+                // wire-efficiency comparisons want.
                 "wire_bytes",
                 match &self.cluster_stats {
-                    Some(s) => Json::Num(s.total_bytes() as f64),
+                    Some(s) => Json::Num(s.remote_bytes() as f64),
                     None => Json::Null,
                 },
             ),
@@ -183,13 +187,16 @@ fn num_or_null(x: f64) -> Json {
     }
 }
 
-/// The materialized workload. Kept private: callers talk specs.
-enum BuiltProblem {
+/// The materialized workload. Crate-visible (not public): external
+/// callers talk specs; the shard-node daemon and remote coordinator
+/// ([`crate::node`]) rebuild the identical workload from the spec JSON
+/// carried in the `Assign` handshake frame.
+pub(crate) enum BuiltProblem {
     Quad(QuadraticProblem),
     Logreg(LogisticProblem),
 }
 
-fn build_problem(spec: &ExperimentSpec, num_workers: usize) -> BuiltProblem {
+pub(crate) fn build_problem(spec: &ExperimentSpec, num_workers: usize) -> BuiltProblem {
     match &spec.problem {
         ProblemSpec::Quadratic { dim, hetero, noise_std, seed } => {
             // `None` derives the run seed exactly as the legacy CLI did.
@@ -281,12 +288,27 @@ pub fn run_planned_traced(
     observer: &mut dyn Observer,
     tracer: &mut Tracer<'_>,
 ) -> Result<ExperimentResult, String> {
+    // Remote cluster runs talk to pre-existing shard-node daemons; the
+    // pipelined coordinator in `crate::node` owns that path end to end
+    // (its own dial/handshake/reconnect lifecycle, same engine loop).
+    if let Backend::Cluster { transport: TransportKind::Remote { .. }, .. } = &spec.backend {
+        let r = crate::node::run_remote_planned_traced(
+            spec,
+            plan,
+            &crate::node::RemoteOptions::default(),
+            observer,
+            tracer,
+        )?;
+        let mut result = ExperimentResult::from_cluster(plan, r);
+        result.snapshot = MetricsSnapshot::from_registry(&tracer.registry);
+        return Ok(result);
+    }
     let cfg = plan.run_config(spec)?;
     let mut sampler = plan.sampler(spec.sampler_seed.unwrap_or(spec.seed));
     let problem = build_problem(spec, plan.graph.num_nodes());
     let matchings = &plan.decomposition.matchings;
 
-    let mut result = match spec.backend {
+    let mut result = match &spec.backend {
         Backend::SimReference => {
             let r = match &problem {
                 BuiltProblem::Quad(p) => {
@@ -331,7 +353,8 @@ pub fn run_planned_traced(
         Backend::Async { threads, max_staleness } => {
             let mut policy = parse_policy(&spec.policy, &plan.graph, &cfg)
                 .map_err(|e| format!("policy: {e}"))?;
-            let async_cfg = AsyncConfig { run: cfg, threads, max_staleness };
+            let async_cfg =
+                AsyncConfig { run: cfg, threads: *threads, max_staleness: *max_staleness };
             let r = match &problem {
                 BuiltProblem::Quad(p) => run_async_traced(
                     p,
@@ -357,7 +380,8 @@ pub fn run_planned_traced(
         Backend::Cluster { shards, transport } => {
             let mut policy = parse_policy(&spec.policy, &plan.graph, &cfg)
                 .map_err(|e| format!("policy: {e}"))?;
-            let cluster_cfg = ClusterConfig { run: cfg, shards, transport };
+            let cluster_cfg =
+                ClusterConfig { run: cfg, shards: *shards, transport: transport.clone() };
             let r = match &problem {
                 BuiltProblem::Quad(p) => run_cluster_traced(
                     p,
@@ -409,8 +433,8 @@ pub fn run_sweep(
     match base.backend {
         Backend::EngineActors { .. } => base.backend = Backend::EngineSequential,
         // The cluster backend's per-point results are identical to the
-        // sequential engine's; sweeps do not need a shard fleet per
-        // point.
+        // sequential engine's; sweeps do not need a shard fleet (or, for
+        // the remote transport, a daemon fleet) per point.
         Backend::Cluster { .. } => base.backend = Backend::EngineSequential,
         Backend::Async { threads: t, max_staleness } if t > 1 => {
             base.backend = Backend::Async { threads: 1, max_staleness };

@@ -147,7 +147,7 @@ impl ProblemSpec {
 /// the step/mix kernel (`sim::kernel`); the barrier backends agree
 /// bit-for-bit per seed under the analytic delay policy, and the async
 /// backend joins them at `max_staleness = 0`.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Backend {
     /// The sequential reference simulator with closed-form time
     /// accounting ([`crate::sim::run_decentralized`]).
@@ -173,7 +173,9 @@ pub enum Backend {
     /// nodes, phase commands serialized through the versioned wire
     /// format. `loopback` is deterministic and bit-for-bit equal to the
     /// actors backend per seed; `tcp` runs the same schedule over real
-    /// localhost sockets. Shard count never changes results.
+    /// localhost sockets; `{"tcp": ["host:port", ...]}` connects to
+    /// standalone shard-node daemons ([`crate::node`]), one shard per
+    /// listed address. Shard count never changes results.
     Cluster { shards: usize, transport: TransportKind },
 }
 
@@ -525,6 +527,27 @@ impl ExperimentSpec {
                 );
             }
         }
+        if let Backend::Cluster { shards, transport: TransportKind::Remote { addrs } } =
+            &self.backend
+        {
+            if addrs.is_empty() {
+                return Err(
+                    "backend: remote transport needs at least one \"host:port\" node address"
+                        .into(),
+                );
+            }
+            if addrs.iter().any(|a| a.is_empty()) {
+                return Err("backend: remote node addresses must be non-empty strings".into());
+            }
+            if *shards != addrs.len() {
+                return Err(format!(
+                    "backend: remote cluster lists {} node addresses but shards = {shards} \
+                     (each listed shard-node daemon hosts exactly one shard; drop 'shards' \
+                     to default it to the address count)",
+                    addrs.len()
+                ));
+            }
+        }
         if let Some(trace) = &self.trace {
             if trace.path.is_empty() {
                 return Err("trace: path must be non-empty".into());
@@ -604,26 +627,38 @@ impl ExperimentSpec {
             }
         };
         let mut backend = vec![("kind", Json::Str(self.backend.name().into()))];
-        match self.backend {
+        match &self.backend {
             Backend::EngineActors { threads } => {
-                backend.push(("threads", Json::Num(threads as f64)));
+                backend.push(("threads", Json::Num(*threads as f64)));
             }
             Backend::Async { threads, max_staleness } => {
-                backend.push(("threads", Json::Num(threads as f64)));
+                backend.push(("threads", Json::Num(*threads as f64)));
                 // The unbounded AD-PSGD sentinel round-trips as `null`
                 // (the usize value itself cannot survive a JSON number).
                 backend.push((
                     "max_staleness",
-                    if max_staleness == crate::gossip::UNBOUNDED_STALENESS {
+                    if *max_staleness == crate::gossip::UNBOUNDED_STALENESS {
                         Json::Null
                     } else {
-                        Json::Num(max_staleness as f64)
+                        Json::Num(*max_staleness as f64)
                     },
                 ));
             }
             Backend::Cluster { shards, transport } => {
-                backend.push(("shards", Json::Num(shards as f64)));
-                backend.push(("transport", Json::Str(transport.name().into())));
+                backend.push(("shards", Json::Num(*shards as f64)));
+                // The in-process transports serialize as bare names; the
+                // remote transport carries its node list as an object so
+                // `parse(to_json()) == self` stays exact.
+                backend.push((
+                    "transport",
+                    match transport {
+                        TransportKind::Remote { addrs } => Json::obj(vec![(
+                            "tcp",
+                            Json::Arr(addrs.iter().map(|a| Json::Str(a.clone())).collect()),
+                        )]),
+                        named => Json::Str(named.name().into()),
+                    },
+                ));
             }
             _ => {}
         }
@@ -951,7 +986,7 @@ fn parse_backend(json: &Json) -> Result<Backend, String> {
             }
             "cluster" => Err(
                 "backend: 'cluster' needs {\"kind\": \"cluster\", \"shards\": N, \
-                 \"transport\": \"loopback\" | \"tcp\"}"
+                 \"transport\": \"loopback\" | \"tcp\" | {\"tcp\": [\"host:port\", ...]}}"
                     .into(),
             ),
             "async" => Ok(Backend::Async {
@@ -992,23 +1027,53 @@ fn parse_backend(json: &Json) -> Result<Backend, String> {
                 )?,
             },
         }),
-        "cluster" => Ok(Backend::Cluster {
-            shards: get_usize(obj, "backend", "shards", 2)?,
-            transport: match obj.get("transport") {
+        "cluster" => {
+            let transport = match obj.get("transport") {
                 None => TransportKind::Loopback,
-                Some(v) => {
-                    let name = v
-                        .as_str()
-                        .ok_or("backend: 'transport' must be a string (loopback | tcp)")?;
-                    TransportKind::parse(name).map_err(|e| format!("backend: {e}"))?
-                }
-            },
-        }),
+                Some(v) => parse_transport(v)?,
+            };
+            // A remote cluster hosts exactly one shard per listed daemon,
+            // so the shard count defaults to the address count.
+            let default_shards = match &transport {
+                TransportKind::Remote { addrs } => addrs.len().max(1),
+                _ => 2,
+            };
+            Ok(Backend::Cluster {
+                shards: get_usize(obj, "backend", "shards", default_shards)?,
+                transport,
+            })
+        }
         other => Err(format!(
             "backend: unknown kind '{other}' \
              (expected sim | engine | actors | async | cluster)"
         )),
     }
+}
+
+/// Parse a cluster `transport` value: a bare name (`loopback` | `tcp`)
+/// or the remote object form `{"tcp": ["host:port", ...]}` naming the
+/// shard-node daemons to connect to.
+fn parse_transport(json: &Json) -> Result<TransportKind, String> {
+    if let Some(name) = json.as_str() {
+        return TransportKind::parse(name).map_err(|e| format!("backend: {e}"));
+    }
+    let obj = json.as_object().ok_or(
+        "backend: 'transport' must be \"loopback\" | \"tcp\" | \
+         {\"tcp\": [\"host:port\", ...]}",
+    )?;
+    known_keys(obj, "backend: transport", &["tcp"])?;
+    let arr = obj.get("tcp").and_then(Json::as_array).ok_or(
+        "backend: remote transport needs a \"tcp\" array of \"host:port\" node addresses",
+    )?;
+    let mut addrs = Vec::with_capacity(arr.len());
+    for a in arr {
+        addrs.push(
+            a.as_str()
+                .ok_or("backend: remote node addresses must be \"host:port\" strings")?
+                .to_string(),
+        );
+    }
+    Ok(TransportKind::Remote { addrs })
 }
 
 fn parse_run_params(json: &Json, spec: &mut ExperimentSpec) -> Result<(), String> {
@@ -1124,7 +1189,7 @@ mod tests {
         for transport in [TransportKind::Loopback, TransportKind::Tcp] {
             let spec = ExperimentSpec::new("ring:8")
                 .problem(ProblemSpec::quadratic())
-                .backend(Backend::Cluster { shards: 3, transport })
+                .backend(Backend::Cluster { shards: 3, transport: transport.clone() })
                 .iterations(20)
                 .validated()
                 .unwrap();
@@ -1144,6 +1209,38 @@ mod tests {
     }
 
     #[test]
+    fn remote_cluster_backend_roundtrips_and_defaults_shards() {
+        let addrs = vec!["10.0.0.1:7701".to_string(), "10.0.0.2:7701".to_string()];
+        let spec = ExperimentSpec::new("ring:8")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::Cluster {
+                shards: 2,
+                transport: TransportKind::Remote { addrs: addrs.clone() },
+            })
+            .iterations(20)
+            .validated()
+            .unwrap();
+        let text = spec.to_json_string();
+        assert!(text.contains("10.0.0.1:7701"), "{text}");
+        assert_eq!(ExperimentSpec::parse(&text).unwrap(), spec);
+        // Omitting 'shards' defaults it to one shard per listed daemon.
+        let short = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "backend": {"kind": "cluster",
+                "transport": {"tcp": ["a:1", "b:2", "c:3"]}}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            short.backend,
+            Backend::Cluster {
+                shards: 3,
+                transport: TransportKind::Remote {
+                    addrs: vec!["a:1".into(), "b:2".into(), "c:3".into()],
+                },
+            }
+        );
+    }
+
+    #[test]
     fn cluster_backend_rejects_bad_forms() {
         let err = ExperimentSpec::parse(r#"{"graph": "fig1", "backend": "cluster"}"#).unwrap_err();
         assert!(err.contains("shards"), "{err}");
@@ -1157,6 +1254,30 @@ mod tests {
             .validate()
             .unwrap_err();
         assert!(err.contains("shards >= 1"), "{err}");
+        // Remote forms: wrong object key, non-string address, empty node
+        // list, and a shard count that disagrees with the address list.
+        let err = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "backend": {"kind": "cluster",
+                "transport": {"udp": ["a:1"]}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown key 'udp'"), "{err}");
+        let err = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "backend": {"kind": "cluster", "transport": {"tcp": [7]}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("host:port"), "{err}");
+        let err = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "backend": {"kind": "cluster", "transport": {"tcp": []}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("at least one"), "{err}");
+        let err = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "backend": {"kind": "cluster", "shards": 3,
+                "transport": {"tcp": ["a:1", "b:2"]}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("2 node addresses but shards = 3"), "{err}");
     }
 
     #[test]

@@ -130,6 +130,14 @@
 //!   bit-for-bit equal to the actors backend per seed; the TCP cluster
 //!   runs the same schedule over localhost sockets
 //!   (`rust/tests/cluster.rs`, `benches/cluster_transport.rs`).
+//! - [`node::run_remote`] — the **deployment** shape of the cluster
+//!   runtime: standalone shard-node daemons (`matcha shard-node
+//!   --listen ADDR`) serve shards in their own processes, and a remote
+//!   coordinator (`"transport": {"tcp": ["host:port", ...]}` in a spec)
+//!   drives them with a **pipelined**, reconnect-tolerant command
+//!   stream — same schedule, same fold arithmetic, bit-for-bit equal to
+//!   the in-process backends (`rust/tests/node.rs`,
+//!   `benches/node_pipeline.rs`).
 //!
 //! Direct use of the lower layers ([`matching`], [`budget`], [`mixing`],
 //! hand-built [`sim::RunConfig`]s, `coordinator::plan_*`) remains
@@ -158,6 +166,7 @@ pub mod linalg;
 pub mod matching;
 pub mod metrics;
 pub mod mixing;
+pub mod node;
 pub mod proptest;
 pub mod rng;
 #[cfg(feature = "xla")]

@@ -1,0 +1,830 @@
+//! The remote coordinator: replay a MATCHA schedule against standalone
+//! shard-node daemons with pipelined, reconnect-tolerant commands.
+//!
+//! Structure mirrors the in-process cluster driver — the engine's own
+//! barrier loop over an [`Executor`] that serializes phases into wire
+//! frames — but the executor is **pipelined**: commands stream ahead of
+//! their replies, bounded by [`RemoteOptions::window`] in-flight frames
+//! per link. The dependency analysis that makes this safe:
+//!
+//! - A `Step` command needs nothing from the coordinator's arena — the
+//!   daemon steps its own workers from its own RNG streams. Steps are
+//!   sent without waiting.
+//! - A `Mix` command's staged rows are read from the coordinator's arena
+//!   *post-step*, and a routed peer row may be owned by **any** shard —
+//!   so every in-flight reply must be folded back before staging. That
+//!   drain ([`PipelinedExec::sync`]) is the pipeline's only
+//!   synchronization point: one round-trip wait per mixing iteration
+//!   instead of two, and none at all across communication-free rounds.
+//! - [`Executor::flush`] (called by the drive loop at metric-record
+//!   points) also drains, so pipelining never changes what observers and
+//!   recorders see.
+//!
+//! Identical frames in identical order per link, identical fold
+//! arithmetic on the daemon — `window` is pure latency hiding and every
+//! setting is bit-for-bit equal to the in-process cluster backend.
+//!
+//! ## Reconnect-with-resume
+//!
+//! Each link keeps its unacknowledged frames in a replay buffer. When a
+//! connection dies (I/O error or [`crate::cluster::WireError::TimedOut`]
+//! from the configured deadline), the coordinator re-dials the daemon
+//! and aligns against its `Resume { done, states, .. }` handshake using
+//! the invariant `acked ≤ done ≤ sent`:
+//!
+//! - `done − acked` pending frames were executed but their replies were
+//!   lost — dropped from the buffer, with the resumed states applied to
+//!   the arena in their place.
+//! - `sent − done` pending frames never reached the daemon — re-sent in
+//!   order.
+//! - `done < acked` means the daemon lost its session (restarted), and
+//!   `done > sent` means it serves some other coordinator's session:
+//!   both are hard errors, never silent corruption.
+//!
+//! Every command executes exactly once, so a run that survives a
+//! reconnect is bit-for-bit the run that never dropped. Reconnects are
+//! observable as [`TraceEvent::Reconnect`] and the
+//! [`Counter::Reconnects`] metric.
+
+use crate::cluster::driver::PlanReplay;
+use crate::cluster::{
+    check_proto, ClusterResult, ClusterStats, LinkStats, TcpTransport, Transport, TransportKind,
+    WireError, WireMeta, WireMsg,
+};
+use crate::engine::runner::{drive, route_per_worker, stage_shard_messages, Executor};
+use crate::engine::{parse_policy, DelayPolicy};
+use crate::experiment::{
+    build_problem, plan, Backend, BuiltProblem, ExperimentSpec, NoopObserver, Observer, Plan,
+};
+use crate::gossip::{shard_workers, RoundPlan};
+use crate::graph::Graph;
+use crate::sim::{Problem, RunConfig};
+use crate::state::StateMatrix;
+use crate::trace::{Counter, TraceEvent, Tracer};
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Tuning of the remote coordinator's connection handling. The defaults
+/// suit localhost and LAN deployments; every setting produces identical
+/// results — only latency tolerance changes.
+#[derive(Clone, Debug)]
+pub struct RemoteOptions {
+    /// Maximum in-flight (sent, unacknowledged) commands per link,
+    /// clamped to at least 1. `1` degenerates to the in-process driver's
+    /// strict request/reply protocol.
+    pub window: usize,
+    /// Read/write deadline per link in milliseconds (`0` = no deadline).
+    /// A daemon silent past the deadline surfaces as the typed
+    /// [`WireError::TimedOut`] and triggers a reconnect; a handshake
+    /// is always bounded (5 s when no deadline is configured) so a
+    /// silent stray listener cannot hang a run.
+    pub io_timeout_ms: u64,
+    /// Dial attempts per reconnect before the run aborts with an error.
+    pub reconnect_attempts: u32,
+    /// Pause between successive dial attempts, in milliseconds.
+    pub reconnect_delay_ms: u64,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        RemoteOptions {
+            window: 4,
+            io_timeout_ms: 30_000,
+            reconnect_attempts: 3,
+            reconnect_delay_ms: 50,
+        }
+    }
+}
+
+/// Field-wise sum of two link-stat snapshots: how a link's retired
+/// connections and its live one combine into the link's total traffic.
+fn add_stats(a: LinkStats, b: LinkStats) -> LinkStats {
+    LinkStats {
+        frames_sent: a.frames_sent + b.frames_sent,
+        bytes_sent: a.bytes_sent + b.bytes_sent,
+        frames_received: a.frames_received + b.frames_received,
+        bytes_received: a.bytes_received + b.bytes_received,
+        intra_bytes: a.intra_bytes + b.intra_bytes,
+    }
+}
+
+/// What a daemon reported in its `Resume` handshake frame.
+struct ResumeInfo {
+    done: u64,
+    dim: u32,
+    states: Vec<f64>,
+}
+
+/// Dial one daemon and run the `Assign → Hello → Resume` handshake.
+/// The handshake is always deadline-bounded; the steady-state timeout
+/// from `opts` is armed before returning.
+fn dial_shard(
+    addr: &str,
+    shard: usize,
+    shards: usize,
+    spec_json: &str,
+    opts: &RemoteOptions,
+) -> Result<(TcpTransport, ResumeInfo), String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut tx = TcpTransport::new(stream).map_err(|e| format!("{addr}: {e}"))?;
+    let handshake = Duration::from_millis(match opts.io_timeout_ms {
+        0 => 5_000,
+        ms => ms,
+    });
+    tx.set_io_timeout(Some(handshake)).map_err(|e| format!("{addr}: {e}"))?;
+    let mut scratch = Vec::new();
+    let assign = WireMsg::Assign {
+        shard: shard as u32,
+        shards: shards as u32,
+        spec_json: spec_json.to_string(),
+    };
+    tx.send_msg(&assign, &mut scratch).map_err(|e| format!("{addr}: assign: {e}"))?;
+    let mut body = Vec::new();
+    match tx.recv_msg(&mut body).map_err(|e| format!("{addr}: handshake: {e}"))? {
+        WireMsg::Hello { shard: announced, proto } => {
+            check_proto(proto).map_err(|e| format!("{addr}: {e}"))?;
+            if announced as usize != shard {
+                return Err(format!(
+                    "{addr}: daemon announced shard {announced}, expected {shard}"
+                ));
+            }
+        }
+        WireMsg::VersionReject { supported } => {
+            return Err(format!(
+                "{addr}: daemon rejected our protocol (it speaks version {supported})"
+            ));
+        }
+        other => return Err(format!("{addr}: handshake expected Hello, got {other:?}")),
+    }
+    let resume = match tx.recv_msg(&mut body).map_err(|e| format!("{addr}: resume: {e}"))? {
+        WireMsg::Resume { done, steps: _, folded: _, dim, states } => {
+            ResumeInfo { done, dim, states }
+        }
+        other => return Err(format!("{addr}: handshake expected Resume, got {other:?}")),
+    };
+    let steady = match opts.io_timeout_ms {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    tx.set_io_timeout(steady).map_err(|e| format!("{addr}: {e}"))?;
+    Ok((tx, resume))
+}
+
+/// One coordinator↔daemon link: the live transport, the exactly-once
+/// command accounting, and the replay buffer for reconnects.
+struct RemoteLink {
+    addr: String,
+    tx: TcpTransport,
+    /// Encoded frames sent but not yet acknowledged, oldest first — what
+    /// reconnect-with-resume replays.
+    pending: VecDeque<Vec<u8>>,
+    /// Commands sent over the link's lifetime (all connections).
+    sent: u64,
+    /// Commands whose `States` reply was received and applied.
+    acked: u64,
+    /// Traffic accumulated by this link's retired connections; the live
+    /// connection's counters are added on top, so per-phase deltas stay
+    /// monotone across reconnects.
+    stats_base: LinkStats,
+    /// Staged Mix rows whose peer lived on this shard (never needed the
+    /// wire); folded into [`LinkStats::intra_bytes`] after the run.
+    intra_rows: u64,
+}
+
+/// The coordinator's link fleet plus the first unrecoverable failure.
+/// Owned by the run entry point and borrowed by the executor, so the
+/// links survive [`drive`] consuming the executor — the entry point
+/// still needs them for the shutdown frames and the final stats.
+struct RemoteState {
+    links: Vec<RemoteLink>,
+    failure: Option<String>,
+}
+
+/// The pipelined wire executor (see the module docs for the dependency
+/// analysis). The [`Executor`] trait cannot return errors, so transport
+/// failures that survive reconnection poison the executor instead:
+/// [`drive`] checks [`Executor::poisoned`] each iteration and stops
+/// replaying, and the entry point turns the recorded failure into `Err`.
+struct PipelinedExec<'a> {
+    state: &'a mut RemoteState,
+    opts: &'a RemoteOptions,
+    spec_json: &'a str,
+    workers: usize,
+    dim: usize,
+    window: usize,
+    /// Per-worker `(matching, u, v)` routes of the current round, shared
+    /// with the in-process executors via [`route_per_worker`].
+    per: Vec<Vec<(usize, usize, usize)>>,
+    /// Recycled encode / decode / staging buffers. (The replay buffer
+    /// still clones each sent frame — an accepted cost on a
+    /// transport-bound path, and the price of resumability.)
+    scratch: Vec<u8>,
+    body: Vec<u8>,
+    msgs: Vec<WireMeta>,
+    staging: Vec<f64>,
+    /// Per-link combined-stats snapshot at each phase start, for the
+    /// per-phase wire-traffic deltas.
+    prev_stats: Vec<LinkStats>,
+}
+
+impl<'a> PipelinedExec<'a> {
+    fn new(
+        state: &'a mut RemoteState,
+        opts: &'a RemoteOptions,
+        spec_json: &'a str,
+        workers: usize,
+        dim: usize,
+    ) -> Self {
+        let shards = state.links.len();
+        PipelinedExec {
+            state,
+            opts,
+            spec_json,
+            workers,
+            dim,
+            window: opts.window.max(1),
+            per: (0..workers).map(|_| Vec::new()).collect(),
+            scratch: Vec::new(),
+            body: Vec::new(),
+            msgs: Vec::new(),
+            staging: Vec::new(),
+            prev_stats: vec![LinkStats::default(); shards],
+        }
+    }
+
+    /// The link's total traffic: retired connections plus the live one.
+    fn combined(&self, s: usize) -> LinkStats {
+        let link = &self.state.links[s];
+        add_stats(link.stats_base, link.tx.stats())
+    }
+
+    fn snapshot_stats(&mut self) {
+        for s in 0..self.state.links.len() {
+            let combined = self.combined(s);
+            self.prev_stats[s] = combined;
+        }
+    }
+
+    /// Fold the phase's per-link traffic into the registry and emit the
+    /// frame-traffic markers, exactly as the in-process driver does.
+    fn account_traffic(&mut self, tracer: &mut Tracer<'_>) {
+        for s in 0..self.state.links.len() {
+            let delta = self.combined(s).delta(&self.prev_stats[s]);
+            tracer.count(Counter::WireFramesSent, delta.frames_sent);
+            tracer.count(Counter::WireBytesSent, delta.bytes_sent);
+            tracer.count(Counter::WireFramesReceived, delta.frames_received);
+            tracer.count(Counter::WireBytesReceived, delta.bytes_received);
+            tracer.emit(TraceEvent::FrameSent { link: s, bytes: delta.bytes_sent });
+            tracer.emit(TraceEvent::FrameReceived { link: s, bytes: delta.bytes_received });
+        }
+    }
+
+    /// Copy one shard's reply (or resume) states into the arena rows it
+    /// owns.
+    fn apply_states(&self, s: usize, states: &[f64], xs: &mut StateMatrix) -> Result<(), String> {
+        let d = self.dim;
+        let shards = self.state.links.len();
+        let slots = shard_workers(s, shards, self.workers).count();
+        if states.len() != slots * d {
+            return Err(format!(
+                "remote link {s}: states carry {} values, expected {} ({slots} workers × dim {d})",
+                states.len(),
+                slots * d
+            ));
+        }
+        for (slot, w) in shard_workers(s, shards, self.workers).enumerate() {
+            xs.row_mut(w).copy_from_slice(&states[slot * d..(slot + 1) * d]);
+        }
+        Ok(())
+    }
+
+    /// Receive and apply the oldest outstanding reply on link `s`,
+    /// reconnecting through failures. A successful reconnect may resume
+    /// past every outstanding command (their replies are folded in via
+    /// the Resume states), in which case there is nothing left to
+    /// receive and this returns immediately.
+    fn recv_one(
+        &mut self,
+        s: usize,
+        xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
+    ) -> Result<(), String> {
+        loop {
+            {
+                let link = &self.state.links[s];
+                if link.acked >= link.sent {
+                    return Ok(());
+                }
+            }
+            match self.state.links[s].tx.recv_msg(&mut self.body) {
+                Ok(WireMsg::States { shard, dim, states }) => {
+                    if shard as usize != s {
+                        return Err(format!(
+                            "remote link {s}: reply announced shard {shard}"
+                        ));
+                    }
+                    if dim as usize != self.dim {
+                        return Err(format!(
+                            "remote link {s}: reply dim {dim}, expected {}",
+                            self.dim
+                        ));
+                    }
+                    self.apply_states(s, &states, xs)?;
+                    let link = &mut self.state.links[s];
+                    link.acked += 1;
+                    link.pending.pop_front();
+                    return Ok(());
+                }
+                Ok(WireMsg::VersionReject { supported }) => {
+                    return Err(format!(
+                        "remote link {s} ({}): daemon speaks protocol version {supported}",
+                        self.state.links[s].addr
+                    ));
+                }
+                Ok(other) => {
+                    return Err(format!(
+                        "remote link {s}: expected States reply, got {other:?}"
+                    ));
+                }
+                Err(e) => self.reconnect(s, xs, tracer, &e)?,
+            }
+        }
+    }
+
+    /// Ship the frame in `self.scratch` on link `s`, waiting for acks
+    /// only when the in-flight window is full, and record it in the
+    /// replay buffer.
+    fn send_cmd(
+        &mut self,
+        s: usize,
+        xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
+    ) -> Result<(), String> {
+        while self.state.links[s].pending.len() >= self.window {
+            self.recv_one(s, xs, tracer)?;
+        }
+        loop {
+            match self.state.links[s].tx.send(&self.scratch) {
+                Ok(()) => {
+                    let link = &mut self.state.links[s];
+                    link.pending.push_back(self.scratch.clone());
+                    link.sent += 1;
+                    return Ok(());
+                }
+                Err(e) => self.reconnect(s, xs, tracer, &e)?,
+            }
+        }
+    }
+
+    /// Drain every link to `acked == sent`: the arena is authoritative
+    /// when this returns.
+    fn sync(&mut self, xs: &mut StateMatrix, tracer: &mut Tracer<'_>) -> Result<(), String> {
+        for s in 0..self.state.links.len() {
+            while self.state.links[s].acked < self.state.links[s].sent {
+                self.recv_one(s, xs, tracer)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-establish link `s` after `cause` killed its connection: retire
+    /// the old connection's stats, re-dial with the same assignment,
+    /// align on the daemon's `Resume`, and replay what it never saw.
+    fn reconnect(
+        &mut self,
+        s: usize,
+        xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
+        cause: &WireError,
+    ) -> Result<(), String> {
+        let shards = self.state.links.len();
+        {
+            let link = &mut self.state.links[s];
+            link.stats_base = add_stats(link.stats_base, link.tx.stats());
+            // Force the daemon's read on the old connection to fail so a
+            // merely-silent (not closed) link frees the daemon to accept
+            // our re-dial; harmless when the connection is already dead.
+            let _ = link.tx.stream().shutdown(std::net::Shutdown::Both);
+        }
+        let addr = self.state.links[s].addr.clone();
+        let attempts = self.opts.reconnect_attempts.max(1);
+        let mut last = String::from("no attempt made");
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(self.opts.reconnect_delay_ms));
+            }
+            let (tx, resume) = match dial_shard(&addr, s, shards, self.spec_json, self.opts) {
+                Ok(dialed) => dialed,
+                Err(e) => {
+                    last = e;
+                    continue;
+                }
+            };
+            let (acked, sent) = {
+                let link = &self.state.links[s];
+                (link.acked, link.sent)
+            };
+            // The resume invariant: acked ≤ done ≤ sent. Anything else
+            // is a session mismatch that no replay can repair.
+            if resume.done < acked {
+                return Err(format!(
+                    "remote link {s} ({addr}): daemon resumed at {} processed commands but \
+                     {acked} replies were already applied — it lost its session (restarted?); \
+                     the run cannot be resumed",
+                    resume.done
+                ));
+            }
+            if resume.done > sent {
+                return Err(format!(
+                    "remote link {s} ({addr}): daemon reports {} processed commands but only \
+                     {sent} were ever sent on this link — it is serving a stale session from \
+                     another coordinator",
+                    resume.done
+                ));
+            }
+            if resume.dim as usize != self.dim {
+                return Err(format!(
+                    "remote link {s} ({addr}): resume dim {}, expected {}",
+                    resume.dim, self.dim
+                ));
+            }
+            // Commands the daemon executed whose replies died with the
+            // old connection: drop their frames and take their combined
+            // effect from the resumed states instead.
+            {
+                let link = &mut self.state.links[s];
+                link.tx = tx;
+                for _ in link.acked..resume.done {
+                    link.pending.pop_front();
+                }
+                link.acked = resume.done;
+            }
+            self.apply_states(s, &resume.states, xs)?;
+            // Replay everything still in flight, oldest first. A replay
+            // failure retires this connection and tries again.
+            let mut replay_err = None;
+            {
+                let link = &mut self.state.links[s];
+                for frame in &link.pending {
+                    if let Err(e) = link.tx.send(frame) {
+                        replay_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            if let Some(e) = replay_err {
+                last = format!("{addr}: replay: {e}");
+                let link = &mut self.state.links[s];
+                link.stats_base = add_stats(link.stats_base, link.tx.stats());
+                let _ = link.tx.stream().shutdown(std::net::Shutdown::Both);
+                continue;
+            }
+            let resumed = self.state.links[s].pending.len() as u64;
+            tracer.emit(TraceEvent::Reconnect { link: s, resumed });
+            tracer.count(Counter::Reconnects, 1);
+            return Ok(());
+        }
+        Err(format!(
+            "remote link {s} ({addr}): connection failed ({cause}) and reconnect did not \
+             recover after {attempts} attempts: {last}"
+        ))
+    }
+
+    fn try_step(
+        &mut self,
+        lr: f64,
+        xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
+    ) -> Result<(), String> {
+        self.snapshot_stats();
+        self.scratch.clear();
+        WireMsg::Step { lr }.encode(&mut self.scratch);
+        for s in 0..self.state.links.len() {
+            self.send_cmd(s, xs, tracer)?;
+        }
+        // Every worker steps exactly once per phase; counted at send
+        // time so the totals match the in-process backends under
+        // pipelining and reconnects (commands never re-execute).
+        tracer.count(Counter::ShardSteps, self.workers as u64);
+        self.account_traffic(tracer);
+        Ok(())
+    }
+
+    fn try_mix(
+        &mut self,
+        k: usize,
+        alpha: f64,
+        matchings: &[Graph],
+        activated: &[usize],
+        dead: &[(usize, usize)],
+        xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
+    ) -> Result<(), String> {
+        self.snapshot_stats();
+        // The staged rows are read out of the arena post-step, and a
+        // routed peer row may be owned by any shard: every in-flight
+        // reply must land first. The pipeline's one synchronization
+        // point.
+        self.sync(xs, tracer)?;
+        route_per_worker(&mut self.per, matchings, activated, dead);
+        let shards = self.state.links.len();
+        for s in 0..shards {
+            let mut msgs = std::mem::take(&mut self.msgs);
+            let mut staging = std::mem::take(&mut self.staging);
+            stage_shard_messages(
+                s,
+                shards,
+                self.workers,
+                &self.per,
+                xs,
+                &mut msgs,
+                &mut staging,
+                &mut self.state.links[s].intra_rows,
+                |slot, j, u, v| WireMeta {
+                    slot: slot as u32,
+                    matching: j as u32,
+                    u: u as u32,
+                    v: v as u32,
+                },
+            );
+            // Staged-message count decided at routing time — identical
+            // totals to the reply-side accounting of the actor pool.
+            tracer.count(Counter::ShardMsgsFolded, msgs.len() as u64);
+            let msg = WireMsg::Mix { k: k as u64, alpha, dim: self.dim as u32, msgs, staging };
+            self.scratch.clear();
+            msg.encode(&mut self.scratch);
+            self.send_cmd(s, xs, tracer)?;
+            let WireMsg::Mix { msgs, staging, .. } = msg else { unreachable!() };
+            self.msgs = msgs;
+            self.staging = staging;
+        }
+        self.account_traffic(tracer);
+        Ok(())
+    }
+}
+
+impl Executor for PipelinedExec<'_> {
+    fn step(&mut self, _k: usize, lr: f64, xs: &mut StateMatrix, tracer: &mut Tracer<'_>) {
+        if self.state.failure.is_some() {
+            return;
+        }
+        if let Err(e) = self.try_step(lr, xs, tracer) {
+            self.state.failure = Some(e);
+        }
+    }
+
+    fn mix(
+        &mut self,
+        k: usize,
+        alpha: f64,
+        matchings: &[Graph],
+        activated: &[usize],
+        dead: &[(usize, usize)],
+        xs: &mut StateMatrix,
+        tracer: &mut Tracer<'_>,
+    ) {
+        if self.state.failure.is_some() {
+            return;
+        }
+        if let Err(e) = self.try_mix(k, alpha, matchings, activated, dead, xs, tracer) {
+            self.state.failure = Some(e);
+        }
+    }
+
+    fn flush(&mut self, xs: &mut StateMatrix, tracer: &mut Tracer<'_>) {
+        if self.state.failure.is_some() {
+            return;
+        }
+        if let Err(e) = self.sync(xs, tracer) {
+            self.state.failure = Some(e);
+        }
+    }
+
+    fn poisoned(&self) -> bool {
+        self.state.failure.is_some()
+    }
+}
+
+// ---------------------------------------------------------------------
+// The run entry points
+// ---------------------------------------------------------------------
+
+/// Run the spec against its listed shard-node daemons. Equivalent to
+/// [`run_remote_observed`] with a no-op observer. The spec's backend
+/// must be `cluster` with the remote transport
+/// (`{"tcp": ["host:port", ...]}`, one address per shard, in shard
+/// order); the daemons must already be listening.
+pub fn run_remote(
+    spec: &ExperimentSpec,
+    opts: &RemoteOptions,
+) -> Result<ClusterResult, String> {
+    run_remote_observed(spec, opts, &mut NoopObserver)
+}
+
+/// [`run_remote`] with streaming observation (callbacks run on the
+/// coordinator thread, exactly as in every other backend).
+pub fn run_remote_observed(
+    spec: &ExperimentSpec,
+    opts: &RemoteOptions,
+    observer: &mut dyn Observer,
+) -> Result<ClusterResult, String> {
+    run_remote_traced(spec, opts, observer, &mut Tracer::disabled())
+}
+
+/// [`run_remote_observed`] with trace emission: the engine loop's spans
+/// plus the wire-traffic markers and [`TraceEvent::Reconnect`] events
+/// flow through `tracer`.
+pub fn run_remote_traced(
+    spec: &ExperimentSpec,
+    opts: &RemoteOptions,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
+) -> Result<ClusterResult, String> {
+    let exp_plan = plan(spec)?;
+    run_remote_planned_traced(spec, &exp_plan, opts, observer, tracer)
+}
+
+/// [`run_remote_traced`] with a precomputed plan — what the unified
+/// spec runner ([`crate::experiment::run()`]) dispatches to when a spec
+/// names a remote cluster backend.
+pub(crate) fn run_remote_planned_traced(
+    spec: &ExperimentSpec,
+    exp_plan: &Plan,
+    opts: &RemoteOptions,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
+) -> Result<ClusterResult, String> {
+    let (shards, addrs) = match &spec.backend {
+        Backend::Cluster { shards, transport: TransportKind::Remote { addrs } } => {
+            (*shards, addrs.as_slice())
+        }
+        other => {
+            return Err(format!(
+                "remote coordinator: the spec backend must be a cluster with node \
+                 addresses ({{\"tcp\": [\"host:port\", ...]}}), got {other:?}"
+            ));
+        }
+    };
+    let cfg = exp_plan.run_config(spec)?;
+    let m = exp_plan.graph.num_nodes();
+    if shards > m {
+        return Err(format!(
+            "remote cluster: {shards} node addresses for a {m}-worker graph — each \
+             daemon hosts at least one worker, so list at most {m} nodes"
+        ));
+    }
+    let mut sampler = exp_plan.sampler(spec.sampler_seed.unwrap_or(spec.seed));
+    let mut policy =
+        parse_policy(&spec.policy, &exp_plan.graph, &cfg).map_err(|e| format!("policy: {e}"))?;
+    let matchings = &exp_plan.decomposition.matchings;
+    // The apriori schedule, materialized once and replayed — daemons
+    // never sample topology; the coordinator owns the whole schedule.
+    let round_plan = RoundPlan::generate(sampler.as_mut(), matchings, cfg.iterations);
+    let spec_json = spec.to_json_string();
+    let problem = build_problem(spec, m);
+    match &problem {
+        BuiltProblem::Quad(p) => drive_remote(
+            p, matchings, &round_plan, policy.as_mut(), &cfg, shards, addrs, &spec_json, opts,
+            observer, tracer,
+        ),
+        BuiltProblem::Logreg(p) => drive_remote(
+            p, matchings, &round_plan, policy.as_mut(), &cfg, shards, addrs, &spec_json, opts,
+            observer, tracer,
+        ),
+    }
+}
+
+/// Connect the link fleet, drive the schedule through the pipelined
+/// executor, shut the daemons' sessions down, and assemble the stats.
+fn drive_remote<P: Problem + ?Sized>(
+    problem: &P,
+    matchings: &[Graph],
+    round_plan: &RoundPlan,
+    policy: &mut dyn DelayPolicy,
+    cfg: &RunConfig,
+    shards: usize,
+    addrs: &[String],
+    spec_json: &str,
+    opts: &RemoteOptions,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
+) -> Result<ClusterResult, String> {
+    let m = problem.num_workers();
+    let d = problem.dim();
+    debug_assert_eq!(shards, addrs.len(), "validated: one address per shard");
+
+    let mut links = Vec::with_capacity(shards);
+    for (s, addr) in addrs.iter().enumerate() {
+        let (tx, resume) =
+            dial_shard(addr, s, shards, spec_json, opts).map_err(|e| format!("remote cluster: {e}"))?;
+        // A fresh run must start from a fresh session: a daemon that is
+        // mid-session belongs to some other (possibly dead) coordinator,
+        // and silently adopting its state would corrupt the trajectory.
+        if resume.done != 0 {
+            return Err(format!(
+                "remote cluster: daemon at {addr} is mid-session ({} commands already \
+                 processed) — restart it (or let its run finish) before starting a new one",
+                resume.done
+            ));
+        }
+        if resume.dim as usize != d {
+            return Err(format!(
+                "remote cluster: daemon at {addr} serves dim {} but this run has dim {d}",
+                resume.dim
+            ));
+        }
+        links.push(RemoteLink {
+            addr: addr.clone(),
+            tx,
+            pending: VecDeque::new(),
+            sent: 0,
+            acked: 0,
+            stats_base: LinkStats::default(),
+            intra_rows: 0,
+        });
+    }
+
+    let mut state = RemoteState { links, failure: None };
+    let exec = PipelinedExec::new(&mut state, opts, spec_json, m, d);
+    let mut replay = PlanReplay { plan: round_plan };
+    let result = drive(problem, matchings, &mut replay, policy, cfg, exec, observer, tracer);
+
+    if let Some(e) = state.failure.take() {
+        return Err(e);
+    }
+    let mut scratch = Vec::new();
+    for link in &mut state.links {
+        // Best-effort: a daemon dying between its last ack and the
+        // shutdown frame does not invalidate the finished run.
+        let _ = link.tx.send_msg(&WireMsg::Shutdown, &mut scratch);
+    }
+    let stats = ClusterStats {
+        transport: TransportKind::Remote { addrs: addrs.to_vec() },
+        per_link: state
+            .links
+            .iter()
+            .map(|link| {
+                let mut ls = add_stats(link.stats_base, link.tx.stats());
+                // Each staged local-peer row carried 8·dim payload bytes
+                // that never needed a wire.
+                ls.intra_bytes = link.intra_rows * 8 * d as u64;
+                ls
+            })
+            .collect(),
+    };
+    Ok(ClusterResult {
+        run: result.run,
+        dropped_links: result.dropped_links,
+        events: result.events,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_pipeline_with_bounded_io() {
+        let opts = RemoteOptions::default();
+        assert!(opts.window > 1, "pipelining on by default");
+        assert!(opts.io_timeout_ms > 0, "deadlines armed by default");
+        assert!(opts.reconnect_attempts >= 1);
+    }
+
+    #[test]
+    fn stats_addition_is_fieldwise() {
+        let a = LinkStats {
+            frames_sent: 1,
+            bytes_sent: 10,
+            frames_received: 2,
+            bytes_received: 20,
+            intra_bytes: 3,
+        };
+        let b = LinkStats {
+            frames_sent: 4,
+            bytes_sent: 40,
+            frames_received: 5,
+            bytes_received: 50,
+            intra_bytes: 6,
+        };
+        let sum = add_stats(a, b);
+        assert_eq!(sum.frames_sent, 5);
+        assert_eq!(sum.bytes_sent, 50);
+        assert_eq!(sum.frames_received, 7);
+        assert_eq!(sum.bytes_received, 70);
+        assert_eq!(sum.intra_bytes, 9);
+        // Retire-then-add round-trips: (a + b) − b == a.
+        assert_eq!(sum.delta(&b), a);
+    }
+
+    #[test]
+    fn non_remote_backends_are_rejected() {
+        let spec = ExperimentSpec::new("ring:4")
+            .problem(crate::experiment::ProblemSpec::quadratic())
+            .iterations(5);
+        let err = run_remote(&spec, &RemoteOptions::default()).unwrap_err();
+        assert!(err.contains("node addresses"), "got: {err}");
+    }
+}

@@ -1,0 +1,356 @@
+//! The shard-node daemon: one process serving one shard of a remote
+//! cluster run.
+//!
+//! A daemon is started with nothing but a listen address
+//! (`matcha shard-node --listen ADDR`); everything else arrives over the
+//! wire. The first coordinator connection opens with an `Assign` frame
+//! naming the daemon's shard and carrying the full experiment spec as
+//! JSON, and the daemon rebuilds the workload from it — the same
+//! `spec → plan → run_config → problem` path and the same seed
+//! derivations every in-process backend uses, then the shared
+//! [`ActorShard::for_partition`] construction. Identical inputs,
+//! identical arithmetic: a remote run is bit-for-bit the in-process run.
+//!
+//! ## Session lifecycle
+//!
+//! The daemon's unit of state is a **session**: the shard's iterates plus
+//! a `done` counter of fully processed commands. Connections are
+//! ephemeral; sessions are not.
+//!
+//! - A dropped connection (coordinator crash, network fault, timeout)
+//!   leaves the session intact. The daemon falls back to accepting, and
+//!   a coordinator that re-dials with the same `Assign` gets a
+//!   `Hello` + `Resume { done, states, .. }` handshake telling it
+//!   exactly where the session stands — the basis of the coordinator's
+//!   reconnect-with-resume (commands are executed exactly once: a frame
+//!   is either fully processed before `done` moves, or never seen).
+//! - A `Shutdown` frame ends the session cleanly: with
+//!   [`DaemonOptions::once`] the daemon exits, otherwise it resets to a
+//!   fresh session and waits for the next run (how a bench or test
+//!   reuses one daemon fleet across many runs).
+//! - A connection assigning a different shard, shard count or spec than
+//!   the live session is rejected (logged, dropped) — a daemon serves
+//!   one assignment per lifetime-until-reset.
+
+use crate::cluster::driver::phase_cmd_from_wire;
+use crate::cluster::{TcpTransport, Transport, WireMsg, PROTO_VERSION};
+use crate::engine::actor::{ActorShard, MixBatch};
+use crate::experiment::{build_problem, plan, BuiltProblem, ExperimentSpec};
+use crate::sim::kernel::{init_iterates, worker_streams};
+use crate::sim::{Problem, RunConfig};
+use std::net::TcpListener;
+use std::time::Duration;
+
+/// How long an accepted connection gets to produce its `Assign` frame
+/// before the daemon gives up on it and keeps accepting — a silent stray
+/// connection must not wedge the accept loop.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Behavior knobs of [`run_daemon`].
+#[derive(Clone, Debug)]
+pub struct DaemonOptions {
+    /// Exit after the first clean `Shutdown` instead of resetting the
+    /// session and waiting for the next coordinator. The CI smoke runs
+    /// daemons with `--once` so the processes terminate on their own.
+    pub once: bool,
+    /// Read/write deadline on the coordinator connection, in
+    /// milliseconds; `0` keeps the connection fully blocking (a daemon
+    /// happily waits for work). When set, a coordinator silent past the
+    /// deadline drops the connection — the session survives for the
+    /// reconnect.
+    pub io_timeout_ms: u64,
+    /// Fault injection for the reconnect tests: drop the coordinator
+    /// connection once, after this many commands have been processed
+    /// over the daemon's lifetime. Never set in production.
+    pub drop_after: Option<u64>,
+}
+
+impl Default for DaemonOptions {
+    fn default() -> Self {
+        DaemonOptions { once: false, io_timeout_ms: 0, drop_after: None }
+    }
+}
+
+/// Accept one coordinator connection and read its `Assign` frame. The
+/// handshake runs under a short deadline; afterwards the connection
+/// switches to the configured steady-state timeout. Any failure rejects
+/// only this connection.
+fn accept_assign(
+    listener: &TcpListener,
+    opts: &DaemonOptions,
+) -> Result<(TcpTransport, u32, u32, String), String> {
+    let (stream, peer) = listener.accept().map_err(|e| format!("shard-node: accept: {e}"))?;
+    let mut link = TcpTransport::new(stream).map_err(|e| format!("shard-node: {peer}: {e}"))?;
+    link.set_io_timeout(Some(HANDSHAKE_TIMEOUT))
+        .map_err(|e| format!("shard-node: {peer}: {e}"))?;
+    let mut body = Vec::new();
+    match link.recv_msg(&mut body) {
+        Ok(WireMsg::Assign { shard, shards, spec_json }) => {
+            let steady = match opts.io_timeout_ms {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            };
+            link.set_io_timeout(steady).map_err(|e| format!("shard-node: {peer}: {e}"))?;
+            Ok((link, shard, shards, spec_json))
+        }
+        Ok(other) => Err(format!("shard-node: {peer}: handshake expected Assign, got {other:?}")),
+        Err(e) => Err(format!("shard-node: {peer}: handshake: {e}")),
+    }
+}
+
+/// Serve one shard forever (or until a `Shutdown` under
+/// [`DaemonOptions::once`]). Binds to nothing itself — the caller owns
+/// the listener, so tests can bind port 0 and read the ephemeral
+/// address before spawning the daemon.
+///
+/// The first connection's `Assign` fixes the daemon's shard, shard count
+/// and spec; an unparseable or inconsistent first assignment is fatal
+/// (`Err`), because the daemon cannot know what to serve. Later
+/// connections must repeat the same assignment and are merely rejected
+/// when they do not.
+pub fn run_daemon(listener: TcpListener, opts: &DaemonOptions) -> Result<(), String> {
+    let (link, shard, shards, spec_json) = accept_assign(&listener, opts)?;
+    if shards == 0 || shard >= shards {
+        return Err(format!("shard-node: assigned bogus shard {shard} of {shards}"));
+    }
+    let spec = ExperimentSpec::parse(&spec_json)
+        .map_err(|e| format!("shard-node: assigned spec: {e}"))?;
+    let exp_plan = plan(&spec).map_err(|e| format!("shard-node: plan: {e}"))?;
+    let cfg = exp_plan.run_config(&spec).map_err(|e| format!("shard-node: {e}"))?;
+    let m = exp_plan.graph.num_nodes();
+    if shards as usize > m {
+        return Err(format!(
+            "shard-node: assigned {shards} shards over a {m}-worker graph \
+             (each shard needs at least one worker)"
+        ));
+    }
+    let problem = build_problem(&spec, m);
+    match &problem {
+        BuiltProblem::Quad(p) => {
+            serve(&listener, p, &cfg, m, shard as usize, shards as usize, &spec_json, link, opts)
+        }
+        BuiltProblem::Logreg(p) => {
+            serve(&listener, p, &cfg, m, shard as usize, shards as usize, &spec_json, link, opts)
+        }
+    }
+}
+
+/// The daemon's serve loop, generic over the workload: session state
+/// outlives connections, connections come and go.
+fn serve<P: Problem + ?Sized>(
+    listener: &TcpListener,
+    problem: &P,
+    cfg: &RunConfig,
+    m: usize,
+    shard_id: usize,
+    shards: usize,
+    spec_json: &str,
+    first: TcpTransport,
+    opts: &DaemonOptions,
+) -> Result<(), String> {
+    let d = problem.dim();
+    // The same initial arena and gradient streams every backend derives
+    // from the run seed — the daemon's slice of them is its session.
+    let xs0 = init_iterates(cfg.seed, m, d);
+    let rngs = worker_streams(cfg.seed, m);
+    let fresh = || {
+        ActorShard::for_partition(
+            problem,
+            cfg.compression.clone(),
+            cfg.seed,
+            shard_id,
+            shards,
+            &xs0,
+            &rngs,
+        )
+    };
+
+    // Session state: the shard plus exactly-once command accounting.
+    // `done`/`steps`/`folded` describe the current session (reset on
+    // Shutdown); `lifetime` counts across sessions for fault injection.
+    let mut shard = fresh();
+    let (mut done, mut steps, mut folded) = (0u64, 0u64, 0u64);
+    let mut lifetime = 0u64;
+    let mut dropped_once = false;
+
+    let mut scratch = Vec::new();
+    let mut body = Vec::new();
+    let mut ret: Vec<f64> = Vec::new();
+    let mut batch = MixBatch::default();
+
+    let mut conn = Some(first);
+    loop {
+        let mut link = match conn.take() {
+            Some(link) => link,
+            None => {
+                let (link, a_shard, a_shards, a_spec) = match accept_assign(listener, opts) {
+                    Ok(admitted) => admitted,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        continue;
+                    }
+                };
+                if a_shard as usize != shard_id || a_shards as usize != shards
+                    || a_spec != spec_json
+                {
+                    eprintln!(
+                        "shard-node {shard_id}: rejected connection assigning shard \
+                         {a_shard}/{a_shards} with a different spec (serving \
+                         {shard_id}/{shards})"
+                    );
+                    continue;
+                }
+                link
+            }
+        };
+
+        // Announce ourselves and where the session stands. A resuming
+        // coordinator diffs `done` against its own ack counter and
+        // replays exactly the frames the previous connection lost; the
+        // states carry the combined effect of every command whose reply
+        // died with that connection.
+        let hello = WireMsg::Hello { shard: shard_id as u32, proto: PROTO_VERSION };
+        if let Err(e) = link.send_msg(&hello, &mut scratch) {
+            eprintln!("shard-node {shard_id}: hello: {e}");
+            continue;
+        }
+        let resume = WireMsg::Resume {
+            done,
+            steps,
+            folded,
+            dim: d as u32,
+            states: shard.states().to_vec(),
+        };
+        if let Err(e) = link.send_msg(&resume, &mut scratch) {
+            eprintln!("shard-node {shard_id}: resume: {e}");
+            continue;
+        }
+
+        // Command loop on this connection. Any exit other than a
+        // `once`-mode Shutdown drops the link and falls back to
+        // accepting with the session intact.
+        loop {
+            let inject_drop =
+                !dropped_once && matches!(opts.drop_after, Some(n) if lifetime >= n);
+            if inject_drop {
+                dropped_once = true;
+                eprintln!(
+                    "shard-node {shard_id}: fault injection: dropping connection after \
+                     {lifetime} commands"
+                );
+                break;
+            }
+            let msg = match link.recv_msg(&mut body) {
+                Ok(msg) => msg,
+                Err(e) => {
+                    eprintln!("shard-node {shard_id}: connection lost: {e}");
+                    break;
+                }
+            };
+            let cmd = match msg {
+                WireMsg::Shutdown => {
+                    if opts.once {
+                        return Ok(());
+                    }
+                    // Session over: forget it and wait for the next run.
+                    shard = fresh();
+                    (done, steps, folded) = (0, 0, 0);
+                    break;
+                }
+                WireMsg::VersionReject { supported } => {
+                    eprintln!(
+                        "shard-node {shard_id}: coordinator rejected our protocol \
+                         (it speaks version {supported})"
+                    );
+                    break;
+                }
+                msg => match phase_cmd_from_wire(msg, d, &mut batch, &mut ret) {
+                    Ok(cmd) => cmd,
+                    Err(e) => {
+                        eprintln!("shard-node {shard_id}: bad command: {e}");
+                        break;
+                    }
+                },
+            };
+            let reply = shard.handle(cmd);
+            // Exactly-once accounting: the command is fully applied
+            // before `done` moves, and `done` moves before the reply
+            // ships — a connection can die at any point without the
+            // counter misrepresenting the session.
+            done += 1;
+            lifetime += 1;
+            steps += reply.steps;
+            folded += reply.folded;
+            if let Some(b) = reply.batch {
+                batch = b;
+            }
+            let msg =
+                WireMsg::States { shard: shard_id as u32, dim: d as u32, states: reply.states };
+            if let Err(e) = link.send_msg(&msg, &mut scratch) {
+                eprintln!("shard-node {shard_id}: reply: {e}");
+                break;
+            }
+            let WireMsg::States { states, .. } = msg else { unreachable!() };
+            ret = states;
+        }
+    }
+}
+
+/// Bind `addr` and serve: the `matcha shard-node` entry point. Split
+/// from [`run_daemon`] so tests can pre-bind an ephemeral port.
+pub(crate) fn listen_and_serve(addr: &str, opts: &DaemonOptions) -> Result<(), String> {
+    let listener =
+        TcpListener::bind(addr).map_err(|e| format!("shard-node: bind {addr}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| format!("shard-node: listener address: {e}"))?;
+    eprintln!("shard-node: listening on {local}");
+    run_daemon(listener, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpStream;
+
+    #[test]
+    fn default_options_are_persistent_and_unbounded() {
+        let opts = DaemonOptions::default();
+        assert!(!opts.once);
+        assert_eq!(opts.io_timeout_ms, 0);
+        assert!(opts.drop_after.is_none());
+    }
+
+    #[test]
+    fn first_connection_must_open_with_assign() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().unwrap();
+        let dial = std::thread::spawn(move || {
+            let mut tx = TcpTransport::new(TcpStream::connect(addr).expect("connect")).unwrap();
+            let mut scratch = Vec::new();
+            // A Hello where an Assign belongs: the daemon must reject
+            // the handshake instead of serving.
+            tx.send_msg(&WireMsg::Hello { shard: 0, proto: PROTO_VERSION }, &mut scratch)
+                .unwrap();
+        });
+        let err = run_daemon(listener, &DaemonOptions::default()).unwrap_err();
+        assert!(err.contains("expected Assign"), "got: {err}");
+        dial.join().unwrap();
+    }
+
+    #[test]
+    fn bogus_shard_assignment_is_fatal() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().unwrap();
+        let dial = std::thread::spawn(move || {
+            let mut tx = TcpTransport::new(TcpStream::connect(addr).expect("connect")).unwrap();
+            let mut scratch = Vec::new();
+            let assign =
+                WireMsg::Assign { shard: 5, shards: 2, spec_json: String::from("{}") };
+            tx.send_msg(&assign, &mut scratch).unwrap();
+        });
+        let err = run_daemon(listener, &DaemonOptions::default()).unwrap_err();
+        assert!(err.contains("bogus shard"), "got: {err}");
+        dial.join().unwrap();
+    }
+}

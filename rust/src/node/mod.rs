@@ -1,0 +1,63 @@
+//! Standalone shard-node daemons and the pipelined remote coordinator:
+//! the cluster runtime's deployment shape.
+//!
+//! The in-process cluster backend ([`crate::cluster`]) spawns its own
+//! shard threads and dials itself over loopback pipes or localhost
+//! sockets — one process, one lifetime. This module splits that topology
+//! into real processes:
+//!
+//! ```text
+//!   host A                  host B                     host C
+//!   matcha run --spec ...   matcha shard-node          matcha shard-node
+//!   (remote coordinator) ──▶  --listen B:7701  ──┐       --listen C:7701
+//!          │                 (shard 0 daemon)    │      (shard 1 daemon)
+//!          └────────────────────────────────────────────────▶
+//! ```
+//!
+//! - [`run_daemon`] ([`crate::cli`]: `matcha shard-node --listen ADDR`)
+//!   is the server side: it accepts a coordinator connection, receives
+//!   an `Assign` frame naming its shard and carrying the full
+//!   [`crate::experiment::ExperimentSpec`] as JSON, deterministically
+//!   rebuilds the workload from that spec (same seed derivations as
+//!   every in-process backend), and serves phase commands against its
+//!   own [`crate::engine::actor::ActorShard`] — the identical fold
+//!   arithmetic, so remote runs stay **bit-for-bit** equal to the
+//!   in-process backends per seed.
+//! - [`run_remote`] is the client side: a coordinator that connects to
+//!   pre-existing daemons listed in the spec's backend
+//!   (`"transport": {"tcp": ["host:port", ...]}`), replays the
+//!   materialized [`crate::gossip::RoundPlan`] schedule through the
+//!   engine's own drive loop, and reports the standard
+//!   [`crate::cluster::ClusterResult`].
+//!
+//! Two properties distinguish this coordinator from the in-process one:
+//!
+//! **Pipelining.** The in-process driver is strictly request/reply: every
+//! phase waits for every shard. Over real links that pays one round-trip
+//! of latency per phase — two per mixing iteration. The remote
+//! coordinator instead streams commands ahead of the replies, bounded by
+//! [`RemoteOptions::window`]: `Step` commands carry no data dependency
+//! and are sent without waiting; a `Mix` only requires that every
+//! in-flight reply has been folded back into the coordinator's arena
+//! (its staged rows read other shards' post-step states). The schedule
+//! and arithmetic are untouched — `window: 1` degenerates to the
+//! unpipelined protocol and every window produces identical results.
+//!
+//! **Reconnect-with-resume.** Daemons keep their session (shard state
+//! plus a processed-command counter) when a connection dies. A
+//! coordinator that loses a link re-dials, re-sends `Assign`, and the
+//! daemon answers `Hello` + `Resume { done, states, .. }`; the
+//! coordinator drops the pending frames the daemon already executed
+//! (applying the resumed states in their place — their replies died with
+//! the old socket), replays the rest, and continues the schedule.
+//! Commands are executed exactly once, so the trajectory is unchanged —
+//! pinned by `rust/tests/node.rs`, which injects connection drops
+//! mid-run and asserts bit-for-bit parity with the loopback cluster.
+
+mod coordinator;
+mod daemon;
+
+pub(crate) use coordinator::run_remote_planned_traced;
+pub use coordinator::{run_remote, run_remote_observed, run_remote_traced, RemoteOptions};
+pub(crate) use daemon::listen_and_serve;
+pub use daemon::{run_daemon, DaemonOptions};

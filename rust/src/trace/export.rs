@@ -165,6 +165,12 @@ pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
                 let args = Json::obj(vec![("bytes", Json::Num(bytes as f64))]);
                 timed.push((ts, instant_event("frame_recv", tid, ts, args)));
             }
+            TraceEvent::Reconnect { link, resumed } => {
+                let next = FRAME_TID_BASE + frame_tids.len();
+                let tid = *frame_tids.entry(link).or_insert(next);
+                let args = Json::obj(vec![("resumed", Json::Num(resumed as f64))]);
+                timed.push((ts, instant_event("reconnect", tid, ts, args)));
+            }
             TraceEvent::StaleExchange { worker: w, peer, staleness, k } => {
                 let tid = worker(w, &mut worker_tids);
                 let args = Json::obj(vec![
@@ -246,6 +252,10 @@ pub fn jsonl_lines(records: &[TraceRecord]) -> String {
             TraceEvent::FrameSent { link, bytes } | TraceEvent::FrameReceived { link, bytes } => {
                 fields.push(("link", Json::Num(link as f64)));
                 fields.push(("bytes", Json::Num(bytes as f64)));
+            }
+            TraceEvent::Reconnect { link, resumed } => {
+                fields.push(("link", Json::Num(link as f64)));
+                fields.push(("resumed", Json::Num(resumed as f64)));
             }
             TraceEvent::StaleExchange { worker, peer, staleness, k } => {
                 fields.push(("worker", Json::Num(worker as f64)));

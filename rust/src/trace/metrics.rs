@@ -38,10 +38,13 @@ pub enum Counter {
     ShardSteps,
     /// Gossip messages folded inside actor/cluster shards.
     ShardMsgsFolded,
+    /// Reconnect-with-resume cycles the remote coordinator completed
+    /// against shard-node daemons (0 on every in-process backend).
+    Reconnects,
 }
 
 /// Number of counter slots.
-pub const NUM_COUNTERS: usize = 11;
+pub const NUM_COUNTERS: usize = 12;
 
 impl Counter {
     /// Every counter, in slot order.
@@ -57,6 +60,7 @@ impl Counter {
         Counter::WireBytesReceived,
         Counter::ShardSteps,
         Counter::ShardMsgsFolded,
+        Counter::Reconnects,
     ];
 
     /// Stable metric name (the key in [`MetricsSnapshot::to_json`]).
@@ -73,6 +77,7 @@ impl Counter {
             Counter::WireBytesReceived => "wire_bytes_received",
             Counter::ShardSteps => "shard_steps",
             Counter::ShardMsgsFolded => "shard_msgs_folded",
+            Counter::Reconnects => "reconnects",
         }
     }
 

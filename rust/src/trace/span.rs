@@ -41,6 +41,11 @@ pub enum TraceEvent {
     /// The cluster coordinator finished receiving `bytes` of wire frames
     /// from shard link `link` during one phase.
     FrameReceived { link: usize, bytes: u64 },
+    /// The remote coordinator re-established shard link `link` and
+    /// resumed the command stream, re-sending `resumed` in-flight
+    /// frames the daemon had not yet processed. Never emitted by the
+    /// in-process backends.
+    Reconnect { link: usize, resumed: u64 },
     /// The async runtime applied a pairwise exchange between `worker`
     /// and `peer` for round `k` at version drift `staleness`.
     StaleExchange { worker: usize, peer: usize, staleness: usize, k: usize },
@@ -58,6 +63,7 @@ impl TraceEvent {
             TraceEvent::RoundBarrier { .. } => "round_barrier",
             TraceEvent::FrameSent { .. } => "frame_sent",
             TraceEvent::FrameReceived { .. } => "frame_received",
+            TraceEvent::Reconnect { .. } => "reconnect",
             TraceEvent::StaleExchange { .. } => "stale_exchange",
         }
     }
@@ -105,6 +111,7 @@ mod tests {
             TraceEvent::RoundBarrier { k: 0 },
             TraceEvent::FrameSent { link: 0, bytes: 1 },
             TraceEvent::FrameReceived { link: 0, bytes: 1 },
+            TraceEvent::Reconnect { link: 0, resumed: 1 },
             TraceEvent::StaleExchange { worker: 0, peer: 1, staleness: 0, k: 0 },
         ];
         let mut names: Vec<&str> = events.iter().map(|e| e.name()).collect();

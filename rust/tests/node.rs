@@ -1,0 +1,184 @@
+//! Integration tests of the standalone shard-node daemon and the
+//! pipelined remote coordinator (`crate::node`).
+//!
+//! Every test runs real daemons on ephemeral localhost ports: the
+//! determinism contract under test is that a remote run — pipelined,
+//! across processes-worth of isolation, even through injected
+//! connection drops — is **bit-for-bit** the in-process cluster run.
+
+use matcha::cluster::TransportKind;
+use matcha::experiment::{self, Backend, ExperimentSpec, NoopObserver, ProblemSpec, Strategy};
+use matcha::node::{run_daemon, run_remote, run_remote_traced, DaemonOptions, RemoteOptions};
+use matcha::trace::{Counter, MetricsSnapshot, RingSink, TraceEvent, Tracer};
+use std::net::TcpListener;
+
+/// Bind an ephemeral port and serve a daemon on a background thread.
+/// The thread outlives the test harmlessly (blocked in accept) unless
+/// `once` ends it; what matters is the address.
+fn spawn_daemon(opts: DaemonOptions) -> String {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind daemon port");
+    let addr = listener.local_addr().expect("daemon addr").to_string();
+    std::thread::spawn(move || {
+        if let Err(e) = run_daemon(listener, &opts) {
+            eprintln!("test daemon exited: {e}");
+        }
+    });
+    addr
+}
+
+fn base_spec() -> ExperimentSpec {
+    ExperimentSpec::new("ring:6")
+        .problem(ProblemSpec::quadratic())
+        .strategy(Strategy::Matcha { budget: 0.5 })
+        .lr(0.03)
+        .iterations(60)
+        .record_every(20)
+        .seed(9)
+}
+
+fn remote_spec(addrs: Vec<String>) -> ExperimentSpec {
+    let shards = addrs.len();
+    base_spec().backend(Backend::Cluster {
+        shards,
+        transport: TransportKind::Remote { addrs },
+    })
+}
+
+#[test]
+fn remote_daemons_match_loopback_cluster_bit_for_bit() {
+    let addrs = vec![
+        spawn_daemon(DaemonOptions::default()),
+        spawn_daemon(DaemonOptions::default()),
+    ];
+    let loopback = experiment::run(
+        &base_spec().backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }),
+    )
+    .unwrap();
+    // Through the unified runner: a spec naming remote daemons
+    // dispatches to the node coordinator automatically.
+    let remote = experiment::run(&remote_spec(addrs.clone())).unwrap();
+    assert_eq!(remote.final_mean, loopback.final_mean);
+    assert_eq!(remote.final_states, loopback.final_states);
+    assert_eq!(remote.total_time, loopback.total_time);
+    assert_eq!(remote.total_comm_units, loopback.total_comm_units);
+    // Identical schedule, identical frames: identical bytes on the wire.
+    let remote_stats = remote.cluster_stats.expect("remote stats");
+    let loopback_stats = loopback.cluster_stats.expect("loopback stats");
+    assert_eq!(remote_stats.total_bytes(), loopback_stats.total_bytes());
+    assert_eq!(remote_stats.per_link.len(), 2);
+
+    // Shutdown resets each daemon's session in place, so the same fleet
+    // serves a second, independent run with identical results.
+    let again = experiment::run(&remote_spec(addrs)).unwrap();
+    assert_eq!(again.final_mean, loopback.final_mean);
+    assert_eq!(again.final_states, loopback.final_states);
+}
+
+#[test]
+fn pipeline_window_never_changes_results() {
+    let addrs = vec![
+        spawn_daemon(DaemonOptions::default()),
+        spawn_daemon(DaemonOptions::default()),
+    ];
+    let spec = remote_spec(addrs);
+    let run_with_window = |window: usize| {
+        run_remote(&spec, &RemoteOptions { window, ..RemoteOptions::default() }).unwrap()
+    };
+    // window = 1 degenerates to the in-process driver's strict
+    // request/reply protocol; deeper windows only hide latency.
+    let strict = run_with_window(1);
+    let deep = run_with_window(8);
+    assert_eq!(deep.run.final_mean, strict.run.final_mean);
+    assert_eq!(deep.run.final_states, strict.run.final_states);
+    assert_eq!(deep.run.total_time, strict.run.total_time);
+    assert_eq!(deep.stats.total_bytes(), strict.stats.total_bytes());
+    assert_eq!(deep.stats.total_frames(), strict.stats.total_frames());
+}
+
+#[test]
+fn reconnect_resumes_mid_run_bit_for_bit() {
+    // Shard 0's daemon drops its connection once after 7 commands; the
+    // coordinator must reconnect, resume, and finish with the exact
+    // trajectory of a run that never dropped.
+    let addrs = vec![
+        spawn_daemon(DaemonOptions { drop_after: Some(7), ..DaemonOptions::default() }),
+        spawn_daemon(DaemonOptions::default()),
+    ];
+    let spec = remote_spec(addrs);
+    let opts = RemoteOptions { reconnect_delay_ms: 10, ..RemoteOptions::default() };
+
+    let mut sink = RingSink::new(65_536);
+    let (result, snapshot) = {
+        let mut tracer = Tracer::attached(&mut sink);
+        let result = run_remote_traced(&spec, &opts, &mut NoopObserver, &mut tracer).unwrap();
+        let snapshot = MetricsSnapshot::from_registry(&tracer.registry);
+        (result, snapshot)
+    };
+    assert!(snapshot.counter(Counter::Reconnects) >= 1, "the injected drop must reconnect");
+    assert!(
+        sink.records().iter().any(|r| matches!(r.ev, TraceEvent::Reconnect { link: 0, .. })),
+        "the reconnect must be visible in the trace"
+    );
+
+    let loopback = experiment::run(
+        &base_spec().backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }),
+    )
+    .unwrap();
+    assert_eq!(result.run.final_mean, loopback.final_mean);
+    assert_eq!(Some(result.run.final_states), loopback.final_states);
+    assert_eq!(result.run.total_time, loopback.total_time);
+}
+
+#[test]
+fn silent_daemon_surfaces_a_timeout_error() {
+    // A listener that accepts into its backlog but never speaks: the
+    // coordinator's handshake deadline must turn that into a fast typed
+    // error instead of hanging the run.
+    let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind silent port");
+    let addr = listener.local_addr().unwrap().to_string();
+    let spec = remote_spec(vec![addr]);
+    let opts = RemoteOptions {
+        io_timeout_ms: 150,
+        reconnect_attempts: 2,
+        reconnect_delay_ms: 10,
+        ..RemoteOptions::default()
+    };
+    let started = std::time::Instant::now();
+    let err = run_remote(&spec, &opts).unwrap_err();
+    assert!(err.contains("timed out"), "want the typed deadline error, got: {err}");
+    assert!(
+        started.elapsed() < std::time::Duration::from_secs(10),
+        "the deadline must fire promptly"
+    );
+    drop(listener);
+}
+
+#[test]
+fn stray_run_against_restarted_daemon_is_rejected() {
+    // A daemon that answers a re-dial with a fresh (done = 0) session
+    // mid-run has lost state; here the inverse guard: a *new* run must
+    // refuse a daemon that is mid-session from some earlier coordinator.
+    // Drive a daemon a few commands in by hand, drop the connection, and
+    // start a fresh run against it.
+    use matcha::cluster::{Transport, WireMsg, PROTO_VERSION};
+    let addr = spawn_daemon(DaemonOptions::default());
+    let spec = remote_spec(vec![addr.clone()]);
+    let spec_json = spec.to_json_string();
+    {
+        let stream = std::net::TcpStream::connect(&addr).expect("dial daemon");
+        let mut tx = matcha::cluster::TcpTransport::new(stream).unwrap();
+        let mut scratch = Vec::new();
+        let mut body = Vec::new();
+        tx.send_msg(&WireMsg::Assign { shard: 0, shards: 1, spec_json }, &mut scratch).unwrap();
+        let hello = tx.recv_msg(&mut body).unwrap();
+        assert!(matches!(hello, WireMsg::Hello { shard: 0, proto: PROTO_VERSION }));
+        let resume = tx.recv_msg(&mut body).unwrap();
+        assert!(matches!(resume, WireMsg::Resume { done: 0, .. }));
+        tx.send_msg(&WireMsg::Step { lr: 0.03 }, &mut scratch).unwrap();
+        let reply = tx.recv_msg(&mut body).unwrap();
+        assert!(matches!(reply, WireMsg::States { .. }));
+        // Drop without Shutdown: the session stays live at done = 1.
+    }
+    let err = run_remote(&spec, &RemoteOptions::default()).unwrap_err();
+    assert!(err.contains("mid-session"), "got: {err}");
+}
