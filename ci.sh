@@ -51,7 +51,16 @@ NODE_A=$!
 ./target/release/matcha shard-node --listen 127.0.0.1:7842 --once &
 NODE_B=$!
 sleep 1
-./target/release/matcha run --spec examples/specs/cluster_remote.json
+# Live health probe: an idle daemon answers `matcha status` without
+# consuming its --once session.
+./target/release/matcha status 127.0.0.1:7841
+# The traced remote run harvests every daemon's telemetry into one
+# merged multi-process Chrome trace; trace-check validates it (and
+# warns on ring truncation).
+./target/release/matcha run --spec examples/specs/cluster_remote.json \
+  --trace /tmp/matcha_ci_remote_trace.json
+./target/release/matcha trace-check --file /tmp/matcha_ci_remote_trace.json
+rm -f /tmp/matcha_ci_remote_trace.json
 wait "$NODE_A" "$NODE_B"
 
 echo "==> bench smoke (--dry-run) + perf-trajectory gate"

@@ -122,6 +122,28 @@ fn main() {
     table.print();
     println!("bytes/iter on the wire: {bytes_per_iter:.0} ({frames_per_iter:.1} frames)");
 
+    // Telemetry overhead: the same remote schedule through the unified
+    // runner, with daemon telemetry harvested into a merged Chrome
+    // export vs fully untraced. The pulls ride sync barriers the
+    // pipeline already pays for, so this should stay near 1.0x.
+    let trace_path = std::env::temp_dir().join("matcha_bench_node_trace.json");
+    let mut traced_spec = spec.clone();
+    traced_spec.trace = Some(experiment::TraceSpec {
+        path: trace_path.to_string_lossy().into_owned(),
+        format: matcha::trace::TraceFormat::Chrome,
+        capacity: 1 << 17,
+        telemetry: true,
+        telemetry_capacity: 1 << 17,
+    });
+    let (untraced, untraced_wall) = timed(&spec, repeats);
+    let (traced, traced_wall) = timed(&traced_spec, repeats);
+    let telemetry_overhead = traced_wall / untraced_wall.max(1e-9);
+    std::fs::remove_file(&trace_path).ok();
+    println!(
+        "telemetry overhead: {telemetry_overhead:.3}x \
+         (traced {traced_wall:.3}s vs untraced {untraced_wall:.3}s)"
+    );
+
     let mut summary = vec![
         ("mode".to_string(), Json::Str(if dry_run { "dry" } else { "full" }.into())),
         ("workers".to_string(), Json::Num(16.0)),
@@ -135,6 +157,9 @@ fn main() {
             "pipeline_speedup_w8".to_string(),
             Json::Num(runs[0].2 / runs[runs.len() - 1].2.max(1e-9)),
         ),
+        // Wall-clock ratio, machine-dependent: recorded in the
+        // trajectory but deliberately not a gated regression key.
+        ("telemetry_overhead".to_string(), Json::Num(telemetry_overhead)),
     ];
     for (w, _, wall) in &runs {
         summary.push((format!("wall_window_{w}_s"), Json::Num(*wall)));
@@ -147,6 +172,10 @@ fn main() {
         println!("dry-run: skipping assertions");
         return;
     }
+    assert_eq!(
+        traced.final_mean, untraced.final_mean,
+        "telemetry harvesting must never change results"
+    );
     for (w, r, _) in &runs {
         assert_eq!(
             r.run.final_mean, tcp.final_mean,

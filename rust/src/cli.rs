@@ -78,11 +78,18 @@ matcha — MATCHA: decentralized SGD with matching decomposition sampling
 USAGE: matcha <command> [--flag value ...]
 
 COMMANDS
-  run        --spec FILE [--dry-run] [--out FILE] [--trace FILE]   execute a
-             JSON experiment spec (the spec → plan → run pipeline; --dry-run
-             stops after planning and prints the derived quantities; --trace
-             writes a Chrome trace-event JSON of the run, Perfetto-loadable)
-  trace-check --file FILE                       validate a Chrome trace file
+  run        --spec FILE [--dry-run] [--out FILE] [--trace FILE] [--progress]
+             execute a JSON experiment spec (the spec → plan → run pipeline;
+             --dry-run stops after planning and prints the derived quantities;
+             --trace writes a Chrome trace-event JSON of the run,
+             Perfetto-loadable — remote cluster runs merge every daemon's
+             telemetry into one multi-process trace; --progress streams
+             per-shard progress lines from daemon telemetry on remote runs)
+  status     ADDR [--timeout-ms N]              one-shot health report from a
+             shard-node daemon (idle or mid-session): shard, rounds done,
+             reconnects survived, uptime, step/fold counters, ring drops
+  trace-check --file FILE [--format chrome|jsonl]   validate a trace file;
+             warns when the export was truncated by ring overwrites
   bench-regress --artifact FILE --history FILE [--append] [--tolerance T]
              gate a bench artifact against its committed history (JSONL):
              exact-match keys (workers, dim, alloc counts) must be equal,
@@ -149,6 +156,11 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         println!("{USAGE}");
         return Ok(());
     };
+    // `status` takes a positional daemon address, which the flag parser
+    // rejects by design — route it before parsing.
+    if cmd == "status" {
+        return cmd_status(&argv[1..]);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&args),
@@ -255,11 +267,13 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let mut spec = ExperimentSpec::load(std::path::Path::new(path))?;
     if let Some(trace_path) = args.flags.get("trace") {
         // The flag overrides any trace block in the spec file: Chrome
-        // format at the default ring capacity.
+        // format at the default ring capacities, daemon telemetry on.
         spec.trace = Some(experiment::TraceSpec {
             path: trace_path.clone(),
             format: crate::trace::TraceFormat::Chrome,
             capacity: crate::experiment::DEFAULT_TRACE_CAPACITY,
+            telemetry: true,
+            telemetry_capacity: crate::experiment::DEFAULT_TELEMETRY_CAPACITY,
         });
     }
     let plan = experiment::plan(&spec)?;
@@ -281,7 +295,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         println!("dry-run: spec valid, stopping before execution");
         return Ok(());
     }
-    let result = experiment::run_planned(&spec, &plan, &mut experiment::NoopObserver)?;
+    let result = experiment::run_planned_progress(
+        &spec,
+        &plan,
+        &mut experiment::NoopObserver,
+        args.bool("progress"),
+    )?;
     print_run_summary(
         &format!("run iters={}", spec.iterations),
         &result,
@@ -527,6 +546,37 @@ fn cmd_shard_node(args: &Args) -> Result<(), String> {
     crate::node::listen_and_serve(addr, &opts)
 }
 
+/// `matcha status ADDR`: one-shot, non-draining telemetry pull against
+/// a shard-node daemon — works while it is idle (pre-`Assign`) and
+/// mid-session (the daemon polls for side connections between
+/// commands), and never perturbs the run or its trace ring.
+fn cmd_status(rest: &[String]) -> Result<(), String> {
+    let Some(addr) = rest.first().filter(|a| !a.starts_with("--")) else {
+        return Err("status: ADDR is required (matcha status HOST:PORT)".into());
+    };
+    let args = Args::parse(&rest[1..])?;
+    let timeout_ms = args.usize_or("timeout-ms", 2_000)? as u64;
+    let t = crate::node::query_status(addr, timeout_ms)?;
+    use crate::trace::{Counter, UNASSIGNED_SHARD};
+    let session = if t.shard == UNASSIGNED_SHARD {
+        "idle (no shard assigned)".to_string()
+    } else {
+        format!("shard {}, round {}", t.shard, t.rounds_done)
+    };
+    println!(
+        "{addr}: {session}, {} reconnect(s) survived, up {:.1}s",
+        t.reconnects,
+        t.uptime_ms as f64 / 1000.0
+    );
+    println!(
+        "  steps {}, msgs folded {}, trace ring dropped {}",
+        t.registry.counter(Counter::ShardSteps),
+        t.registry.counter(Counter::ShardMsgsFolded),
+        t.ring_dropped
+    );
+    Ok(())
+}
+
 /// Streams one JSON line per finished sweep point (completion order).
 struct SweepJsonLines<'a> {
     budgets: &'a [f64],
@@ -729,11 +779,29 @@ fn cmd_trace_check(args: &Args) -> Result<(), String> {
     };
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("trace-check: cannot read {path}: {e}"))?;
-    let check = crate::trace::validate_chrome_trace(&text)?;
-    println!(
-        "{path}: well-formed Chrome trace, {} events on {} tracks",
-        check.events, check.tracks
-    );
+    match crate::trace::TraceFormat::parse(args.str_or("format", "chrome"))? {
+        crate::trace::TraceFormat::Chrome => {
+            let check = crate::trace::validate_chrome_trace(&text)?;
+            println!(
+                "{path}: well-formed Chrome trace, {} events on {} tracks across {} process(es)",
+                check.events, check.tracks, check.pids
+            );
+            if let Some(dropped) = check.dropped.filter(|&d| d > 0) {
+                eprintln!(
+                    "warning: {path}: {dropped} record(s) were overwritten in the trace ring(s) \
+                     before export — the trace is truncated; raise trace.capacity (or \
+                     trace.telemetry_capacity for daemon rings)"
+                );
+            }
+        }
+        crate::trace::TraceFormat::Jsonl => {
+            let check = crate::trace::validate_jsonl_trace(&text)?;
+            println!(
+                "{path}: well-formed JSONL trace, {} record(s) across {} event kind(s)",
+                check.records, check.kinds
+            );
+        }
+    }
     Ok(())
 }
 
@@ -1292,6 +1360,38 @@ mod tests {
 
         assert!(run(&sv(&["bench-regress", "--history", &h])).unwrap_err().contains("--artifact"));
         assert!(run(&sv(&["bench-regress", "--artifact", &a])).unwrap_err().contains("--history"));
+    }
+
+    #[test]
+    fn trace_check_validates_jsonl_format() {
+        let dir = std::env::temp_dir().join("matcha_cli_trace_jsonl");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        std::fs::write(
+            &path,
+            "{\"ev\": \"round_barrier\", \"k\": 0, \"vt\": 1.0, \"wall_ns\": 5}\n",
+        )
+        .unwrap();
+        let p = path.to_str().unwrap();
+        run(&sv(&["trace-check", "--file", p, "--format", "jsonl"])).unwrap();
+        assert!(run(&sv(&["trace-check", "--file", p, "--format", "pprof"])).is_err());
+        // A JSONL stream is not a Chrome trace.
+        assert!(run(&sv(&["trace-check", "--file", p])).is_err());
+    }
+
+    #[test]
+    fn status_requires_addr_and_fails_on_dead_daemon() {
+        assert!(run(&sv(&["status"])).unwrap_err().contains("ADDR"));
+        assert!(run(&sv(&["status", "--timeout-ms", "100"])).unwrap_err().contains("ADDR"));
+        // A port nothing listens on: connect fails fast with an error,
+        // not a hang (tested against a genuinely dead localhost port).
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = l.local_addr().unwrap().to_string();
+            drop(l);
+            addr
+        };
+        assert!(run(&sv(&["status", &dead, "--timeout-ms", "300"])).is_err());
     }
 
     #[cfg(not(feature = "xla"))]

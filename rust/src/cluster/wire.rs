@@ -23,6 +23,9 @@
 //! Encoding round-trips exactly (`encode` ∘ `decode` = id), fuzz-tested
 //! below over randomized messages and corruptions.
 
+use crate::trace::metrics::{Histogram, MetricsRegistry, HIST_BUCKETS, NUM_COUNTERS, NUM_HISTS};
+use crate::trace::{Counter, Hist, NodeTelemetry, TraceEvent, TraceRecord};
+
 /// Current wire protocol version (first body byte of every frame).
 pub const WIRE_VERSION: u8 = 1;
 
@@ -51,6 +54,25 @@ const TAG_SHUTDOWN: u8 = 0x05;
 const TAG_ASSIGN: u8 = 0x06;
 const TAG_VERSION_REJECT: u8 = 0x07;
 const TAG_RESUME: u8 = 0x08;
+const TAG_TELEMETRY_PULL: u8 = 0x09;
+const TAG_TELEMETRY_SNAPSHOT: u8 = 0x0a;
+
+// Trace-event subtags inside a telemetry snapshot, in
+// `TraceEvent` declaration order.
+const EV_COMPUTE_BEGIN: u8 = 0;
+const EV_COMPUTE_END: u8 = 1;
+const EV_LINK_BEGIN: u8 = 2;
+const EV_LINK_END: u8 = 3;
+const EV_MIX_APPLIED: u8 = 4;
+const EV_ROUND_BARRIER: u8 = 5;
+const EV_FRAME_SENT: u8 = 6;
+const EV_FRAME_RECEIVED: u8 = 7;
+const EV_RECONNECT: u8 = 8;
+const EV_STALE_EXCHANGE: u8 = 9;
+
+/// Minimum encoded size of one telemetry trace record: subtag byte +
+/// `vt` + `wall_ns` (the allocation guard for record counts).
+const MIN_RECORD_BYTES: usize = 17;
 
 /// Typed decode/transport failure. Every malformed input maps to one of
 /// these — the wire layer never panics on bytes it did not produce.
@@ -155,6 +177,16 @@ pub enum WireMsg {
     /// a rejoining shard from the last fully-acked round instead of
     /// restarting the run.
     Resume { done: u64, steps: u64, folded: u64, dim: u32, states: Vec<f64> },
+    /// Puller → daemon: ask for a telemetry snapshot. Never a phase
+    /// command — it does not advance the daemon's `done` counter and
+    /// never enters the coordinator's pending/replay machinery.
+    /// `drain: true` (coordinator harvest) empties the daemon's trace
+    /// ring into the reply; `drain: false` (`matcha status`) leaves the
+    /// ring intact and ships health + metrics only.
+    TelemetryPull { drain: bool },
+    /// Daemon → puller: session health, the cumulative metric registry
+    /// and (on draining pulls) the ring's trace records.
+    TelemetrySnapshot { telemetry: NodeTelemetry },
 }
 
 impl WireMsg {
@@ -222,6 +254,14 @@ impl WireMsg {
                 for &x in states {
                     put_f64(out, x);
                 }
+            }
+            WireMsg::TelemetryPull { drain } => {
+                out.push(TAG_TELEMETRY_PULL);
+                out.push(u8::from(*drain));
+            }
+            WireMsg::TelemetrySnapshot { telemetry } => {
+                out.push(TAG_TELEMETRY_SNAPSHOT);
+                put_telemetry(out, telemetry);
             }
         }
         let body = out.len() - at - FRAME_HEADER_BYTES;
@@ -311,6 +351,10 @@ impl WireMsg {
                 }
                 WireMsg::Resume { done, steps, folded, dim, states }
             }
+            TAG_TELEMETRY_PULL => WireMsg::TelemetryPull { drain: r.u8()? != 0 },
+            TAG_TELEMETRY_SNAPSHOT => {
+                WireMsg::TelemetrySnapshot { telemetry: read_telemetry(&mut r)? }
+            }
             other => return Err(WireError::BadTag(other)),
         };
         if r.at != body.len() {
@@ -365,6 +409,192 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
 fn put_str(out: &mut Vec<u8>, s: &str) {
     put_u64(out, s.len() as u64);
     out.extend_from_slice(s.as_bytes());
+}
+
+// -- telemetry payload ------------------------------------------------
+//
+// Layout: shard u32; five health u64s (rounds_done, reconnects,
+// uptime_ms, ring_dropped, wall_now_ns); the fixed-slot registry
+// (NUM_COUNTERS u64s in `Counter::ALL` order, then NUM_HISTS
+// histograms as count u64, sum/min/max f64, HIST_BUCKETS u64s); then
+// a u32 record count and each record as [subtag u8][fields][vt f64]
+// [wall_ns u64]. Everything is fixed-width except the record list.
+
+fn put_telemetry(out: &mut Vec<u8>, t: &NodeTelemetry) {
+    put_u32(out, t.shard);
+    put_u64(out, t.rounds_done);
+    put_u64(out, t.reconnects);
+    put_u64(out, t.uptime_ms);
+    put_u64(out, t.ring_dropped);
+    put_u64(out, t.wall_now_ns);
+    for c in Counter::ALL {
+        put_u64(out, t.registry.counter(c));
+    }
+    for h in Hist::ALL {
+        let hist = t.registry.hist(h);
+        put_u64(out, hist.count);
+        put_f64(out, hist.sum);
+        put_f64(out, hist.min);
+        put_f64(out, hist.max);
+        for &b in hist.buckets() {
+            put_u64(out, b);
+        }
+    }
+    put_u32(out, u32::try_from(t.records.len()).expect("telemetry record count fits u32"));
+    for rec in &t.records {
+        put_record(out, rec);
+    }
+}
+
+fn put_record(out: &mut Vec<u8>, rec: &TraceRecord) {
+    match rec.ev {
+        TraceEvent::ComputeBegin { worker, k } => {
+            out.push(EV_COMPUTE_BEGIN);
+            put_u64(out, worker as u64);
+            put_u64(out, k as u64);
+        }
+        TraceEvent::ComputeEnd { worker, k } => {
+            out.push(EV_COMPUTE_END);
+            put_u64(out, worker as u64);
+            put_u64(out, k as u64);
+        }
+        TraceEvent::LinkBegin { matching, u, v, k } => {
+            out.push(EV_LINK_BEGIN);
+            put_u64(out, matching as u64);
+            put_u64(out, u as u64);
+            put_u64(out, v as u64);
+            put_u64(out, k as u64);
+        }
+        TraceEvent::LinkEnd { matching, u, v, k, failed } => {
+            out.push(EV_LINK_END);
+            put_u64(out, matching as u64);
+            put_u64(out, u as u64);
+            put_u64(out, v as u64);
+            put_u64(out, k as u64);
+            out.push(u8::from(failed));
+        }
+        TraceEvent::MixApplied { k, activated } => {
+            out.push(EV_MIX_APPLIED);
+            put_u64(out, k as u64);
+            put_u64(out, activated as u64);
+        }
+        TraceEvent::RoundBarrier { k } => {
+            out.push(EV_ROUND_BARRIER);
+            put_u64(out, k as u64);
+        }
+        TraceEvent::FrameSent { link, bytes } => {
+            out.push(EV_FRAME_SENT);
+            put_u64(out, link as u64);
+            put_u64(out, bytes);
+        }
+        TraceEvent::FrameReceived { link, bytes } => {
+            out.push(EV_FRAME_RECEIVED);
+            put_u64(out, link as u64);
+            put_u64(out, bytes);
+        }
+        TraceEvent::Reconnect { link, resumed } => {
+            out.push(EV_RECONNECT);
+            put_u64(out, link as u64);
+            put_u64(out, resumed);
+        }
+        TraceEvent::StaleExchange { worker, peer, staleness, k } => {
+            out.push(EV_STALE_EXCHANGE);
+            put_u64(out, worker as u64);
+            put_u64(out, peer as u64);
+            put_u64(out, staleness as u64);
+            put_u64(out, k as u64);
+        }
+    }
+    put_f64(out, rec.vt);
+    put_u64(out, rec.wall_ns);
+}
+
+fn read_telemetry(r: &mut Reader<'_>) -> Result<NodeTelemetry, WireError> {
+    let shard = r.u32()?;
+    let rounds_done = r.u64()?;
+    let reconnects = r.u64()?;
+    let uptime_ms = r.u64()?;
+    let ring_dropped = r.u64()?;
+    let wall_now_ns = r.u64()?;
+    let mut counters = [0u64; NUM_COUNTERS];
+    for c in counters.iter_mut() {
+        *c = r.u64()?;
+    }
+    let mut hists = [Histogram::default(); NUM_HISTS];
+    for h in hists.iter_mut() {
+        let count = r.u64()?;
+        let sum = r.f64()?;
+        let min = r.f64()?;
+        let max = r.f64()?;
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for b in buckets.iter_mut() {
+            *b = r.u64()?;
+        }
+        *h = Histogram::from_parts(count, sum, min, max, buckets);
+    }
+    let registry = MetricsRegistry::from_parts(counters, hists);
+    let count = r.u32()? as usize;
+    r.need(count, MIN_RECORD_BYTES)?;
+    let mut records = Vec::with_capacity(count);
+    for _ in 0..count {
+        records.push(read_record(r)?);
+    }
+    Ok(NodeTelemetry {
+        shard,
+        rounds_done,
+        reconnects,
+        uptime_ms,
+        ring_dropped,
+        wall_now_ns,
+        records,
+        registry,
+    })
+}
+
+fn read_record(r: &mut Reader<'_>) -> Result<TraceRecord, WireError> {
+    let subtag = r.u8()?;
+    let ev = match subtag {
+        EV_COMPUTE_BEGIN => {
+            TraceEvent::ComputeBegin { worker: r.u64()? as usize, k: r.u64()? as usize }
+        }
+        EV_COMPUTE_END => {
+            TraceEvent::ComputeEnd { worker: r.u64()? as usize, k: r.u64()? as usize }
+        }
+        EV_LINK_BEGIN => TraceEvent::LinkBegin {
+            matching: r.u64()? as usize,
+            u: r.u64()? as usize,
+            v: r.u64()? as usize,
+            k: r.u64()? as usize,
+        },
+        EV_LINK_END => TraceEvent::LinkEnd {
+            matching: r.u64()? as usize,
+            u: r.u64()? as usize,
+            v: r.u64()? as usize,
+            k: r.u64()? as usize,
+            failed: r.u8()? != 0,
+        },
+        EV_MIX_APPLIED => {
+            TraceEvent::MixApplied { k: r.u64()? as usize, activated: r.u64()? as usize }
+        }
+        EV_ROUND_BARRIER => TraceEvent::RoundBarrier { k: r.u64()? as usize },
+        EV_FRAME_SENT => TraceEvent::FrameSent { link: r.u64()? as usize, bytes: r.u64()? },
+        EV_FRAME_RECEIVED => {
+            TraceEvent::FrameReceived { link: r.u64()? as usize, bytes: r.u64()? }
+        }
+        EV_RECONNECT => TraceEvent::Reconnect { link: r.u64()? as usize, resumed: r.u64()? },
+        EV_STALE_EXCHANGE => TraceEvent::StaleExchange {
+            worker: r.u64()? as usize,
+            peer: r.u64()? as usize,
+            staleness: r.u64()? as usize,
+            k: r.u64()? as usize,
+        },
+        other => {
+            return Err(WireError::Inconsistent(format!(
+                "unknown telemetry event subtag {other:#04x}"
+            )))
+        }
+    };
+    Ok(TraceRecord { ev, vt: r.f64()?, wall_ns: r.u64()? })
 }
 
 /// Bounds-checked cursor over a frame body.
@@ -442,7 +672,7 @@ mod tests {
     }
 
     fn random_msg(rng: &mut Rng) -> WireMsg {
-        match rng.next_u64() % 8 {
+        match rng.next_u64() % 10 {
             0 => WireMsg::Hello {
                 shard: (rng.next_u64() % 1000) as u32,
                 proto: (rng.next_u64() % 4) as u32,
@@ -499,7 +729,56 @@ mod tests {
                     states: (0..rows * dim).map(|_| rng.normal()).collect(),
                 }
             }
+            7 => WireMsg::TelemetryPull { drain: rng.next_u64() % 2 == 0 },
+            8 => WireMsg::TelemetrySnapshot { telemetry: random_telemetry(rng) },
             _ => WireMsg::Shutdown,
+        }
+    }
+
+    fn random_record(rng: &mut Rng) -> TraceRecord {
+        let w = (rng.next_u64() % 64) as usize;
+        let k = (rng.next_u64() % 1000) as usize;
+        let ev = match rng.next_u64() % 10 {
+            0 => TraceEvent::ComputeBegin { worker: w, k },
+            1 => TraceEvent::ComputeEnd { worker: w, k },
+            2 => TraceEvent::LinkBegin { matching: w % 8, u: w, v: w + 1, k },
+            3 => TraceEvent::LinkEnd {
+                matching: w % 8,
+                u: w,
+                v: w + 1,
+                k,
+                failed: rng.next_u64() % 2 == 0,
+            },
+            4 => TraceEvent::MixApplied { k, activated: w % 4 },
+            5 => TraceEvent::RoundBarrier { k },
+            6 => TraceEvent::FrameSent { link: w % 4, bytes: rng.next_u64() % (1 << 32) },
+            7 => TraceEvent::FrameReceived { link: w % 4, bytes: rng.next_u64() % (1 << 32) },
+            8 => TraceEvent::Reconnect { link: w % 4, resumed: rng.next_u64() % 64 },
+            _ => TraceEvent::StaleExchange { worker: w, peer: w + 1, staleness: k % 7, k },
+        };
+        TraceRecord { ev, vt: rng.normal(), wall_ns: rng.next_u64() % (1 << 50) }
+    }
+
+    fn random_telemetry(rng: &mut Rng) -> NodeTelemetry {
+        let mut registry = MetricsRegistry::new();
+        for c in Counter::ALL {
+            registry.count(c, rng.next_u64() % 10_000);
+        }
+        for h in Hist::ALL {
+            for _ in 0..rng.next_u64() % 5 {
+                registry.observe(h, rng.normal().abs() * 10.0);
+            }
+        }
+        let n = (rng.next_u64() % 12) as usize;
+        NodeTelemetry {
+            shard: (rng.next_u64() % 64) as u32,
+            rounds_done: rng.next_u64() % (1 << 40),
+            reconnects: rng.next_u64() % 16,
+            uptime_ms: rng.next_u64() % (1 << 40),
+            ring_dropped: rng.next_u64() % 1000,
+            wall_now_ns: rng.next_u64() % (1 << 50),
+            records: (0..n).map(|_| random_record(rng)).collect(),
+            registry,
         }
     }
 
@@ -530,9 +809,121 @@ mod tests {
                 dim: 2,
                 states: vec![1.0, -0.5, 3.25, 0.0],
             },
+            WireMsg::TelemetryPull { drain: true },
+            WireMsg::TelemetryPull { drain: false },
+            WireMsg::TelemetrySnapshot {
+                telemetry: {
+                    let mut registry = MetricsRegistry::new();
+                    registry.count(Counter::ShardSteps, 360);
+                    registry.count(Counter::ShardMsgsFolded, 90);
+                    registry.observe(Hist::QueueDepth, 3.0);
+                    NodeTelemetry {
+                        shard: 1,
+                        rounds_done: 60,
+                        reconnects: 2,
+                        uptime_ms: 1234,
+                        ring_dropped: 7,
+                        wall_now_ns: 987_654_321,
+                        records: vec![
+                            TraceRecord {
+                                ev: TraceEvent::ComputeBegin { worker: 1, k: 5 },
+                                vt: 5.0,
+                                wall_ns: 100,
+                            },
+                            TraceRecord {
+                                ev: TraceEvent::ComputeEnd { worker: 1, k: 5 },
+                                vt: 6.0,
+                                wall_ns: 250,
+                            },
+                            TraceRecord {
+                                ev: TraceEvent::MixApplied { k: 5, activated: 2 },
+                                vt: 6.0,
+                                wall_ns: 300,
+                            },
+                        ],
+                        registry,
+                    }
+                },
+            },
+            WireMsg::TelemetrySnapshot { telemetry: NodeTelemetry::default() },
         ];
         for msg in &msgs {
             assert_eq!(&roundtrip(msg), msg);
+        }
+    }
+
+    #[test]
+    fn telemetry_snapshot_covers_every_event_kind() {
+        // One record per TraceEvent variant must survive the wire.
+        let records = vec![
+            TraceRecord { ev: TraceEvent::ComputeBegin { worker: 0, k: 1 }, vt: 0.5, wall_ns: 1 },
+            TraceRecord { ev: TraceEvent::ComputeEnd { worker: 0, k: 1 }, vt: 1.5, wall_ns: 2 },
+            TraceRecord {
+                ev: TraceEvent::LinkBegin { matching: 2, u: 0, v: 3, k: 1 },
+                vt: 1.5,
+                wall_ns: 3,
+            },
+            TraceRecord {
+                ev: TraceEvent::LinkEnd { matching: 2, u: 0, v: 3, k: 1, failed: true },
+                vt: 2.0,
+                wall_ns: 4,
+            },
+            TraceRecord { ev: TraceEvent::MixApplied { k: 1, activated: 3 }, vt: 2.0, wall_ns: 5 },
+            TraceRecord { ev: TraceEvent::RoundBarrier { k: 1 }, vt: 2.0, wall_ns: 6 },
+            TraceRecord { ev: TraceEvent::FrameSent { link: 1, bytes: 640 }, vt: 2.0, wall_ns: 7 },
+            TraceRecord {
+                ev: TraceEvent::FrameReceived { link: 1, bytes: 320 },
+                vt: 2.0,
+                wall_ns: 8,
+            },
+            TraceRecord { ev: TraceEvent::Reconnect { link: 1, resumed: 4 }, vt: 2.5, wall_ns: 9 },
+            TraceRecord {
+                ev: TraceEvent::StaleExchange { worker: 0, peer: 3, staleness: 2, k: 1 },
+                vt: 3.0,
+                wall_ns: 10,
+            },
+        ];
+        let telemetry = NodeTelemetry { records, ..NodeTelemetry::default() };
+        let msg = WireMsg::TelemetrySnapshot { telemetry };
+        assert_eq!(roundtrip(&msg), msg);
+    }
+
+    #[test]
+    fn telemetry_truncation_at_every_length_is_a_typed_error() {
+        let mut rng = Rng::new(0x7e1e);
+        let msg = WireMsg::TelemetrySnapshot { telemetry: random_telemetry(&mut rng) };
+        let mut frame = Vec::new();
+        msg.encode(&mut frame);
+        let body = &frame[FRAME_HEADER_BYTES..];
+        for cut in 0..body.len() {
+            match WireMsg::decode(&body[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn telemetry_unknown_event_subtag_is_rejected() {
+        let telemetry = NodeTelemetry {
+            records: vec![TraceRecord {
+                ev: TraceEvent::RoundBarrier { k: 0 },
+                vt: 0.0,
+                wall_ns: 0,
+            }],
+            ..NodeTelemetry::default()
+        };
+        let mut frame = Vec::new();
+        WireMsg::TelemetrySnapshot { telemetry }.encode(&mut frame);
+        let mut body = frame[FRAME_HEADER_BYTES..].to_vec();
+        // The record list is the trailing 25 bytes; its first byte is
+        // the subtag.
+        let subtag_at = body.len() - 25;
+        assert_eq!(body[subtag_at], 5, "round_barrier subtag moved — update this test");
+        body[subtag_at] = 0xce;
+        match WireMsg::decode(&body) {
+            Err(WireError::Inconsistent(msg)) => assert!(msg.contains("subtag"), "{msg}"),
+            other => panic!("expected Inconsistent, got {other:?}"),
         }
     }
 

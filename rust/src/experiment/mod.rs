@@ -55,11 +55,12 @@ mod spec;
 
 pub use observer::{NoopObserver, Observer};
 pub use plan::{plan, Plan};
-pub(crate) use run::{build_problem, BuiltProblem};
+pub(crate) use run::{build_problem, run_planned_progress, BuiltProblem};
 pub use run::{
-    run, run_observed, run_planned, run_planned_traced, run_sweep, ExperimentResult,
+    run, run_observed, run_planned, run_planned_traced, run_sweep, run_with_progress,
+    ExperimentResult,
 };
 pub use spec::{
     Backend, ExperimentSpec, GraphSource, ProblemSpec, Strategy, TraceSpec,
-    DEFAULT_TRACE_CAPACITY,
+    DEFAULT_TELEMETRY_CAPACITY, DEFAULT_TRACE_CAPACITY,
 };

@@ -22,7 +22,10 @@ use crate::sim::{
     run_decentralized_traced, LogisticProblem, LogisticSpec, QuadraticProblem, RunResult,
 };
 use crate::state::StateMatrix;
-use crate::trace::{write_trace, MetricsSnapshot, RingSink, Tracer};
+use crate::trace::{
+    chrome_trace_merged, write_trace, MetricsSnapshot, PidTrack, RingSink, TelemetryCollector,
+    TraceFormat, TraceRecord, Tracer,
+};
 
 /// The unified outcome of a spec-driven run: plan-derived quantities,
 /// the metric series, and summary statistics from whichever backend
@@ -236,6 +239,19 @@ pub fn run_observed(
     run_planned(spec, &plan, observer)
 }
 
+/// [`run_observed`] plus optional live progress: with `progress` set on
+/// a remote cluster spec, every telemetry harvest prints a per-shard
+/// `progress: shard S round R (...)` line to stderr. On every other
+/// backend (or with `progress` false) this is exactly [`run_observed`].
+pub fn run_with_progress(
+    spec: &ExperimentSpec,
+    observer: &mut dyn Observer,
+    progress: bool,
+) -> Result<ExperimentResult, String> {
+    let plan = plan(spec)?;
+    run_planned_progress(spec, &plan, observer, progress)
+}
+
 /// Run with a precomputed plan (lets callers plan once and reuse — the
 /// sweep driver and `--dry-run` both lean on this split).
 ///
@@ -249,26 +265,71 @@ pub fn run_planned(
     plan: &Plan,
     observer: &mut dyn Observer,
 ) -> Result<ExperimentResult, String> {
+    run_planned_progress(spec, plan, observer, false)
+}
+
+/// A collector when this run harvests daemon telemetry: remote cluster
+/// backend, and either the trace block left `telemetry` on (its
+/// default) or the caller asked for live `--progress` lines.
+fn telemetry_collector(spec: &ExperimentSpec, progress: bool) -> Option<TelemetryCollector> {
+    let shards = match &spec.backend {
+        Backend::Cluster { shards, transport: TransportKind::Remote { .. } } => *shards,
+        _ => return None,
+    };
+    if !spec.trace.as_ref().map_or(progress, |t| t.telemetry || progress) {
+        return None;
+    }
+    let mut collector = TelemetryCollector::new(shards);
+    if progress {
+        collector.enable_progress();
+    }
+    Some(collector)
+}
+
+/// [`run_planned`] with the telemetry/progress policy applied: builds
+/// the collector when the spec warrants one, runs, and writes the trace
+/// file — a merged per-process Chrome export when daemon telemetry was
+/// harvested, the plain single-process export otherwise.
+pub(crate) fn run_planned_progress(
+    spec: &ExperimentSpec,
+    plan: &Plan,
+    observer: &mut dyn Observer,
+    progress: bool,
+) -> Result<ExperimentResult, String> {
+    let mut collector = telemetry_collector(spec, progress);
     match &spec.trace {
         Some(ts) => {
             let mut sink = RingSink::new(ts.capacity);
             let result = {
                 let mut tracer = Tracer::attached(&mut sink);
-                run_planned_traced(spec, plan, observer, &mut tracer)?
+                run_planned_telemetry(spec, plan, observer, &mut tracer, collector.as_mut())?
             };
-            let other = trace_side_data(&result);
+            let dropped = sink.dropped() + collector.as_ref().map_or(0, |c| c.dropped_total());
+            let other = trace_side_data(&result, dropped);
             let path = std::path::Path::new(&ts.path);
-            write_trace(path, ts.format, &sink.records(), &other)?;
+            let records = sink.records();
+            match (&collector, ts.format) {
+                // Merged multi-process export: coordinator pid 0 on its
+                // virtual timeline, one wall-clock pid per daemon.
+                (Some(c), TraceFormat::Chrome) => write_merged_trace(path, &records, c, &other)?,
+                // JSONL stays a single stream: the coordinator's records.
+                _ => write_trace(path, ts.format, &records, &other)?,
+            }
             Ok(result)
         }
-        None => run_planned_traced(spec, plan, observer, &mut Tracer::disabled()),
+        None => {
+            run_planned_telemetry(spec, plan, observer, &mut Tracer::disabled(), collector.as_mut())
+        }
     }
 }
 
 /// The `otherData` payload attached to Chrome exports: the run's
-/// counter/histogram snapshot plus a per-series summary of the metric
-/// recorder.
-fn trace_side_data(result: &ExperimentResult) -> Json {
+/// counter/histogram snapshot, a per-series summary of the metric
+/// recorder, and how many records the producing ring(s) overwrote
+/// (coordinator sink plus every harvested daemon ring) — non-zero means
+/// the export is truncated at the source, which `matcha trace-check`
+/// warns about.
+fn trace_side_data(result: &ExperimentResult, dropped_records: u64) -> Json {
     let mut series = Vec::new();
     for (name, s) in result.metrics.summaries() {
         series.push((name, s.to_json()));
@@ -276,7 +337,43 @@ fn trace_side_data(result: &ExperimentResult) -> Json {
     Json::obj(vec![
         ("metrics", result.snapshot.to_json()),
         ("series", Json::obj(series)),
+        ("dropped_records", Json::Num(dropped_records as f64)),
     ])
+}
+
+/// Write the distributed-telemetry Chrome export: the coordinator's
+/// records as `pid` 0 on its deterministic virtual timeline, and each
+/// harvested daemon ring as `pid s + 1` placed by wall clock through
+/// the epoch offset fixed at that shard's first pull.
+fn write_merged_trace(
+    path: &std::path::Path,
+    coordinator: &[TraceRecord],
+    collector: &TelemetryCollector,
+    other_data: &Json,
+) -> Result<(), String> {
+    let mut tracks = Vec::with_capacity(1 + collector.shard_count());
+    tracks.push(PidTrack {
+        pid: 0,
+        name: "coordinator".into(),
+        records: coordinator,
+        wall_offset_ns: None,
+    });
+    for s in 0..collector.shard_count() {
+        tracks.push(PidTrack {
+            pid: s + 1,
+            name: format!("shard {s}"),
+            records: collector.records(s),
+            wall_offset_ns: Some(collector.wall_offset_ns(s)),
+        });
+    }
+    let text = chrome_trace_merged(&tracks, other_data).to_string();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("trace: cannot create {}: {e}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, text).map_err(|e| format!("trace: cannot write {}: {e}", path.display()))
 }
 
 /// Run with a precomputed plan, emitting events and metrics through
@@ -288,19 +385,38 @@ pub fn run_planned_traced(
     observer: &mut dyn Observer,
     tracer: &mut Tracer<'_>,
 ) -> Result<ExperimentResult, String> {
+    run_planned_telemetry(spec, plan, observer, tracer, None)
+}
+
+/// [`run_planned_traced`] plus distributed-telemetry harvesting: with a
+/// collector, the remote coordinator pulls every daemon's trace ring,
+/// registry and health over the wire, and the result's snapshot becomes
+/// the daemon-authoritative aggregate instead of the coordinator's own
+/// estimates. Ignored (and irrelevant) on every non-remote backend.
+pub(crate) fn run_planned_telemetry(
+    spec: &ExperimentSpec,
+    plan: &Plan,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
+    mut collector: Option<&mut TelemetryCollector>,
+) -> Result<ExperimentResult, String> {
     // Remote cluster runs talk to pre-existing shard-node daemons; the
     // pipelined coordinator in `crate::node` owns that path end to end
     // (its own dial/handshake/reconnect lifecycle, same engine loop).
     if let Backend::Cluster { transport: TransportKind::Remote { .. }, .. } = &spec.backend {
-        let r = crate::node::run_remote_planned_traced(
+        let r = crate::node::run_remote_planned_telemetry(
             spec,
             plan,
             &crate::node::RemoteOptions::default(),
             observer,
             tracer,
+            collector.as_deref_mut(),
         )?;
         let mut result = ExperimentResult::from_cluster(plan, r);
-        result.snapshot = MetricsSnapshot::from_registry(&tracer.registry);
+        result.snapshot = match &collector {
+            Some(c) => MetricsSnapshot::from_registry(&c.aggregate(&tracer.registry)),
+            None => MetricsSnapshot::from_registry(&tracer.registry),
+        };
         return Ok(result);
     }
     let cfg = plan.run_config(spec)?;
@@ -715,6 +831,8 @@ mod tests {
             path: path.to_string_lossy().into_owned(),
             format: TraceFormat::Chrome,
             capacity: 8192,
+            telemetry: true,
+            telemetry_capacity: 8192,
         });
         let res = run(&spec).unwrap();
         assert!(res.snapshot.counter(Counter::ComputeEvents) > 0);
@@ -722,6 +840,8 @@ mod tests {
         let check = validate_chrome_trace(&text).unwrap();
         assert!(check.events > 0);
         assert!(text.contains("otherData"), "metric summaries attach to the export");
+        // A ring that never overflowed advertises zero dropped records.
+        assert_eq!(check.dropped, Some(0));
         std::fs::remove_file(&path).ok();
     }
 }

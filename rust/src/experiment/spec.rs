@@ -196,9 +196,16 @@ impl Backend {
 /// Default trace ring capacity when the spec's `trace` block omits it.
 pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
 
+/// Default per-daemon trace ring capacity for remote runs when the
+/// spec's `trace` block omits `telemetry_capacity`. Smaller than the
+/// coordinator's ring: each daemon's records cross the wire at every
+/// harvest, so the ring only has to cover one harvest interval.
+pub const DEFAULT_TELEMETRY_CAPACITY: usize = 8_192;
+
 /// Where and how a run writes its event trace. JSON form:
 /// `{"path": "out.json", "format": "chrome" | "jsonl",
-/// "capacity": 65536}` (`format` and `capacity` optional).
+/// "capacity": 65536, "telemetry": true, "telemetry_capacity": 8192}`
+/// (everything but `path` optional).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceSpec {
     /// Output file path.
@@ -208,6 +215,14 @@ pub struct TraceSpec {
     /// Ring-buffer capacity in records; when a run emits more, the
     /// oldest records are dropped.
     pub capacity: usize,
+    /// For remote cluster runs: harvest every daemon's telemetry
+    /// (trace ring + metrics + health) and merge it into the export as
+    /// one Chrome `pid` track per shard. On by default; results are
+    /// bit-for-bit identical either way. Ignored by in-process
+    /// backends.
+    pub telemetry: bool,
+    /// Per-daemon trace ring capacity for remote runs.
+    pub telemetry_capacity: usize,
 }
 
 /// A complete, declarative description of one experiment. See the module
@@ -555,6 +570,9 @@ impl ExperimentSpec {
             if trace.capacity == 0 {
                 return Err("trace: capacity must be >= 1".into());
             }
+            if trace.telemetry_capacity == 0 {
+                return Err("trace: telemetry_capacity must be >= 1".into());
+            }
         }
         // The policy grammar needs the graph and the run config, so
         // validate it with a probe config mirroring what the run builds.
@@ -705,14 +723,16 @@ impl ExperimentSpec {
             ("run", Json::obj(run)),
         ];
         if let Some(trace) = &self.trace {
-            // All three fields are emitted so the round-trip is exact
-            // even when they match the parse defaults.
+            // Every field is emitted so the round-trip is exact even
+            // when they match the parse defaults.
             top.push((
                 "trace",
                 Json::obj(vec![
                     ("path", Json::Str(trace.path.clone())),
                     ("format", Json::Str(trace.format.name().into())),
                     ("capacity", Json::Num(trace.capacity as f64)),
+                    ("telemetry", Json::Bool(trace.telemetry)),
+                    ("telemetry_capacity", Json::Num(trace.telemetry_capacity as f64)),
                 ]),
             ));
         }
@@ -797,7 +817,7 @@ fn parse_trace(json: &Json) -> Result<TraceSpec, String> {
     let obj = json
         .as_object()
         .ok_or("trace: must be {\"path\": \"...\", \"format\": ..., \"capacity\": ...}")?;
-    known_keys(obj, "trace", &["path", "format", "capacity"])?;
+    known_keys(obj, "trace", &["path", "format", "capacity", "telemetry", "telemetry_capacity"])?;
     let path = obj
         .get("path")
         .and_then(Json::as_str)
@@ -811,7 +831,13 @@ fn parse_trace(json: &Json) -> Result<TraceSpec, String> {
         }
     };
     let capacity = get_usize(obj, "trace", "capacity", DEFAULT_TRACE_CAPACITY)?;
-    Ok(TraceSpec { path, format, capacity })
+    let telemetry = match obj.get("telemetry") {
+        None => true,
+        Some(v) => v.as_bool().ok_or("trace: 'telemetry' must be a boolean")?,
+    };
+    let telemetry_capacity =
+        get_usize(obj, "trace", "telemetry_capacity", DEFAULT_TELEMETRY_CAPACITY)?;
+    Ok(TraceSpec { path, format, capacity, telemetry, telemetry_capacity })
 }
 
 fn known_keys(obj: &BTreeMap<String, Json>, ctx: &str, known: &[&str]) -> Result<(), String> {
@@ -1338,6 +1364,8 @@ mod tests {
                 path: "out/trace.json".into(),
                 format: TraceFormat::Jsonl,
                 capacity: 1024,
+                telemetry: false,
+                telemetry_capacity: 512,
             });
         let text = spec.to_json_string();
         let back = ExperimentSpec::parse(&text).unwrap();
@@ -1354,6 +1382,17 @@ mod tests {
         assert_eq!(trace.path, "t.json");
         assert_eq!(trace.format, TraceFormat::Chrome);
         assert_eq!(trace.capacity, DEFAULT_TRACE_CAPACITY);
+        assert!(trace.telemetry, "distributed telemetry defaults on");
+        assert_eq!(trace.telemetry_capacity, DEFAULT_TELEMETRY_CAPACITY);
+
+        let spec = ExperimentSpec::parse(
+            r#"{"graph": "fig1",
+                "trace": {"path": "t.json", "telemetry": false, "telemetry_capacity": 64}}"#,
+        )
+        .unwrap();
+        let trace = spec.trace.expect("trace block parsed");
+        assert!(!trace.telemetry);
+        assert_eq!(trace.telemetry_capacity, 64);
 
         let err = ExperimentSpec::parse(r#"{"graph": "fig1", "trace": {}}"#).unwrap_err();
         assert!(err.contains("path"), "{err}");
@@ -1362,16 +1401,33 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.contains("format"), "{err}");
+        let err = ExperimentSpec::parse(
+            r#"{"graph": "fig1", "trace": {"path": "t", "telemetry": 3}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("telemetry"), "{err}");
+        let base_trace = || TraceSpec {
+            path: "t".into(),
+            format: TraceFormat::Chrome,
+            capacity: 16,
+            telemetry: true,
+            telemetry_capacity: 16,
+        };
         let err = ExperimentSpec::new("fig1")
-            .trace(TraceSpec { path: String::new(), format: TraceFormat::Chrome, capacity: 16 })
+            .trace(TraceSpec { path: String::new(), ..base_trace() })
             .validate()
             .unwrap_err();
         assert!(err.contains("trace: path"), "{err}");
         let err = ExperimentSpec::new("fig1")
-            .trace(TraceSpec { path: "t".into(), format: TraceFormat::Chrome, capacity: 0 })
+            .trace(TraceSpec { capacity: 0, ..base_trace() })
             .validate()
             .unwrap_err();
         assert!(err.contains("trace: capacity"), "{err}");
+        let err = ExperimentSpec::new("fig1")
+            .trace(TraceSpec { telemetry_capacity: 0, ..base_trace() })
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("trace: telemetry_capacity"), "{err}");
     }
 
     #[test]

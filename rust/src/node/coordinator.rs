@@ -45,6 +45,18 @@
 //! reconnect is bit-for-bit the run that never dropped. Reconnects are
 //! observable as [`TraceEvent::Reconnect`] and the
 //! [`Counter::Reconnects`] metric.
+//!
+//! ## Telemetry harvest
+//!
+//! With a [`TelemetryCollector`] attached, the coordinator pulls every
+//! daemon's telemetry (drained trace ring + cumulative registry +
+//! session health) right after dialing, at every [`Executor::flush`]
+//! sync barrier, and once more before shutdown. Pulls only happen on a
+//! drained link (`acked == sent`), so the snapshot is deterministically
+//! the next inbound frame; they never enter the pending/replay
+//! machinery, and their wire traffic is tracked per link and excluded
+//! from the run's [`ClusterStats`] — the run's results and its byte
+//! accounting are bit-for-bit identical with telemetry on or off.
 
 use crate::cluster::driver::PlanReplay;
 use crate::cluster::{
@@ -60,7 +72,7 @@ use crate::gossip::{shard_workers, RoundPlan};
 use crate::graph::Graph;
 use crate::sim::{Problem, RunConfig};
 use crate::state::StateMatrix;
-use crate::trace::{Counter, TraceEvent, Tracer};
+use crate::trace::{Counter, NodeTelemetry, TelemetryCollector, TraceEvent, Tracer};
 use std::collections::VecDeque;
 use std::net::TcpStream;
 use std::time::Duration;
@@ -190,6 +202,55 @@ struct RemoteLink {
     /// Staged Mix rows whose peer lived on this shard (never needed the
     /// wire); folded into [`LinkStats::intra_bytes`] after the run.
     intra_rows: u64,
+    /// Wire traffic spent on telemetry pulls over this link's lifetime —
+    /// subtracted from the final stats so a telemetry-enabled run
+    /// reports exactly the traffic of the run itself.
+    tele_stats: LinkStats,
+}
+
+/// Exchange one draining `TelemetryPull` on a quiescent link.
+fn exchange_pull(
+    link: &mut RemoteLink,
+    scratch: &mut Vec<u8>,
+    body: &mut Vec<u8>,
+) -> Result<NodeTelemetry, WireError> {
+    link.tx.send_msg(&WireMsg::TelemetryPull { drain: true }, scratch)?;
+    match link.tx.recv_msg(body)? {
+        WireMsg::TelemetrySnapshot { telemetry } => Ok(telemetry),
+        other => {
+            Err(WireError::Inconsistent(format!("expected TelemetrySnapshot, got {other:?}")))
+        }
+    }
+}
+
+/// Harvest one daemon's telemetry over its live link and fold it into
+/// the collector. The caller must have drained the link
+/// (`acked == sent`) so the snapshot is deterministically the next
+/// inbound frame. The exchange's own wire traffic is accumulated into
+/// the link's `tele_stats` (even on failure — sent bytes are sent) so
+/// the run's stats can exclude it. Transport failures are returned for
+/// the caller to decide between reconnecting and skipping: pulls are
+/// observational and are never replayed.
+fn pull_link_telemetry(
+    link: &mut RemoteLink,
+    s: usize,
+    collector: &mut TelemetryCollector,
+    coord_wall_now_ns: u64,
+    scratch: &mut Vec<u8>,
+    body: &mut Vec<u8>,
+) -> Result<(), WireError> {
+    debug_assert_eq!(link.acked, link.sent, "telemetry pulls need a drained link");
+    let before = add_stats(link.stats_base, link.tx.stats());
+    // The link's run-only traffic so far: everything minus what earlier
+    // pulls cost (progress reporting only).
+    let run_bytes = (before.bytes_sent + before.bytes_received)
+        .saturating_sub(link.tele_stats.bytes_sent + link.tele_stats.bytes_received);
+    let outcome = exchange_pull(link, scratch, body);
+    let after = add_stats(link.stats_base, link.tx.stats());
+    link.tele_stats = add_stats(link.tele_stats, after.delta(&before));
+    let telemetry = outcome?;
+    collector.absorb(s, telemetry, coord_wall_now_ns, run_bytes);
+    Ok(())
 }
 
 /// The coordinator's link fleet plus the first unrecoverable failure.
@@ -226,6 +287,9 @@ struct PipelinedExec<'a> {
     /// Per-link combined-stats snapshot at each phase start, for the
     /// per-phase wire-traffic deltas.
     prev_stats: Vec<LinkStats>,
+    /// When present, every flush barrier also harvests each daemon's
+    /// telemetry into this collector.
+    collector: Option<&'a mut TelemetryCollector>,
 }
 
 impl<'a> PipelinedExec<'a> {
@@ -235,6 +299,7 @@ impl<'a> PipelinedExec<'a> {
         spec_json: &'a str,
         workers: usize,
         dim: usize,
+        collector: Option<&'a mut TelemetryCollector>,
     ) -> Self {
         let shards = state.links.len();
         PipelinedExec {
@@ -250,6 +315,7 @@ impl<'a> PipelinedExec<'a> {
             msgs: Vec::new(),
             staging: Vec::new(),
             prev_stats: vec![LinkStats::default(); shards],
+            collector,
         }
     }
 
@@ -562,6 +628,36 @@ impl<'a> PipelinedExec<'a> {
         self.account_traffic(tracer);
         Ok(())
     }
+
+    /// Pull every daemon's telemetry at a quiescent point (the caller
+    /// just synced, so every link is drained). A pull that dies with
+    /// its connection goes through the normal reconnect path and is
+    /// then *skipped* — pulls are observational, never replayed, and
+    /// the next barrier harvests the daemon's (cumulative) registry
+    /// again.
+    fn harvest(&mut self, xs: &mut StateMatrix, tracer: &mut Tracer<'_>) -> Result<(), String> {
+        if self.collector.is_none() {
+            return Ok(());
+        }
+        for s in 0..self.state.links.len() {
+            let wall = tracer.wall_now_ns();
+            let res = match self.collector.as_deref_mut() {
+                Some(collector) => pull_link_telemetry(
+                    &mut self.state.links[s],
+                    s,
+                    collector,
+                    wall,
+                    &mut self.scratch,
+                    &mut self.body,
+                ),
+                None => Ok(()),
+            };
+            if let Err(e) = res {
+                self.reconnect(s, xs, tracer, &e)?;
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Executor for PipelinedExec<'_> {
@@ -597,6 +693,10 @@ impl Executor for PipelinedExec<'_> {
             return;
         }
         if let Err(e) = self.sync(xs, tracer) {
+            self.state.failure = Some(e);
+            return;
+        }
+        if let Err(e) = self.harvest(xs, tracer) {
             self.state.failure = Some(e);
         }
     }
@@ -655,6 +755,20 @@ pub(crate) fn run_remote_planned_traced(
     observer: &mut dyn Observer,
     tracer: &mut Tracer<'_>,
 ) -> Result<ClusterResult, String> {
+    run_remote_planned_telemetry(spec, exp_plan, opts, observer, tracer, None)
+}
+
+/// [`run_remote_planned_traced`] plus distributed-telemetry harvesting:
+/// with a collector, every daemon's trace ring, registry and health are
+/// pulled after dialing, at each flush barrier, and before shutdown.
+pub(crate) fn run_remote_planned_telemetry(
+    spec: &ExperimentSpec,
+    exp_plan: &Plan,
+    opts: &RemoteOptions,
+    observer: &mut dyn Observer,
+    tracer: &mut Tracer<'_>,
+    collector: Option<&mut TelemetryCollector>,
+) -> Result<ClusterResult, String> {
     let (shards, addrs) = match &spec.backend {
         Backend::Cluster { shards, transport: TransportKind::Remote { addrs } } => {
             (*shards, addrs.as_slice())
@@ -686,11 +800,11 @@ pub(crate) fn run_remote_planned_traced(
     match &problem {
         BuiltProblem::Quad(p) => drive_remote(
             p, matchings, &round_plan, policy.as_mut(), &cfg, shards, addrs, &spec_json, opts,
-            observer, tracer,
+            observer, tracer, collector,
         ),
         BuiltProblem::Logreg(p) => drive_remote(
             p, matchings, &round_plan, policy.as_mut(), &cfg, shards, addrs, &spec_json, opts,
-            observer, tracer,
+            observer, tracer, collector,
         ),
     }
 }
@@ -709,6 +823,7 @@ fn drive_remote<P: Problem + ?Sized>(
     opts: &RemoteOptions,
     observer: &mut dyn Observer,
     tracer: &mut Tracer<'_>,
+    mut collector: Option<&mut TelemetryCollector>,
 ) -> Result<ClusterResult, String> {
     let m = problem.num_workers();
     let d = problem.dim();
@@ -742,18 +857,42 @@ fn drive_remote<P: Problem + ?Sized>(
             acked: 0,
             stats_base: LinkStats::default(),
             intra_rows: 0,
+            tele_stats: LinkStats::default(),
         });
     }
 
     let mut state = RemoteState { links, failure: None };
-    let exec = PipelinedExec::new(&mut state, opts, spec_json, m, d);
+    let mut scratch = Vec::new();
+    let mut body = Vec::new();
+    // The opening harvest: fixes each daemon's wall-clock offset while
+    // the timelines are as close as they will ever be, and surfaces the
+    // fleet's health before the first command. Best-effort — a failed
+    // pull surfaces on the first real frame and reconnects there.
+    if let Some(c) = collector.as_deref_mut() {
+        for (s, link) in state.links.iter_mut().enumerate() {
+            let wall = tracer.wall_now_ns();
+            if let Err(e) = pull_link_telemetry(link, s, c, wall, &mut scratch, &mut body) {
+                eprintln!("remote cluster: opening telemetry pull on link {s}: {e}");
+            }
+        }
+    }
+    let exec = PipelinedExec::new(&mut state, opts, spec_json, m, d, collector.as_deref_mut());
     let mut replay = PlanReplay { plan: round_plan };
     let result = drive(problem, matchings, &mut replay, policy, cfg, exec, observer, tracer);
 
     if let Some(e) = state.failure.take() {
         return Err(e);
     }
-    let mut scratch = Vec::new();
+    // The closing harvest: whatever the ring collected since the last
+    // flush barrier, plus final health, before the sessions end.
+    if let Some(c) = collector.as_deref_mut() {
+        for (s, link) in state.links.iter_mut().enumerate() {
+            let wall = tracer.wall_now_ns();
+            if let Err(e) = pull_link_telemetry(link, s, c, wall, &mut scratch, &mut body) {
+                eprintln!("remote cluster: closing telemetry pull on link {s}: {e}");
+            }
+        }
+    }
     for link in &mut state.links {
         // Best-effort: a daemon dying between its last ack and the
         // shutdown frame does not invalidate the finished run.
@@ -765,7 +904,9 @@ fn drive_remote<P: Problem + ?Sized>(
             .links
             .iter()
             .map(|link| {
-                let mut ls = add_stats(link.stats_base, link.tx.stats());
+                // Telemetry traffic is excluded: the reported stats are
+                // the run's own frames, identical with telemetry off.
+                let mut ls = add_stats(link.stats_base, link.tx.stats()).delta(&link.tele_stats);
                 // Each staged local-peer row carried 8·dim payload bytes
                 // that never needed a wire.
                 ls.intra_bytes = link.intra_rows * 8 * d as u64;

@@ -31,6 +31,20 @@
 //! - A connection assigning a different shard, shard count or spec than
 //!   the live session is rejected (logged, dropped) — a daemon serves
 //!   one assignment per lifetime-until-reset.
+//!
+//! ## Telemetry
+//!
+//! Every daemon runs its workload under a real [`Tracer`] (a
+//! [`RingSink`] plus the always-on metric registry), emitting
+//! compute/mix spans around each command it executes. A
+//! `TelemetryPull` frame — in-band on the command link, as the first
+//! frame of a fresh connection, or on a side connection polled between
+//! commands — is answered with a [`NodeTelemetry`] snapshot: session
+//! health (shard, rounds, reconnects survived, uptime, ring drops),
+//! the cumulative registry, and (on draining pulls) the ring's
+//! records. Pulls never advance `done`, never enter the replay
+//! machinery, and work even before the first `Assign` arrives, which
+//! is what makes `matcha status ADDR` answer against an idle daemon.
 
 use crate::cluster::driver::phase_cmd_from_wire;
 use crate::cluster::{TcpTransport, Transport, WireMsg, PROTO_VERSION};
@@ -38,13 +52,23 @@ use crate::engine::actor::{ActorShard, MixBatch};
 use crate::experiment::{build_problem, plan, BuiltProblem, ExperimentSpec};
 use crate::sim::kernel::{init_iterates, worker_streams};
 use crate::sim::{Problem, RunConfig};
-use std::net::TcpListener;
-use std::time::Duration;
+use crate::trace::{Counter, NodeTelemetry, RingSink, TraceEvent, Tracer, UNASSIGNED_SHARD};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 /// How long an accepted connection gets to produce its `Assign` frame
 /// before the daemon gives up on it and keeps accepting — a silent stray
 /// connection must not wedge the accept loop.
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Read/write deadline on a mid-session status connection: a stalled
+/// `matcha status` client must not wedge the command loop for long.
+const STATUS_TIMEOUT: Duration = Duration::from_millis(800);
+
+/// Trace-ring capacity when the assigned spec carries no trace block
+/// (the daemon always runs under an attached tracer so `matcha status`
+/// and coordinator harvests have something to report).
+const FALLBACK_RING_CAPACITY: usize = 4096;
 
 /// Behavior knobs of [`run_daemon`].
 #[derive(Clone, Debug)]
@@ -71,14 +95,26 @@ impl Default for DaemonOptions {
     }
 }
 
-/// Accept one coordinator connection and read its `Assign` frame. The
-/// handshake runs under a short deadline; afterwards the connection
-/// switches to the configured steady-state timeout. Any failure rejects
-/// only this connection.
+/// What one accepted connection turned out to be.
+enum Admission {
+    /// A coordinator assignment: the link (steady-state timeout already
+    /// applied) plus the assigned shard, shard count and spec JSON.
+    Assigned(TcpTransport, u32, u32, String),
+    /// A `matcha status` query; it was answered and the connection is
+    /// done. The caller just keeps accepting.
+    StatusHandled,
+}
+
+/// Accept one connection and read its first frame. An `Assign` is the
+/// normal handshake; a `TelemetryPull` is answered from `status` and
+/// the connection closed. The handshake runs under a short deadline;
+/// afterwards an assigned connection switches to the configured
+/// steady-state timeout. Any failure rejects only this connection.
 fn accept_assign(
     listener: &TcpListener,
     opts: &DaemonOptions,
-) -> Result<(TcpTransport, u32, u32, String), String> {
+    status: &mut dyn FnMut(bool) -> NodeTelemetry,
+) -> Result<Admission, String> {
     let (stream, peer) = listener.accept().map_err(|e| format!("shard-node: accept: {e}"))?;
     let mut link = TcpTransport::new(stream).map_err(|e| format!("shard-node: {peer}: {e}"))?;
     link.set_io_timeout(Some(HANDSHAKE_TIMEOUT))
@@ -91,10 +127,116 @@ fn accept_assign(
                 ms => Some(Duration::from_millis(ms)),
             };
             link.set_io_timeout(steady).map_err(|e| format!("shard-node: {peer}: {e}"))?;
-            Ok((link, shard, shards, spec_json))
+            Ok(Admission::Assigned(link, shard, shards, spec_json))
+        }
+        Ok(WireMsg::TelemetryPull { drain }) => {
+            let mut scratch = Vec::new();
+            let reply = WireMsg::TelemetrySnapshot { telemetry: status(drain) };
+            link.send_msg(&reply, &mut scratch)
+                .map_err(|e| format!("shard-node: {peer}: status reply: {e}"))?;
+            Ok(Admission::StatusHandled)
         }
         Ok(other) => Err(format!("shard-node: {peer}: handshake expected Assign, got {other:?}")),
         Err(e) => Err(format!("shard-node: {peer}: handshake: {e}")),
+    }
+}
+
+/// The idle-daemon health answer: no shard, no session, just uptime.
+fn idle_telemetry(started: &Instant) -> NodeTelemetry {
+    NodeTelemetry {
+        shard: UNASSIGNED_SHARD,
+        uptime_ms: started.elapsed().as_millis() as u64,
+        ..NodeTelemetry::default()
+    }
+}
+
+/// Build the live-session telemetry answer. `drain` empties the trace
+/// ring into the reply (the ring's cumulative drop count survives).
+fn session_telemetry(
+    tracer: &mut Tracer<'_>,
+    shard: u32,
+    rounds_done: u64,
+    reconnects: u64,
+    drain: bool,
+) -> NodeTelemetry {
+    let wall = tracer.wall_now_ns();
+    NodeTelemetry {
+        shard,
+        rounds_done,
+        reconnects,
+        uptime_ms: wall / 1_000_000,
+        ring_dropped: tracer.sink_dropped(),
+        wall_now_ns: wall,
+        records: if drain { tracer.drain_sink() } else { Vec::new() },
+        registry: tracer.registry.clone(),
+    }
+}
+
+/// Serve `matcha status` queries that arrive while a session is live:
+/// between commands the daemon drains the listener non-blockingly and
+/// answers first-frame `TelemetryPull`s on the side. Anything else —
+/// including an `Assign` racing the live coordinator link — is dropped
+/// with a log line rather than admitted mid-session.
+fn poll_status_conns(
+    listener: &TcpListener,
+    shard_id: usize,
+    status: &mut dyn FnMut(bool) -> NodeTelemetry,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(accepted) => accepted,
+            Err(_) => break, // WouldBlock: no one waiting, back to work
+        };
+        if let Err(e) = answer_side_conn(stream, status) {
+            eprintln!("shard-node {shard_id}: side connection from {peer} dropped: {e}");
+        }
+    }
+    let _ = listener.set_nonblocking(false);
+}
+
+/// Answer one side connection's `TelemetryPull` (anything else errors).
+fn answer_side_conn(
+    stream: TcpStream,
+    status: &mut dyn FnMut(bool) -> NodeTelemetry,
+) -> Result<(), String> {
+    stream.set_nonblocking(false).map_err(|e| e.to_string())?;
+    let mut link = TcpTransport::new(stream).map_err(|e| e.to_string())?;
+    link.set_io_timeout(Some(STATUS_TIMEOUT)).map_err(|e| e.to_string())?;
+    let mut body = Vec::new();
+    match link.recv_msg(&mut body).map_err(|e| e.to_string())? {
+        WireMsg::TelemetryPull { drain } => {
+            let mut scratch = Vec::new();
+            let reply = WireMsg::TelemetrySnapshot { telemetry: status(drain) };
+            link.send_msg(&reply, &mut scratch).map_err(|e| e.to_string())
+        }
+        other => Err(format!("mid-session frame must be TelemetryPull, got {other:?}")),
+    }
+}
+
+/// One-shot health query against a daemon at `addr`: connect, send a
+/// non-draining `TelemetryPull`, read the snapshot back. Works against
+/// an idle daemon (pre-assign), between sessions, and mid-session (the
+/// daemon polls for side connections between commands). The
+/// `matcha status` client.
+pub fn query_status(addr: &str, timeout_ms: u64) -> Result<NodeTelemetry, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("status: connect {addr}: {e}"))?;
+    let mut link = TcpTransport::new(stream).map_err(|e| format!("status: {addr}: {e}"))?;
+    let timeout = match timeout_ms {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    link.set_io_timeout(timeout).map_err(|e| format!("status: {addr}: {e}"))?;
+    let mut scratch = Vec::new();
+    link.send_msg(&WireMsg::TelemetryPull { drain: false }, &mut scratch)
+        .map_err(|e| format!("status: {addr}: send: {e}"))?;
+    let mut body = Vec::new();
+    match link.recv_msg(&mut body) {
+        Ok(WireMsg::TelemetrySnapshot { telemetry }) => Ok(telemetry),
+        Ok(other) => Err(format!("status: {addr}: expected TelemetrySnapshot, got {other:?}")),
+        Err(e) => Err(format!("status: {addr}: {e}")),
     }
 }
 
@@ -107,9 +249,19 @@ fn accept_assign(
 /// and spec; an unparseable or inconsistent first assignment is fatal
 /// (`Err`), because the daemon cannot know what to serve. Later
 /// connections must repeat the same assignment and are merely rejected
-/// when they do not.
+/// when they do not. Status queries are answered at any point without
+/// disturbing the lifecycle.
 pub fn run_daemon(listener: TcpListener, opts: &DaemonOptions) -> Result<(), String> {
-    let (link, shard, shards, spec_json) = accept_assign(&listener, opts)?;
+    let started = Instant::now();
+    let (link, shard, shards, spec_json) = loop {
+        let mut idle = |_drain: bool| idle_telemetry(&started);
+        match accept_assign(&listener, opts, &mut idle)? {
+            Admission::Assigned(link, shard, shards, spec_json) => {
+                break (link, shard, shards, spec_json)
+            }
+            Admission::StatusHandled => continue,
+        }
+    };
     if shards == 0 || shard >= shards {
         return Err(format!("shard-node: assigned bogus shard {shard} of {shards}"));
     }
@@ -124,15 +276,29 @@ pub fn run_daemon(listener: TcpListener, opts: &DaemonOptions) -> Result<(), Str
              (each shard needs at least one worker)"
         ));
     }
+    let ring_capacity = spec
+        .trace
+        .as_ref()
+        .filter(|t| t.telemetry)
+        .map(|t| t.telemetry_capacity)
+        .unwrap_or(FALLBACK_RING_CAPACITY);
     let problem = build_problem(&spec, m);
+    let sid = shard as usize;
+    let n = shards as usize;
     match &problem {
         BuiltProblem::Quad(p) => {
-            serve(&listener, p, &cfg, m, shard as usize, shards as usize, &spec_json, link, opts)
+            serve(&listener, p, &cfg, m, sid, n, &spec_json, link, opts, ring_capacity)
         }
         BuiltProblem::Logreg(p) => {
-            serve(&listener, p, &cfg, m, shard as usize, shards as usize, &spec_json, link, opts)
+            serve(&listener, p, &cfg, m, sid, n, &spec_json, link, opts, ring_capacity)
         }
     }
+}
+
+/// What span to emit around one phase command's execution.
+enum DaemonSpan {
+    Step,
+    Mix { k: usize, msgs: usize },
 }
 
 /// The daemon's serve loop, generic over the workload: session state
@@ -147,6 +313,7 @@ fn serve<P: Problem + ?Sized>(
     spec_json: &str,
     first: TcpTransport,
     opts: &DaemonOptions,
+    ring_capacity: usize,
 ) -> Result<(), String> {
     let d = problem.dim();
     // The same initial arena and gradient streams every backend derives
@@ -173,6 +340,13 @@ fn serve<P: Problem + ?Sized>(
     let mut lifetime = 0u64;
     let mut dropped_once = false;
 
+    // Telemetry: the tracer (ring + registry) spans the daemon's whole
+    // life; session health (`rounds`/`reconnects`/`k_step`) resets with
+    // the session, the registry never does.
+    let mut ring = RingSink::new(ring_capacity);
+    let mut tracer = Tracer::attached(&mut ring);
+    let (mut rounds, mut reconnects, mut k_step) = (0u64, 0u64, 0u64);
+
     let mut scratch = Vec::new();
     let mut body = Vec::new();
     let mut ret: Vec<f64> = Vec::new();
@@ -183,14 +357,21 @@ fn serve<P: Problem + ?Sized>(
         let mut link = match conn.take() {
             Some(link) => link,
             None => {
-                let (link, a_shard, a_shards, a_spec) = match accept_assign(listener, opts) {
-                    Ok(admitted) => admitted,
+                let admission = accept_assign(listener, opts, &mut |drain| {
+                    session_telemetry(&mut tracer, shard_id as u32, rounds, reconnects, drain)
+                });
+                let (link, a_shard, a_shards, a_spec) = match admission {
+                    Ok(Admission::Assigned(link, a_shard, a_shards, a_spec)) => {
+                        (link, a_shard, a_shards, a_spec)
+                    }
+                    Ok(Admission::StatusHandled) => continue,
                     Err(e) => {
                         eprintln!("{e}");
                         continue;
                     }
                 };
-                if a_shard as usize != shard_id || a_shards as usize != shards
+                if a_shard as usize != shard_id
+                    || a_shards as usize != shards
                     || a_spec != spec_json
                 {
                     eprintln!(
@@ -227,11 +408,14 @@ fn serve<P: Problem + ?Sized>(
         }
 
         // Command loop on this connection. Any exit other than a
-        // `once`-mode Shutdown drops the link and falls back to
-        // accepting with the session intact.
+        // Shutdown drops the link and falls back to accepting with the
+        // session intact — counted as a survived reconnect below.
+        let mut clean_shutdown = false;
         loop {
-            let inject_drop =
-                !dropped_once && matches!(opts.drop_after, Some(n) if lifetime >= n);
+            poll_status_conns(listener, shard_id, &mut |drain| {
+                session_telemetry(&mut tracer, shard_id as u32, rounds, reconnects, drain)
+            });
+            let inject_drop = !dropped_once && matches!(opts.drop_after, Some(n) if lifetime >= n);
             if inject_drop {
                 dropped_once = true;
                 eprintln!(
@@ -247,6 +431,15 @@ fn serve<P: Problem + ?Sized>(
                     break;
                 }
             };
+            // What to trace around this command, captured before the
+            // frame is consumed by the command conversion.
+            let span = match &msg {
+                WireMsg::Step { .. } => Some(DaemonSpan::Step),
+                WireMsg::Mix { k, msgs, .. } => {
+                    Some(DaemonSpan::Mix { k: *k as usize, msgs: msgs.len() })
+                }
+                _ => None,
+            };
             let cmd = match msg {
                 WireMsg::Shutdown => {
                     if opts.once {
@@ -255,7 +448,26 @@ fn serve<P: Problem + ?Sized>(
                     // Session over: forget it and wait for the next run.
                     shard = fresh();
                     (done, steps, folded) = (0, 0, 0);
+                    (rounds, reconnects, k_step) = (0, 0, 0);
+                    clean_shutdown = true;
                     break;
+                }
+                WireMsg::TelemetryPull { drain } => {
+                    // In-band harvest: answered without touching `done`
+                    // — never part of the exactly-once command stream.
+                    let telemetry = session_telemetry(
+                        &mut tracer,
+                        shard_id as u32,
+                        rounds,
+                        reconnects,
+                        drain,
+                    );
+                    let reply = WireMsg::TelemetrySnapshot { telemetry };
+                    if let Err(e) = link.send_msg(&reply, &mut scratch) {
+                        eprintln!("shard-node {shard_id}: telemetry reply: {e}");
+                        break;
+                    }
+                    continue;
                 }
                 WireMsg::VersionReject { supported } => {
                     eprintln!(
@@ -272,7 +484,26 @@ fn serve<P: Problem + ?Sized>(
                     }
                 },
             };
+            if let Some(DaemonSpan::Step) = span {
+                tracer.set_now(k_step as f64);
+                tracer.emit(TraceEvent::ComputeBegin { worker: shard_id, k: k_step as usize });
+            }
             let reply = shard.handle(cmd);
+            match span {
+                Some(DaemonSpan::Step) => {
+                    tracer.emit(TraceEvent::ComputeEnd { worker: shard_id, k: k_step as usize });
+                    k_step += 1;
+                }
+                Some(DaemonSpan::Mix { k, msgs }) => {
+                    tracer.set_now(k as f64);
+                    tracer.emit(TraceEvent::MixApplied { k, activated: msgs });
+                    tracer.emit(TraceEvent::RoundBarrier { k });
+                    rounds = k as u64 + 1;
+                }
+                None => {}
+            }
+            tracer.count(Counter::ShardSteps, reply.steps);
+            tracer.count(Counter::ShardMsgsFolded, reply.folded);
             // Exactly-once accounting: the command is fully applied
             // before `done` moves, and `done` moves before the reply
             // ships — a connection can die at any point without the
@@ -293,14 +524,17 @@ fn serve<P: Problem + ?Sized>(
             let WireMsg::States { states, .. } = msg else { unreachable!() };
             ret = states;
         }
+        if !clean_shutdown {
+            reconnects += 1;
+            tracer.count(Counter::Reconnects, 1);
+        }
     }
 }
 
 /// Bind `addr` and serve: the `matcha shard-node` entry point. Split
 /// from [`run_daemon`] so tests can pre-bind an ephemeral port.
 pub(crate) fn listen_and_serve(addr: &str, opts: &DaemonOptions) -> Result<(), String> {
-    let listener =
-        TcpListener::bind(addr).map_err(|e| format!("shard-node: bind {addr}: {e}"))?;
+    let listener = TcpListener::bind(addr).map_err(|e| format!("shard-node: bind {addr}: {e}"))?;
     let local = listener
         .local_addr()
         .map_err(|e| format!("shard-node: listener address: {e}"))?;
@@ -311,7 +545,6 @@ pub(crate) fn listen_and_serve(addr: &str, opts: &DaemonOptions) -> Result<(), S
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::net::TcpStream;
 
     #[test]
     fn default_options_are_persistent_and_unbounded() {
@@ -345,12 +578,32 @@ mod tests {
         let dial = std::thread::spawn(move || {
             let mut tx = TcpTransport::new(TcpStream::connect(addr).expect("connect")).unwrap();
             let mut scratch = Vec::new();
-            let assign =
-                WireMsg::Assign { shard: 5, shards: 2, spec_json: String::from("{}") };
+            let assign = WireMsg::Assign { shard: 5, shards: 2, spec_json: String::from("{}") };
             tx.send_msg(&assign, &mut scratch).unwrap();
         });
         let err = run_daemon(listener, &DaemonOptions::default()).unwrap_err();
         assert!(err.contains("bogus shard"), "got: {err}");
         dial.join().unwrap();
+    }
+
+    #[test]
+    fn idle_daemon_answers_status_then_still_requires_assign() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().unwrap();
+        let daemon = std::thread::spawn(move || run_daemon(listener, &DaemonOptions::default()));
+        let snap = query_status(&addr.to_string(), 2_000).expect("status");
+        assert_eq!(snap.shard, UNASSIGNED_SHARD);
+        assert_eq!(snap.rounds_done, 0);
+        assert_eq!(snap.reconnects, 0);
+        assert!(snap.records.is_empty());
+        // The status query consumed a connection without consuming the
+        // daemon: a bogus Assign on the next connection is still the
+        // fatal first assignment.
+        let mut tx = TcpTransport::new(TcpStream::connect(addr).expect("connect")).unwrap();
+        let mut scratch = Vec::new();
+        let assign = WireMsg::Assign { shard: 5, shards: 2, spec_json: String::from("{}") };
+        tx.send_msg(&assign, &mut scratch).unwrap();
+        let err = daemon.join().unwrap().unwrap_err();
+        assert!(err.contains("bogus shard"), "got: {err}");
     }
 }

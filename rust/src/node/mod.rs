@@ -53,11 +53,19 @@
 //! Commands are executed exactly once, so the trajectory is unchanged —
 //! pinned by `rust/tests/node.rs`, which injects connection drops
 //! mid-run and asserts bit-for-bit parity with the loopback cluster.
+//!
+//! **Distributed telemetry.** Every daemon runs under an attached
+//! tracer and answers `TelemetryPull` wire frames with a
+//! [`crate::trace::NodeTelemetry`] snapshot — live health via
+//! [`query_status`] (`matcha status ADDR`), and full trace/metric
+//! harvests the coordinator folds into a
+//! [`crate::trace::TelemetryCollector`] for merged per-process Chrome
+//! traces and daemon-authoritative aggregate metrics.
 
 mod coordinator;
 mod daemon;
 
-pub(crate) use coordinator::run_remote_planned_traced;
+pub(crate) use coordinator::{run_remote_planned_telemetry, run_remote_planned_traced};
 pub use coordinator::{run_remote, run_remote_observed, run_remote_traced, RemoteOptions};
 pub(crate) use daemon::listen_and_serve;
-pub use daemon::{run_daemon, DaemonOptions};
+pub use daemon::{query_status, run_daemon, DaemonOptions};

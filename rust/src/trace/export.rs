@@ -55,21 +55,21 @@ const LINK_TID_BASE: usize = 10_000;
 /// First track id of the per-wire-link (cluster frame) tracks.
 const FRAME_TID_BASE: usize = 20_000;
 
-fn meta_event(tid: usize, name: &str) -> Json {
+fn meta_event(pid: usize, tid: usize, name: &str) -> Json {
     Json::obj(vec![
         ("name", Json::Str("thread_name".into())),
         ("ph", Json::Str("M".into())),
-        ("pid", Json::Num(0.0)),
+        ("pid", Json::Num(pid as f64)),
         ("tid", Json::Num(tid as f64)),
         ("args", Json::obj(vec![("name", Json::Str(name.into()))])),
     ])
 }
 
-fn span_event(name: String, tid: usize, ts: f64, dur: f64, args: Json) -> Json {
+fn span_event(name: String, pid: usize, tid: usize, ts: f64, dur: f64, args: Json) -> Json {
     Json::obj(vec![
         ("name", Json::Str(name)),
         ("ph", Json::Str("X".into())),
-        ("pid", Json::Num(0.0)),
+        ("pid", Json::Num(pid as f64)),
         ("tid", Json::Num(tid as f64)),
         ("ts", Json::Num(ts)),
         ("dur", Json::Num(dur)),
@@ -77,22 +77,40 @@ fn span_event(name: String, tid: usize, ts: f64, dur: f64, args: Json) -> Json {
     ])
 }
 
-fn instant_event(name: &str, tid: usize, ts: f64, args: Json) -> Json {
+fn instant_event(name: &str, pid: usize, tid: usize, ts: f64, args: Json) -> Json {
     Json::obj(vec![
         ("name", Json::Str(name.into())),
         ("ph", Json::Str("i".into())),
         ("s", Json::Str("t".into())),
-        ("pid", Json::Num(0.0)),
+        ("pid", Json::Num(pid as f64)),
         ("tid", Json::Num(tid as f64)),
         ("ts", Json::Num(ts)),
         ("args", args),
     ])
 }
 
-/// Build the Chrome trace-event JSON for `records`. `other_data` (any
-/// non-`Null` value, conventionally the run's metric summaries) lands
-/// under the format's `otherData` key.
-pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
+/// One process in a merged multi-process Chrome export: a `pid`, a
+/// display name, its records, and how to place them on the shared
+/// timeline.
+pub struct PidTrack<'a> {
+    /// Chrome `pid` of this process (convention: coordinator = 0,
+    /// shard `s` = `s + 1`).
+    pub pid: usize,
+    /// Process name shown in the viewer.
+    pub name: String,
+    /// The process's trace records, chronological.
+    pub records: &'a [TraceRecord],
+    /// `None`: timestamps come from virtual time (the coordinator's
+    /// deterministic timeline). `Some(offset_ns)`: timestamps come
+    /// from `wall_ns + offset_ns` — daemon records mapped onto the
+    /// coordinator's wall clock via the handshake-aligned epoch offset.
+    pub wall_offset_ns: Option<i64>,
+}
+
+/// Build one process's metadata and timed events. Returns the metadata
+/// events; timed events are appended to `timed` for global sorting.
+fn build_pid_events(track: &PidTrack<'_>, timed: &mut Vec<(f64, Json)>) -> Vec<Json> {
+    let pid = track.pid;
     // Track assignment: workers keep their id, links get stable tids in
     // first-seen order.
     let mut link_tids: BTreeMap<(usize, usize, usize), usize> = BTreeMap::new();
@@ -107,14 +125,19 @@ pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
         let next = LINK_TID_BASE + link_tids.len();
         *link_tids.entry((j, u, v)).or_insert(next)
     };
+    let ts_of = |rec: &TraceRecord| -> f64 {
+        match track.wall_offset_ns {
+            None => rec.vt * US_PER_UNIT,
+            Some(off) => (rec.wall_ns as i64 + off).max(0) as f64 / 1000.0,
+        }
+    };
 
     // Pair Begin/End records into complete spans; everything else is an
     // instant. Unpaired records (ring overflow) are skipped.
     let mut open_compute: BTreeMap<(usize, usize), f64> = BTreeMap::new();
     let mut open_link: BTreeMap<(usize, usize, usize, usize), f64> = BTreeMap::new();
-    let mut timed: Vec<(f64, Json)> = Vec::new();
-    for rec in records {
-        let ts = rec.vt * US_PER_UNIT;
+    for rec in track.records {
+        let ts = ts_of(rec);
         match rec.ev {
             TraceEvent::ComputeBegin { worker: w, k } => {
                 open_compute.insert((w, k), ts);
@@ -123,7 +146,7 @@ pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
                 if let Some(beg) = open_compute.remove(&(w, k)) {
                     let tid = worker(w, &mut worker_tids);
                     let args = Json::obj(vec![("k", Json::Num(k as f64))]);
-                    timed.push((beg, span_event("compute".into(), tid, beg, ts - beg, args)));
+                    timed.push((beg, span_event("compute".into(), pid, tid, beg, ts - beg, args)));
                 }
             }
             TraceEvent::LinkBegin { matching, u, v, k } => {
@@ -137,7 +160,7 @@ pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
                         ("failed", Json::Bool(failed)),
                     ]);
                     let name = format!("m{matching} {u}-{v}");
-                    timed.push((beg, span_event(name, tid, beg, ts - beg, args)));
+                    timed.push((beg, span_event(name, pid, tid, beg, ts - beg, args)));
                 }
             }
             TraceEvent::MixApplied { k, activated } => {
@@ -146,30 +169,30 @@ pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
                     ("k", Json::Num(k as f64)),
                     ("activated", Json::Num(activated as f64)),
                 ]);
-                timed.push((ts, instant_event("mix", CONTROL_TID, ts, args)));
+                timed.push((ts, instant_event("mix", pid, CONTROL_TID, ts, args)));
             }
             TraceEvent::RoundBarrier { k } => {
                 control_used = true;
                 let args = Json::obj(vec![("k", Json::Num(k as f64))]);
-                timed.push((ts, instant_event("barrier", CONTROL_TID, ts, args)));
+                timed.push((ts, instant_event("barrier", pid, CONTROL_TID, ts, args)));
             }
             TraceEvent::FrameSent { link, bytes } => {
                 let next = FRAME_TID_BASE + frame_tids.len();
                 let tid = *frame_tids.entry(link).or_insert(next);
                 let args = Json::obj(vec![("bytes", Json::Num(bytes as f64))]);
-                timed.push((ts, instant_event("frame_sent", tid, ts, args)));
+                timed.push((ts, instant_event("frame_sent", pid, tid, ts, args)));
             }
             TraceEvent::FrameReceived { link, bytes } => {
                 let next = FRAME_TID_BASE + frame_tids.len();
                 let tid = *frame_tids.entry(link).or_insert(next);
                 let args = Json::obj(vec![("bytes", Json::Num(bytes as f64))]);
-                timed.push((ts, instant_event("frame_recv", tid, ts, args)));
+                timed.push((ts, instant_event("frame_recv", pid, tid, ts, args)));
             }
             TraceEvent::Reconnect { link, resumed } => {
                 let next = FRAME_TID_BASE + frame_tids.len();
                 let tid = *frame_tids.entry(link).or_insert(next);
                 let args = Json::obj(vec![("resumed", Json::Num(resumed as f64))]);
-                timed.push((ts, instant_event("reconnect", tid, ts, args)));
+                timed.push((ts, instant_event("reconnect", pid, tid, ts, args)));
             }
             TraceEvent::StaleExchange { worker: w, peer, staleness, k } => {
                 let tid = worker(w, &mut worker_tids);
@@ -178,35 +201,56 @@ pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
                     ("staleness", Json::Num(staleness as f64)),
                     ("k", Json::Num(k as f64)),
                 ]);
-                timed.push((ts, instant_event("stale_exchange", tid, ts, args)));
+                timed.push((ts, instant_event("stale_exchange", pid, tid, ts, args)));
             }
         }
     }
 
+    let mut metas = Vec::with_capacity(8);
+    metas.push(Json::obj(vec![
+        ("name", Json::Str("process_name".into())),
+        ("ph", Json::Str("M".into())),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(0.0)),
+        ("args", Json::obj(vec![("name", Json::Str(track.name.clone()))])),
+    ]));
+    for (&w, &tid) in &worker_tids {
+        metas.push(meta_event(pid, tid, &format!("worker {w}")));
+    }
+    for (&(j, u, v), &tid) in &link_tids {
+        metas.push(meta_event(pid, tid, &format!("link m{j} {u}-{v}")));
+    }
+    for (&link, &tid) in &frame_tids {
+        metas.push(meta_event(pid, tid, &format!("wire link {link}")));
+    }
+    if control_used {
+        metas.push(meta_event(pid, CONTROL_TID, "rounds"));
+    }
+    metas
+}
+
+/// Build the Chrome trace-event JSON for a single process (`pid` 0).
+/// `other_data` (any non-`Null` value, conventionally the run's metric
+/// summaries) lands under the format's `otherData` key.
+pub fn chrome_trace(records: &[TraceRecord], other_data: &Json) -> Json {
+    let track = PidTrack { pid: 0, name: "matcha".into(), records, wall_offset_ns: None };
+    chrome_trace_merged(std::slice::from_ref(&track), other_data)
+}
+
+/// Build one Chrome trace-event JSON merging several processes — the
+/// distributed-telemetry export, with the coordinator's virtual-time
+/// track at `pid` 0 and one wall-clock track per shard daemon. All
+/// timed events share one globally sorted timeline, so `ts` stays
+/// monotone per `(pid, tid)` track.
+pub fn chrome_trace_merged(tracks: &[PidTrack<'_>], other_data: &Json) -> Json {
+    let mut timed: Vec<(f64, Json)> = Vec::new();
+    let mut events = Vec::new();
+    for track in tracks {
+        events.extend(build_pid_events(track, &mut timed));
+    }
     // Global sort by timestamp makes `ts` monotone on every track
     // (stable, so same-instant events keep emission order).
     timed.sort_by(|a, b| a.0.total_cmp(&b.0));
-
-    let mut events = Vec::with_capacity(timed.len() + 8);
-    events.push(Json::obj(vec![
-        ("name", Json::Str("process_name".into())),
-        ("ph", Json::Str("M".into())),
-        ("pid", Json::Num(0.0)),
-        ("tid", Json::Num(0.0)),
-        ("args", Json::obj(vec![("name", Json::Str("matcha".into()))])),
-    ]));
-    for (&w, &tid) in &worker_tids {
-        events.push(meta_event(tid, &format!("worker {w}")));
-    }
-    for (&(j, u, v), &tid) in &link_tids {
-        events.push(meta_event(tid, &format!("link m{j} {u}-{v}")));
-    }
-    for (&link, &tid) in &frame_tids {
-        events.push(meta_event(tid, &format!("wire link {link}")));
-    }
-    if control_used {
-        events.push(meta_event(CONTROL_TID, "rounds"));
-    }
     events.extend(timed.into_iter().map(|(_, e)| e));
 
     let mut top = vec![
@@ -300,6 +344,12 @@ pub struct TraceCheck {
     pub events: usize,
     /// Distinct `(pid, tid)` tracks carrying events.
     pub tracks: usize,
+    /// Distinct `pid`s carrying events (1 for single-process traces).
+    pub pids: usize,
+    /// Records the producing ring(s) dropped, when the exporter
+    /// surfaced it (`otherData.dropped_records`); `None` when absent.
+    /// Non-zero means the trace was truncated at the source.
+    pub dropped: Option<u64>,
 }
 
 /// Validate Chrome trace-event JSON text: a top-level object with a
@@ -353,7 +403,60 @@ pub fn validate_chrome_trace(text: &str) -> Result<TraceCheck, String> {
         last_ts.insert(key, ts);
         counted += 1;
     }
-    Ok(TraceCheck { events: counted, tracks: last_ts.len() })
+    let pids: std::collections::BTreeSet<u64> = last_ts.keys().map(|&(pid, _)| pid).collect();
+    let dropped = obj
+        .get("otherData")
+        .and_then(|o| o.get("dropped_records"))
+        .and_then(Json::as_f64)
+        .map(|v| v as u64);
+    Ok(TraceCheck { events: counted, tracks: last_ts.len(), pids: pids.len(), dropped })
+}
+
+/// What [`validate_jsonl_trace`] found in a well-formed JSONL stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JsonlCheck {
+    /// Records (lines) in the stream.
+    pub records: usize,
+    /// Distinct event kinds seen.
+    pub kinds: usize,
+}
+
+/// Validate a JSONL trace stream as [`jsonl_lines`] writes it: one
+/// JSON object per line, each with a known `ev` name, a finite numeric
+/// `vt` and a non-negative numeric `wall_ns`. This is what
+/// `matcha trace-check --format jsonl` runs.
+pub fn validate_jsonl_trace(text: &str) -> Result<JsonlCheck, String> {
+    let mut kinds: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+    let mut records = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        let json = Json::parse(line).map_err(|e| format!("trace: line {n}: {e}"))?;
+        let obj = json.as_object().ok_or(format!("trace: line {n} is not an object"))?;
+        let ev = obj
+            .get("ev")
+            .and_then(Json::as_str)
+            .ok_or(format!("trace: line {n} missing string 'ev'"))?;
+        if !TraceEvent::NAMES.contains(&ev) {
+            return Err(format!("trace: line {n} has unknown event '{ev}'"));
+        }
+        let vt = obj
+            .get("vt")
+            .and_then(Json::as_f64)
+            .ok_or(format!("trace: line {n} missing numeric 'vt'"))?;
+        if !vt.is_finite() {
+            return Err(format!("trace: line {n} has non-finite vt"));
+        }
+        let wall = obj
+            .get("wall_ns")
+            .and_then(Json::as_f64)
+            .ok_or(format!("trace: line {n} missing numeric 'wall_ns'"))?;
+        if !(wall.is_finite() && wall >= 0.0) {
+            return Err(format!("trace: line {n} has invalid wall_ns"));
+        }
+        kinds.insert(ev.to_string());
+        records += 1;
+    }
+    Ok(JsonlCheck { records, kinds: kinds.len() })
 }
 
 #[cfg(test)]
@@ -388,6 +491,8 @@ mod tests {
         assert_eq!(check.events, 8);
         // 2 worker tracks, 1 link track, 1 wire track, 1 control track.
         assert_eq!(check.tracks, 5);
+        assert_eq!(check.pids, 1);
+        assert_eq!(check.dropped, None);
         // Thread-name metadata names every track kind.
         assert!(text.contains("worker 0"), "{text}");
         assert!(text.contains("link m0 0-1"), "{text}");
@@ -445,6 +550,76 @@ mod tests {
         let check = validate_chrome_trace(two_tracks).unwrap();
         assert_eq!(check.events, 2);
         assert_eq!(check.tracks, 2);
+    }
+
+    #[test]
+    fn merged_export_keeps_tracks_per_pid() {
+        let coord = sample_records();
+        // Daemon records: wall-clock stamped compute span + mix marker.
+        let daemon = vec![
+            TraceRecord {
+                ev: TraceEvent::ComputeBegin { worker: 0, k: 0 },
+                vt: 0.0,
+                wall_ns: 1_000_000,
+            },
+            TraceRecord {
+                ev: TraceEvent::ComputeEnd { worker: 0, k: 0 },
+                vt: 0.0,
+                wall_ns: 3_000_000,
+            },
+            TraceRecord {
+                ev: TraceEvent::MixApplied { k: 0, activated: 1 },
+                vt: 0.0,
+                wall_ns: 4_000_000,
+            },
+        ];
+        let tracks = [
+            PidTrack { pid: 0, name: "coordinator".into(), records: &coord, wall_offset_ns: None },
+            PidTrack {
+                pid: 1,
+                name: "shard 0".into(),
+                records: &daemon,
+                // A negative offset clamps instead of going negative.
+                wall_offset_ns: Some(-2_000_000),
+            },
+        ];
+        let json = chrome_trace_merged(&tracks, &Json::Null);
+        let text = json.to_string();
+        let check = validate_chrome_trace(&text).unwrap();
+        assert_eq!(check.pids, 2);
+        // pid 0's 5 tracks plus the daemon's worker + control tracks.
+        assert_eq!(check.tracks, 7);
+        assert_eq!(check.events, 8 + 2);
+        assert!(text.contains("coordinator"), "{text}");
+        assert!(text.contains("shard 0"), "{text}");
+    }
+
+    #[test]
+    fn dropped_records_surface_through_other_data() {
+        let meta = Json::obj(vec![("dropped_records", Json::Num(7.0))]);
+        let json = chrome_trace(&sample_records(), &meta);
+        let check = validate_chrome_trace(&json.to_string()).unwrap();
+        assert_eq!(check.dropped, Some(7));
+    }
+
+    #[test]
+    fn jsonl_validator_accepts_own_output_and_rejects_garbage() {
+        let text = jsonl_lines(&sample_records());
+        let check = validate_jsonl_trace(&text).unwrap();
+        assert_eq!(check.records, sample_records().len());
+        assert!(check.kinds >= 5);
+        assert_eq!(validate_jsonl_trace("").unwrap(), JsonlCheck { records: 0, kinds: 0 });
+        assert!(validate_jsonl_trace("not json\n").unwrap_err().contains("line 1"));
+        assert!(validate_jsonl_trace("[1]\n").unwrap_err().contains("not an object"));
+        assert!(validate_jsonl_trace(r#"{"ev": "warp", "vt": 0, "wall_ns": 0}"#)
+            .unwrap_err()
+            .contains("unknown event"));
+        assert!(validate_jsonl_trace(r#"{"ev": "round_barrier", "wall_ns": 0}"#)
+            .unwrap_err()
+            .contains("vt"));
+        assert!(validate_jsonl_trace(r#"{"ev": "round_barrier", "vt": 0, "wall_ns": -5}"#)
+            .unwrap_err()
+            .contains("wall_ns"));
     }
 
     #[test]

@@ -138,6 +138,19 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// Rebuild a histogram from its raw parts — the wire codec's decode
+    /// side ([`crate::cluster::wire`] telemetry snapshots). The fields
+    /// are trusted as-is; only the encoder's own output round-trips.
+    pub(crate) fn from_parts(
+        count: u64,
+        sum: f64,
+        min: f64,
+        max: f64,
+        buckets: [u64; HIST_BUCKETS],
+    ) -> Histogram {
+        Histogram { count, sum, min, max, buckets }
+    }
+
     /// Record one observation.
     pub fn observe(&mut self, value: f64) {
         if self.count == 0 {
@@ -217,9 +230,23 @@ impl MetricsRegistry {
         MetricsRegistry::default()
     }
 
+    /// Rebuild a registry from raw slot arrays (wire-codec decode side).
+    pub(crate) fn from_parts(
+        counters: [u64; NUM_COUNTERS],
+        hists: [Histogram; NUM_HISTS],
+    ) -> MetricsRegistry {
+        MetricsRegistry { counters, hists }
+    }
+
     /// Add `by` to counter `c`.
     pub fn count(&mut self, c: Counter, by: u64) {
         self.counters[c.slot()] += by;
+    }
+
+    /// Overwrite counter `c` (telemetry aggregation replaces
+    /// coordinator-side estimates with daemon-authoritative values).
+    pub(crate) fn set_counter(&mut self, c: Counter, value: u64) {
+        self.counters[c.slot()] = value;
     }
 
     /// Current value of counter `c`.

@@ -52,14 +52,24 @@
 //! actors event-for-event modulo wire frames) — pinned by
 //! `rust/tests/trace.rs`.
 
+//! Remote runs extend the lens across process boundaries:
+//! [`telemetry`] defines the [`NodeTelemetry`] snapshot every
+//! shard-node daemon can answer over the wire and the
+//! [`TelemetryCollector`] the coordinator uses to merge per-daemon
+//! streams into one multi-process Chrome trace (one `pid` per shard,
+//! coordinator = pid 0) and an aggregate metrics snapshot.
+
 pub mod export;
 pub mod metrics;
 pub mod sink;
 pub mod span;
+pub mod telemetry;
 
 pub use export::{
-    chrome_trace, jsonl_lines, validate_chrome_trace, write_trace, TraceCheck, TraceFormat,
+    chrome_trace, chrome_trace_merged, jsonl_lines, validate_chrome_trace, validate_jsonl_trace,
+    write_trace, JsonlCheck, PidTrack, TraceCheck, TraceFormat,
 };
 pub use metrics::{Counter, Hist, Histogram, MetricsRegistry, MetricsSnapshot};
 pub use sink::{RingSink, TraceSink, Tracer};
 pub use span::{TraceEvent, TraceRecord};
+pub use telemetry::{NodeTelemetry, TelemetryCollector, UNASSIGNED_SHARD};

@@ -19,6 +19,18 @@ use std::time::Instant;
 /// Consumes trace records as a run emits them.
 pub trait TraceSink {
     fn record(&mut self, rec: &TraceRecord);
+
+    /// Remove and return everything held, oldest first. Drop accounting
+    /// is cumulative and survives a drain. Sinks that keep nothing
+    /// (the default) return an empty vec.
+    fn drain(&mut self) -> Vec<TraceRecord> {
+        Vec::new()
+    }
+
+    /// Records lost so far (0 for sinks that never drop).
+    fn dropped(&self) -> u64 {
+        0
+    }
 }
 
 /// A bounded, preallocated ring of the most recent trace records.
@@ -60,6 +72,17 @@ impl RingSink {
         out.extend_from_slice(&self.buf[..self.head]);
         out
     }
+
+    /// Remove and return the held records in chronological order,
+    /// leaving the ring empty. [`RingSink::dropped`] is cumulative and
+    /// is *not* reset — a telemetry consumer that drains periodically
+    /// still sees the total loss across the whole run.
+    pub fn drain(&mut self) -> Vec<TraceRecord> {
+        let out = self.records();
+        self.buf.clear();
+        self.head = 0;
+        out
+    }
 }
 
 impl TraceSink for RingSink {
@@ -71,6 +94,14 @@ impl TraceSink for RingSink {
             self.head = (self.head + 1) % self.cap;
             self.dropped += 1;
         }
+    }
+
+    fn drain(&mut self) -> Vec<TraceRecord> {
+        RingSink::drain(self)
+    }
+
+    fn dropped(&self) -> u64 {
+        RingSink::dropped(self)
     }
 }
 
@@ -139,6 +170,26 @@ impl<'a> Tracer<'a> {
         }
     }
 
+    /// Wall-clock nanoseconds since this tracer was created — the same
+    /// clock [`Tracer::emit_at`] stamps into `wall_ns`, so drained
+    /// records and this value share one epoch.
+    pub fn wall_now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Drain the attached sink (empty when no sink is attached).
+    pub fn drain_sink(&mut self) -> Vec<TraceRecord> {
+        match self.sink.as_deref_mut() {
+            Some(sink) => sink.drain(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Records the attached sink has dropped so far (0 when detached).
+    pub fn sink_dropped(&self) -> u64 {
+        self.sink.as_deref().map_or(0, |s| s.dropped())
+    }
+
     /// Add `by` to counter `c` (always on).
     pub fn count(&mut self, c: Counter, by: u64) {
         self.registry.count(c, by);
@@ -186,6 +237,40 @@ mod tests {
     #[should_panic(expected = "capacity")]
     fn ring_rejects_zero_capacity() {
         RingSink::new(0);
+    }
+
+    #[test]
+    fn drain_empties_ring_but_keeps_drop_count() {
+        let mut ring = RingSink::new(3);
+        for k in 0..5 {
+            ring.record(&rec(k));
+        }
+        let first: Vec<f64> = ring.drain().iter().map(|r| r.vt).collect();
+        assert_eq!(first, vec![2.0, 3.0, 4.0]);
+        assert!(ring.is_empty());
+        assert_eq!(ring.dropped(), 2);
+        // Refill past capacity again: drained rings start fresh at
+        // head 0 and keep accumulating the cumulative drop count.
+        for k in 5..9 {
+            ring.record(&rec(k));
+        }
+        let second: Vec<f64> = ring.drain().iter().map(|r| r.vt).collect();
+        assert_eq!(second, vec![6.0, 7.0, 8.0]);
+        assert_eq!(ring.dropped(), 3);
+    }
+
+    #[test]
+    fn tracer_drains_through_the_sink() {
+        let mut ring = RingSink::new(4);
+        let mut tracer = Tracer::attached(&mut ring);
+        tracer.emit(TraceEvent::RoundBarrier { k: 1 });
+        assert_eq!(tracer.drain_sink().len(), 1);
+        assert_eq!(tracer.drain_sink().len(), 0);
+        assert_eq!(tracer.sink_dropped(), 0);
+        let mut off = Tracer::disabled();
+        off.emit(TraceEvent::RoundBarrier { k: 1 });
+        assert!(off.drain_sink().is_empty());
+        assert_eq!(off.sink_dropped(), 0);
     }
 
     #[test]

@@ -52,6 +52,21 @@ pub enum TraceEvent {
 }
 
 impl TraceEvent {
+    /// Every stable event name, in declaration order (the JSONL
+    /// validator's vocabulary).
+    pub const NAMES: [&'static str; 10] = [
+        "compute_begin",
+        "compute_end",
+        "link_begin",
+        "link_end",
+        "mix_applied",
+        "round_barrier",
+        "frame_sent",
+        "frame_received",
+        "reconnect",
+        "stale_exchange",
+    ];
+
     /// Stable event name used by both exporters.
     pub fn name(&self) -> &'static str {
         match self {
@@ -114,10 +129,12 @@ mod tests {
             TraceEvent::Reconnect { link: 0, resumed: 1 },
             TraceEvent::StaleExchange { worker: 0, peer: 1, staleness: 0, k: 0 },
         ];
-        let mut names: Vec<&str> = events.iter().map(|e| e.name()).collect();
-        names.sort_unstable();
-        names.dedup();
-        assert_eq!(names.len(), events.len(), "event names must be distinct");
+        let names: Vec<&str> = events.iter().map(|e| e.name()).collect();
+        assert_eq!(names, TraceEvent::NAMES, "NAMES must mirror name() in declaration order");
+        let mut deduped = names.clone();
+        deduped.sort_unstable();
+        deduped.dedup();
+        assert_eq!(deduped.len(), events.len(), "event names must be distinct");
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Distributed telemetry: what shard-node daemons ship back over the
+//! wire and how the coordinator folds it together.
+//!
+//! Each daemon runs its workload under a real [`crate::trace::Tracer`]
+//! (a [`crate::trace::RingSink`] plus the fixed-slot
+//! [`MetricsRegistry`]). A `TelemetryPull` wire frame makes the daemon
+//! answer with a [`NodeTelemetry`] snapshot: session health, its
+//! cumulative metric registry, and (when the pull asks for a drain)
+//! the ring's trace records. The coordinator-side
+//! [`TelemetryCollector`] absorbs one snapshot stream per shard:
+//! registries are *replaced* on every pull (daemon registries are
+//! cumulative, so replacement can never double-count across
+//! reconnects), drained records are appended, and the first pull fixes
+//! the per-process wall-clock offset used to place daemon records on
+//! the coordinator's timeline in the merged per-pid Chrome export.
+//!
+//! Telemetry is observational only: pulls happen at quiescent points,
+//! never enter the command/replay machinery, and are excluded from the
+//! experiment's wire accounting — results stay bit-for-bit identical
+//! with telemetry on or off.
+
+use super::metrics::{Counter, MetricsRegistry};
+use super::span::TraceRecord;
+
+/// `shard` value a daemon reports before any `Assign` arrived.
+pub const UNASSIGNED_SHARD: u32 = u32::MAX;
+
+/// One daemon's answer to a `TelemetryPull`: session health, the
+/// cumulative metric registry, and (on draining pulls) the trace ring.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeTelemetry {
+    /// Assigned shard id, or [`UNASSIGNED_SHARD`] when idle pre-assign.
+    pub shard: u32,
+    /// Mix rounds completed in the current session.
+    pub rounds_done: u64,
+    /// Connection losses survived within the current session.
+    pub reconnects: u64,
+    /// Milliseconds since the daemon started serving.
+    pub uptime_ms: u64,
+    /// Trace records the ring overwrote (cumulative, survives drains).
+    pub ring_dropped: u64,
+    /// The daemon's wall clock (ns since its tracer epoch) when the
+    /// snapshot was taken — the epoch-alignment anchor.
+    pub wall_now_ns: u64,
+    /// Drained trace records (empty on non-draining health pulls).
+    pub records: Vec<TraceRecord>,
+    /// The daemon's cumulative metric registry.
+    pub registry: MetricsRegistry,
+}
+
+/// Per-shard state the coordinator accumulates across pulls.
+#[derive(Clone, Debug, Default)]
+struct ShardTelemetry {
+    /// All drained records so far, in daemon emission order.
+    records: Vec<TraceRecord>,
+    /// Latest registry (replaced wholesale per pull).
+    registry: MetricsRegistry,
+    /// Latest health fields (a [`NodeTelemetry`] with `records` empty).
+    health: NodeTelemetry,
+    /// `coordinator wall - daemon wall` at the first pull, in ns.
+    wall_offset_ns: i64,
+    pulls: u64,
+    /// Coordinator wall time of the latest pull.
+    last_pull_wall_ns: u64,
+    /// `rounds_done` as of the previous pull (for rate estimates).
+    prev_rounds: u64,
+    /// Coordinator wall time of the previous pull.
+    prev_pull_wall_ns: u64,
+}
+
+/// Coordinator-side aggregator of per-daemon telemetry streams.
+pub struct TelemetryCollector {
+    shards: Vec<ShardTelemetry>,
+    progress: bool,
+}
+
+impl TelemetryCollector {
+    /// A collector for `shards` daemon streams.
+    pub fn new(shards: usize) -> TelemetryCollector {
+        TelemetryCollector { shards: vec![ShardTelemetry::default(); shards], progress: false }
+    }
+
+    /// Print a per-shard progress line on every absorbed snapshot.
+    pub fn enable_progress(&mut self) {
+        self.progress = true;
+    }
+
+    /// Number of shard streams.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Fold one pulled snapshot into shard `shard`'s stream.
+    /// `coord_wall_now_ns` is the coordinator tracer's wall clock at
+    /// receipt; `link_bytes` is that link's cumulative wire traffic
+    /// (progress reporting only).
+    pub fn absorb(
+        &mut self,
+        shard: usize,
+        snap: NodeTelemetry,
+        coord_wall_now_ns: u64,
+        link_bytes: u64,
+    ) {
+        let st = &mut self.shards[shard];
+        if st.pulls == 0 {
+            st.wall_offset_ns = coord_wall_now_ns as i64 - snap.wall_now_ns as i64;
+        }
+        st.records.extend_from_slice(&snap.records);
+        st.registry = snap.registry.clone();
+        st.health = NodeTelemetry { records: Vec::new(), registry: MetricsRegistry::new(), ..snap };
+        st.prev_pull_wall_ns = st.last_pull_wall_ns;
+        st.last_pull_wall_ns = coord_wall_now_ns;
+        st.pulls += 1;
+        if self.progress {
+            self.print_progress(shard, link_bytes);
+        }
+        let st = &mut self.shards[shard];
+        st.prev_rounds = st.health.rounds_done;
+    }
+
+    fn print_progress(&self, shard: usize, link_bytes: u64) {
+        let st = &self.shards[shard];
+        let mut line = format!("progress: shard {shard} round {}", st.health.rounds_done);
+        if st.pulls > 1 {
+            let dt_s = (st.last_pull_wall_ns.saturating_sub(st.prev_pull_wall_ns)) as f64 / 1e9;
+            if dt_s > 0.0 {
+                let rate = (st.health.rounds_done.saturating_sub(st.prev_rounds)) as f64 / dt_s;
+                line.push_str(&format!(" ({rate:.1} rounds/s"));
+                line.push_str(&format!(", {link_bytes} B on wire"));
+                line.push_str(&format!(", telemetry was {dt_s:.2}s stale)"));
+            }
+        } else {
+            line.push_str(&format!(" ({link_bytes} B on wire, first snapshot)"));
+        }
+        eprintln!("{line}");
+    }
+
+    /// How many snapshots shard `shard` has delivered.
+    pub fn pulls(&self, shard: usize) -> u64 {
+        self.shards[shard].pulls
+    }
+
+    /// All records drained from shard `shard` so far.
+    pub fn records(&self, shard: usize) -> &[TraceRecord] {
+        &self.shards[shard].records
+    }
+
+    /// `coordinator wall - daemon wall` in ns, fixed at the first pull.
+    pub fn wall_offset_ns(&self, shard: usize) -> i64 {
+        self.shards[shard].wall_offset_ns
+    }
+
+    /// Latest health snapshot for shard `shard` (records stripped);
+    /// `None` before the first pull.
+    pub fn health(&self, shard: usize) -> Option<&NodeTelemetry> {
+        let st = &self.shards[shard];
+        if st.pulls == 0 { None } else { Some(&st.health) }
+    }
+
+    /// Total trace records lost in daemon rings across all shards.
+    pub fn dropped_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.health.ring_dropped).sum()
+    }
+
+    /// The remote run's aggregate registry: the coordinator's registry
+    /// with the shard-local counters (`ShardSteps`, `ShardMsgsFolded`)
+    /// replaced by the daemon-authoritative sums and every daemon
+    /// histogram folded in. Coordinator wire counters are kept as-is —
+    /// its `LinkStats` already cover both directions of every link.
+    /// When no pull ever landed (all daemons died before the first
+    /// harvest), the coordinator registry is returned unchanged.
+    pub fn aggregate(&self, coordinator: &MetricsRegistry) -> MetricsRegistry {
+        let mut agg = coordinator.clone();
+        if self.shards.iter().all(|s| s.pulls == 0) {
+            return agg;
+        }
+        let mut steps = 0u64;
+        let mut folded = 0u64;
+        for st in &self.shards {
+            steps += st.registry.counter(Counter::ShardSteps);
+            folded += st.registry.counter(Counter::ShardMsgsFolded);
+        }
+        agg.set_counter(Counter::ShardSteps, steps);
+        agg.set_counter(Counter::ShardMsgsFolded, folded);
+        for st in &self.shards {
+            let mut hists_only = st.registry.clone();
+            for c in Counter::ALL {
+                hists_only.set_counter(c, 0);
+            }
+            agg.merge(&hists_only);
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Hist, TraceEvent};
+
+    fn snap(shard: u32, rounds: u64, steps: u64, records: usize) -> NodeTelemetry {
+        let mut registry = MetricsRegistry::new();
+        registry.count(Counter::ShardSteps, steps);
+        NodeTelemetry {
+            shard,
+            rounds_done: rounds,
+            reconnects: 0,
+            uptime_ms: 5,
+            ring_dropped: 1,
+            wall_now_ns: 1_000,
+            records: (0..records)
+                .map(|k| TraceRecord {
+                    ev: TraceEvent::RoundBarrier { k },
+                    vt: k as f64,
+                    wall_ns: k as u64,
+                })
+                .collect(),
+            registry,
+        }
+    }
+
+    #[test]
+    fn absorb_replaces_registry_and_appends_records() {
+        let mut c = TelemetryCollector::new(2);
+        assert!(c.health(0).is_none());
+        c.absorb(0, snap(0, 3, 10, 2), 5_000, 0);
+        // Cumulative daemon registry arrives again, larger: replaced,
+        // not added — pulling twice can never double-count.
+        c.absorb(0, snap(0, 7, 25, 3), 9_000, 0);
+        assert_eq!(c.pulls(0), 2);
+        assert_eq!(c.records(0).len(), 5);
+        assert_eq!(c.health(0).unwrap().rounds_done, 7);
+        let agg = c.aggregate(&MetricsRegistry::new());
+        assert_eq!(agg.counter(Counter::ShardSteps), 25);
+        // Offset is fixed at the first pull: 5_000 - 1_000.
+        assert_eq!(c.wall_offset_ns(0), 4_000);
+    }
+
+    #[test]
+    fn aggregate_replaces_shard_counters_and_merges_hists() {
+        let mut c = TelemetryCollector::new(2);
+        let mut s0 = snap(0, 1, 10, 0);
+        s0.registry.observe(Hist::QueueDepth, 2.0);
+        c.absorb(0, s0, 100, 0);
+        c.absorb(1, snap(1, 1, 30, 0), 100, 0);
+        let mut coord = MetricsRegistry::new();
+        coord.count(Counter::ShardSteps, 999); // coordinator estimate
+        coord.count(Counter::WireBytesSent, 4_096);
+        let agg = c.aggregate(&coord);
+        assert_eq!(agg.counter(Counter::ShardSteps), 40);
+        assert_eq!(agg.counter(Counter::WireBytesSent), 4_096);
+        assert_eq!(agg.hist(Hist::QueueDepth).count, 1);
+        assert_eq!(c.dropped_total(), 2);
+    }
+
+    #[test]
+    fn aggregate_without_pulls_is_the_coordinator_registry() {
+        let c = TelemetryCollector::new(3);
+        let mut coord = MetricsRegistry::new();
+        coord.count(Counter::ShardSteps, 42);
+        assert_eq!(c.aggregate(&coord), coord);
+    }
+}

@@ -8,8 +8,10 @@
 
 use matcha::cluster::TransportKind;
 use matcha::experiment::{self, Backend, ExperimentSpec, NoopObserver, ProblemSpec, Strategy};
-use matcha::node::{run_daemon, run_remote, run_remote_traced, DaemonOptions, RemoteOptions};
-use matcha::trace::{Counter, MetricsSnapshot, RingSink, TraceEvent, Tracer};
+use matcha::node::{
+    query_status, run_daemon, run_remote, run_remote_traced, DaemonOptions, RemoteOptions,
+};
+use matcha::trace::{Counter, MetricsSnapshot, RingSink, TraceEvent, Tracer, UNASSIGNED_SHARD};
 use std::net::TcpListener;
 
 /// Bind an ephemeral port and serve a daemon on a background thread.
@@ -181,4 +183,166 @@ fn stray_run_against_restarted_daemon_is_rejected() {
     }
     let err = run_remote(&spec, &RemoteOptions::default()).unwrap_err();
     assert!(err.contains("mid-session"), "got: {err}");
+}
+
+/// A spec whose trace block asks for the merged telemetry export.
+fn traced_spec(addrs: Vec<String>, path: &std::path::Path) -> ExperimentSpec {
+    let mut spec = remote_spec(addrs);
+    spec.trace = Some(experiment::TraceSpec {
+        path: path.to_string_lossy().into_owned(),
+        format: matcha::trace::TraceFormat::Chrome,
+        capacity: 65_536,
+        telemetry: true,
+        telemetry_capacity: 65_536,
+    });
+    spec
+}
+
+#[test]
+fn status_answers_idle_and_dead_daemons() {
+    // Idle daemon (no Assign yet): health comes back unassigned, with
+    // zeroed session counters and no trace records.
+    let addr = spawn_daemon(DaemonOptions::default());
+    let t = query_status(&addr, 2_000).unwrap();
+    assert_eq!(t.shard, UNASSIGNED_SHARD);
+    assert_eq!(t.rounds_done, 0);
+    assert_eq!(t.reconnects, 0);
+    assert!(t.records.is_empty(), "health pulls never drain the ring");
+    // A dead address is a fast error, not a hang.
+    let dead = {
+        let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        addr
+    };
+    let started = std::time::Instant::now();
+    assert!(query_status(&dead, 500).is_err());
+    assert!(started.elapsed() < std::time::Duration::from_secs(5));
+}
+
+#[test]
+fn status_reports_mid_session_health_without_perturbing_the_run() {
+    // Drive a daemon two commands into a session by hand and query its
+    // status between commands: the daemon polls for side connections at
+    // the top of its command loop, so the pull is answered after the
+    // next command without entering the replay machinery.
+    use matcha::cluster::{Transport, WireMsg};
+    let addr = spawn_daemon(DaemonOptions::default());
+    let spec = remote_spec(vec![addr.clone()]);
+    let spec_json = spec.to_json_string();
+    let stream = std::net::TcpStream::connect(&addr).expect("dial daemon");
+    let mut tx = matcha::cluster::TcpTransport::new(stream).unwrap();
+    let mut scratch = Vec::new();
+    let mut body = Vec::new();
+    tx.send_msg(&WireMsg::Assign { shard: 0, shards: 1, spec_json }, &mut scratch).unwrap();
+    let _hello = tx.recv_msg(&mut body).unwrap();
+    let _resume = tx.recv_msg(&mut body).unwrap();
+    tx.send_msg(&WireMsg::Step { lr: 0.03 }, &mut scratch).unwrap();
+    assert!(matches!(tx.recv_msg(&mut body).unwrap(), WireMsg::States { .. }));
+    // Queue the status connection, then let the next command's loop
+    // iteration pick it up.
+    let status_addr = addr.clone();
+    let pull = std::thread::spawn(move || query_status(&status_addr, 10_000));
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    tx.send_msg(&WireMsg::Step { lr: 0.03 }, &mut scratch).unwrap();
+    assert!(matches!(tx.recv_msg(&mut body).unwrap(), WireMsg::States { .. }));
+    let t = pull.join().expect("status thread").expect("status reply");
+    assert_eq!(t.shard, 0);
+    // ring:6 on one shard: every step computes all 6 workers, and at
+    // least one step had landed when the pull was answered.
+    let steps = t.registry.counter(Counter::ShardSteps);
+    assert!(steps >= 6, "mid-session status must carry live counters, got {steps}");
+    assert!(t.records.is_empty(), "status pulls are non-draining");
+    // The session continues untouched afterwards.
+    tx.send_msg(&WireMsg::Step { lr: 0.03 }, &mut scratch).unwrap();
+    assert!(matches!(tx.recv_msg(&mut body).unwrap(), WireMsg::States { .. }));
+}
+
+#[test]
+fn merged_remote_trace_has_one_pid_per_daemon_and_stays_bit_for_bit() {
+    let addrs = vec![
+        spawn_daemon(DaemonOptions::default()),
+        spawn_daemon(DaemonOptions::default()),
+    ];
+    let dir = std::env::temp_dir().join("matcha_node_telemetry");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("merged_trace.json");
+    let remote = experiment::run(&traced_spec(addrs, &path)).unwrap();
+
+    // Telemetry on changes nothing about the results.
+    let loopback = experiment::run(
+        &base_spec().backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }),
+    )
+    .unwrap();
+    assert_eq!(remote.final_mean, loopback.final_mean);
+    assert_eq!(remote.final_states, loopback.final_states);
+    assert_eq!(remote.total_time, loopback.total_time);
+
+    // The export is one valid Chrome trace with coordinator pid 0 plus
+    // one pid per daemon, each carrying real compute/mix work.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let check = matcha::trace::validate_chrome_trace(&text).unwrap();
+    assert_eq!(check.pids, 3, "coordinator + 2 daemon processes");
+    assert_eq!(check.dropped, Some(0));
+    let json = matcha::json::Json::parse(&text).unwrap();
+    let events = json.get("traceEvents").unwrap().as_array().unwrap();
+    for pid in [1.0, 2.0] {
+        let spans = events
+            .iter()
+            .filter(|e| e.get("pid").and_then(matcha::json::Json::as_f64) == Some(pid))
+            .filter(|e| {
+                matches!(
+                    e.get("name").and_then(matcha::json::Json::as_str),
+                    Some("compute") | Some("mix")
+                )
+            })
+            .count();
+        assert!(spans > 0, "daemon pid {pid} must contribute compute/mix spans");
+    }
+    // The aggregate snapshot is daemon-authoritative and exact: every
+    // worker stepped every iteration, counted once.
+    assert_eq!(
+        remote.snapshot.counter(Counter::ShardSteps),
+        loopback.snapshot.counter(Counter::ShardSteps),
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn telemetry_survives_reconnects_without_double_counting() {
+    // Shard 0 drops its connection once mid-run. Daemon registries are
+    // cumulative and the collector replaces (never adds) per pull, so
+    // the aggregate must equal the drop-free loopback run's counters.
+    let addrs = vec![
+        spawn_daemon(DaemonOptions { drop_after: Some(7), ..DaemonOptions::default() }),
+        spawn_daemon(DaemonOptions::default()),
+    ];
+    let dir = std::env::temp_dir().join("matcha_node_telemetry_reconnect");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("reconnect_trace.json");
+    let remote = experiment::run(&traced_spec(addrs, &path)).unwrap();
+    assert!(
+        remote.snapshot.counter(Counter::Reconnects) >= 1,
+        "the injected drop must surface as a reconnect"
+    );
+    let loopback = experiment::run(
+        &base_spec().backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }),
+    )
+    .unwrap();
+    assert_eq!(remote.final_mean, loopback.final_mean);
+    assert_eq!(remote.final_states, loopback.final_states);
+    assert_eq!(
+        remote.snapshot.counter(Counter::ShardSteps),
+        loopback.snapshot.counter(Counter::ShardSteps),
+        "daemon step counts must not double-count across the reconnect"
+    );
+    assert_eq!(
+        remote.snapshot.counter(Counter::ShardMsgsFolded),
+        loopback.snapshot.counter(Counter::ShardMsgsFolded),
+        "daemon fold counts must not double-count across the reconnect"
+    );
+    let check =
+        matcha::trace::validate_chrome_trace(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(check.pids, 3);
+    std::fs::remove_file(&path).ok();
 }

@@ -62,6 +62,41 @@ fn cluster_loopback_trace_matches_actors_event_for_event() {
 }
 
 #[test]
+fn remote_coordinator_trace_matches_loopback_event_for_event() {
+    // The remote pipelined path must emit the same coordinator-side
+    // trace as the in-process loopback cluster once transport-shaped
+    // events are filtered: frame markers differ (TCP framing vs
+    // loopback pipes) and reconnects only exist remotely, but the
+    // engine-loop events — compute/link spans, mixes, barriers — are
+    // identical in kind, order, and virtual time.
+    use matcha::node::DaemonOptions;
+    let spawn = || {
+        let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind daemon");
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let _ = matcha::node::run_daemon(listener, &DaemonOptions::default());
+        });
+        addr
+    };
+    let addrs = vec![spawn(), spawn()];
+    let loopback = traced_events(
+        &base_spec(7).backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }),
+    );
+    let remote = traced_events(&base_spec(7).backend(Backend::Cluster {
+        shards: 2,
+        transport: TransportKind::Remote { addrs },
+    }));
+    assert!(remote.iter().any(|(ev, _)| ev.is_frame()), "remote emits frame events");
+    let strip = |events: Vec<(TraceEvent, f64)>| -> Vec<(TraceEvent, f64)> {
+        events
+            .into_iter()
+            .filter(|(ev, _)| !ev.is_frame() && !matches!(ev, TraceEvent::Reconnect { .. }))
+            .collect()
+    };
+    assert_eq!(strip(remote), strip(loopback));
+}
+
+#[test]
 fn async_trace_is_deterministic_per_seed() {
     let spec = base_spec(5)
         .policy("straggler:0:4.0")
