@@ -75,6 +75,13 @@ cargo bench --bench hotpath -- --dry-run
 test -f BENCH_state.json || { echo "BENCH_state.json not emitted"; exit 1; }
 tools/bench_regress --artifact BENCH_state.json \
   --history BENCH_history/state.jsonl --append
+# Same sweep with the SIMD row kernels forced off: the scalar fallback
+# must satisfy the identical zero-allocation assertions (the escape
+# hatch stays honest). Gated against the same history — the alloc keys
+# are exact-match and identical on both paths.
+MATCHA_NO_SIMD=1 cargo bench --bench hotpath -- --dry-run
+tools/bench_regress --artifact BENCH_state.json \
+  --history BENCH_history/state.jsonl --append
 cargo bench --bench engine_sweep -- --dry-run
 # Async-vs-barrier smoke: also emits BENCH_async.json (perf trajectory).
 cargo bench --bench async_vs_barrier -- --dry-run

@@ -10,10 +10,14 @@
 //!
 //! The **state-arena mixing sweep** measures the gossip mix kernel over a
 //! (workers × dim) grid under an allocation-counting global allocator:
-//! the arena path must perform **zero** heap allocations per iteration
-//! (asserted), and the sweep also times the pre-arena per-message-clone
-//! behavior as the before/after record. Results land in
-//! `BENCH_state.json` (emitted in `--dry-run` too, so `ci.sh` smokes it).
+//! both the plain arena path and the TopK-compressed path must perform
+//! **zero** heap allocations per iteration (asserted — compression runs
+//! off recycled pool scratch), and the sweep also times the pre-arena
+//! per-message-clone behavior as the before/after record. The summary
+//! records whether the SIMD row kernels were live (`simd`), so `ci.sh`
+//! can run the sweep twice — default and `MATCHA_NO_SIMD=1` — and gate
+//! the allocation counts on both. Results land in `BENCH_state.json`
+//! (emitted in `--dry-run` too, so `ci.sh` smokes it).
 
 use matcha::benchkit::bench_auto;
 use matcha::budget::project_capped_simplex;
@@ -24,8 +28,8 @@ use matcha::linalg::{symmetric_eigen, Mat};
 use matcha::matching::decompose;
 use matcha::rng::Rng;
 use matcha::sim::kernel::edge_diff_message;
-use matcha::sim::{run_decentralized, QuadraticProblem};
-use matcha::state::{DeltaPool, MixKernel, StateMatrix};
+use matcha::sim::{run_decentralized, Compression, QuadraticProblem};
+use matcha::state::{simd_active, DeltaPool, MixKernel, StateMatrix};
 use matcha::topology::TopologySampler;
 use matcha::trace::{Counter, Hist, TraceEvent, Tracer};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -124,6 +128,23 @@ fn state_mix_sweep(dry_run: bool) {
             (ALLOC_COUNT.load(Ordering::Relaxed) - before) as f64 / iters as f64;
         std::hint::black_box(xs.row(0));
 
+        // Compressed path: the same fold through TopK sparsification.
+        // The magnitude buffer is recycled pool scratch and the
+        // threshold select uses `sort_unstable` (no merge-sort temp), so
+        // compression must not reintroduce per-iteration allocations.
+        let comp = Compression::TopK { frac: 0.25 };
+        let ckernel = MixKernel::new(3, Some(&comp));
+        ckernel.apply(&mut xs, &d.matchings, &activated, 0.3, None, 0, &mut pool);
+        let before = ALLOC_COUNT.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        for k in 0..iters {
+            ckernel.apply(&mut xs, &d.matchings, &activated, 0.3, None, k, &mut pool);
+        }
+        let comp_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let comp_allocs =
+            (ALLOC_COUNT.load(Ordering::Relaxed) - before) as f64 / iters as f64;
+        std::hint::black_box(xs.row(0));
+
         // Pre-arena baseline: the same fold, but every message clones
         // the two endpoint iterates (what the engine's actor messages and
         // the async runtime's snapshots used to do per exchange).
@@ -162,15 +183,21 @@ fn state_mix_sweep(dry_run: bool) {
         // Elements touched per mix: both endpoint rows of every edge.
         let elements = (2 * edges * dim) as f64;
         let elements_per_sec = elements / (arena_ns / 1e9);
+        let mix_ns_per_row = arena_ns / (2 * edges) as f64;
         println!(
             "state mix m={m:<4} d={dim:<5} edges/iter={edges:<4} \
              arena: {arena_allocs:.1} allocs/iter {arena_ns:>12.0} ns/iter \
-             ({elements_per_sec:.3e} elem/s)  clone-baseline: \
-             {clone_allocs:.1} allocs/iter {clone_ns:>12.0} ns/iter"
+             ({elements_per_sec:.3e} elem/s, {mix_ns_per_row:.0} ns/row)  \
+             topk: {comp_allocs:.1} allocs/iter {comp_ns:>12.0} ns/iter  \
+             clone-baseline: {clone_allocs:.1} allocs/iter {clone_ns:>12.0} ns/iter"
         );
         assert!(
             arena_allocs == 0.0,
             "arena gossip mix hot path must be allocation-free, saw {arena_allocs} allocs/iter"
+        );
+        assert!(
+            comp_allocs == 0.0,
+            "compressed (TopK) mix hot path must be allocation-free, saw {comp_allocs} allocs/iter"
         );
         assert!(
             clone_allocs > 0.0,
@@ -181,9 +208,12 @@ fn state_mix_sweep(dry_run: bool) {
             ("dim", Json::Num(dim as f64)),
             ("edges_per_iter", Json::Num(edges as f64)),
             ("allocs_per_iter_arena", Json::Num(arena_allocs)),
+            ("allocs_per_iter_compressed", Json::Num(comp_allocs)),
             ("allocs_per_iter_clone_baseline", Json::Num(clone_allocs)),
             ("ns_per_iter_arena", Json::Num(arena_ns)),
+            ("ns_per_iter_compressed", Json::Num(comp_ns)),
             ("ns_per_iter_clone_baseline", Json::Num(clone_ns)),
+            ("mix_ns_per_row", Json::Num(mix_ns_per_row)),
             ("elements_per_sec", Json::Num(elements_per_sec)),
         ]));
     }
@@ -191,6 +221,10 @@ fn state_mix_sweep(dry_run: bool) {
     let trace_allocs = trace_disabled_allocs(if dry_run { 10_000 } else { 1_000_000 });
     let summary = Json::obj(vec![
         ("mode", Json::Str(if dry_run { "dry" } else { "full" }.into())),
+        // Whether the SIMD row kernels were live for this run (machine-
+        // and env-dependent: AVX2 detection gated by MATCHA_NO_SIMD).
+        // Informational, never regression-gated.
+        ("simd", Json::Bool(simd_active())),
         ("iters_per_point", Json::Num(iters as f64)),
         ("trace_disabled_allocs_per_emit", Json::Num(trace_allocs)),
         ("grid", Json::Arr(points)),

@@ -102,6 +102,12 @@ fn main() {
 
     let bytes_per_iter = runs[0].1.stats.total_bytes() as f64 / iters as f64;
     let frames_per_iter = runs[0].1.stats.total_frames() as f64 / iters as f64;
+    // Payload the MixLocal suppression kept off the wire: rows whose
+    // peer lives on the receiving shard. With 8 workers per shard the
+    // er:16 schedule activates plenty of intra-shard edges, so this is
+    // strictly positive (asserted below) and `bytes_per_iter` above is
+    // strictly smaller than a ship-everything protocol would pay.
+    let suppressed_per_iter = runs[0].1.stats.suppressed_bytes() as f64 / iters as f64;
 
     let mut table =
         matcha::benchkit::Table::new(&["mode", "wall (s)", "iters/s", "final loss"]);
@@ -120,7 +126,10 @@ fn main() {
         ]);
     }
     table.print();
-    println!("bytes/iter on the wire: {bytes_per_iter:.0} ({frames_per_iter:.1} frames)");
+    println!(
+        "bytes/iter on the wire: {bytes_per_iter:.0} ({frames_per_iter:.1} frames, \
+         {suppressed_per_iter:.0} bytes/iter suppressed intra-shard)"
+    );
 
     // Telemetry overhead: the same remote schedule through the unified
     // runner, with daemon telemetry harvested into a merged Chrome
@@ -152,6 +161,7 @@ fn main() {
         ("dim".to_string(), Json::Num(dim as f64)),
         ("bytes_per_iter".to_string(), Json::Num(bytes_per_iter)),
         ("frames_per_iter".to_string(), Json::Num(frames_per_iter)),
+        ("suppressed_bytes_per_iter".to_string(), Json::Num(suppressed_per_iter)),
         ("wall_tcp_cluster_s".to_string(), Json::Num(tcp_wall)),
         (
             "pipeline_speedup_w8".to_string(),
@@ -176,6 +186,10 @@ fn main() {
         traced.final_mean, untraced.final_mean,
         "telemetry harvesting must never change results"
     );
+    assert!(
+        runs[0].1.stats.suppressed_bytes() > 0,
+        "8 workers per shard must activate intra-shard edges whose rows are suppressed"
+    );
     for (w, r, _) in &runs {
         assert_eq!(
             r.run.final_mean, tcp.final_mean,
@@ -185,6 +199,11 @@ fn main() {
             r.stats.total_bytes(),
             runs[0].1.stats.total_bytes(),
             "window={w} must put identical bytes on the wire"
+        );
+        assert_eq!(
+            r.stats.suppressed_bytes(),
+            runs[0].1.stats.suppressed_bytes(),
+            "window={w} must suppress the same intra-shard payload"
         );
     }
 }

@@ -518,12 +518,12 @@ fn cmd_engine(args: &Args) -> Result<(), String> {
     if let Some(stats) = &result.cluster_stats {
         println!(
             "wire: transport {}, {} frames / {} bytes across {} links \
-             ({} bytes genuinely cross-shard)",
+             ({} payload bytes never shipped: intra-shard rows suppressed)",
             stats.transport.name(),
             stats.total_frames(),
             stats.total_bytes(),
             stats.per_link.len(),
-            stats.remote_bytes()
+            stats.suppressed_bytes()
         );
     }
     save_metrics(args, &result.metrics)
@@ -829,8 +829,14 @@ fn flatten_numbers(json: &Json, prefix: &str, out: &mut Vec<(String, f64)>) {
 }
 
 /// Deterministic keys that must match the baseline exactly.
-const REGRESS_EXACT: &[&str] =
-    &["workers", "shards", "dim", "allocs_per_iter_arena", "trace_disabled_allocs_per_emit"];
+const REGRESS_EXACT: &[&str] = &[
+    "workers",
+    "shards",
+    "dim",
+    "allocs_per_iter_arena",
+    "allocs_per_iter_compressed",
+    "trace_disabled_allocs_per_emit",
+];
 
 /// Lower-is-better keys gated by the fractional tolerance. Wall-clock
 /// timings are deliberately absent — they are machine-dependent and

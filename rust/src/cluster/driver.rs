@@ -67,16 +67,16 @@ impl Default for ClusterConfig {
 /// Communication observability of a cluster run: what actually crossed
 /// each coordinator↔shard link.
 ///
-/// Note on what the counts mean: the protocol stages **every** routed
-/// peer row into the Mix frame, including rows whose peer lives on the
-/// same shard — a uniform protocol that keeps the staging layout
-/// identical to the in-process actor batches (and the simultaneous-mix
-/// snapshot semantics trivially correct). The raw link counters
-/// therefore include intra-shard rows; the driver accounts those at
-/// staging time into [`LinkStats::intra_bytes`], and
-/// [`Self::remote_bytes`] / [`LinkStats::remote_bytes`] report the
-/// traffic that genuinely crossed shards — the number wire-efficiency
-/// comparisons (and `wire_bytes` in sweep JSON lines) use.
+/// Note on what the counts mean: mix traffic ships as
+/// [`WireMsg::MixLocal`] frames, which carry metadata for **every**
+/// routed message but stage only the peer rows that genuinely live on
+/// another shard — a row whose peer is on the receiving shard is
+/// *suppressed* (the shard resolves it from its own pre-mix segment),
+/// so its payload bytes never exist on the wire. The raw link counters
+/// are therefore already the genuine cross-shard traffic; the bytes the
+/// suppression avoided are accounted separately at staging time into
+/// [`LinkStats::intra_bytes`] and surface as [`Self::suppressed_bytes`]
+/// (the savings line of `matcha engine` and sweep JSON output).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterStats {
     pub transport: TransportKind,
@@ -85,17 +85,24 @@ pub struct ClusterStats {
 }
 
 impl ClusterStats {
-    /// Total bytes on the wire across all links, both directions
-    /// (intra-shard staged rows included — the raw link counter).
+    /// Total bytes on the wire across all links, both directions.
     pub fn total_bytes(&self) -> u64 {
         self.per_link.iter().map(|l| l.total_bytes()).sum()
     }
 
-    /// Bytes that genuinely had to cross shards: [`Self::total_bytes`]
-    /// minus the staged Mix rows whose peer lived on the receiving
-    /// shard.
+    /// Bytes that crossed shards. With local-row suppression everything
+    /// shipped is genuine cross-shard traffic, so this equals
+    /// [`Self::total_bytes`]; kept as the semantic name wire-efficiency
+    /// comparisons (and `wire_bytes` in sweep JSON lines) use.
     pub fn remote_bytes(&self) -> u64 {
         self.per_link.iter().map(|l| l.remote_bytes()).sum()
+    }
+
+    /// Payload bytes the Mix local-row suppression avoided shipping —
+    /// savings relative to the stage-everything protocol, **not** a
+    /// component of [`Self::total_bytes`].
+    pub fn suppressed_bytes(&self) -> u64 {
+        self.per_link.iter().map(|l| l.intra_bytes).sum()
     }
 
     /// Total frames across all links, both directions.
@@ -192,6 +199,11 @@ pub(crate) fn phase_cmd_from_wire(
                 ret: std::mem::take(ret),
             })
         }
+        WireMsg::MixLocal { .. } => Err(WireError::Inconsistent(
+            "mix-local frames are decoded zero-copy by the serve loop \
+             (MixLocalRef), never materialized into a phase command"
+                .into(),
+        )),
         other => Err(WireError::Inconsistent(format!("unexpected phase command {other:?}"))),
     }
 }
@@ -199,9 +211,11 @@ pub(crate) fn phase_cmd_from_wire(
 /// One shard node's serve loop: announce the shard id, then fold wire
 /// commands into the owned [`ActorShard`] until `Shutdown`. The frame
 /// scratch, state-return and mix-batch buffers are recycled across
-/// frames; decoding still materializes each incoming frame's vectors
-/// (the wire path is transport-bound — it does not share the in-process
-/// hot path's zero-allocation guarantee).
+/// frames, and mix frames take the zero-copy path: a received
+/// [`super::wire::TAG_MIX_LOCAL`] body is viewed through
+/// [`super::wire::MixLocalRef`] and its peer rows fold as byte slices
+/// borrowed straight from the frame buffer — the rows are never copied
+/// into an owned staging vector.
 fn serve_shard<P: Problem + ?Sized>(
     mut link: Box<dyn Transport>,
     mut shard: ActorShard<'_, P>,
@@ -217,11 +231,17 @@ fn serve_shard<P: Problem + ?Sized>(
         &mut scratch,
     )?;
     loop {
-        let cmd = match link.recv_msg(&mut body)? {
-            WireMsg::Shutdown => return Ok(()),
-            msg => phase_cmd_from_wire(msg, dim, &mut batch, &mut ret)?,
+        link.recv_into(&mut body)?;
+        let reply = if super::wire::peek_tag(&body)? == super::wire::TAG_MIX_LOCAL {
+            let frame = super::wire::MixLocalRef::decode(&body)?;
+            shard.mix_from_frame(&frame, std::mem::take(&mut ret))?
+        } else {
+            let cmd = match WireMsg::decode(&body)? {
+                WireMsg::Shutdown => return Ok(()),
+                msg => phase_cmd_from_wire(msg, dim, &mut batch, &mut ret)?,
+            };
+            shard.handle(cmd)
         };
-        let reply = shard.handle(cmd);
         if let Some(b) = reply.batch {
             batch = b;
         }
@@ -408,6 +428,9 @@ impl Executor for ClusterExec<'_> {
                 &mut self.msgs,
                 &mut self.staging,
                 &mut self.intra_rows[s],
+                // Suppress local-peer rows: the shard resolves them from
+                // its own pre-mix segment, so they never cross the wire.
+                true,
                 |slot, j, u, v| WireMeta {
                     slot: slot as u32,
                     matching: j as u32,
@@ -419,9 +442,11 @@ impl Executor for ClusterExec<'_> {
             // the coordinator accounts the fold counter the actor pool
             // accounts from its replies — identical totals.
             tracer.count(Counter::ShardMsgsFolded, self.msgs.len() as u64);
-            let msg = WireMsg::Mix {
+            let msg = WireMsg::MixLocal {
                 k: k as u64,
                 alpha,
+                shard: s as u32,
+                shards: shards as u32,
                 dim: d as u32,
                 msgs: std::mem::take(&mut self.msgs),
                 staging: std::mem::take(&mut self.staging),
@@ -429,7 +454,7 @@ impl Executor for ClusterExec<'_> {
             self.links[s]
                 .send_msg(&msg, &mut self.scratch)
                 .unwrap_or_else(|e| panic!("cluster link {s}: {e}"));
-            let WireMsg::Mix { msgs, staging, .. } = msg else { unreachable!() };
+            let WireMsg::MixLocal { msgs, staging, .. } = msg else { unreachable!() };
             self.msgs = msgs;
             self.staging = staging;
         }
@@ -693,8 +718,9 @@ where
                 .zip(&intra_rows)
                 .map(|(l, &rows)| {
                     let mut ls = l.stats();
-                    // Each staged local-peer row carried 8·dim payload
-                    // bytes that never needed a wire.
+                    // Each suppressed local-peer row would have carried
+                    // 8·dim payload bytes — the savings the MixLocal
+                    // frames realized on this link.
                     ls.intra_bytes = rows * 8 * d as u64;
                     ls
                 })
@@ -803,7 +829,7 @@ mod tests {
     }
 
     #[test]
-    fn intra_shard_rows_split_out_of_remote_bytes() {
+    fn local_row_suppression_shrinks_wire_bytes() {
         let g = crate::graph::ring(6);
         let d = decompose(&g);
         let p = quad(6);
@@ -817,18 +843,22 @@ mod tests {
         };
         // Two shards over ring(6): round-robin puts consecutive worker
         // ids on opposite shards, and every ring edge connects
-        // consecutive ids — no staged peer is ever local, so the whole
-        // byte count is genuine cross-shard traffic.
+        // consecutive ids — no peer is ever local, nothing suppresses,
+        // and every shipped byte is genuine cross-shard traffic.
         let two = run(2);
         assert!(two.stats.total_bytes() > 0);
+        assert_eq!(two.stats.suppressed_bytes(), 0);
         assert_eq!(two.stats.remote_bytes(), two.stats.total_bytes());
-        // One shard: every peer is local, so remote traffic is exactly
-        // the non-staging protocol overhead (headers, Step frames,
-        // replies) — strictly less than the raw total.
+        // One shard: every peer is local, so every mix payload row is
+        // suppressed — only metadata, Step frames and replies cross the
+        // link, and the run ships strictly fewer bytes than the
+        // two-shard run despite carrying the same schedule.
         let one = run(1);
-        let intra: u64 = one.stats.per_link.iter().map(|l| l.intra_bytes).sum();
-        assert!(intra > 0, "single-shard mix payload must be counted intra");
-        assert_eq!(one.stats.remote_bytes(), one.stats.total_bytes() - intra);
-        assert!(one.stats.remote_bytes() < one.stats.total_bytes());
+        assert!(one.stats.suppressed_bytes() > 0, "single-shard rows must suppress");
+        assert_eq!(one.stats.remote_bytes(), one.stats.total_bytes());
+        assert!(
+            one.stats.total_bytes() < two.stats.total_bytes(),
+            "suppression must shrink what actually ships"
+        );
     }
 }

@@ -36,29 +36,30 @@ pub struct LinkStats {
     pub bytes_sent: u64,
     pub frames_received: u64,
     pub bytes_received: u64,
-    /// Of the bytes above, how many carried **intra-shard** payload:
-    /// staged peer rows whose peer lives on the same shard as the
-    /// receiving worker, so the data never needed a wire at all.
-    /// Transports cannot know this — the driver folds it in after the
-    /// run from staging-time accounting — which is why [`Self::delta`]
-    /// and the raw counters keep their everything-on-the-link semantics
-    /// while [`Self::remote_bytes`] reports genuine cross-shard traffic.
+    /// Payload bytes the Mix local-row suppression **avoided** shipping
+    /// on this link: rows whose peer lives on the receiving shard are
+    /// omitted from `MixLocal` frames (the shard resolves them from its
+    /// own pre-mix segment), so these bytes are savings relative to the
+    /// stage-everything protocol, **not** a component of the raw
+    /// counters above. Transports cannot know this — the driver folds
+    /// it in after the run from staging-time accounting.
     pub intra_bytes: u64,
 }
 
 impl LinkStats {
-    /// Total traffic in both directions, in bytes (intra-shard payload
-    /// included — the raw link counter).
+    /// Total traffic in both directions, in bytes.
     pub fn total_bytes(&self) -> u64 {
         self.bytes_sent + self.bytes_received
     }
 
-    /// Traffic that genuinely had to cross shards: total minus the
-    /// staged rows whose peer lived on the receiving shard. This is the
-    /// number wire-efficiency comparisons should use (`wire_bytes` in
-    /// sweep JSON lines).
+    /// Traffic that crossed shards. Local-row suppression keeps
+    /// intra-shard payload off the wire entirely, so everything the
+    /// link carried is genuine cross-shard traffic and this equals
+    /// [`Self::total_bytes`] — kept as the semantic name
+    /// wire-efficiency comparisons use (`wire_bytes` in sweep JSON
+    /// lines).
     pub fn remote_bytes(&self) -> u64 {
-        self.total_bytes().saturating_sub(self.intra_bytes)
+        self.total_bytes()
     }
 
     /// Field-wise difference `self − prev`: the traffic that crossed the
@@ -433,7 +434,7 @@ mod tests {
     }
 
     #[test]
-    fn link_stats_split_remote_from_intra_bytes() {
+    fn link_stats_intra_bytes_are_savings_not_traffic() {
         let mut s = LinkStats {
             frames_sent: 1,
             bytes_sent: 100,
@@ -441,14 +442,13 @@ mod tests {
             bytes_received: 60,
             intra_bytes: 0,
         };
-        assert_eq!(s.remote_bytes(), s.total_bytes(), "no intra data → all remote");
+        assert_eq!(s.total_bytes(), 160);
+        assert_eq!(s.remote_bytes(), s.total_bytes());
+        // Suppressed rows never existed on the wire: recording them
+        // changes the savings ledger, not the traffic counters.
         s.intra_bytes = 48;
         assert_eq!(s.total_bytes(), 160, "raw counters keep link semantics");
-        assert_eq!(s.remote_bytes(), 112);
-        // Defensive: an over-attributed intra count saturates at zero
-        // instead of wrapping.
-        s.intra_bytes = 1000;
-        assert_eq!(s.remote_bytes(), 0);
+        assert_eq!(s.remote_bytes(), 160);
     }
 
     #[test]

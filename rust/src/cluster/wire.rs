@@ -56,6 +56,10 @@ const TAG_VERSION_REJECT: u8 = 0x07;
 const TAG_RESUME: u8 = 0x08;
 const TAG_TELEMETRY_PULL: u8 = 0x09;
 const TAG_TELEMETRY_SNAPSHOT: u8 = 0x0a;
+/// Tag of [`WireMsg::MixLocal`] — `pub(crate)` so receive loops can
+/// route these frames to the zero-copy [`MixLocalRef`] decoder after a
+/// [`peek_tag`] instead of materializing an owned [`WireMsg`].
+pub(crate) const TAG_MIX_LOCAL: u8 = 0x0b;
 
 // Trace-event subtags inside a telemetry snapshot, in
 // `TraceEvent` declaration order.
@@ -156,6 +160,24 @@ pub enum WireMsg {
     /// within a slot); message `i`'s peer row is
     /// `staging[i*dim..(i+1)*dim]`.
     Mix { k: u64, alpha: f64, dim: u32, msgs: Vec<WireMeta>, staging: Vec<f64> },
+    /// Coordinator → shard: the gossip mix of iteration `k` with
+    /// **intra-shard rows suppressed**. Metadata still covers every
+    /// routed message, but the staging payload carries only the rows of
+    /// *remote* peers (peers owned by another shard), in message order.
+    /// A peer is local iff `peer % shards == shard` under the shared
+    /// round-robin partition; the receiving shard resolves suppressed
+    /// rows from a pre-mix snapshot of its own post-step segment — the
+    /// exact values the coordinator would have staged — so results stay
+    /// bit-for-bit while the frames physically shrink.
+    MixLocal {
+        k: u64,
+        alpha: f64,
+        shard: u32,
+        shards: u32,
+        dim: u32,
+        msgs: Vec<WireMeta>,
+        staging: Vec<f64>,
+    },
     /// Shard → coordinator: the post-phase iterates of every owned
     /// worker, flat `rows × dim` in slot order.
     States { shard: u32, dim: u32, states: Vec<f64> },
@@ -220,6 +242,30 @@ impl WireMsg {
                     put_u32(out, m.v);
                 }
                 debug_assert_eq!(staging.len(), msgs.len() * *dim as usize);
+                for &x in staging {
+                    put_f64(out, x);
+                }
+            }
+            WireMsg::MixLocal { k, alpha, shard, shards, dim, msgs, staging } => {
+                out.push(TAG_MIX_LOCAL);
+                put_u64(out, *k);
+                put_f64(out, *alpha);
+                put_u32(out, *shard);
+                put_u32(out, *shards);
+                put_u32(out, *dim);
+                put_u32(out, u32::try_from(msgs.len()).expect("mix message count fits u32"));
+                for m in msgs {
+                    put_u32(out, m.slot);
+                    put_u32(out, m.matching);
+                    put_u32(out, m.u);
+                    put_u32(out, m.v);
+                }
+                debug_assert_eq!(
+                    staging.len(),
+                    msgs.iter().filter(|m| !peer_is_local(*shard, *shards, m)).count()
+                        * *dim as usize,
+                    "staging must hold exactly the remote-peer rows"
+                );
                 for &x in staging {
                     put_f64(out, x);
                 }
@@ -309,6 +355,43 @@ impl WireMsg {
                 }
                 WireMsg::Mix { k, alpha, dim, msgs, staging }
             }
+            TAG_MIX_LOCAL => {
+                let k = r.u64()?;
+                let alpha = r.f64()?;
+                let shard = r.u32()?;
+                let shards = r.u32()?;
+                let dim = r.u32()?;
+                if shards == 0 || shard >= shards {
+                    return Err(WireError::Inconsistent(format!(
+                        "mix-local addressed to shard {shard} of {shards}"
+                    )));
+                }
+                let count = r.u32()? as usize;
+                r.need(count, 16)?;
+                let mut msgs = Vec::with_capacity(count);
+                let mut remote = 0usize;
+                for _ in 0..count {
+                    let m = WireMeta {
+                        slot: r.u32()?,
+                        matching: r.u32()?,
+                        u: r.u32()?,
+                        v: r.u32()?,
+                    };
+                    if !peer_is_local(shard, shards, &m) {
+                        remote += 1;
+                    }
+                    msgs.push(m);
+                }
+                let rows = remote
+                    .checked_mul(dim as usize)
+                    .ok_or(WireError::FrameTooLarge(u64::MAX))?;
+                r.need(rows, 8)?;
+                let mut staging = Vec::with_capacity(rows);
+                for _ in 0..rows {
+                    staging.push(r.f64()?);
+                }
+                WireMsg::MixLocal { k, alpha, shard, shards, dim, msgs, staging }
+            }
             TAG_STATES => {
                 let shard = r.u32()?;
                 let dim = r.u32()?;
@@ -388,6 +471,177 @@ pub fn frame_len(header: [u8; FRAME_HEADER_BYTES]) -> Result<usize, WireError> {
         return Err(WireError::FrameTooLarge(len));
     }
     Ok(len as usize)
+}
+
+/// Validate a frame body's version byte and return its tag without
+/// decoding the payload. Receive loops use this to route mix frames to
+/// the zero-copy [`MixLocalRef`] decoder while everything else takes
+/// the owned [`WireMsg::decode`] path.
+pub fn peek_tag(body: &[u8]) -> Result<u8, WireError> {
+    match body {
+        [] => Err(WireError::Truncated { needed: 1, got: 0 }),
+        [v, ..] if *v != WIRE_VERSION => Err(WireError::BadVersion(*v)),
+        [_] => Err(WireError::Truncated { needed: 2, got: 1 }),
+        [_, tag, ..] => Ok(*tag),
+    }
+}
+
+/// Is a routed message's *peer* owned by the destination shard itself
+/// (and therefore suppressed from a [`WireMsg::MixLocal`] staging
+/// payload)? Pure function of the metadata under the shared round-robin
+/// partition: the `slot`-th worker of `shard` is `shard + slot·shards`,
+/// its peer is the other endpoint of `(u, v)`, and a worker `w` lives on
+/// shard `w % shards`. All math in `u64` so hostile metadata cannot
+/// overflow; encode, decode and the streaming view all call this one
+/// definition, so they can never disagree about which rows are present.
+pub(crate) fn peer_is_local(shard: u32, shards: u32, m: &WireMeta) -> bool {
+    debug_assert!(shards > 0);
+    let w = shard as u64 + m.slot as u64 * shards as u64;
+    let peer = if w == m.u as u64 { m.v as u64 } else { m.u as u64 };
+    peer % shards as u64 == shard as u64
+}
+
+/// Zero-copy view of a [`WireMsg::MixLocal`] frame body: the header is
+/// parsed once, message metadata is read on the fly, and remote peer
+/// rows are **borrowed** from the receive buffer as little-endian
+/// `f64` bytes ([`crate::state::RowSource::Wire`]) — decoding a mix
+/// frame allocates nothing and copies no row. [`MixLocalRef::decode`]
+/// performs the same total validation as [`WireMsg::decode`] on the
+/// same bytes (truncation, counts, trailing garbage), so iteration is
+/// infallible afterwards.
+pub struct MixLocalRef<'a> {
+    /// Iteration index of the mix.
+    pub k: u64,
+    /// Mixing step size α.
+    pub alpha: f64,
+    /// Destination shard (validated `< shards`).
+    pub shard: u32,
+    /// Total shard count of the round-robin partition.
+    pub shards: u32,
+    /// Row width in elements.
+    pub dim: u32,
+    count: usize,
+    meta: &'a [u8],
+    staging: &'a [u8],
+}
+
+impl<'a> MixLocalRef<'a> {
+    /// Decode a frame **body** (after the length prefix) as a borrowed
+    /// view. Returns [`WireError::BadTag`] for non-`MixLocal` frames —
+    /// callers route on [`peek_tag`] first.
+    pub fn decode(body: &'a [u8]) -> Result<MixLocalRef<'a>, WireError> {
+        let mut r = Reader { buf: body, at: 0 };
+        let version = r.u8()?;
+        if version != WIRE_VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let tag = r.u8()?;
+        if tag != TAG_MIX_LOCAL {
+            return Err(WireError::BadTag(tag));
+        }
+        let k = r.u64()?;
+        let alpha = r.f64()?;
+        let shard = r.u32()?;
+        let shards = r.u32()?;
+        let dim = r.u32()?;
+        if shards == 0 || shard >= shards {
+            return Err(WireError::Inconsistent(format!(
+                "mix-local addressed to shard {shard} of {shards}"
+            )));
+        }
+        let count = r.u32()? as usize;
+        r.need(count, 16)?;
+        let meta_at = r.at;
+        let meta = r.take(count * 16)?;
+        let mut remote = 0usize;
+        for i in 0..count {
+            if !peer_is_local(shard, shards, &meta_entry(meta, i)) {
+                remote += 1;
+            }
+        }
+        let rows = remote
+            .checked_mul(dim as usize)
+            .ok_or(WireError::FrameTooLarge(u64::MAX))?;
+        r.need(rows, 8)?;
+        let staging = r.take(rows * 8)?;
+        if r.at != body.len() {
+            return Err(WireError::Inconsistent(format!(
+                "{} trailing bytes after the payload",
+                body.len() - r.at
+            )));
+        }
+        debug_assert_eq!(meta_at + count * 16 + rows * 8, body.len());
+        Ok(MixLocalRef { k, alpha, shard, shards, dim, count, meta, staging })
+    }
+
+    /// Number of routed messages (local and remote) in the frame.
+    pub fn msg_count(&self) -> usize {
+        self.count
+    }
+
+    /// Number of suppressed (local-peer) messages — rows that did not
+    /// travel in the staging payload.
+    pub fn suppressed(&self) -> usize {
+        (0..self.count)
+            .filter(|&i| peer_is_local(self.shard, self.shards, &meta_entry(self.meta, i)))
+            .count()
+    }
+
+    /// Iterate `(meta, peer_row_bytes)` in message order. `None` marks a
+    /// suppressed local peer (resolve it from the shard's own pre-mix
+    /// segment snapshot); `Some(bytes)` is the remote peer's row,
+    /// `8 × dim` little-endian bytes borrowed from the frame.
+    pub fn msgs(&self) -> MixLocalMsgs<'a> {
+        MixLocalMsgs {
+            meta: self.meta,
+            staging: self.staging,
+            shard: self.shard,
+            shards: self.shards,
+            row_bytes: self.dim as usize * 8,
+            count: self.count,
+            i: 0,
+            at: 0,
+        }
+    }
+}
+
+/// Streaming message iterator of a [`MixLocalRef`] — see
+/// [`MixLocalRef::msgs`].
+pub struct MixLocalMsgs<'a> {
+    meta: &'a [u8],
+    staging: &'a [u8],
+    shard: u32,
+    shards: u32,
+    row_bytes: usize,
+    count: usize,
+    i: usize,
+    at: usize,
+}
+
+impl<'a> Iterator for MixLocalMsgs<'a> {
+    type Item = (WireMeta, Option<&'a [u8]>);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.i == self.count {
+            return None;
+        }
+        let m = meta_entry(self.meta, self.i);
+        self.i += 1;
+        if peer_is_local(self.shard, self.shards, &m) {
+            Some((m, None))
+        } else {
+            let row = &self.staging[self.at..self.at + self.row_bytes];
+            self.at += self.row_bytes;
+            Some((m, Some(row)))
+        }
+    }
+}
+
+/// The `i`-th 16-byte metadata entry of a mix frame's meta section.
+fn meta_entry(meta: &[u8], i: usize) -> WireMeta {
+    let b = &meta[i * 16..i * 16 + 16];
+    let f = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().expect("4-byte field"));
+    WireMeta { slot: f(0), matching: f(4), u: f(8), v: f(12) }
 }
 
 // -- little-endian primitives -----------------------------------------
@@ -671,8 +925,47 @@ mod tests {
         WireMsg::decode(&frame[FRAME_HEADER_BYTES..]).expect("decode of own encoding")
     }
 
+    /// A structurally valid random `MixLocal`: every meta names its
+    /// owning worker (`shard + slot·shards`) as one endpoint, and the
+    /// staging payload holds exactly the remote-peer rows.
+    fn random_mix_local(rng: &mut Rng) -> WireMsg {
+        let shards = (rng.next_u64() % 3) as u32 + 1;
+        let shard = (rng.next_u64() % shards as u64) as u32;
+        let dim = (rng.next_u64() % 6) as usize + 1;
+        let n = (rng.next_u64() % 9) as usize;
+        let mut msgs = Vec::with_capacity(n);
+        let mut staging = Vec::new();
+        for _ in 0..n {
+            let slot = (rng.next_u64() % 5) as u32;
+            let w = shard + slot * shards;
+            let mut peer = (rng.next_u64() % 16) as u32;
+            if peer == w {
+                peer += 1;
+            }
+            let m = WireMeta {
+                slot,
+                matching: (rng.next_u64() % 8) as u32,
+                u: w.min(peer),
+                v: w.max(peer),
+            };
+            if !peer_is_local(shard, shards, &m) {
+                staging.extend((0..dim).map(|_| rng.normal()));
+            }
+            msgs.push(m);
+        }
+        WireMsg::MixLocal {
+            k: rng.next_u64() % (1 << 40),
+            alpha: rng.normal(),
+            shard,
+            shards,
+            dim: dim as u32,
+            msgs,
+            staging,
+        }
+    }
+
     fn random_msg(rng: &mut Rng) -> WireMsg {
-        match rng.next_u64() % 10 {
+        match rng.next_u64() % 11 {
             0 => WireMsg::Hello {
                 shard: (rng.next_u64() % 1000) as u32,
                 proto: (rng.next_u64() % 4) as u32,
@@ -731,6 +1024,7 @@ mod tests {
             }
             7 => WireMsg::TelemetryPull { drain: rng.next_u64() % 2 == 0 },
             8 => WireMsg::TelemetrySnapshot { telemetry: random_telemetry(rng) },
+            9 => random_mix_local(rng),
             _ => WireMsg::Shutdown,
         }
     }
@@ -793,6 +1087,32 @@ mod tests {
                 dim: 2,
                 msgs: vec![WireMeta { slot: 0, matching: 1, u: 0, v: 3 }],
                 staging: vec![1.5, -2.5],
+            },
+            // Worker 3 (slot 1 of shard 1 in a 2-shard partition) hears
+            // from remote peer 2 (row shipped) and local peer 5 (row
+            // suppressed — only metadata travels).
+            WireMsg::MixLocal {
+                k: 17,
+                alpha: 0.125,
+                shard: 1,
+                shards: 2,
+                dim: 2,
+                msgs: vec![
+                    WireMeta { slot: 1, matching: 0, u: 2, v: 3 },
+                    WireMeta { slot: 1, matching: 2, u: 3, v: 5 },
+                ],
+                staging: vec![0.75, -1.25],
+            },
+            // Degenerate single-shard case: every peer is local, so the
+            // frame carries metadata only.
+            WireMsg::MixLocal {
+                k: 3,
+                alpha: 0.5,
+                shard: 0,
+                shards: 1,
+                dim: 4,
+                msgs: vec![WireMeta { slot: 0, matching: 1, u: 0, v: 1 }],
+                staging: vec![],
             },
             WireMsg::States { shard: 1, dim: 3, states: vec![0.0, f64::MIN, f64::MAX] },
             WireMsg::Shutdown,
@@ -974,6 +1294,156 @@ mod tests {
         }
     }
 
+    /// A canonical two-shard MixLocal frame: slot 0 of shard 0 (worker
+    /// 0) hears from remote worker 1 and local worker 2; slot 1 (worker
+    /// 2) hears from remote worker 3. Two rows ship, one is suppressed.
+    fn sample_mix_local() -> WireMsg {
+        WireMsg::MixLocal {
+            k: 9,
+            alpha: 0.25,
+            shard: 0,
+            shards: 2,
+            dim: 3,
+            msgs: vec![
+                WireMeta { slot: 0, matching: 0, u: 0, v: 1 },
+                WireMeta { slot: 0, matching: 1, u: 0, v: 2 },
+                WireMeta { slot: 1, matching: 0, u: 2, v: 3 },
+            ],
+            staging: vec![1.0, 2.0, 3.0, -1.0, -2.0, -3.0],
+        }
+    }
+
+    #[test]
+    fn mix_local_truncation_at_every_length_is_a_typed_error() {
+        let msg = sample_mix_local();
+        let mut frame = Vec::new();
+        msg.encode(&mut frame);
+        let body = &frame[FRAME_HEADER_BYTES..];
+        for cut in 0..body.len() {
+            match WireMsg::decode(&body[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("owned cut at {cut}: expected Truncated, got {other:?}"),
+            }
+            match MixLocalRef::decode(&body[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("borrowed cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mix_local_rejects_bad_version_and_foreign_tags() {
+        let mut frame = Vec::new();
+        sample_mix_local().encode(&mut frame);
+        let mut body = frame[FRAME_HEADER_BYTES..].to_vec();
+        body[0] = WIRE_VERSION + 1;
+        assert!(matches!(
+            MixLocalRef::decode(&body),
+            Err(WireError::BadVersion(v)) if v == WIRE_VERSION + 1
+        ));
+        assert!(matches!(peek_tag(&body), Err(WireError::BadVersion(_))));
+        // A well-formed frame of a different type is a BadTag for the
+        // borrowed decoder — receive loops must route on peek_tag.
+        let mut step = Vec::new();
+        WireMsg::Step { lr: 0.1 }.encode(&mut step);
+        match MixLocalRef::decode(&step[FRAME_HEADER_BYTES..]) {
+            Err(WireError::BadTag(t)) => assert_eq!(t, TAG_STEP),
+            other => panic!("expected BadTag, got {other:?}"),
+        }
+        assert_eq!(peek_tag(&step[FRAME_HEADER_BYTES..]), Ok(TAG_STEP));
+        assert!(matches!(peek_tag(&[]), Err(WireError::Truncated { .. })));
+        assert!(matches!(peek_tag(&[WIRE_VERSION]), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn mix_local_bogus_shard_addressing_is_rejected() {
+        // shard >= shards (and shards == 0) can never be a valid
+        // round-robin address; both decoders refuse before touching the
+        // payload.
+        for (shard, shards) in [(2u32, 2u32), (5, 1), (0, 0)] {
+            let mut body = vec![WIRE_VERSION, TAG_MIX_LOCAL];
+            body.extend_from_slice(&7u64.to_le_bytes()); // k
+            body.extend_from_slice(&0.5f64.to_le_bytes()); // alpha
+            body.extend_from_slice(&shard.to_le_bytes());
+            body.extend_from_slice(&shards.to_le_bytes());
+            body.extend_from_slice(&3u32.to_le_bytes()); // dim
+            body.extend_from_slice(&0u32.to_le_bytes()); // count
+            for decode in [
+                |b: &[u8]| WireMsg::decode(b).map(|_| ()),
+                |b: &[u8]| MixLocalRef::decode(b).map(|_| ()),
+            ] {
+                match decode(&body) {
+                    Err(WireError::Inconsistent(msg)) => {
+                        assert!(msg.contains("shard"), "{msg}")
+                    }
+                    other => panic!("shard {shard}/{shards}: expected Inconsistent, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mix_local_trailing_staging_is_rejected() {
+        // One extra row beyond the remote count is trailing garbage —
+        // the suppressed slots must not be "fillable" from the wire.
+        let mut frame = Vec::new();
+        sample_mix_local().encode(&mut frame);
+        let mut body = frame[FRAME_HEADER_BYTES..].to_vec();
+        body.extend_from_slice(&[0u8; 24]); // a fourth dim=3 row
+        for result in
+            [WireMsg::decode(&body).map(|_| ()), MixLocalRef::decode(&body).map(|_| ())]
+        {
+            match result {
+                Err(WireError::Inconsistent(msg)) => assert!(msg.contains("trailing"), "{msg}"),
+                other => panic!("expected Inconsistent, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn mix_local_borrowed_view_matches_owned_decode() {
+        let mut rng = Rng::new(0xabc1);
+        for _ in 0..200 {
+            let msg = random_mix_local(&mut rng);
+            let mut frame = Vec::new();
+            msg.encode(&mut frame);
+            let body = &frame[FRAME_HEADER_BYTES..];
+            assert_eq!(peek_tag(body), Ok(TAG_MIX_LOCAL));
+            let WireMsg::MixLocal { k, alpha, shard, shards, dim, msgs, staging } =
+                WireMsg::decode(body).expect("owned decode")
+            else {
+                panic!("variant changed in flight")
+            };
+            let view = MixLocalRef::decode(body).expect("borrowed decode");
+            assert_eq!((view.k, view.alpha.to_bits()), (k, alpha.to_bits()));
+            assert_eq!((view.shard, view.shards, view.dim), (shard, shards, dim));
+            assert_eq!(view.msg_count(), msgs.len());
+            let d = dim as usize;
+            let mut at = 0usize;
+            let mut suppressed = 0usize;
+            for (i, (meta, row)) in view.msgs().enumerate() {
+                assert_eq!(meta, msgs[i]);
+                match row {
+                    Some(bytes) => {
+                        // The borrowed bytes must be the exact LE image
+                        // of the owned staging row.
+                        assert_eq!(bytes.len(), d * 8);
+                        for (e, x) in bytes.chunks_exact(8).zip(&staging[at..at + d]) {
+                            assert_eq!(
+                                f64::from_le_bytes(e.try_into().unwrap()).to_bits(),
+                                x.to_bits()
+                            );
+                        }
+                        at += d;
+                    }
+                    None => suppressed += 1,
+                }
+            }
+            assert_eq!(at, staging.len(), "view must consume every staged row");
+            assert_eq!(view.suppressed(), suppressed);
+        }
+    }
+
     #[test]
     fn bad_version_byte_is_rejected() {
         let mut frame = Vec::new();
@@ -1108,6 +1578,8 @@ mod tests {
             let len = (rng.next_u64() % 96) as usize;
             let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
             let _ = WireMsg::decode(&bytes);
+            let _ = MixLocalRef::decode(&bytes);
+            let _ = peek_tag(&bytes);
         }
     }
 
@@ -1124,6 +1596,13 @@ mod tests {
                 let mut corrupt = frame[FRAME_HEADER_BYTES..].to_vec();
                 corrupt[i - FRAME_HEADER_BYTES] ^= 0xff;
                 let _ = WireMsg::decode(&corrupt);
+                // The borrowed decoder shares the parser internals but
+                // not the code path — fuzz it against the same flips.
+                if let Ok(view) = MixLocalRef::decode(&corrupt) {
+                    for (_, row) in view.msgs() {
+                        let _ = row.map(<[u8]>::len);
+                    }
+                }
             }
         }
     }

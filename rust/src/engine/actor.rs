@@ -38,11 +38,12 @@
 //! engine's deterministic mode. There is no worker cap: 10k workers run
 //! fine on 8 threads.
 
+use crate::cluster::wire::{MixLocalRef, WireError};
 use crate::gossip::shard_workers;
 use crate::rng::Rng;
 use crate::sim::kernel::local_sgd_step;
 use crate::sim::{Compression, Problem};
-use crate::state::{MixKernel, StateMatrix};
+use crate::state::{MixKernel, RowSource, StateMatrix};
 
 /// One gossip message routed to a worker: the metadata of one activated,
 /// live link. `(u, v)` is the canonical edge (u < v); the receiving
@@ -110,6 +111,13 @@ pub(crate) struct ActorShard<'p, P: Problem + ?Sized> {
     grad: Vec<f64>,
     diff: Vec<f64>,
     delta: Vec<f64>,
+    /// Recycled TopK compression scratch
+    /// ([`crate::sim::Compression::compress_with`]).
+    comp: Vec<f64>,
+    /// Pre-mix snapshot of the segment, taken at the top of
+    /// [`ActorShard::mix_from_frame`]: suppressed local-peer rows must
+    /// read post-step iterates even after earlier slots have mixed.
+    snap: StateMatrix,
 }
 
 impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
@@ -125,6 +133,7 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
         assert_eq!(workers.len(), seg.rows(), "one segment row per owned worker");
         assert_eq!(workers.len(), rngs.len(), "one RNG stream per owned worker");
         let d = problem.dim();
+        let snap = StateMatrix::zeros(workers.len(), d);
         ActorShard {
             problem,
             compression,
@@ -136,6 +145,8 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
             grad: vec![0.0; d],
             diff: vec![0.0; d],
             delta: vec![0.0; d],
+            comp: Vec::with_capacity(d),
+            snap,
         }
     }
 
@@ -217,7 +228,7 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
                     // workers of an active round.
                     let msgs = batch.msgs[start..i].iter().enumerate().map(|(o, m)| {
                         let at = (start + o) * d;
-                        (m.matching, m.u, m.v, &batch.staging[at..at + d])
+                        (m.matching, m.u, m.v, RowSource::Host(&batch.staging[at..at + d]))
                     });
                     kernel.fold_worker(
                         w,
@@ -227,6 +238,7 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
                         alpha,
                         &mut self.diff,
                         &mut self.delta,
+                        &mut self.comp,
                     );
                 }
                 assert_eq!(
@@ -244,6 +256,98 @@ impl<'p, P: Problem + ?Sized> ActorShard<'p, P> {
                 }
             }
         }
+    }
+
+    /// Apply a gossip mix streamed straight out of a received wire frame
+    /// ([`MixLocalRef`]), the zero-copy twin of `ShardCmd::Mix`:
+    ///
+    /// - **Shipped peer rows** fold as [`RowSource::Wire`] — little-endian
+    ///   byte slices borrowed from the frame body, never copied into host
+    ///   staging first.
+    /// - **Suppressed local-peer rows** (both endpoints on this shard; the
+    ///   coordinator omits them from the frame) resolve from a pre-mix
+    ///   snapshot of this shard's own segment — exactly the post-step
+    ///   iterates the coordinator would have staged, since its arena and
+    ///   this segment agree at mix time.
+    ///
+    /// Message order and arithmetic are identical to the staged-batch
+    /// path, so the result is bit-for-bit the same iterates.
+    pub fn mix_from_frame(
+        &mut self,
+        frame: &MixLocalRef<'_>,
+        ret: Vec<f64>,
+    ) -> Result<ShardReply, WireError> {
+        let d = self.seg.dim();
+        if frame.dim as usize != d || frame.shard as usize != self.shard {
+            return Err(WireError::Inconsistent(format!(
+                "mix-local frame for shard {} dim {} reached shard {} dim {}",
+                frame.shard, frame.dim, self.shard, d
+            )));
+        }
+        let shards = frame.shards as usize;
+        let (k, alpha) = (frame.k as usize, frame.alpha);
+        // The fold mutates the segment slot by slot, but a suppressed
+        // message must read the peer's *post-step* iterate — snapshot
+        // the whole segment before any slot moves.
+        self.snap.as_mut_slice().copy_from_slice(self.seg.as_slice());
+        let kernel = MixKernel::new(self.seed, self.compression.as_ref());
+        let mut msgs = frame.msgs();
+        let mut pending = msgs.next();
+        let mut folded = 0u64;
+        for (slot, &w) in self.workers.iter().enumerate() {
+            self.delta.iter_mut().for_each(|v| *v = 0.0);
+            while let Some((meta, row)) = pending {
+                if meta.slot as usize != slot {
+                    break;
+                }
+                let (j, u, v) = (meta.matching as usize, meta.u as usize, meta.v as usize);
+                let peer = if w == u { v } else { u };
+                let src = match row {
+                    Some(bytes) => RowSource::Wire(bytes),
+                    None => {
+                        // Round-robin assignment puts worker `peer` at
+                        // slot `peer / shards` of its shard; anything
+                        // else means the frame lied about locality.
+                        let ps = peer / shards;
+                        if self.workers.get(ps) != Some(&peer) {
+                            return Err(WireError::Inconsistent(format!(
+                                "suppressed peer {peer} of message ({u},{v}) \
+                                 is not owned by shard {}",
+                                self.shard
+                            )));
+                        }
+                        RowSource::Host(self.snap.row(ps))
+                    }
+                };
+                kernel.fold_msg(
+                    w,
+                    self.snap.row(slot),
+                    j,
+                    u,
+                    v,
+                    src,
+                    k,
+                    &mut self.diff,
+                    &mut self.delta,
+                    &mut self.comp,
+                );
+                folded += 1;
+                pending = msgs.next();
+            }
+            MixKernel::apply_delta(self.seg.row_mut(slot), alpha, &self.delta);
+        }
+        if pending.is_some() {
+            return Err(WireError::Inconsistent(
+                "mix-local messages not sorted by owner slot".into(),
+            ));
+        }
+        Ok(ShardReply {
+            shard: self.shard,
+            states: self.states_into(ret),
+            batch: None,
+            steps: 0,
+            folded,
+        })
     }
 }
 
@@ -367,5 +471,136 @@ mod tests {
         let mut shard = shard_for(&problem, seed, workers, &xs, &rngs);
         let reply = shard.handle(ShardCmd::Mix { k, alpha, batch, ret: Vec::new() });
         assert_eq!(reply.states, reference.as_slice(), "shard mix diverged from the kernel");
+    }
+
+    #[test]
+    fn mix_from_frame_matches_staged_batch_bit_for_bit() {
+        use crate::cluster::wire::{WireMeta, WireMsg, FRAME_HEADER_BYTES};
+        let g = crate::graph::paper_figure1_graph();
+        let d = crate::matching::decompose(&g);
+        let (m, dim, shards, shard_id) = (8usize, 5usize, 2usize, 0usize);
+        let (alpha, k, seed) = (0.21f64, 3usize, 9u64);
+        let compression = Some(crate::sim::Compression::TopK { frac: 0.6 });
+        let mut rng = Rng::new(4);
+        let mut xs = StateMatrix::zeros(m, dim);
+        for w in 0..m {
+            for x in xs.row_mut(w).iter_mut() {
+                *x = rng.normal();
+            }
+        }
+        let activated: Vec<usize> = (0..d.len()).collect();
+        let mut rng2 = Rng::new(1);
+        let problem = QuadraticProblem::generate(m, dim, 1.0, 0.0, &mut rng2);
+        let rngs = worker_streams(seed, m);
+
+        // Shard 0 of 2 owns workers 0, 2, 4, 6. Build the staged batch
+        // (every peer row shipped) and the suppressed wire frame (only
+        // odd — remote — peers shipped) over the same message order.
+        let workers: Vec<usize> = shard_workers(shard_id, shards, m).collect();
+        let mut batch = MixBatch::default();
+        let mut metas: Vec<WireMeta> = Vec::new();
+        let mut staging: Vec<f64> = Vec::new();
+        for (slot, &w) in workers.iter().enumerate() {
+            for &j in &activated {
+                for &(u, v) in d.matchings[j].edges() {
+                    if u == w || v == w {
+                        let peer = if u == w { v } else { u };
+                        batch.msgs.push(MsgMeta { slot, matching: j, u, v });
+                        batch.staging.extend_from_slice(xs.row(peer));
+                        metas.push(WireMeta {
+                            slot: slot as u32,
+                            matching: j as u32,
+                            u: u as u32,
+                            v: v as u32,
+                        });
+                        if peer % shards != shard_id {
+                            staging.extend_from_slice(xs.row(peer));
+                        }
+                    }
+                }
+            }
+        }
+        assert!(staging.len() < batch.staging.len(), "some rows must be suppressed");
+        assert!(!staging.is_empty(), "some rows must still ship");
+
+        let build = |xs: &StateMatrix| {
+            let mut seg = StateMatrix::zeros(workers.len(), dim);
+            for (slot, &w) in workers.iter().enumerate() {
+                seg.row_mut(slot).copy_from_slice(xs.row(w));
+            }
+            let shard_rngs = workers.iter().map(|&w| rngs[w].clone()).collect();
+            ActorShard::new(
+                &problem,
+                compression.clone(),
+                seed,
+                shard_id,
+                workers.clone(),
+                seg,
+                shard_rngs,
+            )
+        };
+
+        let mut staged = build(&xs);
+        let staged_reply = staged.handle(ShardCmd::Mix { k, alpha, batch, ret: Vec::new() });
+
+        let mut frame = Vec::new();
+        WireMsg::MixLocal {
+            k: k as u64,
+            alpha,
+            shard: shard_id as u32,
+            shards: shards as u32,
+            dim: dim as u32,
+            msgs: metas,
+            staging,
+        }
+        .encode(&mut frame);
+        let view = crate::cluster::wire::MixLocalRef::decode(&frame[FRAME_HEADER_BYTES..])
+            .expect("frame decodes");
+        assert!(view.suppressed() > 0);
+        let mut zero_copy = build(&xs);
+        let frame_reply = zero_copy.mix_from_frame(&view, Vec::new()).expect("frame mix");
+
+        assert_eq!(frame_reply.folded, staged_reply.folded);
+        for (a, b) in frame_reply.states.iter().zip(&staged_reply.states) {
+            assert_eq!(a.to_bits(), b.to_bits(), "frame mix diverged from staged mix");
+        }
+    }
+
+    #[test]
+    fn mix_from_frame_rejects_misaddressed_frames() {
+        use crate::cluster::wire::{MixLocalRef, WireMsg, FRAME_HEADER_BYTES};
+        let mut prng = Rng::new(23);
+        let problem = QuadraticProblem::generate(2, 4, 1.0, 0.0, &mut prng);
+        let xs = init_iterates(0, 2, 4);
+        let rngs = worker_streams(0, 2);
+        let mut shard = shard_for(&problem, 0, vec![0], &xs, &rngs);
+        // Wrong dim (3 ≠ 4) for an otherwise well-formed frame.
+        let mut frame = Vec::new();
+        WireMsg::MixLocal {
+            k: 0,
+            alpha: 0.4,
+            shard: 0,
+            shards: 2,
+            dim: 3,
+            msgs: vec![],
+            staging: vec![],
+        }
+        .encode(&mut frame);
+        let view = MixLocalRef::decode(&frame[FRAME_HEADER_BYTES..]).unwrap();
+        assert!(shard.mix_from_frame(&view, Vec::new()).is_err());
+        // A suppressed peer this shard does not own.
+        let mut frame = Vec::new();
+        WireMsg::MixLocal {
+            k: 0,
+            alpha: 0.4,
+            shard: 0,
+            shards: 2,
+            dim: 4,
+            msgs: vec![crate::cluster::wire::WireMeta { slot: 0, matching: 0, u: 0, v: 2 }],
+            staging: vec![],
+        }
+        .encode(&mut frame);
+        let view = MixLocalRef::decode(&frame[FRAME_HEADER_BYTES..]).unwrap();
+        assert!(shard.mix_from_frame(&view, Vec::new()).is_err());
     }
 }

@@ -126,10 +126,22 @@ pub(crate) fn route_per_worker(
 /// Stage one shard's gossip messages for a round: walk the shard's
 /// workers in slot order, and for each routed edge push its metadata
 /// (via `make`) and copy the peer's post-step row into the flat staging
-/// buffer at the message's index. The other half of the staging-order
-/// contract next to [`route_per_worker`] — the actor executor
-/// (`MsgMeta` batches) and the cluster executor (`WireMeta` frames,
-/// [`crate::cluster`]) must stage identically, so both call this.
+/// buffer. The other half of the staging-order contract next to
+/// [`route_per_worker`] — the actor executor (`MsgMeta` batches) and the
+/// cluster executor (`WireMeta` frames, [`crate::cluster`]) must stage
+/// identically, so both call this.
+///
+/// With `suppress_local` set, a peer row whose worker lives on the
+/// receiving shard (round-robin assignment: worker `w` lives on shard
+/// `w % shards`) is **not staged at all** — the wire executors ship
+/// [`crate::cluster::wire::WireMsg::MixLocal`] frames whose receiver
+/// resolves such rows from its own pre-mix segment, so the row's bytes
+/// never cross the transport. Metadata is always pushed for every
+/// message; `intra_rows` counts the suppressible rows either way (the
+/// savings accounting of `LinkStats::intra_bytes`). The in-process actor
+/// executor stages everything (`suppress_local = false`): its batches
+/// never touch a wire.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn stage_shard_messages<M>(
     shard: usize,
     shards: usize,
@@ -139,6 +151,7 @@ pub(crate) fn stage_shard_messages<M>(
     msgs: &mut Vec<M>,
     staging: &mut Vec<f64>,
     intra_rows: &mut u64,
+    suppress_local: bool,
     make: impl Fn(usize, usize, usize, usize) -> M,
 ) {
     msgs.clear();
@@ -146,15 +159,14 @@ pub(crate) fn stage_shard_messages<M>(
     for (slot, w) in shard_workers(shard, shards, workers).enumerate() {
         for &(j, u, v) in &per[w] {
             let peer = if w == u { v } else { u };
-            // A peer on the receiving shard means this staged row never
-            // needed a wire — the report-only intra/remote byte split
-            // of `LinkStats` keys off this count (round-robin
-            // assignment: worker w lives on shard w % shards).
-            if peer % shards == shard {
+            let local = peer % shards == shard;
+            if local {
                 *intra_rows += 1;
             }
             msgs.push(make(slot, j, u, v));
-            staging.extend_from_slice(xs.row(peer));
+            if !(suppress_local && local) {
+                staging.extend_from_slice(xs.row(peer));
+            }
         }
     }
 }
@@ -294,6 +306,7 @@ impl Executor for ActorExec<'_> {
                 &mut batch.msgs,
                 &mut batch.staging,
                 &mut 0, // in-process: the intra/remote split is wire-only
+                false, // stage everything — these batches never touch a wire
                 |slot, j, u, v| MsgMeta { slot, matching: j, u, v },
             );
             let ret = self.rets[s].take().expect("return buffer leased out");

@@ -92,13 +92,23 @@ impl ExperimentResult {
                 },
             ),
             (
-                // Bytes that genuinely crossed shards: staged Mix rows
-                // whose peer lived on the receiving shard are split out
-                // (`LinkStats::intra_bytes`), so this is the number
-                // wire-efficiency comparisons want.
+                // Bytes actually shipped over shard links. Mix rows whose
+                // peer lives on the receiving shard are suppressed at the
+                // sender (`MixLocal`), so this already reflects the
+                // intra-shard savings.
                 "wire_bytes",
                 match &self.cluster_stats {
                     Some(s) => Json::Num(s.remote_bytes() as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                // Payload bytes the suppression avoided shipping: rows a
+                // naive protocol would have staged for local peers. The
+                // headline number for the zero-copy/suppression work.
+                "suppressed_bytes",
+                match &self.cluster_stats {
+                    Some(s) => Json::Num(s.suppressed_bytes() as f64),
                     None => Json::Null,
                 },
             ),
@@ -646,6 +656,7 @@ mod tests {
         assert!(stats.total_bytes() > 0);
         let j = clu.summary_json();
         assert!(j.get("wire_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("suppressed_bytes").unwrap().as_f64().is_some());
         assert!(act.cluster_stats.is_none());
     }
 
@@ -785,6 +796,7 @@ mod tests {
         // the same keys regardless of backend.
         let sim = run(&quick_spec()).unwrap().summary_json();
         assert_eq!(sim.get("wire_bytes"), Some(&Json::Null));
+        assert_eq!(sim.get("suppressed_bytes"), Some(&Json::Null));
         assert_eq!(sim.get("mean_staleness"), Some(&Json::Null));
         for key in ["final_loss", "total_time", "comm_units", "alpha", "rho"] {
             assert!(sim.get(key).is_some(), "missing {key}");

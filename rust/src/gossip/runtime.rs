@@ -45,9 +45,9 @@ use crate::engine::{DelayPolicy, EventKind, EventQueue};
 use crate::experiment::{NoopObserver, Observer};
 use crate::metrics::Recorder;
 use crate::rng::Rng;
-use crate::sim::kernel::{edge_diff_message, init_iterates, record_metrics, worker_streams};
+use crate::sim::kernel::{edge_diff_message_src, init_iterates, record_metrics, worker_streams};
 use crate::sim::{Problem, RunConfig, RunResult};
-use crate::state::{SnapshotPool, StateMatrix};
+use crate::state::{RowSource, SnapshotPool, StateMatrix};
 use crate::topology::TopologySampler;
 use crate::trace::{Counter, Hist, TraceEvent, Tracer};
 use std::collections::{BTreeMap, VecDeque};
@@ -375,6 +375,8 @@ struct Driver<'a, P: Problem + ?Sized> {
     grad: Vec<f64>,
     diff: Vec<f64>,
     delta: Vec<f64>,
+    /// Recycled TopK magnitude scratch for message compression.
+    comp: Vec<f64>,
 }
 
 impl<P: Problem + ?Sized> Driver<'_, P> {
@@ -555,17 +557,20 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
             let su = self.workers[u].open[&k].snapshot;
             let sv = self.workers[v].open[&k].snapshot;
             let mut diff = std::mem::take(&mut self.diff);
-            edge_diff_message(
-                self.snap.row(su),
-                self.snap.row(sv),
+            let mut comp = std::mem::take(&mut self.comp);
+            edge_diff_message_src(
+                RowSource::Host(self.snap.row(su)),
+                RowSource::Host(self.snap.row(sv)),
                 &mut diff,
                 self.cfg.compression.as_ref(),
+                &mut comp,
                 self.cfg.seed,
                 k,
                 j,
                 u,
                 v,
             );
+            self.comp = comp;
             // Staleness-aware pairwise rule: damp the exchange by
             // 1 / (1 + τ). τ = 0 leaves the synchronous update intact
             // (±1.0 · diff is bit-exact).
@@ -722,6 +727,7 @@ fn drive_async<P: Problem + ?Sized>(
         grad: vec![0.0; d],
         diff: vec![0.0; d],
         delta: vec![0.0; d],
+        comp: Vec::with_capacity(d),
     };
 
     for w in 0..m {

@@ -96,11 +96,16 @@
 //!
 //! The backends share one **arena-backed** step/mix kernel: all worker
 //! iterates live in a contiguous [`state::StateMatrix`] (one row per
-//! worker), scratch comes from once-per-run pools, and the gossip fold
+//! worker), scratch comes from once-per-run pools (including TopK
+//! compression's magnitude buffer), and the gossip fold
 //! ([`state::MixKernel`], bound to run semantics by [`sim::kernel`])
-//! runs in place with zero per-message heap allocation. Every backend
-//! therefore agrees **bit-for-bit** per seed (pinned against the golden
-//! fixtures of `rust/tests/golden.rs`):
+//! runs in place with zero per-message heap allocation — asserted under
+//! a counting allocator in `benches/hotpath.rs`. The row primitives the
+//! fold is built from ([`state::simd`]) dispatch to AVX2 when the CPU
+//! has it, bit-for-bit identical to the scalar fallback
+//! (`MATCHA_NO_SIMD=1` forces scalar). Every backend therefore agrees
+//! **bit-for-bit** per seed (pinned against the golden fixtures of
+//! `rust/tests/golden.rs`):
 //!
 //! - [`sim::run_decentralized`] — the sequential reference loop with
 //!   closed-form time accounting ([`delay::DelayModel`]).
@@ -126,9 +131,12 @@
 //!   transport-separated shards, phase commands serialized through a
 //!   versioned length-prefixed wire format ([`cluster::wire`]), carried
 //!   by an in-memory loopback or a real TCP transport with per-link
-//!   byte accounting ([`cluster::transport`]). The loopback cluster is
-//!   bit-for-bit equal to the actors backend per seed; the TCP cluster
-//!   runs the same schedule over localhost sockets
+//!   byte accounting ([`cluster::transport`]). Mix frames suppress rows
+//!   whose peer lives on the receiving shard ([`cluster::wire::MixLocalRef`]
+//!   resolves them from the shard's own pre-mix segment) and are folded
+//!   zero-copy straight out of the received frame bytes. The loopback
+//!   cluster is bit-for-bit equal to the actors backend per seed; the
+//!   TCP cluster runs the same schedule over localhost sockets
 //!   (`rust/tests/cluster.rs`, `benches/cluster_transport.rs`).
 //! - [`node::run_remote`] — the **deployment** shape of the cluster
 //!   runtime: standalone shard-node daemons (`matcha shard-node

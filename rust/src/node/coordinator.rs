@@ -199,8 +199,9 @@ struct RemoteLink {
     /// connection's counters are added on top, so per-phase deltas stay
     /// monotone across reconnects.
     stats_base: LinkStats,
-    /// Staged Mix rows whose peer lived on this shard (never needed the
-    /// wire); folded into [`LinkStats::intra_bytes`] after the run.
+    /// Mix rows suppressed on this link (peer lived on the daemon's own
+    /// shard, so the row was omitted from the `MixLocal` frame); folded
+    /// into the savings ledger [`LinkStats::intra_bytes`] after the run.
     intra_rows: u64,
     /// Wire traffic spent on telemetry pulls over this link's lifetime —
     /// subtracted from the final stats so a telemetry-enabled run
@@ -607,6 +608,10 @@ impl<'a> PipelinedExec<'a> {
                 &mut msgs,
                 &mut staging,
                 &mut self.state.links[s].intra_rows,
+                // Suppress local-peer rows: the daemon resolves them
+                // from its own pre-mix segment, so they never cross the
+                // wire (same protocol as the in-process cluster driver).
+                true,
                 |slot, j, u, v| WireMeta {
                     slot: slot as u32,
                     matching: j as u32,
@@ -617,11 +622,19 @@ impl<'a> PipelinedExec<'a> {
             // Staged-message count decided at routing time — identical
             // totals to the reply-side accounting of the actor pool.
             tracer.count(Counter::ShardMsgsFolded, msgs.len() as u64);
-            let msg = WireMsg::Mix { k: k as u64, alpha, dim: self.dim as u32, msgs, staging };
+            let msg = WireMsg::MixLocal {
+                k: k as u64,
+                alpha,
+                shard: s as u32,
+                shards: shards as u32,
+                dim: self.dim as u32,
+                msgs,
+                staging,
+            };
             self.scratch.clear();
             msg.encode(&mut self.scratch);
             self.send_cmd(s, xs, tracer)?;
-            let WireMsg::Mix { msgs, staging, .. } = msg else { unreachable!() };
+            let WireMsg::MixLocal { msgs, staging, .. } = msg else { unreachable!() };
             self.msgs = msgs;
             self.staging = staging;
         }
@@ -907,8 +920,9 @@ fn drive_remote<P: Problem + ?Sized>(
                 // Telemetry traffic is excluded: the reported stats are
                 // the run's own frames, identical with telemetry off.
                 let mut ls = add_stats(link.stats_base, link.tx.stats()).delta(&link.tele_stats);
-                // Each staged local-peer row carried 8·dim payload bytes
-                // that never needed a wire.
+                // Each suppressed local-peer row would have carried
+                // 8·dim payload bytes — the savings realized by the
+                // MixLocal frames on this link.
                 ls.intra_bytes = link.intra_rows * 8 * d as u64;
                 ls
             })

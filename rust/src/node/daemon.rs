@@ -47,6 +47,7 @@
 //! is what makes `matcha status ADDR` answer against an idle daemon.
 
 use crate::cluster::driver::phase_cmd_from_wire;
+use crate::cluster::wire::{peek_tag, MixLocalRef, TAG_MIX_LOCAL};
 use crate::cluster::{TcpTransport, Transport, WireMsg, PROTO_VERSION};
 use crate::engine::actor::{ActorShard, MixBatch};
 use crate::experiment::{build_problem, plan, BuiltProblem, ExperimentSpec};
@@ -424,71 +425,96 @@ fn serve<P: Problem + ?Sized>(
                 );
                 break;
             }
-            let msg = match link.recv_msg(&mut body) {
-                Ok(msg) => msg,
-                Err(e) => {
-                    eprintln!("shard-node {shard_id}: connection lost: {e}");
-                    break;
-                }
-            };
-            // What to trace around this command, captured before the
-            // frame is consumed by the command conversion.
-            let span = match &msg {
-                WireMsg::Step { .. } => Some(DaemonSpan::Step),
-                WireMsg::Mix { k, msgs, .. } => {
-                    Some(DaemonSpan::Mix { k: *k as usize, msgs: msgs.len() })
-                }
-                _ => None,
-            };
-            let cmd = match msg {
-                WireMsg::Shutdown => {
-                    if opts.once {
-                        return Ok(());
-                    }
-                    // Session over: forget it and wait for the next run.
-                    shard = fresh();
-                    (done, steps, folded) = (0, 0, 0);
-                    (rounds, reconnects, k_step) = (0, 0, 0);
-                    clean_shutdown = true;
-                    break;
-                }
-                WireMsg::TelemetryPull { drain } => {
-                    // In-band harvest: answered without touching `done`
-                    // — never part of the exactly-once command stream.
-                    let telemetry = session_telemetry(
-                        &mut tracer,
-                        shard_id as u32,
-                        rounds,
-                        reconnects,
-                        drain,
-                    );
-                    let reply = WireMsg::TelemetrySnapshot { telemetry };
-                    if let Err(e) = link.send_msg(&reply, &mut scratch) {
-                        eprintln!("shard-node {shard_id}: telemetry reply: {e}");
-                        break;
-                    }
-                    continue;
-                }
-                WireMsg::VersionReject { supported } => {
-                    eprintln!(
-                        "shard-node {shard_id}: coordinator rejected our protocol \
-                         (it speaks version {supported})"
-                    );
-                    break;
-                }
-                msg => match phase_cmd_from_wire(msg, d, &mut batch, &mut ret) {
-                    Ok(cmd) => cmd,
+            if let Err(e) = link.recv_into(&mut body) {
+                eprintln!("shard-node {shard_id}: connection lost: {e}");
+                break;
+            }
+            let (span, reply) = if peek_tag(&body) == Ok(TAG_MIX_LOCAL) {
+                // Zero-copy mix: the frame is decoded as a borrowed view
+                // and its rows folded straight out of the receive buffer
+                // — never materialized into an owned phase command.
+                let frame = match MixLocalRef::decode(&body) {
+                    Ok(frame) => frame,
                     Err(e) => {
                         eprintln!("shard-node {shard_id}: bad command: {e}");
                         break;
                     }
-                },
+                };
+                let span = DaemonSpan::Mix { k: frame.k as usize, msgs: frame.msg_count() };
+                match shard.mix_from_frame(&frame, std::mem::take(&mut ret)) {
+                    Ok(reply) => (Some(span), reply),
+                    Err(e) => {
+                        eprintln!("shard-node {shard_id}: bad command: {e}");
+                        break;
+                    }
+                }
+            } else {
+                let msg = match WireMsg::decode(&body) {
+                    Ok(msg) => msg,
+                    Err(e) => {
+                        eprintln!("shard-node {shard_id}: connection lost: {e}");
+                        break;
+                    }
+                };
+                // What to trace around this command, captured before the
+                // frame is consumed by the command conversion.
+                let span = match &msg {
+                    WireMsg::Step { .. } => Some(DaemonSpan::Step),
+                    WireMsg::Mix { k, msgs, .. } => {
+                        Some(DaemonSpan::Mix { k: *k as usize, msgs: msgs.len() })
+                    }
+                    _ => None,
+                };
+                let cmd = match msg {
+                    WireMsg::Shutdown => {
+                        if opts.once {
+                            return Ok(());
+                        }
+                        // Session over: forget it and wait for the next run.
+                        shard = fresh();
+                        (done, steps, folded) = (0, 0, 0);
+                        (rounds, reconnects, k_step) = (0, 0, 0);
+                        clean_shutdown = true;
+                        break;
+                    }
+                    WireMsg::TelemetryPull { drain } => {
+                        // In-band harvest: answered without touching `done`
+                        // — never part of the exactly-once command stream.
+                        let telemetry = session_telemetry(
+                            &mut tracer,
+                            shard_id as u32,
+                            rounds,
+                            reconnects,
+                            drain,
+                        );
+                        let reply = WireMsg::TelemetrySnapshot { telemetry };
+                        if let Err(e) = link.send_msg(&reply, &mut scratch) {
+                            eprintln!("shard-node {shard_id}: telemetry reply: {e}");
+                            break;
+                        }
+                        continue;
+                    }
+                    WireMsg::VersionReject { supported } => {
+                        eprintln!(
+                            "shard-node {shard_id}: coordinator rejected our protocol \
+                             (it speaks version {supported})"
+                        );
+                        break;
+                    }
+                    msg => match phase_cmd_from_wire(msg, d, &mut batch, &mut ret) {
+                        Ok(cmd) => cmd,
+                        Err(e) => {
+                            eprintln!("shard-node {shard_id}: bad command: {e}");
+                            break;
+                        }
+                    },
+                };
+                if let Some(DaemonSpan::Step) = span {
+                    tracer.set_now(k_step as f64);
+                    tracer.emit(TraceEvent::ComputeBegin { worker: shard_id, k: k_step as usize });
+                }
+                (span, shard.handle(cmd))
             };
-            if let Some(DaemonSpan::Step) = span {
-                tracer.set_now(k_step as f64);
-                tracer.emit(TraceEvent::ComputeBegin { worker: shard_id, k: k_step as usize });
-            }
-            let reply = shard.handle(cmd);
             match span {
                 Some(DaemonSpan::Step) => {
                     tracer.emit(TraceEvent::ComputeEnd { worker: shard_id, k: k_step as usize });

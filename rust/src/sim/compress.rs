@@ -28,7 +28,23 @@ pub enum Compression {
 
 impl Compression {
     /// Compress `v` in place. `rng` drives stochastic rounding.
+    ///
+    /// Convenience wrapper over [`Compression::compress_with`] that pays
+    /// a fresh scratch allocation for TopK's magnitude buffer — the hot
+    /// paths (the mix kernel, the actor shards, the async runtime) hold
+    /// a recycled scratch and call `compress_with` directly so steady
+    /// state compresses without touching the heap.
     pub fn compress(&self, v: &mut [f64], rng: &mut Rng) {
+        let mut scratch = Vec::new();
+        self.compress_with(v, rng, &mut scratch);
+    }
+
+    /// Compress `v` in place, using `scratch` for TopK's magnitude sort
+    /// (cleared and refilled; grows once to `v.len()` then never again).
+    /// Bit-for-bit identical to [`Compression::compress`]: the threshold
+    /// is the `keep`-th largest |value|, and an unstable sort of the
+    /// magnitudes yields the same sorted *values* as a stable one.
+    pub fn compress_with(&self, v: &mut [f64], rng: &mut Rng, scratch: &mut Vec<f64>) {
         match *self {
             Compression::TopK { frac } => {
                 assert!((0.0..=1.0).contains(&frac));
@@ -36,10 +52,12 @@ impl Compression {
                 if keep == v.len() {
                     return;
                 }
-                // Threshold = keep-th largest |value|.
-                let mut mags: Vec<f64> = v.iter().map(|x| x.abs()).collect();
-                mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
-                let thresh = mags[keep - 1];
+                // Threshold = keep-th largest |value|. sort_unstable
+                // allocates nothing (pdqsort), unlike slice::sort.
+                scratch.clear();
+                scratch.extend(v.iter().map(|x| x.abs()));
+                scratch.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+                let thresh = scratch[keep - 1];
                 let mut kept = 0;
                 for x in v.iter_mut() {
                     if x.abs() >= thresh && kept < keep {
@@ -135,6 +153,29 @@ mod tests {
         let mut v = vec![0.0; 5];
         Compression::Quantize { bits: 2 }.compress(&mut v, &mut Rng::new(4));
         assert_eq!(v, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn compress_with_recycled_scratch_matches_compress() {
+        // One scratch buffer reused across messages of varying length
+        // must reproduce the allocating path bit-for-bit.
+        let comp = Compression::TopK { frac: 0.4 };
+        let mut scratch = Vec::new();
+        let mut rng = Rng::new(6);
+        for n in [1usize, 2, 5, 8, 13] {
+            let orig: Vec<f64> = (0..n).map(|i| ((i * 7 % 11) as f64 - 5.0) * 0.3).collect();
+            let mut a = orig.clone();
+            let mut b = orig;
+            comp.compress(&mut a, &mut Rng::new(9));
+            comp.compress_with(&mut b, &mut Rng::new(9), &mut scratch);
+            assert_eq!(a, b, "n={n}");
+        }
+        // Quantize ignores the scratch but must accept it.
+        let mut v = vec![0.7, -0.3];
+        let mut w = v.clone();
+        Compression::Quantize { bits: 4 }.compress(&mut v, &mut rng.clone());
+        Compression::Quantize { bits: 4 }.compress_with(&mut w, &mut rng, &mut scratch);
+        assert_eq!(v, w);
     }
 
     #[test]

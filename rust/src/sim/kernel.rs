@@ -35,7 +35,7 @@
 use super::{Compression, Problem};
 use crate::graph::Graph;
 use crate::rng::Rng;
-use crate::state::{DeltaPool, MixKernel, StateMatrix};
+use crate::state::{simd, DeltaPool, MixKernel, RowSource, StateMatrix};
 
 /// Domain-separation constant for the gossip/compression RNG stream.
 pub const MIX_STREAM_SALT: u64 = 0xc03f_5eed;
@@ -91,6 +91,38 @@ pub fn edge_rng(seed: u64, k: usize, j: usize, u: usize, v: usize) -> Rng {
 /// (`u < v` in matching storage): `diff = x_v − x_u`, compressed in place
 /// when compression is configured. Shared by the full-state mix and the
 /// per-worker folds of the actor shards and the async runtime.
+///
+/// Endpoint rows are [`RowSource`]s, so a peer row borrowed straight
+/// from a received wire frame (little-endian bytes) folds without ever
+/// being copied into host staging; `scratch` is the caller's recycled
+/// TopK magnitude buffer ([`Compression::compress_with`]), keeping the
+/// whole message computation allocation-free. The subtraction runs
+/// through the SIMD-dispatched [`simd::diff_rows`].
+#[allow(clippy::too_many_arguments)]
+pub fn edge_diff_message_src(
+    xu: RowSource<'_>,
+    xv: RowSource<'_>,
+    diff: &mut [f64],
+    compression: Option<&Compression>,
+    scratch: &mut Vec<f64>,
+    seed: u64,
+    k: usize,
+    j: usize,
+    u: usize,
+    v: usize,
+) {
+    simd::diff_rows(xu, xv, diff);
+    if let Some(comp) = compression {
+        let mut rng = edge_rng(seed, k, j, u, v);
+        comp.compress_with(diff, &mut rng, scratch);
+    }
+}
+
+/// Host-rows convenience wrapper over [`edge_diff_message_src`] with a
+/// throwaway compression scratch. Hot paths hold a recycled scratch and
+/// call the `_src` form; this wrapper is for call sites outside the
+/// per-iteration loop (tests, baseline benches).
+#[allow(clippy::too_many_arguments)]
 pub fn edge_diff_message(
     xu: &[f64],
     xv: &[f64],
@@ -102,13 +134,19 @@ pub fn edge_diff_message(
     u: usize,
     v: usize,
 ) {
-    for i in 0..diff.len() {
-        diff[i] = xv[i] - xu[i];
-    }
-    if let Some(comp) = compression {
-        let mut rng = edge_rng(seed, k, j, u, v);
-        comp.compress(diff, &mut rng);
-    }
+    let mut scratch = Vec::new();
+    edge_diff_message_src(
+        RowSource::Host(xu),
+        RowSource::Host(xv),
+        diff,
+        compression,
+        &mut scratch,
+        seed,
+        k,
+        j,
+        u,
+        v,
+    );
 }
 
 /// Apply one simultaneous gossip step in place over the arena:

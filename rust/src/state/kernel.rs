@@ -20,8 +20,9 @@
 
 use super::arena::StateMatrix;
 use super::pool::DeltaPool;
+use super::simd::{self, RowSource};
 use crate::graph::Graph;
-use crate::sim::kernel::edge_diff_message;
+use crate::sim::kernel::edge_diff_message_src;
 use crate::sim::Compression;
 
 /// The gossip-mix context of one run: the run seed (per-edge compression
@@ -57,7 +58,7 @@ impl<'a> MixKernel<'a> {
             return;
         }
         {
-            let (deltas, diff) = pool.deltas_and_diff();
+            let (deltas, diff, comp) = pool.fold_scratch();
             deltas.fill(0.0);
             for &j in activated {
                 for &(u, v) in matchings[j].edges() {
@@ -69,22 +70,25 @@ impl<'a> MixKernel<'a> {
                     // Read both endpoints from the pre-mix state; the
                     // deltas arena keeps the update simultaneous.
                     let (xu, xv) = xs.pair(u, v);
-                    edge_diff_message(xu, xv, diff, self.compression, self.seed, k, j, u, v);
-                    let du = deltas.row_mut(u);
-                    for (a, &b) in du.iter_mut().zip(diff.iter()) {
-                        *a += b;
-                    }
-                    let dv = deltas.row_mut(v);
-                    for (a, &b) in dv.iter_mut().zip(diff.iter()) {
-                        *a -= b;
-                    }
+                    edge_diff_message_src(
+                        RowSource::Host(xu),
+                        RowSource::Host(xv),
+                        diff,
+                        self.compression,
+                        comp,
+                        self.seed,
+                        k,
+                        j,
+                        u,
+                        v,
+                    );
+                    simd::acc_add(deltas.row_mut(u), diff);
+                    simd::acc_sub(deltas.row_mut(v), diff);
                 }
             }
         }
         for (x, dv) in xs.iter_rows_mut().zip(pool.deltas().iter_rows()) {
-            for (xi, &di) in x.iter_mut().zip(dv) {
-                *xi += alpha * di;
-            }
+            simd::axpy(x, alpha, dv);
         }
     }
 
@@ -95,6 +99,13 @@ impl<'a> MixKernel<'a> {
     /// `x += α·Δ` — the per-worker projection of [`MixKernel::apply`].
     /// An empty message iterator still applies the zero delta, matching
     /// the full-state kernel on non-incident workers of an active round.
+    ///
+    /// Peer rows are [`RowSource`]s: host staging slices in the actor
+    /// mode, or rows borrowed directly from a received wire frame in the
+    /// cluster/daemon zero-copy decode path. `comp` is the recycled TopK
+    /// compression scratch ([`super::pool::DeltaPool`] keeps one; the
+    /// actor shards keep their own).
+    #[allow(clippy::too_many_arguments)]
     pub fn fold_worker<'m, I>(
         &self,
         worker: usize,
@@ -104,26 +115,69 @@ impl<'a> MixKernel<'a> {
         alpha: f64,
         diff: &mut [f64],
         delta: &mut [f64],
+        comp: &mut Vec<f64>,
     ) where
-        I: IntoIterator<Item = (usize, usize, usize, &'m [f64])>,
+        I: IntoIterator<Item = (usize, usize, usize, RowSource<'m>)>,
     {
         delta.iter_mut().for_each(|v| *v = 0.0);
         for (j, u, v, peer) in msgs {
-            if worker == u {
-                edge_diff_message(x, peer, diff, self.compression, self.seed, k, j, u, v);
-                for (a, &b) in delta.iter_mut().zip(diff.iter()) {
-                    *a += b;
-                }
-            } else {
-                edge_diff_message(peer, x, diff, self.compression, self.seed, k, j, u, v);
-                for (a, &b) in delta.iter_mut().zip(diff.iter()) {
-                    *a -= b;
-                }
-            }
+            self.fold_msg(worker, x, j, u, v, peer, k, diff, delta, comp);
         }
-        for (xi, &di) in x.iter_mut().zip(delta.iter()) {
-            *xi += alpha * di;
+        Self::apply_delta(x, alpha, delta);
+    }
+
+    /// Fold one routed message into `delta`: the per-message body of
+    /// [`MixKernel::fold_worker`], split out so the streaming wire-frame
+    /// fold ([`crate::engine`]'s `ActorShard::mix_from_frame`) can drive
+    /// it without materializing a message list.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn fold_msg(
+        &self,
+        worker: usize,
+        x: &[f64],
+        j: usize,
+        u: usize,
+        v: usize,
+        peer: RowSource<'_>,
+        k: usize,
+        diff: &mut [f64],
+        delta: &mut [f64],
+        comp: &mut Vec<f64>,
+    ) {
+        if worker == u {
+            edge_diff_message_src(
+                RowSource::Host(x),
+                peer,
+                diff,
+                self.compression,
+                comp,
+                self.seed,
+                k,
+                j,
+                u,
+                v,
+            );
+            simd::acc_add(delta, diff);
+        } else {
+            edge_diff_message_src(
+                peer,
+                RowSource::Host(x),
+                diff,
+                self.compression,
+                comp,
+                self.seed,
+                k,
+                j,
+                u,
+                v,
+            );
+            simd::acc_sub(delta, diff);
         }
+    }
+
+    /// The final `x += α·Δ` of a per-worker fold.
+    pub(crate) fn apply_delta(x: &mut [f64], alpha: f64, delta: &[f64]) {
+        simd::axpy(x, alpha, delta);
     }
 }
 
@@ -172,20 +226,65 @@ mod tests {
 
         let mut diff = vec![0.0; dim];
         let mut delta = vec![0.0; dim];
+        let mut comp = Vec::new();
+        // One preallocated row reused across workers — the harness does
+        // no per-worker allocation, so what's exercised is the kernel.
+        let mut x = vec![0.0; dim];
         for w in 0..m {
-            let mut msgs: Vec<(usize, usize, usize, &[f64])> = Vec::new();
+            let mut msgs: Vec<(usize, usize, usize, RowSource<'_>)> = Vec::new();
             for &j in &activated {
                 for &(u, v) in d.matchings[j].edges() {
                     if u == w {
-                        msgs.push((j, u, v, xs.row(v)));
+                        msgs.push((j, u, v, RowSource::Host(xs.row(v))));
                     } else if v == w {
-                        msgs.push((j, u, v, xs.row(u)));
+                        msgs.push((j, u, v, RowSource::Host(xs.row(u))));
                     }
                 }
             }
-            let mut x = xs.row(w).to_vec();
-            kernel.fold_worker(w, &mut x, msgs, k, alpha, &mut diff, &mut delta);
+            x.copy_from_slice(xs.row(w));
+            kernel.fold_worker(w, &mut x, msgs, k, alpha, &mut diff, &mut delta, &mut comp);
             assert_eq!(&x[..], reference.row(w), "worker {w} diverged");
+        }
+    }
+
+    #[test]
+    fn fold_worker_from_wire_rows_is_bit_identical() {
+        // Peer rows borrowed as little-endian frame bytes must fold
+        // exactly like their host twins — the zero-copy decode contract.
+        let d = decompose(&paper_figure1_graph());
+        let (m, dim, alpha, k, seed) = (8usize, 5usize, 0.21, 3usize, 9u64);
+        let xs = random_state(m, dim, 4);
+        let activated: Vec<usize> = (0..d.len()).collect();
+        let comp_cfg = crate::sim::Compression::TopK { frac: 0.6 };
+        let kernel = MixKernel::new(seed, Some(&comp_cfg));
+
+        let wire: Vec<Vec<u8>> = (0..m)
+            .map(|w| xs.row(w).iter().flat_map(|x| x.to_le_bytes()).collect())
+            .collect();
+        let mut diff = vec![0.0; dim];
+        let mut delta = vec![0.0; dim];
+        let mut comp = Vec::new();
+        let mut host_x = vec![0.0; dim];
+        let mut wire_x = vec![0.0; dim];
+        for w in 0..m {
+            let mut host_msgs: Vec<(usize, usize, usize, RowSource<'_>)> = Vec::new();
+            let mut wire_msgs: Vec<(usize, usize, usize, RowSource<'_>)> = Vec::new();
+            for &j in &activated {
+                for &(u, v) in d.matchings[j].edges() {
+                    if u == w || v == w {
+                        let peer = if u == w { v } else { u };
+                        host_msgs.push((j, u, v, RowSource::Host(xs.row(peer))));
+                        wire_msgs.push((j, u, v, RowSource::Wire(&wire[peer])));
+                    }
+                }
+            }
+            host_x.copy_from_slice(xs.row(w));
+            wire_x.copy_from_slice(xs.row(w));
+            kernel.fold_worker(w, &mut host_x, host_msgs, k, alpha, &mut diff, &mut delta, &mut comp);
+            kernel.fold_worker(w, &mut wire_x, wire_msgs, k, alpha, &mut diff, &mut delta, &mut comp);
+            for (a, b) in host_x.iter().zip(&wire_x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker {w} wire fold diverged");
+            }
         }
     }
 

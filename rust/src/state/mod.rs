@@ -14,6 +14,10 @@
 //! - [`MixKernel`] ([`kernel`]) — the edge-wise gossip fold applied in
 //!   place over arena rows, plus the per-worker staged fold the actor
 //!   shards use.
+//! - [`simd`] — the vectorized (AVX2, runtime-detected, scalar-fallback)
+//!   element loops the kernel dispatches to, bit-for-bit identical to
+//!   the scalar arithmetic, with [`RowSource`] abstracting host rows vs
+//!   rows borrowed straight from a received wire frame.
 //!
 //! Every execution layer runs on this module: the sequential simulator
 //! ([`crate::sim`]), both engine executors ([`crate::engine`]), and the
@@ -30,7 +34,9 @@
 pub mod arena;
 pub mod kernel;
 pub mod pool;
+pub mod simd;
 
 pub use arena::{RowMut, RowRef, StateMatrix};
 pub use kernel::MixKernel;
 pub use pool::{DeltaPool, SnapshotPool};
+pub use simd::{simd_active, RowSource};

@@ -16,6 +16,10 @@ pub struct DeltaPool {
     diff: Vec<f64>,
     /// One worker's stochastic-gradient scratch.
     grad: Vec<f64>,
+    /// TopK compression's magnitude-sort scratch
+    /// ([`crate::sim::Compression::compress_with`]) — preallocated here
+    /// so compressing an edge message never touches the heap.
+    comp: Vec<f64>,
 }
 
 impl DeltaPool {
@@ -25,6 +29,7 @@ impl DeltaPool {
             deltas: StateMatrix::zeros(workers, dim),
             diff: vec![0.0; dim],
             grad: vec![0.0; dim],
+            comp: Vec::with_capacity(dim),
         }
     }
 
@@ -33,10 +38,11 @@ impl DeltaPool {
         &mut self.grad
     }
 
-    /// Split borrow of the delta arena and the diff buffer — the two
-    /// pieces the gossip fold writes concurrently.
-    pub(crate) fn deltas_and_diff(&mut self) -> (&mut StateMatrix, &mut [f64]) {
-        (&mut self.deltas, &mut self.diff)
+    /// Split borrow of the delta arena, the diff buffer and the
+    /// compression scratch — the three pieces the gossip fold writes
+    /// concurrently.
+    pub(crate) fn fold_scratch(&mut self) -> (&mut StateMatrix, &mut [f64], &mut Vec<f64>) {
+        (&mut self.deltas, &mut self.diff, &mut self.comp)
     }
 
     /// Read access to the delta accumulators (the apply step).
@@ -120,10 +126,11 @@ mod tests {
     fn delta_pool_shapes() {
         let mut p = DeltaPool::new(4, 3);
         assert_eq!(p.grad_mut().len(), 3);
-        let (deltas, diff) = p.deltas_and_diff();
+        let (deltas, diff, comp) = p.fold_scratch();
         assert_eq!(deltas.rows(), 4);
         assert_eq!(deltas.dim(), 3);
         assert_eq!(diff.len(), 3);
+        assert!(comp.capacity() >= 3, "compression scratch preallocated");
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! SIMD-chunked primitive loops of the gossip-mix hot path.
+//!
+//! Four element-wise loops dominate the fold in [`super::kernel`]: the
+//! edge difference `diff = x_v − x_u`, the `±diff` accumulation into a
+//! per-worker delta, and the final `x += α·Δ` apply. Each is provided in
+//! two bit-for-bit identical flavors:
+//!
+//! - a portable scalar loop ([`scalar`]), and
+//! - an AVX2 version ([`avx2`], x86_64 only) that processes four `f64`
+//!   lanes per instruction with unaligned loads/stores.
+//!
+//! **Bit-for-bit by construction**: every lane of the vector versions
+//! performs exactly the same single IEEE-754 operation on exactly the
+//! same operands as the scalar loop — lane `i` only ever combines
+//! element `i` of each input. There are no horizontal reductions, no
+//! FMA contraction (`mul` then `add`, two roundings, exactly like the
+//! scalar `alpha * d` then `+=`), and no reassociation — so the SIMD
+//! path reproduces the scalar trajectories exactly and the golden
+//! fixtures (`rust/tests/golden.rs`) hold with SIMD on or off. The
+//! property tests below assert equality across shapes that straddle the
+//! 4-lane width.
+//!
+//! Dispatch is decided once per process ([`simd_active`]): AVX2 must be
+//! detected at runtime, and the `MATCHA_NO_SIMD` environment variable
+//! (any non-empty value other than `0`) forces the scalar fallback —
+//! the escape hatch CI uses to keep the fallback path covered.
+//!
+//! [`RowSource`] abstracts where a peer row lives: host `f64` memory, or
+//! the little-endian bytes of a received wire frame
+//! ([`crate::cluster::wire::MixLocalRef`]). The zero-copy decode path
+//! folds straight out of the receive buffer — IEEE-754 bit patterns are
+//! reinterpreted, never re-rounded, so a wire row folds bit-identically
+//! to its host twin.
+
+use std::sync::OnceLock;
+
+/// Where one model row's `f64`s live: host memory, or borrowed
+/// little-endian bytes of a received frame body (`len = 8 × dim`).
+#[derive(Clone, Copy)]
+pub enum RowSource<'a> {
+    /// A row in host memory (an arena segment, a staging buffer).
+    Host(&'a [f64]),
+    /// A row borrowed from a wire frame as raw little-endian `f64`
+    /// bytes — the zero-copy decode path of [`crate::cluster::wire`].
+    Wire(&'a [u8]),
+}
+
+impl RowSource<'_> {
+    /// Row length in elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            RowSource::Host(a) => a.len(),
+            RowSource::Wire(b) => b.len() / 8,
+        }
+    }
+
+    /// True when the row holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Should the `MATCHA_NO_SIMD` value force the scalar fold? Any
+/// non-empty value other than `0` counts as "yes". Pure function of the
+/// raw variable so the policy is unit-testable without mutating the
+/// process environment (the cached [`simd_active`] reads it once).
+pub(crate) fn scalar_forced(val: Option<&std::ffi::OsStr>) -> bool {
+    match val {
+        None => false,
+        Some(v) => !v.is_empty() && v != std::ffi::OsStr::new("0"),
+    }
+}
+
+/// Whether the vectorized kernels are in use: AVX2 detected at runtime
+/// and not disabled via `MATCHA_NO_SIMD`. Decided once per process.
+pub fn simd_active() -> bool {
+    static ACTIVE: OnceLock<bool> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            !scalar_forced(std::env::var_os("MATCHA_NO_SIMD").as_deref())
+                && is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// `out[i] = xv[i] − xu[i]` — the canonical edge difference message.
+#[inline]
+pub(crate) fn diff_rows(xu: RowSource<'_>, xv: RowSource<'_>, out: &mut [f64]) {
+    assert_eq!(xu.len(), out.len(), "xu row width mismatch");
+    assert_eq!(xv.len(), out.len(), "xv row width mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2 support at runtime; the
+        // length asserts above bound every pointer offset.
+        unsafe { avx2::diff_rows(xu, xv, out) };
+        return;
+    }
+    scalar::diff_rows(xu, xv, out);
+}
+
+/// `acc[i] += src[i]` — fold a diff into the `u`-side delta.
+#[inline]
+pub(crate) fn acc_add(acc: &mut [f64], src: &[f64]) {
+    assert_eq!(acc.len(), src.len(), "delta/diff width mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2; lengths asserted equal.
+        unsafe { avx2::acc_add(acc, src) };
+        return;
+    }
+    scalar::acc_add(acc, src);
+}
+
+/// `acc[i] -= src[i]` — fold a diff into the `v`-side delta.
+#[inline]
+pub(crate) fn acc_sub(acc: &mut [f64], src: &[f64]) {
+    assert_eq!(acc.len(), src.len(), "delta/diff width mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2; lengths asserted equal.
+        unsafe { avx2::acc_sub(acc, src) };
+        return;
+    }
+    scalar::acc_sub(acc, src);
+}
+
+/// `x[i] += alpha * delta[i]` — the final per-row apply (two roundings:
+/// multiply, then add — never fused, matching the historical scalar
+/// arithmetic exactly).
+#[inline]
+pub(crate) fn axpy(x: &mut [f64], alpha: f64, delta: &[f64]) {
+    assert_eq!(x.len(), delta.len(), "row/delta width mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_active() {
+        // SAFETY: simd_active() verified AVX2; lengths asserted equal.
+        unsafe { avx2::axpy(x, alpha, delta) };
+        return;
+    }
+    scalar::axpy(x, alpha, delta);
+}
+
+/// Portable scalar loops — the reference semantics (and the
+/// `MATCHA_NO_SIMD` / non-x86 path).
+pub(crate) mod scalar {
+    use super::RowSource;
+
+    /// Element `i` of a row, decoding wire bytes as little-endian f64.
+    #[inline(always)]
+    fn at(src: RowSource<'_>, i: usize) -> f64 {
+        match src {
+            RowSource::Host(a) => a[i],
+            RowSource::Wire(b) => {
+                f64::from_le_bytes(b[i * 8..i * 8 + 8].try_into().expect("8-byte f64"))
+            }
+        }
+    }
+
+    pub fn diff_rows(xu: RowSource<'_>, xv: RowSource<'_>, out: &mut [f64]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = at(xv, i) - at(xu, i);
+        }
+    }
+
+    pub fn acc_add(acc: &mut [f64], src: &[f64]) {
+        for (a, &b) in acc.iter_mut().zip(src.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn acc_sub(acc: &mut [f64], src: &[f64]) {
+        for (a, &b) in acc.iter_mut().zip(src.iter()) {
+            *a -= b;
+        }
+    }
+
+    pub fn axpy(x: &mut [f64], alpha: f64, delta: &[f64]) {
+        for (xi, &di) in x.iter_mut().zip(delta.iter()) {
+            *xi += alpha * di;
+        }
+    }
+}
+
+/// AVX2 loops: four f64 lanes per instruction, unaligned loads/stores,
+/// scalar remainder. Callers must have verified AVX2 support and that
+/// all rows share one length.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use super::RowSource;
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+        _mm256_storeu_pd, _mm256_sub_pd,
+    };
+
+    /// Four lanes starting at element `i`. Wire bytes are loaded
+    /// unaligned and reinterpreted — x86 is little-endian, so the bit
+    /// patterns are exactly the host f64s.
+    #[inline(always)]
+    unsafe fn load4(src: RowSource<'_>, i: usize) -> __m256d {
+        match src {
+            RowSource::Host(a) => _mm256_loadu_pd(a.as_ptr().add(i)),
+            RowSource::Wire(b) => _mm256_loadu_pd(b.as_ptr().add(i * 8).cast::<f64>()),
+        }
+    }
+
+    /// Scalar remainder element `i`.
+    #[inline(always)]
+    fn load1(src: RowSource<'_>, i: usize) -> f64 {
+        match src {
+            RowSource::Host(a) => a[i],
+            RowSource::Wire(b) => {
+                f64::from_le_bytes(b[i * 8..i * 8 + 8].try_into().expect("8-byte f64"))
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn diff_rows(xu: RowSource<'_>, xv: RowSource<'_>, out: &mut [f64]) {
+        let n = out.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm256_sub_pd(load4(xv, i), load4(xu, i));
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), d);
+            i += 4;
+        }
+        while i < n {
+            out[i] = load1(xv, i) - load1(xu, i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn acc_add(acc: &mut [f64], src: &[f64]) {
+        let n = acc.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let s = _mm256_add_pd(
+                _mm256_loadu_pd(acc.as_ptr().add(i)),
+                _mm256_loadu_pd(src.as_ptr().add(i)),
+            );
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i), s);
+            i += 4;
+        }
+        while i < n {
+            acc[i] += src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn acc_sub(acc: &mut [f64], src: &[f64]) {
+        let n = acc.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            let s = _mm256_sub_pd(
+                _mm256_loadu_pd(acc.as_ptr().add(i)),
+                _mm256_loadu_pd(src.as_ptr().add(i)),
+            );
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i), s);
+            i += 4;
+        }
+        while i < n {
+            acc[i] -= src[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(x: &mut [f64], alpha: f64, delta: &[f64]) {
+        let a = _mm256_set1_pd(alpha);
+        let n = x.len();
+        let mut i = 0;
+        while i + 4 <= n {
+            // mul then add — two roundings, exactly the scalar
+            // `*xi += alpha * di`. An FMA here would round once and
+            // break bit-for-bit parity with the fixtures.
+            let scaled = _mm256_mul_pd(a, _mm256_loadu_pd(delta.as_ptr().add(i)));
+            let s = _mm256_add_pd(_mm256_loadu_pd(x.as_ptr().add(i)), scaled);
+            _mm256_storeu_pd(x.as_mut_ptr().add(i), s);
+            i += 4;
+        }
+        while i < n {
+            x[i] += alpha * delta[i];
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use std::ffi::OsStr;
+
+    fn random_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn le_bytes(v: &[f64]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn env_gate_policy() {
+        assert!(!scalar_forced(None));
+        assert!(!scalar_forced(Some(OsStr::new(""))));
+        assert!(!scalar_forced(Some(OsStr::new("0"))));
+        assert!(scalar_forced(Some(OsStr::new("1"))));
+        assert!(scalar_forced(Some(OsStr::new("true"))));
+        assert!(scalar_forced(Some(OsStr::new("yes"))));
+    }
+
+    #[test]
+    fn wire_rows_decode_like_host_rows() {
+        let mut rng = Rng::new(21);
+        for n in [1usize, 3, 4, 5, 8, 13] {
+            let xu = random_vec(&mut rng, n);
+            let xv = random_vec(&mut rng, n);
+            let (bu, bv) = (le_bytes(&xu), le_bytes(&xv));
+            let mut host = vec![0.0; n];
+            let mut wire = vec![0.0; n];
+            scalar::diff_rows(RowSource::Host(&xu), RowSource::Host(&xv), &mut host);
+            scalar::diff_rows(RowSource::Wire(&bu), RowSource::Wire(&bv), &mut wire);
+            for (a, b) in host.iter().zip(&wire) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(RowSource::Wire(&bu).len(), n);
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_bit_for_bit() {
+        // Whatever path simd_active() picked, the public wrappers must
+        // agree with the scalar reference exactly.
+        let mut rng = Rng::new(77);
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 11, 16, 19, 50] {
+            let xu = random_vec(&mut rng, n);
+            let xv = random_vec(&mut rng, n);
+            let mut got = vec![0.0; n];
+            let mut want = vec![0.0; n];
+            diff_rows(RowSource::Host(&xu), RowSource::Host(&xv), &mut got);
+            scalar::diff_rows(RowSource::Host(&xu), RowSource::Host(&xv), &mut want);
+            assert_eq!(bits(&got), bits(&want), "diff_rows n={n}");
+
+            let base = random_vec(&mut rng, n);
+            let (mut ga, mut wa) = (base.clone(), base.clone());
+            acc_add(&mut ga, &got);
+            scalar::acc_add(&mut wa, &want);
+            assert_eq!(bits(&ga), bits(&wa), "acc_add n={n}");
+
+            let (mut gs, mut ws) = (base.clone(), base.clone());
+            acc_sub(&mut gs, &got);
+            scalar::acc_sub(&mut ws, &want);
+            assert_eq!(bits(&gs), bits(&ws), "acc_sub n={n}");
+
+            let (mut gx, mut wx) = (base.clone(), base);
+            axpy(&mut gx, 0.31, &got);
+            scalar::axpy(&mut wx, 0.31, &want);
+            assert_eq!(bits(&gx), bits(&wx), "axpy n={n}");
+        }
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The MATCHA_NO_SIMD ≡ SIMD contract: vector and scalar modules
+    /// agree bit-for-bit on every op, every source combination, and
+    /// shapes that straddle the 4-lane width — so forcing the scalar
+    /// path can never change a trajectory.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_matches_scalar_bit_for_bit_across_shapes() {
+        if !is_x86_feature_detected!("avx2") {
+            return; // nothing to compare on this machine
+        }
+        let mut rng = Rng::new(0x51d);
+        for n in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 11, 12, 15, 16, 17, 19, 31, 32, 50, 64] {
+            let xu = random_vec(&mut rng, n);
+            let xv = random_vec(&mut rng, n);
+            let (bu, bv) = (le_bytes(&xu), le_bytes(&xv));
+            let combos: [(RowSource<'_>, RowSource<'_>); 4] = [
+                (RowSource::Host(&xu), RowSource::Host(&xv)),
+                (RowSource::Host(&xu), RowSource::Wire(&bv)),
+                (RowSource::Wire(&bu), RowSource::Host(&xv)),
+                (RowSource::Wire(&bu), RowSource::Wire(&bv)),
+            ];
+            for (i, &(a, b)) in combos.iter().enumerate() {
+                let mut want = vec![0.0; n];
+                let mut got = vec![0.0; n];
+                scalar::diff_rows(a, b, &mut want);
+                // SAFETY: avx2 presence checked above; lengths match.
+                unsafe { avx2::diff_rows(a, b, &mut got) };
+                assert_eq!(bits(&got), bits(&want), "diff combo {i} n={n}");
+            }
+            let diff = {
+                let mut d = vec![0.0; n];
+                scalar::diff_rows(RowSource::Host(&xu), RowSource::Host(&xv), &mut d);
+                d
+            };
+            let base = random_vec(&mut rng, n);
+            let (mut ga, mut wa) = (base.clone(), base.clone());
+            unsafe { avx2::acc_add(&mut ga, &diff) };
+            scalar::acc_add(&mut wa, &diff);
+            assert_eq!(bits(&ga), bits(&wa), "acc_add n={n}");
+            let (mut gs, mut ws) = (base.clone(), base.clone());
+            unsafe { avx2::acc_sub(&mut gs, &diff) };
+            scalar::acc_sub(&mut ws, &diff);
+            assert_eq!(bits(&gs), bits(&ws), "acc_sub n={n}");
+            for alpha in [0.21, -0.75, 1.0 / 3.0] {
+                let (mut gx, mut wx) = (base.clone(), base.clone());
+                unsafe { avx2::axpy(&mut gx, alpha, &diff) };
+                scalar::axpy(&mut wx, alpha, &diff);
+                assert_eq!(bits(&gx), bits(&wx), "axpy n={n} alpha={alpha}");
+            }
+        }
+    }
+}
