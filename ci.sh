@@ -40,6 +40,15 @@ echo "==> trace smoke (matcha run --trace + trace-check)"
 ./target/release/matcha trace-check --file /tmp/matcha_ci_trace.json
 rm -f /tmp/matcha_ci_trace.json
 
+echo "==> report smoke (matcha report --spec + saved-report re-render)"
+# The convergence observatory end-to-end: run a spec, render the
+# design-vs-realized report, persist the JSON, and re-render the saved
+# artifact standalone.
+./target/release/matcha report --spec examples/specs/cluster_ring.json \
+  --out /tmp/matcha_ci_report.json
+./target/release/matcha report /tmp/matcha_ci_report.json
+rm -f /tmp/matcha_ci_report.json
+
 echo "==> shard-node process smoke (two daemons + remote coordinator)"
 # The deployment shape end-to-end across real processes: two shard-node
 # daemons on the ports committed in cluster_remote.json, driven by a
@@ -70,35 +79,38 @@ echo "==> bench smoke (--dry-run) + perf-trajectory gate"
 # both land in BENCH_state.json (perf trajectory). Each BENCH artifact
 # is then gated against the last committed BENCH_history/ entry —
 # >25% regression on a gated key fails CI — and appended to the
-# history, so committing the updated JSONL records the trajectory.
+# history, so committing the updated JSONL records the trajectory
+# (this --append flow is also how the machine-dependent keys are
+# seeded from the CI machine's own first run). --diff prints the
+# old-vs-new table so a regression is diagnosable from this log.
 cargo bench --bench hotpath -- --dry-run
 test -f BENCH_state.json || { echo "BENCH_state.json not emitted"; exit 1; }
 tools/bench_regress --artifact BENCH_state.json \
-  --history BENCH_history/state.jsonl --append
+  --history BENCH_history/state.jsonl --append --diff
 # Same sweep with the SIMD row kernels forced off: the scalar fallback
 # must satisfy the identical zero-allocation assertions (the escape
 # hatch stays honest). Gated against the same history — the alloc keys
 # are exact-match and identical on both paths.
 MATCHA_NO_SIMD=1 cargo bench --bench hotpath -- --dry-run
 tools/bench_regress --artifact BENCH_state.json \
-  --history BENCH_history/state.jsonl --append
+  --history BENCH_history/state.jsonl --append --diff
 cargo bench --bench engine_sweep -- --dry-run
 # Async-vs-barrier smoke: also emits BENCH_async.json (perf trajectory).
 cargo bench --bench async_vs_barrier -- --dry-run
 test -f BENCH_async.json || { echo "BENCH_async.json not emitted"; exit 1; }
 tools/bench_regress --artifact BENCH_async.json \
-  --history BENCH_history/async.jsonl --append
+  --history BENCH_history/async.jsonl --append --diff
 # Cluster transport smoke: bytes/iteration + loopback-vs-TCP throughput
 # (emits BENCH_cluster.json; exercises the wire over real localhost TCP).
 cargo bench --bench cluster_transport -- --dry-run
 test -f BENCH_cluster.json || { echo "BENCH_cluster.json not emitted"; exit 1; }
 tools/bench_regress --artifact BENCH_cluster.json \
-  --history BENCH_history/cluster.jsonl --append
+  --history BENCH_history/cluster.jsonl --append --diff
 # Shard-node pipeline smoke: real daemons on localhost, window sweep
 # (emits BENCH_node.json; exercises the pipelined remote coordinator).
 cargo bench --bench node_pipeline -- --dry-run
 test -f BENCH_node.json || { echo "BENCH_node.json not emitted"; exit 1; }
 tools/bench_regress --artifact BENCH_node.json \
-  --history BENCH_history/node.jsonl --append
+  --history BENCH_history/node.jsonl --append --diff
 
 echo "CI OK"

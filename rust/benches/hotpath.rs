@@ -31,7 +31,7 @@ use matcha::sim::kernel::edge_diff_message;
 use matcha::sim::{run_decentralized, Compression, QuadraticProblem};
 use matcha::state::{simd_active, DeltaPool, MixKernel, StateMatrix};
 use matcha::topology::TopologySampler;
-use matcha::trace::{Counter, Hist, TraceEvent, Tracer};
+use matcha::trace::{Counter, Hist, Observatory, TraceEvent, Tracer};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -85,6 +85,34 @@ fn trace_disabled_allocs(iters: usize) -> f64 {
     assert!(
         allocs == 0.0,
         "disabled tracer emission must be allocation-free, saw {allocs} allocs/emit"
+    );
+    allocs
+}
+
+/// A disabled [`Observatory`] is one pointer-null branch per hook —
+/// zero heap allocations per round of hook calls (asserted), the
+/// property that lets every backend feed the convergence observatory
+/// unconditionally from its hot loop. Returns allocs/iter for
+/// `BENCH_state.json`.
+fn observatory_disabled_allocs(iters: usize) -> f64 {
+    let mut obs = Observatory::disabled();
+    let activated = [0usize, 2];
+    obs.on_round(&activated, &[]);
+    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for k in 0..iters {
+        obs.on_compute(k % 8, 1.0);
+        obs.on_round(&activated, &[]);
+        obs.on_stale_exchange(k % 8, (k + 1) % 8, k % 3);
+        std::hint::black_box(obs.on_record(k, k as f64, 0.5, 0.1, 0.01));
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let allocs = (ALLOC_COUNT.load(Ordering::Relaxed) - before) as f64 / iters as f64;
+    assert!(obs.snapshot().is_none() && obs.health().is_none());
+    println!("observatory disabled: {allocs:.1} allocs/iter over {iters} iters ({ns:.0} ns/iter)");
+    assert!(
+        allocs == 0.0,
+        "disabled observatory hooks must be allocation-free, saw {allocs} allocs/iter"
     );
     allocs
 }
@@ -219,6 +247,8 @@ fn state_mix_sweep(dry_run: bool) {
     }
     println!("\n=== trace: disabled-tracer emission overhead ===");
     let trace_allocs = trace_disabled_allocs(if dry_run { 10_000 } else { 1_000_000 });
+    println!("\n=== observatory: disabled-hook overhead ===");
+    let obs_allocs = observatory_disabled_allocs(if dry_run { 10_000 } else { 1_000_000 });
     let summary = Json::obj(vec![
         ("mode", Json::Str(if dry_run { "dry" } else { "full" }.into())),
         // Whether the SIMD row kernels were live for this run (machine-
@@ -227,6 +257,7 @@ fn state_mix_sweep(dry_run: bool) {
         ("simd", Json::Bool(simd_active())),
         ("iters_per_point", Json::Num(iters as f64)),
         ("trace_disabled_allocs_per_emit", Json::Num(trace_allocs)),
+        ("observatory_disabled_allocs_per_iter", Json::Num(obs_allocs)),
         ("grid", Json::Arr(points)),
     ]);
     std::fs::write("BENCH_state.json", summary.to_string()).expect("write BENCH_state.json");

@@ -87,15 +87,23 @@ COMMANDS
              per-shard progress lines from daemon telemetry on remote runs)
   status     ADDR [--timeout-ms N]              one-shot health report from a
              shard-node daemon (idle or mid-session): shard, rounds done,
-             reconnects survived, uptime, step/fold counters, ring drops
+             reconnects survived, uptime, step/fold counters, ring drops,
+             and the observatory digest (activation drift score + windowed
+             contraction rate) once a session is underway
+  report     REPORT.json | --spec FILE [--out FILE]   convergence observatory
+             report: re-render a saved REPORT.json, or run a spec and render
+             the design-vs-realized activation audit, windowed contraction
+             rate vs the predicted rho, error-runtime frontier, and
+             straggler/staleness profile; --out saves the JSON report
   trace-check --file FILE [--format chrome|jsonl]   validate a trace file;
              warns when the export was truncated by ring overwrites
-  bench-regress --artifact FILE --history FILE [--append] [--tolerance T]
+  bench-regress --artifact FILE --history FILE [--append] [--tolerance T] [--diff]
              gate a bench artifact against its committed history (JSONL):
              exact-match keys (workers, dim, alloc counts) must be equal,
              lower-is-better keys may grow at most T (default 0.25) over the
              last history entry; wall-clock timings are never gated.
-             --append records the current values as a new history line
+             --append records the current values as a new history line;
+             --diff prints the old-vs-new table with per-key gate verdicts
   decompose  --graph SPEC [--greedy]            matching decomposition
   probs      --graph SPEC --budget CB           activation probabilities (problem 4)
   alpha      --graph SPEC --budget CB           mixing weight + spectral norm (Lemma 1)
@@ -156,10 +164,13 @@ pub fn run(argv: &[String]) -> Result<(), String> {
         println!("{USAGE}");
         return Ok(());
     };
-    // `status` takes a positional daemon address, which the flag parser
-    // rejects by design — route it before parsing.
+    // `status` and `report` take positional arguments, which the flag
+    // parser rejects by design — route them before parsing.
     if cmd == "status" {
         return cmd_status(&argv[1..]);
+    }
+    if cmd == "report" {
+        return cmd_report(&argv[1..]);
     }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
@@ -574,6 +585,68 @@ fn cmd_status(rest: &[String]) -> Result<(), String> {
         t.registry.counter(Counter::ShardMsgsFolded),
         t.ring_dropped
     );
+    if let Some(obs) = &t.observatory {
+        println!(
+            "  observatory: drift score {:.3} over {} round(s), contraction rate {:.4} \
+             ({} window(s) closed)",
+            obs.drift_score, obs.rounds, obs.contraction_rate, obs.windows
+        );
+    }
+    Ok(())
+}
+
+/// `matcha report`: render the convergence-observatory run report.
+/// With a positional `REPORT.json` argument, re-render a saved report;
+/// with `--spec FILE`, run the experiment (arming the observatory at
+/// defaults when the spec carries no `report` block), render, and
+/// optionally persist the self-contained JSON with `--out`.
+fn cmd_report(rest: &[String]) -> Result<(), String> {
+    use crate::trace::RunReport;
+    if let Some(path) = rest.first().filter(|a| !a.starts_with("--")) {
+        if rest.len() > 1 {
+            return Err("report: a saved REPORT.json takes no extra flags".into());
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("report: cannot read {path}: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| format!("report: {path}: {e}"))?;
+        print!("{}", RunReport::from_json(&json)?.render());
+        return Ok(());
+    }
+    let args = Args::parse(rest)?;
+    let Some(path) = args.flags.get("spec") else {
+        return Err("report: REPORT.json or --spec FILE is required".into());
+    };
+    let mut spec = ExperimentSpec::load(std::path::Path::new(path))?;
+    if spec.report.is_none() {
+        spec.report = Some(experiment::ReportSpec::default());
+    }
+    let plan = experiment::plan(&spec)?;
+    let result = experiment::run_planned(&spec, &plan, &mut experiment::NoopObserver)?;
+    let spec_name = match &spec.graph {
+        experiment::GraphSource::Spec(s) => s.clone(),
+        experiment::GraphSource::Explicit(g) => format!("explicit:{}", g.num_nodes()),
+    };
+    let strategy = match spec.strategy.budget() {
+        Some(cb) => format!("{}({cb})", spec.strategy.name()),
+        None => spec.strategy.name().to_string(),
+    };
+    let report = RunReport {
+        spec_name,
+        backend: spec.backend.name().to_string(),
+        strategy,
+        alpha: result.alpha,
+        rho: result.rho,
+        final_loss: result.final_loss(),
+        total_time: result.total_time,
+        total_comm: result.total_comm_units,
+        observatory: result.observatory.unwrap_or_default(),
+    };
+    print!("{}", report.render());
+    if let Some(out) = args.flags.get("out") {
+        std::fs::write(out, report.to_json().to_string())
+            .map_err(|e| format!("report: cannot write {out}: {e}"))?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 
@@ -836,6 +909,7 @@ const REGRESS_EXACT: &[&str] = &[
     "allocs_per_iter_arena",
     "allocs_per_iter_compressed",
     "trace_disabled_allocs_per_emit",
+    "observatory_disabled_allocs_per_iter",
 ];
 
 /// Lower-is-better keys gated by the fractional tolerance. Wall-clock
@@ -884,32 +958,77 @@ fn cmd_bench_regress(args: &Args) -> Result<(), String> {
         },
     };
 
+    let diff = args.bool("diff");
     let mut checked = 0usize;
     let mut failures: Vec<String> = Vec::new();
+    let mut diff_rows: Vec<[String; 5]> = Vec::new();
     if let Some(base) = &baseline {
         let base_map: std::collections::BTreeMap<&str, f64> =
             base.iter().map(|(k, v)| (k.as_str(), *v)).collect();
         for (key, cur) in &current {
-            let Some(prev) = base_map.get(key.as_str()).copied() else { continue };
+            let prev = base_map.get(key.as_str()).copied();
             let seg = key.rsplit('.').next().unwrap_or(key);
-            if REGRESS_EXACT.contains(&seg) {
-                checked += 1;
-                if *cur != prev {
-                    failures.push(format!("{key}: {prev} -> {cur} (exact-match key)"));
-                }
-            } else if REGRESS_TOLERANCE.contains(&seg) {
-                checked += 1;
-                if prev == 0.0 {
-                    if *cur > 0.0 {
-                        failures.push(format!("{key}: baseline 0 -> {cur}"));
+            // Verdict per key: gated keys report ok/FAIL, everything
+            // else (new keys, wall-clock timings) shows as "-".
+            let verdict = match prev {
+                None => "-",
+                Some(prev) if REGRESS_EXACT.contains(&seg) => {
+                    checked += 1;
+                    if *cur != prev {
+                        failures.push(format!("{key}: {prev} -> {cur} (exact-match key)"));
+                        "exact-FAIL"
+                    } else {
+                        "exact-ok"
                     }
-                } else if *cur > prev * (1.0 + tolerance) {
-                    failures.push(format!(
-                        "{key}: {prev} -> {cur} (over the {:.0}% budget)",
-                        tolerance * 100.0
-                    ));
                 }
+                Some(prev) if REGRESS_TOLERANCE.contains(&seg) => {
+                    checked += 1;
+                    if prev == 0.0 {
+                        if *cur > 0.0 {
+                            failures.push(format!("{key}: baseline 0 -> {cur}"));
+                            "tol-FAIL"
+                        } else {
+                            "tol-ok"
+                        }
+                    } else if *cur > prev * (1.0 + tolerance) {
+                        failures.push(format!(
+                            "{key}: {prev} -> {cur} (over the {:.0}% budget)",
+                            tolerance * 100.0
+                        ));
+                        "tol-FAIL"
+                    } else {
+                        "tol-ok"
+                    }
+                }
+                Some(_) => "-",
+            };
+            if diff {
+                let (last, delta) = match prev {
+                    Some(p) if p != 0.0 => {
+                        (format!("{p}"), format!("{:+.1}%", (*cur - p) / p * 100.0))
+                    }
+                    Some(p) => (format!("{p}"), "-".to_string()),
+                    None => ("-".to_string(), "-".to_string()),
+                };
+                diff_rows.push([key.clone(), last, format!("{cur}"), delta, verdict.to_string()]);
             }
+        }
+    }
+    if diff {
+        if diff_rows.is_empty() {
+            println!("bench-regress: no baseline in {history}; nothing to diff");
+        } else {
+            let mut table = crate::benchkit::Table::new(&[
+                "key",
+                "last committed",
+                "current",
+                "delta",
+                "gate",
+            ]);
+            for row in &diff_rows {
+                table.row(row);
+            }
+            table.print();
         }
     }
 
@@ -1322,6 +1441,30 @@ mod tests {
     }
 
     #[test]
+    fn report_command_runs_specs_and_rerenders_saved_reports() {
+        let spec = ExperimentSpec::new("ring:6")
+            .problem(ProblemSpec::quadratic())
+            .backend(Backend::EngineSequential)
+            .iterations(30)
+            .record_every(10);
+        let dir = std::env::temp_dir().join("matcha_cli_report");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.json");
+        spec.save(&path).unwrap();
+        let out = dir.join("report.json");
+        let p = path.to_str().unwrap();
+        let o = out.to_str().unwrap();
+        // A spec with no report block still runs: the command arms the
+        // observatory at the default window.
+        run(&sv(&["report", "--spec", p, "--out", o])).unwrap();
+        // The saved JSON re-renders standalone.
+        run(&sv(&["report", o])).unwrap();
+        assert!(run(&sv(&["report"])).unwrap_err().contains("--spec"));
+        assert!(run(&sv(&["report", o, "--out", o])).unwrap_err().contains("no extra flags"));
+        assert!(run(&sv(&["report", "/nonexistent/report.json"])).is_err());
+    }
+
+    #[test]
     fn bench_regress_gates_exact_and_tolerance_keys() {
         let dir = std::env::temp_dir().join("matcha_cli_regress");
         std::fs::create_dir_all(&dir).unwrap();
@@ -1333,10 +1476,15 @@ mod tests {
         let good = r#"{"grid": [{"workers": 8, "ns_per_iter": 100.0, "bytes_per_iter": 64.0}]}"#;
         std::fs::write(&artifact, good).unwrap();
 
-        // No history yet: passes, --append seeds the first entry.
-        run(&sv(&["bench-regress", "--artifact", &a, "--history", &h, "--append"])).unwrap();
-        // Identical values gate cleanly against that entry.
-        run(&sv(&["bench-regress", "--artifact", &a, "--history", &h])).unwrap();
+        // No history yet: passes (--diff has nothing to diff), --append
+        // seeds the first entry.
+        run(&sv(&[
+            "bench-regress", "--artifact", &a, "--history", &h, "--append", "--diff",
+        ]))
+        .unwrap();
+        // Identical values gate cleanly against that entry, and --diff
+        // renders the old-vs-new table without changing the verdict.
+        run(&sv(&["bench-regress", "--artifact", &a, "--history", &h, "--diff"])).unwrap();
 
         // A wall-clock blowup alone is never gated.
         let wall =

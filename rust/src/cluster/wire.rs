@@ -24,7 +24,7 @@
 //! below over randomized messages and corruptions.
 
 use crate::trace::metrics::{Histogram, MetricsRegistry, HIST_BUCKETS, NUM_COUNTERS, NUM_HISTS};
-use crate::trace::{Counter, Hist, NodeTelemetry, TraceEvent, TraceRecord};
+use crate::trace::{Counter, Hist, NodeTelemetry, ObservatoryHealth, TraceEvent, TraceRecord};
 
 /// Current wire protocol version (first body byte of every frame).
 pub const WIRE_VERSION: u8 = 1;
@@ -35,7 +35,11 @@ pub const WIRE_VERSION: u8 = 1;
 /// coordinator that sees a mismatched `proto` answers with
 /// [`WireMsg::VersionReject`] echoing what it supports and fails with
 /// [`WireError::ProtocolMismatch`].
-pub const PROTO_VERSION: u32 = 1;
+///
+/// v2: telemetry snapshots carry an optional observatory health digest
+/// (presence byte + rounds/drift/contraction/windows) between the
+/// registry block and the trace-record list.
+pub const PROTO_VERSION: u32 = 2;
 
 /// Hard upper bound on a frame body, in bytes (1 GiB). A length prefix
 /// above this is rejected before any allocation happens — the guard
@@ -670,9 +674,11 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 // Layout: shard u32; five health u64s (rounds_done, reconnects,
 // uptime_ms, ring_dropped, wall_now_ns); the fixed-slot registry
 // (NUM_COUNTERS u64s in `Counter::ALL` order, then NUM_HISTS
-// histograms as count u64, sum/min/max f64, HIST_BUCKETS u64s); then
-// a u32 record count and each record as [subtag u8][fields][vt f64]
-// [wall_ns u64]. Everything is fixed-width except the record list.
+// histograms as count u64, sum/min/max f64, HIST_BUCKETS u64s); an
+// observatory presence u8 followed (when 1) by rounds u64, drift f64,
+// contraction f64, windows u64; then a u32 record count and each
+// record as [subtag u8][fields][vt f64][wall_ns u64]. Everything is
+// fixed-width except the record list.
 
 fn put_telemetry(out: &mut Vec<u8>, t: &NodeTelemetry) {
     put_u32(out, t.shard);
@@ -693,6 +699,16 @@ fn put_telemetry(out: &mut Vec<u8>, t: &NodeTelemetry) {
         for &b in hist.buckets() {
             put_u64(out, b);
         }
+    }
+    match &t.observatory {
+        Some(obs) => {
+            out.push(1);
+            put_u64(out, obs.rounds);
+            put_f64(out, obs.drift_score);
+            put_f64(out, obs.contraction_rate);
+            put_u64(out, obs.windows);
+        }
+        None => out.push(0),
     }
     put_u32(out, u32::try_from(t.records.len()).expect("telemetry record count fits u32"));
     for rec in &t.records {
@@ -787,6 +803,16 @@ fn read_telemetry(r: &mut Reader<'_>) -> Result<NodeTelemetry, WireError> {
         *h = Histogram::from_parts(count, sum, min, max, buckets);
     }
     let registry = MetricsRegistry::from_parts(counters, hists);
+    let observatory = if r.u8()? != 0 {
+        Some(ObservatoryHealth {
+            rounds: r.u64()?,
+            drift_score: r.f64()?,
+            contraction_rate: r.f64()?,
+            windows: r.u64()?,
+        })
+    } else {
+        None
+    };
     let count = r.u32()? as usize;
     r.need(count, MIN_RECORD_BYTES)?;
     let mut records = Vec::with_capacity(count);
@@ -802,6 +828,7 @@ fn read_telemetry(r: &mut Reader<'_>) -> Result<NodeTelemetry, WireError> {
         wall_now_ns,
         records,
         registry,
+        observatory,
     })
 }
 
@@ -1064,6 +1091,16 @@ mod tests {
             }
         }
         let n = (rng.next_u64() % 12) as usize;
+        let observatory = if rng.next_u64() % 2 == 0 {
+            Some(ObservatoryHealth {
+                rounds: rng.next_u64() % (1 << 40),
+                drift_score: rng.normal().abs(),
+                contraction_rate: rng.normal().abs(),
+                windows: rng.next_u64() % 100,
+            })
+        } else {
+            None
+        };
         NodeTelemetry {
             shard: (rng.next_u64() % 64) as u32,
             rounds_done: rng.next_u64() % (1 << 40),
@@ -1073,6 +1110,7 @@ mod tests {
             wall_now_ns: rng.next_u64() % (1 << 50),
             records: (0..n).map(|_| random_record(rng)).collect(),
             registry,
+            observatory,
         }
     }
 
@@ -1162,6 +1200,12 @@ mod tests {
                             },
                         ],
                         registry,
+                        observatory: Some(ObservatoryHealth {
+                            rounds: 60,
+                            drift_score: 0.75,
+                            contraction_rate: 0.98,
+                            windows: 3,
+                        }),
                     }
                 },
             },

@@ -463,7 +463,9 @@ where
     let mut dropped = 0usize;
     let mut lr = config.lr;
 
-    record_metrics(problem, 0, 0.0, 0.0, &xs, &mut metrics);
+    if let Some(w) = record_metrics(problem, 0, 0.0, 0.0, &xs, &mut metrics, tracer) {
+        observer.on_window(&w);
+    }
     observer.on_record(0, 0.0, &metrics);
 
     for k in 0..config.iterations {
@@ -480,6 +482,7 @@ where
         for w in 0..m {
             let ct = policy.compute_time(w, k);
             tracer.emit_at(t0, TraceEvent::ComputeBegin { worker: w, k });
+            tracer.observatory.on_compute(w, ct);
             queue.schedule(t0 + ct, EventKind::ComputeDone { worker: w, k });
             compute_dur = compute_dur.max(ct);
         }
@@ -548,6 +551,7 @@ where
         }
         dropped += dead.len();
         tracer.count(Counter::DroppedLinks, dead.len() as u64);
+        tracer.observatory.on_round(&round.activated, &dead);
 
         // --- mix phase -----------------------------------------------
         tracer.set_now(t0 + compute_dur + comm_t);
@@ -569,7 +573,11 @@ where
             // A pipelined executor may still have replies in flight;
             // records must read the same arena a synchronous run would.
             exec.flush(&mut xs, tracer);
-            record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics);
+            if let Some(w) =
+                record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics, tracer)
+            {
+                observer.on_window(&w);
+            }
             observer.on_record(k + 1, now, &metrics);
         }
         observer.on_iteration(k + 1, now, total_comm);

@@ -61,6 +61,6 @@ pub use run::{
     ExperimentResult,
 };
 pub use spec::{
-    Backend, ExperimentSpec, GraphSource, ProblemSpec, Strategy, TraceSpec,
-    DEFAULT_TELEMETRY_CAPACITY, DEFAULT_TRACE_CAPACITY,
+    Backend, ExperimentSpec, GraphSource, ProblemSpec, ReportSpec, Strategy, TraceSpec,
+    DEFAULT_REPORT_WINDOW, DEFAULT_TELEMETRY_CAPACITY, DEFAULT_TRACE_CAPACITY,
 };

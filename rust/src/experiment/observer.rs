@@ -9,6 +9,7 @@
 //! backend-agnostic.
 
 use crate::metrics::Recorder;
+use crate::trace::WindowStats;
 
 use super::run::ExperimentResult;
 
@@ -28,6 +29,13 @@ pub trait Observer {
     /// A sweep grid point finished: `index` is its position in the input
     /// grid.
     fn on_point(&mut self, _index: usize, _result: &ExperimentResult) {}
+
+    /// The run's [`crate::trace::Observatory`] closed a contraction
+    /// window: realized consensus decay rate vs the plan's predicted ρ,
+    /// plus the current activation drift score. Fires only when the
+    /// spec enables the observatory (a `report` block) and the run has
+    /// enough record samples to fill a window.
+    fn on_window(&mut self, _w: &WindowStats) {}
 }
 
 /// The do-nothing observer; what the non-observed entry points use.

@@ -23,8 +23,8 @@ use crate::sim::{
 };
 use crate::state::StateMatrix;
 use crate::trace::{
-    chrome_trace_merged, write_trace, MetricsSnapshot, PidTrack, RingSink, TelemetryCollector,
-    TraceFormat, TraceRecord, Tracer,
+    chrome_trace_merged, write_trace, MetricsSnapshot, Observatory, ObservatoryConfig,
+    ObservatorySnapshot, PidTrack, RingSink, TelemetryCollector, TraceFormat, TraceRecord, Tracer,
 };
 
 /// The unified outcome of a spec-driven run: plan-derived quantities,
@@ -66,6 +66,9 @@ pub struct ExperimentResult {
     /// [`crate::trace::Tracer`] registry — same schema on every
     /// backend, zeros where a metric does not apply.
     pub snapshot: MetricsSnapshot,
+    /// The algorithm-level observatory readout; `Some` only when the
+    /// spec enables it with a `report` block.
+    pub observatory: Option<ObservatorySnapshot>,
 }
 
 impl ExperimentResult {
@@ -131,6 +134,7 @@ impl ExperimentResult {
             async_stats: None,
             cluster_stats: None,
             snapshot: MetricsSnapshot::default(),
+            observatory: None,
         }
     }
 
@@ -150,6 +154,7 @@ impl ExperimentResult {
             async_stats: None,
             cluster_stats: None,
             snapshot: MetricsSnapshot::default(),
+            observatory: None,
         }
     }
 
@@ -169,6 +174,7 @@ impl ExperimentResult {
             async_stats: Some(r.stats),
             cluster_stats: None,
             snapshot: MetricsSnapshot::default(),
+            observatory: None,
         }
     }
 
@@ -188,6 +194,7 @@ impl ExperimentResult {
             async_stats: None,
             cluster_stats: Some(r.stats),
             snapshot: MetricsSnapshot::default(),
+            observatory: None,
         }
     }
 }
@@ -410,6 +417,18 @@ pub(crate) fn run_planned_telemetry(
     tracer: &mut Tracer<'_>,
     mut collector: Option<&mut TelemetryCollector>,
 ) -> Result<ExperimentResult, String> {
+    // The observatory is armed before any backend dispatch so every
+    // path — including the remote coordinator, whose hooks fire on this
+    // side of the wire — feeds the same ledger and windows.
+    if let Some(report) = &spec.report {
+        tracer.observatory = Observatory::enabled(ObservatoryConfig {
+            designed: plan.probabilities.clone(),
+            matchings: plan.decomposition.matchings.iter().map(|g| g.edges().to_vec()).collect(),
+            rho: plan.rho,
+            workers: plan.graph.num_nodes(),
+            window: report.window,
+        });
+    }
     // Remote cluster runs talk to pre-existing shard-node daemons; the
     // pipelined coordinator in `crate::node` owns that path end to end
     // (its own dial/handshake/reconnect lifecycle, same engine loop).
@@ -427,6 +446,7 @@ pub(crate) fn run_planned_telemetry(
             Some(c) => MetricsSnapshot::from_registry(&c.aggregate(&tracer.registry)),
             None => MetricsSnapshot::from_registry(&tracer.registry),
         };
+        result.observatory = tracer.observatory.snapshot();
         return Ok(result);
     }
     let cfg = plan.run_config(spec)?;
@@ -532,6 +552,7 @@ pub(crate) fn run_planned_telemetry(
         }
     };
     result.snapshot = MetricsSnapshot::from_registry(&tracer.registry);
+    result.observatory = tracer.observatory.snapshot();
     Ok(result)
 }
 

@@ -225,6 +225,29 @@ pub struct TraceSpec {
     pub telemetry_capacity: usize,
 }
 
+/// Default contraction-window size (record samples per window) when the
+/// spec's `report` block omits it.
+pub const DEFAULT_REPORT_WINDOW: usize = 8;
+
+/// Enables the run's algorithm-level observatory
+/// ([`crate::trace::Observatory`]): activation ledger, contraction
+/// windows, error-runtime frontier and straggler audit, harvested onto
+/// [`super::ExperimentResult::observatory`]. JSON form:
+/// `{"report": {"window": 8}}` (`window` optional).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReportSpec {
+    /// Record samples per tumbling contraction window (≥ 2). A window
+    /// closes — and [`super::Observer::on_window`] fires — every
+    /// `window` record points.
+    pub window: usize,
+}
+
+impl Default for ReportSpec {
+    fn default() -> ReportSpec {
+        ReportSpec { window: DEFAULT_REPORT_WINDOW }
+    }
+}
+
 /// A complete, declarative description of one experiment. See the module
 /// docs for the JSON schema; every field except `graph` has a default.
 ///
@@ -278,6 +301,9 @@ pub struct ExperimentSpec {
     /// Optional event-trace output (`None` = tracing disabled; metric
     /// counters still accumulate).
     pub trace: Option<TraceSpec>,
+    /// Optional algorithm-level observatory (`None` = disabled; the
+    /// record path stays allocation-free).
+    pub report: Option<ReportSpec>,
 }
 
 impl ExperimentSpec {
@@ -312,6 +338,7 @@ impl ExperimentSpec {
             seed: 0,
             sampler_seed: None,
             trace: None,
+            report: None,
         }
     }
 
@@ -386,6 +413,13 @@ impl ExperimentSpec {
     /// Attach an event-trace output to the run.
     pub fn trace(mut self, t: TraceSpec) -> Self {
         self.trace = Some(t);
+        self
+    }
+
+    /// Enable the algorithm-level observatory (drift ledger,
+    /// contraction windows, frontier, audit).
+    pub fn report(mut self, r: ReportSpec) -> Self {
+        self.report = Some(r);
         self
     }
 
@@ -574,6 +608,12 @@ impl ExperimentSpec {
                 return Err("trace: telemetry_capacity must be >= 1".into());
             }
         }
+        if let Some(report) = &self.report {
+            // A window needs two samples for a decay rate.
+            if report.window < 2 {
+                return Err("report: window must be >= 2".into());
+            }
+        }
         // The policy grammar needs the graph and the run config, so
         // validate it with a probe config mirroring what the run builds.
         let probe = crate::sim::RunConfig {
@@ -736,6 +776,11 @@ impl ExperimentSpec {
                 ]),
             ));
         }
+        if let Some(report) = &self.report {
+            // `window` is always emitted so the round-trip is exact even
+            // when it matches the parse default.
+            top.push(("report", Json::obj(vec![("window", Json::Num(report.window as f64))])));
+        }
         Json::obj(top)
     }
 
@@ -775,7 +820,10 @@ impl ExperimentSpec {
         known_keys(
             obj,
             "spec",
-            &["graph", "strategy", "problem", "delay", "policy", "backend", "run", "trace"],
+            &[
+                "graph", "strategy", "problem", "delay", "policy", "backend", "run", "trace",
+                "report",
+            ],
         )?;
 
         let graph = match obj.get("graph") {
@@ -809,8 +857,18 @@ impl ExperimentSpec {
         if let Some(t) = obj.get("trace") {
             spec.trace = Some(parse_trace(t)?);
         }
+        if let Some(r) = obj.get("report") {
+            spec.report = Some(parse_report(r)?);
+        }
         Ok(spec)
     }
+}
+
+fn parse_report(json: &Json) -> Result<ReportSpec, String> {
+    let obj = json.as_object().ok_or("report: must be {\"window\": N} (window optional)")?;
+    known_keys(obj, "report", &["window"])?;
+    let window = get_usize(obj, "report", "window", DEFAULT_REPORT_WINDOW)?;
+    Ok(ReportSpec { window })
 }
 
 fn parse_trace(json: &Json) -> Result<TraceSpec, String> {
@@ -1366,10 +1424,35 @@ mod tests {
                 capacity: 1024,
                 telemetry: false,
                 telemetry_capacity: 512,
-            });
+            })
+            .report(ReportSpec { window: 4 });
         let text = spec.to_json_string();
         let back = ExperimentSpec::parse(&text).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn report_block_parses_defaults_and_validates() {
+        let spec = ExperimentSpec::parse(r#"{"graph": "fig1", "report": {}}"#).unwrap();
+        assert_eq!(spec.report, Some(ReportSpec { window: DEFAULT_REPORT_WINDOW }));
+
+        let spec =
+            ExperimentSpec::parse(r#"{"graph": "fig1", "report": {"window": 3}}"#).unwrap();
+        assert_eq!(spec.report, Some(ReportSpec { window: 3 }));
+
+        // Absent block means disabled.
+        assert_eq!(ExperimentSpec::parse(r#"{"graph": "fig1"}"#).unwrap().report, None);
+
+        let err =
+            ExperimentSpec::parse(r#"{"graph": "fig1", "report": {"window": 1}}"#).unwrap_err();
+        assert!(err.contains("report: window must be >= 2"), "{err}");
+        let err = ExperimentSpec::parse(r#"{"graph": "fig1", "report": 8}"#).unwrap_err();
+        assert!(err.contains("report"), "{err}");
+        let err = ExperimentSpec::new("fig1")
+            .report(ReportSpec { window: 0 })
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("report: window"), "{err}");
     }
 
     #[test]
@@ -1450,6 +1533,7 @@ mod tests {
                 r#"{"graph": "fig1", "trace": {"path": "t", "color": "red"}}"#,
                 "unknown key 'color'",
             ),
+            (r#"{"graph": "fig1", "report": {"depth": 2}}"#, "unknown key 'depth'"),
         ] {
             let err = ExperimentSpec::parse(text).unwrap_err();
             assert!(err.contains(needle), "{text}: {err}");

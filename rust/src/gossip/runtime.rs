@@ -418,6 +418,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
             tracer.observe(Hist::IdleUnits, (now - t0).max(0.0));
         }
         let ct = self.policy.compute_time(w, r);
+        tracer.observatory.on_compute(w, ct);
         grads.dispatch(w, r, self.arena.row(w));
         self.workers[w].computing = true;
         tracer.emit_at(now, TraceEvent::ComputeBegin { worker: w, k: r });
@@ -464,7 +465,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
                     *xi += alpha * 0.0;
                 }
             }
-            self.after_round_applied(w, t, observer);
+            self.after_round_applied(w, t, observer, tracer);
         } else {
             let n = incident.len();
             let snapshot = self.snap.alloc_from(self.arena.row(w));
@@ -547,6 +548,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
         tracer.emit_at(t, TraceEvent::StaleExchange { worker: u, peer: v, staleness: tau, k });
         tracer.count(Counter::Exchanges, 1);
         tracer.observe(Hist::Staleness, tau as f64);
+        tracer.observatory.on_stale_exchange(u, v, tau);
         for w in [u, v] {
             let wk = &mut self.workers[w];
             wk.exchanges += 1;
@@ -554,6 +556,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
             wk.staleness_max = wk.staleness_max.max(tau);
         }
         if !failed {
+            tracer.observatory.on_link(j, u, v);
             let su = self.workers[u].open[&k].snapshot;
             let sv = self.workers[v].open[&k].snapshot;
             let mut diff = std::mem::take(&mut self.diff);
@@ -598,7 +601,7 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
                 rm.remaining == 0
             };
             if complete {
-                self.apply_round(w, k, t, observer);
+                self.apply_round(w, k, t, observer, tracer);
                 self.start_compute(w, t, grads, tracer);
             }
         }
@@ -608,7 +611,14 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
     /// contributions in global edge order and apply the mix to the live
     /// iterate (which may already include later compute steps — the
     /// AD-PSGD delayed update).
-    fn apply_round(&mut self, w: usize, k: usize, t: f64, observer: &mut dyn Observer) {
+    fn apply_round(
+        &mut self,
+        w: usize,
+        k: usize,
+        t: f64,
+        observer: &mut dyn Observer,
+        tracer: &mut Tracer<'_>,
+    ) {
         let rm = self.workers[w].open.remove(&k).expect("round open");
         let mut delta = std::mem::take(&mut self.delta);
         delta.iter_mut().for_each(|v| *v = 0.0);
@@ -627,12 +637,18 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
         for staged in rm.slots.into_iter().flatten() {
             self.snap.release(staged);
         }
-        self.after_round_applied(w, t, observer);
+        self.after_round_applied(w, t, observer, tracer);
     }
 
     /// Advance `through`, capture record snapshots, and fire the
     /// streaming callbacks for rounds that just became globally applied.
-    fn after_round_applied(&mut self, w: usize, t: f64, observer: &mut dyn Observer) {
+    fn after_round_applied(
+        &mut self,
+        w: usize,
+        t: f64,
+        observer: &mut dyn Observer,
+        tracer: &mut Tracer<'_>,
+    ) {
         let new_through = {
             let wk = &self.workers[w];
             wk.open.keys().next().copied().unwrap_or(wk.next_round)
@@ -655,20 +671,27 @@ impl<P: Problem + ?Sized> Driver<'_, P> {
                         self.record_stage.row_mut(wi).copy_from_slice(self.snap.row(row));
                         self.snap.release(row);
                     }
-                    record_metrics(
+                    if let Some(wstats) = record_metrics(
                         self.problem,
                         r + 1,
                         t,
                         self.total_comm,
                         &self.record_stage,
                         &mut self.metrics,
-                    );
+                        tracer,
+                    ) {
+                        observer.on_window(&wstats);
+                    }
                     observer.on_record(r + 1, t, &self.metrics);
                 }
             }
         }
         let new_global = self.workers.iter().map(|wk| wk.through).min().unwrap_or(0);
         while self.global_through < new_global {
+            // Ledger matching counts advance with the globally applied
+            // frontier, so every round is absorbed exactly once; links
+            // are counted per completed exchange in `on_link_done`.
+            tracer.observatory.on_matchings(self.plan.activated(self.global_through));
             self.global_through += 1;
             observer.on_iteration(self.global_through, t, self.total_comm);
         }
@@ -697,7 +720,9 @@ fn drive_async<P: Problem + ?Sized>(
     let d = problem.dim();
     let xs0 = init_iterates(cfg.seed, m, d);
     let mut metrics = Recorder::new();
-    record_metrics(problem, 0, 0.0, 0.0, &xs0, &mut metrics);
+    if let Some(w) = record_metrics(problem, 0, 0.0, 0.0, &xs0, &mut metrics, tracer) {
+        observer.on_window(&w);
+    }
     observer.on_record(0, 0.0, &metrics);
 
     let comm_scale = match &cfg.compression {

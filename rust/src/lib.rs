@@ -90,6 +90,20 @@
 //! assert!(!sink.is_empty());
 //! let trace_json = chrome_trace(&sink.records(), &traced.snapshot.to_json());
 //! validate_chrome_trace(&trace_json.to_string()).unwrap();
+//!
+//! // A `report` block arms the convergence observatory: the run comes
+//! // back with an algorithm-level readout — realized activation counts
+//! // audited against the designed p_j, windowed consensus contraction
+//! // vs the predicted ρ, and the error-runtime frontier on the paper's
+//! // fig-4 axes. `matcha report --spec ...` renders the same snapshot
+//! // as a self-contained report.
+//! use matcha::experiment::ReportSpec;
+//! let audited = experiment::run(&spec.clone().report(ReportSpec { window: 2 })).unwrap();
+//! let observatory = audited.observatory.unwrap();
+//! assert_eq!(observatory.rounds, 60);
+//! assert_eq!(observatory.ledger.designed, plan.probabilities);
+//! assert_eq!(observatory.ledger.realized.len(), plan.probabilities.len());
+//! assert!(!observatory.frontier.is_empty());
 //! ```
 //!
 //! ## Execution backends

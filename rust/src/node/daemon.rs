@@ -50,10 +50,13 @@ use crate::cluster::driver::phase_cmd_from_wire;
 use crate::cluster::wire::{peek_tag, MixLocalRef, TAG_MIX_LOCAL};
 use crate::cluster::{TcpTransport, Transport, WireMsg, PROTO_VERSION};
 use crate::engine::actor::{ActorShard, MixBatch};
-use crate::experiment::{build_problem, plan, BuiltProblem, ExperimentSpec};
+use crate::experiment::{build_problem, plan, BuiltProblem, ExperimentSpec, DEFAULT_REPORT_WINDOW};
 use crate::sim::kernel::{init_iterates, worker_streams};
 use crate::sim::{Problem, RunConfig};
-use crate::trace::{Counter, NodeTelemetry, RingSink, TraceEvent, Tracer, UNASSIGNED_SHARD};
+use crate::trace::{
+    Counter, NodeTelemetry, Observatory, ObservatoryConfig, RingSink, TraceEvent, Tracer,
+    UNASSIGNED_SHARD,
+};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
@@ -155,6 +158,7 @@ fn idle_telemetry(started: &Instant) -> NodeTelemetry {
 /// ring into the reply (the ring's cumulative drop count survives).
 fn session_telemetry(
     tracer: &mut Tracer<'_>,
+    observatory: &Observatory,
     shard: u32,
     rounds_done: u64,
     reconnects: u64,
@@ -170,6 +174,7 @@ fn session_telemetry(
         wall_now_ns: wall,
         records: if drain { tracer.drain_sink() } else { Vec::new() },
         registry: tracer.registry.clone(),
+        observatory: observatory.health(),
     }
 }
 
@@ -284,16 +289,81 @@ pub fn run_daemon(listener: TcpListener, opts: &DaemonOptions) -> Result<(), Str
         .map(|t| t.telemetry_capacity)
         .unwrap_or(FALLBACK_RING_CAPACITY);
     let problem = build_problem(&spec, m);
+    // The daemon mirrors the run's designed activation schedule from the
+    // assigned spec alone: the sampler is deterministic in the spec
+    // seeds, so the matchings the coordinator will drive each round are
+    // reproducible here without any extra protocol.
+    let mut sampler = exp_plan.sampler(spec.sampler_seed.unwrap_or(spec.seed));
+    let activated: Vec<Vec<usize>> =
+        (0..cfg.iterations).map(|k| sampler.round(k).activated).collect();
+    let obs_cfg = ObservatoryConfig {
+        designed: exp_plan.probabilities.clone(),
+        matchings: exp_plan.decomposition.matchings.iter().map(|g| g.edges().to_vec()).collect(),
+        rho: exp_plan.rho,
+        workers: m,
+        window: spec.report.as_ref().map_or(DEFAULT_REPORT_WINDOW, |r| r.window),
+    };
     let sid = shard as usize;
     let n = shards as usize;
     match &problem {
-        BuiltProblem::Quad(p) => {
-            serve(&listener, p, &cfg, m, sid, n, &spec_json, link, opts, ring_capacity)
-        }
-        BuiltProblem::Logreg(p) => {
-            serve(&listener, p, &cfg, m, sid, n, &spec_json, link, opts, ring_capacity)
+        BuiltProblem::Quad(p) => serve(
+            &listener,
+            p,
+            &cfg,
+            m,
+            sid,
+            n,
+            &spec_json,
+            link,
+            opts,
+            ring_capacity,
+            obs_cfg,
+            activated,
+        ),
+        BuiltProblem::Logreg(p) => serve(
+            &listener,
+            p,
+            &cfg,
+            m,
+            sid,
+            n,
+            &spec_json,
+            link,
+            opts,
+            ring_capacity,
+            obs_cfg,
+            activated,
+        ),
+    }
+}
+
+/// Consensus distance of the daemon's local state segment: the mean
+/// squared distance of its rows from their own mean. A local stand-in
+/// for the global consensus distance — enough for the observatory's
+/// windowed decay rate, which only needs a ratio of the same quantity
+/// at two record points.
+fn local_consensus(states: &[f64], d: usize) -> f64 {
+    let rows = states.len() / d.max(1);
+    if rows == 0 {
+        return 0.0;
+    }
+    let mut mean = vec![0.0; d];
+    for r in 0..rows {
+        for (j, mj) in mean.iter_mut().enumerate() {
+            *mj += states[r * d + j];
         }
     }
+    for mj in mean.iter_mut() {
+        *mj /= rows as f64;
+    }
+    let mut acc = 0.0;
+    for r in 0..rows {
+        for (j, &mj) in mean.iter().enumerate() {
+            let diff = states[r * d + j] - mj;
+            acc += diff * diff;
+        }
+    }
+    acc / rows as f64
 }
 
 /// What span to emit around one phase command's execution.
@@ -315,6 +385,8 @@ fn serve<P: Problem + ?Sized>(
     first: TcpTransport,
     opts: &DaemonOptions,
     ring_capacity: usize,
+    obs_cfg: ObservatoryConfig,
+    activated: Vec<Vec<usize>>,
 ) -> Result<(), String> {
     let d = problem.dim();
     // The same initial arena and gradient streams every backend derives
@@ -347,6 +419,10 @@ fn serve<P: Problem + ?Sized>(
     let mut ring = RingSink::new(ring_capacity);
     let mut tracer = Tracer::attached(&mut ring);
     let (mut rounds, mut reconnects, mut k_step) = (0u64, 0u64, 0u64);
+    // The observatory is always armed daemon-side (it is what makes
+    // `matcha status` answer with a drift/contraction one-liner); like
+    // the session it resets on Shutdown.
+    let mut observatory = Observatory::enabled(obs_cfg.clone());
 
     let mut scratch = Vec::new();
     let mut body = Vec::new();
@@ -359,7 +435,14 @@ fn serve<P: Problem + ?Sized>(
             Some(link) => link,
             None => {
                 let admission = accept_assign(listener, opts, &mut |drain| {
-                    session_telemetry(&mut tracer, shard_id as u32, rounds, reconnects, drain)
+                    session_telemetry(
+                        &mut tracer,
+                        &observatory,
+                        shard_id as u32,
+                        rounds,
+                        reconnects,
+                        drain,
+                    )
                 });
                 let (link, a_shard, a_shards, a_spec) = match admission {
                     Ok(Admission::Assigned(link, a_shard, a_shards, a_spec)) => {
@@ -414,7 +497,14 @@ fn serve<P: Problem + ?Sized>(
         let mut clean_shutdown = false;
         loop {
             poll_status_conns(listener, shard_id, &mut |drain| {
-                session_telemetry(&mut tracer, shard_id as u32, rounds, reconnects, drain)
+                session_telemetry(
+                    &mut tracer,
+                    &observatory,
+                    shard_id as u32,
+                    rounds,
+                    reconnects,
+                    drain,
+                )
             });
             let inject_drop = !dropped_once && matches!(opts.drop_after, Some(n) if lifetime >= n);
             if inject_drop {
@@ -474,6 +564,7 @@ fn serve<P: Problem + ?Sized>(
                         shard = fresh();
                         (done, steps, folded) = (0, 0, 0);
                         (rounds, reconnects, k_step) = (0, 0, 0);
+                        observatory = Observatory::enabled(obs_cfg.clone());
                         clean_shutdown = true;
                         break;
                     }
@@ -482,6 +573,7 @@ fn serve<P: Problem + ?Sized>(
                         // — never part of the exactly-once command stream.
                         let telemetry = session_telemetry(
                             &mut tracer,
+                            &observatory,
                             shard_id as u32,
                             rounds,
                             reconnects,
@@ -525,6 +617,16 @@ fn serve<P: Problem + ?Sized>(
                     tracer.emit(TraceEvent::MixApplied { k, activated: msgs });
                     tracer.emit(TraceEvent::RoundBarrier { k });
                     rounds = k as u64 + 1;
+                    // Commands are exactly-once per session, so the
+                    // ledger can never double-count a round across
+                    // reconnects.
+                    if let Some(acts) = activated.get(k) {
+                        observatory.on_round(acts, &[]);
+                    }
+                    if (k + 1) % cfg.record_every == 0 || k + 1 == cfg.iterations {
+                        let c = local_consensus(shard.states(), d);
+                        observatory.on_record(k + 1, k as f64 + 1.0, 0.0, f64::NAN, c);
+                    }
                 }
                 None => {}
             }

@@ -172,7 +172,11 @@ pub fn apply_gossip(
 
 /// Push the standard per-record metrics for the current state. Shared by
 /// every runner so their [`crate::metrics::Recorder`] contents are
-/// comparable series-for-series.
+/// comparable series-for-series. Also the single place every backend
+/// feeds the tracer's [`crate::trace::Observatory`] a record sample
+/// (frontier point + contraction window); when the sample closes a
+/// contraction window, its stats are returned so the runner can stream
+/// them through [`crate::experiment::Observer::on_window`].
 pub fn record_metrics<P: Problem + ?Sized>(
     problem: &P,
     k: usize,
@@ -180,12 +184,14 @@ pub fn record_metrics<P: Problem + ?Sized>(
     comm: f64,
     xs: &StateMatrix,
     metrics: &mut crate::metrics::Recorder,
-) {
+    tracer: &mut crate::trace::Tracer<'_>,
+) -> Option<crate::trace::WindowStats> {
     let mean = xs.mean();
     let loss = problem.global_loss(&mean);
+    let consensus = xs.consensus_distance();
     metrics.push("loss_vs_iter", k as f64, loss);
     metrics.push("loss_vs_time", time, loss);
-    metrics.push("consensus_vs_iter", k as f64, xs.consensus_distance());
+    metrics.push("consensus_vs_iter", k as f64, consensus);
     metrics.push("comm_units_vs_iter", k as f64, comm);
     let mut g = vec![0.0; xs.dim()];
     problem.global_grad(&mean, &mut g);
@@ -199,6 +205,7 @@ pub fn record_metrics<P: Problem + ?Sized>(
         metrics.push("test_acc_vs_iter", k as f64, acc);
         metrics.push("test_acc_vs_time", time, acc);
     }
+    tracer.observatory.on_record(k, time, comm, loss, consensus)
 }
 
 #[cfg(test)]

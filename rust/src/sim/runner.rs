@@ -152,7 +152,9 @@ pub fn run_decentralized_traced<P: Problem, S: TopologySampler>(
     let mut lr = config.lr;
     let mut delay_rng = config.delay_rng();
 
-    record_metrics(problem, 0, 0.0, 0.0, &xs, &mut metrics);
+    if let Some(w) = record_metrics(problem, 0, 0.0, 0.0, &xs, &mut metrics, tracer) {
+        observer.on_window(&w);
+    }
     observer.on_record(0, 0.0, &metrics);
 
     for k in 0..config.iterations {
@@ -165,6 +167,7 @@ pub fn run_decentralized_traced<P: Problem, S: TopologySampler>(
         for w in 0..m {
             tracer.emit_at(t0 + config.compute_units, TraceEvent::ComputeEnd { worker: w, k });
             tracer.count(Counter::ComputeEvents, 1);
+            tracer.observatory.on_compute(w, config.compute_units);
         }
 
         // --- consensus over the activated topology ------------------
@@ -192,13 +195,18 @@ pub fn run_decentralized_traced<P: Problem, S: TopologySampler>(
         tracer.emit(TraceEvent::MixApplied { k, activated: round.activated.len() });
         tracer.emit(TraceEvent::RoundBarrier { k });
         tracer.count(Counter::MixRounds, 1);
+        tracer.observatory.on_round(&round.activated, &[]);
 
         // --- lr schedule & recording --------------------------------
         if (k + 1) % config.lr_decay_every == 0 {
             lr *= config.lr_decay;
         }
         if (k + 1) % config.record_every == 0 || k + 1 == config.iterations {
-            record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics);
+            if let Some(w) =
+                record_metrics(problem, k + 1, now, total_comm, &xs, &mut metrics, tracer)
+            {
+                observer.on_window(&w);
+            }
             observer.on_record(k + 1, now, &metrics);
         }
         observer.on_iteration(k + 1, now, total_comm);

@@ -186,6 +186,33 @@ impl Histogram {
         &self.buckets
     }
 
+    /// Estimate the `q`-quantile (`0.0..=1.0`) by linear interpolation
+    /// inside the bucket holding the target rank, using the tracked
+    /// min/max as the outer bucket edges. Exact for distributions
+    /// uniform within each bucket; always within one bucket width
+    /// otherwise. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 && (cum + c) as f64 >= target {
+                let lo = if i == 0 { self.min.min(0.0) } else { HIST_BOUNDS[i - 1] };
+                let hi = if i == HIST_BUCKETS - 1 {
+                    self.max.max(HIST_BOUNDS[HIST_BUCKETS - 2])
+                } else {
+                    HIST_BOUNDS[i]
+                };
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return (lo + frac * (hi - lo)).clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+
     /// Fold another histogram's observations into this one.
     pub fn merge(&mut self, other: &Histogram) {
         if other.count == 0 {
@@ -211,6 +238,9 @@ impl Histogram {
             ("min", Json::Num(if self.count == 0 { 0.0 } else { self.min })),
             ("max", Json::Num(if self.count == 0 { 0.0 } else { self.max })),
             ("mean", Json::Num(self.mean())),
+            ("p50", Json::Num(self.quantile(0.50))),
+            ("p95", Json::Num(self.quantile(0.95))),
+            ("p99", Json::Num(self.quantile(0.99))),
         ])
     }
 }
@@ -386,6 +416,44 @@ mod tests {
         assert_eq!(empty, both);
         both.merge(&Histogram::default());
         assert_eq!(empty, both);
+    }
+
+    #[test]
+    fn quantiles_match_known_uniform_distribution() {
+        // 1..=100 uniformly: linear interpolation across the doubling
+        // buckets reproduces the exact percentiles of the uniform
+        // distribution, because it is uniform within every bucket.
+        let mut h = Histogram::default();
+        for v in 1..=100 {
+            h.observe(v as f64);
+        }
+        assert!((h.quantile(0.50) - 50.0).abs() < 1e-9, "p50 {}", h.quantile(0.50));
+        assert!((h.quantile(0.95) - 95.0).abs() < 1e-9, "p95 {}", h.quantile(0.95));
+        assert!((h.quantile(0.99) - 99.0).abs() < 1e-9, "p99 {}", h.quantile(0.99));
+        // Extremes clamp to the tracked min/max.
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(1.0), 100.0);
+        // Empty histogram reads 0 everywhere.
+        assert_eq!(Histogram::default().quantile(0.5), 0.0);
+        // A constant distribution collapses every quantile to the value.
+        let mut c = Histogram::default();
+        for _ in 0..10 {
+            c.observe(3.0);
+        }
+        assert_eq!(c.quantile(0.5), 3.0);
+        assert_eq!(c.quantile(0.99), 3.0);
+    }
+
+    #[test]
+    fn hist_json_includes_percentiles() {
+        let mut h = Histogram::default();
+        for v in 1..=100 {
+            h.observe(v as f64);
+        }
+        let json = h.to_json();
+        let p95 = json.get("p95").and_then(Json::as_f64).unwrap();
+        assert!((p95 - 95.0).abs() < 1e-9);
+        assert!(json.get("p50").is_some() && json.get("p99").is_some());
     }
 
     #[test]

@@ -19,6 +19,18 @@
 //!   [`crate::experiment::ExperimentResult`] carries — one uniform
 //!   home for what used to live in `LinkStats` / `AsyncStats` /
 //!   `ClusterStats`.
+//! - [`observatory`] — the **algorithm-level** lens ([`Observatory`]
+//!   on the [`Tracer`]): the design-vs-realized activation ledger
+//!   (designed `p_j` vs realized frequencies, chi-square drift score),
+//!   windowed consensus-contraction tracking against the plan's
+//!   predicted ρ, the error-runtime frontier, and the
+//!   straggler/staleness audit — summarized into the
+//!   [`ObservatorySnapshot`] that rides on
+//!   [`crate::experiment::ExperimentResult::observatory`] with one
+//!   schema across every backend.
+//! - [`report`] — the self-contained run report ([`RunReport`]):
+//!   run identity + observatory snapshot as one JSON document plus a
+//!   human-readable rendering, behind `matcha report`.
 //! - [`export`] — Chrome trace-event JSON (Perfetto /
 //!   `chrome://tracing` loadable; one track per worker, per link and
 //!   per wire link) and a JSONL event stream, plus the well-formedness
@@ -61,6 +73,8 @@
 
 pub mod export;
 pub mod metrics;
+pub mod observatory;
+pub mod report;
 pub mod sink;
 pub mod span;
 pub mod telemetry;
@@ -70,6 +84,11 @@ pub use export::{
     write_trace, JsonlCheck, PidTrack, TraceCheck, TraceFormat,
 };
 pub use metrics::{Counter, Hist, Histogram, MetricsRegistry, MetricsSnapshot};
+pub use observatory::{
+    ActivationLedger, Observatory, ObservatoryConfig, ObservatoryHealth, ObservatorySnapshot,
+    WindowStats,
+};
+pub use report::RunReport;
 pub use sink::{RingSink, TraceSink, Tracer};
 pub use span::{TraceEvent, TraceRecord};
 pub use telemetry::{NodeTelemetry, TelemetryCollector, UNASSIGNED_SHARD};

@@ -1,0 +1,935 @@
+//! The convergence observatory: algorithm-level telemetry for a run.
+//!
+//! The trace layer observes the *system* (spans, counters, bytes); this
+//! module observes the *algorithm*. MATCHA's claim is an error-runtime
+//! trade-off — activate critical matchings with designed probabilities
+//! `p_j`, get a spectral contraction ρ < 1, reach a target loss sooner —
+//! and the observatory measures whether a run actually delivers it:
+//!
+//! - **Activation ledger** — per-matching and per-link realized
+//!   activation counts against the plan's designed `p_j`, with a
+//!   chi-square-style drift score (paper §3: the sampler must realize
+//!   the optimized Bernoulli frequencies for Theorem 2 to apply).
+//! - **Contraction tracker** — the consensus-distance decay rate
+//!   estimated online over tumbling windows of record samples and
+//!   compared against the plan's predicted ρ, flagging windows where
+//!   realized contraction is slower than designed.
+//! - **Error-runtime frontier** — `(iteration, virtual time, comm
+//!   units, loss, consensus)` samples at every record point: the
+//!   paper's figure-4 axes, directly comparable across specs.
+//! - **Straggler/staleness audit** — per-worker compute-duration
+//!   histograms (p95 skew exposes stragglers) and, on the async
+//!   backend, per-edge staleness histograms (AD-PSGD's τ).
+//!
+//! An [`Observatory`] rides on the [`super::Tracer`] exactly like the
+//! sink: every hook is one `Option` branch and **zero allocations when
+//! disabled** (asserted under the counting allocator in
+//! `benches/hotpath.rs`). Enabled, it is pure read-side bookkeeping —
+//! it never touches iterates, RNG streams or arithmetic order, so
+//! traced trajectories are bit-for-bit the untraced ones and the
+//! snapshot is identical across the deterministic backends
+//! (sim ≡ engine ≡ actors ≡ cluster ≡ remote per seed; enforced by
+//! `rust/tests/trace.rs` / `rust/tests/node.rs`).
+
+use crate::json::Json;
+
+/// Chi-square-style drift score above which the ledger flags the run:
+/// the realized activation frequencies are implausible under the
+/// designed `p_j` (≈ the 95th percentile of χ²(1) per matching).
+pub const DRIFT_THRESHOLD: f64 = 4.0;
+
+/// One closed contraction window, streamed through
+/// [`crate::experiment::Observer::on_window`] as the run crosses record
+/// points and kept in [`ObservatorySnapshot::windows`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowStats {
+    /// Window ordinal (0-based, tumbling).
+    pub index: usize,
+    /// Iteration of the window's first record sample.
+    pub k_start: usize,
+    /// Iteration of the window's last record sample.
+    pub k_end: usize,
+    /// Consensus distance at the first sample.
+    pub consensus_start: f64,
+    /// Consensus distance at the last sample.
+    pub consensus_end: f64,
+    /// Realized per-round contraction factor
+    /// `(consensus_end / consensus_start)^(1/(k_end - k_start))`;
+    /// `0.0` when either endpoint is not positive (the shared initial
+    /// iterate makes consensus exactly 0 at k = 0).
+    pub rate: f64,
+    /// The plan's predicted spectral norm ρ.
+    pub predicted_rho: f64,
+    /// True when the window contracted slower than the design predicts
+    /// (`rate > predicted_rho`, with a positive measured rate).
+    pub slower: bool,
+    /// Ledger drift score at window close.
+    pub drift_score: f64,
+    /// Gossip rounds the ledger had absorbed at window close.
+    pub rounds: u64,
+}
+
+/// A per-worker compute-duration summary in the audit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeAudit {
+    pub worker: usize,
+    /// Compute spans observed.
+    pub count: u64,
+    /// Mean span duration (virtual units).
+    pub mean: f64,
+    /// 95th-percentile span duration (bucket-interpolated).
+    pub p95: f64,
+}
+
+/// A per-edge staleness summary in the audit (async backend only;
+/// empty elsewhere).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StalenessAudit {
+    pub u: usize,
+    pub v: usize,
+    /// Exchanges observed on this edge.
+    pub count: u64,
+    /// Mean model-version drift τ.
+    pub mean: f64,
+    /// Largest τ observed.
+    pub max: f64,
+}
+
+/// The straggler/staleness audit of a run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunAudit {
+    /// One entry per worker, worker order.
+    pub compute: Vec<ComputeAudit>,
+    /// Ratio of the largest to the smallest per-worker compute p95
+    /// (workers with observations only); `1.0` when undefined. A value
+    /// well above 1 is a straggler.
+    pub compute_p95_skew: f64,
+    /// Per-edge staleness summaries, canonical `(u, v)` order.
+    pub staleness: Vec<StalenessAudit>,
+}
+
+/// One realized per-link activation count in the ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkCount {
+    pub matching: usize,
+    pub u: usize,
+    pub v: usize,
+    pub count: u64,
+}
+
+/// The design-vs-realized activation ledger.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ActivationLedger {
+    /// The plan's designed activation probabilities `p_j`.
+    pub designed: Vec<f64>,
+    /// Realized activation counts per matching.
+    pub realized: Vec<u64>,
+    /// Realized exchange counts per link (failed links excluded).
+    pub links: Vec<LinkCount>,
+    /// Mean chi-square term `n (f_j − p_j)² / (p_j (1 − p_j))` over the
+    /// stochastic matchings (`0 < p_j < 1`); 0 when every matching is
+    /// deterministic (vanilla) or no rounds ran.
+    pub drift_score: f64,
+    /// Mean absolute frequency error `|f_j − p_j|` over all matchings.
+    pub drift_l1: f64,
+    /// `drift_score > DRIFT_THRESHOLD`.
+    pub drifted: bool,
+}
+
+/// One error-runtime frontier sample (the paper's fig-4 axes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrontierPoint {
+    pub k: usize,
+    pub time: f64,
+    pub comm: f64,
+    pub loss: f64,
+    pub consensus: f64,
+}
+
+/// The observatory's end-of-run readout, carried on
+/// [`crate::experiment::ExperimentResult::observatory`] with one JSON
+/// schema across every backend.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObservatorySnapshot {
+    /// Gossip rounds absorbed into the ledger.
+    pub rounds: u64,
+    pub ledger: ActivationLedger,
+    /// Every closed contraction window, in order.
+    pub windows: Vec<WindowStats>,
+    /// Every record sample, in order.
+    pub frontier: Vec<FrontierPoint>,
+    pub audit: RunAudit,
+}
+
+/// The compact health view a shard-node daemon ships inside
+/// [`super::NodeTelemetry`] (the `matcha status` one-liner): current
+/// drift score and the latest closed window's contraction rate.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObservatoryHealth {
+    /// Gossip rounds absorbed so far.
+    pub rounds: u64,
+    /// Current ledger drift score.
+    pub drift_score: f64,
+    /// Per-round contraction rate of the latest closed window
+    /// (`0.0` until the first window closes — never NaN).
+    pub contraction_rate: f64,
+    /// Contraction windows closed so far.
+    pub windows: u64,
+}
+
+/// What [`Observatory::enabled`] needs from a plan: the designed
+/// probabilities, the matchings' edge lists, the predicted ρ, the
+/// worker count and the contraction window size (record samples).
+#[derive(Clone, Debug)]
+pub struct ObservatoryConfig {
+    pub designed: Vec<f64>,
+    /// Edge list per matching, canonical `u < v` orientation.
+    pub matchings: Vec<Vec<(usize, usize)>>,
+    pub rho: f64,
+    pub workers: usize,
+    /// Record samples per tumbling contraction window (≥ 2).
+    pub window: usize,
+}
+
+/// Live state of an enabled observatory. Boxed behind the `Option` so a
+/// disabled [`Observatory`] is one pointer-width and every hook costs
+/// one branch.
+struct ObsCore {
+    designed: Vec<f64>,
+    realized: Vec<u64>,
+    /// `(matching, u, v)` per link, grouped by matching.
+    links: Vec<(usize, usize, usize)>,
+    link_counts: Vec<u64>,
+    /// Link indices per matching (ranges into `links`).
+    matching_links: Vec<Vec<usize>>,
+    /// `(matching, u, v)` → link index, for the async per-exchange feed.
+    link_ids: std::collections::BTreeMap<(usize, usize, usize), usize>,
+    rho: f64,
+    window: usize,
+    rounds: u64,
+    frontier: Vec<FrontierPoint>,
+    windows: Vec<WindowStats>,
+    /// Record samples accumulated in the open window.
+    win_samples: usize,
+    win_k_start: usize,
+    win_consensus_start: f64,
+    compute: Vec<super::metrics::Histogram>,
+    staleness: std::collections::BTreeMap<(usize, usize), super::metrics::Histogram>,
+}
+
+/// The algorithm-level observability hook threaded through every
+/// backend on the [`super::Tracer`]. Disabled by default
+/// ([`Observatory::disabled`]); [`crate::experiment::run`] enables it
+/// when the spec carries a `report` block.
+pub struct Observatory(Option<Box<ObsCore>>);
+
+impl Default for Observatory {
+    fn default() -> Self {
+        Observatory::disabled()
+    }
+}
+
+impl Observatory {
+    /// The no-op observatory every hook call branches away from.
+    pub fn disabled() -> Observatory {
+        Observatory(None)
+    }
+
+    /// An observatory tracking the given design.
+    pub fn enabled(config: ObservatoryConfig) -> Observatory {
+        let m = config.designed.len();
+        let mut links = Vec::new();
+        let mut matching_links = Vec::with_capacity(m);
+        let mut link_ids = std::collections::BTreeMap::new();
+        for (j, edges) in config.matchings.iter().enumerate() {
+            let mut ids = Vec::with_capacity(edges.len());
+            for &(u, v) in edges {
+                let id = links.len();
+                links.push((j, u, v));
+                link_ids.insert((j, u, v), id);
+                ids.push(id);
+            }
+            matching_links.push(ids);
+        }
+        let link_counts = vec![0u64; links.len()];
+        Observatory(Some(Box::new(ObsCore {
+            designed: config.designed,
+            realized: vec![0; m],
+            links,
+            link_counts,
+            matching_links,
+            link_ids,
+            rho: config.rho,
+            window: config.window.max(2),
+            rounds: 0,
+            frontier: Vec::new(),
+            windows: Vec::new(),
+            win_samples: 0,
+            win_k_start: 0,
+            win_consensus_start: 0.0,
+            compute: vec![super::metrics::Histogram::default(); config.workers],
+            staleness: std::collections::BTreeMap::new(),
+        })))
+    }
+
+    /// Is the observatory collecting?
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// One worker compute span of `dur` virtual units.
+    #[inline]
+    pub fn on_compute(&mut self, worker: usize, dur: f64) {
+        if let Some(core) = self.0.as_deref_mut() {
+            core.compute[worker].observe(dur);
+        }
+    }
+
+    /// One synchronous gossip round: `activated` matchings fired,
+    /// links in `dead` failed (canonical `u < v`). Counts the round,
+    /// the matchings, and every surviving link.
+    #[inline]
+    pub fn on_round(&mut self, activated: &[usize], dead: &[(usize, usize)]) {
+        if let Some(core) = self.0.as_deref_mut() {
+            core.on_round(activated, dead);
+        }
+    }
+
+    /// Matching-level accounting for one asynchronously applied round
+    /// (the async runtime counts links separately, per completed
+    /// exchange, via [`Observatory::on_link`]).
+    #[inline]
+    pub fn on_matchings(&mut self, activated: &[usize]) {
+        if let Some(core) = self.0.as_deref_mut() {
+            core.rounds += 1;
+            for &j in activated {
+                core.realized[j] += 1;
+            }
+        }
+    }
+
+    /// One completed (non-failed) pairwise exchange on link
+    /// `(matching, u, v)` — the async runtime's link-level feed.
+    #[inline]
+    pub fn on_link(&mut self, matching: usize, u: usize, v: usize) {
+        if let Some(core) = self.0.as_deref_mut() {
+            if let Some(&id) = core.link_ids.get(&(matching, u, v)) {
+                core.link_counts[id] += 1;
+            }
+        }
+    }
+
+    /// One staleness observation `tau` on edge `(u, v)` (async only).
+    #[inline]
+    pub fn on_stale_exchange(&mut self, u: usize, v: usize, tau: usize) {
+        if let Some(core) = self.0.as_deref_mut() {
+            let key = if u < v { (u, v) } else { (v, u) };
+            core.staleness.entry(key).or_default().observe(tau as f64);
+        }
+    }
+
+    /// One record sample: appends a frontier point and advances the
+    /// contraction window, returning the window's stats when this
+    /// sample closes it.
+    #[inline]
+    pub fn on_record(
+        &mut self,
+        k: usize,
+        time: f64,
+        comm: f64,
+        loss: f64,
+        consensus: f64,
+    ) -> Option<WindowStats> {
+        match self.0.as_deref_mut() {
+            Some(core) => core.on_record(k, time, comm, loss, consensus),
+            None => None,
+        }
+    }
+
+    /// The end-of-run readout (`None` when disabled).
+    pub fn snapshot(&self) -> Option<ObservatorySnapshot> {
+        self.0.as_deref().map(ObsCore::snapshot)
+    }
+
+    /// The compact daemon-health view (`None` when disabled).
+    pub fn health(&self) -> Option<ObservatoryHealth> {
+        self.0.as_deref().map(|core| ObservatoryHealth {
+            rounds: core.rounds,
+            drift_score: core.drift_score(),
+            contraction_rate: core.windows.last().map_or(0.0, |w| w.rate),
+            windows: core.windows.len() as u64,
+        })
+    }
+}
+
+impl ObsCore {
+    fn on_round(&mut self, activated: &[usize], dead: &[(usize, usize)]) {
+        self.rounds += 1;
+        for &j in activated {
+            self.realized[j] += 1;
+            for &id in &self.matching_links[j] {
+                let (_, u, v) = self.links[id];
+                if !dead.contains(&(u, v)) {
+                    self.link_counts[id] += 1;
+                }
+            }
+        }
+    }
+
+    fn on_record(
+        &mut self,
+        k: usize,
+        time: f64,
+        comm: f64,
+        loss: f64,
+        consensus: f64,
+    ) -> Option<WindowStats> {
+        self.frontier.push(FrontierPoint { k, time, comm, loss, consensus });
+        if self.win_samples == 0 {
+            self.win_k_start = k;
+            self.win_consensus_start = consensus;
+        }
+        self.win_samples += 1;
+        if self.win_samples < self.window {
+            return None;
+        }
+        // The window closes on its last sample; the next sample opens a
+        // fresh one (tumbling, no shared endpoints).
+        let (c0, c1) = (self.win_consensus_start, consensus);
+        let span = k.saturating_sub(self.win_k_start);
+        let rate = if c0 > 0.0 && c1 > 0.0 && span > 0 {
+            (c1 / c0).powf(1.0 / span as f64)
+        } else {
+            0.0
+        };
+        let stats = WindowStats {
+            index: self.windows.len(),
+            k_start: self.win_k_start,
+            k_end: k,
+            consensus_start: c0,
+            consensus_end: c1,
+            rate,
+            predicted_rho: self.rho,
+            slower: rate > 0.0 && rate > self.rho,
+            drift_score: self.drift_score(),
+            rounds: self.rounds,
+        };
+        self.windows.push(stats);
+        self.win_samples = 0;
+        Some(stats)
+    }
+
+    /// Mean chi-square term over the stochastic matchings.
+    fn drift_score(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        let n = self.rounds as f64;
+        let (mut score, mut terms) = (0.0, 0usize);
+        for (j, &p) in self.designed.iter().enumerate() {
+            if p <= 0.0 || p >= 1.0 {
+                continue; // deterministic matchings cannot drift
+            }
+            let f = self.realized[j] as f64 / n;
+            score += n * (f - p) * (f - p) / (p * (1.0 - p));
+            terms += 1;
+        }
+        if terms == 0 {
+            0.0
+        } else {
+            score / terms as f64
+        }
+    }
+
+    /// Mean absolute frequency error over all matchings.
+    fn drift_l1(&self) -> f64 {
+        if self.rounds == 0 || self.designed.is_empty() {
+            return 0.0;
+        }
+        let n = self.rounds as f64;
+        let total: f64 = self
+            .designed
+            .iter()
+            .zip(&self.realized)
+            .map(|(&p, &c)| (c as f64 / n - p).abs())
+            .sum();
+        total / self.designed.len() as f64
+    }
+
+    fn snapshot(&self) -> ObservatorySnapshot {
+        let drift_score = self.drift_score();
+        let compute: Vec<ComputeAudit> = self
+            .compute
+            .iter()
+            .enumerate()
+            .map(|(w, h)| ComputeAudit {
+                worker: w,
+                count: h.count,
+                mean: h.mean(),
+                p95: h.quantile(0.95),
+            })
+            .collect();
+        let observed: Vec<f64> =
+            compute.iter().filter(|c| c.count > 0).map(|c| c.p95).collect();
+        let skew = match (
+            observed.iter().cloned().fold(f64::INFINITY, f64::min),
+            observed.iter().cloned().fold(0.0f64, f64::max),
+        ) {
+            (min, max) if min > 0.0 && min.is_finite() => max / min,
+            _ => 1.0,
+        };
+        ObservatorySnapshot {
+            rounds: self.rounds,
+            ledger: ActivationLedger {
+                designed: self.designed.clone(),
+                realized: self.realized.clone(),
+                links: self
+                    .links
+                    .iter()
+                    .zip(&self.link_counts)
+                    .map(|(&(matching, u, v), &count)| LinkCount { matching, u, v, count })
+                    .collect(),
+                drift_score,
+                drift_l1: self.drift_l1(),
+                drifted: drift_score > DRIFT_THRESHOLD,
+            },
+            windows: self.windows.clone(),
+            frontier: self.frontier.clone(),
+            audit: RunAudit {
+                compute,
+                compute_p95_skew: skew,
+                staleness: self
+                    .staleness
+                    .iter()
+                    .map(|(&(u, v), h)| StalenessAudit {
+                        u,
+                        v,
+                        count: h.count,
+                        mean: h.mean(),
+                        max: if h.count == 0 { 0.0 } else { h.max },
+                    })
+                    .collect(),
+            },
+        }
+    }
+}
+
+fn req<'a>(obj: &'a Json, key: &str, ctx: &str) -> Result<&'a Json, String> {
+    obj.get(key).ok_or_else(|| format!("observatory: {ctx}: missing '{key}'"))
+}
+
+fn req_f64(obj: &Json, key: &str, ctx: &str) -> Result<f64, String> {
+    req(obj, key, ctx)?
+        .as_f64()
+        .ok_or_else(|| format!("observatory: {ctx}: '{key}' must be a number"))
+}
+
+fn req_usize(obj: &Json, key: &str, ctx: &str) -> Result<usize, String> {
+    req(obj, key, ctx)?
+        .as_usize()
+        .ok_or_else(|| format!("observatory: {ctx}: '{key}' must be a non-negative integer"))
+}
+
+fn req_bool(obj: &Json, key: &str, ctx: &str) -> Result<bool, String> {
+    req(obj, key, ctx)?
+        .as_bool()
+        .ok_or_else(|| format!("observatory: {ctx}: '{key}' must be a boolean"))
+}
+
+fn req_arr<'a>(obj: &'a Json, key: &str, ctx: &str) -> Result<&'a [Json], String> {
+    req(obj, key, ctx)?
+        .as_array()
+        .ok_or_else(|| format!("observatory: {ctx}: '{key}' must be an array"))
+}
+
+impl WindowStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::Num(self.index as f64)),
+            ("k_start", Json::Num(self.k_start as f64)),
+            ("k_end", Json::Num(self.k_end as f64)),
+            ("consensus_start", Json::Num(self.consensus_start)),
+            ("consensus_end", Json::Num(self.consensus_end)),
+            ("rate", Json::Num(self.rate)),
+            ("predicted_rho", Json::Num(self.predicted_rho)),
+            ("slower", Json::Bool(self.slower)),
+            ("drift_score", Json::Num(self.drift_score)),
+            ("rounds", Json::Num(self.rounds as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<WindowStats, String> {
+        let ctx = "window";
+        Ok(WindowStats {
+            index: req_usize(j, "index", ctx)?,
+            k_start: req_usize(j, "k_start", ctx)?,
+            k_end: req_usize(j, "k_end", ctx)?,
+            consensus_start: req_f64(j, "consensus_start", ctx)?,
+            consensus_end: req_f64(j, "consensus_end", ctx)?,
+            rate: req_f64(j, "rate", ctx)?,
+            predicted_rho: req_f64(j, "predicted_rho", ctx)?,
+            slower: req_bool(j, "slower", ctx)?,
+            drift_score: req_f64(j, "drift_score", ctx)?,
+            rounds: req_usize(j, "rounds", ctx)? as u64,
+        })
+    }
+}
+
+impl ObservatorySnapshot {
+    /// The one-schema JSON form (same keys on every backend).
+    pub fn to_json(&self) -> Json {
+        let l = &self.ledger;
+        Json::obj(vec![
+            ("rounds", Json::Num(self.rounds as f64)),
+            (
+                "ledger",
+                Json::obj(vec![
+                    ("designed", Json::Arr(l.designed.iter().map(|&p| Json::Num(p)).collect())),
+                    (
+                        "realized",
+                        Json::Arr(l.realized.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    ),
+                    (
+                        "links",
+                        Json::Arr(
+                            l.links
+                                .iter()
+                                .map(|lc| {
+                                    Json::obj(vec![
+                                        ("matching", Json::Num(lc.matching as f64)),
+                                        ("u", Json::Num(lc.u as f64)),
+                                        ("v", Json::Num(lc.v as f64)),
+                                        ("count", Json::Num(lc.count as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("drift_score", Json::Num(l.drift_score)),
+                    ("drift_l1", Json::Num(l.drift_l1)),
+                    ("drifted", Json::Bool(l.drifted)),
+                ]),
+            ),
+            ("windows", Json::Arr(self.windows.iter().map(WindowStats::to_json).collect())),
+            (
+                "frontier",
+                Json::Arr(
+                    self.frontier
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("k", Json::Num(p.k as f64)),
+                                ("time", Json::Num(p.time)),
+                                ("comm", Json::Num(p.comm)),
+                                ("loss", Json::Num(p.loss)),
+                                ("consensus", Json::Num(p.consensus)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "audit",
+                Json::obj(vec![
+                    (
+                        "compute",
+                        Json::Arr(
+                            self.audit
+                                .compute
+                                .iter()
+                                .map(|c| {
+                                    Json::obj(vec![
+                                        ("worker", Json::Num(c.worker as f64)),
+                                        ("count", Json::Num(c.count as f64)),
+                                        ("mean", Json::Num(c.mean)),
+                                        ("p95", Json::Num(c.p95)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("compute_p95_skew", Json::Num(self.audit.compute_p95_skew)),
+                    (
+                        "staleness",
+                        Json::Arr(
+                            self.audit
+                                .staleness
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("u", Json::Num(s.u as f64)),
+                                        ("v", Json::Num(s.v as f64)),
+                                        ("count", Json::Num(s.count as f64)),
+                                        ("mean", Json::Num(s.mean)),
+                                        ("max", Json::Num(s.max)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse the [`ObservatorySnapshot::to_json`] form back (what
+    /// `matcha report RESULT.json` re-renders from).
+    pub fn from_json(j: &Json) -> Result<ObservatorySnapshot, String> {
+        let ledger = req(j, "ledger", "snapshot")?;
+        let audit = req(j, "audit", "snapshot")?;
+        Ok(ObservatorySnapshot {
+            rounds: req_usize(j, "rounds", "snapshot")? as u64,
+            ledger: ActivationLedger {
+                designed: req_arr(ledger, "designed", "ledger")?
+                    .iter()
+                    .map(|p| p.as_f64().ok_or("observatory: ledger: bad probability".to_string()))
+                    .collect::<Result<_, _>>()?,
+                realized: req_arr(ledger, "realized", "ledger")?
+                    .iter()
+                    .map(|c| {
+                        c.as_usize()
+                            .map(|c| c as u64)
+                            .ok_or("observatory: ledger: bad count".to_string())
+                    })
+                    .collect::<Result<_, _>>()?,
+                links: req_arr(ledger, "links", "ledger")?
+                    .iter()
+                    .map(|lc| {
+                        Ok(LinkCount {
+                            matching: req_usize(lc, "matching", "link")?,
+                            u: req_usize(lc, "u", "link")?,
+                            v: req_usize(lc, "v", "link")?,
+                            count: req_usize(lc, "count", "link")? as u64,
+                        })
+                    })
+                    .collect::<Result<_, String>>()?,
+                drift_score: req_f64(ledger, "drift_score", "ledger")?,
+                drift_l1: req_f64(ledger, "drift_l1", "ledger")?,
+                drifted: req_bool(ledger, "drifted", "ledger")?,
+            },
+            windows: req_arr(j, "windows", "snapshot")?
+                .iter()
+                .map(WindowStats::from_json)
+                .collect::<Result<_, _>>()?,
+            frontier: req_arr(j, "frontier", "snapshot")?
+                .iter()
+                .map(|p| {
+                    Ok(FrontierPoint {
+                        k: req_usize(p, "k", "frontier")?,
+                        time: req_f64(p, "time", "frontier")?,
+                        comm: req_f64(p, "comm", "frontier")?,
+                        loss: req_f64(p, "loss", "frontier")?,
+                        consensus: req_f64(p, "consensus", "frontier")?,
+                    })
+                })
+                .collect::<Result<_, String>>()?,
+            audit: RunAudit {
+                compute: req_arr(audit, "compute", "audit")?
+                    .iter()
+                    .map(|c| {
+                        Ok(ComputeAudit {
+                            worker: req_usize(c, "worker", "compute")?,
+                            count: req_usize(c, "count", "compute")? as u64,
+                            mean: req_f64(c, "mean", "compute")?,
+                            p95: req_f64(c, "p95", "compute")?,
+                        })
+                    })
+                    .collect::<Result<_, String>>()?,
+                compute_p95_skew: req_f64(audit, "compute_p95_skew", "audit")?,
+                staleness: req_arr(audit, "staleness", "audit")?
+                    .iter()
+                    .map(|s| {
+                        Ok(StalenessAudit {
+                            u: req_usize(s, "u", "staleness")?,
+                            v: req_usize(s, "v", "staleness")?,
+                            count: req_usize(s, "count", "staleness")? as u64,
+                            mean: req_f64(s, "mean", "staleness")?,
+                            max: req_f64(s, "max", "staleness")?,
+                        })
+                    })
+                    .collect::<Result<_, String>>()?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_matching_config(designed: Vec<f64>) -> ObservatoryConfig {
+        ObservatoryConfig {
+            designed,
+            matchings: vec![vec![(0, 1), (2, 3)], vec![(1, 2)]],
+            rho: 0.9,
+            workers: 4,
+            window: 2,
+        }
+    }
+
+    #[test]
+    fn disabled_hooks_are_inert() {
+        let mut obs = Observatory::disabled();
+        obs.on_compute(0, 1.0);
+        obs.on_round(&[0], &[]);
+        obs.on_matchings(&[0]);
+        obs.on_link(0, 0, 1);
+        obs.on_stale_exchange(0, 1, 2);
+        assert!(obs.on_record(0, 0.0, 0.0, 1.0, 1.0).is_none());
+        assert!(obs.snapshot().is_none());
+        assert!(obs.health().is_none());
+        assert!(!obs.is_enabled());
+    }
+
+    #[test]
+    fn ledger_counts_matchings_and_links_minus_dead() {
+        let mut obs = Observatory::enabled(two_matching_config(vec![0.5, 0.5]));
+        obs.on_round(&[0, 1], &[]);
+        obs.on_round(&[0], &[(2, 3)]);
+        let snap = obs.snapshot().unwrap();
+        assert_eq!(snap.rounds, 2);
+        assert_eq!(snap.ledger.realized, vec![2, 1]);
+        let counts: Vec<u64> = snap.ledger.links.iter().map(|l| l.count).collect();
+        // (0,1) twice; (2,3) once (dead in round 2); (1,2) once.
+        assert_eq!(counts, vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn window_closes_with_contraction_rate() {
+        let mut obs = Observatory::enabled(two_matching_config(vec![0.5, 0.5]));
+        // First window: consensus 0 at k=0 -> rate 0, never "slower".
+        assert!(obs.on_record(0, 0.0, 0.0, 1.0, 0.0).is_none());
+        let w0 = obs.on_record(10, 1.0, 1.0, 0.9, 4.0).expect("window 0");
+        assert_eq!(w0.rate, 0.0);
+        assert!(!w0.slower);
+        // Second window: 4.0 -> 1.0 over 10 rounds.
+        assert!(obs.on_record(20, 2.0, 2.0, 0.8, 4.0).is_none());
+        let w1 = obs.on_record(30, 3.0, 3.0, 0.7, 1.0).expect("window 1");
+        assert!((w1.rate - 0.25f64.powf(0.1)).abs() < 1e-12);
+        assert_eq!(w1.index, 1);
+        assert_eq!(w1.predicted_rho, 0.9);
+        assert!(w1.rate < 0.9 && !w1.slower);
+        let health = obs.health().unwrap();
+        assert_eq!(health.windows, 2);
+        assert_eq!(health.contraction_rate, w1.rate);
+        assert_eq!(obs.snapshot().unwrap().frontier.len(), 4);
+    }
+
+    #[test]
+    fn slower_window_is_flagged() {
+        let mut obs = Observatory::enabled(two_matching_config(vec![0.5, 0.5]));
+        obs.on_record(0, 0.0, 0.0, 1.0, 1.0);
+        let w = obs.on_record(10, 1.0, 1.0, 0.9, 0.99).expect("window");
+        assert!(w.rate > 0.9, "barely-contracting rate {}", w.rate);
+        assert!(w.slower);
+    }
+
+    #[test]
+    fn realized_frequencies_near_design_score_low() {
+        let mut obs = Observatory::enabled(two_matching_config(vec![0.5, 0.25]));
+        // 1000 rounds at exactly the designed frequencies.
+        for k in 0..1000usize {
+            let mut act = Vec::new();
+            if k % 2 == 0 {
+                act.push(0);
+            }
+            if k % 4 == 0 {
+                act.push(1);
+            }
+            obs.on_round(&act, &[]);
+        }
+        let snap = obs.snapshot().unwrap();
+        assert!(snap.ledger.drift_score < 0.1, "score {}", snap.ledger.drift_score);
+        assert!(snap.ledger.drift_l1 < 0.01);
+        assert!(!snap.ledger.drifted);
+    }
+
+    #[test]
+    fn mis_weighted_schedule_is_flagged() {
+        // Designed 0.9 but realized ~0.5: the ledger must flag it.
+        let mut obs = Observatory::enabled(two_matching_config(vec![0.9, 0.9]));
+        for k in 0..200usize {
+            let act: Vec<usize> = if k % 2 == 0 { vec![0, 1] } else { Vec::new() };
+            obs.on_round(&act, &[]);
+        }
+        let snap = obs.snapshot().unwrap();
+        assert!(snap.ledger.drift_score > DRIFT_THRESHOLD, "score {}", snap.ledger.drift_score);
+        assert!(snap.ledger.drifted);
+    }
+
+    #[test]
+    fn vanilla_all_ones_never_drifts() {
+        let mut obs = Observatory::enabled(two_matching_config(vec![1.0, 1.0]));
+        for _ in 0..50 {
+            obs.on_round(&[0, 1], &[]);
+        }
+        let snap = obs.snapshot().unwrap();
+        assert_eq!(snap.ledger.drift_score, 0.0);
+        assert_eq!(snap.ledger.drift_l1, 0.0);
+        assert!(!snap.ledger.drifted);
+    }
+
+    #[test]
+    fn async_feeds_count_links_and_staleness() {
+        let mut obs = Observatory::enabled(two_matching_config(vec![0.5, 0.5]));
+        obs.on_matchings(&[0]);
+        obs.on_link(0, 0, 1);
+        obs.on_link(0, 2, 3);
+        obs.on_matchings(&[0, 1]);
+        obs.on_link(0, 0, 1);
+        obs.on_link(1, 1, 2);
+        obs.on_stale_exchange(0, 1, 0);
+        obs.on_stale_exchange(0, 1, 2);
+        obs.on_stale_exchange(2, 1, 1);
+        let snap = obs.snapshot().unwrap();
+        assert_eq!(snap.rounds, 2);
+        assert_eq!(snap.ledger.realized, vec![2, 1]);
+        let counts: Vec<u64> = snap.ledger.links.iter().map(|l| l.count).collect();
+        assert_eq!(counts, vec![2, 1, 1]);
+        assert_eq!(snap.audit.staleness.len(), 2);
+        let e01 = &snap.audit.staleness[0];
+        assert_eq!((e01.u, e01.v, e01.count), (0, 1, 2));
+        assert_eq!(e01.max, 2.0);
+        let e12 = &snap.audit.staleness[1];
+        assert_eq!((e12.u, e12.v, e12.count), (1, 2, 1));
+    }
+
+    #[test]
+    fn compute_audit_exposes_straggler_skew() {
+        let mut obs = Observatory::enabled(two_matching_config(vec![0.5, 0.5]));
+        for _ in 0..100 {
+            for w in 0..4 {
+                obs.on_compute(w, if w == 2 { 5.0 } else { 1.0 });
+            }
+        }
+        let snap = obs.snapshot().unwrap();
+        assert_eq!(snap.audit.compute.len(), 4);
+        assert_eq!(snap.audit.compute[2].count, 100);
+        assert!(snap.audit.compute[2].mean > snap.audit.compute[0].mean);
+        assert!(snap.audit.compute_p95_skew > 1.5, "skew {}", snap.audit.compute_p95_skew);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        let mut obs = Observatory::enabled(two_matching_config(vec![0.5, 0.25]));
+        for k in 0..40usize {
+            obs.on_compute(k % 4, 1.0 + (k % 3) as f64);
+            obs.on_round(if k % 2 == 0 { &[0, 1] } else { &[1] }, &[]);
+            obs.on_stale_exchange(0, 1, k % 3);
+        }
+        obs.on_record(0, 0.0, 0.0, 2.0, 0.5);
+        obs.on_record(20, 10.0, 8.0, 1.0, 0.25);
+        obs.on_record(40, 20.0, 16.0, 0.5, 0.125);
+        let snap = obs.snapshot().unwrap();
+        let text = snap.to_json().to_string();
+        let back = ObservatorySnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let j = Json::parse(r#"{"rounds": 3}"#).unwrap();
+        let err = ObservatorySnapshot::from_json(&j).unwrap_err();
+        assert!(err.contains("missing 'ledger'"), "got: {err}");
+    }
+}

@@ -1,0 +1,318 @@
+//! Self-contained run reports: the `matcha report` renderer.
+//!
+//! A [`RunReport`] bundles a run's identity (spec name, backend,
+//! strategy, planned α/ρ) with its headline outcome and the full
+//! [`ObservatorySnapshot`], serializes to one JSON document, and
+//! renders a human-readable summary — the activation ledger, the
+//! contraction windows, the error-runtime frontier (paper fig-4 axes)
+//! and the straggler/staleness audit — so a single file answers "did
+//! this run do what the plan designed?". `matcha report --spec F` runs
+//! an experiment and writes/renders the report; `matcha report R.json`
+//! re-renders a saved one. The renderer is total: runs too short to
+//! close a contraction window (or with no stochastic matchings) still
+//! produce a complete report.
+
+use super::observatory::ObservatorySnapshot;
+use crate::json::Json;
+
+/// Schema version stamped into every report JSON.
+pub const REPORT_VERSION: u64 = 1;
+
+/// Everything `matcha report` persists and renders for one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunReport {
+    /// Spec name (the graph/topology identifier).
+    pub spec_name: String,
+    /// Backend label (spec JSON form, e.g. `"engine-parallel"`).
+    pub backend: String,
+    /// Strategy label (e.g. `"matcha(0.5)"`).
+    pub strategy: String,
+    /// Planned mixing parameter α.
+    pub alpha: f64,
+    /// Planned spectral norm ρ (predicted contraction per round).
+    pub rho: f64,
+    /// Final recorded loss.
+    pub final_loss: f64,
+    /// Total virtual time of the run.
+    pub total_time: f64,
+    /// Total expected communication units of the run.
+    pub total_comm: f64,
+    /// The algorithm-level readout.
+    pub observatory: ObservatorySnapshot,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("report: missing '{key}'"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64, String> {
+    req(j, key)?.as_f64().ok_or_else(|| format!("report: '{key}' must be a number"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    Ok(req(j, key)?
+        .as_str()
+        .ok_or_else(|| format!("report: '{key}' must be a string"))?
+        .to_string())
+}
+
+impl RunReport {
+    /// The self-contained JSON document `matcha report` writes.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("report_version", Json::Num(REPORT_VERSION as f64)),
+            ("spec", Json::Str(self.spec_name.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("strategy", Json::Str(self.strategy.clone())),
+            ("alpha", Json::Num(self.alpha)),
+            ("rho", Json::Num(self.rho)),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("total_time", Json::Num(self.total_time)),
+            ("total_comm", Json::Num(self.total_comm)),
+            ("observatory", self.observatory.to_json()),
+        ])
+    }
+
+    /// Parse a saved report document (what `matcha report R.json`
+    /// re-renders from).
+    pub fn from_json(j: &Json) -> Result<RunReport, String> {
+        let version = req_f64(j, "report_version")? as u64;
+        if version != REPORT_VERSION {
+            return Err(format!(
+                "report: unsupported report_version {version} (expected {REPORT_VERSION})"
+            ));
+        }
+        Ok(RunReport {
+            spec_name: req_str(j, "spec")?,
+            backend: req_str(j, "backend")?,
+            strategy: req_str(j, "strategy")?,
+            alpha: req_f64(j, "alpha")?,
+            rho: req_f64(j, "rho")?,
+            final_loss: req_f64(j, "final_loss")?,
+            total_time: req_f64(j, "total_time")?,
+            total_comm: req_f64(j, "total_comm")?,
+            observatory: ObservatorySnapshot::from_json(req(j, "observatory")?)?,
+        })
+    }
+
+    /// The human-readable summary (header, ledger table, contraction
+    /// windows, frontier table, straggler/staleness audit).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let obs = &self.observatory;
+        out.push_str(&format!("== matcha run report: {} ==\n", self.spec_name));
+        out.push_str(&format!(
+            "backend {} | strategy {} | alpha {:.4} | predicted rho {:.4}\n",
+            self.backend, self.strategy, self.alpha, self.rho
+        ));
+        out.push_str(&format!(
+            "final loss {:.6e} | virtual time {:.2} | comm units {:.2} | rounds {}\n",
+            self.final_loss, self.total_time, self.total_comm, obs.rounds
+        ));
+
+        let l = &obs.ledger;
+        out.push_str(&format!(
+            "\n-- activation ledger (drift score {:.3}, L1 {:.4}, {}) --\n",
+            l.drift_score,
+            l.drift_l1,
+            if l.drifted { "DRIFTED" } else { "ok" }
+        ));
+        out.push_str("matching  designed  realized  realized-freq\n");
+        let n = obs.rounds.max(1) as f64;
+        for (j, (&p, &c)) in l.designed.iter().zip(&l.realized).enumerate() {
+            out.push_str(&format!("{j:>8}  {p:>8.4}  {c:>8}  {:>13.4}\n", c as f64 / n));
+        }
+        if l.links.is_empty() {
+            out.push_str("links: none tracked\n");
+        } else if l.links.len() <= 24 {
+            out.push_str("matching  link         count\n");
+            for lc in &l.links {
+                let edge = format!("({},{})", lc.u, lc.v);
+                out.push_str(&format!("{:>8}  {edge:<11}  {:>5}\n", lc.matching, lc.count));
+            }
+        } else {
+            let min = l.links.iter().map(|lc| lc.count).min().unwrap_or(0);
+            let max = l.links.iter().map(|lc| lc.count).max().unwrap_or(0);
+            out.push_str(&format!(
+                "links: {} tracked, activation counts {min}..{max}\n",
+                l.links.len()
+            ));
+        }
+
+        out.push_str(&format!("\n-- contraction windows (predicted rho {:.4}) --\n", self.rho));
+        if obs.windows.is_empty() {
+            out.push_str("(no window closed: not enough record samples)\n");
+        } else {
+            out.push_str("window  k-range      consensus start -> end     rate    verdict\n");
+            for w in &obs.windows {
+                let range = format!("{}..{}", w.k_start, w.k_end);
+                out.push_str(&format!(
+                    "{:>6}  {range:<11}  {:>11.4e} -> {:>10.4e}  {:>6.4}  {}\n",
+                    w.index,
+                    w.consensus_start,
+                    w.consensus_end,
+                    w.rate,
+                    if w.slower { "SLOWER" } else { "ok" }
+                ));
+            }
+        }
+
+        out.push_str("\n-- error-runtime frontier --\n");
+        if obs.frontier.is_empty() {
+            out.push_str("(no record samples)\n");
+        } else {
+            out.push_str("     k        time        comm          loss     consensus\n");
+            let len = obs.frontier.len();
+            let step = len.div_ceil(16).max(1);
+            let mut shown = 0usize;
+            for (i, p) in obs.frontier.iter().enumerate() {
+                if i % step != 0 && i != len - 1 {
+                    continue;
+                }
+                shown += 1;
+                out.push_str(&format!(
+                    "{:>6}  {:>10.2}  {:>10.2}  {:>12.4e}  {:>12.4e}\n",
+                    p.k, p.time, p.comm, p.loss, p.consensus
+                ));
+            }
+            if shown < len {
+                out.push_str(&format!("({} of {len} samples shown)\n", shown));
+            }
+        }
+
+        out.push_str("\n-- straggler audit --\n");
+        out.push_str("worker  spans      mean       p95\n");
+        for c in &obs.audit.compute {
+            out.push_str(&format!(
+                "{:>6}  {:>5}  {:>8.3}  {:>8.3}\n",
+                c.worker, c.count, c.mean, c.p95
+            ));
+        }
+        out.push_str(&format!("compute p95 skew: {:.3}\n", obs.audit.compute_p95_skew));
+        if obs.audit.staleness.is_empty() {
+            out.push_str("staleness: none recorded (synchronous run)\n");
+        } else {
+            out.push_str("edge         exchanges      mean       max\n");
+            for s in &obs.audit.staleness {
+                let edge = format!("({},{})", s.u, s.v);
+                out.push_str(&format!(
+                    "{edge:<11}  {:>9}  {:>8.3}  {:>8.3}\n",
+                    s.count, s.mean, s.max
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::observatory::{
+        ActivationLedger, ComputeAudit, FrontierPoint, LinkCount, RunAudit, StalenessAudit,
+        WindowStats,
+    };
+    use super::*;
+
+    fn sample_report() -> RunReport {
+        RunReport {
+            spec_name: "ring:8".to_string(),
+            backend: "engine-sequential".to_string(),
+            strategy: "matcha(0.5)".to_string(),
+            alpha: 0.41,
+            rho: 0.87,
+            final_loss: 1.25e-3,
+            total_time: 60.0,
+            total_comm: 140.0,
+            observatory: ObservatorySnapshot {
+                rounds: 60,
+                ledger: ActivationLedger {
+                    designed: vec![0.6, 0.4],
+                    realized: vec![35, 26],
+                    links: vec![
+                        LinkCount { matching: 0, u: 0, v: 1, count: 35 },
+                        LinkCount { matching: 1, u: 1, v: 2, count: 26 },
+                    ],
+                    drift_score: 0.2,
+                    drift_l1: 0.01,
+                    drifted: false,
+                },
+                windows: vec![WindowStats {
+                    index: 0,
+                    k_start: 0,
+                    k_end: 30,
+                    consensus_start: 0.5,
+                    consensus_end: 0.05,
+                    rate: 0.926,
+                    predicted_rho: 0.87,
+                    slower: true,
+                    drift_score: 0.2,
+                    rounds: 31,
+                }],
+                frontier: vec![
+                    FrontierPoint { k: 0, time: 0.0, comm: 0.0, loss: 2.0, consensus: 0.0 },
+                    FrontierPoint { k: 30, time: 30.0, comm: 70.0, loss: 0.5, consensus: 0.5 },
+                    FrontierPoint {
+                        k: 60,
+                        time: 60.0,
+                        comm: 140.0,
+                        loss: 1.25e-3,
+                        consensus: 0.05,
+                    },
+                ],
+                audit: RunAudit {
+                    compute: vec![
+                        ComputeAudit { worker: 0, count: 60, mean: 1.0, p95: 1.0 },
+                        ComputeAudit { worker: 1, count: 60, mean: 1.5, p95: 2.0 },
+                    ],
+                    compute_p95_skew: 2.0,
+                    staleness: vec![StalenessAudit { u: 0, v: 1, count: 12, mean: 0.5, max: 2.0 }],
+                },
+            },
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let report = sample_report();
+        let text = report.to_json().to_string();
+        let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, report);
+    }
+
+    #[test]
+    fn render_includes_every_section() {
+        let text = sample_report().render();
+        for needle in [
+            "matcha run report: ring:8",
+            "activation ledger",
+            "contraction windows",
+            "SLOWER",
+            "error-runtime frontier",
+            "straggler audit",
+            "compute p95 skew: 2.000",
+            "exchanges",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn render_tolerates_empty_observatory() {
+        let mut report = sample_report();
+        report.observatory = ObservatorySnapshot::default();
+        let text = report.render();
+        assert!(text.contains("no window closed"), "{text}");
+        assert!(text.contains("no record samples"), "{text}");
+        assert!(text.contains("staleness: none recorded"), "{text}");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut j = sample_report().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("report_version".to_string(), Json::Num(99.0));
+        }
+        let err = RunReport::from_json(&j).unwrap_err();
+        assert!(err.contains("unsupported report_version"), "{err}");
+    }
+}

@@ -13,6 +13,7 @@
 //! allocator.
 
 use super::metrics::{Counter, Hist, MetricsRegistry};
+use super::observatory::Observatory;
 use super::span::{TraceEvent, TraceRecord};
 use std::time::Instant;
 
@@ -118,6 +119,12 @@ pub struct Tracer<'a> {
     /// The run's metric registry; read out into a
     /// [`super::metrics::MetricsSnapshot`] when the run finishes.
     pub registry: MetricsRegistry,
+    /// The algorithm-level observability hook
+    /// ([`super::observatory::Observatory`]): disabled by default (one
+    /// pointer, every hook one branch, zero allocations);
+    /// [`crate::experiment::run`] enables it when the spec carries a
+    /// `report` block.
+    pub observatory: Observatory,
     now: f64,
     epoch: Instant,
 }
@@ -126,7 +133,13 @@ impl<'a> Tracer<'a> {
     /// A tracer with no sink: events vanish in one branch, metrics
     /// still accumulate. What every non-traced entry point passes.
     pub fn disabled() -> Tracer<'static> {
-        Tracer { sink: None, registry: MetricsRegistry::new(), now: 0.0, epoch: Instant::now() }
+        Tracer {
+            sink: None,
+            registry: MetricsRegistry::new(),
+            observatory: Observatory::disabled(),
+            now: 0.0,
+            epoch: Instant::now(),
+        }
     }
 
     /// A tracer recording events into `sink`.
@@ -134,6 +147,7 @@ impl<'a> Tracer<'a> {
         Tracer {
             sink: Some(sink),
             registry: MetricsRegistry::new(),
+            observatory: Observatory::disabled(),
             now: 0.0,
             epoch: Instant::now(),
         }

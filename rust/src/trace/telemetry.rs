@@ -20,6 +20,7 @@
 //! with telemetry on or off.
 
 use super::metrics::{Counter, MetricsRegistry};
+use super::observatory::ObservatoryHealth;
 use super::span::TraceRecord;
 
 /// `shard` value a daemon reports before any `Assign` arrived.
@@ -46,6 +47,9 @@ pub struct NodeTelemetry {
     pub records: Vec<TraceRecord>,
     /// The daemon's cumulative metric registry.
     pub registry: MetricsRegistry,
+    /// The daemon's observatory health digest (drift score and windowed
+    /// contraction rate); `None` before any `Assign` arrived.
+    pub observatory: Option<ObservatoryHealth>,
 }
 
 /// Per-shard state the coordinator accumulates across pulls.
@@ -216,6 +220,7 @@ mod tests {
                 })
                 .collect(),
             registry,
+            observatory: None,
         }
     }
 

@@ -7,7 +7,9 @@
 //! connection drops — is **bit-for-bit** the in-process cluster run.
 
 use matcha::cluster::TransportKind;
-use matcha::experiment::{self, Backend, ExperimentSpec, NoopObserver, ProblemSpec, Strategy};
+use matcha::experiment::{
+    self, Backend, ExperimentSpec, NoopObserver, ProblemSpec, ReportSpec, Strategy,
+};
 use matcha::node::{
     query_status, run_daemon, run_remote, run_remote_traced, DaemonOptions, RemoteOptions,
 };
@@ -132,6 +134,35 @@ fn reconnect_resumes_mid_run_bit_for_bit() {
 }
 
 #[test]
+fn observatory_snapshot_matches_loopback_even_through_reconnects() {
+    // The coordinator's observatory hooks fire on its side of the wire,
+    // and its engine loop executes each round exactly once — a replayed
+    // command stream after an injected drop must therefore leave the
+    // ledger, windows, and frontier bit-for-bit equal to the loopback
+    // run that never dropped.
+    let addrs = vec![
+        spawn_daemon(DaemonOptions { drop_after: Some(7), ..DaemonOptions::default() }),
+        spawn_daemon(DaemonOptions::default()),
+    ];
+    let loopback = experiment::run(
+        &base_spec()
+            .backend(Backend::Cluster { shards: 2, transport: TransportKind::Loopback })
+            .report(ReportSpec { window: 2 }),
+    )
+    .unwrap();
+    let remote =
+        experiment::run(&remote_spec(addrs).report(ReportSpec { window: 2 })).unwrap();
+    let lo = loopback.observatory.expect("loopback observatory");
+    let ro = remote.observatory.expect("remote observatory");
+    assert_eq!(lo.rounds, 60);
+    // 60 iterations recorded every 20 → 3 frontier samples → 1 closed
+    // window of 2.
+    assert_eq!(lo.frontier.len(), 3);
+    assert_eq!(lo.windows.len(), 1);
+    assert_eq!(ro, lo, "remote observatory must not double-count across the reconnect");
+}
+
+#[test]
 fn silent_daemon_surfaces_a_timeout_error() {
     // A listener that accepts into its backlog but never speaks: the
     // coordinator's handshake deadline must turn that into a fast typed
@@ -208,6 +239,7 @@ fn status_answers_idle_and_dead_daemons() {
     assert_eq!(t.rounds_done, 0);
     assert_eq!(t.reconnects, 0);
     assert!(t.records.is_empty(), "health pulls never drain the ring");
+    assert!(t.observatory.is_none(), "no observatory digest before an Assign");
     // A dead address is a fast error, not a hang.
     let dead = {
         let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
@@ -253,6 +285,12 @@ fn status_reports_mid_session_health_without_perturbing_the_run() {
     let steps = t.registry.counter(Counter::ShardSteps);
     assert!(steps >= 6, "mid-session status must carry live counters, got {steps}");
     assert!(t.records.is_empty(), "status pulls are non-draining");
+    // The daemon arms its observatory on Assign, so the digest is
+    // present — and all-zero, since no mix round has run yet.
+    let obs = t.observatory.expect("assigned daemon must ship an observatory digest");
+    assert_eq!(obs.rounds, 0);
+    assert_eq!(obs.windows, 0);
+    assert_eq!(obs.contraction_rate, 0.0);
     // The session continues untouched afterwards.
     tx.send_msg(&WireMsg::Step { lr: 0.03 }, &mut scratch).unwrap();
     assert!(matches!(tx.recv_msg(&mut body).unwrap(), WireMsg::States { .. }));

@@ -8,8 +8,13 @@
 //! exports as well-formed Chrome trace-event JSON.
 
 use matcha::cluster::TransportKind;
-use matcha::experiment::{self, Backend, ExperimentSpec, NoopObserver, ProblemSpec, Strategy};
-use matcha::trace::{chrome_trace, validate_chrome_trace, RingSink, TraceEvent, Tracer};
+use matcha::experiment::{
+    self, Backend, ExperimentSpec, NoopObserver, ProblemSpec, ReportSpec, Strategy,
+};
+use matcha::trace::{
+    chrome_trace, validate_chrome_trace, Observatory, ObservatoryConfig, RingSink, TraceEvent,
+    Tracer,
+};
 
 fn base_spec(seed: u64) -> ExperimentSpec {
     ExperimentSpec::new("ring:6")
@@ -105,6 +110,104 @@ fn async_trace_is_deterministic_per_seed() {
     let b = traced_events(&spec);
     assert_eq!(a, b, "async traces are reproducible per seed");
     assert!(a.iter().any(|(ev, _)| matches!(ev, TraceEvent::StaleExchange { .. })));
+}
+
+#[test]
+fn observatory_snapshot_is_identical_across_barrier_backends() {
+    // One ObservatorySnapshot schema, one value: the sequential
+    // simulator, the event engine, the bounded actor pool, and the
+    // loopback cluster must all report the same ledger, windows,
+    // frontier, and audit for the same seed. (The async backend is
+    // deliberately excluded: its round structure is barrier-free.)
+    let spec = |backend| base_spec(11).report(ReportSpec { window: 2 }).backend(backend);
+    let sim = experiment::run(&spec(Backend::SimReference)).unwrap().observatory.unwrap();
+    let engine = experiment::run(&spec(Backend::EngineSequential)).unwrap().observatory.unwrap();
+    let actors =
+        experiment::run(&spec(Backend::EngineActors { threads: 2 })).unwrap().observatory.unwrap();
+    let cluster = experiment::run(
+        &spec(Backend::Cluster { shards: 2, transport: TransportKind::Loopback }),
+    )
+    .unwrap()
+    .observatory
+    .unwrap();
+    assert_eq!(sim.rounds, 40);
+    // 40 iterations recorded every 10 → 4 frontier samples → 2 closed
+    // windows of 2 samples each.
+    assert_eq!(sim.frontier.len(), 4);
+    assert_eq!(sim.windows.len(), 2);
+    assert_eq!(sim, engine);
+    assert_eq!(sim, actors);
+    assert_eq!(sim, cluster);
+}
+
+#[test]
+fn activation_audit_tracks_design_on_fig5_topologies() {
+    // The paper's fig-5 topologies (ring and ladder = grid(2, m)): the
+    // sampler realizes the designed p_j, so a faithful run's ledger must
+    // sit under the drift threshold — and a mis-stated design over the
+    // same realized schedule must be flagged.
+    for graph in ["ring:8", "grid:2x4"] {
+        let spec = ExperimentSpec::new(graph)
+            .problem(ProblemSpec::quadratic())
+            .strategy(Strategy::Matcha { budget: 0.5 })
+            .iterations(400)
+            .record_every(100)
+            .seed(3)
+            .report(ReportSpec { window: 2 });
+        let plan = experiment::plan(&spec).unwrap();
+        let obs = experiment::run_planned(&spec, &plan, &mut NoopObserver)
+            .unwrap()
+            .observatory
+            .unwrap();
+        assert_eq!(obs.rounds, 400, "{graph}");
+        assert_eq!(obs.ledger.designed, plan.probabilities, "{graph}");
+        assert_eq!(obs.ledger.realized.len(), plan.decomposition.matchings.len(), "{graph}");
+        assert!(
+            !obs.ledger.drifted,
+            "{graph}: realized schedule drifted from its own design (score {})",
+            obs.ledger.drift_score
+        );
+
+        // Same realized rounds, audited against a warped design.
+        let mut wrong = Observatory::enabled(ObservatoryConfig {
+            designed: plan.probabilities.iter().map(|p| (0.3 * p).clamp(0.02, 0.98)).collect(),
+            matchings: plan.decomposition.matchings.iter().map(|g| g.edges().to_vec()).collect(),
+            rho: plan.rho,
+            workers: plan.graph.num_nodes(),
+            window: 2,
+        });
+        let mut sampler = plan.sampler(spec.sampler_seed.unwrap_or(spec.seed));
+        for k in 0..400 {
+            wrong.on_round(&sampler.round(k).activated, &[]);
+        }
+        let warped = wrong.snapshot().unwrap();
+        assert!(warped.ledger.drifted, "{graph}: warped design must be flagged");
+        assert!(warped.ledger.drift_score > obs.ledger.drift_score, "{graph}");
+    }
+}
+
+#[test]
+fn ring_sink_wraparound_drops_oldest_and_keeps_newest() {
+    let mut sink = RingSink::new(8);
+    let mut tracer = Tracer::attached(&mut sink);
+    for k in 0..20 {
+        tracer.set_now(k as f64);
+        tracer.emit(TraceEvent::RoundBarrier { k });
+    }
+    drop(tracer);
+    // 20 emits through a capacity-8 ring: exactly 12 overwritten, the
+    // survivors are the 8 newest, still in emission order.
+    assert_eq!(sink.dropped(), 12);
+    let records = sink.records();
+    assert_eq!(records.len(), 8);
+    let ks: Vec<usize> = records
+        .iter()
+        .map(|r| match r.ev {
+            TraceEvent::RoundBarrier { k } => k,
+            ev => panic!("unexpected event {ev:?}"),
+        })
+        .collect();
+    assert_eq!(ks, (12..20).collect::<Vec<_>>());
 }
 
 #[test]
